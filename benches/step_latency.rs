@@ -1,0 +1,78 @@
+//! Micro-benchmark: per-entry PJRT execution latency (train_step /
+//! eval_step / score) for the parameter-matched tiny family. This is the
+//! L3 §Perf instrument — it separates coordinator overhead (upload +
+//! readback) from device execute time. See EXPERIMENTS.md §Perf.
+use std::path::Path;
+
+use switchhead::bench::time;
+use switchhead::config::{ModelConfig, Task};
+use switchhead::runtime::Engine;
+use switchhead::util::rng::Pcg;
+
+fn bench_config(name: &str, iters: usize) {
+    let cfg = match ModelConfig::load(&format!("configs/{name}.json")) {
+        Ok(c) => c,
+        Err(e) => return println!("SKIP {name}: {e:#}"),
+    };
+    let dir = Path::new("artifacts").join(&cfg.name);
+    if !dir.join("manifest.json").exists() {
+        return println!("SKIP {name}: artifacts not built");
+    }
+    let engine =
+        Engine::load(&dir, Some(&["init", "train_step", "eval_step", "score", "metrics"]))
+            .unwrap();
+    let mut rng = Pcg::new(1, 1);
+    let mut flat = engine.init(1).unwrap();
+
+    let (bufs, _dims): (Vec<_>, Vec<Vec<usize>>) = match cfg.task {
+        Task::Lm => {
+            let t1 = cfg.seq_len + 1;
+            let tok: Vec<i32> =
+                (0..cfg.batch_size * t1).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+            (
+                vec![engine.upload_i32(&tok, &[cfg.batch_size, t1]).unwrap()],
+                vec![vec![cfg.batch_size, t1]],
+            )
+        }
+        Task::ListOps => {
+            let (tok, lab) =
+                switchhead::data::listops::gen_batch(&mut rng, cfg.batch_size, cfg.seq_len);
+            (
+                vec![
+                    engine.upload_i32(&tok, &[cfg.batch_size, cfg.seq_len]).unwrap(),
+                    engine.upload_i32(&lab, &[cfg.batch_size]).unwrap(),
+                ],
+                vec![],
+            )
+        }
+    };
+    let refs: Vec<&_> = bufs.iter().collect();
+
+    let mut step = 0;
+    let r = time(&format!("{name}/train_step"), 3, iters, || {
+        let (next, _) = engine.train_step(&flat, step, &refs, None).unwrap();
+        flat = next;
+        step += 1;
+    });
+    println!("{}", r.row());
+    let r = time(&format!("{name}/eval_step"), 3, iters, || {
+        let _ = engine.eval_step(&flat, &refs).unwrap();
+    });
+    println!("{}", r.row());
+    if cfg.task == Task::Lm && engine.manifest.entries.contains_key("score") {
+        let r = time(&format!("{name}/score"), 3, iters, || {
+            let _ = engine.score(&flat, &bufs[0]).unwrap();
+        });
+        println!("{}", r.row());
+    }
+}
+
+fn main() {
+    let iters: usize = std::env::var("SWITCHHEAD_BENCH_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(30);
+    for name in ["tiny-dense", "tiny-sh", "tiny-moa", "tiny-switchall"] {
+        bench_config(name, iters);
+    }
+}

@@ -1,0 +1,16 @@
+//! cargo-bench driver for paper Table 2 (see rust/src/bench/tables.rs).
+//! SWITCHHEAD_BENCH_QUICK=1 skips the measured tiny-scale training rows;
+//! SWITCHHEAD_BENCH_STEPS controls their length (default 120).
+use std::path::Path;
+
+fn main() {
+    let quick = std::env::var("SWITCHHEAD_BENCH_QUICK").is_ok();
+    let steps: usize = std::env::var("SWITCHHEAD_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(120);
+    match switchhead::bench::tables::table2(Path::new("artifacts"), quick, steps) {
+        Ok(out) => println!("{out}"),
+        Err(e) => println!("SKIP table2: {e:#}"),
+    }
+}

@@ -1,0 +1,57 @@
+//! Quickstart: train a tiny SwitchHead LM on the synthetic WikiText-103
+//! corpus through the full three-layer stack (AOT HLO -> PJRT -> Rust
+//! coordinator), then evaluate perplexity.
+//!
+//!     make artifacts CONFIGS=configs/tiny-sh.json
+//!     cargo run --release --example quickstart
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use switchhead::config::ModelConfig;
+use switchhead::coordinator::trainer::{train, TrainOpts};
+use switchhead::macs::{attention_cost, param_count};
+use switchhead::runtime::Engine;
+
+fn main() -> Result<()> {
+    let cfg = ModelConfig::load("configs/tiny-sh.json")?;
+    println!(
+        "SwitchHead quickstart: {} ({} params, {} heads x {} experts, k={})",
+        cfg.name,
+        param_count(&cfg),
+        cfg.n_heads,
+        cfg.att_n_experts,
+        cfg.att_k
+    );
+    let cost = attention_cost(&cfg);
+    println!(
+        "analytic attention cost/layer: {:.1}M MACs, {:.2}M floats (Eq. 13)",
+        cost.macs / 1e6,
+        cost.mem_floats / 1e6
+    );
+
+    let artifacts = Path::new("artifacts").join(&cfg.name);
+    let engine = Engine::load(&artifacts, Some(&["init", "train_step", "eval_step", "metrics"]))?;
+
+    let opts = TrainOpts {
+        steps: 300,
+        eval_every: 100,
+        eval_batches: 16,
+        out_dir: PathBuf::from("runs/quickstart"),
+        seed: 42,
+        log_every: 25,
+        ..TrainOpts::default()
+    };
+    let report = train(&engine, &cfg, &opts)?;
+
+    println!("\nloss curve (every 25 steps):");
+    for (i, chunk) in report.losses.chunks(25).enumerate() {
+        let avg: f32 = chunk.iter().sum::<f32>() / chunk.len() as f32;
+        let bar = "#".repeat((avg * 6.0) as usize);
+        println!("  step {:>4}: {:6.3} {bar}", (i + 1) * 25, avg);
+    }
+    println!("\nfinal validation perplexity: {:.2}", report.final_metric);
+    println!("throughput: {:.0} tokens/s, {:.1} ms/iter", report.tokens_per_sec, report.ms_per_iter);
+    Ok(())
+}

@@ -1,0 +1,183 @@
+"""AOT artifact emitter: config JSON -> artifacts/<name>/{*.hlo.txt, manifest.json}.
+
+Interchange format is HLO **text**, never a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the runtime's
+XLA (xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Hot-path entry points (init / train_step / eval_step / score) return a
+single array, lowered with ``return_tuple=False`` so the HLO root is a
+non-tuple and PJRT hands the Rust runtime one chainable ``PjRtBuffer``
+(the flat-buffer ABI, see model.py). The analysis entry (attn) returns a
+tuple and is decomposed on host — it is not on the hot path.
+
+The manifest records the flat-buffer layout (per-parameter offsets), the
+exact input order of every entry point, per-entry metric slot meanings,
+and the analytic MAC/memory numbers (cross-checked against rust macs in
+integration tests).
+
+Python runs ONCE, at ``make artifacts`` time; it is never on the Rust
+request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+from typing import Any, Dict, List
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .layers import ModelConfig
+from .macs import attention_macs_mem, param_count
+from .model import N_METRICS, flat_layout, make_entry_points
+
+
+def to_hlo_text(lowered, return_tuple: bool) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def _path_name(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _flat_sig(tree, prefix: str, with_offsets: bool = False) -> List[Dict[str, Any]]:
+    """Flatten a pytree of ShapeDtypeStructs into a manifest signature."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    offset = 0
+    for path, leaf in leaves:
+        size = 1
+        for d in leaf.shape:
+            size *= d
+        item = {
+            "name": f"{prefix}{_path_name(path)}" if path else prefix.rstrip("/"),
+            "shape": list(leaf.shape),
+            "dtype": str(leaf.dtype),
+        }
+        if with_offsets:
+            item["offset"] = offset
+            item["size"] = size
+        offset += size
+        out.append(item)
+    return out
+
+
+# entry name -> manifest name prefix per positional argument
+ENTRY_ARG_PREFIXES = {
+    "init": ["seed"],
+    "metrics": ["flat"],
+    "train_step": ["flat", "step", "tokens", "labels"],
+    "eval_step": ["flat", "tokens", "labels"],
+    "score": ["flat", "tokens"],
+    "next_logits": ["flat", "tokens"],
+    "attn": ["flat", "tokens"],
+}
+
+# Meaning of the 4 metric slots at the tail of the flat buffer, per entry.
+METRIC_SLOTS = {
+    "lm": {
+        "train_step": ["loss", "unused", "unused", "gnorm"],
+        "eval_step": ["sum_nll", "token_count", "unused", "unused"],
+    },
+    "listops": {
+        "train_step": ["loss", "acc", "unused", "gnorm"],
+        "eval_step": ["loss", "acc", "unused", "unused"],
+    },
+}
+
+MULTI_OUTPUT_ENTRIES = {"attn"}  # lowered with return_tuple=True
+
+
+def build(cfg: ModelConfig, out_dir: str, entries_filter=None, verbose=True) -> Dict[str, Any]:
+    os.makedirs(out_dir, exist_ok=True)
+    entries, params_spec, state_spec = make_entry_points(cfg)
+    _, _, p_size, s_size, total = flat_layout(cfg)
+
+    manifest: Dict[str, Any] = {
+        "name": cfg.name,
+        "config": {k: getattr(cfg, k) for k in cfg.__dataclass_fields__},
+        "layout": {
+            "p_size": p_size,
+            "s_size": s_size,
+            "n_metrics": N_METRICS,
+            "total": total,
+            "metrics_offset": total - N_METRICS,
+            "m_offset": p_size,
+            "v_offset": 2 * p_size,
+            "state_offset": 3 * p_size,
+            "metric_slots": METRIC_SLOTS[cfg.task],
+        },
+        "params": _flat_sig(params_spec, "params/", with_offsets=True),
+        "state": _flat_sig(state_spec, "state/", with_offsets=True),
+        "param_count": param_count(cfg),
+        "macs": attention_macs_mem(cfg),
+        "entries": {},
+    }
+
+    for name, (fn, args) in entries.items():
+        if entries_filter and name not in entries_filter:
+            continue
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered, return_tuple=name in MULTI_OUTPUT_ENTRIES)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_spec = jax.eval_shape(fn, *args)
+        inputs: List[Dict[str, Any]] = []
+        for prefix, arg in zip(ENTRY_ARG_PREFIXES[name], args):
+            inputs.extend(_flat_sig(arg, prefix))
+        manifest["entries"][name] = {
+            "file": fname,
+            "tuple_output": name in MULTI_OUTPUT_ENTRIES,
+            "inputs": inputs,
+            "outputs": _flat_sig(out_spec, "out/"),
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+        if verbose:
+            print(
+                f"  [{cfg.name}] {name}: {len(text) // 1024} KiB, "
+                f"{len(inputs)} inputs, "
+                f"{len(manifest['entries'][name]['outputs'])} outputs"
+            )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--config", action="append", required=True, help="config JSON path (repeatable)"
+    )
+    ap.add_argument("--out-root", default="../artifacts")
+    ap.add_argument(
+        "--entries", default=None, help="comma-separated entry subset (default: all)"
+    )
+    args = ap.parse_args()
+    entries_filter = set(args.entries.split(",")) if args.entries else None
+    for path in args.config:
+        with open(path) as f:
+            cfg = ModelConfig.from_dict(json.load(f))
+        print(f"building artifacts for {cfg.name} ({param_count(cfg) / 1e6:.2f}M params)")
+        build(cfg, os.path.join(args.out_root, cfg.name), entries_filter)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Pallas tiled attention core: softmax(q k^T * scale + bias) v.
+
+The SwitchHead contribution is deliberately *outside* the attention core
+(the paper: "our method does not depend on the specific implementation of
+the attention"), so the core is a generic bias-additive attention kernel
+shared by the dense baseline, MoA, and SwitchHead. The additive ``bias``
+carries the causal mask and the Transformer-XL relative-position logits,
+which keeps the kernel oblivious to the positional scheme.
+
+Forward is a Pallas kernel tiled over (head, q-tile); K/V for one head
+stay resident in VMEM (decode-scale Tk; for the model sizes in this repo
+Tk*Dh is a few hundred KiB, well under budget). Backward is a pure-jnp
+recompute VJP (FlashAttention-style: no stored attention matrix), which
+keeps training memory at O(T*Dh) per head instead of O(T^2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 128
+_INTERPRET = True
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, *, scale: float):
+    """Grid (H, q_tiles). One program: full softmax row block for a head."""
+    q = q_ref[0]  # [Bq, Dh]
+    k = k_ref[0]  # [Tk, Dh]
+    v = v_ref[0]  # [Tk, Dh]
+    b = bias_ref[0]  # [Bq, Tk]
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale + b
+    m = jnp.max(logits, axis=1, keepdims=True)
+    p = jnp.exp(logits - m)
+    denom = jnp.sum(p, axis=1, keepdims=True)
+    o_ref[0] = jnp.dot(p / denom, v, preferred_element_type=jnp.float32)
+
+
+def _attention_fwd_impl(q, k, v, bias, *, scale: float, block_q: int):
+    h, tq, dh = q.shape
+    tk = k.shape[1]
+    bq = min(block_q, tq)
+    pad = (tq + bq - 1) // bq * bq - tq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0)))
+        bias = jnp.pad(bias, ((0, 0), (0, pad), (0, 0)))
+    tqp = tq + pad
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale),
+        grid=(h, tqp // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, tk, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, tk, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, bq, tk), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, tqp, dh), q.dtype),
+        interpret=_INTERPRET,
+    )(q, k, v, bias)
+    return out[:, :tq]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def attention_core(q, k, v, bias, scale: float, block_q: int = DEFAULT_BLOCK_Q):
+    """softmax(q k^T * scale + bias) v with a Pallas forward.
+
+    Shapes: q [H, Tq, Dh], k/v [H, Tk, Dh], bias [H, Tq, Tk] (additive,
+    -inf for masked pairs). Differentiable in q, k, v, bias.
+    """
+    return _attention_fwd_impl(q, k, v, bias, scale=scale, block_q=block_q)
+
+
+def _attn_vjp_fwd(q, k, v, bias, scale, block_q):
+    o = _attention_fwd_impl(q, k, v, bias, scale=scale, block_q=block_q)
+    return o, (q, k, v, bias)
+
+
+def _attn_vjp_bwd(scale, block_q, res, do):
+    q, k, v, bias = res
+    # Recompute the attention matrix (FlashAttention-style backward).
+    logits = jnp.einsum("hqd,hkd->hqk", q, k) * scale + bias
+    p = jax.nn.softmax(logits, axis=-1)
+    dv = jnp.einsum("hqk,hqd->hkd", p, do)
+    dp = jnp.einsum("hqd,hkd->hqk", do, v)
+    # softmax VJP: dlogits = p * (dp - sum_k p * dp)
+    dlog = p * (dp - jnp.sum(p * dp, axis=-1, keepdims=True))
+    dq = jnp.einsum("hqk,hkd->hqd", dlog, k) * scale
+    dk = jnp.einsum("hqk,hqd->hkd", dlog, q) * scale
+    return dq, dk, dv, dlog
+
+
+attention_core.defvjp(_attn_vjp_fwd, _attn_vjp_bwd)

@@ -1,0 +1,256 @@
+"""Pallas sigma-MoE top-k expert projection — forward and backward kernels.
+
+This is the TPU/Pallas analog of the Triton grouped-GEMM kernel the
+SwitchHead paper adopts from sigma-MoE (Csordas et al. 2023).  It computes
+
+    y[t] = sum_k gate[t, k] * x[t] @ W[idx[t, k]]          (fwd)
+
+for ``x: [T, Din]``, ``W: [E, Din, Dout]``, top-k routing ``idx/gate:
+[T, K]``, and the three backward contractions
+
+    dx[t]    = sum_e scale[t, e] * dy[t] @ W[e]^T
+    dW[e]    = sum_t scale[t, e] * x[t]^T dy[t]
+    dgate[t, k] = (x[t] @ W[idx[t, k]]) . dy[t]
+
+wired together with ``jax.custom_vjp`` so the entire train step lowers
+into a single HLO module.
+
+Hardware adaptation (Triton/GPU -> Pallas/TPU, see DESIGN.md section 5):
+  * CUDA threadblock-per-(token-group, expert) becomes a sequential grid
+    program over (token-tile, expert); scatter-accumulation into the
+    output becomes an in-place VMEM accumulation on the revisited output
+    block (TPU grid programs on one core are sequential, so no atomics).
+  * Triton's per-token gather lists become a dense [Bt] per-expert scale
+    (gate folded with the idx==e mask); the MXU then runs a full dense
+    ``x_tile @ W[e]`` which beats irregular gathers on a systolic array.
+  * Shared-memory staging becomes BlockSpec HBM->VMEM streaming; tile
+    sizes are chosen against the ~16 MiB VMEM budget (see vmem_bytes()).
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers the kernel body to
+plain HLO so the AOT'd module runs anywhere.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Token-tile size. 128 matches the MXU/VPU lane width; real-TPU VMEM
+# budgeting for the default SwitchHead dims (Din=1024, Dout=128, Bt=128)
+# is ~1.2 MiB per program (see vmem_bytes), leaving ample double-buffer
+# headroom in 16 MiB VMEM.
+DEFAULT_BLOCK_T = 128
+
+_INTERPRET = True  # CPU PJRT: Mosaic custom-calls are not executable.
+
+
+def vmem_bytes(block_t: int, din: int, dout: int, k: int) -> int:
+    """Estimated VMEM working set of one fwd grid program, in bytes.
+
+    x-tile [Bt, Din] + one expert weight [Din, Dout] + out-tile
+    [Bt, Dout] + routing [Bt, K] * 2, all float32 (idx is int32, same
+    width). Used by the §Perf harness to pick tile sizes and report the
+    utilization estimate in DESIGN.md.
+    """
+    floats = block_t * din + din * dout + block_t * dout + 2 * block_t * k
+    return 4 * floats
+
+
+def mxu_utilization_estimate(block_t: int, din: int, dout: int) -> float:
+    """Fraction of 128x128 MXU tiles that are full for the fwd matmul."""
+
+    def eff(n: int) -> float:
+        full = (n + 127) // 128
+        return n / (full * 128)
+
+    return eff(block_t) * eff(din) * eff(dout)
+
+
+def _pad_tokens(t: int, block_t: int) -> int:
+    return (t + block_t - 1) // block_t * block_t
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(x_ref, w_ref, idx_ref, gate_ref, o_ref):
+    """Grid (token_tiles, E). Accumulates over the expert axis."""
+    e = pl.program_id(1)
+
+    @pl.when(e == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # scale[t] = sum_k gate[t, k] * (idx[t, k] == e)
+    mask = (idx_ref[...] == e).astype(gate_ref.dtype)  # [Bt, K]
+    scale = jnp.sum(gate_ref[...] * mask, axis=1)  # [Bt]
+    xw = jnp.dot(x_ref[...], w_ref[0], preferred_element_type=jnp.float32)
+    o_ref[...] += scale[:, None] * xw
+
+
+def _moe_matmul_fwd_impl(x, w, idx, gate, *, block_t: int) -> jax.Array:
+    t, din = x.shape
+    e, _, dout = w.shape
+    k = idx.shape[1]
+    tp = _pad_tokens(t, block_t)
+    if tp != t:
+        x = jnp.pad(x, ((0, tp - t), (0, 0)))
+        idx = jnp.pad(idx, ((0, tp - t), (0, 0)), constant_values=e)  # no-match
+        gate = jnp.pad(gate, ((0, tp - t), (0, 0)))
+    grid = (tp // block_t, e)
+    out = pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, din), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, din, dout), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((block_t, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_t, k), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_t, dout), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tp, dout), x.dtype),
+        interpret=_INTERPRET,
+    )(x, w, idx, gate)
+    return out[:t]
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels
+# ---------------------------------------------------------------------------
+
+
+def _bwd_dx_dgate_kernel(dy_ref, w_ref, x_ref, idx_ref, gate_ref, dx_ref, dg_ref):
+    """Grid (token_tiles, E). dx and dgate accumulate over experts.
+
+    dx[t]      += scale[t, e] * dy[t] @ W[e]^T
+    dgate[t,k] += (idx[t,k] == e) * (x[t] @ W[e]) . dy[t]
+    """
+    e = pl.program_id(1)
+
+    @pl.when(e == 0)
+    def _init():
+        dx_ref[...] = jnp.zeros_like(dx_ref)
+        dg_ref[...] = jnp.zeros_like(dg_ref)
+
+    mask = (idx_ref[...] == e).astype(gate_ref.dtype)  # [Bt, K]
+    scale = jnp.sum(gate_ref[...] * mask, axis=1)  # [Bt]
+    w = w_ref[0]  # [Din, Dout]
+    dx_ref[...] += scale[:, None] * jnp.dot(
+        dy_ref[...], w.T, preferred_element_type=jnp.float32
+    )
+    # Per-token inner product of this expert's projection with dy.
+    xw = jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)  # [Bt, Dout]
+    contrib = jnp.sum(xw * dy_ref[...], axis=1)  # [Bt]
+    dg_ref[...] += mask * contrib[:, None]
+
+
+def _bwd_dw_kernel(x_ref, dy_ref, idx_ref, gate_ref, dw_ref):
+    """Grid (E, token_tiles). dW[e] accumulates over token tiles.
+
+    dW[e] += (x_tile * scale[:, None])^T @ dy_tile
+    """
+    e = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        dw_ref[...] = jnp.zeros_like(dw_ref)
+
+    mask = (idx_ref[...] == e).astype(gate_ref.dtype)
+    scale = jnp.sum(gate_ref[...] * mask, axis=1)  # [Bt]
+    xs = x_ref[...] * scale[:, None]
+    dw_ref[0] += jnp.dot(xs.T, dy_ref[...], preferred_element_type=jnp.float32)
+
+
+def _moe_matmul_bwd_impl(x, w, idx, gate, dy, *, block_t: int):
+    t, din = x.shape
+    e, _, dout = w.shape
+    k = idx.shape[1]
+    tp = _pad_tokens(t, block_t)
+    if tp != t:
+        pad = tp - t
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        dy = jnp.pad(dy, ((0, pad), (0, 0)))
+        idx = jnp.pad(idx, ((0, pad), (0, 0)), constant_values=e)
+        gate = jnp.pad(gate, ((0, pad), (0, 0)))
+    n_tiles = tp // block_t
+
+    dx, dgate = pl.pallas_call(
+        _bwd_dx_dgate_kernel,
+        grid=(n_tiles, e),
+        in_specs=[
+            pl.BlockSpec((block_t, dout), lambda i, j: (i, 0)),  # dy
+            pl.BlockSpec((1, din, dout), lambda i, j: (j, 0, 0)),  # w
+            pl.BlockSpec((block_t, din), lambda i, j: (i, 0)),  # x
+            pl.BlockSpec((block_t, k), lambda i, j: (i, 0)),  # idx
+            pl.BlockSpec((block_t, k), lambda i, j: (i, 0)),  # gate
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t, din), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_t, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((tp, din), x.dtype),
+            jax.ShapeDtypeStruct((tp, k), gate.dtype),
+        ],
+        interpret=_INTERPRET,
+    )(dy, w, x, idx, gate)
+
+    dw = pl.pallas_call(
+        _bwd_dw_kernel,
+        grid=(e, n_tiles),
+        in_specs=[
+            pl.BlockSpec((block_t, din), lambda j, i: (i, 0)),  # x
+            pl.BlockSpec((block_t, dout), lambda j, i: (i, 0)),  # dy
+            pl.BlockSpec((block_t, k), lambda j, i: (i, 0)),  # idx
+            pl.BlockSpec((block_t, k), lambda j, i: (i, 0)),  # gate
+        ],
+        out_specs=pl.BlockSpec((1, din, dout), lambda j, i: (j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, din, dout), w.dtype),
+        interpret=_INTERPRET,
+    )(x, dy, idx, gate)
+
+    return dx[:t], dw, dgate[:t]
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrapper — public API
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def moe_matmul(x, w, idx, gate, block_t: int = DEFAULT_BLOCK_T):
+    """y[t] = sum_k gate[t,k] * x[t] @ w[idx[t,k]]  via Pallas kernels.
+
+    Args:
+      x: [T, Din] activations.
+      w: [E, Din, Dout] expert weights.
+      idx: [T, K] int32 expert indices (top-k of the router).
+      gate: [T, K] float gate values at those indices.
+      block_t: token tile size (static).
+
+    Differentiable in x, w, and gate; idx carries no gradient (argmax of
+    the router is piecewise constant, as in the paper).
+    """
+    return _moe_matmul_fwd_impl(x, w, idx, gate, block_t=block_t)
+
+
+def _vjp_fwd(x, w, idx, gate, block_t):
+    y = _moe_matmul_fwd_impl(x, w, idx, gate, block_t=block_t)
+    return y, (x, w, idx, gate)
+
+
+def _vjp_bwd(block_t, res, dy):
+    x, w, idx, gate = res
+    dx, dw, dgate = _moe_matmul_bwd_impl(x, w, idx, gate, dy, block_t=block_t)
+    return dx, dw, None, dgate
+
+
+moe_matmul.defvjp(_vjp_fwd, _vjp_bwd)

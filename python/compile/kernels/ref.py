@@ -1,0 +1,53 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this
+package must match its oracle to float32 tolerance across the shape/dtype
+sweeps in ``python/tests``. They are also used directly in the L2 model
+when ``use_pallas=False`` (the lowered HLO is then pure XLA ops), which
+gives us an apples-to-apples fusion baseline for the §Perf comparison.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_scale_ref(idx: jax.Array, gate: jax.Array, n_experts: int) -> jax.Array:
+    """Dense per-expert scale map [T, E] from top-k routing.
+
+    scale[t, e] = sum_k gate[t, k] * (idx[t, k] == e)
+    """
+    onehot = jax.nn.one_hot(idx, n_experts, dtype=gate.dtype)  # [T, K, E]
+    return jnp.einsum("tk,tke->te", gate, onehot)
+
+
+def moe_matmul_ref(
+    x: jax.Array,  # [T, Din]
+    w: jax.Array,  # [E, Din, Dout]
+    idx: jax.Array,  # [T, K] int32, entries in [0, E)
+    gate: jax.Array,  # [T, K] float32
+) -> jax.Array:  # [T, Dout]
+    """Top-k mixture-of-experts projection (sigma-MoE style).
+
+    y[t] = sum_k gate[t, k] * x[t] @ w[idx[t, k]]
+
+    Implemented densely via a per-token expert-scale map so it is
+    trivially differentiable and obviously correct.
+    """
+    scale = moe_scale_ref(idx, gate, w.shape[0])  # [T, E]
+    proj = jnp.einsum("ti,eio->teo", x, w)  # [T, E, Dout]
+    return jnp.einsum("te,teo->to", scale, proj)
+
+
+def attention_core_ref(
+    q: jax.Array,  # [H, Tq, Dh]
+    k: jax.Array,  # [H, Tk, Dh]
+    v: jax.Array,  # [H, Tk, Dh]
+    bias: jax.Array,  # [H, Tq, Tk] additive logit bias (mask/relpos folded in)
+    scale: float,
+) -> jax.Array:  # [H, Tq, Dh]
+    """Bias-additive attention core: softmax(q k^T * scale + bias) v."""
+    logits = jnp.einsum("hqd,hkd->hqk", q, k) * scale + bias
+    attn = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", attn, v)

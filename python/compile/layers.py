@@ -1,0 +1,647 @@
+"""L2 layer zoo: SwitchHead attention, dense MHA, MoA, sigma-MoE MLP.
+
+Everything here is a pure function over explicit parameter pytrees (no
+framework state), so the whole model lowers into a single HLO module via
+``jax.jit(...).lower()`` in ``aot.py``.
+
+Conventions
+-----------
+* Activations are ``[B, T, D]``; MoE projections flatten to ``[B*T, D]``
+  because routing is strictly per-token (this is exact, not an
+  approximation).
+* Attention core calls fold batch into the head axis (``[B*H, T, Dh]``)
+  so the Pallas kernel never needs vmap.
+* The additive ``bias`` fed to the attention core carries the causal
+  mask, padding mask, and (for Transformer-XL) the relative-position
+  logits; the core itself is positional-scheme agnostic (paper section 2.2:
+  the method "does not depend on the specific implementation of the
+  attention").
+* All layer parameter trees are built per layer and stacked along a
+  leading ``L`` axis by the model so the block runs under ``lax.scan``
+  (keeps the lowered HLO small and compile times flat in depth).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention_core
+from .kernels.moe_proj import moe_matmul
+from .kernels.ref import attention_core_ref, moe_matmul_ref
+
+Params = Dict[str, Any]
+
+NEG_INF = -1e9
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ModelConfig:
+    """Mirrors configs/*.json; see rust/src/config for the Rust twin."""
+
+    name: str = "model"
+    family: str = "switchhead"  # switchhead | dense | moa
+    pos: str = "xl"  # xl | rope | none (none => bidirectional encoder)
+    task: str = "lm"  # lm | listops
+    vocab_size: int = 512
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 2
+    d_head: int = 32
+    d_ff: int = 256
+    seq_len: int = 64
+    batch_size: int = 8
+    dropout: float = 0.0
+    # SwitchHead MoE attention (family == switchhead)
+    att_n_experts: int = 4
+    att_k: int = 2
+    # Routing activation ablation: the paper (following sigma-MoE) uses a
+    # NON-competitive sigmoid; "softmax" switches to MoA-style competitive
+    # routing to reproduce the design-choice comparison.
+    att_router: str = "sigmoid"  # sigmoid | softmax
+    moe_v: bool = True
+    moe_k: bool = False
+    moe_q: bool = False
+    moe_o: bool = True
+    shared_selection: bool = False
+    # MoA (family == moa)
+    moa_n_experts: int = 8
+    moa_k: int = 2
+    moa_aux_weight: float = 0.01
+    # MLP
+    mlp_type: str = "dense"  # dense | sigma_moe
+    mlp_n_experts: int = 4
+    mlp_k: int = 2
+    mlp_d_expert: int = 64
+    # Training (baked into train_step.hlo)
+    lr: float = 2.5e-4
+    warmup: int = 100
+    clip: float = 0.25
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+    adam_eps: float = 1e-8
+    ls_n_classes: int = 10  # listops output classes
+    use_pallas: bool = True
+    block_t: int = 128
+
+    @property
+    def ctx_len(self) -> int:
+        """Key/value context length (XL: cache chunk + current chunk)."""
+        return 2 * self.seq_len if self.pos == "xl" else self.seq_len
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "ModelConfig":
+        known = {f.name for f in dataclasses.fields(ModelConfig)}
+        return ModelConfig(**{k: v for k, v in d.items() if k in known})
+
+
+# ---------------------------------------------------------------------------
+# Small utilities
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) / jnp.sqrt(float(fan_in))
+
+
+def layer_norm(x: jax.Array, p: Params) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * p["g"] + p["b"]
+
+
+def layer_norm_init(d: int) -> Params:
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def dropout(x: jax.Array, rate: float, key: Optional[jax.Array]) -> jax.Array:
+    if rate <= 0.0 or key is None:
+        return x
+    keep = jax.random.bernoulli(key, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / (1.0 - rate), 0.0)
+
+
+def _moe_mm(cfg: ModelConfig, x, w, idx, gate):
+    """moe projection with kernel/reference dispatch (cfg.use_pallas)."""
+    if cfg.use_pallas:
+        return moe_matmul(x, w, idx, gate, min(cfg.block_t, x.shape[0]))
+    return moe_matmul_ref(x, w, idx, gate)
+
+
+def _attn_core(cfg: ModelConfig, q, k, v, bias, scale):
+    if cfg.use_pallas:
+        return attention_core(q, k, v, bias, scale, min(128, q.shape[1]))
+    return attention_core_ref(q, k, v, bias, scale)
+
+
+def small_top_k(scores: jax.Array, k: int):
+    """Iterative-argmax top-k over the last axis.
+
+    ``jax.lax.top_k`` lowers to an HLO `topk(..., largest=true)`
+    instruction that the runtime's XLA (xla_extension 0.5.1) text parser
+    rejects; with k <= 4 and E <= 16 an unrolled argmax loop is both
+    parser-compatible and cheap (k*E compares per token). Gradients flow
+    through the gathered values exactly as with top_k.
+    """
+    vals, idxs = [], []
+    s = scores
+    e = scores.shape[-1]
+    for _ in range(k):
+        idx = jnp.argmax(s, axis=-1)  # [N]
+        val = jnp.take_along_axis(scores, idx[..., None], axis=-1)[..., 0]
+        idxs.append(idx)
+        vals.append(val)
+        # Mask the selected expert for the next round.
+        s = jnp.where(jax.nn.one_hot(idx, e, dtype=jnp.bool_), -jnp.inf, s)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def sigmoid_router(x_flat: jax.Array, w_s: jax.Array, k: int):
+    """sigma-MoE non-competitive router (paper Eq. 7-8).
+
+    x_flat: [N, D]; w_s: [D, E]. Returns (idx [N,k] i32, gate [N,k] f32,
+    scores [N,E] for analysis). Sigmoid, not softmax: selection is
+    non-competitive, so no load-balancing regularizer is needed.
+    """
+    scores = jax.nn.sigmoid(x_flat @ w_s)  # [N, E]
+    gate, idx = small_top_k(scores, k)
+    return idx.astype(jnp.int32), gate, scores
+
+
+def softmax_router(x_flat: jax.Array, w_s: jax.Array, k: int):
+    """MoA-style competitive router: softmax over experts, renormalized
+    top-k gates. Returns (idx, gate, full_probs)."""
+    probs = jax.nn.softmax(x_flat @ w_s, axis=-1)
+    gate, idx = small_top_k(probs, k)
+    gate = gate / (jnp.sum(gate, axis=-1, keepdims=True) + 1e-9)
+    return idx.astype(jnp.int32), gate, probs
+
+
+def cv_squared(x: jax.Array) -> jax.Array:
+    """Coefficient-of-variation^2 load-balance penalty (Shazeer 2017),
+    used by the MoA baseline's regularizers."""
+    mean = jnp.mean(x)
+    return jnp.var(x) / (mean * mean + 1e-10)
+
+
+# ---------------------------------------------------------------------------
+# Positional schemes
+# ---------------------------------------------------------------------------
+
+
+def sinusoidal(positions: jax.Array, d: int) -> jax.Array:
+    """[N] -> [N, d] classic sinusoidal embedding."""
+    half = d // 2
+    freq = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(10000.0) / half))
+    ang = positions[:, None].astype(jnp.float32) * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def rope_rotate(x: jax.Array, positions: jax.Array) -> jax.Array:
+    """RoPE rotation. x: [..., T, Dh], positions: [T]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(10000.0) / half))
+    ang = positions[:, None].astype(jnp.float32) * freq[None, :]  # [T, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def causal_bias(tq: int, tk: int) -> jax.Array:
+    """[Tq, Tk] additive causal mask; query i sits at absolute position
+    (tk - tq + i) within the key window."""
+    off = tk - tq
+    q = jnp.arange(tq)[:, None]
+    k = jnp.arange(tk)[None, :]
+    return jnp.where(k <= q + off, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def xl_pos_bias(q_plus_v: jax.Array, r: jax.Array, tq: int, tk: int) -> jax.Array:
+    """Transformer-XL relative-position logits.
+
+    q_plus_v: [H, Tq, Dh] (query + global position bias v_bias);
+    r: [H, Tk, Dh] projected sinusoidal embeddings for relative
+    distances 0..Tk-1. Returns [H, Tq, Tk] with entry (i, j) equal to
+    (q_i + v) . r_{(tk - tq + i) - j}  (gathered; masked positions get
+    arbitrary values, the causal mask zeroes them out).
+    """
+    off = tk - tq
+    # bd[h, i, d] over distances d in [0, Tk)
+    bd = jnp.einsum("hqd,hkd->hqk", q_plus_v, r)  # [H, Tq, Tk(dist)]
+    dist = (jnp.arange(tq)[:, None] + off) - jnp.arange(tk)[None, :]  # [Tq, Tk]
+    dist = jnp.clip(dist, 0, tk - 1)
+    return jnp.take_along_axis(bd, dist[None].repeat(bd.shape[0], 0), axis=2)
+
+
+# ---------------------------------------------------------------------------
+# Attention layers. All share the signature:
+#   f(cfg, params, x [B,T,D], cache [B,Tc,D] | None, pad_mask | None)
+#     -> (y [B,T,D], aux dict)
+# aux carries attention maps / gate scores (analysis path) and MoA reg loss.
+# ---------------------------------------------------------------------------
+
+
+def _kv_source(x: jax.Array, cache: Optional[jax.Array]) -> jax.Array:
+    """Concatenate XL cache (previous chunk, stop-grad) with the chunk."""
+    if cache is None:
+        return x
+    return jnp.concatenate([jax.lax.stop_gradient(cache), x], axis=1)
+
+
+def _bias_for(
+    cfg: ModelConfig,
+    h: int,
+    tq: int,
+    tk: int,
+    b: int,
+    pos_term: Optional[jax.Array],
+    pad_mask: Optional[jax.Array],
+) -> jax.Array:
+    """Assemble the [B*H, Tq, Tk] additive bias."""
+    if cfg.pos == "none":
+        bias = jnp.zeros((tq, tk), jnp.float32)
+    else:
+        bias = causal_bias(tq, tk)
+    bias = jnp.broadcast_to(bias[None], (h, tq, tk))
+    if pos_term is not None:
+        bias = bias + pos_term  # [H, Tq, Tk]
+    bias = jnp.broadcast_to(bias[None], (b, h, tq, tk))
+    if pad_mask is not None:  # pad_mask: [B, Tk] True = valid
+        bias = bias + jnp.where(pad_mask, 0.0, NEG_INF)[:, None, None, :]
+    return bias.reshape(b * h, tq, tk)
+
+
+def switchhead_attention_init(cfg: ModelConfig, key) -> Params:
+    """Parameters for one SwitchHead layer (paper section 2.2).
+
+    Per head h: dense W_K/W_Q (unless ablated to MoE), E-expert W_V and
+    W_O, a source-side router (keys+values) and a destination-side
+    router (queries+output). ``shared_selection`` ties the two routers
+    (paper section 3.6).
+    """
+    d, dh, h, e = cfg.d_model, cfg.d_head, cfg.n_heads, cfg.att_n_experts
+    ks = jax.random.split(key, 12)
+    p: Params = {}
+    p["w_k"] = (
+        _dense_init(ks[0], (h, e, d, dh), d) if cfg.moe_k else _dense_init(ks[0], (h, d, dh), d)
+    )
+    p["w_q"] = (
+        _dense_init(ks[1], (h, e, d, dh), d) if cfg.moe_q else _dense_init(ks[1], (h, d, dh), d)
+    )
+    p["w_v"] = (
+        _dense_init(ks[2], (h, e, d, dh), d) if cfg.moe_v else _dense_init(ks[2], (h, d, dh), d)
+    )
+    p["w_o"] = (
+        _dense_init(ks[3], (h, e, dh, d), dh) if cfg.moe_o else _dense_init(ks[3], (h, dh, d), dh)
+    )
+    p["w_sel_s"] = _dense_init(ks[4], (h, d, e), d)  # source router
+    if not cfg.shared_selection:
+        p["w_sel_d"] = _dense_init(ks[5], (h, d, e), d)  # destination router
+    if cfg.pos == "xl":
+        p["w_kr"] = _dense_init(ks[6], (h, d, dh), d)
+        p["u_bias"] = jnp.zeros((h, dh), jnp.float32)
+        p["v_bias"] = jnp.zeros((h, dh), jnp.float32)
+    return p
+
+
+def switchhead_attention(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    cache: Optional[jax.Array],
+    pad_mask: Optional[jax.Array] = None,
+    collect: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    b, t, d = x.shape
+    h, e, k, dh = cfg.n_heads, cfg.att_n_experts, cfg.att_k, cfg.d_head
+    src = _kv_source(x, cache)  # [B, Tk, D]
+    tk = src.shape[1]
+    xq = x.reshape(b * t, d)  # destination-side tokens
+    xs = src.reshape(b * tk, d)  # source-side tokens
+
+    router = sigmoid_router if cfg.att_router == "sigmoid" else softmax_router
+
+    aux: Dict[str, jax.Array] = {}
+    qs, ks_, vs = [], [], []
+    sel_d_all = []
+    for hi in range(h):
+        # Routing (Eq. 7-8): source side gates K/V experts, destination
+        # side gates Q/O experts.
+        idx_s, gate_s, sc_s = router(xs, p["w_sel_s"][hi], k)
+        if cfg.shared_selection:
+            idx_d, gate_d, sc_d = router(xq, p["w_sel_s"][hi], k)
+        else:
+            idx_d, gate_d, sc_d = router(xq, p["w_sel_d"][hi], k)
+        sel_d_all.append((idx_d, gate_d))
+        if collect:
+            aux[f"gate_src_{hi}"] = sc_s
+            aux[f"gate_dst_{hi}"] = sc_d
+
+        if cfg.moe_k:
+            kh = _moe_mm(cfg, xs, p["w_k"][hi], idx_s, gate_s)
+        else:
+            kh = xs @ p["w_k"][hi]
+        if cfg.moe_q:
+            qh = _moe_mm(cfg, xq, p["w_q"][hi], idx_d, gate_d)
+        else:
+            qh = xq @ p["w_q"][hi]
+        if cfg.moe_v:
+            vh = _moe_mm(cfg, xs, p["w_v"][hi], idx_s, gate_s)
+        else:
+            vh = xs @ p["w_v"][hi]
+        qs.append(qh.reshape(b, t, dh))
+        ks_.append(kh.reshape(b, tk, dh))
+        vs.append(vh.reshape(b, tk, dh))
+
+    q = jnp.stack(qs, axis=1)  # [B, H, T, Dh]
+    kk = jnp.stack(ks_, axis=1)  # [B, H, Tk, Dh]
+    vv = jnp.stack(vs, axis=1)
+
+    pos_term = None
+    if cfg.pos == "xl":
+        dist_emb = sinusoidal(jnp.arange(tk), d)  # [Tk, D]
+        r = jnp.einsum("kd,hde->hke", dist_emb, p["w_kr"])  # [H, Tk, Dh]
+        # mean over batch is wrong; pos term is per (head, q-pos) only
+        # when q doesn't vary by batch — it does, so fold into bias per
+        # batch by computing with q + v_bias per batch element.
+        qv = q + p["v_bias"][None, :, None, :]
+        pos_full = jax.vmap(lambda qb: xl_pos_bias(qb, r, t, tk))(qv)  # [B,H,T,Tk]
+        q = q + p["u_bias"][None, :, None, :]
+        bias = _bias_for(cfg, h, t, tk, b, None, pad_mask)
+        bias = bias + pos_full.reshape(b * h, t, tk)
+    elif cfg.pos == "rope":
+        pos = jnp.arange(tk)
+        q = rope_rotate(q, pos[tk - t :])
+        kk = rope_rotate(kk, pos)
+        bias = _bias_for(cfg, h, t, tk, b, None, pad_mask)
+    else:
+        bias = _bias_for(cfg, h, t, tk, b, None, pad_mask)
+
+    scale = 1.0 / jnp.sqrt(float(dh)).astype(jnp.float32)
+    qf = q.reshape(b * h, t, dh)
+    kf = kk.reshape(b * h, tk, dh)
+    vf = vv.reshape(b * h, tk, dh)
+    if collect:
+        logits = jnp.einsum("nqd,nkd->nqk", qf, kf) * scale + bias
+        attn = jax.nn.softmax(logits, axis=-1)
+        aux["attn"] = attn.reshape(b, h, t, tk)
+        att = jnp.einsum("nqk,nkd->nqd", attn, vf)
+    else:
+        att = _attn_core(cfg, qf, kf, vf, bias, float(1.0 / (dh**0.5)))
+    att = att.reshape(b, h, t, dh)
+
+    # Output MoE (Eq. 10): destination-side gates.
+    y = jnp.zeros((b * t, d), jnp.float32)
+    for hi in range(h):
+        ah = att[:, hi].reshape(b * t, dh)
+        idx_d, gate_d = sel_d_all[hi]
+        if cfg.moe_o:
+            y = y + _moe_mm(cfg, ah, p["w_o"][hi], idx_d, gate_d)
+        else:
+            y = y + ah @ p["w_o"][hi]
+    return y.reshape(b, t, d), aux
+
+
+def dense_attention_init(cfg: ModelConfig, key) -> Params:
+    d, dh, h = cfg.d_model, cfg.d_head, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    p: Params = {
+        "w_k": _dense_init(ks[0], (h, d, dh), d),
+        "w_q": _dense_init(ks[1], (h, d, dh), d),
+        "w_v": _dense_init(ks[2], (h, d, dh), d),
+        "w_o": _dense_init(ks[3], (h, dh, d), dh),
+    }
+    if cfg.pos == "xl":
+        p["w_kr"] = _dense_init(ks[4], (h, d, dh), d)
+        p["u_bias"] = jnp.zeros((h, dh), jnp.float32)
+        p["v_bias"] = jnp.zeros((h, dh), jnp.float32)
+    return p
+
+
+def dense_attention(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    cache: Optional[jax.Array],
+    pad_mask: Optional[jax.Array] = None,
+    collect: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Standard MHA baseline (Transformer-XL or RoPE), Eq. 1-3."""
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    src = _kv_source(x, cache)
+    tk = src.shape[1]
+    q = jnp.einsum("btd,hde->bhte", x, p["w_q"])
+    kk = jnp.einsum("btd,hde->bhte", src, p["w_k"])
+    vv = jnp.einsum("btd,hde->bhte", src, p["w_v"])
+
+    aux: Dict[str, jax.Array] = {}
+    if cfg.pos == "xl":
+        dist_emb = sinusoidal(jnp.arange(tk), d)
+        r = jnp.einsum("kd,hde->hke", dist_emb, p["w_kr"])
+        qv = q + p["v_bias"][None, :, None, :]
+        pos_full = jax.vmap(lambda qb: xl_pos_bias(qb, r, t, tk))(qv)
+        q = q + p["u_bias"][None, :, None, :]
+        bias = _bias_for(cfg, h, t, tk, b, None, pad_mask) + pos_full.reshape(b * h, t, tk)
+    elif cfg.pos == "rope":
+        pos = jnp.arange(tk)
+        q = rope_rotate(q, pos[tk - t :])
+        kk = rope_rotate(kk, pos)
+        bias = _bias_for(cfg, h, t, tk, b, None, pad_mask)
+    else:
+        bias = _bias_for(cfg, h, t, tk, b, None, pad_mask)
+
+    qf, kf, vf = (a.reshape(b * h, -1, dh) for a in (q, kk, vv))
+    if collect:
+        logits = jnp.einsum("nqd,nkd->nqk", qf, kf) / jnp.sqrt(float(dh)) + bias
+        attn = jax.nn.softmax(logits, axis=-1)
+        aux["attn"] = attn.reshape(b, h, t, tk)
+        att = jnp.einsum("nqk,nkd->nqd", attn, vf)
+    else:
+        att = _attn_core(cfg, qf, kf, vf, bias, float(1.0 / (dh**0.5)))
+    att = att.reshape(b, h, t, dh)
+    y = jnp.einsum("bhte,hed->btd", att, p["w_o"])
+    return y, aux
+
+
+def moa_attention_init(cfg: ModelConfig, key) -> Params:
+    """MoA baseline (Zhang et al. 2022): single shared K/V projection,
+    a pool of E query/output experts, softmax router selecting
+    ``moa_k`` experts per token — each selected expert computes its own
+    attention matrix (that is exactly why MoA is expensive; Eq. 14-15)."""
+    d, dh, e = cfg.d_model, cfg.d_head, cfg.moa_n_experts
+    ks = jax.random.split(key, 6)
+    p: Params = {
+        "w_k": _dense_init(ks[0], (d, dh), d),
+        "w_v": _dense_init(ks[1], (d, dh), d),
+        "w_q": _dense_init(ks[2], (e, d, dh), d),
+        "w_o": _dense_init(ks[3], (e, dh, d), dh),
+        "w_sel": _dense_init(ks[4], (d, e), d),
+    }
+    if cfg.pos == "xl":
+        p["w_kr"] = _dense_init(ks[5], (d, dh), d)
+        p["u_bias"] = jnp.zeros((dh,), jnp.float32)
+        p["v_bias"] = jnp.zeros((dh,), jnp.float32)
+    return p
+
+
+def moa_attention(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    cache: Optional[jax.Array],
+    pad_mask: Optional[jax.Array] = None,
+    collect: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    b, t, d = x.shape
+    dh, e, k = cfg.d_head, cfg.moa_n_experts, cfg.moa_k
+    src = _kv_source(x, cache)
+    tk = src.shape[1]
+    xq = x.reshape(b * t, d)
+
+    idx, gate, probs = softmax_router(xq, p["w_sel"], k)
+    # MoA regularizers (the paper notes MoA needs three; we implement the
+    # standard importance + load CV^2 pair and a z-loss).
+    importance = jnp.sum(probs, axis=0)
+    load = jnp.sum(jax.nn.one_hot(idx, e, dtype=jnp.float32), axis=(0, 1))
+    zloss = jnp.mean(jnp.log(jnp.sum(jnp.exp(xq @ p["w_sel"]), axis=-1)) ** 2)
+    aux_loss = cfg.moa_aux_weight * (cv_squared(importance) + cv_squared(load) + zloss)
+
+    kk = src @ p["w_k"]  # [B*?]: [B, Tk, Dh] shared
+    vv = src @ p["w_v"]
+
+    pos_term = None
+    if cfg.pos == "xl":
+        dist_emb = sinusoidal(jnp.arange(tk), d)
+        r = dist_emb @ p["w_kr"]  # [Tk, Dh]
+
+    aux: Dict[str, jax.Array] = {"moa_aux": aux_loss}
+    y = jnp.zeros((b * t, d), jnp.float32)
+    attn_maps = []
+    for j in range(k):
+        # Slot j: per-token expert idx[:, j] with gate gate[:, j].
+        qj = _moe_mm(cfg, xq, p["w_q"], idx[:, j : j + 1], jnp.ones_like(gate[:, j : j + 1]))
+        qj = qj.reshape(b, t, dh)
+        if cfg.pos == "xl":
+            qv = qj + p["v_bias"]
+            pos_full = jax.vmap(lambda qb: xl_pos_bias(qb[None], r[None], t, tk)[0])(qv)
+            qj = qj + p["u_bias"]
+            bias = _bias_for(cfg, 1, t, tk, b, None, pad_mask) + pos_full.reshape(b, t, tk)
+        elif cfg.pos == "rope":
+            pos = jnp.arange(tk)
+            qj = rope_rotate(qj, pos[tk - t :])
+            if j == 0:
+                kk = rope_rotate(kk, pos)
+            bias = _bias_for(cfg, 1, t, tk, b, None, pad_mask)
+        else:
+            bias = _bias_for(cfg, 1, t, tk, b, None, pad_mask)
+        if collect:
+            logits = jnp.einsum("btd,bkd->btk", qj, kk) / jnp.sqrt(float(dh)) + bias.reshape(
+                b, t, tk
+            )
+            attn = jax.nn.softmax(logits, axis=-1)
+            attn_maps.append(attn)
+            att = jnp.einsum("btk,bkd->btd", attn, vv)
+        else:
+            att = _attn_core(cfg, qj, kk, vv, bias, float(1.0 / (dh**0.5)))
+        att = att.reshape(b * t, dh)
+        y = y + _moe_mm(cfg, att, p["w_o"], idx[:, j : j + 1], gate[:, j : j + 1])
+    if collect:
+        aux["attn"] = jnp.stack(attn_maps, axis=1)  # [B, k, T, Tk]
+    return y.reshape(b, t, d), aux
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def dense_mlp_init(cfg: ModelConfig, key) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    return {"w1": _dense_init(k1, (d, f), d), "w2": _dense_init(k2, (f, d), f)}
+
+
+def dense_mlp(cfg: ModelConfig, p: Params, x: jax.Array, key=None) -> jax.Array:
+    h = jax.nn.relu(x @ p["w1"])
+    h = dropout(h, cfg.dropout, key)
+    return h @ p["w2"]
+
+
+def sigma_moe_mlp_init(cfg: ModelConfig, key) -> Params:
+    """sigma-MoE MLP (Csordas et al. 2023) for SwitchAll."""
+    d, de, e = cfg.d_model, cfg.mlp_d_expert, cfg.mlp_n_experts
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": _dense_init(k1, (e, d, de), d),
+        "w2": _dense_init(k2, (e, de, d), de),
+        "w_sel": _dense_init(k3, (d, e), d),
+    }
+
+
+def sigma_moe_mlp(cfg: ModelConfig, p: Params, x: jax.Array, key=None) -> jax.Array:
+    b, t, d = x.shape
+    xf = x.reshape(b * t, d)
+    idx, gate, _ = sigmoid_router(xf, p["w_sel"], cfg.mlp_k)
+    y = jnp.zeros_like(xf)
+    ones = jnp.ones((xf.shape[0], 1), jnp.float32)
+    for j in range(cfg.mlp_k):
+        hj = jax.nn.relu(_moe_mm(cfg, xf, p["w1"], idx[:, j : j + 1], ones))
+        hj = dropout(hj, cfg.dropout, None if key is None else jax.random.fold_in(key, j))
+        y = y + _moe_mm(cfg, hj, p["w2"], idx[:, j : j + 1], gate[:, j : j + 1])
+    return y.reshape(b, t, d)
+
+
+# ---------------------------------------------------------------------------
+# Transformer block (pre-LN)
+# ---------------------------------------------------------------------------
+
+ATTN_INIT = {
+    "switchhead": switchhead_attention_init,
+    "dense": dense_attention_init,
+    "moa": moa_attention_init,
+}
+ATTN_APPLY = {
+    "switchhead": switchhead_attention,
+    "dense": dense_attention,
+    "moa": moa_attention,
+}
+
+
+def block_init(cfg: ModelConfig, key) -> Params:
+    k1, k2 = jax.random.split(key)
+    mlp_init = sigma_moe_mlp_init if cfg.mlp_type == "sigma_moe" else dense_mlp_init
+    return {
+        "ln1": layer_norm_init(cfg.d_model),
+        "ln2": layer_norm_init(cfg.d_model),
+        "attn": ATTN_INIT[cfg.family](cfg, k1),
+        "mlp": mlp_init(cfg, k2),
+    }
+
+
+def block_apply(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    cache: Optional[jax.Array],
+    pad_mask: Optional[jax.Array] = None,
+    key=None,
+    collect: bool = False,
+) -> Tuple[jax.Array, Optional[jax.Array], Dict[str, jax.Array]]:
+    """Returns (y, new_cache, aux). new_cache is the block *input* of the
+    current chunk (Transformer-XL convention)."""
+    new_cache = x if cache is not None else None
+    a, aux = ATTN_APPLY[cfg.family](cfg, p["attn"], layer_norm(x, p["ln1"]), cache, pad_mask, collect)
+    x = x + a
+    mlp_fn = sigma_moe_mlp if cfg.mlp_type == "sigma_moe" else dense_mlp
+    x = x + mlp_fn(cfg, p["mlp"], layer_norm(x, p["ln2"]), key)
+    return x, new_cache, aux

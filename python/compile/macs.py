@@ -1,0 +1,87 @@
+"""Analytic MAC / memory accounting for the attention layer (paper A.2).
+
+Implements Eqs. 11-15 *literally* as published, per attention layer and
+per sequence (batch- and layer-count independent, exactly like the
+paper's tables). The Rust twin lives in ``rust/src/macs``; an integration
+test cross-checks the two on every config.
+
+C is the Transformer-XL context multiple (C=2 everywhere in the paper:
+one cached chunk + the current chunk); RoPE configs use C=1 and have no
+position-projection term.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from .layers import ModelConfig
+
+
+def attention_macs_mem(cfg: ModelConfig) -> Dict[str, float]:
+    t = float(cfg.seq_len)
+    dh = float(cfg.d_head)
+    dm = float(cfg.d_model)
+    xl = cfg.pos == "xl"
+    c = 2.0 if xl else 1.0
+    pos = 1.0 if xl else 0.0  # XL position projection term
+
+    if cfg.family == "dense":
+        nh = float(cfg.n_heads)
+        macs = nh * (4 * t * dh * dm + 2 * c * t * t * dh + pos * 2 * c * t * dh * dm)
+        mem = nh * (4 * t * dh + 2 * c * t * t + pos * 2 * c * t * dh)
+    elif cfg.family == "switchhead":
+        nh = float(cfg.n_heads)
+        k = float(cfg.att_k)
+        macs = nh * (
+            2 * t * dh * dm
+            + 2 * t * k * dh * (dm + 1)
+            + 2 * c * t * t * dh
+            + pos * 2 * c * t * dh * dm
+        )
+        mem = nh * (4 * t * dh + 2 * c * t * t + pos * 2 * c * t * dh)
+    elif cfg.family == "moa":
+        nh = float(cfg.moa_k)  # active experts = computed attention matrices
+        macs = (
+            (2 * nh + 2) * t * dh * dm
+            + 2 * nh * c * t * t * dh
+            + pos * 2 * c * t * dh * dm
+        )
+        mem = (2 * nh + 2) * t * dh + 2 * nh * c * t * t + pos * 2 * c * t * dh
+    else:
+        raise ValueError(cfg.family)
+    return {"attn_macs": macs, "attn_mem_floats": mem}
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Exact parameter count of the model as built by model.init_params."""
+    d, dh, h = cfg.d_model, cfg.d_head, cfg.n_heads
+    n_out = cfg.ls_n_classes if cfg.task == "listops" else cfg.vocab_size
+    total = cfg.vocab_size * d + d * n_out + 2 * d  # embed + head + ln_f
+
+    if cfg.family == "switchhead":
+        e = cfg.att_n_experts
+        attn = 0
+        attn += h * (e if cfg.moe_k else 1) * d * dh  # w_k
+        attn += h * (e if cfg.moe_q else 1) * d * dh  # w_q
+        attn += h * (e if cfg.moe_v else 1) * d * dh  # w_v
+        attn += h * (e if cfg.moe_o else 1) * dh * d  # w_o
+        attn += h * d * e  # w_sel_s
+        if not cfg.shared_selection:
+            attn += h * d * e  # w_sel_d
+    elif cfg.family == "dense":
+        attn = 4 * h * d * dh
+    else:  # moa
+        e = cfg.moa_n_experts
+        attn = 2 * d * dh + 2 * e * d * dh + d * e
+    if cfg.pos == "xl":
+        if cfg.family == "moa":
+            attn += d * dh + 2 * dh  # shared w_kr + u/v biases
+        else:
+            attn += h * d * dh + 2 * h * dh
+
+    if cfg.mlp_type == "sigma_moe":
+        mlp = cfg.mlp_n_experts * (2 * d * cfg.mlp_d_expert) + d * cfg.mlp_n_experts
+    else:
+        mlp = 2 * d * cfg.d_ff
+    per_layer = attn + mlp + 4 * d  # + ln1/ln2
+    return total + cfg.n_layers * per_layer

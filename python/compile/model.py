@@ -1,0 +1,397 @@
+"""L2 models: Transformer LM (XL / RoPE) and ListOps classifier, plus the
+AOT entry points (init / train_step / eval_step / score / attn) that
+``aot.py`` lowers to HLO text for the Rust runtime.
+
+The layer stack runs under ``lax.scan`` over parameters stacked along a
+leading ``n_layers`` axis: this keeps the lowered HLO size and compile
+time flat in depth, and is the L2 perf item called out in DESIGN.md §8.
+
+Optimizer (Adam + global-norm clipping + linear warmup) lives *inside*
+``train_step`` so a single PJRT execution advances the model one step;
+the Rust coordinator only shuttles device-resident buffers.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (
+    ModelConfig,
+    Params,
+    block_apply,
+    block_init,
+    layer_norm,
+    layer_norm_init,
+)
+
+PAD_ID = 0  # listops padding token (data side guarantees vocab id 0 = pad)
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed: jax.Array) -> Params:
+    """seed: uint32[2] (raw PRNG key data, supplied by the Rust side)."""
+    key = jax.random.wrap_key_data(seed.astype(jnp.uint32))
+    k_emb, k_head, k_layers = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    # Stack per-layer trees along a leading axis for lax.scan.
+    layers = jax.vmap(lambda k: block_init(cfg, k))(layer_keys)
+    n_out = cfg.ls_n_classes if cfg.task == "listops" else cfg.vocab_size
+    return {
+        "embed": jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model), jnp.float32)
+        / jnp.sqrt(float(cfg.d_model)),
+        "head": jax.random.normal(k_head, (cfg.d_model, n_out), jnp.float32)
+        / jnp.sqrt(float(cfg.d_model)),
+        "ln_f": layer_norm_init(cfg.d_model),
+        "layers": layers,
+    }
+
+
+def zero_state(cfg: ModelConfig) -> Dict[str, jax.Array]:
+    """XL cache: previous-chunk block inputs, one per layer."""
+    if cfg.pos != "xl":
+        return {}
+    return {
+        "cache": jnp.zeros(
+            (cfg.n_layers, cfg.batch_size, cfg.seq_len, cfg.d_model), jnp.float32
+        )
+    }
+
+
+def _encode(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,  # [B, T] int32
+    state: Dict[str, jax.Array],
+    key: Optional[jax.Array],
+    pad_mask: Optional[jax.Array] = None,
+    collect: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array], Dict[str, Any]]:
+    """Run the block stack. Returns (hidden [B,T,D], new_state, aux)."""
+    x = params["embed"][tokens] * jnp.sqrt(float(cfg.d_model))
+    use_cache = cfg.pos == "xl"
+
+    if collect:
+        # Analysis path: unrolled so per-layer aux (attention maps, gate
+        # scores) can be stacked and returned. Not used in training.
+        caches, auxes = [], []
+        for li in range(cfg.n_layers):
+            p_l = jax.tree.map(lambda a: a[li], params["layers"])
+            cache_l = state["cache"][li] if use_cache else None
+            x, new_c, aux = block_apply(cfg, p_l, x, cache_l, pad_mask, None, collect=True)
+            if use_cache:
+                caches.append(new_c)
+            auxes.append(aux)
+        new_state = {"cache": jnp.stack(caches)} if use_cache else {}
+        stacked = {
+            k: jnp.stack([a[k] for a in auxes]) for k in auxes[0] if k != "moa_aux"
+        }
+        h = layer_norm(x, params["ln_f"])
+        return h, new_state, stacked
+
+    def body(carry, inp):
+        x, li = carry
+        p_l, cache_l = inp
+        if not use_cache:
+            cache_l = None  # scan feeds a dummy scalar in that case
+        k_l = None if key is None else jax.random.fold_in(key, li)
+        y, new_c, aux = block_apply(cfg, p_l, x, cache_l, pad_mask, k_l)
+        moa_aux = aux.get("moa_aux", jnp.float32(0.0))
+        out = (new_c if use_cache else jnp.float32(0.0), moa_aux)
+        return (y, li + 1), out
+
+    cache_in = state["cache"] if use_cache else jnp.zeros((cfg.n_layers,), jnp.float32)
+    (x, _), (new_caches, moa_auxes) = jax.lax.scan(
+        body, (x, jnp.int32(0)), (params["layers"], cache_in)
+    )
+    new_state = {"cache": new_caches} if use_cache else {}
+    h = layer_norm(x, params["ln_f"])
+    return h, new_state, {"moa_aux": jnp.sum(moa_auxes)}
+
+
+def lm_logprobs(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,  # [B, T+1]
+    state: Dict[str, jax.Array],
+    key: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array], jax.Array]:
+    """Per-position next-token log-probabilities. Returns
+    (logp [B, T], new_state, moa_aux_loss)."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    h, new_state, aux = _encode(cfg, params, inp, state, key)
+    logits = h @ params["head"]  # [B, T, V]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    sel = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    return sel - logz, new_state, aux.get("moa_aux", jnp.float32(0.0))
+
+
+def lm_loss(cfg, params, state, tokens, key=None):
+    logp, new_state, moa_aux = lm_logprobs(cfg, params, tokens, state, key)
+    loss = -jnp.mean(logp)
+    return loss + moa_aux, (new_state, loss)
+
+
+def listops_loss(cfg, params, tokens, labels, key=None):
+    """tokens [B, T] (pad=0), labels [B]. Classification from position 0."""
+    pad_mask = tokens != PAD_ID
+    h, _, aux = _encode(cfg, params, tokens, {}, key, pad_mask=pad_mask)
+    logits = h[:, 0] @ params["head"]  # [B, n_classes]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    sel = jnp.take_along_axis(logits, labels[:, None], axis=-1)[..., 0]
+    loss = -jnp.mean(sel - logz)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    moa = aux["moa_aux"] if "moa_aux" in aux else jnp.float32(0.0)
+    return loss + moa, (loss, acc)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer (baked into train_step.hlo)
+# ---------------------------------------------------------------------------
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g)) for g in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def adam_update(cfg: ModelConfig, params, m, v, grads, step):
+    """Adam with linear warmup and global-norm clipping (paper A.5)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+    stepf = step.astype(jnp.float32) + 1.0
+    lr = cfg.lr * jnp.minimum(1.0, stepf / float(max(cfg.warmup, 1)))
+    b1, b2, eps = cfg.adam_b1, cfg.adam_b2, cfg.adam_eps
+    new_m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, m, grads)
+    new_v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g, v, grads)
+    mhat_scale = 1.0 / (1.0 - b1**stepf)
+    vhat_scale = 1.0 / (1.0 - b2**stepf)
+    new_params = jax.tree.map(
+        lambda p, mm, vv: p - lr * (mm * mhat_scale) / (jnp.sqrt(vv * vhat_scale) + eps),
+        params,
+        new_m,
+        new_v,
+    )
+    return new_params, new_m, new_v, gnorm
+
+
+# ---------------------------------------------------------------------------
+# Flat-buffer ABI
+# ---------------------------------------------------------------------------
+#
+# The Rust runtime keeps ALL mutable training state in one device-resident
+# f32 vector laid out as  [params | m | v | state | metrics(4)]  and chains
+# it through single-input/single-output executables:
+#
+#     init(seed)              -> flat
+#     train_step(flat, step, tokens [, labels]) -> flat'
+#     eval_step(flat, tokens [, labels])        -> flat'   (params untouched)
+#     score(flat, tokens)     -> logp [B, T]
+#     attn(flat, tokens)      -> (maps, gates...)          (analysis only)
+#
+# Because every hot-path entry returns a single array, the lowered HLO has
+# a non-tuple root, PJRT returns a single PjRtBuffer, and the coordinator
+# feeds it straight back into the next step: zero host<->device traffic on
+# the request path except the token upload and a 4-float metrics read.
+
+N_METRICS = 4  # [slot0, slot1, slot2, gnorm]; meaning per entry, see manifest
+
+
+def _numel(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n
+
+
+def _seg_sizes(tree) -> int:
+    return sum(_numel(l.shape) for l in jax.tree_util.tree_leaves(tree))
+
+
+def flat_layout(cfg: ModelConfig):
+    """Segment sizes (p, s, total) of the flat buffer."""
+    seed_spec = jnp.zeros((2,), jnp.uint32)
+    params_spec = jax.eval_shape(lambda s: init_params(cfg, s), seed_spec)
+    state_spec = jax.eval_shape(lambda: zero_state(cfg))
+    p = _seg_sizes(params_spec)
+    s = _seg_sizes(state_spec)
+    return params_spec, state_spec, p, s, 3 * p + s + N_METRICS
+
+
+def pack_flat(params, m, v, state, metrics) -> jax.Array:
+    vecs = []
+    for tree in (params, m, v, state):
+        vecs.extend(l.reshape(-1) for l in jax.tree_util.tree_leaves(tree))
+    vecs.append(metrics)
+    return jnp.concatenate(vecs) if vecs else metrics
+
+
+def _unflatten_seg(flat, offset, spec):
+    leaves, treedef = jax.tree_util.tree_flatten(spec)
+    out = []
+    for leaf in leaves:
+        n = _numel(leaf.shape)
+        out.append(flat[offset : offset + n].reshape(leaf.shape))
+        offset += n
+    return jax.tree_util.tree_unflatten(treedef, out), offset
+
+
+def unpack_flat(cfg: ModelConfig, flat):
+    params_spec, state_spec, p, s, total = flat_layout(cfg)
+    params, off = _unflatten_seg(flat, 0, params_spec)
+    m, off = _unflatten_seg(flat, off, params_spec)
+    v, off = _unflatten_seg(flat, off, params_spec)
+    state, off = _unflatten_seg(flat, off, state_spec)
+    return params, m, v, state
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points
+# ---------------------------------------------------------------------------
+
+
+def make_entry_points(cfg: ModelConfig):
+    """Returns ({name: (fn, example_args)}, params_spec, state_spec).
+
+    All entry points use the flat-buffer ABI above. Pytree flattening
+    order (sorted dict keys) defines the parameter offsets recorded in
+    manifest.json.
+    """
+    b, t = cfg.batch_size, cfg.seq_len
+    seed_spec = jnp.zeros((2,), jnp.uint32)
+    params_spec, state_spec, p_size, s_size, total = flat_layout(cfg)
+    step_spec = jnp.zeros((), jnp.int32)
+    flat_spec = jnp.zeros((total,), jnp.float32)
+
+    def drop_key(step):
+        if cfg.dropout <= 0.0:
+            return None
+        return jax.random.fold_in(jax.random.PRNGKey(0), step)
+
+    def zeros_like_tree(tree):
+        return jax.tree.map(lambda l: jnp.zeros(l.shape, l.dtype), tree)
+
+    entries: Dict[str, Tuple[Any, Tuple]] = {}
+
+    def init_fn(seed):
+        params = init_params(cfg, seed)
+        return pack_flat(
+            params,
+            zeros_like_tree(params_spec),
+            zeros_like_tree(params_spec),
+            zeros_like_tree(state_spec),
+            jnp.zeros((N_METRICS,), jnp.float32),
+        )
+
+    entries["init"] = (init_fn, (seed_spec,))
+
+    def metrics_fn(flat):
+        # The CPU PJRT plugin does not implement partial raw host reads
+        # (CopyRawToHost), so the runtime reads the 4 metric slots
+        # through this trivial executable instead of slicing the buffer.
+        return flat[total - N_METRICS :]
+
+    entries["metrics"] = (metrics_fn, (flat_spec,))
+
+    if cfg.task == "lm":
+        tokens_spec = jnp.zeros((b, t + 1), jnp.int32)
+
+        def train_step(flat, step, tokens):
+            params, m, v, state = unpack_flat(cfg, flat)
+            key = drop_key(step)
+            (_, (new_state, loss)), grads = jax.value_and_grad(
+                lambda p: lm_loss(cfg, p, state, tokens, key), has_aux=True
+            )(params)
+            new_params, new_m, new_v, gnorm = adam_update(cfg, params, m, v, grads, step)
+            metrics = jnp.stack([loss, jnp.float32(0.0), jnp.float32(0.0), gnorm])
+            return pack_flat(new_params, new_m, new_v, new_state, metrics)
+
+        entries["train_step"] = (train_step, (flat_spec, step_spec, tokens_spec))
+
+        def eval_step(flat, tokens):
+            params, m, v, state = unpack_flat(cfg, flat)
+            logp, new_state, _ = lm_logprobs(cfg, params, tokens, state)
+            metrics = jnp.stack(
+                [-jnp.sum(logp), jnp.float32(logp.size), jnp.float32(0.0), jnp.float32(0.0)]
+            )
+            return pack_flat(params, m, v, new_state, metrics)
+
+        entries["eval_step"] = (eval_step, (flat_spec, tokens_spec))
+
+        def score(flat, tokens):
+            params, _, _, _ = unpack_flat(cfg, flat)
+            logp, _, _ = lm_logprobs(cfg, params, tokens, zero_state(cfg))
+            return logp
+
+        entries["score"] = (score, (flat_spec, tokens_spec))
+
+        def next_logits(flat, tokens):
+            """Generation path: logits for the token following a [B, T]
+            window (prompts are right-aligned by the Rust sampler)."""
+            params, _, _, _ = unpack_flat(cfg, flat)
+            h, _, _ = _encode(cfg, params, tokens, zero_state(cfg), None)
+            return h[:, -1] @ params["head"]  # [B, V]
+
+        entries["next_logits"] = (
+            next_logits,
+            (flat_spec, jnp.zeros((b, t), jnp.int32)),
+        )
+
+        def attn_maps(flat, tokens):
+            params, _, _, _ = unpack_flat(cfg, flat)
+            inp = tokens[:, :-1]
+            _, _, aux = _encode(cfg, params, inp, zero_state(cfg), None, collect=True)
+            outs = {"attn": aux["attn"]}  # [L, B, H, T, Tk]
+            for k in sorted(aux):
+                if k.startswith("gate_"):
+                    outs[k] = aux[k]
+            return outs
+
+        entries["attn"] = (attn_maps, (flat_spec, tokens_spec))
+    else:  # listops
+        tokens_spec = jnp.zeros((b, t), jnp.int32)
+        labels_spec = jnp.zeros((b,), jnp.int32)
+
+        def train_step(flat, step, tokens, labels):
+            params, m, v, state = unpack_flat(cfg, flat)
+            key = drop_key(step)
+            (_, (loss, acc)), grads = jax.value_and_grad(
+                lambda p: listops_loss(cfg, p, tokens, labels, key), has_aux=True
+            )(params)
+            new_params, new_m, new_v, gnorm = adam_update(cfg, params, m, v, grads, step)
+            metrics = jnp.stack([loss, acc, jnp.float32(0.0), gnorm])
+            return pack_flat(new_params, new_m, new_v, state, metrics)
+
+        entries["train_step"] = (train_step, (flat_spec, step_spec, tokens_spec, labels_spec))
+
+        def eval_step(flat, tokens, labels):
+            params, m, v, state = unpack_flat(cfg, flat)
+            loss, acc = listops_loss(cfg, params, tokens, labels)[1]
+            metrics = jnp.stack([loss, acc, jnp.float32(0.0), jnp.float32(0.0)])
+            return pack_flat(params, m, v, state, metrics)
+
+        entries["eval_step"] = (eval_step, (flat_spec, tokens_spec, labels_spec))
+
+        def attn_maps(flat, tokens):
+            params, _, _, _ = unpack_flat(cfg, flat)
+            pad_mask = tokens != PAD_ID
+            _, _, aux = _encode(
+                cfg, params, tokens, {}, None, pad_mask=pad_mask, collect=True
+            )
+            outs = {"attn": aux["attn"]}
+            for k in sorted(aux):
+                if k.startswith("gate_"):
+                    outs[k] = aux[k]
+            return outs
+
+        entries["attn"] = (attn_maps, (flat_spec, tokens_spec))
+
+    return entries, params_spec, state_spec

@@ -1,0 +1,191 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle, forward and VJP,
+swept over shapes with hypothesis (the session's core correctness
+signal)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import attention_core
+from compile.kernels.moe_proj import (
+    moe_matmul,
+    mxu_utilization_estimate,
+    vmem_bytes,
+)
+from compile.kernels.ref import attention_core_ref, moe_matmul_ref
+
+
+def rand_moe_inputs(rng, t, din, dout, e, k):
+    x = jnp.asarray(rng.normal(size=(t, din)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(e, din, dout)) / np.sqrt(din), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, e, size=(t, k)), jnp.int32)
+    gate = jnp.asarray(rng.uniform(0.0, 1.0, size=(t, k)), jnp.float32)
+    return x, w, idx, gate
+
+
+class TestMoeMatmulForward:
+    @pytest.mark.parametrize("t", [1, 7, 16, 50, 128])
+    @pytest.mark.parametrize("e,k", [(1, 1), (4, 2), (5, 3), (8, 4)])
+    def test_matches_ref(self, t, e, k):
+        rng = np.random.default_rng(t * 100 + e * 10 + k)
+        x, w, idx, gate = rand_moe_inputs(rng, t, 12, 20, e, k)
+        got = moe_matmul(x, w, idx, gate, 16)
+        want = moe_matmul_ref(x, w, idx, gate)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_duplicate_expert_selection(self):
+        # Top-k can never select duplicates, but the kernel must still be
+        # correct if it does (sum of gates for the same expert).
+        rng = np.random.default_rng(0)
+        x, w, _, gate = rand_moe_inputs(rng, 10, 8, 8, 4, 2)
+        idx = jnp.full((10, 2), 1, jnp.int32)
+        got = moe_matmul(x, w, idx, gate, 8)
+        want = moe_matmul_ref(x, w, idx, gate)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_zero_gate_is_zero(self):
+        rng = np.random.default_rng(1)
+        x, w, idx, _ = rand_moe_inputs(rng, 9, 8, 8, 3, 2)
+        gate = jnp.zeros((9, 2), jnp.float32)
+        got = moe_matmul(x, w, idx, gate, 8)
+        np.testing.assert_allclose(got, jnp.zeros_like(got), atol=1e-7)
+
+    def test_single_expert_equals_dense(self):
+        rng = np.random.default_rng(2)
+        x, w, _, _ = rand_moe_inputs(rng, 17, 10, 6, 1, 1)
+        idx = jnp.zeros((17, 1), jnp.int32)
+        gate = jnp.ones((17, 1), jnp.float32)
+        got = moe_matmul(x, w, idx, gate, 8)
+        np.testing.assert_allclose(got, x @ w[0], rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        t=st.integers(1, 70),
+        din=st.integers(1, 24),
+        dout=st.integers(1, 24),
+        e=st.integers(1, 6),
+        block=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shape_sweep(self, t, din, dout, e, block, seed):
+        k = min(2, e)
+        rng = np.random.default_rng(seed)
+        x, w, idx, gate = rand_moe_inputs(rng, t, din, dout, e, k)
+        got = moe_matmul(x, w, idx, gate, block)
+        want = moe_matmul_ref(x, w, idx, gate)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+class TestMoeMatmulBackward:
+    @pytest.mark.parametrize("t,e,k", [(13, 3, 2), (32, 5, 3), (64, 2, 1)])
+    def test_grads_match_ref(self, t, e, k):
+        rng = np.random.default_rng(t + e + k)
+        x, w, idx, gate = rand_moe_inputs(rng, t, 10, 14, e, k)
+
+        def f(x, w, gate):
+            return jnp.sum(jnp.sin(moe_matmul(x, w, idx, gate, 16)))
+
+        def fr(x, w, gate):
+            return jnp.sum(jnp.sin(moe_matmul_ref(x, w, idx, gate)))
+
+        g = jax.grad(f, argnums=(0, 1, 2))(x, w, gate)
+        gr = jax.grad(fr, argnums=(0, 1, 2))(x, w, gate)
+        for a, b, name in zip(g, gr, ["dx", "dw", "dgate"]):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4, err_msg=name)
+
+    def test_grad_under_jit_and_scan(self):
+        rng = np.random.default_rng(3)
+        x, w, idx, gate = rand_moe_inputs(rng, 16, 8, 8, 4, 2)
+
+        @jax.jit
+        def f(x, w, gate):
+            def body(carry, _):
+                return carry + jnp.sum(moe_matmul(x, w, idx, gate, 16)), None
+
+            out, _ = jax.lax.scan(body, 0.0, None, length=3)
+            return out
+
+        g = jax.grad(f, argnums=1)(x, w, gate)
+        gr = 3.0 * jax.grad(
+            lambda w: jnp.sum(moe_matmul_ref(x, w, idx, gate))
+        )(w)
+        np.testing.assert_allclose(g, gr, rtol=1e-4, atol=1e-4)
+
+
+class TestAttentionCore:
+    @pytest.mark.parametrize("h,tq,tk,dh", [(1, 8, 8, 4), (3, 37, 64, 8), (2, 128, 256, 16)])
+    def test_matches_ref(self, h, tq, tk, dh):
+        rng = np.random.default_rng(h + tq)
+        q = jnp.asarray(rng.normal(size=(h, tq, dh)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(h, tk, dh)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(h, tk, dh)), jnp.float32)
+        bias = jnp.asarray(
+            np.where(rng.uniform(size=(h, tq, tk)) < 0.2, -1e9, 0.0), jnp.float32
+        )
+        sc = 1.0 / np.sqrt(dh)
+        got = attention_core(q, k, v, bias, sc, 32)
+        want = attention_core_ref(q, k, v, bias, sc)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_causal_mask_blocks_future(self):
+        # With a strict causal bias, output at position 0 must not change
+        # when future keys change.
+        rng = np.random.default_rng(5)
+        h, t, dh = 1, 16, 8
+        q = jnp.asarray(rng.normal(size=(h, t, dh)), jnp.float32)
+        k1 = jnp.asarray(rng.normal(size=(h, t, dh)), jnp.float32)
+        v1 = jnp.asarray(rng.normal(size=(h, t, dh)), jnp.float32)
+        bias = jnp.where(
+            jnp.arange(t)[None, :, None] >= jnp.arange(t)[None, None, :], 0.0, -1e9
+        ).astype(jnp.float32).transpose(0, 1, 2)
+        k2 = k1.at[:, 1:].add(1.0)
+        v2 = v1.at[:, 1:].add(1.0)
+        o1 = attention_core(q, k1, v1, bias, 0.5, 16)
+        o2 = attention_core(q, k2, v2, bias, 0.5, 16)
+        np.testing.assert_allclose(o1[:, 0], o2[:, 0], atol=1e-6)
+
+    def test_grads_match_ref(self):
+        rng = np.random.default_rng(6)
+        h, tq, tk, dh = 2, 24, 40, 8
+        q = jnp.asarray(rng.normal(size=(h, tq, dh)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(h, tk, dh)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(h, tk, dh)), jnp.float32)
+        bias = jnp.zeros((h, tq, tk), jnp.float32)
+        sc = 1.0 / np.sqrt(dh)
+
+        f = lambda *a: jnp.sum(jnp.tanh(attention_core(*a, sc, 16)))
+        fr = lambda *a: jnp.sum(jnp.tanh(attention_core_ref(*a, sc)))
+        g = jax.grad(f, argnums=(0, 1, 2, 3))(q, k, v, bias)
+        gr = jax.grad(fr, argnums=(0, 1, 2, 3))(q, k, v, bias)
+        for a, b, name in zip(g, gr, "q k v bias".split()):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4, err_msg=name)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        tq=st.integers(1, 48),
+        tk=st.integers(1, 48),
+        dh=st.sampled_from([2, 4, 8]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_softmax_rows_sum_via_ones(self, tq, tk, dh, seed):
+        # With v = ones, output must be exactly ones (softmax normalizes).
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.normal(size=(1, tq, dh)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, tk, dh)), jnp.float32)
+        v = jnp.ones((1, tk, dh), jnp.float32)
+        bias = jnp.zeros((1, tq, tk), jnp.float32)
+        out = attention_core(q, k, v, bias, 0.3, 16)
+        np.testing.assert_allclose(out, jnp.ones_like(out), rtol=1e-5, atol=1e-5)
+
+
+class TestVmemModel:
+    def test_default_tile_fits_vmem(self):
+        # DESIGN.md §5/§8: the default SwitchHead tile must fit 16 MiB
+        # VMEM with double-buffering headroom (< 8 MiB working set).
+        assert vmem_bytes(128, 1024, 128, 4) < 8 * 1024 * 1024
+
+    def test_mxu_estimate_bounds(self):
+        assert mxu_utilization_estimate(128, 128, 128) == 1.0
+        assert 0.0 < mxu_utilization_estimate(100, 64, 30) < 1.0

@@ -1,0 +1,159 @@
+//! Benchmark harness (criterion is not in the offline registry; this
+//! module backs both `cargo bench` — via `harness = false` targets in
+//! `rust/benches/` — and the `bench-tables` CLI subcommand).
+
+pub mod tables;
+
+use std::time::Instant;
+
+use crate::util::stats::{mean, quantile};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub min_ms: f64,
+}
+
+/// Time `f` for `iters` iterations after `warmup` discarded ones.
+pub fn time<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1000.0);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ms: mean(&samples),
+        p50_ms: quantile(&samples, 0.5),
+        p95_ms: quantile(&samples, 0.95),
+        min_ms: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<40} {:>6} iters  mean {:>9.3} ms  p50 {:>9.3} ms  p95 {:>9.3} ms  min {:>9.3} ms",
+            self.name, self.iters, self.mean_ms, self.p50_ms, self.p95_ms, self.min_ms
+        )
+    }
+}
+
+/// Markdown-style table printer used by every table bench so the output
+/// lines up with the paper's tables.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(row);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = format!("\n## {}\n\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                s.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            s
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format a MAC count the way the paper does (e.g. "170.4M", "2.0G").
+pub fn fmt_si(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.1}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.1}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.1}K", x / 1e3)
+    } else {
+        format!("{x:.0}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures() {
+        let r = time("spin", 1, 5, || {
+            std::hint::black_box((0..20_000).sum::<u64>());
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_ms >= 0.0);
+        assert!(r.p95_ms >= r.p50_ms);
+        assert!(r.min_ms <= r.mean_ms + 1e-9);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.push(vec!["xxx".into(), "1".into()]);
+        let s = t.render();
+        assert!(s.contains("## T"));
+        assert!(s.contains("| xxx | 1  |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_checks_width() {
+        let mut t = Table::new("T", &["a"]);
+        t.push(vec!["x".into(), "y".into()]);
+    }
+
+    #[test]
+    fn si_format() {
+        assert_eq!(fmt_si(453_400_000.0), "453.4M");
+        assert_eq!(fmt_si(2.0e9), "2.0G");
+        assert_eq!(fmt_si(820.0), "820");
+        assert_eq!(fmt_si(3500.0), "3.5K");
+    }
+}

@@ -1,0 +1,636 @@
+//! Table/figure regeneration drivers — one per paper artifact
+//! (DESIGN.md §7 experiment index). Used by the `bench-tables` CLI
+//! subcommand and by the `cargo bench` targets in `rust/benches/`.
+//!
+//! Two kinds of rows:
+//!  * **paper-scale analytic** rows: MACs / memory / parameter counts of
+//!    the exact Table-9 hyperparameter configurations, computed from
+//!    Eq. 11-15 — these reproduce the paper's resource columns directly;
+//!  * **measured tiny-scale** rows: real training runs of the tiny
+//!    config family through the full Rust+PJRT stack, reporting
+//!    perplexity ordering, wall-clock ms/iter and peak RSS (the
+//!    substitution for the paper's GPU wall-clock, Table 5).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::{fmt_si, Table};
+use crate::config::{Family, ModelConfig, Positional, Task};
+use crate::coordinator::trainer::{self, TrainOpts};
+use crate::macs::{attention_cost, param_count};
+use crate::runtime::Engine;
+use crate::util::cli::Args;
+use crate::util::logging::{info, peak_rss_bytes};
+
+// ---------------------------------------------------------------------------
+// Paper-scale configs (Table 9 hyperparameters; d_model inferred from
+// n_heads*d_head of the dense baselines: 410 for 47M, 1024 for 262M).
+// ---------------------------------------------------------------------------
+
+pub struct PaperRow {
+    pub label: &'static str,
+    pub cfg: ModelConfig,
+    pub paper_ppl: f64,
+    pub paper_macs: &'static str,
+    pub paper_mem: &'static str,
+}
+
+fn base(name: &str, family: Family, pos: Positional) -> ModelConfig {
+    ModelConfig {
+        name: name.to_string(),
+        family,
+        pos,
+        task: Task::Lm,
+        vocab_size: 8000,
+        d_model: 410,
+        n_layers: 16,
+        n_heads: 2,
+        d_head: 76,
+        d_ff: 2053,
+        seq_len: 256,
+        batch_size: 64,
+        dropout: 0.1,
+        att_n_experts: 5,
+        att_k: 2,
+        att_router: "sigmoid".into(),
+        moe_v: true,
+        moe_k: false,
+        moe_q: false,
+        moe_o: true,
+        shared_selection: false,
+        moa_n_experts: 10,
+        moa_k: 2,
+        mlp_type: crate::config::MlpType::Dense,
+        mlp_n_experts: 4,
+        mlp_k: 2,
+        mlp_d_expert: 64,
+        lr: 2.5e-4,
+        warmup: 4000,
+        clip: 0.1,
+        ls_n_classes: 10,
+        dataset: "wt103".into(),
+        train_steps: 100_000,
+    }
+}
+
+/// Table-9 WT103 configurations at both scales.
+pub fn wt103_paper_rows() -> Vec<PaperRow> {
+    let mut rows = Vec::new();
+    // ---- 47M scale (d_model 410, L16, T256) ----
+    let sh = base("sh-47m-wt103", Family::SwitchHead, Positional::Xl);
+    rows.push(PaperRow { label: "47M SwitchHead h=2", cfg: sh, paper_ppl: 12.27, paper_macs: "170.4M", paper_mem: "0.8M" });
+    let mut d10 = base("dense10-47m-wt103", Family::Dense, Positional::Xl);
+    d10.n_heads = 10;
+    d10.d_head = 41;
+    rows.push(PaperRow { label: "47M Transformer h=10", cfg: d10, paper_ppl: 12.31, paper_macs: "453.4M", paper_mem: "3.5M" });
+    let mut d2 = base("dense2-47m-wt103", Family::Dense, Positional::Xl);
+    d2.n_heads = 2;
+    d2.d_head = 205;
+    rows.push(PaperRow { label: "47M Transformer h=2", cfg: d2, paper_ppl: 12.73, paper_macs: "453.4M", paper_mem: "3.5M" });
+    let target_47m = param_count(&rows[1].cfg); // dense-10 baseline budget
+    for (k, ppl, macs, mem) in [
+        (2usize, 12.84, "140.1M", "0.7M"),
+        (4, 12.60, "223.5M", "1.3M"),
+        (6, 12.64, "306.8M", "1.9M"),
+        (8, 12.77, "390.2M", "2.6M"),
+    ] {
+        let mut moa = base("moa-47m-wt103", Family::Moa, Positional::Xl);
+        moa.name = format!("moa{k}-47m-wt103");
+        moa.moa_n_experts = 10;
+        moa.moa_k = k;
+        // Parameter-match MoA's d_head to the dense budget (paper §3:
+        // "we always set d_head so that the total number of parameters
+        // matches the baseline").
+        moa = crate::macs::match_params_via_dhead(&moa, target_47m).0;
+        rows.push(PaperRow {
+            label: Box::leak(format!("47M MoA h={k}").into_boxed_str()),
+            cfg: moa,
+            paper_ppl: ppl,
+            paper_macs: macs,
+            paper_mem: mem,
+        });
+    }
+    // ---- 262M scale (d_model 1024, L18, T512) ----
+    let big = |name: &str, family: Family| {
+        let mut c = base(name, family, Positional::Xl);
+        c.d_model = 1024;
+        c.n_layers = 18;
+        c.seq_len = 512;
+        c.d_ff = 4110;
+        c
+    };
+    let mut sh_big = big("sh-262m-wt103", Family::SwitchHead);
+    sh_big.n_heads = 2;
+    sh_big.d_head = 132;
+    sh_big.att_n_experts = 8;
+    sh_big.att_k = 4;
+    sh_big.d_ff = 4147;
+    rows.push(PaperRow { label: "262M SwitchHead h=2", cfg: sh_big, paper_ppl: 9.77, paper_macs: "2.0G", paper_mem: "2.9M" });
+    let mut d16 = big("dense16-262m-wt103", Family::Dense);
+    d16.n_heads = 16;
+    d16.d_head = 64;
+    rows.push(PaperRow { label: "262M Transformer h=16", cfg: d16, paper_ppl: 9.80, paper_macs: "5.4G", paper_mem: "21.0M" });
+    let mut d2b = big("dense2-262m-wt103", Family::Dense);
+    d2b.n_heads = 2;
+    d2b.d_head = 512;
+    rows.push(PaperRow { label: "262M Transformer h=2", cfg: d2b, paper_ppl: 10.09, paper_macs: "5.4G", paper_mem: "6.3M" });
+    let target_262m =
+        param_count(&rows.iter().find(|r| r.label == "262M Transformer h=16").unwrap().cfg);
+    for (k, ppl, macs, mem) in [
+        (2usize, 9.87, "1.1G", "2.7M"),
+        (4, 9.69, "1.7G", "5.1M"),
+        (8, 9.50, "2.9G", "9.9M"),
+        (12, 9.68, "4.1G", "14.7M"),
+    ] {
+        let mut moa = big("moa-262m-wt103", Family::Moa);
+        moa.name = format!("moa{k}-262m-wt103");
+        moa.moa_n_experts = 16;
+        moa.moa_k = k;
+        moa = crate::macs::match_params_via_dhead(&moa, target_262m).0;
+        rows.push(PaperRow {
+            label: Box::leak(format!("262M MoA h={k}").into_boxed_str()),
+            cfg: moa,
+            paper_ppl: ppl,
+            paper_macs: macs,
+            paper_mem: mem,
+        });
+    }
+    rows
+}
+
+/// Table-2 rows for the other datasets (C4, peS2o, Enwik8), paper scale.
+pub fn table2_paper_rows() -> Vec<(&'static str, PaperRow)> {
+    let mut rows: Vec<(&'static str, PaperRow)> = Vec::new();
+    // C4 47M: SwitchHead h=2 (E=5, k=3), dense h=10 / h=2.
+    let mut sh = base("sh-47m-c4", Family::SwitchHead, Positional::Xl);
+    sh.att_k = 3;
+    sh.d_ff = 2080;
+    rows.push(("C4", PaperRow { label: "47M SwitchHead h=2", cfg: sh, paper_ppl: 22.53, paper_macs: "203M", paper_mem: "0.8M" }));
+    let mut d10 = base("dense10-47m-c4", Family::Dense, Positional::Xl);
+    d10.n_heads = 10;
+    d10.d_head = 41;
+    rows.push(("C4", PaperRow { label: "47M Transformer h=10", cfg: d10, paper_ppl: 22.71, paper_macs: "453M", paper_mem: "3.5M" }));
+    // C4 262M: SwitchHead h=4 (E=4, k=2).
+    let mut shb = base("sh-262m-c4", Family::SwitchHead, Positional::Xl);
+    shb.d_model = 1024;
+    shb.n_layers = 18;
+    shb.seq_len = 512;
+    shb.n_heads = 4;
+    shb.d_head = 112;
+    shb.att_n_experts = 4;
+    shb.att_k = 2;
+    shb.d_ff = 4188;
+    rows.push(("C4", PaperRow { label: "262M SwitchHead h=4", cfg: shb, paper_ppl: 16.23, paper_macs: "2.4G", paper_mem: "5.6M" }));
+    let mut d16 = base("dense16-262m-c4", Family::Dense, Positional::Xl);
+    d16.d_model = 1024;
+    d16.n_layers = 18;
+    d16.seq_len = 512;
+    d16.n_heads = 16;
+    d16.d_head = 64;
+    d16.d_ff = 4110;
+    rows.push(("C4", PaperRow { label: "262M Transformer h=16", cfg: d16, paper_ppl: 16.28, paper_macs: "5.4G", paper_mem: "21M" }));
+    // Enwik8 41M: SwitchHead h=2 (E=4, k=2, dh=112), dense h=8.
+    let mut ew_sh = base("sh-41m-enwik8", Family::SwitchHead, Positional::Xl);
+    ew_sh.d_model = 512;
+    ew_sh.n_layers = 12;
+    ew_sh.seq_len = 512;
+    ew_sh.n_heads = 2;
+    ew_sh.d_head = 112;
+    ew_sh.att_n_experts = 4;
+    ew_sh.att_k = 2;
+    ew_sh.d_ff = 2088;
+    ew_sh.vocab_size = 259;
+    ew_sh.dataset = "enwik8".into();
+    rows.push(("Enwik8", PaperRow { label: "41M SwitchHead h=2", cfg: ew_sh, paper_ppl: 1.10, paper_macs: "709M", paper_mem: "2.8M" }));
+    let mut ew_d = base("dense8-41m-enwik8", Family::Dense, Positional::Xl);
+    ew_d.d_model = 512;
+    ew_d.n_layers = 12;
+    ew_d.seq_len = 512;
+    ew_d.n_heads = 8;
+    ew_d.d_head = 64;
+    ew_d.d_ff = 2053;
+    ew_d.vocab_size = 259;
+    ew_d.dataset = "enwik8".into();
+    rows.push(("Enwik8", PaperRow { label: "41M Transformer h=8", cfg: ew_d, paper_ppl: 1.10, paper_macs: "1.6G", paper_mem: "10M" }));
+    // peS2o mirrors the C4 configs (same Table 9 rows).
+    let mut p_sh = base("sh-47m-pes2o", Family::SwitchHead, Positional::Xl);
+    p_sh.att_k = 3;
+    p_sh.d_ff = 2080;
+    p_sh.dataset = "pes2o".into();
+    rows.push(("peS2o", PaperRow { label: "47M SwitchHead h=2", cfg: p_sh, paper_ppl: 12.84, paper_macs: "203M", paper_mem: "0.8M" }));
+    let mut p_d = base("dense10-47m-pes2o", Family::Dense, Positional::Xl);
+    p_d.n_heads = 10;
+    p_d.d_head = 41;
+    p_d.dataset = "pes2o".into();
+    rows.push(("peS2o", PaperRow { label: "47M Transformer h=10", cfg: p_d, paper_ppl: 12.83, paper_macs: "453M", paper_mem: "3.5M" }));
+    rows
+}
+
+/// RoPE rows (Table 7).
+pub fn table7_paper_rows() -> Vec<PaperRow> {
+    let mut rows = Vec::new();
+    let mut sh = base("sh-45m-rope", Family::SwitchHead, Positional::Rope);
+    sh.seq_len = 512;
+    sh.d_head = 64;
+    sh.att_n_experts = 5;
+    sh.att_k = 3;
+    sh.d_ff = 2092;
+    rows.push(PaperRow { label: "45M SwitchHead h=2 (RoPE)", cfg: sh, paper_ppl: 12.75, paper_macs: "285.6M", paper_mem: "1.3M" });
+    let mut d10 = base("dense10-45m-rope", Family::Dense, Positional::Rope);
+    d10.seq_len = 512;
+    d10.n_heads = 10;
+    d10.d_head = 41;
+    rows.push(PaperRow { label: "45M Transformer h=10 (RoPE)", cfg: d10, paper_ppl: 12.78, paper_macs: "560.9M", paper_mem: "6.1M" });
+    let mut shb = base("sh-244m-rope", Family::SwitchHead, Positional::Rope);
+    shb.d_model = 1024;
+    shb.n_layers = 18;
+    shb.seq_len = 1024;
+    shb.n_heads = 4;
+    shb.d_head = 100;
+    shb.att_n_experts = 4;
+    shb.att_k = 2;
+    shb.d_ff = 4136;
+    rows.push(PaperRow { label: "244M SwitchHead h=4 (RoPE)", cfg: shb, paper_ppl: 10.00, paper_macs: "4.2G", paper_mem: "18.4M" });
+    let mut d16 = base("dense16-244m-rope", Family::Dense, Positional::Rope);
+    d16.d_model = 1024;
+    d16.n_layers = 18;
+    d16.seq_len = 1024;
+    d16.n_heads = 16;
+    d16.d_head = 64;
+    d16.d_ff = 4110;
+    rows.push(PaperRow { label: "244M Transformer h=16 (RoPE)", cfg: d16, paper_ppl: 10.17, paper_macs: "6.4G", paper_mem: "37.7M" });
+    rows
+}
+
+fn analytic_table(title: &str, rows: &[PaperRow]) -> Table {
+    let mut t = Table::new(
+        title,
+        &["model", "n_mat", "params", "MACs (ours)", "MACs (paper)", "Mem (ours)", "Mem (paper)", "ppl (paper)"],
+    );
+    for r in rows {
+        let cost = attention_cost(&r.cfg);
+        t.push(vec![
+            r.label.to_string(),
+            r.cfg.attention_matrices().to_string(),
+            fmt_si(param_count(&r.cfg) as f64),
+            fmt_si(cost.macs),
+            r.paper_macs.to_string(),
+            fmt_si(cost.mem_floats),
+            r.paper_mem.to_string(),
+            format!("{:.2}", r.paper_ppl),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Measured tiny-scale runs
+// ---------------------------------------------------------------------------
+
+pub struct MeasuredRun {
+    pub name: String,
+    pub ppl: f64,
+    pub ms_per_iter: f64,
+    pub peak_rss: u64,
+    pub params: usize,
+}
+
+/// Train a tiny config briefly (or reuse the cached run report) and
+/// return the measured row. `dataset` overrides the corpus profile.
+pub fn run_tiny(
+    artifacts: &Path,
+    config_name: &str,
+    dataset: Option<&str>,
+    steps: usize,
+    out_root: &Path,
+) -> Result<MeasuredRun> {
+    let mut cfg = ModelConfig::load(&format!("configs/{config_name}.json"))
+        .with_context(|| format!("configs/{config_name}.json"))?;
+    if let Some(ds) = dataset {
+        cfg.dataset = ds.to_string();
+    }
+    let run_name = match dataset {
+        Some(ds) => format!("{config_name}-{ds}"),
+        None => config_name.to_string(),
+    };
+    let out_dir = out_root.join(&run_name);
+    let report_path = out_dir.join("bench_report.json");
+    if report_path.exists() {
+        let j = crate::util::json::Json::parse_file(report_path.to_str().unwrap())?;
+        return Ok(MeasuredRun {
+            name: run_name,
+            ppl: j.get_or_f64("ppl", f64::NAN),
+            ms_per_iter: j.get_or_f64("ms_per_iter", f64::NAN),
+            peak_rss: j.get_or_usize("peak_rss", 0) as u64,
+            params: j.get_or_usize("params", 0),
+        });
+    }
+
+    let dir = artifacts.join(&cfg.name);
+    if !dir.join("manifest.json").exists() {
+        bail!(
+            "no artifacts for '{}' — run `make artifacts CONFIGS=configs/{config_name}.json`",
+            cfg.name
+        );
+    }
+    let engine = Engine::load(&dir, Some(&["init", "train_step", "eval_step", "metrics"]))?;
+    let opts = TrainOpts {
+        steps,
+        out_dir: out_dir.clone(),
+        quiet: true,
+        log_every: 0,
+        ..TrainOpts::default()
+    };
+    let rss_before = peak_rss_bytes();
+    let report = trainer::train(&engine, &cfg, &opts)?;
+    let run = MeasuredRun {
+        name: run_name,
+        ppl: report.final_metric,
+        ms_per_iter: report.ms_per_iter,
+        peak_rss: report.peak_rss_bytes.max(rss_before),
+        params: param_count(&cfg),
+    };
+    let j = crate::util::json::Json::from_pairs(vec![
+        ("ppl", crate::util::json::Json::Num(run.ppl)),
+        ("ms_per_iter", crate::util::json::Json::Num(run.ms_per_iter)),
+        ("peak_rss", crate::util::json::Json::Num(run.peak_rss as f64)),
+        ("params", crate::util::json::Json::Num(run.params as f64)),
+        ("steps", crate::util::json::Json::Num(steps as f64)),
+    ]);
+    std::fs::create_dir_all(&out_dir)?;
+    std::fs::write(&report_path, j.to_string_pretty())?;
+    Ok(run)
+}
+
+fn measured_table(
+    title: &str,
+    artifacts: &Path,
+    rows: &[(&str, Option<&str>)],
+    steps: usize,
+) -> Result<Table> {
+    let out_root = PathBuf::from("runs/bench");
+    let mut t = Table::new(title, &["config", "params", "valid ppl", "ms/iter", "rel. iter", "peak RSS MiB"]);
+    let mut runs = Vec::new();
+    for (name, ds) in rows {
+        info(&format!("bench: training {name} (dataset {:?}, {steps} steps)...", ds));
+        runs.push(run_tiny(artifacts, name, *ds, steps, &out_root)?);
+    }
+    let base_ms = runs.first().map(|r| r.ms_per_iter).unwrap_or(1.0);
+    for r in &runs {
+        t.push(vec![
+            r.name.clone(),
+            fmt_si(r.params as f64),
+            format!("{:.3}", r.ppl),
+            format!("{:.1}", r.ms_per_iter),
+            format!("{:.2}", r.ms_per_iter / base_ms),
+            format!("{:.0}", r.peak_rss as f64 / (1024.0 * 1024.0)),
+        ]);
+    }
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Public drivers
+// ---------------------------------------------------------------------------
+
+pub fn table1(artifacts: &Path, quick: bool, steps: usize) -> Result<String> {
+    let mut out = analytic_table(
+        "Table 1 — WT103: SwitchHead vs MoA vs dense (paper-scale analytic, Eq. 11-15)",
+        &wt103_paper_rows(),
+    )
+    .render();
+    if !quick {
+        out.push_str(
+            &measured_table(
+                "Table 1 (measured) — tiny-scale ppl ordering on synthetic WT103",
+                artifacts,
+                &[("tiny-dense", None), ("tiny-sh", None), ("tiny-moa", None), ("tiny-dense-2h", None)],
+                steps,
+            )?
+            .render(),
+        );
+    }
+    Ok(out)
+}
+
+pub fn table2(artifacts: &Path, quick: bool, steps: usize) -> Result<String> {
+    let rows = table2_paper_rows();
+    let mut t = Table::new(
+        "Table 2 — datasets x scales (paper-scale analytic)",
+        &["dataset", "model", "params", "MACs (ours)", "MACs (paper)", "Mem (ours)", "Mem (paper)", "ppl/bpc (paper)"],
+    );
+    for (ds, r) in &rows {
+        let cost = attention_cost(&r.cfg);
+        t.push(vec![
+            ds.to_string(),
+            r.label.to_string(),
+            fmt_si(param_count(&r.cfg) as f64),
+            fmt_si(cost.macs),
+            r.paper_macs.to_string(),
+            fmt_si(cost.mem_floats),
+            r.paper_mem.to_string(),
+            format!("{:.2}", r.paper_ppl),
+        ]);
+    }
+    let mut out = t.render();
+    if !quick {
+        out.push_str(
+            &measured_table(
+                "Table 2 (measured) — tiny-scale across dataset profiles",
+                artifacts,
+                &[
+                    ("tiny-dense", Some("c4")),
+                    ("tiny-sh", Some("c4")),
+                    ("tiny-dense", Some("pes2o")),
+                    ("tiny-sh", Some("pes2o")),
+                ],
+                steps,
+            )?
+            .render(),
+        );
+    }
+    Ok(out)
+}
+
+pub fn table3(artifacts: &Path, quick: bool, steps: usize) -> Result<String> {
+    // SwitchAll = SwitchHead attention + sigma-MoE MLP.
+    let mut sa47 = base("switchall-47m-wt103", Family::SwitchHead, Positional::Xl);
+    sa47.mlp_type = crate::config::MlpType::SigmaMoe;
+    sa47.mlp_n_experts = 8;
+    sa47.mlp_k = 2;
+    sa47.mlp_d_expert = 412; // ~ d_ff 1648 / 4 active
+    sa47.d_ff = 1648;
+    let mut sa262 = base("switchall-262m-wt103", Family::SwitchHead, Positional::Xl);
+    sa262.d_model = 1024;
+    sa262.n_layers = 18;
+    sa262.seq_len = 512;
+    sa262.n_heads = 4;
+    sa262.d_head = 112;
+    sa262.att_n_experts = 4;
+    sa262.att_k = 2;
+    sa262.mlp_type = crate::config::MlpType::SigmaMoe;
+    sa262.mlp_n_experts = 8;
+    sa262.mlp_k = 2;
+    sa262.mlp_d_expert = 1024;
+    let rows = vec![
+        PaperRow { label: "47M SwitchAll h=2", cfg: sa47, paper_ppl: 12.17, paper_macs: "170M", paper_mem: "0.8M" },
+        PaperRow { label: "262M SwitchAll h=4", cfg: sa262, paper_ppl: 9.81, paper_macs: "2.4G", paper_mem: "5.6M" },
+    ];
+    let mut out = analytic_table("Table 3 — SwitchAll (paper-scale analytic)", &rows).render();
+    if !quick {
+        out.push_str(
+            &measured_table(
+                "Table 3 (measured) — tiny SwitchAll vs dense",
+                artifacts,
+                &[("tiny-dense", None), ("tiny-switchall", None), ("tiny-sh", None)],
+                steps,
+            )?
+            .render(),
+        );
+    }
+    Ok(out)
+}
+
+pub fn table5(artifacts: &Path, steps: usize) -> Result<String> {
+    // Wall-clock + memory, all on identical substrate (the paper's own
+    // point: report RELATIVE iteration time; Table 5 shows 0.72/0.65 for
+    // SwitchHead vs dense, and MoA slower than SwitchHead).
+    measured_table(
+        "Table 5 — wall-clock ms/iter and memory (measured, identical substrate)",
+        artifacts,
+        &[("tiny-dense", None), ("tiny-sh", None), ("tiny-moa", None)],
+        steps,
+    )
+    .map(|t| t.render())
+}
+
+pub fn table6(artifacts: &Path, quick: bool, steps: usize) -> Result<String> {
+    // Ablation: which projections are MoE (paper Table 6).
+    let combos: &[(&str, Option<&str>)] = if quick {
+        &[("tiny-sh", None), ("tiny-abl-o", None)]
+    } else {
+        &[
+            ("tiny-sh", None),      // V+O (the paper's winner)
+            ("tiny-abl-o", None),   // O only
+            ("tiny-abl-v", None),   // V only
+            ("tiny-abl-ko", None),  // K+O
+            ("tiny-abl-vqo", None), // V+Q+O
+            ("tiny-abl-vkqo", None), // all
+            ("tiny-dense-2h", None), // none (lower bound)
+            ("tiny-dense", None),   // dense h=E*h (upper bound)
+        ]
+    };
+    measured_table(
+        "Table 6 — which projections need MoE (measured tiny-scale; paper: V+O best)",
+        artifacts,
+        combos,
+        steps,
+    )
+    .map(|t| t.render())
+}
+
+pub fn table7(artifacts: &Path, quick: bool, steps: usize) -> Result<String> {
+    let mut out =
+        analytic_table("Table 7 — RoPE variant (paper-scale analytic)", &table7_paper_rows())
+            .render();
+    if !quick {
+        out.push_str(
+            &measured_table(
+                "Table 7 (measured) — tiny RoPE SwitchHead vs dense",
+                artifacts,
+                &[("tiny-rope-dense", None), ("tiny-rope-sh", None)],
+                steps,
+            )?
+            .render(),
+        );
+    }
+    Ok(out)
+}
+
+pub fn run_from_args(args: &Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.get_or("artifacts", crate::paths::ARTIFACTS));
+    let quick = args.flag("quick");
+    let steps = args.usize_or("steps", 200)?;
+    let which = args.get_or("table", "all");
+    let mut out = String::new();
+    if which == "all" || which == "1" {
+        out.push_str(&table1(&artifacts, quick, steps)?);
+    }
+    if which == "all" || which == "2" {
+        out.push_str(&table2(&artifacts, quick, steps)?);
+    }
+    if which == "all" || which == "3" {
+        out.push_str(&table3(&artifacts, quick, steps)?);
+    }
+    if which == "all" || which == "4" {
+        out.push_str(
+            "\n## Table 4 — zero-shot: run `switchhead zeroshot --config configs/tiny-sh.json`\n   (driven by examples/zeroshot.rs; see EXPERIMENTS.md)\n",
+        );
+    }
+    if which == "all" || which == "5" {
+        out.push_str(&table5(&artifacts, steps)?);
+    }
+    if which == "all" || which == "6" {
+        out.push_str(&table6(&artifacts, quick, steps)?);
+    }
+    if which == "all" || which == "7" {
+        out.push_str(&table7(&artifacts, quick, steps)?);
+    }
+    println!("{out}");
+    std::fs::create_dir_all("runs")?;
+    std::fs::write("runs/bench_tables.md", &out)?;
+    info("tables written to runs/bench_tables.md");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_rows_param_matched() {
+        // All WT103 47M rows should be within 5% of each other in params
+        // (the paper's parameter-matched setting).
+        let rows = wt103_paper_rows();
+        let p47: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.label.starts_with("47M"))
+            .map(|r| param_count(&r.cfg) as f64)
+            .collect();
+        let base = p47[0];
+        for p in &p47 {
+            assert!((p - base).abs() / base < 0.05, "{p} vs {base}");
+        }
+    }
+
+    #[test]
+    fn switchhead_cheaper_than_dense_everywhere() {
+        for r in wt103_paper_rows() {
+            if r.label.contains("SwitchHead") {
+                let sh = attention_cost(&r.cfg);
+                let dense = wt103_paper_rows()
+                    .into_iter()
+                    .find(|d| {
+                        d.label.contains("Transformer")
+                            && d.label.starts_with(&r.label[..3])
+                            && !d.label.ends_with("h=2")
+                    })
+                    .unwrap();
+                let dc = attention_cost(&dense.cfg);
+                assert!(sh.macs < 0.6 * dc.macs, "{}", r.label);
+                assert!(sh.mem_floats < 0.35 * dc.mem_floats, "{}", r.label);
+            }
+        }
+    }
+
+    #[test]
+    fn moa_ordering_matches_paper() {
+        // MoA MACs grow with active heads and exceed SwitchHead's at the
+        // perplexity-matched operating point (k=8 at 262M).
+        let rows = wt103_paper_rows();
+        let sh = rows.iter().find(|r| r.label == "262M SwitchHead h=2").unwrap();
+        let moa8 = rows.iter().find(|r| r.label == "262M MoA h=8").unwrap();
+        assert!(attention_cost(&moa8.cfg).macs > attention_cost(&sh.cfg).macs);
+    }
+}

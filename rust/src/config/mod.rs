@@ -1,0 +1,251 @@
+//! Typed model/run configuration, shared with the Python compile path via
+//! the same `configs/*.json` files. Unknown keys are ignored on both
+//! sides, so a single file can carry model hyperparameters (Python) and
+//! run/data settings (Rust).
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Attention family — mirrors `python/compile/layers.py::ModelConfig`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    SwitchHead,
+    Dense,
+    Moa,
+}
+
+impl Family {
+    pub fn parse(s: &str) -> Result<Family> {
+        Ok(match s {
+            "switchhead" => Family::SwitchHead,
+            "dense" => Family::Dense,
+            "moa" => Family::Moa,
+            other => bail!("unknown family '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::SwitchHead => "switchhead",
+            Family::Dense => "dense",
+            Family::Moa => "moa",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Positional {
+    Xl,
+    Rope,
+    None,
+}
+
+impl Positional {
+    pub fn parse(s: &str) -> Result<Positional> {
+        Ok(match s {
+            "xl" => Positional::Xl,
+            "rope" => Positional::Rope,
+            "none" => Positional::None,
+            other => bail!("unknown positional scheme '{other}'"),
+        })
+    }
+
+    /// Context multiple C (paper A.2): XL attends over C*T keys.
+    pub fn context_multiple(&self) -> usize {
+        match self {
+            Positional::Xl => 2,
+            _ => 1,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    Lm,
+    ListOps,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub family: Family,
+    pub pos: Positional,
+    pub task: Task,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch_size: usize,
+    pub dropout: f64,
+    // SwitchHead
+    pub att_n_experts: usize,
+    pub att_k: usize,
+    /// Routing activation (paper design choice): "sigmoid" = sigma-MoE
+    /// non-competitive (default), "softmax" = MoA-style competitive.
+    pub att_router: String,
+    pub moe_v: bool,
+    pub moe_k: bool,
+    pub moe_q: bool,
+    pub moe_o: bool,
+    pub shared_selection: bool,
+    // MoA
+    pub moa_n_experts: usize,
+    pub moa_k: usize,
+    // MLP
+    pub mlp_type: MlpType,
+    pub mlp_n_experts: usize,
+    pub mlp_k: usize,
+    pub mlp_d_expert: usize,
+    // training
+    pub lr: f64,
+    pub warmup: usize,
+    pub clip: f64,
+    pub ls_n_classes: usize,
+    // run/data settings (Rust only)
+    pub dataset: String,
+    pub train_steps: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MlpType {
+    Dense,
+    SigmaMoe,
+}
+
+impl ModelConfig {
+    pub fn from_json(j: &Json) -> Result<ModelConfig> {
+        let mlp_type = match j.get_or_str("mlp_type", "dense").as_str() {
+            "dense" => MlpType::Dense,
+            "sigma_moe" => MlpType::SigmaMoe,
+            other => bail!("unknown mlp_type '{other}'"),
+        };
+        let task = match j.get_or_str("task", "lm").as_str() {
+            "lm" => Task::Lm,
+            "listops" => Task::ListOps,
+            other => bail!("unknown task '{other}'"),
+        };
+        Ok(ModelConfig {
+            name: j.get_or_str("name", "unnamed"),
+            family: Family::parse(&j.get_or_str("family", "switchhead"))?,
+            pos: Positional::parse(&j.get_or_str("pos", "xl"))?,
+            task,
+            vocab_size: j.get_or_usize("vocab_size", 512),
+            d_model: j.get_or_usize("d_model", 128),
+            n_layers: j.get_or_usize("n_layers", 2),
+            n_heads: j.get_or_usize("n_heads", 2),
+            d_head: j.get_or_usize("d_head", 32),
+            d_ff: j.get_or_usize("d_ff", 256),
+            seq_len: j.get_or_usize("seq_len", 64),
+            batch_size: j.get_or_usize("batch_size", 4),
+            dropout: j.get_or_f64("dropout", 0.0),
+            att_n_experts: j.get_or_usize("att_n_experts", 4),
+            att_k: j.get_or_usize("att_k", 2),
+            att_router: j.get_or_str("att_router", "sigmoid"),
+            moe_v: j.get_or_bool("moe_v", true),
+            moe_k: j.get_or_bool("moe_k", false),
+            moe_q: j.get_or_bool("moe_q", false),
+            moe_o: j.get_or_bool("moe_o", true),
+            shared_selection: j.get_or_bool("shared_selection", false),
+            moa_n_experts: j.get_or_usize("moa_n_experts", 8),
+            moa_k: j.get_or_usize("moa_k", 2),
+            mlp_type,
+            mlp_n_experts: j.get_or_usize("mlp_n_experts", 4),
+            mlp_k: j.get_or_usize("mlp_k", 2),
+            mlp_d_expert: j.get_or_usize("mlp_d_expert", 64),
+            lr: j.get_or_f64("lr", 2.5e-4),
+            warmup: j.get_or_usize("warmup", 100),
+            clip: j.get_or_f64("clip", 0.25),
+            ls_n_classes: j.get_or_usize("ls_n_classes", 10),
+            dataset: j.get_or_str("dataset", "wt103"),
+            train_steps: j.get_or_usize("train_steps", 400),
+        })
+    }
+
+    pub fn load(path: &str) -> Result<ModelConfig> {
+        let cfg = ModelConfig::from_json(&Json::parse_file(path)?)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.att_k > self.att_n_experts {
+            bail!("att_k ({}) > att_n_experts ({})", self.att_k, self.att_n_experts);
+        }
+        if self.moa_k > self.moa_n_experts {
+            bail!("moa_k > moa_n_experts");
+        }
+        if self.mlp_k > self.mlp_n_experts {
+            bail!("mlp_k > mlp_n_experts");
+        }
+        if !matches!(self.att_router.as_str(), "sigmoid" | "softmax") {
+            bail!("att_router must be sigmoid or softmax");
+        }
+        if self.d_model == 0 || self.n_layers == 0 || self.seq_len == 0 || self.batch_size == 0 {
+            bail!("zero-sized model dimension");
+        }
+        if self.task == Task::ListOps && self.pos != Positional::None {
+            bail!("listops task requires pos='none' (bidirectional encoder)");
+        }
+        Ok(())
+    }
+
+    /// Key/value context length (XL: cached chunk + current chunk).
+    pub fn ctx_len(&self) -> usize {
+        self.pos.context_multiple() * self.seq_len
+    }
+
+    /// Number of attention matrices computed per layer — the paper's
+    /// headline resource metric ("up to 8x fewer").
+    pub fn attention_matrices(&self) -> usize {
+        match self.family {
+            Family::Moa => self.moa_k,
+            _ => self.n_heads,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_json() -> Json {
+        Json::parse(
+            r#"{"name":"t","family":"switchhead","pos":"xl","task":"lm",
+                "vocab_size":512,"d_model":128,"n_layers":2,"n_heads":2,
+                "d_head":32,"d_ff":256,"seq_len":64,"batch_size":4,
+                "att_n_experts":4,"att_k":2}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let cfg = ModelConfig::from_json(&tiny_json()).unwrap();
+        assert_eq!(cfg.family, Family::SwitchHead);
+        assert_eq!(cfg.ctx_len(), 128);
+        assert_eq!(cfg.attention_matrices(), 2);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_topk() {
+        let mut j = tiny_json();
+        j.set("att_k", Json::Num(9.0));
+        let cfg = ModelConfig::from_json(&j).unwrap();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn moa_counts_active_experts_as_matrices() {
+        let mut j = tiny_json();
+        j.set("family", Json::Str("moa".into()));
+        j.set("moa_n_experts", Json::Num(8.0));
+        j.set("moa_k", Json::Num(3.0));
+        let cfg = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.attention_matrices(), 3);
+    }
+}

@@ -1,0 +1,259 @@
+//! Analysis tooling for the paper's §4 / Appendix A.7: attention-map
+//! dumps (Figures 2-4, 6), expert-selection visualization (Figure 5),
+//! induction-head detection (Figure 6 / Olsson et al.), and
+//! expert-usage statistics.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::ModelConfig;
+use crate::runtime::{Engine, FlatBuf};
+use crate::util::pgm::{write_csv, write_pgm_scaled};
+
+/// A dense multi-dim array pulled back from the device.
+pub struct HostArray {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostArray {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Run the `attn` entry and materialize all outputs on host in manifest
+/// order (attention maps first, then gate score tensors).
+pub fn fetch_attention(
+    engine: &Engine,
+    flat: &FlatBuf,
+    tokens: &[i32],
+    dims: &[usize],
+) -> Result<Vec<HostArray>> {
+    let tok_buf = engine.upload_i32(tokens, dims)?;
+    let lits = engine.attn(flat, &tok_buf)?;
+    let sigs = &engine.manifest.entry("attn")?.outputs;
+    if lits.len() != sigs.len() {
+        return Err(anyhow!("attn returned {} outputs, manifest says {}", lits.len(), sigs.len()));
+    }
+    let mut out = Vec::with_capacity(lits.len());
+    for (lit, sig) in lits.iter().zip(sigs) {
+        let data = lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("attn output '{}' readback: {e:?}", sig.name))?;
+        out.push(HostArray { name: sig.name.clone(), shape: sig.shape.clone(), data });
+    }
+    Ok(out)
+}
+
+/// Dump per-(layer, head) attention maps of batch row 0 as scaled PGM +
+/// CSV, plus the per-layer max-over-heads map the paper's Fig. 2 shows.
+/// `maps` shape: [L, B, H, T, Tk].
+pub fn dump_attention_maps(maps: &HostArray, out_dir: &Path, scale: usize) -> Result<usize> {
+    let (l, b, h, t, tk) = match maps.shape.as_slice() {
+        [l, b, h, t, tk] => (*l, *b, *h, *t, *tk),
+        s => return Err(anyhow!("unexpected attn shape {s:?}")),
+    };
+    let stride_h = t * tk;
+    let stride_b = h * stride_h;
+    let stride_l = b * stride_b;
+    let mut written = 0;
+    for li in 0..l {
+        let mut max_map = vec![0f32; t * tk];
+        for hi in 0..h {
+            let base = li * stride_l + hi * stride_h; // batch row 0
+            let slice = &maps.data[base..base + stride_h];
+            write_pgm_scaled(
+                &out_dir.join(format!("attn_l{li}_h{hi}.pgm")),
+                slice,
+                t,
+                tk,
+                scale,
+            )?;
+            write_csv(&out_dir.join(format!("attn_l{li}_h{hi}.csv")), slice, t, tk)?;
+            for (acc, &v) in max_map.iter_mut().zip(slice) {
+                *acc = acc.max(v);
+            }
+            written += 1;
+        }
+        // Fig. 2: maximum over heads per layer.
+        write_pgm_scaled(&out_dir.join(format!("attn_l{li}_max.pgm")), &max_map, t, tk, scale)?;
+    }
+    Ok(written)
+}
+
+/// Dump gate-score tensors (Fig. 5 side panels): shape [L, N, E] where N
+/// is flattened tokens.
+pub fn dump_gates(gates: &HostArray, out_dir: &Path, max_tokens: usize) -> Result<()> {
+    let (l, n, e) = match gates.shape.as_slice() {
+        [l, n, e] => (*l, *n, *e),
+        s => return Err(anyhow!("unexpected gate shape {s:?}")),
+    };
+    let rows = n.min(max_tokens);
+    for li in 0..l {
+        let base = li * n * e;
+        let slice: Vec<f32> = gates.data[base..base + rows * e].to_vec();
+        let stem = gates.name.trim_start_matches("out/").replace('/', "_");
+        write_pgm_scaled(&out_dir.join(format!("{stem}_l{li}.pgm")), &slice, rows, e, 4)?;
+        write_csv(&out_dir.join(format!("{stem}_l{li}.csv")), &slice, rows, e)?;
+    }
+    Ok(())
+}
+
+/// Induction-head score (Olsson et al. 2022; paper Fig. 6): feed a
+/// sequence that repeats after `period` tokens; a head is an induction
+/// head if position i attends to i - period + 1 (the token AFTER the
+/// previous occurrence). Returns per-(layer, head) mean attention mass
+/// on that diagonal over the second repetition.
+pub fn induction_scores(maps: &HostArray, period: usize) -> Result<Vec<Vec<f32>>> {
+    let (l, b, h, t, tk) = match maps.shape.as_slice() {
+        [l, b, h, t, tk] => (*l, *b, *h, *t, *tk),
+        s => return Err(anyhow!("unexpected attn shape {s:?}")),
+    };
+    let off = tk - t; // XL cache offset: query i sits at key column off+i
+    let mut out = vec![vec![0f32; h]; l];
+    for li in 0..l {
+        for hi in 0..h {
+            let mut acc = 0f32;
+            let mut cnt = 0f32;
+            for bi in 0..b {
+                let base = ((li * b + bi) * h + hi) * t * tk;
+                for i in period..t {
+                    let target = off + i - period + 1; // key column of "token after previous occurrence"
+                    acc += maps.data[base + i * tk + target];
+                    cnt += 1.0;
+                }
+            }
+            out[li][hi] = if cnt > 0.0 { acc / cnt } else { 0.0 };
+        }
+    }
+    Ok(out)
+}
+
+/// Build a repeated-random-token probe sequence for induction scoring:
+/// `[B, T+1]` (LM window shape) with period T/2, deterministic in seed.
+pub fn induction_probe(cfg: &ModelConfig, seed: u64) -> (Vec<i32>, usize) {
+    use crate::util::rng::Pcg;
+    let mut rng = Pcg::new(seed, 0x1D);
+    let t1 = cfg.seq_len + 1;
+    let period = cfg.seq_len / 2;
+    let mut out = Vec::with_capacity(cfg.batch_size * t1);
+    for _ in 0..cfg.batch_size {
+        // Random base segment drawn away from special ids.
+        let base: Vec<i32> =
+            (0..period).map(|_| (rng.below(cfg.vocab_size - 8) + 8) as i32).collect();
+        let mut row = Vec::with_capacity(t1);
+        while row.len() < t1 {
+            row.extend_from_slice(&base[..period.min(t1 - row.len())]);
+        }
+        out.extend(row);
+    }
+    (out, period)
+}
+
+/// Expert-usage statistics from a gate tensor [L, N, E]: per (layer,
+/// expert) mean gate score and the per-layer usage entropy (collapse
+/// diagnosis — sigma-MoE's sigmoid routing should NOT collapse).
+pub struct ExpertStats {
+    pub mean_gate: Vec<Vec<f32>>, // [L][E]
+    pub entropy: Vec<f32>,        // [L], in bits, max = log2(E)
+}
+
+pub fn expert_stats(gates: &HostArray) -> Result<ExpertStats> {
+    let (l, n, e) = match gates.shape.as_slice() {
+        [l, n, e] => (*l, *n, *e),
+        s => return Err(anyhow!("unexpected gate shape {s:?}")),
+    };
+    let mut mean_gate = vec![vec![0f32; e]; l];
+    let mut entropy = vec![0f32; l];
+    for li in 0..l {
+        for ni in 0..n {
+            for ei in 0..e {
+                mean_gate[li][ei] += gates.data[(li * n + ni) * e + ei];
+            }
+        }
+        let mut total = 0f32;
+        for ei in 0..e {
+            mean_gate[li][ei] /= n as f32;
+            total += mean_gate[li][ei];
+        }
+        if total > 0.0 {
+            for ei in 0..e {
+                let p = mean_gate[li][ei] / total;
+                if p > 0.0 {
+                    entropy[li] -= p * p.log2();
+                }
+            }
+        }
+    }
+    Ok(ExpertStats { mean_gate, entropy })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn induction_score_detects_planted_head() {
+        // L=1, B=1, H=2, T=8, Tk=8 (no cache). Head 0: uniform. Head 1:
+        // perfect induction with period 4.
+        let (l, b, h, t, tk) = (1, 1, 2, 8usize, 8usize);
+        let period = 4;
+        let mut data = vec![0f32; l * b * h * t * tk];
+        for i in 0..t {
+            for j in 0..tk {
+                data[i * tk + j] = 1.0 / tk as f32; // head 0 uniform
+            }
+        }
+        let base1 = t * tk;
+        for i in period..t {
+            data[base1 + i * tk + (i - period + 1)] = 1.0; // head 1
+        }
+        let maps =
+            HostArray { name: "attn".into(), shape: vec![l, b, h, t, tk], data };
+        let scores = induction_scores(&maps, period).unwrap();
+        assert!(scores[0][1] > 0.99);
+        assert!(scores[0][0] < 0.2);
+    }
+
+    #[test]
+    fn expert_stats_entropy_bounds() {
+        // Uniform gates -> entropy = log2(E); one-hot -> 0.
+        let e = 4;
+        let uniform = HostArray {
+            name: "g".into(),
+            shape: vec![1, 3, e],
+            data: vec![0.25; 3 * e],
+        };
+        let s = expert_stats(&uniform).unwrap();
+        assert!((s.entropy[0] - 2.0).abs() < 1e-5);
+
+        let mut onehot_data = vec![0f32; 3 * e];
+        for n in 0..3 {
+            onehot_data[n * e] = 1.0;
+        }
+        let onehot = HostArray { name: "g".into(), shape: vec![1, 3, e], data: onehot_data };
+        let s = expert_stats(&onehot).unwrap();
+        assert!(s.entropy[0] < 1e-5);
+    }
+
+    #[test]
+    fn probe_has_period() {
+        let cfg = crate::config::ModelConfig::from_json(
+            &crate::util::json::Json::parse(
+                r#"{"name":"t","seq_len":16,"batch_size":2,"vocab_size":100}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let (probe, period) = induction_probe(&cfg, 1);
+        assert_eq!(period, 8);
+        assert_eq!(probe.len(), 2 * 17);
+        // periodicity within a row
+        for i in 0..17 - period {
+            assert_eq!(probe[i], probe[i + period]);
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Autoregressive text generation over the AOT `next_logits` entry —
+//! the inference path the paper's resource argument targets (SwitchHead
+//! computes fewer attention matrices per generated token).
+//!
+//! The sampler keeps a sliding `[B=batch, T]` token window (prompts are
+//! left-padded / left-truncated so the newest tokens are always
+//! in-context), uploads it, reads the `[B, V]` logits of the final
+//! position, and samples with temperature + top-k. Batched: `B`
+//! continuations are generated per executable call.
+
+use anyhow::{anyhow, Result};
+
+use crate::config::ModelConfig;
+use crate::data::tokenizer::{Bpe, DOC, PAD};
+use crate::runtime::{Engine, FlatBuf};
+use crate::util::rng::Pcg;
+
+#[derive(Debug, Clone)]
+pub struct SampleOpts {
+    pub max_tokens: usize,
+    pub temperature: f64,
+    pub top_k: usize, // 0 = full distribution
+    pub seed: u64,
+}
+
+impl Default for SampleOpts {
+    fn default() -> SampleOpts {
+        SampleOpts { max_tokens: 64, temperature: 0.8, top_k: 40, seed: 0 }
+    }
+}
+
+/// Sample one id from logits with temperature + top-k truncation.
+pub fn sample_logits(logits: &[f32], temperature: f64, top_k: usize, rng: &mut Pcg) -> usize {
+    debug_assert!(!logits.is_empty());
+    if temperature <= 1e-6 {
+        // Greedy.
+        return logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+    }
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    if top_k > 0 && top_k < logits.len() {
+        idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        idx.truncate(top_k);
+    }
+    let max = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max) as f64;
+    let weights: Vec<f64> = idx
+        .iter()
+        .map(|&i| ((logits[i] as f64 - max) / temperature).exp())
+        .collect();
+    idx[rng.weighted(&weights)]
+}
+
+/// Generate continuations for `prompts` (one per batch row; excess rows
+/// reuse the last prompt). Returns the generated ids per row.
+pub fn generate_ids(
+    engine: &Engine,
+    cfg: &ModelConfig,
+    flat: &FlatBuf,
+    prompts: &[Vec<u32>],
+    opts: &SampleOpts,
+) -> Result<Vec<Vec<u32>>> {
+    if !engine.manifest.entries.contains_key("next_logits") {
+        return Err(anyhow!(
+            "artifact '{}' lacks the next_logits entry — rebuild with `make artifacts`",
+            engine.manifest.name
+        ));
+    }
+    let b = cfg.batch_size;
+    let t = cfg.seq_len;
+    let v = cfg.vocab_size;
+    let mut rng = Pcg::new(opts.seed, 0x9E4);
+
+    // Per-row rolling windows, right-aligned.
+    let mut windows: Vec<Vec<i32>> = (0..b)
+        .map(|row| {
+            let p = prompts.get(row).or_else(|| prompts.last());
+            let mut w = vec![PAD as i32; t];
+            if let Some(ids) = p {
+                let keep = ids.len().min(t);
+                let dst = t - keep;
+                for (i, &id) in ids[ids.len() - keep..].iter().enumerate() {
+                    w[dst + i] = id as i32;
+                }
+            }
+            w
+        })
+        .collect();
+    let mut outputs: Vec<Vec<u32>> = vec![Vec::new(); b];
+
+    for _ in 0..opts.max_tokens {
+        let mut tokens = Vec::with_capacity(b * t);
+        for w in &windows {
+            tokens.extend_from_slice(w);
+        }
+        let tok_buf = engine.upload_i32(&tokens, &[b, t])?;
+        let out = engine.next_logits(flat, &tok_buf)?; // [B, V]
+        for row in 0..b {
+            let logits = &out[row * v..(row + 1) * v];
+            let id = sample_logits(logits, opts.temperature, opts.top_k, &mut rng) as u32;
+            outputs[row].push(id);
+            // Slide the window.
+            windows[row].remove(0);
+            windows[row].push(id as i32);
+        }
+    }
+    Ok(outputs)
+}
+
+/// Convenience: prompt text -> generated text (row 0), via BPE.
+pub fn generate_text(
+    engine: &Engine,
+    cfg: &ModelConfig,
+    flat: &FlatBuf,
+    bpe: &Bpe,
+    prompt: &str,
+    opts: &SampleOpts,
+) -> Result<String> {
+    let mut ids = vec![DOC];
+    ids.extend(bpe.encode(prompt));
+    let out = generate_ids(engine, cfg, flat, &[ids], opts)?;
+    Ok(bpe.decode(&out[0]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut rng = Pcg::new(1, 1);
+        let logits = vec![0.1, 2.5, -1.0, 2.4];
+        assert_eq!(sample_logits(&logits, 0.0, 0, &mut rng), 1);
+    }
+
+    #[test]
+    fn topk_restricts_support() {
+        let mut rng = Pcg::new(2, 2);
+        let logits = vec![10.0, 9.0, -50.0, -60.0];
+        for _ in 0..200 {
+            let id = sample_logits(&logits, 1.0, 2, &mut rng);
+            assert!(id < 2, "sampled outside top-2: {id}");
+        }
+    }
+
+    #[test]
+    fn temperature_zero_is_deterministic() {
+        let mut r1 = Pcg::new(3, 3);
+        let mut r2 = Pcg::new(4, 4);
+        let logits = vec![0.3, 0.1, 0.9];
+        assert_eq!(
+            sample_logits(&logits, 0.0, 0, &mut r1),
+            sample_logits(&logits, 0.0, 0, &mut r2)
+        );
+    }
+
+    #[test]
+    fn high_temperature_covers_support() {
+        let mut rng = Pcg::new(5, 5);
+        let logits = vec![1.0, 1.0, 1.0, 1.0];
+        let mut seen = [false; 4];
+        for _ in 0..400 {
+            seen[sample_logits(&logits, 5.0, 0, &mut rng)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,9 @@
+//! L3 coordinator: the training orchestrator (leader loop), evaluation
+//! and zero-shot scoring harnesses, and the §4 analysis tooling.
+
+pub mod analysis;
+pub mod generate;
+pub mod scorer;
+pub mod trainer;
+
+pub use trainer::{train, TrainOpts, TrainReport};

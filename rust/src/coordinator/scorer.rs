@@ -1,0 +1,188 @@
+//! Zero-shot scoring harness (paper §3.3 / Table 4 and Table 8).
+//!
+//! Consumes the `score` entry point (per-position next-token
+//! log-probabilities over a fixed `[B, T+1]` window) to evaluate the
+//! Lambada/BLiMP/CBT analogs from `data::zeroshot`. Sequences are
+//! right-aligned in the window (left-truncated if too long, left-padded
+//! with <pad> otherwise) so the scored tokens always sit in-context;
+//! causal masking makes trailing pads irrelevant and leading pads are a
+//! uniform prefix shared by all candidates of a task.
+
+use anyhow::Result;
+
+use crate::config::ModelConfig;
+use crate::data::tokenizer::{Bpe, DOC, PAD};
+use crate::data::zeroshot::{ChoiceTask, MinimalPair};
+use crate::runtime::{Engine, FlatBuf};
+
+/// Sum of next-token log-probs of `target_ids` given `ctx_ids`, via one
+/// score() call. Window layout: [pad... ctx target], length T+1.
+fn window(cfg: &ModelConfig, ctx_ids: &[u32], target_ids: &[u32]) -> (Vec<i32>, usize, usize) {
+    let t1 = cfg.seq_len + 1;
+    let mut seq: Vec<i32> = Vec::with_capacity(t1);
+    let need = ctx_ids.len() + target_ids.len();
+    if need >= t1 {
+        // left-truncate the context
+        let keep_ctx = t1 - target_ids.len();
+        let start = ctx_ids.len() - keep_ctx;
+        seq.extend(ctx_ids[start..].iter().map(|&x| x as i32));
+    } else {
+        seq.resize(t1 - need, PAD as i32);
+        seq.extend(ctx_ids.iter().map(|&x| x as i32));
+    }
+    seq.extend(target_ids.iter().map(|&x| x as i32));
+    debug_assert_eq!(seq.len(), t1);
+    // logp[t] scores token t+1; target tokens occupy the last
+    // target_ids.len() positions, i.e. logp indices [t1-1-len, t1-1).
+    let lo = t1 - 1 - target_ids.len();
+    let hi = t1 - 1;
+    (seq, lo, hi)
+}
+
+/// Score many (ctx, target) pairs, batching `batch_size` windows per
+/// score() execution. Returns sum-logp per pair.
+pub fn score_pairs(
+    engine: &Engine,
+    cfg: &ModelConfig,
+    pairs: &[(Vec<u32>, Vec<u32>)],
+    flat: &FlatBuf,
+) -> Result<Vec<f64>> {
+    let b = cfg.batch_size;
+    let t1 = cfg.seq_len + 1;
+    let mut out = Vec::with_capacity(pairs.len());
+    for chunk in pairs.chunks(b) {
+        let mut tokens = Vec::with_capacity(b * t1);
+        let mut ranges = Vec::with_capacity(chunk.len());
+        for (ctx, tgt) in chunk {
+            let (seq, lo, hi) = window(cfg, ctx, tgt);
+            tokens.extend(seq);
+            ranges.push((lo, hi));
+        }
+        // Pad the batch with copies of the last row.
+        for _ in chunk.len()..b {
+            let start = tokens.len() - t1;
+            let row: Vec<i32> = tokens[start..].to_vec();
+            tokens.extend(row);
+        }
+        let tok_buf = engine.upload_i32(&tokens, &[b, t1])?;
+        let logp = engine.score(flat, &tok_buf)?; // [B, T]
+        let t = cfg.seq_len;
+        for (row, (lo, hi)) in ranges.iter().enumerate() {
+            let mut s = 0.0f64;
+            for pos in *lo..*hi {
+                s += logp[row * t + pos] as f64;
+            }
+            out.push(s);
+        }
+    }
+    Ok(out)
+}
+
+fn encode_ctx(bpe: &Bpe, text: &str) -> Vec<u32> {
+    let mut ids = vec![DOC];
+    ids.extend(bpe.encode(text));
+    ids
+}
+
+/// Multiple-choice accuracy: fraction of tasks where the true candidate
+/// has the highest continuation log-probability.
+pub fn eval_choice_tasks(
+    engine: &Engine,
+    cfg: &ModelConfig,
+    bpe: &Bpe,
+    tasks: &[ChoiceTask],
+    flat: &FlatBuf,
+) -> Result<f64> {
+    let mut pairs = Vec::new();
+    let mut spans = Vec::new(); // (task_idx, candidate count)
+    for task in tasks {
+        let ctx = encode_ctx(bpe, &task.context);
+        spans.push(task.candidates.len());
+        for cand in &task.candidates {
+            let tgt = bpe.encode(&format!(" {cand}"));
+            pairs.push((ctx.clone(), tgt));
+        }
+    }
+    let scores = score_pairs(engine, cfg, &pairs, flat)?;
+    let mut correct = 0usize;
+    let mut cursor = 0usize;
+    for (task, &n) in tasks.iter().zip(&spans) {
+        let slice = &scores[cursor..cursor + n];
+        cursor += n;
+        let best = slice
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        if best == task.answer {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / tasks.len().max(1) as f64)
+}
+
+/// Minimal-pair preference: fraction of pairs where the grammatical
+/// member gets the higher total sentence log-probability.
+pub fn eval_minimal_pairs(
+    engine: &Engine,
+    cfg: &ModelConfig,
+    bpe: &Bpe,
+    pairs_in: &[MinimalPair],
+    flat: &FlatBuf,
+) -> Result<f64> {
+    let mut pairs = Vec::new();
+    for p in pairs_in {
+        // Whole-sentence likelihood from a <doc> start.
+        pairs.push((vec![DOC], bpe.encode(&p.good)));
+        pairs.push((vec![DOC], bpe.encode(&p.bad)));
+    }
+    let scores = score_pairs(engine, cfg, &pairs, flat)?;
+    let mut correct = 0usize;
+    for i in 0..pairs_in.len() {
+        if scores[2 * i] > scores[2 * i + 1] {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / pairs_in.len().max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::from_json(
+            &Json::parse(r#"{"name":"t","seq_len":16,"batch_size":2,"vocab_size":512}"#).unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn window_right_aligns_and_ranges() {
+        let cfg = cfg();
+        let ctx: Vec<u32> = (10..14).collect();
+        let tgt: Vec<u32> = vec![99, 100];
+        let (seq, lo, hi) = window(&cfg, &ctx, &tgt);
+        assert_eq!(seq.len(), 17);
+        assert_eq!(&seq[17 - 2..], &[99, 100]);
+        assert_eq!(hi - lo, 2);
+        assert_eq!(hi, 16);
+        // pads at front
+        assert!(seq[..17 - 6].iter().all(|&x| x == PAD as i32));
+    }
+
+    #[test]
+    fn window_truncates_long_context() {
+        let cfg = cfg();
+        let ctx: Vec<u32> = (0..100).collect();
+        let tgt: Vec<u32> = vec![7];
+        let (seq, lo, hi) = window(&cfg, &ctx, &tgt);
+        assert_eq!(seq.len(), 17);
+        assert_eq!(seq[16], 7);
+        assert_eq!((lo, hi), (15, 16));
+        // kept the TAIL of the context
+        assert_eq!(seq[15], 99);
+    }
+}

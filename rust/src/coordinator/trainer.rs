@@ -1,0 +1,291 @@
+//! Training orchestrator — the L3 leader loop.
+//!
+//! Owns the whole run: corpus/batch pipeline (with a prefetch worker
+//! thread), the device-resident flat training-state buffer chained
+//! through `train_step` executions, periodic validation, checkpointing,
+//! and JSONL metrics. Python is never invoked here; the engine only
+//! replays AOT-compiled HLO.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ModelConfig, Task};
+use crate::data::batch::{LmStream, Prefetcher};
+use crate::data::{corpus_for, listops, Corpus, TRAIN_CHARS, VALID_CHARS};
+use crate::runtime::{checkpoint, Engine, FlatBuf, StepTimes};
+use crate::util::json::Json;
+use crate::util::logging::{info, peak_rss_bytes, MetricsLog};
+use crate::util::rng::Pcg;
+use crate::util::stats::{mean, perplexity};
+
+#[derive(Debug, Clone)]
+pub struct TrainOpts {
+    pub steps: usize,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub ckpt_every: usize,
+    pub out_dir: PathBuf,
+    pub seed: u64,
+    pub log_every: usize,
+    pub quiet: bool,
+}
+
+impl Default for TrainOpts {
+    fn default() -> TrainOpts {
+        TrainOpts {
+            steps: 400,
+            eval_every: 0, // 0 = only at the end
+            eval_batches: 16,
+            ckpt_every: 0, // 0 = only at the end
+            out_dir: PathBuf::from("runs/default"),
+            seed: 42,
+            log_every: 20,
+            quiet: false,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub losses: Vec<f32>,
+    pub evals: Vec<(usize, f64)>, // (step, ppl or accuracy)
+    pub final_metric: f64,        // ppl (lm) / accuracy (listops)
+    pub ms_per_iter: f64,
+    pub peak_rss_bytes: u64,
+    pub step_times: StepTimes,
+    pub tokens_per_sec: f64,
+}
+
+/// Train a model end-to-end; returns the report and leaves the final
+/// checkpoint + metrics.jsonl in `opts.out_dir`.
+pub fn train(engine: &Engine, cfg: &ModelConfig, opts: &TrainOpts) -> Result<TrainReport> {
+    match cfg.task {
+        Task::Lm => train_lm(engine, cfg, opts),
+        Task::ListOps => train_listops(engine, cfg, opts),
+    }
+}
+
+fn save_ckpt(
+    engine: &Engine,
+    flat: &FlatBuf,
+    cfg: &ModelConfig,
+    step: usize,
+    dir: &Path,
+) -> Result<()> {
+    let header = Json::from_pairs(vec![
+        ("config", Json::Str(cfg.name.clone())),
+        ("step", Json::Num(step as f64)),
+        ("total", Json::Num(flat.len as f64)),
+    ]);
+    checkpoint::save(&dir.join("last.ckpt"), &header, &flat.to_host()?)
+}
+
+/// Resume from `<out_dir>/last.ckpt` if present; otherwise init fresh.
+pub fn init_or_resume(engine: &Engine, opts: &TrainOpts) -> Result<(FlatBuf, usize)> {
+    let path = opts.out_dir.join("last.ckpt");
+    if path.exists() {
+        let ck = checkpoint::load(&path)?;
+        let step = ck.header.get_or_usize("step", 0);
+        info(&format!("resuming from {path:?} at step {step}"));
+        Ok((engine.upload_flat(&ck.flat)?, step))
+    } else {
+        Ok((engine.init(opts.seed)?, 0))
+    }
+}
+
+fn train_lm(engine: &Engine, cfg: &ModelConfig, opts: &TrainOpts) -> Result<TrainReport> {
+    let corpus = corpus_for(cfg, TRAIN_CHARS, VALID_CHARS)?;
+    let stream = LmStream::new(corpus.train.clone(), cfg.batch_size, cfg.seq_len);
+    let mut prefetch = Prefetcher::spawn(stream, 4, opts.steps + 4);
+    let metrics = MetricsLog::create(&opts.out_dir.join("metrics.jsonl"))?;
+
+    let (mut flat, start_step) = init_or_resume(engine, opts)?;
+    let mut losses = Vec::with_capacity(opts.steps);
+    let mut evals = Vec::new();
+    let mut times = StepTimes::default();
+    let dims = [cfg.batch_size, cfg.seq_len + 1];
+
+    let t0 = Instant::now();
+    let mut tokens_seen = 0usize;
+    for step in start_step..start_step + opts.steps {
+        let (tok, _wrapped) = prefetch.next().context("prefetcher ended early")?;
+        let tok_buf = engine.upload_i32(&tok, &dims)?;
+        let (new_flat, m) = engine.train_step(&flat, step as i32, &[&tok_buf], Some(&mut times))?;
+        flat = new_flat;
+        let loss = m[0];
+        if !loss.is_finite() {
+            bail!("non-finite loss {loss} at step {step} — diverged");
+        }
+        losses.push(loss);
+        tokens_seen += cfg.batch_size * cfg.seq_len;
+        if !opts.quiet && opts.log_every > 0 && (step + 1) % opts.log_every == 0 {
+            let recent = &losses[losses.len().saturating_sub(opts.log_every)..];
+            info(&format!(
+                "[{}] step {}/{} loss {:.4} (avg {:.4}) gnorm {:.3}",
+                cfg.name,
+                step + 1,
+                start_step + opts.steps,
+                loss,
+                mean(&recent.iter().map(|&x| x as f64).collect::<Vec<_>>()),
+                m[3],
+            ));
+        }
+        metrics.log(Json::from_pairs(vec![
+            ("kind", Json::Str("train".into())),
+            ("step", Json::Num((step + 1) as f64)),
+            ("loss", Json::Num(loss as f64)),
+            ("gnorm", Json::Num(m[3] as f64)),
+        ]))?;
+        if opts.eval_every > 0 && (step + 1) % opts.eval_every == 0 {
+            let ppl = eval_lm(engine, cfg, &corpus, &flat, opts.eval_batches)?;
+            evals.push((step + 1, ppl));
+            if !opts.quiet {
+                info(&format!("[{}] step {} valid ppl {:.3}", cfg.name, step + 1, ppl));
+            }
+            metrics.log(Json::from_pairs(vec![
+                ("kind", Json::Str("eval".into())),
+                ("step", Json::Num((step + 1) as f64)),
+                ("ppl", Json::Num(ppl)),
+            ]))?;
+        }
+        if opts.ckpt_every > 0 && (step + 1) % opts.ckpt_every == 0 {
+            save_ckpt(engine, &flat, cfg, step + 1, &opts.out_dir)?;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let final_ppl = eval_lm(engine, cfg, &corpus, &flat, opts.eval_batches)?;
+    evals.push((start_step + opts.steps, final_ppl));
+    save_ckpt(engine, &flat, cfg, start_step + opts.steps, &opts.out_dir)?;
+    metrics.log(Json::from_pairs(vec![
+        ("kind", Json::Str("final".into())),
+        ("ppl", Json::Num(final_ppl)),
+        ("ms_per_iter", Json::Num(wall * 1000.0 / opts.steps.max(1) as f64)),
+    ]))?;
+
+    Ok(TrainReport {
+        losses,
+        evals,
+        final_metric: final_ppl,
+        ms_per_iter: wall * 1000.0 / opts.steps.max(1) as f64,
+        peak_rss_bytes: peak_rss_bytes(),
+        step_times: times,
+        tokens_per_sec: tokens_seen as f64 / wall,
+    })
+}
+
+/// Validation perplexity: chain eval steps from the trained flat buffer
+/// over fresh validation stream (fresh XL cache progression); the
+/// returned buffers are discarded afterwards, leaving training state
+/// untouched (execute_b does not donate inputs).
+pub fn eval_lm(
+    engine: &Engine,
+    cfg: &ModelConfig,
+    corpus: &Corpus,
+    flat: &FlatBuf,
+    batches: usize,
+) -> Result<f64> {
+    let mut stream = LmStream::new(corpus.valid.clone(), cfg.batch_size, cfg.seq_len);
+    let dims = [cfg.batch_size, cfg.seq_len + 1];
+    let mut sum_nll = 0.0f64;
+    let mut count = 0.0f64;
+    // Note: the first eval chunk sees the training cache; XL papers warm
+    // the cache on validation data — chaining through `batches` chunks
+    // amortizes this to a negligible bias, identical across all models.
+    let mut cur: Option<FlatBuf> = None;
+    for _ in 0..batches.max(1) {
+        let (tok, _) = stream.next_batch();
+        let tok_buf = engine.upload_i32(&tok, &dims)?;
+        let src = cur.as_ref().unwrap_or(flat);
+        let (next, m) = engine.eval_step(src, &[&tok_buf])?;
+        sum_nll += m[0] as f64;
+        count += m[1] as f64;
+        cur = Some(next);
+    }
+    Ok(perplexity(sum_nll, count))
+}
+
+fn train_listops(engine: &Engine, cfg: &ModelConfig, opts: &TrainOpts) -> Result<TrainReport> {
+    let metrics = MetricsLog::create(&opts.out_dir.join("metrics.jsonl"))?;
+    let (mut flat, start_step) = init_or_resume(engine, opts)?;
+    let mut rng = Pcg::new(opts.seed, 0x115705);
+    let mut losses = Vec::new();
+    let mut evals = Vec::new();
+    let mut times = StepTimes::default();
+    let tok_dims = [cfg.batch_size, cfg.seq_len];
+    let lab_dims = [cfg.batch_size];
+
+    let t0 = Instant::now();
+    for step in start_step..start_step + opts.steps {
+        let (tok, lab) = listops::gen_batch(&mut rng, cfg.batch_size, cfg.seq_len);
+        let tok_buf = engine.upload_i32(&tok, &tok_dims)?;
+        let lab_buf = engine.upload_i32(&lab, &lab_dims)?;
+        let (new_flat, m) =
+            engine.train_step(&flat, step as i32, &[&tok_buf, &lab_buf], Some(&mut times))?;
+        flat = new_flat;
+        if !m[0].is_finite() {
+            bail!("non-finite loss at step {step}");
+        }
+        losses.push(m[0]);
+        if !opts.quiet && opts.log_every > 0 && (step + 1) % opts.log_every == 0 {
+            info(&format!(
+                "[{}] step {}/{} loss {:.4} acc {:.3}",
+                cfg.name,
+                step + 1,
+                start_step + opts.steps,
+                m[0],
+                m[1],
+            ));
+        }
+        metrics.log(Json::from_pairs(vec![
+            ("kind", Json::Str("train".into())),
+            ("step", Json::Num((step + 1) as f64)),
+            ("loss", Json::Num(m[0] as f64)),
+            ("acc", Json::Num(m[1] as f64)),
+        ]))?;
+        if opts.eval_every > 0 && (step + 1) % opts.eval_every == 0 {
+            let acc = eval_listops(engine, cfg, &flat, opts.eval_batches, opts.seed + 999)?;
+            evals.push((step + 1, acc));
+            if !opts.quiet {
+                info(&format!("[{}] step {} IID acc {:.3}", cfg.name, step + 1, acc));
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let final_acc = eval_listops(engine, cfg, &flat, opts.eval_batches, opts.seed + 999)?;
+    evals.push((start_step + opts.steps, final_acc));
+    save_ckpt(engine, &flat, cfg, start_step + opts.steps, &opts.out_dir)?;
+
+    Ok(TrainReport {
+        losses,
+        evals,
+        final_metric: final_acc,
+        ms_per_iter: wall * 1000.0 / opts.steps.max(1) as f64,
+        peak_rss_bytes: peak_rss_bytes(),
+        step_times: times,
+        tokens_per_sec: (opts.steps * cfg.batch_size * cfg.seq_len) as f64 / wall,
+    })
+}
+
+/// Held-out IID accuracy (fresh generator stream, disjoint seed).
+pub fn eval_listops(
+    engine: &Engine,
+    cfg: &ModelConfig,
+    flat: &FlatBuf,
+    batches: usize,
+    seed: u64,
+) -> Result<f64> {
+    let mut rng = Pcg::new(seed, 0xEA1);
+    let mut accs = Vec::new();
+    for _ in 0..batches.max(1) {
+        let (tok, lab) = listops::gen_batch(&mut rng, cfg.batch_size, cfg.seq_len);
+        let tok_buf = engine.upload_i32(&tok, &[cfg.batch_size, cfg.seq_len])?;
+        let lab_buf = engine.upload_i32(&lab, &[cfg.batch_size])?;
+        let (_state, m) = engine.eval_step(flat, &[&tok_buf, &lab_buf])?;
+        accs.push(m[1] as f64);
+    }
+    Ok(mean(&accs))
+}

@@ -1,0 +1,159 @@
+//! LM batch streaming with Transformer-XL chunk continuity, plus a
+//! prefetch thread so batch assembly overlaps device execution
+//! (std::thread + channels; no tokio in the offline registry).
+//!
+//! The stream splits the token corpus into `batch` contiguous segments;
+//! each batch row advances through its own segment by `seq_len` tokens
+//! per step with one token of overlap (the next-token target), so the
+//! XL cache carried inside the flat buffer always sees the true
+//! continuation — exactly the paper's training setup (context = current
+//! chunk + one cached chunk).
+
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::thread::JoinHandle;
+
+/// Deterministic XL-continuous batch iterator.
+pub struct LmStream {
+    tokens: Vec<u32>,
+    batch: usize,
+    seq_len: usize,
+    cursors: Vec<usize>,
+    seg_bounds: Vec<(usize, usize)>, // [start, end) per row
+}
+
+impl LmStream {
+    pub fn new(tokens: Vec<u32>, batch: usize, seq_len: usize) -> LmStream {
+        assert!(
+            tokens.len() >= batch * (seq_len + 1),
+            "corpus too small: {} tokens for batch {batch} x seq {seq_len}",
+            tokens.len()
+        );
+        let seg = tokens.len() / batch;
+        let seg_bounds: Vec<(usize, usize)> = (0..batch).map(|b| (b * seg, (b + 1) * seg)).collect();
+        let cursors = seg_bounds.iter().map(|&(s, _)| s).collect();
+        LmStream { tokens, batch, seq_len, cursors, seg_bounds }
+    }
+
+    /// Next `[B, T+1]` window, flattened row-major. Rows wrap to their
+    /// segment start when exhausted (and report `wrapped = true`).
+    pub fn next_batch(&mut self) -> (Vec<i32>, bool) {
+        let t1 = self.seq_len + 1;
+        let mut out = Vec::with_capacity(self.batch * t1);
+        let mut wrapped = false;
+        for b in 0..self.batch {
+            let (start, end) = self.seg_bounds[b];
+            if self.cursors[b] + t1 > end {
+                self.cursors[b] = start;
+                wrapped = true;
+            }
+            let c = self.cursors[b];
+            out.extend(self.tokens[c..c + t1].iter().map(|&t| t as i32));
+            // advance by seq_len (one token of target overlap)
+            self.cursors[b] += self.seq_len;
+        }
+        (out, wrapped)
+    }
+
+    /// Number of batches in one pass over the shortest segment.
+    pub fn batches_per_epoch(&self) -> usize {
+        let seg = self.tokens.len() / self.batch;
+        seg.saturating_sub(1) / self.seq_len
+    }
+}
+
+/// Prefetching wrapper: assembles batches on a worker thread.
+pub struct Prefetcher {
+    rx: Receiver<(Vec<i32>, bool)>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    pub fn spawn(mut stream: LmStream, depth: usize, max_batches: usize) -> Prefetcher {
+        let (tx, rx) = sync_channel(depth);
+        let handle = std::thread::spawn(move || {
+            for _ in 0..max_batches {
+                if tx.send(stream.next_batch()).is_err() {
+                    break; // consumer dropped
+                }
+            }
+        });
+        Prefetcher { rx, handle: Some(handle) }
+    }
+
+    pub fn next(&mut self) -> Option<(Vec<i32>, bool)> {
+        self.rx.recv().ok()
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        // Drain so the worker unblocks, then join.
+        while self.rx.try_recv().is_ok() {}
+        drop(std::mem::replace(&mut self.rx, sync_channel(1).1));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus(n: usize) -> Vec<u32> {
+        (0..n as u32).collect()
+    }
+
+    #[test]
+    fn rows_are_contiguous_across_batches() {
+        let mut s = LmStream::new(corpus(1000), 2, 8);
+        let (b1, _) = s.next_batch();
+        let (b2, _) = s.next_batch();
+        // Row 0 of batch 2 starts where row 0 of batch 1's inputs ended:
+        // last input token of b1 row0 is b1[7]; b2 row0 starts at b1[8].
+        assert_eq!(b2[0], b1[8]);
+        // Target overlap: first token of next window equals last token
+        // of previous window's target region start.
+        assert_eq!(b1[8], b1[0] + 8);
+    }
+
+    #[test]
+    fn segments_do_not_overlap() {
+        let mut s = LmStream::new(corpus(100), 4, 4);
+        let (b, _) = s.next_batch();
+        // 4 rows, 5 tokens each; row r starts at r*25.
+        for r in 0..4 {
+            assert_eq!(b[r * 5], (r * 25) as i32);
+        }
+    }
+
+    #[test]
+    fn wraps_at_epoch() {
+        let mut s = LmStream::new(corpus(40), 2, 4);
+        let per_epoch = s.batches_per_epoch();
+        let mut wrapped = false;
+        for _ in 0..per_epoch + 1 {
+            wrapped |= s.next_batch().1;
+        }
+        assert!(wrapped);
+    }
+
+    #[test]
+    fn prefetcher_yields_same_batches() {
+        let mut direct = LmStream::new(corpus(1000), 2, 8);
+        let stream = LmStream::new(corpus(1000), 2, 8);
+        let mut pf = Prefetcher::spawn(stream, 2, 10);
+        for _ in 0..10 {
+            let (a, _) = direct.next_batch();
+            let (b, _) = pf.next().unwrap();
+            assert_eq!(a, b);
+        }
+        assert!(pf.next().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "corpus too small")]
+    fn rejects_tiny_corpus() {
+        LmStream::new(corpus(10), 4, 8);
+    }
+}

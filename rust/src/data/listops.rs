@@ -1,0 +1,230 @@
+//! ListOps generator (Nangia & Bowman 2018) — the diagnostic task the
+//! paper uses for the §4 interpretability analysis (Figures 2-5).
+//!
+//! Expressions are bracketed prefix trees over MAX, MIN, MED and SM
+//! (sum modulo 10) applied to digits 0-9; the label is the evaluated
+//! root value. We build the full generator + evaluator and the fixed
+//! token mapping shared with the Python model config:
+//!
+//!   0 = <pad>, 1 = <cls>, 2 = '[', 3 = ']',
+//!   4..=7 = MAX MIN MED SM, 8..=17 = digits 0-9.
+
+use crate::util::rng::Pcg;
+
+pub const PAD: i32 = 0;
+pub const CLS: i32 = 1;
+pub const OPEN: i32 = 2;
+pub const CLOSE: i32 = 3;
+pub const OP_BASE: i32 = 4;
+pub const DIGIT_BASE: i32 = 8;
+pub const VOCAB: usize = 18;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    Max,
+    Min,
+    Med,
+    Sm,
+}
+
+const OPS: [Op; 4] = [Op::Max, Op::Min, Op::Med, Op::Sm];
+
+impl Op {
+    pub fn token(&self) -> i32 {
+        OP_BASE + *self as i32
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Max => "MAX",
+            Op::Min => "MIN",
+            Op::Med => "MED",
+            Op::Sm => "SM",
+        }
+    }
+
+    pub fn apply(&self, args: &[u8]) -> u8 {
+        debug_assert!(!args.is_empty());
+        match self {
+            Op::Max => *args.iter().max().unwrap(),
+            Op::Min => *args.iter().min().unwrap(),
+            Op::Med => {
+                let mut v = args.to_vec();
+                v.sort();
+                v[v.len() / 2]
+            }
+            Op::Sm => (args.iter().map(|&a| a as u32).sum::<u32>() % 10) as u8,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub enum Node {
+    Leaf(u8),
+    Apply(Op, Vec<Node>),
+}
+
+impl Node {
+    pub fn eval(&self) -> u8 {
+        match self {
+            Node::Leaf(d) => *d,
+            Node::Apply(op, kids) => {
+                let args: Vec<u8> = kids.iter().map(Node::eval).collect();
+                op.apply(&args)
+            }
+        }
+    }
+
+    pub fn tokens(&self, out: &mut Vec<i32>) {
+        match self {
+            Node::Leaf(d) => out.push(DIGIT_BASE + *d as i32),
+            Node::Apply(op, kids) => {
+                out.push(OPEN);
+                out.push(op.token());
+                for k in kids {
+                    k.tokens(out);
+                }
+                out.push(CLOSE);
+            }
+        }
+    }
+
+    pub fn to_string(&self) -> String {
+        match self {
+            Node::Leaf(d) => d.to_string(),
+            Node::Apply(op, kids) => {
+                let inner: Vec<String> = kids.iter().map(Node::to_string).collect();
+                format!("[{} {} ]", op.name(), inner.join(" "))
+            }
+        }
+    }
+
+    pub fn token_len(&self) -> usize {
+        match self {
+            Node::Leaf(_) => 1,
+            Node::Apply(_, kids) => 3 + kids.iter().map(Node::token_len).sum::<usize>(),
+        }
+    }
+}
+
+/// Random tree with bounded depth and argument count.
+pub fn gen_tree(rng: &mut Pcg, depth: usize, max_args: usize) -> Node {
+    if depth == 0 || rng.coin(0.3) {
+        return Node::Leaf(rng.below(10) as u8);
+    }
+    let op = OPS[rng.below(4)];
+    let n_args = 2 + rng.below(max_args.saturating_sub(1).max(1));
+    let kids = (0..n_args).map(|_| gen_tree(rng, depth - 1, max_args)).collect();
+    Node::Apply(op, kids)
+}
+
+/// A tokenized example: `[CLS] expr... [PAD]...` padded to `seq_len`.
+pub struct Example {
+    pub tokens: Vec<i32>,
+    pub label: i32,
+    pub text: String,
+}
+
+/// Generate one example whose token length fits `seq_len`.
+pub fn gen_example(rng: &mut Pcg, seq_len: usize) -> Example {
+    loop {
+        let tree = gen_tree(rng, 3, 4);
+        let len = tree.token_len() + 1; // + CLS
+        if len > seq_len || len < 6 {
+            continue;
+        }
+        let mut tokens = vec![CLS];
+        tree.tokens(&mut tokens);
+        tokens.resize(seq_len, PAD);
+        return Example { tokens, label: tree.eval() as i32, text: tree.to_string() };
+    }
+}
+
+/// Batch of examples flattened for upload: tokens `[B * seq_len]`,
+/// labels `[B]`.
+pub fn gen_batch(rng: &mut Pcg, batch: usize, seq_len: usize) -> (Vec<i32>, Vec<i32>) {
+    let mut tokens = Vec::with_capacity(batch * seq_len);
+    let mut labels = Vec::with_capacity(batch);
+    for _ in 0..batch {
+        let ex = gen_example(rng, seq_len);
+        tokens.extend_from_slice(&ex.tokens);
+        labels.push(ex.label);
+    }
+    (tokens, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ops_evaluate_correctly() {
+        assert_eq!(Op::Max.apply(&[3, 9, 1]), 9);
+        assert_eq!(Op::Min.apply(&[3, 9, 1]), 1);
+        assert_eq!(Op::Med.apply(&[3, 9, 1]), 3);
+        assert_eq!(Op::Sm.apply(&[7, 8]), 5);
+    }
+
+    #[test]
+    fn tree_eval_matches_manual() {
+        // [MAX 2 [MIN 4 7] 0] = max(2, 4, 0) = 4
+        let tree = Node::Apply(
+            Op::Max,
+            vec![
+                Node::Leaf(2),
+                Node::Apply(Op::Min, vec![Node::Leaf(4), Node::Leaf(7)]),
+                Node::Leaf(0),
+            ],
+        );
+        assert_eq!(tree.eval(), 4);
+        assert_eq!(tree.to_string(), "[MAX 2 [MIN 4 7 ] 0 ]");
+        let mut toks = Vec::new();
+        tree.tokens(&mut toks);
+        assert_eq!(toks.len(), tree.token_len());
+        assert_eq!(toks[0], OPEN);
+        assert_eq!(toks[1], Op::Max.token());
+    }
+
+    #[test]
+    fn examples_fit_and_balance() {
+        let mut rng = Pcg::new(3, 1);
+        let mut label_seen = [false; 10];
+        for _ in 0..200 {
+            let ex = gen_example(&mut rng, 64);
+            assert_eq!(ex.tokens.len(), 64);
+            assert_eq!(ex.tokens[0], CLS);
+            assert!((0..10).contains(&ex.label));
+            label_seen[ex.label as usize] = true;
+            // tokens in range
+            assert!(ex.tokens.iter().all(|&t| (0..VOCAB as i32).contains(&t)));
+        }
+        assert!(label_seen.iter().filter(|&&s| s).count() >= 8);
+    }
+
+    #[test]
+    fn brackets_balance() {
+        let mut rng = Pcg::new(5, 2);
+        for _ in 0..100 {
+            let ex = gen_example(&mut rng, 64);
+            let mut depth = 0i32;
+            for &t in &ex.tokens {
+                if t == OPEN {
+                    depth += 1;
+                }
+                if t == CLOSE {
+                    depth -= 1;
+                    assert!(depth >= 0);
+                }
+            }
+            assert_eq!(depth, 0);
+        }
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let mut rng = Pcg::new(1, 1);
+        let (toks, labels) = gen_batch(&mut rng, 8, 32);
+        assert_eq!(toks.len(), 8 * 32);
+        assert_eq!(labels.len(), 8);
+    }
+}

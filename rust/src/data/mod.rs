@@ -1,0 +1,161 @@
+//! Data pipeline: tokenizer, synthetic corpora, ListOps, zero-shot task
+//! generators, and the batching/prefetch machinery.
+//!
+//! `corpus_for` is the high-level entry: it generates the profile
+//! corpus, trains (or loads the cached) BPE tokenizer at the config's
+//! vocabulary size, tokenizes, and returns train/validation token
+//! streams. Everything is deterministic in the seed and cached under
+//! `.cache/` keyed by (profile, vocab, size).
+
+pub mod batch;
+pub mod listops;
+pub mod synth;
+pub mod tokenizer;
+pub mod zeroshot;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::util::logging::info;
+use crate::util::rng::Pcg;
+use synth::{CorpusGen, Profile};
+use tokenizer::{Bpe, BYTE_VOCAB};
+
+pub struct Corpus {
+    pub train: Vec<u32>,
+    pub valid: Vec<u32>,
+    pub bpe: Option<Bpe>,
+    pub profile: Profile,
+}
+
+/// Default corpus sizes (chars) — enough for a few thousand tiny-model
+/// steps without repeating data.
+pub const TRAIN_CHARS: usize = 4_000_000;
+pub const VALID_CHARS: usize = 200_000;
+
+fn cache_dir() -> PathBuf {
+    PathBuf::from(".cache")
+}
+
+fn read_tokens_bin(path: &Path) -> Result<Vec<u32>> {
+    let bytes = std::fs::read(path)?;
+    if bytes.len() % 4 != 0 {
+        bail!("corrupt token cache {path:?}");
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn write_tokens_bin(path: &Path, tokens: &[u32]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut bytes = Vec::with_capacity(tokens.len() * 4);
+    for t in tokens {
+        bytes.extend_from_slice(&t.to_le_bytes());
+    }
+    std::fs::write(path, bytes)?;
+    Ok(())
+}
+
+/// Build (or load from cache) the tokenized corpus for a config.
+pub fn corpus_for(cfg: &ModelConfig, train_chars: usize, valid_chars: usize) -> Result<Corpus> {
+    let profile = Profile::parse(&cfg.dataset)
+        .with_context(|| format!("unknown dataset profile '{}'", cfg.dataset))?;
+    let vocab = cfg.vocab_size;
+    if profile.byte_level() && vocab < BYTE_VOCAB {
+        bail!("enwik8 profile needs vocab_size >= {BYTE_VOCAB}, config has {vocab}");
+    }
+    let key = format!("{}-{vocab}-{train_chars}", cfg.dataset);
+    let train_path = cache_dir().join(format!("{key}-train.bin"));
+    let valid_path = cache_dir().join(format!("{key}-valid.bin"));
+    let bpe_path = cache_dir().join(format!("{}-{vocab}-bpe.json", cfg.dataset));
+
+    if train_path.exists() && valid_path.exists() {
+        let bpe = if profile.byte_level() { None } else { Some(Bpe::load(&bpe_path)?) };
+        return Ok(Corpus {
+            train: read_tokens_bin(&train_path)?,
+            valid: read_tokens_bin(&valid_path)?,
+            bpe,
+            profile,
+        });
+    }
+
+    info(&format!("generating {key} corpus ({train_chars} chars)..."));
+    let train_docs = CorpusGen::new(profile, 1).generate_chars(train_chars);
+    let valid_docs = CorpusGen::new(profile, 2).generate_chars(valid_chars);
+
+    let (train, valid, bpe) = if profile.byte_level() {
+        let enc = |docs: &[String]| -> Vec<u32> {
+            let mut out = Vec::new();
+            for d in docs {
+                out.push(tokenizer::DOC);
+                out.extend(tokenizer::byte_encode(d));
+            }
+            out
+        };
+        (enc(&train_docs), enc(&valid_docs), None)
+    } else {
+        // Train BPE on a sample of the training corpus.
+        let sample: String = train_docs
+            .iter()
+            .take(train_docs.len().min(400))
+            .cloned()
+            .collect::<Vec<_>>()
+            .join("\n");
+        info(&format!("training BPE vocab={vocab} on {} chars...", sample.len()));
+        let bpe = Bpe::train(&sample, vocab);
+        bpe.save(&bpe_path)?;
+        let train = bpe.encode_docs(train_docs.iter().map(String::as_str));
+        let valid = bpe.encode_docs(valid_docs.iter().map(String::as_str));
+        (train, valid, Some(bpe))
+    };
+
+    // All ids must fit the model's embedding table.
+    debug_assert!(train.iter().all(|&t| (t as usize) < vocab));
+    write_tokens_bin(&train_path, &train)?;
+    write_tokens_bin(&valid_path, &valid)?;
+    info(&format!(
+        "corpus ready: {} train / {} valid tokens",
+        train.len(),
+        valid.len()
+    ));
+    Ok(Corpus { train, valid, bpe, profile })
+}
+
+/// Seeded RNG for task generation, derived from a run seed.
+pub fn task_rng(seed: u64, tag: u64) -> Pcg {
+    Pcg::new(seed, tag)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn corpus_roundtrips_cache() {
+        let cfg = ModelConfig::from_json(
+            &Json::parse(r#"{"name":"t","vocab_size":400,"dataset":"wt103"}"#).unwrap(),
+        )
+        .unwrap();
+        let c1 = corpus_for(&cfg, 60_000, 10_000).unwrap();
+        let c2 = corpus_for(&cfg, 60_000, 10_000).unwrap();
+        assert_eq!(c1.train, c2.train);
+        assert!(c1.train.len() > 5_000);
+        assert!(c1.train.iter().all(|&t| (t as usize) < 400));
+    }
+
+    #[test]
+    fn byte_profile_needs_big_vocab() {
+        let cfg = ModelConfig::from_json(
+            &Json::parse(r#"{"name":"t","vocab_size":128,"dataset":"enwik8"}"#).unwrap(),
+        )
+        .unwrap();
+        assert!(corpus_for(&cfg, 10_000, 1_000).is_err());
+    }
+}

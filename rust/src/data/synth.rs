@@ -1,0 +1,458 @@
+//! Procedural English-like corpus generator — the substitution for C4,
+//! Wikitext-103, peS2o and enwik8 (DESIGN.md §4; no internet / no
+//! proprietary datasets in this environment).
+//!
+//! Construction: a deterministic lexicon of syllable-built words split
+//! into part-of-speech classes, sampled with Zipf-Mandelbrot rank
+//! statistics, composed through a small phrase grammar with real
+//! agreement rules (plural subjects take bare verbs, singular subjects
+//! take -s forms). Documents get per-dataset structure:
+//!
+//! * `wt103`  — long encyclopedic articles with `= Heading =` lines;
+//! * `c4`     — short noisy web documents, varied lengths;
+//! * `pes2o`  — academic register: long sentences, citations, numerals;
+//! * `enwik8` — XML-ish markup around wt103-style text (byte-level).
+//!
+//! The grammar's agreement rules are what make the BLiMP-style zero-shot
+//! analog (data/zeroshot.rs) well-posed: a trained LM must prefer the
+//! grammatical member of a minimal pair for reasons that generalize.
+
+use crate::util::rng::{Pcg, Zipf};
+
+/// Part-of-speech classes of the lexicon.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pos {
+    Noun,
+    Verb,
+    Adj,
+    Adv,
+    Name,
+}
+
+/// A deterministic lexicon: same seed -> same words on any machine.
+pub struct Lexicon {
+    pub nouns: Vec<String>,
+    pub verbs: Vec<String>, // base form; 3sg adds "s"
+    pub adjs: Vec<String>,
+    pub advs: Vec<String>,
+    pub names: Vec<String>,
+    noun_zipf: Zipf,
+    verb_zipf: Zipf,
+    adj_zipf: Zipf,
+}
+
+const ONSETS: &[&str] = &[
+    "b", "br", "c", "cr", "d", "dr", "f", "fl", "g", "gr", "h", "j", "k", "l", "m", "n", "p",
+    "pl", "pr", "r", "s", "sl", "sp", "st", "t", "tr", "v", "w",
+];
+const NUCLEI: &[&str] = &["a", "e", "i", "o", "u", "ai", "ea", "ou", "or", "ar", "er", "in", "on"];
+const CODAS: &[&str] = &["", "n", "t", "l", "r", "s", "st", "nd", "m", "ck", "p"];
+
+fn make_word(rng: &mut Pcg, syllables: usize) -> String {
+    let mut w = String::new();
+    for _ in 0..syllables {
+        w.push_str(ONSETS[rng.below(ONSETS.len())]);
+        w.push_str(NUCLEI[rng.below(NUCLEI.len())]);
+    }
+    w.push_str(CODAS[rng.below(CODAS.len())]);
+    w
+}
+
+impl Lexicon {
+    pub fn new(seed: u64, richness: usize) -> Lexicon {
+        let mut rng = Pcg::new(seed, 0x1E81C0);
+        let mut unique = std::collections::BTreeSet::new();
+        let mut gen_class = |rng: &mut Pcg, n: usize, syl: (usize, usize)| -> Vec<String> {
+            let mut out = Vec::with_capacity(n);
+            while out.len() < n {
+                let s = syl.0 + rng.below(syl.1 - syl.0 + 1);
+                let w = make_word(rng, s);
+                if unique.insert(w.clone()) {
+                    out.push(w);
+                }
+            }
+            out
+        };
+        let nouns = gen_class(&mut rng, richness, (1, 3));
+        let verbs = gen_class(&mut rng, richness / 2, (1, 2));
+        let adjs = gen_class(&mut rng, richness / 2, (1, 3));
+        let advs = gen_class(&mut rng, richness / 4, (2, 3));
+        let mut names = gen_class(&mut rng, richness / 4, (2, 3));
+        for n in names.iter_mut() {
+            // capitalize
+            let mut c = n.chars();
+            *n = match c.next() {
+                Some(f) => f.to_uppercase().collect::<String>() + c.as_str(),
+                None => String::new(),
+            };
+        }
+        Lexicon {
+            noun_zipf: Zipf::new(nouns.len(), 1.05, 2.7),
+            verb_zipf: Zipf::new(verbs.len(), 1.1, 2.7),
+            adj_zipf: Zipf::new(adjs.len(), 1.1, 2.7),
+            nouns,
+            verbs,
+            adjs,
+            advs,
+            names,
+        }
+    }
+
+    pub fn noun(&self, rng: &mut Pcg) -> &str {
+        &self.nouns[self.noun_zipf.sample(rng)]
+    }
+
+    pub fn verb(&self, rng: &mut Pcg) -> &str {
+        &self.verbs[self.verb_zipf.sample(rng)]
+    }
+
+    pub fn adj(&self, rng: &mut Pcg) -> &str {
+        &self.adjs[self.adj_zipf.sample(rng)]
+    }
+
+    pub fn adv(&self, rng: &mut Pcg) -> &str {
+        &self.advs[rng.below(self.advs.len())]
+    }
+
+    pub fn name(&self, rng: &mut Pcg) -> &str {
+        &self.names[rng.below(self.names.len())]
+    }
+}
+
+/// Grammatical number, for agreement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Number {
+    Sg,
+    Pl,
+}
+
+/// Inflect a noun/verb pair with agreement. English-like: plural noun
+/// takes "s"; 3sg verb takes "s".
+pub fn inflect_noun(noun: &str, n: Number) -> String {
+    match n {
+        Number::Sg => noun.to_string(),
+        Number::Pl => format!("{noun}s"),
+    }
+}
+
+pub fn inflect_verb(verb: &str, n: Number) -> String {
+    match n {
+        Number::Sg => format!("{verb}s"),
+        Number::Pl => verb.to_string(),
+    }
+}
+
+pub fn determiner(n: Number, rng: &mut Pcg) -> &'static str {
+    match n {
+        Number::Sg => ["the", "a", "this", "that"][rng.below(4)],
+        Number::Pl => ["the", "these", "those", "some"][rng.below(4)],
+    }
+}
+
+/// A noun phrase with its number (for subject-verb agreement).
+pub fn noun_phrase(lex: &Lexicon, rng: &mut Pcg, out: &mut String) -> Number {
+    let n = if rng.coin(0.5) { Number::Sg } else { Number::Pl };
+    out.push_str(determiner(n, rng));
+    out.push(' ');
+    if rng.coin(0.35) {
+        out.push_str(lex.adj(rng));
+        out.push(' ');
+    }
+    out.push_str(&inflect_noun(lex.noun(rng), n));
+    // optional PP attachment
+    if rng.coin(0.2) {
+        out.push(' ');
+        out.push_str(["of", "near", "under", "with"][rng.below(4)]);
+        out.push(' ');
+        let n2 = if rng.coin(0.5) { Number::Sg } else { Number::Pl };
+        out.push_str(determiner(n2, rng));
+        out.push(' ');
+        out.push_str(&inflect_noun(lex.noun(rng), n2));
+    }
+    n
+}
+
+/// One grammatical sentence. Exposed for zeroshot.rs minimal pairs.
+pub fn sentence(lex: &Lexicon, rng: &mut Pcg) -> String {
+    sentence_with(lex, rng, None)
+}
+
+/// Sentence with an optional protagonist: when set, name-subject
+/// sentences reuse that name. Documents with a recurring protagonist are
+/// what make the Lambada-style task (and induction heads, paper Fig. 6)
+/// learnable from this corpus.
+pub fn sentence_with(lex: &Lexicon, rng: &mut Pcg, protagonist: Option<&str>) -> String {
+    let mut s = String::new();
+    let subj_n = if rng.coin(0.2) {
+        match protagonist {
+            Some(name) => s.push_str(name),
+            None => s.push_str(lex.name(rng)),
+        }
+        Number::Sg
+    } else {
+        noun_phrase(lex, rng, &mut s)
+    };
+    s.push(' ');
+    if rng.coin(0.25) {
+        s.push_str(lex.adv(rng));
+        s.push(' ');
+    }
+    s.push_str(&inflect_verb(lex.verb(rng), subj_n));
+    if rng.coin(0.75) {
+        s.push(' ');
+        noun_phrase(lex, rng, &mut s);
+    }
+    if rng.coin(0.3) {
+        s.push_str(" and ");
+        let n2 = noun_phrase(lex, rng, &mut s);
+        s.push(' ');
+        s.push_str(&inflect_verb(lex.verb(rng), n2));
+    }
+    s.push_str(" .");
+    s
+}
+
+/// Dataset profile: which corpus the generator imitates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Profile {
+    Wt103,
+    C4,
+    Pes2o,
+    Enwik8,
+}
+
+impl Profile {
+    pub fn parse(s: &str) -> Option<Profile> {
+        Some(match s {
+            "wt103" | "wikitext103" => Profile::Wt103,
+            "c4" => Profile::C4,
+            "pes2o" | "peS2o" => Profile::Pes2o,
+            "enwik8" => Profile::Enwik8,
+            _ => return None,
+        })
+    }
+
+    pub fn byte_level(&self) -> bool {
+        matches!(self, Profile::Enwik8)
+    }
+
+    fn lexicon_richness(&self) -> usize {
+        match self {
+            Profile::C4 => 4000,
+            Profile::Wt103 => 3000,
+            Profile::Pes2o => 5000,
+            Profile::Enwik8 => 2500,
+        }
+    }
+}
+
+pub struct CorpusGen {
+    pub profile: Profile,
+    lex: Lexicon,
+    rng: Pcg,
+}
+
+impl CorpusGen {
+    pub fn new(profile: Profile, seed: u64) -> CorpusGen {
+        // The lexicon seed is fixed per profile so train/val/zero-shot
+        // draws share one vocabulary distribution.
+        let lex_seed = match profile {
+            Profile::Wt103 => 101,
+            Profile::C4 => 202,
+            Profile::Pes2o => 303,
+            Profile::Enwik8 => 404,
+        };
+        CorpusGen {
+            profile,
+            lex: Lexicon::new(lex_seed, profile.lexicon_richness()),
+            rng: Pcg::new(seed, profile as u64 + 77),
+        }
+    }
+
+    pub fn lexicon(&self) -> &Lexicon {
+        &self.lex
+    }
+
+    fn paragraph(&mut self, sentences: usize) -> String {
+        // Half the documents carry a recurring protagonist name.
+        let protagonist = if self.rng.coin(0.5) {
+            Some(self.lex.names[self.rng.below(self.lex.names.len())].clone())
+        } else {
+            None
+        };
+        let mut p = String::new();
+        for i in 0..sentences {
+            if i > 0 {
+                p.push(' ');
+            }
+            p.push_str(&sentence_with(&self.lex, &mut self.rng, protagonist.as_deref()));
+        }
+        p
+    }
+
+    fn citation(&mut self) -> String {
+        let year = 1990 + self.rng.below(35);
+        format!("( {} et al. , {year} )", self.lex.name(&mut self.rng))
+    }
+
+    /// Produce the next document.
+    pub fn next_doc(&mut self) -> String {
+        match self.profile {
+            Profile::Wt103 => {
+                let mut doc = format!(
+                    "= {} {} =\n\n",
+                    self.lex.name(&mut self.rng),
+                    self.lex.noun(&mut self.rng)
+                );
+                let sections = 1 + self.rng.below(3);
+                for _ in 0..sections {
+                    if self.rng.coin(0.5) {
+                        doc.push_str(&format!(
+                            "= = {} = =\n\n",
+                            self.lex.noun(&mut self.rng)
+                        ));
+                    }
+                    let paras = 1 + self.rng.below(3);
+                    for _ in 0..paras {
+                        let s = 3 + self.rng.below(6);
+                        doc.push_str(&self.paragraph(s));
+                        doc.push_str("\n\n");
+                    }
+                }
+                doc
+            }
+            Profile::C4 => {
+                let paras = 1 + self.rng.below(4);
+                let mut doc = String::new();
+                for _ in 0..paras {
+                    let s = 1 + self.rng.below(5);
+                    doc.push_str(&self.paragraph(s));
+                    doc.push('\n');
+                }
+                if self.rng.coin(0.2) {
+                    doc.push_str(&format!(
+                        "visit www . {} . com for more\n",
+                        self.lex.noun(&mut self.rng)
+                    ));
+                }
+                doc
+            }
+            Profile::Pes2o => {
+                let mut doc = format!(
+                    "Abstract . {}\n\n",
+                    { let n = 2 + self.rng.below(2); self.paragraph(n) }
+                );
+                let sections = 2 + self.rng.below(3);
+                for sec in 0..sections {
+                    doc.push_str(&format!("{} . ", sec + 1));
+                    let n_body = 4 + self.rng.below(4);
+                    let mut body = self.paragraph(n_body);
+                    if self.rng.coin(0.8) {
+                        let cite = self.citation();
+                        body.push(' ');
+                        body.push_str(&cite);
+                        body.push_str(" .");
+                    }
+                    if self.rng.coin(0.4) {
+                        body.push_str(&format!(
+                            " p = 0 . {:03} .",
+                            self.rng.below(100)
+                        ));
+                    }
+                    doc.push_str(&body);
+                    doc.push_str("\n\n");
+                }
+                doc
+            }
+            Profile::Enwik8 => {
+                let title = format!(
+                    "{} {}",
+                    self.lex.name(&mut self.rng),
+                    self.lex.noun(&mut self.rng)
+                );
+                let mut body = String::new();
+                let paras = 1 + self.rng.below(3);
+                for _ in 0..paras {
+                    let n_p = 2 + self.rng.below(4);
+                    body.push_str(&self.paragraph(n_p));
+                    body.push('\n');
+                }
+                format!(
+                    "<page>\n  <title>{title}</title>\n  <id>{}</id>\n  <text>[[{}]] {body}</text>\n</page>\n",
+                    self.rng.below(1_000_000),
+                    self.lex.noun(&mut self.rng),
+                )
+            }
+        }
+    }
+
+    /// Generate at least `min_chars` of corpus text.
+    pub fn generate_chars(&mut self, min_chars: usize) -> Vec<String> {
+        let mut docs = Vec::new();
+        let mut total = 0;
+        while total < min_chars {
+            let d = self.next_doc();
+            total += d.len();
+            docs.push(d);
+        }
+        docs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_corpus() {
+        let d1: Vec<String> = CorpusGen::new(Profile::Wt103, 7).generate_chars(10_000);
+        let d2: Vec<String> = CorpusGen::new(Profile::Wt103, 7).generate_chars(10_000);
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let d1 = CorpusGen::new(Profile::C4, 1).next_doc();
+        let d2 = CorpusGen::new(Profile::C4, 2).next_doc();
+        assert_ne!(d1, d2);
+    }
+
+    #[test]
+    fn profiles_have_signatures() {
+        let wt = CorpusGen::new(Profile::Wt103, 3).generate_chars(20_000).join("");
+        assert!(wt.contains("= "), "wt103 has headings");
+        let pes = CorpusGen::new(Profile::Pes2o, 3).generate_chars(20_000).join("");
+        assert!(pes.contains("et al."), "pes2o has citations");
+        assert!(pes.contains("Abstract"), "pes2o has abstracts");
+        let ew = CorpusGen::new(Profile::Enwik8, 3).next_doc();
+        assert!(ew.contains("<page>") && ew.contains("</text>"), "enwik8 is markup");
+    }
+
+    #[test]
+    fn agreement_holds_in_generated_sentences() {
+        // Plural subject must not co-occur with 3sg verb inflection:
+        // check "the <noun>s <verb>s" never appears via the generator's
+        // own agreement logic (structural test on inflect helpers).
+        assert_eq!(inflect_verb("run", Number::Pl), "run");
+        assert_eq!(inflect_verb("run", Number::Sg), "runs");
+        assert_eq!(inflect_noun("cat", Number::Pl), "cats");
+    }
+
+    #[test]
+    fn sentences_end_with_period() {
+        let lex = Lexicon::new(5, 500);
+        let mut rng = Pcg::new(9, 9);
+        for _ in 0..50 {
+            let s = sentence(&lex, &mut rng);
+            assert!(s.ends_with(" ."), "{s}");
+            assert!(s.split_whitespace().count() >= 3);
+        }
+    }
+
+    #[test]
+    fn lexicon_classes_disjoint() {
+        let lex = Lexicon::new(5, 500);
+        let nouns: std::collections::BTreeSet<_> = lex.nouns.iter().collect();
+        assert!(lex.verbs.iter().all(|v| !nouns.contains(v)));
+    }
+}

@@ -1,0 +1,356 @@
+//! Subword tokenizer: byte-pair encoding trained in-repo.
+//!
+//! Substitution note (DESIGN.md §4): the paper uses SentencePiece unigram
+//! with an 8k vocabulary; the offline environment has no SentencePiece,
+//! so we implement classic BPE (Sennrich et al. 2016 — reference [29] of
+//! the paper) with whitespace pre-segmentation. The attention-layer
+//! comparison is insensitive to the subword algorithm; what matters is
+//! that all models share the same tokenization, which they do.
+//!
+//! Special ids: 0 = <pad>, 1 = <unk>, 2 = <doc> (document separator).
+//! Word-initial pieces carry a leading '\u{2581}' marker (SentencePiece
+//! convention) so decoding is lossless w.r.t. single spaces.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+pub const PAD: u32 = 0;
+pub const UNK: u32 = 1;
+pub const DOC: u32 = 2;
+pub const N_SPECIAL: u32 = 3;
+const MARK: char = '\u{2581}'; // word-initial marker
+
+#[derive(Debug, Clone)]
+pub struct Bpe {
+    /// piece string -> id
+    pub vocab: BTreeMap<String, u32>,
+    /// id -> piece string
+    pub pieces: Vec<String>,
+    /// merge (left, right) -> rank
+    merges: HashMap<(String, String), usize>,
+}
+
+impl Bpe {
+    /// Train BPE on `text` to roughly `vocab_size` total ids.
+    pub fn train(text: &str, vocab_size: usize) -> Bpe {
+        assert!(vocab_size > 300, "vocab must exceed byte alphabet + specials");
+        // Word frequency table over pre-segmented words.
+        let mut word_freq: HashMap<Vec<String>, u64> = HashMap::new();
+        for word in segment(text) {
+            *word_freq.entry(to_symbols(&word)).or_insert(0) += 1;
+        }
+        let mut words: Vec<(Vec<String>, u64)> = word_freq.into_iter().collect();
+        words.sort(); // determinism
+
+        // Base alphabet.
+        let mut pieces: Vec<String> = vec!["<pad>".into(), "<unk>".into(), "<doc>".into()];
+        let mut seen: BTreeMap<String, u32> = BTreeMap::new();
+        for (sym, _) in words.iter().flat_map(|(w, f)| w.iter().map(move |s| (s, f))) {
+            if !seen.contains_key(sym) {
+                seen.insert(sym.clone(), 0);
+            }
+        }
+        for sym in seen.keys() {
+            pieces.push(sym.clone());
+        }
+
+        let mut merges: HashMap<(String, String), usize> = HashMap::new();
+        while pieces.len() < vocab_size {
+            // Count adjacent pairs across word types weighted by frequency.
+            let mut pair_counts: HashMap<(String, String), u64> = HashMap::new();
+            for (word, freq) in &words {
+                for pair in word.windows(2) {
+                    *pair_counts
+                        .entry((pair[0].clone(), pair[1].clone()))
+                        .or_insert(0) += freq;
+                }
+            }
+            // Deterministic argmax: by count, then lexicographic.
+            let best = pair_counts.into_iter().max_by(
+                |a, b| a.1.cmp(&b.1).then_with(|| b.0.cmp(&a.0)),
+            );
+            let Some(((left, right), count)) = best else { break };
+            if count < 2 {
+                break;
+            }
+            let merged = format!("{left}{right}");
+            merges.insert((left.clone(), right.clone()), merges.len());
+            pieces.push(merged.clone());
+            // Apply the merge to every word type.
+            for (word, _) in words.iter_mut() {
+                let mut i = 0;
+                while i + 1 < word.len() {
+                    if word[i] == left && word[i + 1] == right {
+                        word[i] = merged.clone();
+                        word.remove(i + 1);
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+        }
+
+        let vocab: BTreeMap<String, u32> =
+            pieces.iter().enumerate().map(|(i, p)| (p.clone(), i as u32)).collect();
+        Bpe { vocab, pieces, merges }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.pieces.len()
+    }
+
+    /// Encode text to ids (documents should be joined with '\n\n' and
+    /// encoded per document; `encode_docs` adds <doc> separators).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::with_capacity(text.len() / 3);
+        for word in segment(text) {
+            let mut symbols = to_symbols(&word);
+            // Greedy lowest-rank merge application.
+            loop {
+                let mut best: Option<(usize, usize)> = None; // (rank, pos)
+                for i in 0..symbols.len().saturating_sub(1) {
+                    if let Some(&rank) =
+                        self.merges.get(&(symbols[i].clone(), symbols[i + 1].clone()))
+                    {
+                        if best.map_or(true, |(r, _)| rank < r) {
+                            best = Some((rank, i));
+                        }
+                    }
+                }
+                let Some((_, i)) = best else { break };
+                let merged = format!("{}{}", symbols[i], symbols[i + 1]);
+                symbols[i] = merged;
+                symbols.remove(i + 1);
+            }
+            for s in &symbols {
+                out.push(*self.vocab.get(s).unwrap_or(&UNK));
+            }
+        }
+        out
+    }
+
+    /// Encode multiple documents with <doc> separators between them.
+    pub fn encode_docs<'a>(&self, docs: impl Iterator<Item = &'a str>) -> Vec<u32> {
+        let mut out = Vec::new();
+        for doc in docs {
+            out.push(DOC);
+            out.extend(self.encode(doc));
+        }
+        out
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut s = String::new();
+        for &id in ids {
+            match id {
+                PAD | DOC => {}
+                UNK => s.push('\u{fffd}'),
+                _ => {
+                    if let Some(piece) = self.pieces.get(id as usize) {
+                        for c in piece.chars() {
+                            if c == MARK {
+                                if !s.is_empty() {
+                                    s.push(' ');
+                                }
+                            } else {
+                                s.push(c);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        s
+    }
+
+    // ----- persistence -----
+
+    pub fn to_json(&self) -> Json {
+        let mut merges: Vec<(usize, String, String)> = self
+            .merges
+            .iter()
+            .map(|((l, r), rank)| (*rank, l.clone(), r.clone()))
+            .collect();
+        merges.sort();
+        Json::from_pairs(vec![
+            (
+                "pieces",
+                Json::Arr(self.pieces.iter().map(|p| Json::Str(p.clone())).collect()),
+            ),
+            (
+                "merges",
+                Json::Arr(
+                    merges
+                        .into_iter()
+                        .map(|(_, l, r)| Json::Arr(vec![Json::Str(l), Json::Str(r)]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Bpe> {
+        let pieces: Vec<String> = j
+            .req("pieces")?
+            .as_arr()?
+            .iter()
+            .map(|p| p.as_str().map(str::to_string))
+            .collect::<Result<_>>()?;
+        let mut merges = HashMap::new();
+        for (rank, m) in j.req("merges")?.as_arr()?.iter().enumerate() {
+            let pair = m.as_arr()?;
+            merges.insert(
+                (pair[0].as_str()?.to_string(), pair[1].as_str()?.to_string()),
+                rank,
+            );
+        }
+        let vocab =
+            pieces.iter().enumerate().map(|(i, p)| (p.clone(), i as u32)).collect();
+        Ok(Bpe { vocab, pieces, merges })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Bpe> {
+        Bpe::from_json(&Json::parse_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )?)
+    }
+}
+
+/// Whitespace pre-segmentation: words keep a word-initial marker;
+/// punctuation splits into its own tokens.
+fn segment(text: &str) -> Vec<String> {
+    let mut words = Vec::new();
+    for raw in text.split_whitespace() {
+        let mut current = String::new();
+        let mut first = true;
+        for c in raw.chars() {
+            if c.is_alphanumeric() {
+                if current.is_empty() && first {
+                    current.push(MARK);
+                }
+                current.push(c);
+            } else {
+                if !current.is_empty() {
+                    words.push(std::mem::take(&mut current));
+                }
+                // punctuation as standalone token (word-initial if first)
+                let mut p = String::new();
+                if first {
+                    p.push(MARK);
+                }
+                p.push(c);
+                words.push(p);
+                first = false;
+                continue;
+            }
+            first = false;
+        }
+        if !current.is_empty() {
+            words.push(current);
+        }
+    }
+    words
+}
+
+fn to_symbols(word: &str) -> Vec<String> {
+    word.chars().map(|c| c.to_string()).collect()
+}
+
+/// Byte-level "tokenizer" for the enwik8-style profile: ids are byte
+/// values shifted past the special ids.
+pub fn byte_encode(text: &str) -> Vec<u32> {
+    text.bytes().map(|b| b as u32 + N_SPECIAL).collect()
+}
+
+pub fn byte_decode(ids: &[u32]) -> String {
+    let bytes: Vec<u8> = ids
+        .iter()
+        .filter(|&&id| id >= N_SPECIAL)
+        .map(|&id| (id - N_SPECIAL) as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+pub const BYTE_VOCAB: usize = 256 + N_SPECIAL as usize;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "the cat sat on the mat . the dog sat on the log , \
+        cats and dogs sat together . the cat and the dog met , on the mat .";
+
+    #[test]
+    fn train_encode_decode_roundtrip() {
+        let bpe = Bpe::train(SAMPLE, 360);
+        let ids = bpe.encode("the cat sat on the mat .");
+        assert!(!ids.is_empty());
+        let text = bpe.decode(&ids);
+        assert_eq!(text, "the cat sat on the mat .");
+    }
+
+    #[test]
+    fn frequent_words_become_single_pieces() {
+        let bpe = Bpe::train(SAMPLE, 400);
+        let ids = bpe.encode("the");
+        assert_eq!(ids.len(), 1, "'the' should be one piece, got {ids:?}");
+    }
+
+    #[test]
+    fn unknown_chars_map_to_unk() {
+        let bpe = Bpe::train(SAMPLE, 360);
+        // '日' is not in the training alphabet; its symbol must map to
+        // <unk> (the word-initial marker itself is a known symbol).
+        let ids = bpe.encode("日");
+        assert!(ids.contains(&UNK));
+        assert!(!bpe.decode(&ids).contains('日'));
+    }
+
+    #[test]
+    fn save_load_preserves_encoding() {
+        let bpe = Bpe::train(SAMPLE, 360);
+        let dir = std::env::temp_dir().join("switchhead-bpetest");
+        let path = dir.join("bpe.json");
+        bpe.save(&path).unwrap();
+        let bpe2 = Bpe::load(&path).unwrap();
+        let text = "dogs sat on the log .";
+        assert_eq!(bpe.encode(text), bpe2.encode(text));
+    }
+
+    #[test]
+    fn doc_separator() {
+        let bpe = Bpe::train(SAMPLE, 360);
+        let docs = ["the cat", "the dog"];
+        let ids = bpe.encode_docs(docs.iter().copied());
+        assert_eq!(ids.iter().filter(|&&i| i == DOC).count(), 2);
+        assert_eq!(ids[0], DOC);
+    }
+
+    #[test]
+    fn byte_roundtrip() {
+        let text = "Hello <tag>!";
+        assert_eq!(byte_decode(&byte_encode(text)), text);
+    }
+
+    #[test]
+    fn punctuation_splits() {
+        let bpe = Bpe::train(SAMPLE, 360);
+        let dec = bpe.decode(&bpe.encode("cat, dog."));
+        // punctuation becomes separate tokens, preserving content chars
+        assert!(dec.contains("cat"));
+        assert!(dec.contains(','));
+        assert!(dec.contains('.'));
+    }
+}

@@ -1,0 +1,258 @@
+//! Zero-shot downstream task analogs (DESIGN.md §4 substitutions for
+//! Lambada, BLiMP and the Children's Book Test, paper §3.3 / Table 4).
+//!
+//! All three are generated from the SAME lexicon and grammar as the
+//! training corpus, so a language model trained on the synthetic corpus
+//! faces exactly the generalization the real benchmarks probe:
+//!
+//! * Lambada analog — predict a document-final word that is only
+//!   determined by long-range context (the recurring protagonist name).
+//! * BLiMP analog — minimal grammatical pairs; the model should assign
+//!   higher likelihood to the grammatical member. Three phenomena:
+//!   subject-verb agreement, determiner-noun agreement, word order.
+//! * CBT analog — 10-way cloze over a noun removed from a query
+//!   sentence whose answer appears in the passage.
+//!
+//! Scoring uses the `score` entry point (per-position next-token
+//! log-probabilities) through `coordinator::scorer`.
+
+use crate::util::rng::Pcg;
+
+use super::synth::{
+    determiner, inflect_noun, inflect_verb, noun_phrase, sentence_with, Lexicon, Number,
+};
+
+/// A multiple-choice continuation task: pick the candidate whose tokens
+/// maximize log p(candidate | context).
+#[derive(Debug, Clone)]
+pub struct ChoiceTask {
+    pub context: String,
+    pub candidates: Vec<String>,
+    pub answer: usize,
+}
+
+/// A likelihood-comparison pair: grammatical vs ungrammatical sentence.
+#[derive(Debug, Clone)]
+pub struct MinimalPair {
+    pub good: String,
+    pub bad: String,
+    pub phenomenon: &'static str,
+}
+
+// ---------------------------------------------------------------------------
+// Lambada analog
+// ---------------------------------------------------------------------------
+
+/// Passage with a recurring protagonist; the final token is the
+/// protagonist's name and candidates are other names.
+pub fn gen_lambada(lex: &Lexicon, rng: &mut Pcg, n_candidates: usize) -> ChoiceTask {
+    let protagonist_idx = rng.below(lex.names.len());
+    let protagonist = lex.names[protagonist_idx].clone();
+    let mut ctx = String::new();
+    // Guarantee the protagonist is established: the opening sentence
+    // always has them as subject (sentence_with only uses the
+    // protagonist probabilistically for the rest).
+    ctx.push_str(&protagonist);
+    ctx.push(' ');
+    ctx.push_str(&inflect_verb(lex.verb(rng), Number::Sg));
+    ctx.push(' ');
+    noun_phrase(lex, rng, &mut ctx);
+    ctx.push_str(" . ");
+    let n_sent = 3 + rng.below(3);
+    for _ in 0..n_sent {
+        ctx.push_str(&sentence_with(lex, rng, Some(&protagonist)));
+        ctx.push(' ');
+    }
+    // Final sentence sets up the name slot.
+    ctx.push_str("in the end everyone saw");
+
+    let mut candidates = vec![protagonist];
+    while candidates.len() < n_candidates {
+        let other = &lex.names[rng.below(lex.names.len())];
+        if !candidates.iter().any(|c| c == other) {
+            candidates.push(other.clone());
+        }
+    }
+    // Shuffle, tracking the answer.
+    let mut order: Vec<usize> = (0..candidates.len()).collect();
+    rng.shuffle(&mut order);
+    let answer = order.iter().position(|&i| i == 0).unwrap();
+    let candidates = order.into_iter().map(|i| candidates[i].clone()).collect();
+    ChoiceTask { context: ctx, candidates, answer }
+}
+
+// ---------------------------------------------------------------------------
+// BLiMP analog
+// ---------------------------------------------------------------------------
+
+fn swap_number(n: Number) -> Number {
+    match n {
+        Number::Sg => Number::Pl,
+        Number::Pl => Number::Sg,
+    }
+}
+
+/// Subject-verb agreement: "the cats run ." vs "the cats runs ."
+fn pair_subj_verb(lex: &Lexicon, rng: &mut Pcg) -> MinimalPair {
+    let n = if rng.coin(0.5) { Number::Sg } else { Number::Pl };
+    let det = determiner(n, rng);
+    let noun = inflect_noun(lex.noun(rng), n);
+    let verb = lex.verb(rng);
+    let mut obj = String::new();
+    noun_phrase(lex, rng, &mut obj);
+    MinimalPair {
+        good: format!("{det} {noun} {} {obj} .", inflect_verb(verb, n)),
+        bad: format!("{det} {noun} {} {obj} .", inflect_verb(verb, swap_number(n))),
+        phenomenon: "subject_verb_agreement",
+    }
+}
+
+/// Determiner-noun agreement: "these cats" vs "this cats".
+fn pair_det_noun(lex: &Lexicon, rng: &mut Pcg) -> MinimalPair {
+    let n = if rng.coin(0.5) { Number::Sg } else { Number::Pl };
+    let (good_det, bad_det) = match n {
+        Number::Sg => ("this", "these"),
+        Number::Pl => ("these", "this"),
+    };
+    let noun = inflect_noun(lex.noun(rng), n);
+    let verb = inflect_verb(lex.verb(rng), n);
+    MinimalPair {
+        good: format!("{good_det} {noun} {verb} ."),
+        bad: format!("{bad_det} {noun} {verb} ."),
+        phenomenon: "determiner_noun_agreement",
+    }
+}
+
+/// Word order: subject-verb vs verb-before-determiner scramble.
+fn pair_word_order(lex: &Lexicon, rng: &mut Pcg) -> MinimalPair {
+    let n = if rng.coin(0.5) { Number::Sg } else { Number::Pl };
+    let det = determiner(n, rng);
+    let noun = inflect_noun(lex.noun(rng), n);
+    let verb = inflect_verb(lex.verb(rng), n);
+    let adj = lex.adj(rng);
+    MinimalPair {
+        good: format!("{det} {adj} {noun} {verb} ."),
+        bad: format!("{det} {noun} {adj} {verb} ."),
+        phenomenon: "adjective_order",
+    }
+}
+
+pub fn gen_blimp(lex: &Lexicon, rng: &mut Pcg) -> MinimalPair {
+    match rng.below(3) {
+        0 => pair_subj_verb(lex, rng),
+        1 => pair_det_noun(lex, rng),
+        _ => pair_word_order(lex, rng),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CBT analog
+// ---------------------------------------------------------------------------
+
+/// Passage; the query repeats one passage sentence with its head noun
+/// blanked; 10 candidates are nouns (answer + distractors).
+pub fn gen_cbt(lex: &Lexicon, rng: &mut Pcg, n_candidates: usize) -> ChoiceTask {
+    let n = if rng.coin(0.5) { Number::Sg } else { Number::Pl };
+    let det = determiner(n, rng);
+    let ans_base = lex.noun(rng).to_string();
+    let answer_word = inflect_noun(&ans_base, n);
+    let verb = inflect_verb(lex.verb(rng), n);
+    let key_sentence = format!("{det} {answer_word} {verb} .");
+
+    let mut ctx = String::new();
+    let before = 1 + rng.below(3);
+    for _ in 0..before {
+        ctx.push_str(&sentence_with(lex, rng, None));
+        ctx.push(' ');
+    }
+    ctx.push_str(&key_sentence);
+    ctx.push(' ');
+    let after = 1 + rng.below(2);
+    for _ in 0..after {
+        ctx.push_str(&sentence_with(lex, rng, None));
+        ctx.push(' ');
+    }
+    // Query repeats the key sentence up to the blank.
+    ctx.push_str(&format!("{det}"));
+
+    let mut candidates = vec![answer_word];
+    while candidates.len() < n_candidates {
+        let d = inflect_noun(lex.noun(rng), n);
+        if !candidates.iter().any(|c| c == &d) {
+            candidates.push(d);
+        }
+    }
+    let mut order: Vec<usize> = (0..candidates.len()).collect();
+    rng.shuffle(&mut order);
+    let answer = order.iter().position(|&i| i == 0).unwrap();
+    let candidates: Vec<String> = order.into_iter().map(|i| candidates[i].clone()).collect();
+    // Candidates are scored as "<candidate> <verb> ." continuations.
+    ChoiceTask { context: ctx, candidates, answer }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lex() -> Lexicon {
+        Lexicon::new(101, 1000)
+    }
+
+    #[test]
+    fn lambada_answer_is_protagonist() {
+        let lex = lex();
+        let mut rng = Pcg::new(1, 1);
+        for _ in 0..20 {
+            let t = gen_lambada(&lex, &mut rng, 5);
+            assert_eq!(t.candidates.len(), 5);
+            let answer = &t.candidates[t.answer];
+            // The protagonist occurs in the context; distractors don't.
+            assert!(
+                t.context.contains(answer.as_str()),
+                "answer '{answer}' not in context '{}'",
+                t.context
+            );
+            for (i, c) in t.candidates.iter().enumerate() {
+                if i != t.answer {
+                    assert!(!t.context.contains(c.as_str()), "distractor '{c}' leaked");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blimp_pairs_differ_minimally() {
+        let lex = lex();
+        let mut rng = Pcg::new(2, 2);
+        for _ in 0..30 {
+            let p = gen_blimp(&lex, &mut rng);
+            assert_ne!(p.good, p.bad, "{}", p.phenomenon);
+            let gw: Vec<&str> = p.good.split(' ').collect();
+            let bw: Vec<&str> = p.bad.split(' ').collect();
+            assert_eq!(gw.len(), bw.len(), "pairs must be length-matched in words");
+        }
+    }
+
+    #[test]
+    fn cbt_answer_in_context() {
+        let lex = lex();
+        let mut rng = Pcg::new(3, 3);
+        for _ in 0..20 {
+            let t = gen_cbt(&lex, &mut rng, 10);
+            assert_eq!(t.candidates.len(), 10);
+            let answer = &t.candidates[t.answer];
+            assert!(t.context.contains(answer.as_str()));
+        }
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let lex = lex();
+        let mut r1 = Pcg::new(9, 1);
+        let mut r2 = Pcg::new(9, 1);
+        let a = gen_lambada(&lex, &mut r1, 5);
+        let b = gen_lambada(&lex, &mut r2, 5);
+        assert_eq!(a.context, b.context);
+        assert_eq!(a.answer, b.answer);
+    }
+}

@@ -1,0 +1,28 @@
+//! SwitchHead: Mixture-of-Experts attention (Csordás et al., NeurIPS 2024)
+//! — full-system reproduction as a three-layer Rust + JAX + Pallas stack.
+//!
+//! * L1/L2 (Python, build-time only): Pallas σ-MoE kernels and the JAX
+//!   model zoo, AOT-lowered to HLO text by `python/compile/aot.py`.
+//! * Runtime: [`runtime`] loads the artifacts through the PJRT CPU
+//!   client and chains the device-resident flat training-state buffer.
+//! * L3 (this crate): configuration, data pipeline, training
+//!   coordinator, analytic MAC/memory accounting, evaluation and
+//!   zero-shot harnesses, analysis tooling and the bench drivers.
+//!
+//! See DESIGN.md for the system inventory and experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod macs;
+pub mod runtime;
+pub mod util;
+
+/// Repo-relative default locations (overridable via CLI flags).
+pub mod paths {
+    pub const ARTIFACTS: &str = "artifacts";
+    pub const CONFIGS: &str = "configs";
+    pub const RUNS: &str = "runs";
+}

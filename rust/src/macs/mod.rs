@@ -1,0 +1,297 @@
+//! Analytic MAC / memory accounting — the paper's Eqs. 11-15 (A.2),
+//! implemented literally: per attention layer, per sequence, counting
+//! multiply-accumulate operations and stored floats for the backward
+//! pass. This is the machinery behind the MACs/Mem columns of Tables
+//! 1, 2, 3 and 7, and is cross-checked against the Python twin
+//! (`python/compile/macs.py`) through the manifest in integration tests.
+//!
+//! Also provides exact parameter counting for every family and the
+//! paper's §3 parameter-matching procedure (solve d_ff, or d_head, so a
+//! candidate matches a dense baseline's budget).
+
+use crate::config::{Family, MlpType, ModelConfig, Positional, Task};
+
+/// MACs and activation memory (floats) of ONE attention layer for ONE
+/// sequence.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AttnCost {
+    pub macs: f64,
+    pub mem_floats: f64,
+}
+
+/// Eq. 11-15, dispatched on the attention family.
+pub fn attention_cost(cfg: &ModelConfig) -> AttnCost {
+    let t = cfg.seq_len as f64;
+    let dh = cfg.d_head as f64;
+    let dm = cfg.d_model as f64;
+    let c = cfg.pos.context_multiple() as f64;
+    // XL position-projection term exists only for the XL scheme.
+    let pos = if cfg.pos == Positional::Xl { 1.0 } else { 0.0 };
+
+    match cfg.family {
+        Family::Dense => {
+            let nh = cfg.n_heads as f64;
+            AttnCost {
+                // Eq. 11
+                macs: nh * (4.0 * t * dh * dm + 2.0 * c * t * t * dh + pos * 2.0 * c * t * dh * dm),
+                // Eq. 12
+                mem_floats: nh * (4.0 * t * dh + 2.0 * c * t * t + pos * 2.0 * c * t * dh),
+            }
+        }
+        Family::SwitchHead => {
+            let nh = cfg.n_heads as f64;
+            let k = cfg.att_k as f64;
+            AttnCost {
+                // Eq. 13: two dense projections (K, Q), two k-expert MoE
+                // projections (V, O), attention core, position projection.
+                macs: nh
+                    * (2.0 * t * dh * dm
+                        + 2.0 * t * k * dh * (dm + 1.0)
+                        + 2.0 * c * t * t * dh
+                        + pos * 2.0 * c * t * dh * dm),
+                // Memory matches Eq. 12 with SwitchHead's own nh/dh (the
+                // smart kernel makes memory independent of k, paper A.2).
+                mem_floats: nh * (4.0 * t * dh + 2.0 * c * t * t + pos * 2.0 * c * t * dh),
+            }
+        }
+        Family::Moa => {
+            // Eq. 14-15 with nh = number of ACTIVE experts (attention
+            // matrices computed per token).
+            let nh = cfg.moa_k as f64;
+            AttnCost {
+                macs: (2.0 * nh + 2.0) * t * dh * dm
+                    + 2.0 * nh * c * t * t * dh
+                    + pos * 2.0 * c * t * dh * dm,
+                mem_floats: (2.0 * nh + 2.0) * t * dh
+                    + 2.0 * nh * c * t * t
+                    + pos * 2.0 * c * t * dh,
+            }
+        }
+    }
+}
+
+/// Whole-model attention cost: all layers, one sequence.
+pub fn model_attention_cost(cfg: &ModelConfig) -> AttnCost {
+    let per = attention_cost(cfg);
+    AttnCost {
+        macs: per.macs * cfg.n_layers as f64,
+        mem_floats: per.mem_floats * cfg.n_layers as f64,
+    }
+}
+
+/// Exact parameter count of the model as built by `model.init_params`
+/// (kept in lock-step with `python/compile/macs.py::param_count`; an
+/// integration test compares this against the manifest).
+pub fn param_count(cfg: &ModelConfig) -> usize {
+    let d = cfg.d_model;
+    let dh = cfg.d_head;
+    let h = cfg.n_heads;
+    let n_out = match cfg.task {
+        Task::ListOps => cfg.ls_n_classes,
+        Task::Lm => cfg.vocab_size,
+    };
+    let mut total = cfg.vocab_size * d + d * n_out + 2 * d; // embed + head + ln_f
+
+    let mut attn = match cfg.family {
+        Family::SwitchHead => {
+            let e = cfg.att_n_experts;
+            let mut a = 0;
+            a += h * if cfg.moe_k { e } else { 1 } * d * dh;
+            a += h * if cfg.moe_q { e } else { 1 } * d * dh;
+            a += h * if cfg.moe_v { e } else { 1 } * d * dh;
+            a += h * if cfg.moe_o { e } else { 1 } * dh * d;
+            a += h * d * e; // source router
+            if !cfg.shared_selection {
+                a += h * d * e; // destination router
+            }
+            a
+        }
+        Family::Dense => 4 * h * d * dh,
+        Family::Moa => {
+            let e = cfg.moa_n_experts;
+            2 * d * dh + 2 * e * d * dh + d * e
+        }
+    };
+    if cfg.pos == Positional::Xl {
+        attn += match cfg.family {
+            Family::Moa => d * dh + 2 * dh,
+            _ => h * d * dh + 2 * h * dh,
+        };
+    }
+
+    let mlp = match cfg.mlp_type {
+        MlpType::SigmaMoe => cfg.mlp_n_experts * 2 * d * cfg.mlp_d_expert + d * cfg.mlp_n_experts,
+        MlpType::Dense => 2 * d * cfg.d_ff,
+    };
+    let per_layer = attn + mlp + 4 * d; // + ln1/ln2
+    total += cfg.n_layers * per_layer;
+    total
+}
+
+/// The paper's §3 parameter-matching procedure: adjust `d_ff` (dense
+/// MLP) so `candidate` matches `target_params` as closely as possible.
+/// Returns the matched config and the relative error.
+pub fn match_params_via_dff(candidate: &ModelConfig, target_params: usize) -> (ModelConfig, f64) {
+    let mut best = candidate.clone();
+    let mut best_err = f64::INFINITY;
+    // Parameter count is monotone in d_ff; binary search then refine.
+    let (mut lo, mut hi) = (1usize, 1 << 20);
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        let mut c = candidate.clone();
+        c.d_ff = mid;
+        if param_count(&c) < target_params {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    for dff in lo.saturating_sub(2)..lo + 2 {
+        if dff == 0 {
+            continue;
+        }
+        let mut c = candidate.clone();
+        c.d_ff = dff;
+        let err =
+            (param_count(&c) as f64 - target_params as f64).abs() / target_params as f64;
+        if err < best_err {
+            best_err = err;
+            best = c;
+        }
+    }
+    (best, best_err)
+}
+
+/// Match via `d_head` instead (used when the MLP is fixed, e.g.
+/// SwitchAll where sigma-MoE expert sizes are coarse-grained — paper A.6).
+pub fn match_params_via_dhead(candidate: &ModelConfig, target_params: usize) -> (ModelConfig, f64) {
+    let mut best = candidate.clone();
+    let mut best_err = f64::INFINITY;
+    for dh in 1..=2048 {
+        let mut c = candidate.clone();
+        c.d_head = dh;
+        let err =
+            (param_count(&c) as f64 - target_params as f64).abs() / target_params as f64;
+        if err < best_err {
+            best_err = err;
+            best = c;
+        }
+    }
+    (best, best_err)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn cfg_from(text: &str) -> ModelConfig {
+        ModelConfig::from_json(&Json::parse(text).unwrap()).unwrap()
+    }
+
+    /// Paper Table 1, 47M dense baseline: n_heads=10, d_head=41, T=256,
+    /// C=2 -> memory 3.5M floats (Eq. 12). This pins our implementation
+    /// to the paper's published numbers.
+    #[test]
+    fn paper_47m_dense_memory() {
+        let cfg = cfg_from(
+            r#"{"family":"dense","pos":"xl","n_heads":10,"d_head":41,
+                "seq_len":256,"d_model":410,"n_layers":16}"#,
+        );
+        let cost = attention_cost(&cfg);
+        assert!((cost.mem_floats - 3.46e6).abs() < 0.02e6, "{}", cost.mem_floats);
+    }
+
+    /// Paper Table 1, 47M SwitchHead (WT103): n_heads=2, d_head=76, k=2
+    /// -> 0.8M floats memory (exact). MACs: Eq. 13 *literally* gives
+    /// 199.5M; the paper's table reports 170.4M, consistent with the
+    /// XL position projection being counted once per layer instead of
+    /// per head in their tally (199.5M - 2*C*T*dh*dm = 167.6M). We pin
+    /// the literal value and document the delta in EXPERIMENTS.md.
+    #[test]
+    fn paper_47m_switchhead_cost() {
+        let cfg = cfg_from(
+            r#"{"family":"switchhead","pos":"xl","n_heads":2,"d_head":76,
+                "att_n_experts":5,"att_k":2,"seq_len":256,"d_model":410,
+                "n_layers":16}"#,
+        );
+        let cost = attention_cost(&cfg);
+        assert!((cost.mem_floats - 0.836e6).abs() < 0.01e6, "{}", cost.mem_floats);
+        assert!((cost.macs - 199.5e6).abs() < 2e6, "{}", cost.macs);
+    }
+
+    /// SwitchHead vs dense ratio on the paper's 262M C4 configs: the
+    /// abstract's headline "44% compute, 27% memory".
+    #[test]
+    fn paper_262m_headline_ratios() {
+        let dense = cfg_from(
+            r#"{"family":"dense","pos":"xl","n_heads":16,"d_head":64,
+                "seq_len":512,"d_model":1024,"n_layers":18}"#,
+        );
+        let sh = cfg_from(
+            r#"{"family":"switchhead","pos":"xl","n_heads":4,"d_head":112,
+                "att_n_experts":4,"att_k":2,"seq_len":512,"d_model":1024,
+                "n_layers":18}"#,
+        );
+        let (cd, cs) = (attention_cost(&dense), attention_cost(&sh));
+        let mac_ratio = cs.macs / cd.macs;
+        let mem_ratio = cs.mem_floats / cd.mem_floats;
+        // Paper Table 2: 2.4G/5.4G = 0.44, 5.6M/21M = 0.27. Eq-literal
+        // accounting yields 0.53 / 0.29 (the MAC delta is the paper's
+        // per-layer-vs-per-head position-projection tally; see
+        // EXPERIMENTS.md). Ordering and magnitude are preserved.
+        assert!((0.40..0.58).contains(&mac_ratio), "mac ratio {mac_ratio}");
+        assert!((0.24..0.33).contains(&mem_ratio), "mem ratio {mem_ratio}");
+    }
+
+    #[test]
+    fn moa_scales_with_active_experts() {
+        let mk = |k: usize| {
+            let mut c = cfg_from(
+                r#"{"family":"moa","pos":"xl","d_head":41,"seq_len":256,
+                    "d_model":410,"moa_n_experts":12}"#,
+            );
+            c.moa_k = k;
+            attention_cost(&c)
+        };
+        let c2 = mk(2);
+        let c8 = mk(8);
+        assert!(c8.macs > 2.5 * c2.macs);
+        assert!(c8.mem_floats > 3.0 * c2.mem_floats);
+    }
+
+    #[test]
+    fn dff_matching_converges() {
+        let dense = cfg_from(
+            r#"{"family":"dense","pos":"xl","n_heads":10,"d_head":41,
+                "seq_len":256,"d_model":256,"n_layers":16,"d_ff":2053,
+                "vocab_size":8000}"#,
+        );
+        let target = param_count(&dense);
+        let sh = cfg_from(
+            r#"{"family":"switchhead","pos":"xl","n_heads":2,"d_head":76,
+                "att_n_experts":5,"att_k":2,"seq_len":256,"d_model":256,
+                "n_layers":16,"vocab_size":8000}"#,
+        );
+        let (matched, err) = match_params_via_dff(&sh, target);
+        assert!(err < 0.01, "err {err}");
+        let got = param_count(&matched);
+        let rel = (got as f64 - target as f64).abs() / target as f64;
+        assert!(rel < 0.01, "{got} vs {target}");
+    }
+
+    #[test]
+    fn rope_has_no_position_projection_term() {
+        let xl = cfg_from(
+            r#"{"family":"dense","pos":"xl","n_heads":4,"d_head":32,
+                "seq_len":128,"d_model":256}"#,
+        );
+        let rope = cfg_from(
+            r#"{"family":"dense","pos":"rope","n_heads":4,"d_head":32,
+                "seq_len":128,"d_model":256}"#,
+        );
+        let (cx, cr) = (attention_cost(&xl), attention_cost(&rope));
+        assert!(cx.macs > cr.macs);
+        assert!(cx.mem_floats > cr.mem_floats);
+    }
+}

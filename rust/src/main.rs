@@ -1,0 +1,355 @@
+//! SwitchHead CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   train        train a config end-to-end (AOT artifacts required)
+//!   eval         validation perplexity / accuracy from a checkpoint
+//!   zeroshot     Lambada/BLiMP/CBT-analog scoring (paper Table 4/8)
+//!   macs         analytic MAC/memory accounting (paper Eq. 11-15)
+//!   match-params parameter-matching solver (paper §3 procedure)
+//!   analyze      attention maps, expert usage, induction heads (§4)
+//!   probe        smoke-test an artifact bundle (init + 2 train steps)
+//!   bench-tables regenerate the paper's tables (see also cargo bench)
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use switchhead::bench::{fmt_si, Table};
+use switchhead::config::{ModelConfig, Task};
+use switchhead::coordinator::analysis;
+use switchhead::coordinator::scorer;
+use switchhead::coordinator::trainer::{self, TrainOpts};
+use switchhead::data::{corpus_for, synth, zeroshot, TRAIN_CHARS, VALID_CHARS};
+use switchhead::macs::{attention_cost, match_params_via_dff, match_params_via_dhead, param_count};
+use switchhead::runtime::{checkpoint, Engine};
+use switchhead::util::cli::Args;
+use switchhead::util::logging::info;
+use switchhead::util::rng::Pcg;
+
+const USAGE: &str = "\
+switchhead <command> [options]
+
+commands:
+  train         --config <json> [--steps N] [--out DIR] [--seed S]
+                [--eval-every N] [--eval-batches N] [--ckpt-every N]
+                [--artifacts DIR] [--quiet]
+  eval          --config <json> [--out DIR] [--eval-batches N] [--artifacts DIR]
+  zeroshot      --config <json> [--out DIR] [--task lambada|blimp|cbt|all]
+                [--n N] [--seed S] [--artifacts DIR]
+  macs          --config <json> [--config ...]   (no artifacts needed)
+  match-params  --config <json> --target-params N [--via dff|dhead]
+  analyze       --config <json> [--out DIR] [--dump DIR] [--induction] [--artifacts DIR]
+  generate      --config <json> [--out DIR] [--prompt TEXT] [--tokens N]
+                [--temperature T] [--top-k K] [--seed S] [--artifacts DIR]
+  probe         --config <json> [--artifacts DIR]
+  bench-tables  [--table 1|2|3|4|5|6|7|all] [--artifacts DIR] [--quick]
+";
+
+fn artifact_dir(args: &Args, cfg: &ModelConfig) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", switchhead::paths::ARTIFACTS)).join(&cfg.name)
+}
+
+fn load_cfg(args: &Args) -> Result<ModelConfig> {
+    ModelConfig::load(args.req("config")?)
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    };
+    let args = Args::parse(&argv[1..], &["quiet", "induction", "quick"])?;
+    match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "zeroshot" => cmd_zeroshot(&args),
+        "macs" => cmd_macs(&args),
+        "match-params" => cmd_match_params(&args),
+        "analyze" => cmd_analyze(&args),
+        "generate" => cmd_generate(&args),
+        "probe" => cmd_probe(&args),
+        "bench-tables" => switchhead::bench::tables::run_from_args(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = load_cfg(args)?;
+    let engine = Engine::load(&artifact_dir(args, &cfg), Some(&["init", "train_step", "eval_step", "metrics"]))?;
+    let opts = TrainOpts {
+        steps: args.usize_or("steps", cfg.train_steps)?,
+        eval_every: args.usize_or("eval-every", 0)?,
+        eval_batches: args.usize_or("eval-batches", 16)?,
+        ckpt_every: args.usize_or("ckpt-every", 0)?,
+        out_dir: PathBuf::from(args.get_or("out", &format!("runs/{}", cfg.name))),
+        seed: args.u64_or("seed", 42)?,
+        log_every: args.usize_or("log-every", 20)?,
+        quiet: args.flag("quiet"),
+    };
+    let report = trainer::train(&engine, &cfg, &opts)?;
+    let metric_name = match cfg.task {
+        Task::Lm => "valid ppl",
+        Task::ListOps => "IID accuracy",
+    };
+    info(&format!(
+        "[{}] done: {metric_name} {:.4}, {:.1} ms/iter, {:.0} tokens/s, peak RSS {:.1} MiB",
+        cfg.name,
+        report.final_metric,
+        report.ms_per_iter,
+        report.tokens_per_sec,
+        report.peak_rss_bytes as f64 / (1024.0 * 1024.0),
+    ));
+    Ok(())
+}
+
+fn load_trained(args: &Args, cfg: &ModelConfig, engine: &Engine) -> Result<switchhead::runtime::FlatBuf> {
+    let out_dir = PathBuf::from(args.get_or("out", &format!("runs/{}", cfg.name)));
+    let path = out_dir.join("last.ckpt");
+    if !path.exists() {
+        bail!("no checkpoint at {path:?}; run `switchhead train --config ...` first");
+    }
+    let ck = checkpoint::load(&path)?;
+    engine.upload_flat(&ck.flat)
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = load_cfg(args)?;
+    let engine = Engine::load(&artifact_dir(args, &cfg), Some(&["eval_step", "metrics"]))?;
+    let flat = load_trained(args, &cfg, &engine)?;
+    let batches = args.usize_or("eval-batches", 32)?;
+    match cfg.task {
+        Task::Lm => {
+            let corpus = corpus_for(&cfg, TRAIN_CHARS, VALID_CHARS)?;
+            let ppl = trainer::eval_lm(&engine, &cfg, &corpus, &flat, batches)?;
+            println!("{}: valid ppl {:.4} ({} batches)", cfg.name, ppl, batches);
+        }
+        Task::ListOps => {
+            let acc = trainer::eval_listops(&engine, &cfg, &flat, batches, 999)?;
+            println!("{}: IID accuracy {:.4} ({} batches)", cfg.name, acc, batches);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_zeroshot(args: &Args) -> Result<()> {
+    let cfg = load_cfg(args)?;
+    if cfg.task != Task::Lm {
+        bail!("zeroshot requires an LM config");
+    }
+    let engine = Engine::load(&artifact_dir(args, &cfg), Some(&["score"]))?;
+    let flat = load_trained(args, &cfg, &engine)?;
+    let corpus = corpus_for(&cfg, TRAIN_CHARS, VALID_CHARS)?;
+    let bpe = corpus.bpe.as_ref().context("zeroshot needs a subword dataset (not enwik8)")?;
+    let profile = synth::Profile::parse(&cfg.dataset).unwrap();
+    let gen = synth::CorpusGen::new(profile, 900); // only for lexicon access
+    let lex = gen.lexicon();
+    let n = args.usize_or("n", 100)?;
+    let seed = args.u64_or("seed", 7)?;
+    let which = args.get_or("task", "all");
+
+    let mut table = Table::new(
+        &format!("Zero-shot ({}, n={n})", cfg.name),
+        &["task", "accuracy", "chance"],
+    );
+    if which == "all" || which == "lambada" {
+        let mut rng = Pcg::new(seed, 1);
+        let tasks: Vec<_> = (0..n).map(|_| zeroshot::gen_lambada(lex, &mut rng, 5)).collect();
+        let acc = scorer::eval_choice_tasks(&engine, &cfg, bpe, &tasks, &flat)?;
+        table.push(vec!["lambada-synth".into(), format!("{:.1}%", acc * 100.0), "20.0%".into()]);
+    }
+    if which == "all" || which == "blimp" {
+        let mut rng = Pcg::new(seed, 2);
+        let pairs: Vec<_> = (0..n).map(|_| zeroshot::gen_blimp(lex, &mut rng)).collect();
+        let acc = scorer::eval_minimal_pairs(&engine, &cfg, bpe, &pairs, &flat)?;
+        table.push(vec!["blimp-synth".into(), format!("{:.1}%", acc * 100.0), "50.0%".into()]);
+    }
+    if which == "all" || which == "cbt" {
+        let mut rng = Pcg::new(seed, 3);
+        let tasks: Vec<_> = (0..n).map(|_| zeroshot::gen_cbt(lex, &mut rng, 10)).collect();
+        let acc = scorer::eval_choice_tasks(&engine, &cfg, bpe, &tasks, &flat)?;
+        table.push(vec!["cbt-synth".into(), format!("{:.1}%", acc * 100.0), "10.0%".into()]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_macs(args: &Args) -> Result<()> {
+    let mut table = Table::new(
+        "Analytic attention cost (Eq. 11-15; per layer, per sequence)",
+        &["config", "family", "n_mat", "params", "MACs", "Mem (floats)"],
+    );
+    let configs: Vec<&str> = args
+        .options
+        .iter()
+        .filter(|(k, _)| k.as_str() == "config")
+        .map(|(_, v)| v.as_str())
+        .collect();
+    // Args stores one value per key; support comma lists too.
+    let mut paths = Vec::new();
+    for c in configs {
+        paths.extend(c.split(','));
+    }
+    if paths.is_empty() {
+        bail!("need --config <json>[,<json>...]");
+    }
+    for path in paths {
+        let cfg = ModelConfig::load(path)?;
+        let cost = attention_cost(&cfg);
+        table.push(vec![
+            cfg.name.clone(),
+            cfg.family.name().into(),
+            cfg.attention_matrices().to_string(),
+            fmt_si(param_count(&cfg) as f64),
+            fmt_si(cost.macs),
+            fmt_si(cost.mem_floats),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_match_params(args: &Args) -> Result<()> {
+    let cfg = load_cfg(args)?;
+    let target = args.req("target-params")?.parse::<usize>()?;
+    let via = args.get_or("via", "dff");
+    let (matched, err) = match via {
+        "dff" => match_params_via_dff(&cfg, target),
+        "dhead" => match_params_via_dhead(&cfg, target),
+        other => bail!("--via must be dff or dhead, got {other}"),
+    };
+    println!(
+        "{}: matched to {} params (target {}, rel err {:.4}%)",
+        cfg.name,
+        param_count(&matched),
+        target,
+        err * 100.0
+    );
+    println!("  d_ff = {}, d_head = {}", matched.d_ff, matched.d_head);
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let cfg = load_cfg(args)?;
+    let engine = Engine::load(&artifact_dir(args, &cfg), Some(&["attn"]))?;
+    let flat = load_trained(args, &cfg, &engine)?;
+    let dump_dir = PathBuf::from(args.get_or("dump", &format!("runs/{}/analysis", cfg.name)));
+
+    // Probe tokens: for LM use an induction probe; for listops, real examples.
+    let (tokens, dims, period) = match cfg.task {
+        Task::Lm => {
+            let (probe, period) = analysis::induction_probe(&cfg, args.u64_or("seed", 5)?);
+            (probe, vec![cfg.batch_size, cfg.seq_len + 1], period)
+        }
+        Task::ListOps => {
+            let mut rng = Pcg::new(args.u64_or("seed", 5)?, 3);
+            let (tok, _) =
+                switchhead::data::listops::gen_batch(&mut rng, cfg.batch_size, cfg.seq_len);
+            (tok, vec![cfg.batch_size, cfg.seq_len], cfg.seq_len / 2)
+        }
+    };
+    let arrays = analysis::fetch_attention(&engine, &flat, &tokens, &dims)?;
+    let maps = arrays
+        .iter()
+        .find(|a| a.name.contains("attn"))
+        .ok_or_else(|| anyhow!("no attention output"))?;
+    let n = analysis::dump_attention_maps(maps, &dump_dir, 4)?;
+    info(&format!("wrote {n} attention maps to {dump_dir:?}"));
+
+    for a in &arrays {
+        if a.name.contains("gate") {
+            analysis::dump_gates(a, &dump_dir, 64)?;
+            let stats = analysis::expert_stats(a)?;
+            for (li, ent) in stats.entropy.iter().enumerate() {
+                info(&format!(
+                    "{} layer {li}: usage entropy {:.3} bits (max {:.3})",
+                    a.name,
+                    ent,
+                    (stats.mean_gate[li].len() as f32).log2()
+                ));
+            }
+        }
+    }
+
+    if args.flag("induction") {
+        let scores = analysis::induction_scores(maps, period)?;
+        let mut table =
+            Table::new("Induction-head scores (period-diagonal mass)", &["layer", "head", "score"]);
+        for (li, heads) in scores.iter().enumerate() {
+            for (hi, s) in heads.iter().enumerate() {
+                table.push(vec![li.to_string(), hi.to_string(), format!("{s:.4}")]);
+            }
+        }
+        table.print();
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    use switchhead::coordinator::generate::{generate_text, SampleOpts};
+    let cfg = load_cfg(args)?;
+    if cfg.task != Task::Lm {
+        bail!("generate requires an LM config");
+    }
+    let engine = Engine::load(&artifact_dir(args, &cfg), Some(&["next_logits"]))?;
+    let flat = load_trained(args, &cfg, &engine)?;
+    let corpus = corpus_for(&cfg, TRAIN_CHARS, VALID_CHARS)?;
+    let bpe = corpus.bpe.as_ref().context("generate needs a subword dataset")?;
+    let opts = SampleOpts {
+        max_tokens: args.usize_or("tokens", 48)?,
+        temperature: args.f64_or("temperature", 0.8)?,
+        top_k: args.usize_or("top-k", 40)?,
+        seed: args.u64_or("seed", 0)?,
+    };
+    let prompt = args.get_or("prompt", "the");
+    let text = generate_text(&engine, &cfg, &flat, bpe, prompt, &opts)?;
+    println!("prompt:  {prompt}");
+    println!("sampled: {text}");
+    Ok(())
+}
+
+fn cmd_probe(args: &Args) -> Result<()> {
+    let cfg = load_cfg(args)?;
+    let dir = artifact_dir(args, &cfg);
+    let engine = Engine::load(&dir, Some(&["init", "train_step", "metrics"]))?;
+    let flat = engine.init(123)?;
+    info(&format!("init ok: flat buffer {} floats", flat.len));
+    let mut rng = Pcg::new(1, 1);
+    let (extra_dims, extras): (Vec<Vec<usize>>, Vec<Vec<i32>>) = match cfg.task {
+        Task::Lm => {
+            let t1 = cfg.seq_len + 1;
+            let tok: Vec<i32> =
+                (0..cfg.batch_size * t1).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+            (vec![vec![cfg.batch_size, t1]], vec![tok])
+        }
+        Task::ListOps => {
+            let (tok, lab) =
+                switchhead::data::listops::gen_batch(&mut rng, cfg.batch_size, cfg.seq_len);
+            (vec![vec![cfg.batch_size, cfg.seq_len], vec![cfg.batch_size]], vec![tok, lab])
+        }
+    };
+    let bufs: Vec<_> = extras
+        .iter()
+        .zip(&extra_dims)
+        .map(|(d, dim)| engine.upload_i32(d, dim))
+        .collect::<Result<_>>()?;
+    let refs: Vec<&_> = bufs.iter().collect();
+    let mut flat = flat;
+    for step in 0..2 {
+        let (next, m) = engine.train_step(&flat, step, &refs, None)?;
+        info(&format!("step {step}: loss {:.4} gnorm {:.4}", m[0], m[3]));
+        if !m[0].is_finite() {
+            bail!("probe produced non-finite loss");
+        }
+        flat = next;
+    }
+    println!("probe OK: {}", cfg.name);
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! Checkpointing: the flat training-state buffer plus a JSON header
+//! (config name, step, RNG cursor) in a simple length-prefixed binary
+//! format. No external serialization crates (offline registry).
+//!
+//! Format: magic "SWCK" | u32 version | u64 header_len | header JSON |
+//!         u64 f32_count | raw little-endian f32 data.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 4] = b"SWCK";
+const VERSION: u32 = 1;
+
+pub struct Checkpoint {
+    pub header: Json,
+    pub flat: Vec<f32>,
+}
+
+pub fn save(path: &Path, header: &Json, flat: &[f32]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        let header_bytes = header.to_string().into_bytes();
+        f.write_all(&(header_bytes.len() as u64).to_le_bytes())?;
+        f.write_all(&header_bytes)?;
+        f.write_all(&(flat.len() as u64).to_le_bytes())?;
+        // Safety: f32 slice reinterpreted as bytes; little-endian hosts only
+        // (x86_64/aarch64 — all supported targets).
+        let bytes = unsafe {
+            std::slice::from_raw_parts(flat.as_ptr() as *const u8, flat.len() * 4)
+        };
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<Checkpoint> {
+    let mut f = std::fs::File::open(path).map_err(|e| anyhow!("open {path:?}: {e}"))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: not a SwitchHead checkpoint (bad magic)");
+    }
+    let mut u32buf = [0u8; 4];
+    f.read_exact(&mut u32buf)?;
+    let version = u32::from_le_bytes(u32buf);
+    if version != VERSION {
+        bail!("{path:?}: unsupported checkpoint version {version}");
+    }
+    let mut u64buf = [0u8; 8];
+    f.read_exact(&mut u64buf)?;
+    let header_len = u64::from_le_bytes(u64buf) as usize;
+    let mut header_bytes = vec![0u8; header_len];
+    f.read_exact(&mut header_bytes)?;
+    let header = Json::parse(std::str::from_utf8(&header_bytes)?)?;
+    f.read_exact(&mut u64buf)?;
+    let count = u64::from_le_bytes(u64buf) as usize;
+    let mut data = vec![0u8; count * 4];
+    f.read_exact(&mut data)?;
+    let mut flat = vec![0f32; count];
+    for (i, chunk) in data.chunks_exact(4).enumerate() {
+        flat[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+    }
+    Ok(Checkpoint { header, flat })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("switchhead-cktest");
+        let path = dir.join("c.ckpt");
+        let header = Json::from_pairs(vec![
+            ("config", Json::Str("tiny-sh".into())),
+            ("step", Json::Num(123.0)),
+        ]);
+        let flat: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5 - 3.0).collect();
+        save(&path, &header, &flat).unwrap();
+        let ck = load(&path).unwrap();
+        assert_eq!(ck.header.get("step").unwrap().as_usize().unwrap(), 123);
+        assert_eq!(ck.flat, flat);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("switchhead-cktest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+    }
+}

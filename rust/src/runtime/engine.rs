@@ -1,0 +1,266 @@
+//! PJRT execution engine: loads `artifacts/<config>/*.hlo.txt`, compiles
+//! them once on the CPU PJRT client, and exposes the flat-buffer ABI
+//! (see `python/compile/model.py`): all mutable training state lives in
+//! ONE device-resident f32 buffer chained between executions, so the hot
+//! path does no host<->device parameter traffic — only the token upload
+//! (a few KiB) and a 4-float metrics read per step.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::Manifest;
+use crate::util::logging::info;
+
+/// The device-resident flat training-state buffer.
+pub struct FlatBuf {
+    pub buffer: PjRtBuffer,
+    pub len: usize,
+}
+
+impl FlatBuf {
+    /// Copy the whole buffer to host (checkpointing, parameter reads).
+    /// The CPU PJRT plugin does not implement partial raw reads
+    /// (CopyRawToHost), so this is a full literal transfer; the hot path
+    /// never calls it — per-step metrics go through the tiny `metrics`
+    /// executable instead.
+    pub fn to_host(&self) -> Result<Vec<f32>> {
+        let lit = self
+            .buffer
+            .to_literal_sync()
+            .map_err(|e| anyhow!("flat to_host: {e:?}"))?;
+        lit.to_vec::<f32>().map_err(|e| anyhow!("flat to_vec: {e:?}"))
+    }
+
+    /// Read a sub-range (full copy + slice; analysis/checkpoint paths only).
+    pub fn read(&self, offset: usize, len: usize) -> Result<Vec<f32>> {
+        let all = self.to_host()?;
+        if offset + len > all.len() {
+            bail!("flat read @{offset}+{len} out of range {}", all.len());
+        }
+        Ok(all[offset..offset + len].to_vec())
+    }
+}
+
+/// Execution timings for the perf harness.
+#[derive(Debug, Default, Clone)]
+pub struct StepTimes {
+    pub upload_us: u64,
+    pub execute_us: u64,
+    pub readback_us: u64,
+}
+
+/// One compiled model variant: PJRT executables for every entry point.
+pub struct Engine {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    executables: BTreeMap<String, PjRtLoadedExecutable>,
+    pub compile_times_ms: BTreeMap<String, u128>,
+}
+
+impl Engine {
+    /// Compile all (or a subset of) entries of an artifact directory.
+    pub fn load(artifact_dir: &Path, entries: Option<&[&str]>) -> Result<Engine> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Engine::load_with_client(client, artifact_dir, entries)
+    }
+
+    /// Load using an existing client (several engines can share one).
+    pub fn load_with_client(
+        client: PjRtClient,
+        artifact_dir: &Path,
+        entries: Option<&[&str]>,
+    ) -> Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)
+            .with_context(|| format!("loading manifest from {artifact_dir:?}"))?;
+        let mut executables = BTreeMap::new();
+        let mut compile_times_ms = BTreeMap::new();
+        for (name, entry) in &manifest.entries {
+            if let Some(filter) = entries {
+                if !filter.contains(&name.as_str()) {
+                    continue;
+                }
+            }
+            let path = manifest.hlo_path(entry);
+            let t0 = Instant::now();
+            let proto = HloModuleProto::from_text_file(path.to_str().unwrap())
+                .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling entry '{name}': {e:?}"))?;
+            compile_times_ms.insert(name.clone(), t0.elapsed().as_millis());
+            executables.insert(name.clone(), exe);
+        }
+        info(&format!(
+            "engine[{}]: compiled {} entries ({})",
+            manifest.name,
+            executables.len(),
+            compile_times_ms
+                .iter()
+                .map(|(k, v)| format!("{k}={v}ms"))
+                .collect::<Vec<_>>()
+                .join(", ")
+        ));
+        Ok(Engine { client, manifest, executables, compile_times_ms })
+    }
+
+    fn exe(&self, name: &str) -> Result<&PjRtLoadedExecutable> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow!("entry '{name}' not compiled for '{}'", self.manifest.name))
+    }
+
+    // ---- host->device helpers ----
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload i32: {e:?}"))
+    }
+
+    pub fn upload_u32(&self, data: &[u32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload u32: {e:?}"))
+    }
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload f32: {e:?}"))
+    }
+
+    fn run_single(&self, name: &str, args: &[&PjRtBuffer]) -> Result<PjRtBuffer> {
+        let exe = self.exe(name)?;
+        let mut outs = exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("executing '{name}': {e:?}"))?;
+        let mut replica = outs
+            .drain(..)
+            .next()
+            .ok_or_else(|| anyhow!("'{name}' returned no replicas"))?;
+        if replica.len() != 1 {
+            bail!("'{name}' returned {} buffers, expected 1 (non-tuple root)", replica.len());
+        }
+        let out = replica.drain(..).next().unwrap();
+        Ok(out)
+    }
+
+    // ---- entry points ----
+
+    /// `init(seed) -> flat` — fresh parameters + zero optimizer/state.
+    pub fn init(&self, seed: u64) -> Result<FlatBuf> {
+        let seed_arr = [(seed >> 32) as u32, seed as u32];
+        let seed_buf = self.upload_u32(&seed_arr, &[2])?;
+        let buffer = self.run_single("init", &[&seed_buf])?;
+        Ok(FlatBuf { buffer, len: self.manifest.layout.total })
+    }
+
+    /// Restore a flat buffer from host data (checkpoint load).
+    pub fn upload_flat(&self, data: &[f32]) -> Result<FlatBuf> {
+        if data.len() != self.manifest.layout.total {
+            bail!(
+                "flat buffer length {} != manifest total {}",
+                data.len(),
+                self.manifest.layout.total
+            );
+        }
+        let buffer = self.upload_f32(data, &[data.len()])?;
+        Ok(FlatBuf { buffer, len: data.len() })
+    }
+
+    /// One training step. `extra` carries tokens (and labels for
+    /// listops), already shaped per the manifest. Returns the new flat
+    /// buffer and the 4 metric slots.
+    pub fn train_step(
+        &self,
+        flat: &FlatBuf,
+        step: i32,
+        extra: &[&PjRtBuffer],
+        times: Option<&mut StepTimes>,
+    ) -> Result<(FlatBuf, [f32; 4])> {
+        let t0 = Instant::now();
+        let step_buf = self.upload_i32(&[step], &[])?;
+        let mut args: Vec<&PjRtBuffer> = vec![&flat.buffer, &step_buf];
+        args.extend_from_slice(extra);
+        let t1 = Instant::now();
+        let buffer = self.run_single("train_step", &args)?;
+        let t2 = Instant::now();
+        let new = FlatBuf { buffer, len: flat.len };
+        let metrics = self.read_metrics(&new)?;
+        if let Some(times) = times {
+            times.upload_us += t1.duration_since(t0).as_micros() as u64;
+            times.execute_us += t2.duration_since(t1).as_micros() as u64;
+            times.readback_us += t2.elapsed().as_micros() as u64;
+        }
+        Ok((new, metrics))
+    }
+
+    /// One evaluation step (params untouched; XL cache advances inside
+    /// the returned buffer, which the caller chains for subsequent eval
+    /// batches and then discards).
+    pub fn eval_step(&self, flat: &FlatBuf, extra: &[&PjRtBuffer]) -> Result<(FlatBuf, [f32; 4])> {
+        let mut args: Vec<&PjRtBuffer> = vec![&flat.buffer];
+        args.extend_from_slice(extra);
+        let buffer = self.run_single("eval_step", &args)?;
+        let new = FlatBuf { buffer, len: flat.len };
+        let metrics = self.read_metrics(&new)?;
+        Ok((new, metrics))
+    }
+
+    /// Per-position next-token log-probabilities `[B, T]` (zero-shot
+    /// scoring path; fresh XL cache each call).
+    pub fn score(&self, flat: &FlatBuf, tokens: &PjRtBuffer) -> Result<Vec<f32>> {
+        let out = self.run_single("score", &[&flat.buffer, tokens])?;
+        let lit = out.to_literal_sync().map_err(|e| anyhow!("score readback: {e:?}"))?;
+        lit.to_vec::<f32>().map_err(|e| anyhow!("score to_vec: {e:?}"))
+    }
+
+    /// Generation path: logits for the token following a `[B, T]`
+    /// window. Returns a host `[B * V]` vector.
+    pub fn next_logits(&self, flat: &FlatBuf, tokens: &PjRtBuffer) -> Result<Vec<f32>> {
+        let out = self.run_single("next_logits", &[&flat.buffer, tokens])?;
+        let lit = out.to_literal_sync().map_err(|e| anyhow!("next_logits readback: {e:?}"))?;
+        lit.to_vec::<f32>().map_err(|e| anyhow!("next_logits to_vec: {e:?}"))
+    }
+
+    /// Analysis entry: attention maps + gate scores, host-copied as
+    /// literals in manifest output order.
+    pub fn attn(&self, flat: &FlatBuf, tokens: &PjRtBuffer) -> Result<Vec<Literal>> {
+        let exe = self.exe("attn")?;
+        let outs = exe
+            .execute_b(&[&flat.buffer, tokens])
+            .map_err(|e| anyhow!("executing 'attn': {e:?}"))?;
+        let first = outs
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("'attn' returned nothing"))?;
+        let lit = first.to_literal_sync().map_err(|e| anyhow!("attn readback: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("attn decompose: {e:?}"))
+    }
+
+    fn read_metrics(&self, flat: &FlatBuf) -> Result<[f32; 4]> {
+        // 16-byte readback through the dedicated `metrics` executable
+        // (the CPU plugin has no partial raw host reads).
+        let buf = self.run_single("metrics", &[&flat.buffer])?;
+        let lit = buf.to_literal_sync().map_err(|e| anyhow!("metrics readback: {e:?}"))?;
+        let v = lit.to_vec::<f32>().map_err(|e| anyhow!("metrics to_vec: {e:?}"))?;
+        let mut out = [0f32; 4];
+        for (i, x) in v.iter().take(4).enumerate() {
+            out[i] = *x;
+        }
+        Ok(out)
+    }
+
+    /// Read one named parameter from the flat buffer (analysis,
+    /// checkpoint inspection).
+    pub fn read_param(&self, flat: &FlatBuf, name: &str) -> Result<(Vec<f32>, Vec<usize>)> {
+        let sig = self.manifest.param(name)?;
+        let off = sig.offset.ok_or_else(|| anyhow!("param '{name}' has no offset"))?;
+        Ok((flat.read(off, sig.numel())?, sig.shape.clone()))
+    }
+}

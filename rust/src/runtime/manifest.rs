@@ -1,0 +1,248 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime. See DESIGN.md §2 ("AOT artifact contract") and the
+//! flat-buffer ABI documented in `python/compile/model.py`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct TensorSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    /// Offset into the flat buffer (params/state entries only).
+    pub offset: Option<usize>,
+}
+
+impl TensorSig {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSig> {
+        Ok(TensorSig {
+            name: j.req("name")?.as_str()?.to_string(),
+            shape: j
+                .req("shape")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: j.req("dtype")?.as_str()?.to_string(),
+            offset: j.get("offset").and_then(|v| v.as_usize().ok()),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EntrySig {
+    pub file: String,
+    pub tuple_output: bool,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// Flat-buffer layout: `[params | m | v | state | metrics]`, all f32.
+#[derive(Debug, Clone)]
+pub struct Layout {
+    pub p_size: usize,
+    pub s_size: usize,
+    pub n_metrics: usize,
+    pub total: usize,
+    pub metrics_offset: usize,
+    pub m_offset: usize,
+    pub v_offset: usize,
+    pub state_offset: usize,
+    /// entry name -> metric slot meanings, e.g. train_step: [loss,...,gnorm]
+    pub metric_slots: BTreeMap<String, Vec<String>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub config: Json,
+    pub layout: Layout,
+    pub params: Vec<TensorSig>,
+    pub state: Vec<TensorSig>,
+    pub param_count: usize,
+    pub entries: BTreeMap<String, EntrySig>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(artifact_dir: &Path) -> Result<Manifest> {
+        let path = artifact_dir.join("manifest.json");
+        let j = Json::parse_file(path.to_str().unwrap())?;
+        Manifest::from_json(&j, artifact_dir)
+    }
+
+    pub fn from_json(j: &Json, dir: &Path) -> Result<Manifest> {
+        let lj = j.req("layout")?;
+        let mut metric_slots = BTreeMap::new();
+        if let Ok(ms) = lj.req("metric_slots") {
+            for (k, v) in ms.as_obj()? {
+                metric_slots.insert(
+                    k.clone(),
+                    v.as_arr()?
+                        .iter()
+                        .map(|s| s.as_str().map(str::to_string))
+                        .collect::<Result<_>>()?,
+                );
+            }
+        }
+        let layout = Layout {
+            p_size: lj.req("p_size")?.as_usize()?,
+            s_size: lj.req("s_size")?.as_usize()?,
+            n_metrics: lj.req("n_metrics")?.as_usize()?,
+            total: lj.req("total")?.as_usize()?,
+            metrics_offset: lj.req("metrics_offset")?.as_usize()?,
+            m_offset: lj.req("m_offset")?.as_usize()?,
+            v_offset: lj.req("v_offset")?.as_usize()?,
+            state_offset: lj.req("state_offset")?.as_usize()?,
+            metric_slots,
+        };
+        let mut entries = BTreeMap::new();
+        for (name, ej) in j.req("entries")?.as_obj()? {
+            entries.insert(
+                name.clone(),
+                EntrySig {
+                    file: ej.req("file")?.as_str()?.to_string(),
+                    tuple_output: ej.get_or_bool("tuple_output", false),
+                    inputs: ej
+                        .req("inputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(TensorSig::from_json)
+                        .collect::<Result<_>>()?,
+                    outputs: ej
+                        .req("outputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(TensorSig::from_json)
+                        .collect::<Result<_>>()?,
+                },
+            );
+        }
+        let m = Manifest {
+            name: j.req("name")?.as_str()?.to_string(),
+            config: j.req("config")?.clone(),
+            layout,
+            params: j
+                .req("params")?
+                .as_arr()?
+                .iter()
+                .map(TensorSig::from_json)
+                .collect::<Result<_>>()?,
+            state: j
+                .req("state")?
+                .as_arr()?
+                .iter()
+                .map(TensorSig::from_json)
+                .collect::<Result<_>>()?,
+            param_count: j.req("param_count")?.as_usize()?,
+            entries,
+            dir: dir.to_path_buf(),
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySig> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{}' has no entry '{name}'", self.name))
+    }
+
+    pub fn hlo_path(&self, entry: &EntrySig) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Internal consistency: param sizes sum to p_size, offsets are
+    /// sorted and dense, layout arithmetic holds.
+    pub fn validate(&self) -> Result<()> {
+        let psum: usize = self.params.iter().map(TensorSig::numel).sum();
+        if psum != self.layout.p_size {
+            bail!("param sizes sum to {psum}, layout says {}", self.layout.p_size);
+        }
+        let ssum: usize = self.state.iter().map(TensorSig::numel).sum();
+        if ssum != self.layout.s_size {
+            bail!("state sizes sum to {ssum}, layout says {}", self.layout.s_size);
+        }
+        let expect_total = 3 * self.layout.p_size + self.layout.s_size + self.layout.n_metrics;
+        if expect_total != self.layout.total {
+            bail!("layout total {} != 3p+s+metrics {expect_total}", self.layout.total);
+        }
+        let mut off = 0usize;
+        for p in &self.params {
+            match p.offset {
+                Some(o) if o == off => off += p.numel(),
+                other => bail!("param {} offset {:?}, expected {off}", p.name, other),
+            }
+        }
+        Ok(())
+    }
+
+    /// Look up a parameter by manifest name (e.g. "params/embed").
+    pub fn param(&self, name: &str) -> Result<&TensorSig> {
+        self.params
+            .iter()
+            .find(|p| p.name == name)
+            .ok_or_else(|| anyhow!("no parameter '{name}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest_json() -> Json {
+        Json::parse(
+            r#"{
+              "name": "t",
+              "config": {"d_model": 8},
+              "layout": {"p_size": 6, "s_size": 2, "n_metrics": 4,
+                         "total": 24, "metrics_offset": 20,
+                         "m_offset": 6, "v_offset": 12, "state_offset": 18,
+                         "metric_slots": {"train_step": ["loss","u","u","gnorm"]}},
+              "params": [
+                 {"name": "params/a", "shape": [2,2], "dtype": "float32", "offset": 0, "size": 4},
+                 {"name": "params/b", "shape": [2], "dtype": "float32", "offset": 4, "size": 2}],
+              "state": [{"name": "state/cache", "shape": [2], "dtype": "float32", "offset": 0, "size": 2}],
+              "param_count": 6,
+              "entries": {
+                "train_step": {"file": "train_step.hlo.txt", "tuple_output": false,
+                  "inputs": [{"name": "flat", "shape": [24], "dtype": "float32"},
+                             {"name": "step", "shape": [], "dtype": "int32"},
+                             {"name": "tokens", "shape": [1, 5], "dtype": "int32"}],
+                  "outputs": [{"name": "out", "shape": [24], "dtype": "float32"}]}}
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let m = Manifest::from_json(&sample_manifest_json(), Path::new("/tmp")).unwrap();
+        assert_eq!(m.layout.total, 24);
+        assert_eq!(m.param("params/b").unwrap().numel(), 2);
+        let e = m.entry("train_step").unwrap();
+        assert_eq!(e.inputs.len(), 3);
+        assert!(!e.tuple_output);
+        assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_layout() {
+        let mut j = sample_manifest_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Obj(layout)) = m.get_mut("layout") {
+                layout.insert("p_size".into(), Json::Num(7.0));
+            }
+        }
+        assert!(Manifest::from_json(&j, Path::new("/tmp")).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Runtime layer: PJRT client wrapper around the AOT-compiled HLO
+//! artifacts (the `xla` crate / xla_extension 0.5.1 CPU plugin).
+//!
+//! `engine` owns compilation and the flat-buffer execution ABI;
+//! `manifest` is the contract with `python/compile/aot.py`;
+//! `checkpoint` persists the flat buffer.
+
+pub mod checkpoint;
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, FlatBuf, StepTimes};
+pub use manifest::Manifest;

@@ -1,0 +1,140 @@
+//! Tiny CLI argument parser (no `clap` in the offline registry).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed getters and a generated usage string.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    known_flags: Vec<&'static str>,
+}
+
+impl Args {
+    /// Parse argv (minus the subcommand), treating names in
+    /// `known_flags` as boolean flags that take no value.
+    pub fn parse(argv: &[String], known_flags: &[&'static str]) -> Result<Args> {
+        let mut args = Args { known_flags: known_flags.to_vec(), ..Default::default() };
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&rest) {
+                    args.flags.push(rest.to_string());
+                } else {
+                    let v = argv
+                        .get(i + 1)
+                        .ok_or_else(|| anyhow!("option --{rest} needs a value"))?;
+                    args.options.insert(rest.to_string(), v.clone());
+                    i += 1;
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn req(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name}: {e}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name}: {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name}: {e}")),
+        }
+    }
+
+    /// Error if an unexpected option was passed (catches typos).
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.options.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k}; known: {}", known.join(", "));
+            }
+        }
+        for f in &self.flags {
+            if !self.known_flags.contains(&f.as_str()) && !known.contains(&f.as_str()) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_mixed() {
+        let a = Args::parse(
+            &sv(&["pos1", "--k", "v", "--x=3", "--verbose", "pos2"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+        assert_eq!(a.get("k"), Some("v"));
+        assert_eq!(a.usize_or("x", 0).unwrap(), 3);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&sv(&["--k"]), &[]).is_err());
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse(&sv(&["--n", "12", "--f", "0.5"]), &[]).unwrap();
+        assert_eq!(a.usize_or("n", 0).unwrap(), 12);
+        assert_eq!(a.f64_or("f", 0.0).unwrap(), 0.5);
+        assert_eq!(a.usize_or("absent", 9).unwrap(), 9);
+        assert!(a.req("absent").is_err());
+        assert!(a.usize_or("f", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_option_detection() {
+        let a = Args::parse(&sv(&["--good", "1", "--bad", "2"]), &[]).unwrap();
+        assert!(a.check_known(&["good"]).is_err());
+        assert!(a.check_known(&["good", "bad"]).is_ok());
+    }
+}

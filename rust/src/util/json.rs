@@ -1,0 +1,479 @@
+//! Minimal JSON parser/serializer.
+//!
+//! The crate registry available in this environment is offline and does
+//! not carry `serde_json`, so manifests, configs, checkpoint headers and
+//! run logs are handled by this self-contained implementation (DESIGN.md
+//! §3). Supports the full JSON grammar minus exotic number forms; numbers
+//! are stored as `f64` (adequate: all integers we exchange fit 2^53).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A JSON value. Objects use `BTreeMap` so serialization is deterministic.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    // ----- constructors -----
+    pub fn obj() -> Json {
+        Json::Obj(BTreeMap::new())
+    }
+
+    pub fn from_pairs(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    // ----- accessors -----
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// `get` that fails with a path-bearing error (for manifest parsing).
+    pub fn req(&self, key: &str) -> Result<&Json> {
+        self.get(key).ok_or_else(|| anyhow!("missing key '{key}'"))
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            _ => bail!("expected number, got {}", self.type_name()),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let f = self.as_f64()?;
+        if f < 0.0 || f.fract() != 0.0 {
+            bail!("expected non-negative integer, got {f}");
+        }
+        Ok(f as usize)
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        let f = self.as_f64()?;
+        if f.fract() != 0.0 {
+            bail!("expected integer, got {f}");
+        }
+        Ok(f as i64)
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => bail!("expected string, got {}", self.type_name()),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {}", self.type_name()),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(a) => Ok(a),
+            _ => bail!("expected array, got {}", self.type_name()),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Ok(m),
+            _ => bail!("expected object, got {}", self.type_name()),
+        }
+    }
+
+    /// Typed convenience getters with defaults (config parsing).
+    pub fn get_or_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64().ok()).unwrap_or(default)
+    }
+
+    pub fn get_or_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_usize().ok()).unwrap_or(default)
+    }
+
+    pub fn get_or_bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool().ok()).unwrap_or(default)
+    }
+
+    pub fn get_or_str(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(|v| v.as_str().ok().map(str::to_string))
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn set(&mut self, key: &str, val: Json) {
+        if let Json::Obj(m) = self {
+            m.insert(key.to_string(), val);
+        }
+    }
+
+    fn type_name(&self) -> &'static str {
+        match self {
+            Json::Null => "null",
+            Json::Bool(_) => "bool",
+            Json::Num(_) => "number",
+            Json::Str(_) => "string",
+            Json::Arr(_) => "array",
+            Json::Obj(_) => "object",
+        }
+    }
+
+    // ----- parsing -----
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            bail!("trailing characters at byte {}", p.pos);
+        }
+        Ok(v)
+    }
+
+    pub fn parse_file(path: &str) -> Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {path}: {e}"))?;
+        Json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))
+    }
+
+    // ----- serialization -----
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, None, 0);
+        s
+    }
+
+    pub fn to_string_pretty(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, Some(1), 0);
+        s
+    }
+
+    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => write_num(out, *n),
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent, depth + 1);
+                    v.write(out, indent, depth + 1);
+                }
+                if !a.is_empty() {
+                    newline_indent(out, indent, depth);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent, depth + 1);
+                    write_escaped(out, k);
+                    out.push(':');
+                    if indent.is_some() {
+                        out.push(' ');
+                    }
+                    v.write(out, indent, depth + 1);
+                }
+                if !m.is_empty() {
+                    newline_indent(out, indent, depth);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
+    if let Some(n) = indent {
+        out.push('\n');
+        for _ in 0..n * depth {
+            out.push(' ');
+        }
+    }
+}
+
+fn write_num(out: &mut String, n: f64) {
+    if n.fract() == 0.0 && n.abs() < 9e15 {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        let _ = write!(out, "{n}");
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.bytes
+            .get(self.pos)
+            .copied()
+            .ok_or_else(|| anyhow!("unexpected end of input"))
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.peek()? != b {
+            bail!("expected '{}' at byte {}", b as char, self.pos);
+        }
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.literal("true", Json::Bool(true)),
+            b'f' => self.literal("false", Json::Bool(false)),
+            b'n' => self.literal("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn literal(&mut self, word: &str, val: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(val)
+        } else {
+            bail!("invalid literal at byte {}", self.pos)
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        Ok(Json::Num(s.parse::<f64>().map_err(|e| anyhow!("bad number '{s}': {e}"))?))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            let b = self.peek()?;
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.pos += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'u' => {
+                            let hex = std::str::from_utf8(
+                                self.bytes
+                                    .get(self.pos..self.pos + 4)
+                                    .ok_or_else(|| anyhow!("truncated \\u escape"))?,
+                            )?;
+                            self.pos += 4;
+                            let mut cp = u32::from_str_radix(hex, 16)?;
+                            // Surrogate pair handling.
+                            if (0xD800..0xDC00).contains(&cp)
+                                && self.bytes.get(self.pos) == Some(&b'\\')
+                                && self.bytes.get(self.pos + 1) == Some(&b'u')
+                            {
+                                let lo_hex = std::str::from_utf8(
+                                    self.bytes
+                                        .get(self.pos + 2..self.pos + 6)
+                                        .ok_or_else(|| anyhow!("truncated surrogate"))?,
+                                )?;
+                                let lo = u32::from_str_radix(lo_hex, 16)?;
+                                if (0xDC00..0xE000).contains(&lo) {
+                                    self.pos += 6;
+                                    cp = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                }
+                            }
+                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        }
+                        other => bail!("bad escape '\\{}'", other as char),
+                    }
+                }
+                b if b < 0x80 => s.push(b as char),
+                b => {
+                    // Multi-byte UTF-8: copy the remaining continuation bytes.
+                    let len = if b >= 0xF0 {
+                        4
+                    } else if b >= 0xE0 {
+                        3
+                    } else {
+                        2
+                    };
+                    let start = self.pos - 1;
+                    self.pos = start + len;
+                    let chunk = self
+                        .bytes
+                        .get(start..start + len)
+                        .ok_or_else(|| anyhow!("truncated utf-8"))?;
+                    s.push_str(std::str::from_utf8(chunk)?);
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b']' {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b']' => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                c => bail!("expected ',' or ']', got '{}' at byte {}", c as char, self.pos),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek()? == b'}' {
+            self.pos += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            map.insert(key, val);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b'}' => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(map));
+                }
+                c => bail!("expected ',' or '}}', got '{}' at byte {}", c as char, self.pos),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("-3.5e2").unwrap(), Json::Num(-350.0));
+        assert_eq!(Json::parse("\"a\\nb\"").unwrap(), Json::Str("a\nb".into()));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let v = Json::parse(r#"{"a": [1, 2, {"b": false}], "c": "x"}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("c").unwrap().as_str().unwrap(), "x");
+    }
+
+    #[test]
+    fn roundtrip() {
+        let text = r#"{"m":{"k":[1,2.5,null,true,"séq"]},"z":-0.125}"#;
+        let v = Json::parse(text).unwrap();
+        let v2 = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(v, v2);
+        let v3 = Json::parse(&v.to_string_pretty()).unwrap();
+        assert_eq!(v, v3);
+    }
+
+    #[test]
+    fn unicode_passthrough() {
+        let v = Json::parse("\"héllo ✓\"").unwrap();
+        assert_eq!(v.as_str().unwrap(), "héllo ✓");
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("12 34").is_err());
+    }
+
+    #[test]
+    fn getters() {
+        let v = Json::parse(r#"{"n": 5, "s": "x", "b": true}"#).unwrap();
+        assert_eq!(v.get_or_usize("n", 0), 5);
+        assert_eq!(v.get_or_usize("missing", 7), 7);
+        assert_eq!(v.get_or_str("s", "d"), "x");
+        assert!(v.get_or_bool("b", false));
+        assert!(v.req("missing").is_err());
+    }
+}

@@ -1,0 +1,100 @@
+//! Structured run logging: timestamped stderr lines plus an optional
+//! JSONL metrics sink (one JSON object per training/eval event) that the
+//! bench harness and EXPERIMENTS.md tooling consume.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use anyhow::Result;
+
+use super::json::Json;
+
+pub fn now_secs() -> f64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs_f64()).unwrap_or(0.0)
+}
+
+/// Log an informational line to stderr with a wall-clock prefix.
+pub fn info(msg: &str) {
+    eprintln!("[{:.3}] {msg}", now_secs());
+}
+
+/// JSONL sink for structured metrics.
+pub struct MetricsLog {
+    file: Mutex<File>,
+}
+
+impl MetricsLog {
+    pub fn create(path: &Path) -> Result<MetricsLog> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(MetricsLog { file: Mutex::new(file) })
+    }
+
+    pub fn log(&self, mut record: Json) -> Result<()> {
+        record.set("ts", Json::Num(now_secs()));
+        let mut f = self.file.lock().unwrap();
+        writeln!(f, "{}", record.to_string())?;
+        Ok(())
+    }
+}
+
+/// Peak resident set size of this process in bytes (Linux, /proc).
+/// Used by the Table-5 wall-clock/memory bench.
+pub fn peak_rss_bytes() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
+/// Current resident set size in bytes.
+pub fn current_rss_bytes() -> u64 {
+    let Ok(statm) = std::fs::read_to_string("/proc/self/statm") else {
+        return 0;
+    };
+    let pages: u64 = statm.split_whitespace().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0);
+    pages * 4096
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_log_writes_jsonl() {
+        let dir = std::env::temp_dir().join("switchhead-logtest");
+        let path = dir.join("m.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let log = MetricsLog::create(&path).unwrap();
+        log.log(Json::from_pairs(vec![("step", Json::Num(1.0))])).unwrap();
+        log.log(Json::from_pairs(vec![("step", Json::Num(2.0))])).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let rec = Json::parse(lines[1]).unwrap();
+        assert_eq!(rec.get("step").unwrap().as_usize().unwrap(), 2);
+        assert!(rec.get("ts").is_some());
+    }
+
+    #[test]
+    fn rss_is_positive() {
+        assert!(peak_rss_bytes() > 0);
+        assert!(current_rss_bytes() > 0);
+    }
+}

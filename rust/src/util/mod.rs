@@ -1,0 +1,11 @@
+//! In-repo substrates replacing crates unavailable in the offline
+//! registry (DESIGN.md §3): JSON, PRNG, CLI parsing, logging, stats,
+//! PGM image output, and a property-testing mini-framework.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod pgm;
+pub mod prop;
+pub mod rng;
+pub mod stats;

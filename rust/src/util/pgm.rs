@@ -1,0 +1,97 @@
+//! PGM (portable graymap) image writer — used to dump attention maps and
+//! expert-selection heatmaps for the paper's Figures 2-6 analysis without
+//! any image-crate dependency. Any image viewer opens `.pgm`.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Write a row-major `[h, w]` matrix as an 8-bit PGM, min-max normalized.
+pub fn write_pgm(path: &Path, data: &[f32], h: usize, w: usize) -> Result<()> {
+    assert_eq!(data.len(), h * w, "data length != h*w");
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let lo = data.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let range = if hi > lo { hi - lo } else { 1.0 };
+    let mut out = Vec::with_capacity(h * w + 32);
+    write!(out, "P5\n{w} {h}\n255\n")?;
+    for &v in data {
+        let px = ((v - lo) / range * 255.0).round().clamp(0.0, 255.0) as u8;
+        out.push(px);
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// Upscale a matrix by integer factor before writing (tiny attention maps
+/// are otherwise hard to look at).
+pub fn write_pgm_scaled(path: &Path, data: &[f32], h: usize, w: usize, scale: usize) -> Result<()> {
+    let (sh, sw) = (h * scale, w * scale);
+    let mut big = vec![0.0f32; sh * sw];
+    for i in 0..sh {
+        for j in 0..sw {
+            big[i * sw + j] = data[(i / scale) * w + (j / scale)];
+        }
+    }
+    write_pgm(path, &big, sh, sw)
+}
+
+/// Also dump the raw values as CSV next to the image (for re-plotting).
+pub fn write_csv(path: &Path, data: &[f32], h: usize, w: usize) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut s = String::new();
+    for i in 0..h {
+        for j in 0..w {
+            if j > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("{:.6}", data[i * w + j]));
+        }
+        s.push('\n');
+    }
+    std::fs::write(path, s)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pgm_header_and_size() {
+        let dir = std::env::temp_dir().join("switchhead-pgmtest");
+        let path = dir.join("t.pgm");
+        write_pgm(&path, &[0.0, 0.5, 1.0, 0.25], 2, 2).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.starts_with(b"P5\n2 2\n255\n"));
+        assert_eq!(bytes.len(), b"P5\n2 2\n255\n".len() + 4);
+        // max value maps to 255, min to 0
+        let px = &bytes[bytes.len() - 4..];
+        assert_eq!(px[0], 0);
+        assert_eq!(px[2], 255);
+    }
+
+    #[test]
+    fn scaled_is_blocky() {
+        let dir = std::env::temp_dir().join("switchhead-pgmtest");
+        let path = dir.join("s.pgm");
+        write_pgm_scaled(&path, &[0.0, 1.0, 1.0, 0.0], 2, 2, 3).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.starts_with(b"P5\n6 6\n255\n"));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("switchhead-pgmtest");
+        let path = dir.join("t.csv");
+        write_csv(&path, &[1.0, 2.0, 3.0, 4.0], 2, 2).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.starts_with("1.000000,2.000000"));
+    }
+}

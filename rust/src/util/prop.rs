@@ -1,0 +1,194 @@
+//! Property-testing mini-framework (no `proptest` in the offline
+//! registry). Runs a property against N pseudo-random cases with
+//! greedy input shrinking on failure.
+//!
+//! Used throughout `rust/tests/` for coordinator invariants (routing,
+//! batching, tokenizer round-trips, MAC-formula identities).
+
+use super::rng::Pcg;
+
+pub const DEFAULT_CASES: usize = 256;
+
+/// A generated test case with enough structure to shrink.
+pub trait Shrink: Clone + std::fmt::Debug {
+    /// Candidate smaller versions of `self`, most aggressive first.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+        }
+        out
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        out.push(self[..self.len() / 2].to_vec()); // drop second half
+        out.push(self[1..].to_vec()); // drop head
+        out.push(self[..self.len() - 1].to_vec()); // drop tail
+        // shrink one element
+        for (i, item) in self.iter().enumerate().take(4) {
+            for smaller in item.shrink() {
+                let mut v = self.clone();
+                v[i] = smaller;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl Shrink for String {} // strings shrink only via their container
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> =
+            self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink, C: Shrink> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b, self.2.clone())));
+        out.extend(self.2.shrink().into_iter().map(|c| (self.0.clone(), self.1.clone(), c)));
+        out
+    }
+}
+
+/// Run `prop` on `cases` inputs drawn by `gen`; on failure, shrink
+/// greedily and panic with the minimal counterexample.
+pub fn check<T, G, P>(seed: u64, cases: usize, mut gen: G, prop: P)
+where
+    T: Shrink,
+    G: FnMut(&mut Pcg) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Pcg::new(seed, 0xC0FFEE);
+    for case_idx in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (min_input, min_msg) = shrink_loop(input, msg, &prop);
+            panic!(
+                "property failed (case {case_idx}, seed {seed}):\n  input: {min_input:?}\n  error: {min_msg}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Shrink, P: Fn(&T) -> Result<(), String>>(
+    mut input: T,
+    mut msg: String,
+    prop: &P,
+) -> (T, String) {
+    // Greedy: keep taking the first shrink that still fails.
+    'outer: for _ in 0..1000 {
+        for cand in input.shrink() {
+            if let Err(m) = prop(&cand) {
+                input = cand;
+                msg = m;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (input, msg)
+}
+
+/// Convenience: generate a vector of `len in [0, max_len]` items.
+pub fn vec_of<T>(rng: &mut Pcg, max_len: usize, mut item: impl FnMut(&mut Pcg) -> T) -> Vec<T> {
+    let len = rng.below(max_len + 1);
+    (0..len).map(|_| item(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        check(
+            1,
+            128,
+            |rng| vec_of(rng, 20, |r| r.below(100)),
+            |v: &Vec<usize>| {
+                let mut sorted = v.clone();
+                sorted.sort();
+                if sorted.len() == v.len() {
+                    Ok(())
+                } else {
+                    Err("length changed".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_and_shrinks() {
+        check(
+            2,
+            256,
+            |rng| vec_of(rng, 30, |r| r.below(1000)),
+            |v: &Vec<usize>| {
+                // False property: no vector contains a value >= 500.
+                if v.iter().all(|&x| x < 500) {
+                    Ok(())
+                } else {
+                    Err("contains large value".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrink_usize_reaches_zero() {
+        let s = 10usize.shrink();
+        assert!(s.contains(&0));
+        assert!(s.contains(&5));
+    }
+}
