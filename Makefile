@@ -1,0 +1,41 @@
+# SwitchHead reproduction — build/test entry points.
+#
+# `make check` is the tier-1 gate: it needs ONLY a Rust toolchain — no
+# Python, no network, no artifacts/ directory. The artifact-dependent
+# PJRT integration tests skip themselves when artifacts/ is absent; the
+# native backend (rust/src/model/) carries the numeric tests.
+
+CONFIGS ?= $(wildcard configs/*.json)
+CARGO ?= cargo
+
+.PHONY: check build test artifacts smoke bench-tables clean
+
+## Tier-1: build + full test suite, artifact-free.
+check:
+	$(CARGO) build --release
+	$(CARGO) test -q
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+## Native-backend latency smoke (no artifacts needed): step_latency
+## falls back to timing NativeEngine score/next_logits per config.
+smoke:
+	$(CARGO) bench --bench step_latency
+
+## Analytic paper tables, artifact-free (--quick is forced when
+## artifacts/ is missing; measured rows need `make artifacts` first).
+bench-tables: build
+	$(CARGO) run --release --bin switchhead -- bench-tables --quick
+
+## AOT-compile HLO artifact bundles (requires the Python/JAX toolchain;
+## NOT needed for make check).
+artifacts:
+	python3 -m python.compile.aot $(foreach c,$(CONFIGS),--config $(c)) --out-root artifacts
+
+clean:
+	$(CARGO) clean
+	rm -rf runs .cache

@@ -1,13 +1,53 @@
-//! Micro-benchmark: per-entry PJRT execution latency (train_step /
-//! eval_step / score) for the parameter-matched tiny family. This is the
-//! L3 §Perf instrument — it separates coordinator overhead (upload +
-//! readback) from device execute time. See EXPERIMENTS.md §Perf.
+//! Micro-benchmark: per-entry execution latency (train_step / eval_step
+//! / score) for the parameter-matched tiny family. This is the L3 §Perf
+//! instrument — it separates coordinator overhead (upload + readback)
+//! from device execute time. See EXPERIMENTS.md §Perf.
+//!
+//! Smoke mode: when a config's PJRT artifacts are absent (clean
+//! checkout, no Python), the native backend is timed instead —
+//! `score` and `next_logits` on host buffers — so `make smoke` always
+//! produces latency rows. Set SWITCHHEAD_BENCH_NATIVE=0 to disable the
+//! fallback.
 use std::path::Path;
 
 use switchhead::bench::time;
 use switchhead::config::{ModelConfig, Task};
+use switchhead::model::NativeEngine;
 use switchhead::runtime::Engine;
 use switchhead::util::rng::Pcg;
+
+/// Native-backend smoke rows (artifact-free).
+fn bench_native(cfg: &ModelConfig, name: &str, iters: usize) {
+    let engine = match NativeEngine::new(cfg, 42) {
+        Ok(e) => e,
+        Err(e) => return println!("SKIP {name} (native): {e:#}"),
+    };
+    let mut rng = Pcg::new(1, 1);
+    match cfg.task {
+        Task::Lm => {
+            let t1 = cfg.seq_len + 1;
+            let tok: Vec<i32> =
+                (0..cfg.batch_size * t1).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+            let r = time(&format!("{name}/native score"), 1, iters, || {
+                let _ = engine.score(&tok, &[cfg.batch_size, t1]).unwrap();
+            });
+            println!("{}", r.row());
+            let tok2: Vec<i32> = tok[..cfg.batch_size * cfg.seq_len].to_vec();
+            let r = time(&format!("{name}/native next_logits"), 1, iters, || {
+                let _ = engine.next_logits(&tok2, &[cfg.batch_size, cfg.seq_len]).unwrap();
+            });
+            println!("{}", r.row());
+        }
+        Task::ListOps => {
+            let (tok, _lab) =
+                switchhead::data::listops::gen_batch(&mut rng, cfg.batch_size, cfg.seq_len);
+            let r = time(&format!("{name}/native class_logits"), 1, iters, || {
+                let _ = engine.class_logits(&tok, &[cfg.batch_size, cfg.seq_len]).unwrap();
+            });
+            println!("{}", r.row());
+        }
+    }
+}
 
 fn bench_config(name: &str, iters: usize) {
     let cfg = match ModelConfig::load(&format!("configs/{name}.json")) {
@@ -16,7 +56,10 @@ fn bench_config(name: &str, iters: usize) {
     };
     let dir = Path::new("artifacts").join(&cfg.name);
     if !dir.join("manifest.json").exists() {
-        return println!("SKIP {name}: artifacts not built");
+        if std::env::var("SWITCHHEAD_BENCH_NATIVE").as_deref() == Ok("0") {
+            return println!("SKIP {name}: artifacts not built");
+        }
+        return bench_native(&cfg, name, iters.min(10));
     }
     let engine =
         Engine::load(&dir, Some(&["init", "train_step", "eval_step", "score", "metrics"]))

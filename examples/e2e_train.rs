@@ -13,14 +13,14 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+use switchhead::util::error::{Context, Result};
 
 use switchhead::config::ModelConfig;
 use switchhead::coordinator::scorer;
 use switchhead::coordinator::trainer::{train, TrainOpts};
 use switchhead::data::{corpus_for, synth, zeroshot, TRAIN_CHARS, VALID_CHARS};
 use switchhead::macs::param_count;
-use switchhead::runtime::{checkpoint, Engine};
+use switchhead::runtime::{checkpoint, Engine, PjrtBackend};
 use switchhead::util::rng::Pcg;
 
 fn main() -> Result<()> {
@@ -65,13 +65,14 @@ fn main() -> Result<()> {
     let n = 60;
     let mut rng = Pcg::new(7, 1);
     let lam: Vec<_> = (0..n).map(|_| zeroshot::gen_lambada(lex, &mut rng, 5)).collect();
-    let lam_acc = scorer::eval_choice_tasks(&engine, &cfg, bpe, &lam, &flat)?;
+    let backend = PjrtBackend::new(&engine, &flat);
+    let lam_acc = scorer::eval_choice_tasks(&backend, &cfg, bpe, &lam)?;
     let mut rng = Pcg::new(7, 2);
     let bl: Vec<_> = (0..n).map(|_| zeroshot::gen_blimp(lex, &mut rng)).collect();
-    let bl_acc = scorer::eval_minimal_pairs(&engine, &cfg, bpe, &bl, &flat)?;
+    let bl_acc = scorer::eval_minimal_pairs(&backend, &cfg, bpe, &bl)?;
     let mut rng = Pcg::new(7, 3);
     let cbt: Vec<_> = (0..n).map(|_| zeroshot::gen_cbt(lex, &mut rng, 10)).collect();
-    let cbt_acc = scorer::eval_choice_tasks(&engine, &cfg, bpe, &cbt, &flat)?;
+    let cbt_acc = scorer::eval_choice_tasks(&backend, &cfg, bpe, &cbt)?;
 
     // --- report ---
     let mut md = String::new();

@@ -8,7 +8,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Result};
+use switchhead::util::error::{anyhow, Result};
 
 use switchhead::config::ModelConfig;
 use switchhead::coordinator::analysis;

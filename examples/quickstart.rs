@@ -7,7 +7,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::Result;
+use switchhead::util::error::Result;
 
 use switchhead::config::ModelConfig;
 use switchhead::coordinator::trainer::{train, TrainOpts};

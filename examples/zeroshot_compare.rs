@@ -9,14 +9,14 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+use switchhead::util::error::{Context, Result};
 
 use switchhead::bench::Table;
 use switchhead::config::ModelConfig;
 use switchhead::coordinator::scorer;
 use switchhead::coordinator::trainer::{train, TrainOpts};
 use switchhead::data::{corpus_for, synth, zeroshot, TRAIN_CHARS, VALID_CHARS};
-use switchhead::runtime::{checkpoint, Engine};
+use switchhead::runtime::{checkpoint, Engine, PjrtBackend};
 use switchhead::util::rng::Pcg;
 
 struct Scores {
@@ -61,11 +61,12 @@ fn run_one(config: &str, steps: usize, n: usize) -> Result<Scores> {
     let mut rng = Pcg::new(7, 3);
     let cbt: Vec<_> = (0..n).map(|_| zeroshot::gen_cbt(lex, &mut rng, 10)).collect();
 
+    let backend = PjrtBackend::new(&engine, &flat);
     Ok(Scores {
         ppl: report.final_metric,
-        lambada: scorer::eval_choice_tasks(&engine, &cfg, bpe, &lam, &flat)?,
-        blimp: scorer::eval_minimal_pairs(&engine, &cfg, bpe, &bl, &flat)?,
-        cbt: scorer::eval_choice_tasks(&engine, &cfg, bpe, &cbt, &flat)?,
+        lambada: scorer::eval_choice_tasks(&backend, &cfg, bpe, &lam)?,
+        blimp: scorer::eval_minimal_pairs(&backend, &cfg, bpe, &bl)?,
+        cbt: scorer::eval_choice_tasks(&backend, &cfg, bpe, &cbt)?,
     })
 }
 

@@ -1,0 +1,151 @@
+"""Cross-check the native-backend reference (native_ref.py) against the
+JAX model (python/compile/layers.py) with shared weights.
+
+Run from the repo root:
+
+    python3 -m python.tools.check_native_vs_jax
+
+For each covered configuration this builds weights with the native
+initializer, loads them into the JAX pytree layout, runs both forward
+passes on the same tokens, and asserts the next-token log-probabilities
+agree. This pins the semantics of rust/src/model/ to the L2 reference
+without needing artifacts or a Rust toolchain.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from python.compile import layers
+from python.tools import native_ref as nr
+
+
+def to_jax_params(cfg: nr.Cfg, p: dict) -> list:
+    """Convert native_ref weights into the per-layer pytrees block_apply
+    expects (squeezing the 1-expert axis for dense projections)."""
+    import jax.numpy as jnp
+
+    out = []
+    for lp in p["layers"]:
+        a = lp["attn"]
+        if cfg.family == "switchhead":
+            ja = {
+                "w_k": a["w_k"] if cfg.moe_k else a["w_k"][:, 0],
+                "w_q": a["w_q"] if cfg.moe_q else a["w_q"][:, 0],
+                "w_v": a["w_v"] if cfg.moe_v else a["w_v"][:, 0],
+                "w_o": a["w_o"] if cfg.moe_o else a["w_o"][:, 0],
+                "w_sel_s": a["w_sel_s"],
+            }
+            if not cfg.shared_selection:
+                ja["w_sel_d"] = a["w_sel_d"]
+        else:
+            ja = {k: v for k, v in a.items() if not k.startswith(("w_kr", "u_", "v_"))}
+        if cfg.pos == "xl":
+            ja["w_kr"] = a["w_kr"]
+            ja["u_bias"] = a["u_bias"]
+            ja["v_bias"] = a["v_bias"]
+        jl = {
+            "ln1": {k: jnp.asarray(v, jnp.float32) for k, v in lp["ln1"].items()},
+            "ln2": {k: jnp.asarray(v, jnp.float32) for k, v in lp["ln2"].items()},
+            "attn": {k: jnp.asarray(v, jnp.float32) for k, v in ja.items()},
+            "mlp": {k: jnp.asarray(v, jnp.float32) for k, v in lp["mlp"].items()},
+        }
+        out.append(jl)
+    return out
+
+
+def jax_score(cfg: nr.Cfg, p: dict, tokens: np.ndarray) -> np.ndarray:
+    import jax.numpy as jnp
+
+    jcfg = layers.ModelConfig.from_dict(cfg.to_json_dict())
+    jcfg.use_pallas = False
+    jlayers = to_jax_params(cfg, p)
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    b, t = inp.shape
+    x = jnp.asarray(p["embed"], jnp.float32)[inp] * jnp.sqrt(float(cfg.d_model))
+    for li in range(cfg.n_layers):
+        cache = (
+            jnp.zeros((b, cfg.seq_len, cfg.d_model), jnp.float32)
+            if cfg.pos == "xl"
+            else None
+        )
+        x, _, _ = layers.block_apply(jcfg, jlayers[li], x, cache)
+    h = layers.layer_norm(x, {"g": jnp.ones(cfg.d_model), "b": jnp.zeros(cfg.d_model)})
+    logits = h @ jnp.asarray(p["head"], jnp.float32)
+    import jax
+
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    sel = jnp.take_along_axis(logits, jnp.asarray(tgt)[..., None], axis=-1)[..., 0]
+    return np.asarray(sel - logz)
+
+
+def jax_class_logits(cfg: nr.Cfg, p: dict, tokens: np.ndarray) -> np.ndarray:
+    import jax.numpy as jnp
+
+    jcfg = layers.ModelConfig.from_dict(cfg.to_json_dict())
+    jcfg.use_pallas = False
+    jlayers = to_jax_params(cfg, p)
+    pad_mask = jnp.asarray(tokens != 0)
+    x = jnp.asarray(p["embed"], jnp.float32)[tokens] * jnp.sqrt(float(cfg.d_model))
+    for li in range(cfg.n_layers):
+        x, _, _ = layers.block_apply(jcfg, jlayers[li], x, None, pad_mask=pad_mask)
+    h = layers.layer_norm(x, {"g": jnp.ones(cfg.d_model), "b": jnp.zeros(cfg.d_model)})
+    return np.asarray(h[:, 0] @ jnp.asarray(p["head"], jnp.float32))
+
+
+def check_listops() -> float:
+    cfg = nr.Cfg(name="listops-sh", family="switchhead", pos="none", task="listops")
+    p = nr.init_model(cfg, seed=13)
+    rng = nr.Pcg(99, 8)
+    tokens = np.array(
+        [rng.below(cfg.vocab_size) for _ in range(cfg.batch_size * cfg.seq_len)],
+        dtype=np.int64,
+    ).reshape(cfg.batch_size, cfg.seq_len)
+    tokens[:, -3:] = 0  # trailing padding
+    ours = nr.class_logits(cfg, p, tokens)
+    theirs = jax_class_logits(cfg, p, tokens)
+    diff = float(np.max(np.abs(ours - theirs)))
+    status = "OK " if diff < 2e-4 else "FAIL"
+    print(f"{status} {'listops-pad-mask':<28} max|dlogit| = {diff:.2e}")
+    assert diff < 2e-4, f"listops: native_ref disagrees with JAX ({diff})"
+    return diff
+
+
+CASES = [
+    ("switchall-xl", dict(family="switchhead", pos="xl", mlp_type="sigma_moe")),
+    ("switchhead-xl-dense-mlp", dict(family="switchhead", pos="xl")),
+    ("switchhead-rope", dict(family="switchhead", pos="rope")),
+    ("switchhead-softmax-router", dict(family="switchhead", pos="xl", att_router="softmax")),
+    ("switchhead-shared-sel", dict(family="switchhead", pos="xl", shared_selection=True)),
+    ("switchhead-all-moe", dict(family="switchhead", pos="xl", moe_k=True, moe_q=True)),
+    ("dense-xl", dict(family="dense", pos="xl")),
+    ("dense-rope", dict(family="dense", pos="rope")),
+    ("dense-nopos", dict(family="dense", pos="none")),
+    ("moa-xl", dict(family="moa", pos="xl")),
+    ("moa-nopos", dict(family="moa", pos="none")),
+]
+
+
+def main():
+    worst = 0.0
+    for name, kw in CASES:
+        cfg = nr.Cfg(name=name, **kw)
+        p = nr.init_model(cfg, seed=13)
+        rng = nr.Pcg(99, 7)
+        tokens = np.array(
+            [rng.below(cfg.vocab_size) for _ in range(cfg.batch_size * (cfg.seq_len + 1))],
+            dtype=np.int64,
+        ).reshape(cfg.batch_size, cfg.seq_len + 1)
+        ours = nr.score(cfg, p, tokens)
+        theirs = jax_score(cfg, p, tokens)
+        diff = float(np.max(np.abs(ours - theirs)))
+        worst = max(worst, diff)
+        status = "OK " if diff < 2e-4 else "FAIL"
+        print(f"{status} {name:<28} max|dlogp| = {diff:.2e}")
+        assert diff < 2e-4, f"{name}: native_ref disagrees with JAX ({diff})"
+    worst = max(worst, check_listops())
+    print(f"all {len(CASES) + 1} cases agree (worst {worst:.2e})")
+
+
+if __name__ == "__main__":
+    main()

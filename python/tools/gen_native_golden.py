@@ -1,0 +1,62 @@
+"""Generate the golden vectors for rust/tests/native.rs.
+
+Run from the repo root after any change to the native forward-pass
+semantics (and after re-validating with check_native_vs_jax):
+
+    python3 -m python.tools.gen_native_golden
+
+Writes rust/tests/golden/<name>.json with the config, seed, tokens and
+the expected score / next_logits values computed by the float64 numpy
+twin (native_ref.py). The Rust side recomputes in f32 and compares with
+a tolerance that absorbs summation-order and libm-ulp noise while
+catching real numeric regressions.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from python.tools import native_ref as nr
+
+SEED = 13
+TOKEN_STREAM = 7
+
+GOLDENS = [
+    nr.Cfg(name="golden-switchall-xl", family="switchhead", pos="xl",
+           mlp_type="sigma_moe"),
+    nr.Cfg(name="golden-dense-rope", family="dense", pos="rope"),
+    nr.Cfg(name="golden-moa-xl", family="moa", pos="xl"),
+]
+
+
+def main():
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "tests", "golden")
+    os.makedirs(out_dir, exist_ok=True)
+    for cfg in GOLDENS:
+        p = nr.init_model(cfg, seed=SEED)
+        rng = nr.Pcg(99, TOKEN_STREAM)
+        b, t1 = cfg.batch_size, cfg.seq_len + 1
+        tokens = np.array([rng.below(cfg.vocab_size) for _ in range(b * t1)],
+                          dtype=np.int64).reshape(b, t1)
+        logp = nr.score(cfg, p, tokens)
+        nl = nr.next_logits(cfg, p, tokens[:, : cfg.seq_len])
+        blob = {
+            "config": cfg.to_json_dict(),
+            "seed": SEED,
+            "tokens": tokens.reshape(-1).tolist(),
+            "score": [round(float(v), 8) for v in logp.reshape(-1)],
+            "next_logits": [round(float(v), 8) for v in nl.reshape(-1)],
+        }
+        path = os.path.join(out_dir, f"{cfg.name}.json")
+        with open(path, "w") as f:
+            json.dump(blob, f, indent=1)
+            f.write("\n")
+        print(f"wrote {path}: {len(blob['score'])} scores, "
+              f"{len(blob['next_logits'])} logits")
+
+
+if __name__ == "__main__":
+    main()

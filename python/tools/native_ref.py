@@ -1,0 +1,517 @@
+"""Reference twin of the Rust native backend (``rust/src/model/``).
+
+This module mirrors, operation for operation, the pure-Rust SwitchHead
+forward pass: the ``Pcg`` PRNG (bit-exact integer port), the parameter
+initialization draw order, and the f32 forward computation (done here in
+float64 numpy, with weights cast through float32 to match the Rust
+storage type).
+
+It serves two purposes:
+
+1. ``check_native_vs_jax.py`` loads the weights produced here into the
+   JAX model (``python/compile/layers.py``) and asserts the forward
+   passes agree — validating that the native semantics match the L2
+   reference implementation.
+2. ``gen_native_golden.py`` uses it to emit the checked-in golden
+   vectors consumed by ``rust/tests/native.rs``. The Rust test compares
+   its f32 results against these f64 values with a small tolerance, so
+   summation-order and libm ulp differences are absorbed while real
+   numeric regressions are caught.
+
+Keep this file in lock-step with rust/src/model/{params,attention,block}.rs.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+M64 = (1 << 64) - 1
+NEG_INF = -1e9
+
+
+# ---------------------------------------------------------------------------
+# PRNG: bit-exact port of rust/src/util/rng.rs
+# ---------------------------------------------------------------------------
+
+
+def splitmix64(state: int):
+    state = (state + 0x9E3779B97F4A7C15) & M64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+    return state, (z ^ (z >> 31)) & M64
+
+
+class Pcg:
+    """PCG-XSH-RR 64/32, identical to util::rng::Pcg."""
+
+    def __init__(self, seed: int, stream: int):
+        _, s0 = splitmix64(seed & M64)
+        self.state = 0
+        self.inc = ((stream << 1) | 1) & M64
+        self.next_u32()
+        self.state = (self.state + s0) & M64
+        self.next_u32()
+
+    def next_u32(self) -> int:
+        old = self.state
+        self.state = (old * 6364136223846793005 + self.inc) & M64
+        xorshifted = (((old >> 18) ^ old) >> 27) & 0xFFFFFFFF
+        rot = old >> 59
+        return ((xorshifted >> rot) | (xorshifted << ((32 - rot) & 31))) & 0xFFFFFFFF
+
+    def next_u64(self) -> int:
+        return ((self.next_u32() << 32) | self.next_u32()) & M64
+
+    def below(self, n: int) -> int:
+        x = self.next_u64()
+        m = x * n
+        lo = m & M64
+        if lo < n:
+            t = ((M64 + 1) - n) % n
+            while lo < t:
+                x = self.next_u64()
+                m = x * n
+                lo = m & M64
+        return m >> 64
+
+    def uniform(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def normal(self) -> float:
+        u1 = max(self.uniform(), 1e-300)
+        u2 = self.uniform()
+        return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+
+
+# ---------------------------------------------------------------------------
+# Config (subset of ModelConfig relevant to the native forward pass)
+# ---------------------------------------------------------------------------
+
+
+class Cfg:
+    def __init__(self, **kw):
+        self.name = kw.get("name", "golden")
+        self.family = kw.get("family", "switchhead")
+        self.pos = kw.get("pos", "xl")
+        self.task = kw.get("task", "lm")
+        self.vocab_size = kw.get("vocab_size", 32)
+        self.d_model = kw.get("d_model", 16)
+        self.n_layers = kw.get("n_layers", 2)
+        self.n_heads = kw.get("n_heads", 2)
+        self.d_head = kw.get("d_head", 8)
+        self.d_ff = kw.get("d_ff", 32)
+        self.seq_len = kw.get("seq_len", 8)
+        self.batch_size = kw.get("batch_size", 2)
+        self.att_n_experts = kw.get("att_n_experts", 3)
+        self.att_k = kw.get("att_k", 2)
+        self.att_router = kw.get("att_router", "sigmoid")
+        self.moe_v = kw.get("moe_v", True)
+        self.moe_k = kw.get("moe_k", False)
+        self.moe_q = kw.get("moe_q", False)
+        self.moe_o = kw.get("moe_o", True)
+        self.shared_selection = kw.get("shared_selection", False)
+        self.moa_n_experts = kw.get("moa_n_experts", 4)
+        self.moa_k = kw.get("moa_k", 2)
+        self.mlp_type = kw.get("mlp_type", "dense")
+        self.mlp_n_experts = kw.get("mlp_n_experts", 3)
+        self.mlp_k = kw.get("mlp_k", 2)
+        self.mlp_d_expert = kw.get("mlp_d_expert", 8)
+        self.ls_n_classes = kw.get("ls_n_classes", 10)
+
+    @property
+    def ctx_len(self):
+        return 2 * self.seq_len if self.pos == "xl" else self.seq_len
+
+    def to_json_dict(self):
+        return {
+            k: getattr(self, k)
+            for k in [
+                "name", "family", "pos", "task", "vocab_size", "d_model",
+                "n_layers", "n_heads", "d_head", "d_ff", "seq_len",
+                "batch_size", "att_n_experts", "att_k", "att_router",
+                "moe_v", "moe_k", "moe_q", "moe_o", "shared_selection",
+                "moa_n_experts", "moa_k", "mlp_type", "mlp_n_experts",
+                "mlp_k", "mlp_d_expert", "ls_n_classes",
+            ]
+        }
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization — draw order must match rust/src/model/params.rs
+# ---------------------------------------------------------------------------
+
+INIT_STREAM = 0x5EED
+
+
+def _draw(rng: Pcg, shape, fan_in: int) -> np.ndarray:
+    n = int(np.prod(shape))
+    vals = np.array([rng.normal() for _ in range(n)], dtype=np.float64)
+    vals /= math.sqrt(float(fan_in))
+    # The Rust side stores f32; round-trip through f32 so weights agree.
+    return vals.astype(np.float32).astype(np.float64).reshape(shape)
+
+
+def init_model(cfg: Cfg, seed: int) -> dict:
+    """Returns a dict of numpy arrays. Draw order defines the layout."""
+    rng = Pcg(seed, INIT_STREAM)
+    d, dh, h = cfg.d_model, cfg.d_head, cfg.n_heads
+    n_out = cfg.ls_n_classes if cfg.task == "listops" else cfg.vocab_size
+    p = {
+        "embed": _draw(rng, (cfg.vocab_size, d), d),
+        "head": _draw(rng, (d, n_out), d),
+        "ln_f": {"g": np.ones(d), "b": np.zeros(d)},
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        lp = {"ln1": {"g": np.ones(d), "b": np.zeros(d)},
+              "ln2": {"g": np.ones(d), "b": np.zeros(d)}}
+        if cfg.family == "switchhead":
+            e = cfg.att_n_experts
+            a = {}
+            a["w_k"] = _draw(rng, (h, e if cfg.moe_k else 1, d, dh), d)
+            a["w_q"] = _draw(rng, (h, e if cfg.moe_q else 1, d, dh), d)
+            a["w_v"] = _draw(rng, (h, e if cfg.moe_v else 1, d, dh), d)
+            a["w_o"] = _draw(rng, (h, e if cfg.moe_o else 1, dh, d), dh)
+            a["w_sel_s"] = _draw(rng, (h, d, e), d)
+            if not cfg.shared_selection:
+                a["w_sel_d"] = _draw(rng, (h, d, e), d)
+            if cfg.pos == "xl":
+                a["w_kr"] = _draw(rng, (h, d, dh), d)
+                a["u_bias"] = np.zeros((h, dh))
+                a["v_bias"] = np.zeros((h, dh))
+            lp["attn"] = a
+        elif cfg.family == "dense":
+            a = {
+                "w_k": _draw(rng, (h, d, dh), d),
+                "w_q": _draw(rng, (h, d, dh), d),
+                "w_v": _draw(rng, (h, d, dh), d),
+                "w_o": _draw(rng, (h, dh, d), dh),
+            }
+            if cfg.pos == "xl":
+                a["w_kr"] = _draw(rng, (h, d, dh), d)
+                a["u_bias"] = np.zeros((h, dh))
+                a["v_bias"] = np.zeros((h, dh))
+            lp["attn"] = a
+        else:  # moa
+            e = cfg.moa_n_experts
+            a = {
+                "w_k": _draw(rng, (d, dh), d),
+                "w_v": _draw(rng, (d, dh), d),
+                "w_q": _draw(rng, (e, d, dh), d),
+                "w_o": _draw(rng, (e, dh, d), dh),
+                "w_sel": _draw(rng, (d, e), d),
+            }
+            if cfg.pos == "xl":
+                a["w_kr"] = _draw(rng, (d, dh), d)
+                a["u_bias"] = np.zeros(dh)
+                a["v_bias"] = np.zeros(dh)
+            lp["attn"] = a
+        if cfg.mlp_type == "sigma_moe":
+            lp["mlp"] = {
+                "w1": _draw(rng, (cfg.mlp_n_experts, d, cfg.mlp_d_expert), d),
+                "w2": _draw(rng, (cfg.mlp_n_experts, cfg.mlp_d_expert, d), cfg.mlp_d_expert),
+                "w_sel": _draw(rng, (d, cfg.mlp_n_experts), d),
+            }
+        else:
+            lp["mlp"] = {
+                "w1": _draw(rng, (d, cfg.d_ff), d),
+                "w2": _draw(rng, (cfg.d_ff, d), cfg.d_ff),
+            }
+        p["layers"].append(lp)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward pass — mirrors rust/src/model/{attention,block}.rs
+# ---------------------------------------------------------------------------
+
+
+def layer_norm(x, p):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = x.var(axis=-1, keepdims=True)
+    return (x - mu) / np.sqrt(var + 1e-5) * p["g"] + p["b"]
+
+
+def sigmoid(x):
+    return 1.0 / (1.0 + np.exp(-x))
+
+
+def small_top_k(scores, k):
+    """Iterative argmax (first max wins ties), identical to the Rust loop
+    and to layers.small_top_k."""
+    s = scores.copy()
+    n, e = s.shape
+    idxs = np.zeros((n, k), dtype=np.int64)
+    vals = np.zeros((n, k))
+    for j in range(k):
+        idx = np.argmax(s, axis=-1)
+        idxs[:, j] = idx
+        vals[:, j] = scores[np.arange(n), idx]
+        s[np.arange(n), idx] = -np.inf
+    return vals, idxs
+
+
+def route(x_flat, w_sel, k, kind):
+    if kind == "sigmoid":
+        scores = sigmoid(x_flat @ w_sel)
+        gate, idx = small_top_k(scores, k)
+    else:
+        z = x_flat @ w_sel
+        z = z - z.max(axis=-1, keepdims=True)
+        ez = np.exp(z)
+        scores = ez / ez.sum(axis=-1, keepdims=True)
+        gate, idx = small_top_k(scores, k)
+        gate = gate / (gate.sum(axis=-1, keepdims=True) + 1e-9)
+    return idx, gate, scores
+
+
+def moe_mm(x, w, idx, gate):
+    """x [N, r]; w [E, r, c]; idx/gate [N, k] -> [N, c]."""
+    n = x.shape[0]
+    out = np.zeros((n, w.shape[2]))
+    for j in range(idx.shape[1]):
+        proj = np.einsum("nr,nrc->nc", x, w[idx[:, j]])
+        out += gate[:, j : j + 1] * proj
+    return out
+
+
+def sinusoidal(count, d):
+    half = d // 2
+    freq = np.exp(-np.arange(half) * (math.log(10000.0) / half))
+    ang = np.arange(count)[:, None] * freq[None, :]
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+
+
+def rope_rotate(x, positions):
+    """x [..., T, Dh], positions [T]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = np.exp(-np.arange(half) * (math.log(10000.0) / half))
+    ang = positions[:, None] * freq[None, :]
+    cos, sin = np.cos(ang), np.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return np.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def causal_bias(tq, tk):
+    off = tk - tq
+    q = np.arange(tq)[:, None]
+    k = np.arange(tk)[None, :]
+    return np.where(k <= q + off, 0.0, NEG_INF)
+
+
+def xl_pos_bias(q_plus_v, r, tq, tk):
+    """q_plus_v [T, Dh], r [Tk, Dh] -> [Tq, Tk] gathered by distance."""
+    off = tk - tq
+    bd = q_plus_v @ r.T  # [Tq, Tk(dist)]
+    dist = (np.arange(tq)[:, None] + off) - np.arange(tk)[None, :]
+    dist = np.clip(dist, 0, tk - 1)
+    return np.take_along_axis(bd, dist, axis=1)
+
+
+def softmax_rows(x):
+    z = x - x.max(axis=-1, keepdims=True)
+    ez = np.exp(z)
+    return ez / ez.sum(axis=-1, keepdims=True)
+
+
+def _head_bias(cfg, a, qh, r, b, t, tk, hi, pad_mask):
+    """Per-(batch,head) additive bias [B, T, Tk] incl. causal/pos/pad."""
+    bias = np.zeros((b, t, tk))
+    if cfg.pos != "none":
+        bias += causal_bias(t, tk)[None]
+    if cfg.pos == "xl":
+        u = a["u_bias"][hi] if a["u_bias"].ndim == 2 else a["u_bias"]
+        v = a["v_bias"][hi] if a["v_bias"].ndim == 2 else a["v_bias"]
+        for bi in range(b):
+            bias[bi] += xl_pos_bias(qh[bi] + v, r, t, tk)
+    if pad_mask is not None:
+        bias += np.where(pad_mask, 0.0, NEG_INF)[:, None, :]
+    return bias
+
+
+def switchhead_attention(cfg, a, x, cache, pad_mask, collect, aux):
+    b, t, d = x.shape
+    h, k, dh = cfg.n_heads, cfg.att_k, cfg.d_head
+    src = x if cache is None else np.concatenate([cache, x], axis=1)
+    tk = src.shape[1]
+    xq = x.reshape(b * t, d)
+    xs = src.reshape(b * tk, d)
+    scale = 1.0 / math.sqrt(float(dh))
+
+    r = None
+    if cfg.pos == "xl":
+        dist_emb = sinusoidal(tk, d)
+
+    y = np.zeros((b * t, d))
+    for hi in range(h):
+        idx_s, gate_s, sc_s = route(xs, a["w_sel_s"][hi], k, cfg.att_router)
+        w_d = a["w_sel_s"][hi] if cfg.shared_selection else a["w_sel_d"][hi]
+        idx_d, gate_d, sc_d = route(xq, w_d, k, cfg.att_router)
+        if collect:
+            aux.setdefault(f"gate_src_{hi}", []).append(sc_s)
+            aux.setdefault(f"gate_dst_{hi}", []).append(sc_d)
+
+        kh = moe_mm(xs, a["w_k"][hi], idx_s, gate_s) if cfg.moe_k else xs @ a["w_k"][hi, 0]
+        qh = moe_mm(xq, a["w_q"][hi], idx_d, gate_d) if cfg.moe_q else xq @ a["w_q"][hi, 0]
+        vh = moe_mm(xs, a["w_v"][hi], idx_s, gate_s) if cfg.moe_v else xs @ a["w_v"][hi, 0]
+        kh = kh.reshape(b, tk, dh)
+        qh = qh.reshape(b, t, dh)
+        vh = vh.reshape(b, tk, dh)
+
+        if cfg.pos == "xl":
+            r = dist_emb @ a["w_kr"][hi]  # [Tk, Dh]
+            bias = _head_bias(cfg, a, qh, r, b, t, tk, hi, pad_mask)
+            qh = qh + a["u_bias"][hi]
+        elif cfg.pos == "rope":
+            pos = np.arange(tk, dtype=np.float64)
+            qh = rope_rotate(qh, pos[tk - t :])
+            kh = rope_rotate(kh, pos)
+            bias = _head_bias(cfg, a, qh, None, b, t, tk, hi, pad_mask)
+        else:
+            bias = _head_bias(cfg, a, qh, None, b, t, tk, hi, pad_mask)
+
+        logits = np.einsum("btd,bkd->btk", qh, kh) * scale + bias
+        attn = softmax_rows(logits)
+        if collect:
+            aux.setdefault("attn", []).append(attn)  # list over heads
+        att = np.einsum("btk,bkd->btd", attn, vh).reshape(b * t, dh)
+        if cfg.moe_o:
+            y += moe_mm(att, a["w_o"][hi], idx_d, gate_d)
+        else:
+            y += att @ a["w_o"][hi, 0]
+    return y.reshape(b, t, d)
+
+
+def dense_attention(cfg, a, x, cache, pad_mask, collect, aux):
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    src = x if cache is None else np.concatenate([cache, x], axis=1)
+    tk = src.shape[1]
+    scale = 1.0 / math.sqrt(float(dh))
+    if cfg.pos == "xl":
+        dist_emb = sinusoidal(tk, d)
+
+    y = np.zeros((b, t, d))
+    for hi in range(h):
+        qh = x @ a["w_q"][hi]
+        kh = src @ a["w_k"][hi]
+        vh = src @ a["w_v"][hi]
+        if cfg.pos == "xl":
+            r = dist_emb @ a["w_kr"][hi]
+            bias = _head_bias(cfg, a, qh, r, b, t, tk, hi, pad_mask)
+            qh = qh + a["u_bias"][hi]
+        elif cfg.pos == "rope":
+            pos = np.arange(tk, dtype=np.float64)
+            qh = rope_rotate(qh, pos[tk - t :])
+            kh = rope_rotate(kh, pos)
+            bias = _head_bias(cfg, a, qh, None, b, t, tk, hi, pad_mask)
+        else:
+            bias = _head_bias(cfg, a, qh, None, b, t, tk, hi, pad_mask)
+        logits = np.einsum("btd,bkd->btk", qh, kh) * scale + bias
+        attn = softmax_rows(logits)
+        if collect:
+            aux.setdefault("attn", []).append(attn)
+        att = np.einsum("btk,bkd->btd", attn, vh)
+        y += att @ a["w_o"][hi]
+    return y
+
+
+def moa_attention(cfg, a, x, cache, pad_mask, collect, aux):
+    b, t, d = x.shape
+    dh, k = cfg.d_head, cfg.moa_k
+    src = x if cache is None else np.concatenate([cache, x], axis=1)
+    tk = src.shape[1]
+    xq = x.reshape(b * t, d)
+    scale = 1.0 / math.sqrt(float(dh))
+
+    idx, gate, _ = route(xq, a["w_sel"], k, "softmax")
+    kk = src @ a["w_k"]  # [B, Tk, Dh]
+    vv = src @ a["w_v"]
+    if cfg.pos == "xl":
+        r = sinusoidal(tk, d) @ a["w_kr"]  # [Tk, Dh]
+    elif cfg.pos == "rope":
+        kk = rope_rotate(kk, np.arange(tk, dtype=np.float64))
+
+    y = np.zeros((b * t, d))
+    for j in range(k):
+        ones = np.ones((xq.shape[0], 1))
+        qj = moe_mm(xq, a["w_q"], idx[:, j : j + 1], ones).reshape(b, t, dh)
+        if cfg.pos == "xl":
+            bias = _head_bias(cfg, a, qj, r, b, t, tk, 0, pad_mask)
+            qj = qj + a["u_bias"]
+        elif cfg.pos == "rope":
+            pos = np.arange(tk, dtype=np.float64)
+            qj = rope_rotate(qj, pos[tk - t :])
+            bias = _head_bias(cfg, a, qj, None, b, t, tk, 0, pad_mask)
+        else:
+            bias = _head_bias(cfg, a, qj, None, b, t, tk, 0, pad_mask)
+        logits = np.einsum("btd,bkd->btk", qj, kk) * scale + bias
+        attn = softmax_rows(logits)
+        if collect:
+            aux.setdefault("attn", []).append(attn)
+        att = np.einsum("btk,bkd->btd", attn, vv).reshape(b * t, dh)
+        y += moe_mm(att, a["w_o"], idx[:, j : j + 1], gate[:, j : j + 1])
+    return y.reshape(b, t, d)
+
+
+ATTN = {"switchhead": switchhead_attention, "dense": dense_attention, "moa": moa_attention}
+
+
+def mlp_apply(cfg, m, x):
+    b, t, d = x.shape
+    if cfg.mlp_type == "sigma_moe":
+        xf = x.reshape(b * t, d)
+        idx, gate, _ = route(xf, m["w_sel"], cfg.mlp_k, "sigmoid")
+        y = np.zeros_like(xf)
+        ones = np.ones((xf.shape[0], 1))
+        for j in range(cfg.mlp_k):
+            hj = np.maximum(moe_mm(xf, m["w1"], idx[:, j : j + 1], ones), 0.0)
+            y += moe_mm(hj, m["w2"], idx[:, j : j + 1], gate[:, j : j + 1])
+        return y.reshape(b, t, d)
+    h = np.maximum(x @ m["w1"], 0.0)
+    return h @ m["w2"]
+
+
+def encode(cfg, p, tokens, pad_mask=None, collect=False):
+    """tokens [B, T] int -> (h [B, T, D], aux)."""
+    b, t = tokens.shape
+    x = p["embed"][tokens] * math.sqrt(float(cfg.d_model))
+    use_cache = cfg.pos == "xl"
+    aux = {}
+    for li in range(cfg.n_layers):
+        lp = p["layers"][li]
+        cache = np.zeros((b, cfg.seq_len, cfg.d_model)) if use_cache else None
+        a = ATTN[cfg.family](cfg, lp["attn"], layer_norm(x, lp["ln1"]), cache,
+                             pad_mask, collect, aux)
+        x = x + a
+        x = x + mlp_apply(cfg, lp["mlp"], layer_norm(x, lp["ln2"]))
+    return layer_norm(x, p["ln_f"]), aux
+
+
+def score(cfg, p, tokens):
+    """tokens [B, T+1] -> logp [B, T] (next-token log-probabilities)."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    h, _ = encode(cfg, p, inp)
+    logits = h @ p["head"]  # [B, T, V]
+    m = logits.max(axis=-1)
+    logz = m + np.log(np.exp(logits - m[..., None]).sum(axis=-1))
+    sel = np.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    return sel - logz
+
+
+def next_logits(cfg, p, tokens):
+    """tokens [B, T] -> logits [B, V] for the following token."""
+    h, _ = encode(cfg, p, tokens)
+    return h[:, -1] @ p["head"]
+
+
+def class_logits(cfg, p, tokens):
+    """ListOps path: tokens [B, T] (pad=0) -> logits [B, n_classes],
+    classification read from position 0 with a padding key-mask."""
+    pad_mask = tokens != 0
+    h, _ = encode(cfg, p, tokens, pad_mask=pad_mask)
+    return h[:, 0] @ p["head"]

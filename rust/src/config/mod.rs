@@ -3,7 +3,7 @@
 //! sides, so a single file can carry model hyperparameters (Python) and
 //! run/data settings (Rust).
 
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
 
 use crate::util::json::Json;
 
@@ -189,6 +189,13 @@ impl ModelConfig {
         }
         if self.task == Task::ListOps && self.pos != Positional::None {
             bail!("listops task requires pos='none' (bidirectional encoder)");
+        }
+        if self.task == Task::Lm && self.pos == Positional::None {
+            // pos='none' also disables the causal mask (layers.py treats
+            // it as the bidirectional-encoder mode), so an LM would see
+            // its own prediction targets — next-token scores would be
+            // meaningless.
+            bail!("lm task requires a causal positional scheme (pos='xl' or 'rope')");
         }
         Ok(())
     }

@@ -5,7 +5,7 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, Result};
+use crate::util::error::{anyhow, Result};
 
 use crate::config::ModelConfig;
 use crate::runtime::{Engine, FlatBuf};

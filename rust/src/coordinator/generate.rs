@@ -1,6 +1,7 @@
-//! Autoregressive text generation over the AOT `next_logits` entry —
-//! the inference path the paper's resource argument targets (SwitchHead
-//! computes fewer attention matrices per generated token).
+//! Autoregressive text generation over the `next_logits` entry of
+//! either backend (PJRT artifact or native reference) — the inference
+//! path the paper's resource argument targets (SwitchHead computes
+//! fewer attention matrices per generated token).
 //!
 //! The sampler keeps a sliding `[B=batch, T]` token window (prompts are
 //! left-padded / left-truncated so the newest tokens are always
@@ -8,11 +9,11 @@
 //! position, and samples with temperature + top-k. Batched: `B`
 //! continuations are generated per executable call.
 
-use anyhow::{anyhow, Result};
+use crate::util::error::Result;
 
 use crate::config::ModelConfig;
 use crate::data::tokenizer::{Bpe, DOC, PAD};
-use crate::runtime::{Engine, FlatBuf};
+use crate::runtime::Backend;
 use crate::util::rng::Pcg;
 
 #[derive(Debug, Clone)]
@@ -57,18 +58,11 @@ pub fn sample_logits(logits: &[f32], temperature: f64, top_k: usize, rng: &mut P
 /// Generate continuations for `prompts` (one per batch row; excess rows
 /// reuse the last prompt). Returns the generated ids per row.
 pub fn generate_ids(
-    engine: &Engine,
+    backend: &dyn Backend,
     cfg: &ModelConfig,
-    flat: &FlatBuf,
     prompts: &[Vec<u32>],
     opts: &SampleOpts,
 ) -> Result<Vec<Vec<u32>>> {
-    if !engine.manifest.entries.contains_key("next_logits") {
-        return Err(anyhow!(
-            "artifact '{}' lacks the next_logits entry — rebuild with `make artifacts`",
-            engine.manifest.name
-        ));
-    }
     let b = cfg.batch_size;
     let t = cfg.seq_len;
     let v = cfg.vocab_size;
@@ -96,8 +90,7 @@ pub fn generate_ids(
         for w in &windows {
             tokens.extend_from_slice(w);
         }
-        let tok_buf = engine.upload_i32(&tokens, &[b, t])?;
-        let out = engine.next_logits(flat, &tok_buf)?; // [B, V]
+        let out = backend.next_logits(&tokens, &[b, t])?; // [B, V]
         for row in 0..b {
             let logits = &out[row * v..(row + 1) * v];
             let id = sample_logits(logits, opts.temperature, opts.top_k, &mut rng) as u32;
@@ -112,16 +105,15 @@ pub fn generate_ids(
 
 /// Convenience: prompt text -> generated text (row 0), via BPE.
 pub fn generate_text(
-    engine: &Engine,
+    backend: &dyn Backend,
     cfg: &ModelConfig,
-    flat: &FlatBuf,
     bpe: &Bpe,
     prompt: &str,
     opts: &SampleOpts,
 ) -> Result<String> {
     let mut ids = vec![DOC];
     ids.extend(bpe.encode(prompt));
-    let out = generate_ids(engine, cfg, flat, &[ids], opts)?;
+    let out = generate_ids(backend, cfg, &[ids], opts)?;
     Ok(bpe.decode(&out[0]))
 }
 

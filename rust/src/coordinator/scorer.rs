@@ -8,12 +8,12 @@
 //! causal masking makes trailing pads irrelevant and leading pads are a
 //! uniform prefix shared by all candidates of a task.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::config::ModelConfig;
 use crate::data::tokenizer::{Bpe, DOC, PAD};
 use crate::data::zeroshot::{ChoiceTask, MinimalPair};
-use crate::runtime::{Engine, FlatBuf};
+use crate::runtime::Backend;
 
 /// Sum of next-token log-probs of `target_ids` given `ctx_ids`, via one
 /// score() call. Window layout: [pad... ctx target], length T+1.
@@ -40,12 +40,11 @@ fn window(cfg: &ModelConfig, ctx_ids: &[u32], target_ids: &[u32]) -> (Vec<i32>, 
 }
 
 /// Score many (ctx, target) pairs, batching `batch_size` windows per
-/// score() execution. Returns sum-logp per pair.
+/// score() execution (PJRT or native backend). Returns sum-logp per pair.
 pub fn score_pairs(
-    engine: &Engine,
+    backend: &dyn Backend,
     cfg: &ModelConfig,
     pairs: &[(Vec<u32>, Vec<u32>)],
-    flat: &FlatBuf,
 ) -> Result<Vec<f64>> {
     let b = cfg.batch_size;
     let t1 = cfg.seq_len + 1;
@@ -64,8 +63,7 @@ pub fn score_pairs(
             let row: Vec<i32> = tokens[start..].to_vec();
             tokens.extend(row);
         }
-        let tok_buf = engine.upload_i32(&tokens, &[b, t1])?;
-        let logp = engine.score(flat, &tok_buf)?; // [B, T]
+        let logp = backend.score(&tokens, &[b, t1])?; // [B, T]
         let t = cfg.seq_len;
         for (row, (lo, hi)) in ranges.iter().enumerate() {
             let mut s = 0.0f64;
@@ -87,11 +85,10 @@ fn encode_ctx(bpe: &Bpe, text: &str) -> Vec<u32> {
 /// Multiple-choice accuracy: fraction of tasks where the true candidate
 /// has the highest continuation log-probability.
 pub fn eval_choice_tasks(
-    engine: &Engine,
+    backend: &dyn Backend,
     cfg: &ModelConfig,
     bpe: &Bpe,
     tasks: &[ChoiceTask],
-    flat: &FlatBuf,
 ) -> Result<f64> {
     let mut pairs = Vec::new();
     let mut spans = Vec::new(); // (task_idx, candidate count)
@@ -103,7 +100,7 @@ pub fn eval_choice_tasks(
             pairs.push((ctx.clone(), tgt));
         }
     }
-    let scores = score_pairs(engine, cfg, &pairs, flat)?;
+    let scores = score_pairs(backend, cfg, &pairs)?;
     let mut correct = 0usize;
     let mut cursor = 0usize;
     for (task, &n) in tasks.iter().zip(&spans) {
@@ -125,11 +122,10 @@ pub fn eval_choice_tasks(
 /// Minimal-pair preference: fraction of pairs where the grammatical
 /// member gets the higher total sentence log-probability.
 pub fn eval_minimal_pairs(
-    engine: &Engine,
+    backend: &dyn Backend,
     cfg: &ModelConfig,
     bpe: &Bpe,
     pairs_in: &[MinimalPair],
-    flat: &FlatBuf,
 ) -> Result<f64> {
     let mut pairs = Vec::new();
     for p in pairs_in {
@@ -137,7 +133,7 @@ pub fn eval_minimal_pairs(
         pairs.push((vec![DOC], bpe.encode(&p.good)));
         pairs.push((vec![DOC], bpe.encode(&p.bad)));
     }
-    let scores = score_pairs(engine, cfg, &pairs, flat)?;
+    let scores = score_pairs(backend, cfg, &pairs)?;
     let mut correct = 0usize;
     for i in 0..pairs_in.len() {
         if scores[2 * i] > scores[2 * i + 1] {

@@ -9,7 +9,7 @@
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 use crate::config::{ModelConfig, Task};
 use crate::data::batch::{LmStream, Prefetcher};

@@ -15,7 +15,7 @@ pub mod zeroshot;
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 use crate::config::ModelConfig;
 use crate::util::logging::info;

@@ -1,10 +1,38 @@
 //! SwitchHead: Mixture-of-Experts attention (Csordás et al., NeurIPS 2024)
-//! — full-system reproduction as a three-layer Rust + JAX + Pallas stack.
+//! — full-system reproduction with a **two-backend** execution
+//! architecture.
+//!
+//! # Backends
+//!
+//! * **Native** ([`model`]): a pure-Rust, dependency-free reference
+//!   implementation of the SwitchHead/SwitchAll forward pass (MoE
+//!   attention with per-head sigmoid expert selection, σ-MoE
+//!   feedforward, XL/RoPE positional schemes). Always available; runs
+//!   `score`/`next_logits`/analysis on host f32 buffers.
+//! * **PJRT** ([`runtime::Engine`]): replays HLO artifacts AOT-compiled
+//!   by the Python/JAX side (`python/compile/aot.py`, Pallas σ-MoE
+//!   kernels) and owns training via the device-resident flat
+//!   training-state buffer. Requires `make artifacts`; in offline
+//!   builds the `xla` crate is stubbed (`runtime::xla_stub`).
+//!
+//! Both implement [`runtime::Backend`], so the zero-shot harness, the
+//! generator and the benches run on either.
+//!
+//! # Artifact-free test tier
+//!
+//! `make check` (`cargo build --release && cargo test -q`) needs only a
+//! Rust toolchain: PJRT integration tests skip when `artifacts/` is
+//! absent, while golden-vector tests (`rust/tests/golden/`, generated
+//! by `python/tools/gen_native_golden.py` and cross-validated against
+//! the JAX reference) and the MoE routing property tests exercise the
+//! native backend deterministically.
+//!
+//! # Layers
 //!
 //! * L1/L2 (Python, build-time only): Pallas σ-MoE kernels and the JAX
 //!   model zoo, AOT-lowered to HLO text by `python/compile/aot.py`.
-//! * Runtime: [`runtime`] loads the artifacts through the PJRT CPU
-//!   client and chains the device-resident flat training-state buffer.
+//! * Runtime: [`runtime`] — backend seam, PJRT engine, manifest,
+//!   checkpoints; [`model`] — the native backend.
 //! * L3 (this crate): configuration, data pipeline, training
 //!   coordinator, analytic MAC/memory accounting, evaluation and
 //!   zero-shot harnesses, analysis tooling and the bench drivers.
@@ -17,6 +45,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod macs;
+pub mod model;
 pub mod runtime;
 pub mod util;
 

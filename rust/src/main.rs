@@ -12,7 +12,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use switchhead::util::error::{anyhow, bail, Context, Result};
 
 use switchhead::bench::{fmt_si, Table};
 use switchhead::config::{ModelConfig, Task};
@@ -21,7 +21,8 @@ use switchhead::coordinator::scorer;
 use switchhead::coordinator::trainer::{self, TrainOpts};
 use switchhead::data::{corpus_for, synth, zeroshot, TRAIN_CHARS, VALID_CHARS};
 use switchhead::macs::{attention_cost, match_params_via_dff, match_params_via_dhead, param_count};
-use switchhead::runtime::{checkpoint, Engine};
+use switchhead::model::NativeEngine;
+use switchhead::runtime::{checkpoint, Backend, Engine, PjrtBackend};
 use switchhead::util::cli::Args;
 use switchhead::util::logging::info;
 use switchhead::util::rng::Pcg;
@@ -35,14 +36,21 @@ commands:
                 [--artifacts DIR] [--quiet]
   eval          --config <json> [--out DIR] [--eval-batches N] [--artifacts DIR]
   zeroshot      --config <json> [--out DIR] [--task lambada|blimp|cbt|all]
-                [--n N] [--seed S] [--artifacts DIR]
+                [--n N] [--seed S] [--artifacts DIR] [--backend pjrt|native]
   macs          --config <json> [--config ...]   (no artifacts needed)
   match-params  --config <json> --target-params N [--via dff|dhead]
-  analyze       --config <json> [--out DIR] [--dump DIR] [--induction] [--artifacts DIR]
+  analyze       --config <json> [--out DIR] [--dump DIR] [--induction]
+                [--artifacts DIR] [--backend pjrt|native]
   generate      --config <json> [--out DIR] [--prompt TEXT] [--tokens N]
                 [--temperature T] [--top-k K] [--seed S] [--artifacts DIR]
-  probe         --config <json> [--artifacts DIR]
+                [--backend pjrt|native]
+  probe         --config <json> [--artifacts DIR] [--backend pjrt|native]
   bench-tables  [--table 1|2|3|4|5|6|7|all] [--artifacts DIR] [--quick]
+
+backends: `pjrt` (default) replays `make artifacts` bundles and loads the
+trained checkpoint from --out; `native` runs the artifact-free pure-Rust
+reference model with seed-initialized weights (--init-seed, default 42) —
+no Python, no artifacts, inference paths only.
 ";
 
 fn artifact_dir(args: &Args, cfg: &ModelConfig) -> PathBuf {
@@ -139,13 +147,59 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+
+/// An owning backend selection: native (seed-initialized reference
+/// model) or PJRT (compiled artifacts + trained checkpoint). One
+/// loader serves every inference subcommand; [`Backend`] dispatches.
+enum LoadedBackend {
+    Native(NativeEngine),
+    Pjrt(Engine, switchhead::runtime::FlatBuf),
+}
+
+impl LoadedBackend {
+    fn load(args: &Args, cfg: &ModelConfig, entries: &[&str]) -> Result<LoadedBackend> {
+        if args.get_or("backend", "pjrt") == "native" {
+            Ok(LoadedBackend::Native(NativeEngine::new(cfg, args.u64_or("init-seed", 42)?)?))
+        } else {
+            let engine = Engine::load(&artifact_dir(args, cfg), Some(entries))?;
+            let flat = load_trained(args, cfg, &engine)?;
+            Ok(LoadedBackend::Pjrt(engine, flat))
+        }
+    }
+}
+
+impl Backend for LoadedBackend {
+    fn score(&self, tokens: &[i32], dims: &[usize]) -> Result<Vec<f32>> {
+        match self {
+            LoadedBackend::Native(e) => e.score(tokens, dims),
+            LoadedBackend::Pjrt(engine, flat) => PjrtBackend::new(engine, flat).score(tokens, dims),
+        }
+    }
+
+    fn next_logits(&self, tokens: &[i32], dims: &[usize]) -> Result<Vec<f32>> {
+        match self {
+            LoadedBackend::Native(e) => e.next_logits(tokens, dims),
+            LoadedBackend::Pjrt(engine, flat) => {
+                PjrtBackend::new(engine, flat).next_logits(tokens, dims)
+            }
+        }
+    }
+
+    fn backend_name(&self) -> &'static str {
+        match self {
+            LoadedBackend::Native(_) => "native",
+            LoadedBackend::Pjrt(..) => "pjrt",
+        }
+    }
+}
+
 fn cmd_zeroshot(args: &Args) -> Result<()> {
     let cfg = load_cfg(args)?;
     if cfg.task != Task::Lm {
         bail!("zeroshot requires an LM config");
     }
-    let engine = Engine::load(&artifact_dir(args, &cfg), Some(&["score"]))?;
-    let flat = load_trained(args, &cfg, &engine)?;
+    let backend = LoadedBackend::load(args, &cfg, &["score"])?;
+    let backend: &dyn Backend = &backend;
     let corpus = corpus_for(&cfg, TRAIN_CHARS, VALID_CHARS)?;
     let bpe = corpus.bpe.as_ref().context("zeroshot needs a subword dataset (not enwik8)")?;
     let profile = synth::Profile::parse(&cfg.dataset).unwrap();
@@ -156,25 +210,25 @@ fn cmd_zeroshot(args: &Args) -> Result<()> {
     let which = args.get_or("task", "all");
 
     let mut table = Table::new(
-        &format!("Zero-shot ({}, n={n})", cfg.name),
+        &format!("Zero-shot ({}, backend {}, n={n})", cfg.name, backend.backend_name()),
         &["task", "accuracy", "chance"],
     );
     if which == "all" || which == "lambada" {
         let mut rng = Pcg::new(seed, 1);
         let tasks: Vec<_> = (0..n).map(|_| zeroshot::gen_lambada(lex, &mut rng, 5)).collect();
-        let acc = scorer::eval_choice_tasks(&engine, &cfg, bpe, &tasks, &flat)?;
+        let acc = scorer::eval_choice_tasks(backend, &cfg, bpe, &tasks)?;
         table.push(vec!["lambada-synth".into(), format!("{:.1}%", acc * 100.0), "20.0%".into()]);
     }
     if which == "all" || which == "blimp" {
         let mut rng = Pcg::new(seed, 2);
         let pairs: Vec<_> = (0..n).map(|_| zeroshot::gen_blimp(lex, &mut rng)).collect();
-        let acc = scorer::eval_minimal_pairs(&engine, &cfg, bpe, &pairs, &flat)?;
+        let acc = scorer::eval_minimal_pairs(backend, &cfg, bpe, &pairs)?;
         table.push(vec!["blimp-synth".into(), format!("{:.1}%", acc * 100.0), "50.0%".into()]);
     }
     if which == "all" || which == "cbt" {
         let mut rng = Pcg::new(seed, 3);
         let tasks: Vec<_> = (0..n).map(|_| zeroshot::gen_cbt(lex, &mut rng, 10)).collect();
-        let acc = scorer::eval_choice_tasks(&engine, &cfg, bpe, &tasks, &flat)?;
+        let acc = scorer::eval_choice_tasks(backend, &cfg, bpe, &tasks)?;
         table.push(vec!["cbt-synth".into(), format!("{:.1}%", acc * 100.0), "10.0%".into()]);
     }
     table.print();
@@ -238,8 +292,6 @@ fn cmd_match_params(args: &Args) -> Result<()> {
 
 fn cmd_analyze(args: &Args) -> Result<()> {
     let cfg = load_cfg(args)?;
-    let engine = Engine::load(&artifact_dir(args, &cfg), Some(&["attn"]))?;
-    let flat = load_trained(args, &cfg, &engine)?;
     let dump_dir = PathBuf::from(args.get_or("dump", &format!("runs/{}/analysis", cfg.name)));
 
     // Probe tokens: for LM use an induction probe; for listops, real examples.
@@ -255,7 +307,14 @@ fn cmd_analyze(args: &Args) -> Result<()> {
             (tok, vec![cfg.batch_size, cfg.seq_len], cfg.seq_len / 2)
         }
     };
-    let arrays = analysis::fetch_attention(&engine, &flat, &tokens, &dims)?;
+    let arrays = if args.get_or("backend", "pjrt") == "native" {
+        let native = NativeEngine::new(&cfg, args.u64_or("init-seed", 42)?)?;
+        native.attention_arrays(&tokens, &dims)?
+    } else {
+        let engine = Engine::load(&artifact_dir(args, &cfg), Some(&["attn"]))?;
+        let flat = load_trained(args, &cfg, &engine)?;
+        analysis::fetch_attention(&engine, &flat, &tokens, &dims)?
+    };
     let maps = arrays
         .iter()
         .find(|a| a.name.contains("attn"))
@@ -298,8 +357,8 @@ fn cmd_generate(args: &Args) -> Result<()> {
     if cfg.task != Task::Lm {
         bail!("generate requires an LM config");
     }
-    let engine = Engine::load(&artifact_dir(args, &cfg), Some(&["next_logits"]))?;
-    let flat = load_trained(args, &cfg, &engine)?;
+    let backend = LoadedBackend::load(args, &cfg, &["next_logits"])?;
+    let backend: &dyn Backend = &backend;
     let corpus = corpus_for(&cfg, TRAIN_CHARS, VALID_CHARS)?;
     let bpe = corpus.bpe.as_ref().context("generate needs a subword dataset")?;
     let opts = SampleOpts {
@@ -309,7 +368,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         seed: args.u64_or("seed", 0)?,
     };
     let prompt = args.get_or("prompt", "the");
-    let text = generate_text(&engine, &cfg, &flat, bpe, prompt, &opts)?;
+    let text = generate_text(backend, &cfg, bpe, prompt, &opts)?;
     println!("prompt:  {prompt}");
     println!("sampled: {text}");
     Ok(())
@@ -317,6 +376,9 @@ fn cmd_generate(args: &Args) -> Result<()> {
 
 fn cmd_probe(args: &Args) -> Result<()> {
     let cfg = load_cfg(args)?;
+    if args.get_or("backend", "pjrt") == "native" {
+        return cmd_probe_native(args, &cfg);
+    }
     let dir = artifact_dir(args, &cfg);
     let engine = Engine::load(&dir, Some(&["init", "train_step", "metrics"]))?;
     let flat = engine.init(123)?;
@@ -351,5 +413,41 @@ fn cmd_probe(args: &Args) -> Result<()> {
         flat = next;
     }
     println!("probe OK: {}", cfg.name);
+    Ok(())
+}
+
+/// Artifact-free smoke: init the native model and run one inference
+/// pass per task-appropriate entry point.
+fn cmd_probe_native(args: &Args, cfg: &ModelConfig) -> Result<()> {
+    let engine = NativeEngine::new(cfg, args.u64_or("init-seed", 42)?)?;
+    info(&format!(
+        "native init ok: {} ({} params)",
+        cfg.name,
+        engine.model.param_count()
+    ));
+    let mut rng = Pcg::new(1, 1);
+    match cfg.task {
+        Task::Lm => {
+            let t1 = cfg.seq_len + 1;
+            let tok: Vec<i32> =
+                (0..cfg.batch_size * t1).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+            let (nll, count) = engine.eval_nll(&tok, &[cfg.batch_size, t1])?;
+            let ppl = (nll / count as f64).exp();
+            info(&format!("score: mean NLL {:.4}, ppl {ppl:.2} ({count} tokens)", nll / count as f64));
+            if !(nll / count as f64).is_finite() {
+                bail!("native probe produced non-finite NLL");
+            }
+        }
+        Task::ListOps => {
+            let (tok, _lab) =
+                switchhead::data::listops::gen_batch(&mut rng, cfg.batch_size, cfg.seq_len);
+            let logits = engine.class_logits(&tok, &[cfg.batch_size, cfg.seq_len])?;
+            if !logits.iter().all(|l| l.is_finite()) {
+                bail!("native probe produced non-finite logits");
+            }
+            info(&format!("class_logits ok: {} values", logits.len()));
+        }
+    }
+    println!("probe OK (native): {}", cfg.name);
     Ok(())
 }

@@ -1,0 +1,356 @@
+//! Native attention forward passes: SwitchHead MoE attention (paper
+//! §2.2, Eq. 7-10), the dense MHA baseline, and the MoA baseline — all
+//! three positional schemes (Transformer-XL relative, RoPE, none).
+//!
+//! Operation-for-operation mirror of `python/compile/layers.py` (the
+//! JAX reference) with dropout elided (this backend is inference/eval
+//! only); the numpy twin `python/tools/native_ref.py` cross-checks the
+//! agreement. Every multiply-accumulate is tallied into a
+//! [`MacCounter`] so the measured cost of a forward pass can be
+//! compared against the analytic `macs::attention_cost` (Eq. 11-15).
+
+use crate::config::{ModelConfig, Positional};
+use crate::model::params::{DenseP, MoaP, Proj, SwitchHeadP};
+use crate::model::tensor::{
+    matmul, moe_matmul, rope_rotate, route, sinusoidal, softmax_rows, MacCounter, Router, NEG_INF,
+};
+
+/// Per-layer analysis output (attention maps + router scores), the
+/// native analog of the PJRT `attn` entry's outputs.
+#[derive(Default)]
+pub struct LayerAux {
+    /// One `[b, t, tk]` map per attention matrix (head, or MoA slot).
+    pub attn: Vec<Vec<f32>>,
+    /// Router score tensors: (name, data `[n, e]` flattened, e).
+    pub gates: Vec<(String, Vec<f32>, usize)>,
+}
+
+/// Shared geometry for one attention call.
+pub struct AttnCtx<'a> {
+    pub b: usize,
+    pub t: usize,
+    pub tk: usize,
+    /// Key-side validity mask `[b * tk]` (true = attend); listops only.
+    pub pad_mask: Option<&'a [bool]>,
+}
+
+/// Dense-or-MoE projection application with MAC accounting.
+fn proj(
+    x: &[f32],
+    p: &Proj,
+    idx: &[usize],
+    gate: &[f32],
+    k: usize,
+    macs: &mut MacCounter,
+) -> Vec<f32> {
+    let n = x.len() / p.rows;
+    if p.moe {
+        // k expert matmuls + the gate multiply per output element
+        // (the `(D + 1)` factor of Eq. 13).
+        macs.proj_moe += (n * k * (p.rows * p.cols + p.cols)) as f64;
+        moe_matmul(x, &p.experts, p.rows, p.cols, idx, gate, k)
+    } else {
+        macs.proj_dense += (n * p.rows * p.cols) as f64;
+        matmul(x, &p.experts[0], n, p.rows, p.cols)
+    }
+}
+
+/// Base additive bias `[b, t, tk]`: causal mask (skipped for pos=none,
+/// the bidirectional encoder) plus the padding key-mask.
+fn base_bias(pos: Positional, ctx: &AttnCtx) -> Vec<f32> {
+    let (b, t, tk) = (ctx.b, ctx.t, ctx.tk);
+    let mut bias = vec![0f32; b * t * tk];
+    if pos != Positional::None {
+        let off = tk - t;
+        for bi in 0..b {
+            for i in 0..t {
+                let row = &mut bias[(bi * t + i) * tk..(bi * t + i + 1) * tk];
+                for (j, v) in row.iter_mut().enumerate() {
+                    if j > i + off {
+                        *v += NEG_INF;
+                    }
+                }
+            }
+        }
+    }
+    if let Some(pm) = ctx.pad_mask {
+        for bi in 0..b {
+            for i in 0..t {
+                let row = &mut bias[(bi * t + i) * tk..(bi * t + i + 1) * tk];
+                for (j, v) in row.iter_mut().enumerate() {
+                    if !pm[bi * tk + j] {
+                        *v += NEG_INF;
+                    }
+                }
+            }
+        }
+    }
+    bias
+}
+
+/// Add the Transformer-XL relative-position logits: entry (i, j) gains
+/// `(q_i + v) . r_{clip(i + off - j)}` (mirrors `layers.xl_pos_bias`).
+fn add_xl_pos(
+    bias: &mut [f32],
+    q: &[f32],  // [b, t, dh] — pre-u_bias queries
+    vb: &[f32], // [dh]
+    r: &[f32],  // [tk, dh] — projected distance embeddings
+    ctx: &AttnCtx,
+    dh: usize,
+    macs: &mut MacCounter,
+) {
+    let (b, t, tk) = (ctx.b, ctx.t, ctx.tk);
+    let off = tk as isize - t as isize;
+    for bi in 0..b {
+        for i in 0..t {
+            let qrow = &q[(bi * t + i) * dh..(bi * t + i + 1) * dh];
+            let brow = &mut bias[(bi * t + i) * tk..(bi * t + i + 1) * tk];
+            for (j, bv) in brow.iter_mut().enumerate() {
+                let dist = (i as isize + off - j as isize).clamp(0, tk as isize - 1) as usize;
+                let rrow = &r[dist * dh..(dist + 1) * dh];
+                let mut s = 0f32;
+                for d0 in 0..dh {
+                    s += (qrow[d0] + vb[d0]) * rrow[d0];
+                }
+                *bv += s;
+            }
+        }
+    }
+    macs.pos += (b * t * tk * dh) as f64;
+}
+
+/// Attention core for one head: softmax(q k^T * scale + bias) v.
+/// Returns `[b, t, dh]`; appends the `[b, t, tk]` map when collecting.
+fn attention_core(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    bias: &[f32],
+    ctx: &AttnCtx,
+    dh: usize,
+    macs: &mut MacCounter,
+    collect: Option<&mut LayerAux>,
+) -> Vec<f32> {
+    let (b, t, tk) = (ctx.b, ctx.t, ctx.tk);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut att = vec![0f32; b * t * dh];
+    let mut maps = collect.as_ref().map(|_| vec![0f32; b * t * tk]);
+    let mut logits = vec![0f32; t * tk];
+    for bi in 0..b {
+        for i in 0..t {
+            let qrow = &q[(bi * t + i) * dh..(bi * t + i + 1) * dh];
+            for j in 0..tk {
+                let krow = &k[(bi * tk + j) * dh..(bi * tk + j + 1) * dh];
+                let mut s = 0f32;
+                for d0 in 0..dh {
+                    s += qrow[d0] * krow[d0];
+                }
+                logits[i * tk + j] = s * scale + bias[(bi * t + i) * tk + j];
+            }
+        }
+        softmax_rows(&mut logits, tk);
+        if let Some(m) = maps.as_mut() {
+            m[bi * t * tk..(bi + 1) * t * tk].copy_from_slice(&logits);
+        }
+        for i in 0..t {
+            let arow = {
+                let base = (bi * t + i) * dh;
+                base..base + dh
+            };
+            for j in 0..tk {
+                let w = logits[i * tk + j];
+                let vrow = &v[(bi * tk + j) * dh..(bi * tk + j + 1) * dh];
+                let out = &mut att[arow.clone()];
+                for d0 in 0..dh {
+                    out[d0] += w * vrow[d0];
+                }
+            }
+        }
+    }
+    macs.attn_core += 2.0 * (b * t * tk * dh) as f64;
+    if let (Some(aux), Some(m)) = (collect, maps) {
+        aux.attn.push(m);
+    }
+    att
+}
+
+/// SwitchHead MoE attention (Eq. 7-10). `x_ln` `[b, t, d]` is the
+/// layer-normed block input (destination side); `src` `[b, tk, d]` is
+/// the XL cache concatenated with `x_ln` (source side).
+#[allow(clippy::too_many_arguments)]
+pub fn switchhead_attention(
+    cfg: &ModelConfig,
+    p: &SwitchHeadP,
+    x_ln: &[f32],
+    src: &[f32],
+    ctx: &AttnCtx,
+    macs: &mut MacCounter,
+    mut collect: Option<&mut LayerAux>,
+) -> Vec<f32> {
+    let (b, t, tk) = (ctx.b, ctx.t, ctx.tk);
+    let (d, dh, h, e, k) = (cfg.d_model, cfg.d_head, cfg.n_heads, cfg.att_n_experts, cfg.att_k);
+    let router = Router::parse(&cfg.att_router);
+    let dist_emb = (cfg.pos == Positional::Xl).then(|| sinusoidal(tk, d));
+
+    let mut y = vec![0f32; b * t * d];
+    for hi in 0..h {
+        // Routing: source side gates K/V experts, destination side Q/O.
+        let (idx_s, gate_s, sc_s) = route(src, &p.w_sel_s[hi], d, e, k, router, macs);
+        let w_sel_d = match &p.w_sel_d {
+            Some(sels) => &sels[hi],
+            None => &p.w_sel_s[hi], // shared_selection (paper §3.6)
+        };
+        let (idx_d, gate_d, sc_d) = route(x_ln, w_sel_d, d, e, k, router, macs);
+        if let Some(aux) = collect.as_deref_mut() {
+            aux.gates.push((format!("gate_src_{hi}"), sc_s, e));
+            aux.gates.push((format!("gate_dst_{hi}"), sc_d, e));
+        }
+
+        let mut kh = proj(src, &p.w_k[hi], &idx_s, &gate_s, k, macs);
+        let mut qh = proj(x_ln, &p.w_q[hi], &idx_d, &gate_d, k, macs);
+        let vh = proj(src, &p.w_v[hi], &idx_s, &gate_s, k, macs);
+
+        let mut bias = base_bias(cfg.pos, ctx);
+        match cfg.pos {
+            Positional::Xl => {
+                let xl = p.xl.as_ref().expect("xl params");
+                let r = matmul(dist_emb.as_ref().unwrap(), &xl.w_kr[hi], tk, d, dh);
+                macs.pos += (tk * d * dh) as f64;
+                add_xl_pos(&mut bias, &qh, &xl.v[hi], &r, ctx, dh, macs);
+                add_bias_rows(&mut qh, &xl.u[hi], dh);
+            }
+            Positional::Rope => {
+                rope_rotate(&mut qh, b, t, dh, tk - t);
+                rope_rotate(&mut kh, b, tk, dh, 0);
+            }
+            Positional::None => {}
+        }
+
+        let att = attention_core(&qh, &kh, &vh, &bias, ctx, dh, macs, collect.as_deref_mut());
+        let yo = proj(&att, &p.w_o[hi], &idx_d, &gate_d, k, macs);
+        for (yv, ov) in y.iter_mut().zip(&yo) {
+            *yv += ov;
+        }
+    }
+    y
+}
+
+/// Standard multi-head attention baseline (Eq. 1-3).
+pub fn dense_attention(
+    cfg: &ModelConfig,
+    p: &DenseP,
+    x_ln: &[f32],
+    src: &[f32],
+    ctx: &AttnCtx,
+    macs: &mut MacCounter,
+    mut collect: Option<&mut LayerAux>,
+) -> Vec<f32> {
+    let (b, t, tk) = (ctx.b, ctx.t, ctx.tk);
+    let (d, dh, h) = (cfg.d_model, cfg.d_head, cfg.n_heads);
+    let dist_emb = (cfg.pos == Positional::Xl).then(|| sinusoidal(tk, d));
+
+    let mut y = vec![0f32; b * t * d];
+    for hi in 0..h {
+        let mut qh = matmul(x_ln, &p.w_q[hi], b * t, d, dh);
+        let mut kh = matmul(src, &p.w_k[hi], b * tk, d, dh);
+        let vh = matmul(src, &p.w_v[hi], b * tk, d, dh);
+        macs.proj_dense += ((b * t + 2 * b * tk) * d * dh) as f64;
+
+        let mut bias = base_bias(cfg.pos, ctx);
+        match cfg.pos {
+            Positional::Xl => {
+                let xl = p.xl.as_ref().expect("xl params");
+                let r = matmul(dist_emb.as_ref().unwrap(), &xl.w_kr[hi], tk, d, dh);
+                macs.pos += (tk * d * dh) as f64;
+                add_xl_pos(&mut bias, &qh, &xl.v[hi], &r, ctx, dh, macs);
+                add_bias_rows(&mut qh, &xl.u[hi], dh);
+            }
+            Positional::Rope => {
+                rope_rotate(&mut qh, b, t, dh, tk - t);
+                rope_rotate(&mut kh, b, tk, dh, 0);
+            }
+            Positional::None => {}
+        }
+
+        let att = attention_core(&qh, &kh, &vh, &bias, ctx, dh, macs, collect.as_deref_mut());
+        let yo = matmul(&att, &p.w_o[hi], b * t, dh, d);
+        macs.proj_dense += (b * t * dh * d) as f64;
+        for (yv, ov) in y.iter_mut().zip(&yo) {
+            *yv += ov;
+        }
+    }
+    y
+}
+
+/// MoA baseline: shared K/V, `moa_k` active query/output experts per
+/// token, each computing its own attention matrix (Eq. 14-15 cost).
+pub fn moa_attention(
+    cfg: &ModelConfig,
+    p: &MoaP,
+    x_ln: &[f32],
+    src: &[f32],
+    ctx: &AttnCtx,
+    macs: &mut MacCounter,
+    mut collect: Option<&mut LayerAux>,
+) -> Vec<f32> {
+    let (b, t, tk) = (ctx.b, ctx.t, ctx.tk);
+    let (d, dh, e, k) = (cfg.d_model, cfg.d_head, cfg.moa_n_experts, cfg.moa_k);
+
+    let (idx, gate, _probs) = route(x_ln, &p.w_sel, d, e, k, Router::Softmax, macs);
+    let mut kk = matmul(src, &p.w_k, b * tk, d, dh);
+    let vv = matmul(src, &p.w_v, b * tk, d, dh);
+    macs.proj_dense += (2 * b * tk * d * dh) as f64;
+
+    let r = match cfg.pos {
+        Positional::Xl => {
+            let de = sinusoidal(tk, d);
+            macs.pos += (tk * d * dh) as f64;
+            Some(matmul(&de, p.xl.as_ref().expect("xl params").w_kr[0].as_slice(), tk, d, dh))
+        }
+        Positional::Rope => {
+            rope_rotate(&mut kk, b, tk, dh, 0);
+            None
+        }
+        Positional::None => None,
+    };
+
+    let n = b * t;
+    let ones = vec![1.0f32; n];
+    let mut y = vec![0f32; n * d];
+    for j in 0..k {
+        // Slot j: per-token expert idx[:, j]; query gate is 1, the
+        // output projection carries the routing gate (as in layers.py).
+        let idx_j: Vec<usize> = (0..n).map(|i| idx[i * k + j]).collect();
+        let gate_j: Vec<f32> = (0..n).map(|i| gate[i * k + j]).collect();
+        let mut qj = moe_matmul(x_ln, &p.w_q, d, dh, &idx_j, &ones, 1);
+        macs.proj_moe += (n * (d * dh + dh)) as f64;
+        let mut bias = base_bias(cfg.pos, ctx);
+        match cfg.pos {
+            Positional::Xl => {
+                let xl = p.xl.as_ref().expect("xl params");
+                add_xl_pos(&mut bias, &qj, &xl.v[0], r.as_ref().unwrap(), ctx, dh, macs);
+                add_bias_rows(&mut qj, &xl.u[0], dh);
+            }
+            Positional::Rope => {
+                rope_rotate(&mut qj, b, t, dh, tk - t);
+            }
+            Positional::None => {}
+        }
+        let att = attention_core(&qj, &kk, &vv, &bias, ctx, dh, macs, collect.as_deref_mut());
+        let yo = moe_matmul(&att, &p.w_o, dh, d, &idx_j, &gate_j, 1);
+        macs.proj_moe += (n * (dh * d + d)) as f64;
+        for (yv, ov) in y.iter_mut().zip(&yo) {
+            *yv += ov;
+        }
+    }
+    y
+}
+
+/// Add a per-feature bias vector to every `dh`-row (u_bias application).
+fn add_bias_rows(x: &mut [f32], bias: &[f32], dh: usize) {
+    for row in x.chunks_mut(dh) {
+        for (v, b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}

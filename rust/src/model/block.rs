@@ -1,0 +1,208 @@
+//! Native SwitchAll decoder block and model-level forward passes:
+//! embedding, pre-LN block stack (MoE attention + dense or sigma-MoE
+//! MLP), final norm, and the LM / classification heads.
+//!
+//! Mirrors `layers.py::block_apply` and `model.py::_encode` with a
+//! fresh (zero) Transformer-XL cache — exactly the state the PJRT
+//! `score` / `next_logits` entry points use — so the two backends are
+//! semantically interchangeable on the inference paths.
+
+use crate::config::{ModelConfig, Positional, Task};
+use crate::model::attention::{
+    dense_attention, moa_attention, switchhead_attention, AttnCtx, LayerAux,
+};
+use crate::model::params::{AttnP, BlockP, MlpP, NativeModel};
+use crate::model::tensor::{layer_norm, matmul, moe_matmul, route, MacCounter, Router};
+
+/// Per-layer analysis aux collected across the stack.
+#[derive(Default)]
+pub struct EncodeAux {
+    pub layers: Vec<LayerAux>,
+}
+
+fn mlp_apply(cfg: &ModelConfig, p: &MlpP, x: &[f32], macs: &mut MacCounter) -> Vec<f32> {
+    let d = cfg.d_model;
+    let n = x.len() / d;
+    match p {
+        MlpP::Dense { w1, w2 } => {
+            let f = cfg.d_ff;
+            let mut h = matmul(x, w1, n, d, f);
+            for v in h.iter_mut() {
+                *v = v.max(0.0); // relu
+            }
+            macs.mlp += (2 * n * d * f) as f64;
+            matmul(&h, w2, n, f, d)
+        }
+        MlpP::SigmaMoe { w1, w2, w_sel } => {
+            // sigma-MoE MLP (Csordas et al. 2023) — SwitchAll's FF layer.
+            let (e, de, k) = (cfg.mlp_n_experts, cfg.mlp_d_expert, cfg.mlp_k);
+            let (idx, gate, _) = route(x, w_sel, d, e, k, Router::Sigmoid, macs);
+            let ones = vec![1.0f32; n];
+            let mut y = vec![0f32; n * d];
+            for j in 0..k {
+                let idx_j: Vec<usize> = (0..n).map(|i| idx[i * k + j]).collect();
+                let gate_j: Vec<f32> = (0..n).map(|i| gate[i * k + j]).collect();
+                let mut h = moe_matmul(x, w1, d, de, &idx_j, &ones, 1);
+                for v in h.iter_mut() {
+                    *v = v.max(0.0);
+                }
+                let o = moe_matmul(&h, w2, de, d, &idx_j, &gate_j, 1);
+                macs.mlp += (n * (d * de + de + de * d + d)) as f64;
+                for (yv, ov) in y.iter_mut().zip(&o) {
+                    *yv += ov;
+                }
+            }
+            y
+        }
+    }
+}
+
+/// One pre-LN block: `x += attn(LN1(x)); x += mlp(LN2(x))`.
+#[allow(clippy::too_many_arguments)]
+fn block_apply(
+    cfg: &ModelConfig,
+    bp: &BlockP,
+    x: &mut Vec<f32>,
+    b: usize,
+    t: usize,
+    pad_mask: Option<&[bool]>,
+    macs: &mut MacCounter,
+    collect: Option<&mut LayerAux>,
+) {
+    let d = cfg.d_model;
+    let x_ln = layer_norm(x, &bp.ln1.g, &bp.ln1.b, d);
+
+    // Source side: fresh (zero) XL cache chunk ++ current chunk. The
+    // cache holds raw previous block inputs in the XL convention; at
+    // zero state that is a zero prefix of length seq_len.
+    let (src, tk) = if cfg.pos == Positional::Xl {
+        let tc = cfg.seq_len;
+        let mut src = vec![0f32; b * (tc + t) * d];
+        for bi in 0..b {
+            let dst = (bi * (tc + t) + tc) * d;
+            let from = bi * t * d;
+            src[dst..dst + t * d].copy_from_slice(&x_ln[from..from + t * d]);
+        }
+        (src, tc + t)
+    } else {
+        (x_ln.clone(), t)
+    };
+
+    let ctx = AttnCtx { b, t, tk, pad_mask };
+    let a = match &bp.attn {
+        AttnP::SwitchHead(p) => switchhead_attention(cfg, p, &x_ln, &src, &ctx, macs, collect),
+        AttnP::Dense(p) => dense_attention(cfg, p, &x_ln, &src, &ctx, macs, collect),
+        AttnP::Moa(p) => moa_attention(cfg, p, &x_ln, &src, &ctx, macs, collect),
+    };
+    for (xv, av) in x.iter_mut().zip(&a) {
+        *xv += av;
+    }
+
+    let x_ln2 = layer_norm(x, &bp.ln2.g, &bp.ln2.b, d);
+    let m = mlp_apply(cfg, &bp.mlp, &x_ln2, macs);
+    for (xv, mv) in x.iter_mut().zip(&m) {
+        *xv += mv;
+    }
+}
+
+/// Run the block stack over `tokens` `[b, t]`. Returns the final-norm
+/// hidden states `[b, t, d]`.
+pub fn encode(
+    model: &NativeModel,
+    tokens: &[i32],
+    b: usize,
+    t: usize,
+    pad_mask: Option<&[bool]>,
+    macs: &mut MacCounter,
+    mut collect: Option<&mut EncodeAux>,
+) -> Vec<f32> {
+    let cfg = &model.cfg;
+    let d = cfg.d_model;
+    let scale = (d as f64).sqrt() as f32;
+    let mut x = vec![0f32; b * t * d];
+    for (i, &tok) in tokens.iter().enumerate() {
+        let row = &model.embed[(tok as usize) * d..(tok as usize + 1) * d];
+        let out = &mut x[i * d..(i + 1) * d];
+        for j in 0..d {
+            out[j] = row[j] * scale;
+        }
+    }
+    for bp in &model.layers {
+        let layer_aux = collect.as_deref_mut().map(|aux| {
+            aux.layers.push(LayerAux::default());
+            aux.layers.last_mut().unwrap()
+        });
+        block_apply(cfg, bp, &mut x, b, t, pad_mask, macs, layer_aux);
+    }
+    layer_norm(&x, &model.ln_f.g, &model.ln_f.b, d)
+}
+
+/// Per-position next-token log-probabilities for a `[b, t+1]` window.
+/// Returns `[b * t]` row-major — the native twin of the PJRT `score`
+/// entry (fresh XL cache each call).
+pub fn score(model: &NativeModel, tokens: &[i32], b: usize, macs: &mut MacCounter) -> Vec<f32> {
+    let cfg = &model.cfg;
+    let t = cfg.seq_len;
+    let t1 = t + 1;
+    let n_out = NativeModel::n_out(cfg);
+    let mut inp = Vec::with_capacity(b * t);
+    for bi in 0..b {
+        inp.extend_from_slice(&tokens[bi * t1..bi * t1 + t]);
+    }
+    let h = encode(model, &inp, b, t, None, macs, None);
+    let logits = matmul(&h, &model.head, b * t, cfg.d_model, n_out);
+    let mut out = Vec::with_capacity(b * t);
+    for bi in 0..b {
+        for i in 0..t {
+            let tgt = tokens[bi * t1 + i + 1] as usize;
+            let row = &logits[(bi * t + i) * n_out..(bi * t + i + 1) * n_out];
+            out.push(row[tgt] - crate::model::tensor::logsumexp(row));
+        }
+    }
+    out
+}
+
+/// Logits for the token following a `[b, t]` window; returns `[b * V]`
+/// (the native twin of the PJRT `next_logits` generation entry).
+pub fn next_logits(
+    model: &NativeModel,
+    tokens: &[i32],
+    b: usize,
+    macs: &mut MacCounter,
+) -> Vec<f32> {
+    let cfg = &model.cfg;
+    let t = cfg.seq_len;
+    let n_out = NativeModel::n_out(cfg);
+    let h = encode(model, tokens, b, t, None, macs, None);
+    let d = cfg.d_model;
+    // Select the last position of each row, then project.
+    let mut last = vec![0f32; b * d];
+    for bi in 0..b {
+        let from = (bi * t + t - 1) * d;
+        last[bi * d..(bi + 1) * d].copy_from_slice(&h[from..from + d]);
+    }
+    matmul(&last, &model.head, b, d, n_out)
+}
+
+/// ListOps classification logits `[b, n_classes]` from position 0 with
+/// a padding key-mask (pad id 0, as in `model.py::listops_loss`).
+pub fn class_logits(
+    model: &NativeModel,
+    tokens: &[i32],
+    b: usize,
+    macs: &mut MacCounter,
+) -> Vec<f32> {
+    let cfg = &model.cfg;
+    debug_assert_eq!(cfg.task, Task::ListOps);
+    let t = cfg.seq_len;
+    let n_out = NativeModel::n_out(cfg);
+    let pad_mask: Vec<bool> = tokens.iter().map(|&tok| tok != 0).collect();
+    let h = encode(model, tokens, b, t, Some(&pad_mask), macs, None);
+    let d = cfg.d_model;
+    let mut first = vec![0f32; b * d];
+    for bi in 0..b {
+        let from = bi * t * d;
+        first[bi * d..(bi + 1) * d].copy_from_slice(&h[from..from + d]);
+    }
+    matmul(&first, &model.head, b, d, n_out)
+}

@@ -1,0 +1,190 @@
+//! `NativeEngine` — the artifact-free execution backend.
+//!
+//! Wraps a [`NativeModel`] behind the same host-buffer inference API the
+//! PJRT [`crate::runtime::Engine`] exposes (`score`, `next_logits`,
+//! attention/gate analysis), implementing [`crate::runtime::Backend`] so
+//! the zero-shot scorer, the generator and the benches run on either
+//! backend unchanged. Everything executes on host f32 buffers — no
+//! artifacts, no Python, no PJRT.
+
+use crate::config::{ModelConfig, Task};
+use crate::coordinator::analysis::HostArray;
+use crate::model::block::{self, EncodeAux};
+use crate::model::params::NativeModel;
+use crate::model::tensor::MacCounter;
+use crate::runtime::Backend;
+use crate::util::error::{bail, Result};
+
+pub struct NativeEngine {
+    pub model: NativeModel,
+}
+
+impl NativeEngine {
+    /// Build a fresh (seed-initialized) native model for `cfg`.
+    pub fn new(cfg: &ModelConfig, seed: u64) -> Result<NativeEngine> {
+        cfg.validate()?;
+        Ok(NativeEngine { model: NativeModel::init(cfg, seed) })
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        &self.model.cfg
+    }
+
+    fn check_tokens(&self, tokens: &[i32], dims: &[usize], want_cols: usize) -> Result<usize> {
+        let cfg = self.cfg();
+        if dims.len() != 2 || dims[1] != want_cols {
+            bail!("native engine: expected dims [B, {want_cols}], got {dims:?}");
+        }
+        let b = dims[0];
+        if tokens.len() != b * want_cols {
+            bail!("native engine: token buffer {} != {b}x{want_cols}", tokens.len());
+        }
+        for &t in tokens {
+            if t < 0 || t as usize >= cfg.vocab_size {
+                bail!("native engine: token id {t} outside vocab {}", cfg.vocab_size);
+            }
+        }
+        Ok(b)
+    }
+
+    /// Per-position next-token log-probabilities for a `[B, T+1]`
+    /// window; returns `[B * T]` (same contract as `Engine::score`).
+    pub fn score(&self, tokens: &[i32], dims: &[usize]) -> Result<Vec<f32>> {
+        if self.cfg().task != Task::Lm {
+            bail!("score requires an LM config");
+        }
+        let b = self.check_tokens(tokens, dims, self.cfg().seq_len + 1)?;
+        let mut macs = MacCounter::default();
+        Ok(block::score(&self.model, tokens, b, &mut macs))
+    }
+
+    /// Logits for the token following a `[B, T]` window; `[B * V]`.
+    pub fn next_logits(&self, tokens: &[i32], dims: &[usize]) -> Result<Vec<f32>> {
+        if self.cfg().task != Task::Lm {
+            bail!("next_logits requires an LM config");
+        }
+        let b = self.check_tokens(tokens, dims, self.cfg().seq_len)?;
+        let mut macs = MacCounter::default();
+        Ok(block::next_logits(&self.model, tokens, b, &mut macs))
+    }
+
+    /// ListOps classification logits `[B, n_classes]`.
+    pub fn class_logits(&self, tokens: &[i32], dims: &[usize]) -> Result<Vec<f32>> {
+        if self.cfg().task != Task::ListOps {
+            bail!("class_logits requires a listops config");
+        }
+        let b = self.check_tokens(tokens, dims, self.cfg().seq_len)?;
+        let mut macs = MacCounter::default();
+        Ok(block::class_logits(&self.model, tokens, b, &mut macs))
+    }
+
+    /// Total negative log-likelihood and token count over a `[B, T+1]`
+    /// window (the native analog of the PJRT eval_step metrics).
+    pub fn eval_nll(&self, tokens: &[i32], dims: &[usize]) -> Result<(f64, usize)> {
+        let logp = self.score(tokens, dims)?;
+        let sum: f64 = logp.iter().map(|&x| -(x as f64)).sum();
+        Ok((sum, logp.len()))
+    }
+
+    /// Attention maps and router scores, shaped like the PJRT `attn`
+    /// entry outputs: `attn` is `[L, B, H, T, Tk]` (H = attention
+    /// matrices per layer), gates are `[L, N, E]` per router.
+    /// LM configs take a `[B, T+1]` window (last column dropped, as in
+    /// `model.py::attn_maps`); listops takes `[B, T]`.
+    pub fn attention_arrays(&self, tokens: &[i32], dims: &[usize]) -> Result<Vec<HostArray>> {
+        let cfg = self.cfg().clone();
+        let t = cfg.seq_len;
+        let mut aux = EncodeAux::default();
+        let mut macs = MacCounter::default();
+        let b;
+        match cfg.task {
+            Task::Lm => {
+                b = self.check_tokens(tokens, dims, t + 1)?;
+                let mut inp = Vec::with_capacity(b * t);
+                for bi in 0..b {
+                    inp.extend_from_slice(&tokens[bi * (t + 1)..bi * (t + 1) + t]);
+                }
+                block::encode(&self.model, &inp, b, t, None, &mut macs, Some(&mut aux));
+            }
+            Task::ListOps => {
+                b = self.check_tokens(tokens, dims, t)?;
+                let pad_mask: Vec<bool> = tokens.iter().map(|&tok| tok != 0).collect();
+                block::encode(&self.model, tokens, b, t, Some(&pad_mask), &mut macs, Some(&mut aux));
+            }
+        }
+
+        let l = aux.layers.len();
+        let n_mat = aux.layers.first().map(|la| la.attn.len()).unwrap_or(0);
+        let tk = cfg.ctx_len();
+        let mut out = Vec::new();
+
+        // Stack per-layer, per-head maps into [L, B, H, T, Tk].
+        let mut maps = vec![0f32; l * b * n_mat * t * tk];
+        for (li, la) in aux.layers.iter().enumerate() {
+            for (hi, m) in la.attn.iter().enumerate() {
+                for bi in 0..b {
+                    let src = &m[bi * t * tk..(bi + 1) * t * tk];
+                    let dst = (((li * b + bi) * n_mat + hi) * t) * tk;
+                    maps[dst..dst + t * tk].copy_from_slice(src);
+                }
+            }
+        }
+        out.push(HostArray {
+            name: "out/attn".into(),
+            shape: vec![l, b, n_mat, t, tk],
+            data: maps,
+        });
+
+        // Stack gate tensors by name into [L, N, E].
+        if let Some(first) = aux.layers.first() {
+            for (gi, (name, _, e)) in first.gates.iter().enumerate() {
+                let n = first.gates[gi].1.len() / e;
+                let mut data = Vec::with_capacity(l * n * e);
+                for la in &aux.layers {
+                    data.extend_from_slice(&la.gates[gi].1);
+                }
+                out.push(HostArray {
+                    name: format!("out/{name}"),
+                    shape: vec![l, n, *e],
+                    data,
+                });
+            }
+        }
+        Ok(out)
+    }
+
+    /// MAC count of one full forward pass (batch 1, all layers), by
+    /// category — compared against `macs::model_attention_cost` in the
+    /// property tests.
+    pub fn count_macs(&self) -> Result<MacCounter> {
+        let cfg = self.cfg();
+        let t = cfg.seq_len;
+        let mut macs = MacCounter::default();
+        match cfg.task {
+            Task::Lm => {
+                let tokens = vec![1i32; t];
+                block::encode(&self.model, &tokens, 1, t, None, &mut macs, None);
+            }
+            Task::ListOps => {
+                let tokens = vec![1i32; t];
+                let pad_mask = vec![true; t];
+                block::encode(&self.model, &tokens, 1, t, Some(&pad_mask), &mut macs, None);
+            }
+        }
+        Ok(macs)
+    }
+}
+
+impl Backend for NativeEngine {
+    fn score(&self, tokens: &[i32], dims: &[usize]) -> Result<Vec<f32>> {
+        NativeEngine::score(self, tokens, dims)
+    }
+
+    fn next_logits(&self, tokens: &[i32], dims: &[usize]) -> Result<Vec<f32>> {
+        NativeEngine::next_logits(self, tokens, dims)
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+}

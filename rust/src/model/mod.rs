@@ -1,0 +1,51 @@
+//! Native (pure-Rust) SwitchHead reference model — the artifact-free
+//! execution backend.
+//!
+//! # Why this exists
+//!
+//! The PJRT path (`runtime::Engine`) replays HLO artifacts that only a
+//! Python/JAX build (`make artifacts`) can produce, so on a clean
+//! checkout the paper's core mechanism — MoE attention with
+//! non-competitive sigmoid expert selection computing `n_heads` instead
+//! of `E * n_heads` attention matrices (Csordás et al., NeurIPS 2024) —
+//! was untestable. This module is a dependency-free f32 implementation
+//! of the full SwitchAll forward pass, driven by the same
+//! [`crate::config::ModelConfig`], making the crate a self-contained
+//! system: deterministic tests, benches and CPU serving need nothing
+//! but a Rust toolchain.
+//!
+//! # Layout
+//!
+//! * [`tensor`] — flat-`Vec<f32>` primitives (matmul, MoE matmul,
+//!   softmax, layernorm, top-k, routing, sinusoidal/RoPE) plus the
+//!   [`tensor::MacCounter`] multiply-accumulate tally that is checked
+//!   against the analytic `macs::attention_cost` (Eq. 11-15).
+//! * [`params`] — structured weights and the seeded initializer whose
+//!   draw order is the golden-vector contract with
+//!   `python/tools/native_ref.py`.
+//! * [`attention`] — SwitchHead (Eq. 7-10), dense MHA and MoA forward
+//!   passes under XL / RoPE / no positional scheme.
+//! * [`block`] — pre-LN block stack, σ-MoE feedforward, and the
+//!   model-level `score` / `next_logits` / `class_logits` heads.
+//! * [`engine`] — [`NativeEngine`], the [`crate::runtime::Backend`]
+//!   implementation wrapping it all behind the PJRT engine's
+//!   host-buffer API.
+//!
+//! # Fidelity
+//!
+//! The forward semantics are pinned two ways: the numpy twin
+//! (`python/tools/native_ref.py`) is asserted against the JAX reference
+//! (`python/compile/layers.py`) by `check_native_vs_jax.py`, and the
+//! checked-in golden vectors (`rust/tests/golden/`) pin this Rust
+//! implementation to that twin. Training is PJRT-only; this backend is
+//! inference/eval (dropout elided).
+
+pub mod attention;
+pub mod block;
+pub mod engine;
+pub mod params;
+pub mod tensor;
+
+pub use engine::NativeEngine;
+pub use params::NativeModel;
+pub use tensor::MacCounter;

@@ -1,0 +1,331 @@
+//! Native-model parameters: structured weight storage and the seeded
+//! initializer.
+//!
+//! The draw order below (one `Pcg` stream, tensor by tensor, C-order
+//! within a tensor) IS the golden-vector contract — it is replayed
+//! bit-for-bit by `python/tools/native_ref.py::init_model`, which both
+//! validates the forward semantics against the JAX reference and emits
+//! `rust/tests/golden/*.json`. Change the order only together with that
+//! file and regenerated goldens.
+//!
+//! The tensor shapes mirror `layers.py::*_init` exactly, so
+//! [`NativeModel::param_count`] agrees with `macs::param_count` (pinned
+//! by a property test).
+
+use crate::config::{Family, MlpType, ModelConfig, Positional, Task};
+use crate::model::tensor::draw_init;
+use crate::util::rng::Pcg;
+
+/// PRNG stream tag for parameter initialization (mirrored in Python).
+pub const INIT_STREAM: u64 = 0x5EED;
+
+pub struct LayerNormP {
+    pub g: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl LayerNormP {
+    fn unit(d: usize) -> LayerNormP {
+        LayerNormP { g: vec![1.0; d], b: vec![0.0; d] }
+    }
+
+    fn numel(&self) -> usize {
+        self.g.len() + self.b.len()
+    }
+}
+
+/// A (possibly MoE) projection: `experts[e]` is row-major `[rows, cols]`.
+/// `moe == false` means a single dense matrix applied without gating.
+pub struct Proj {
+    pub experts: Vec<Vec<f32>>,
+    pub rows: usize,
+    pub cols: usize,
+    pub moe: bool,
+}
+
+impl Proj {
+    fn numel(&self) -> usize {
+        self.experts.len() * self.rows * self.cols
+    }
+}
+
+/// Transformer-XL relative-position parameters; one entry per head
+/// (MoA keeps a single shared entry).
+pub struct XlP {
+    pub w_kr: Vec<Vec<f32>>, // each [d * dh]
+    pub u: Vec<Vec<f32>>,    // each [dh]
+    pub v: Vec<Vec<f32>>,    // each [dh]
+}
+
+impl XlP {
+    fn numel(&self) -> usize {
+        self.w_kr.iter().map(Vec::len).sum::<usize>()
+            + self.u.iter().map(Vec::len).sum::<usize>()
+            + self.v.iter().map(Vec::len).sum::<usize>()
+    }
+}
+
+/// SwitchHead attention (paper §2.2): per head, dense-or-MoE K/Q/V/O
+/// plus a source-side router and (unless tied) a destination-side one.
+pub struct SwitchHeadP {
+    pub w_k: Vec<Proj>,
+    pub w_q: Vec<Proj>,
+    pub w_v: Vec<Proj>,
+    pub w_o: Vec<Proj>,
+    pub w_sel_s: Vec<Vec<f32>>, // per head [d * e]
+    pub w_sel_d: Option<Vec<Vec<f32>>>,
+    pub xl: Option<XlP>,
+}
+
+/// Standard MHA baseline.
+pub struct DenseP {
+    pub w_k: Vec<Vec<f32>>, // per head [d * dh]
+    pub w_q: Vec<Vec<f32>>,
+    pub w_v: Vec<Vec<f32>>,
+    pub w_o: Vec<Vec<f32>>, // per head [dh * d]
+    pub xl: Option<XlP>,
+}
+
+/// MoA baseline (Zhang et al. 2022): shared K/V, expert pools for Q/O.
+pub struct MoaP {
+    pub w_k: Vec<f32>,      // [d * dh]
+    pub w_v: Vec<f32>,      // [d * dh]
+    pub w_q: Vec<Vec<f32>>, // per expert [d * dh]
+    pub w_o: Vec<Vec<f32>>, // per expert [dh * d]
+    pub w_sel: Vec<f32>,    // [d * e]
+    pub xl: Option<XlP>,
+}
+
+pub enum AttnP {
+    SwitchHead(SwitchHeadP),
+    Dense(DenseP),
+    Moa(MoaP),
+}
+
+pub enum MlpP {
+    Dense { w1: Vec<f32>, w2: Vec<f32> },
+    SigmaMoe { w1: Vec<Vec<f32>>, w2: Vec<Vec<f32>>, w_sel: Vec<f32> },
+}
+
+pub struct BlockP {
+    pub ln1: LayerNormP,
+    pub ln2: LayerNormP,
+    pub attn: AttnP,
+    pub mlp: MlpP,
+}
+
+/// The full native model: embedding, output head, final norm, blocks.
+pub struct NativeModel {
+    pub cfg: ModelConfig,
+    pub embed: Vec<f32>, // [V * d]
+    pub head: Vec<f32>,  // [d * n_out]
+    pub ln_f: LayerNormP,
+    pub layers: Vec<BlockP>,
+}
+
+fn draw_heads(rng: &mut Pcg, h: usize, n: usize, fan_in: usize) -> Vec<Vec<f32>> {
+    (0..h).map(|_| draw_init(rng, n, fan_in)).collect()
+}
+
+fn draw_proj(
+    rng: &mut Pcg,
+    n_experts: usize,
+    moe: bool,
+    rows: usize,
+    cols: usize,
+    fan_in: usize,
+) -> Proj {
+    let e = if moe { n_experts } else { 1 };
+    Proj {
+        experts: (0..e).map(|_| draw_init(rng, rows * cols, fan_in)).collect(),
+        rows,
+        cols,
+        moe,
+    }
+}
+
+fn draw_xl(rng: &mut Pcg, h: usize, d: usize, dh: usize) -> XlP {
+    XlP {
+        w_kr: draw_heads(rng, h, d * dh, d),
+        u: (0..h).map(|_| vec![0.0; dh]).collect(),
+        v: (0..h).map(|_| vec![0.0; dh]).collect(),
+    }
+}
+
+impl NativeModel {
+    /// Output dimensionality of the head (vocab or n_classes).
+    pub fn n_out(cfg: &ModelConfig) -> usize {
+        match cfg.task {
+            Task::ListOps => cfg.ls_n_classes,
+            Task::Lm => cfg.vocab_size,
+        }
+    }
+
+    /// Seeded deterministic initialization (same seed -> identical model).
+    pub fn init(cfg: &ModelConfig, seed: u64) -> NativeModel {
+        let rng = &mut Pcg::new(seed, INIT_STREAM);
+        let (d, dh, h) = (cfg.d_model, cfg.d_head, cfg.n_heads);
+        let n_out = NativeModel::n_out(cfg);
+        let embed = draw_init(rng, cfg.vocab_size * d, d);
+        let head = draw_init(rng, d * n_out, d);
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for _ in 0..cfg.n_layers {
+            let attn = match cfg.family {
+                Family::SwitchHead => {
+                    let e = cfg.att_n_experts;
+                    let w_k: Vec<Proj> =
+                        (0..h).map(|_| draw_proj(rng, e, cfg.moe_k, d, dh, d)).collect();
+                    let w_q: Vec<Proj> =
+                        (0..h).map(|_| draw_proj(rng, e, cfg.moe_q, d, dh, d)).collect();
+                    let w_v: Vec<Proj> =
+                        (0..h).map(|_| draw_proj(rng, e, cfg.moe_v, d, dh, d)).collect();
+                    let w_o: Vec<Proj> =
+                        (0..h).map(|_| draw_proj(rng, e, cfg.moe_o, dh, d, dh)).collect();
+                    let w_sel_s = draw_heads(rng, h, d * e, d);
+                    let w_sel_d = if cfg.shared_selection {
+                        None
+                    } else {
+                        Some(draw_heads(rng, h, d * e, d))
+                    };
+                    let xl = (cfg.pos == Positional::Xl).then(|| draw_xl(rng, h, d, dh));
+                    AttnP::SwitchHead(SwitchHeadP { w_k, w_q, w_v, w_o, w_sel_s, w_sel_d, xl })
+                }
+                Family::Dense => {
+                    let w_k = draw_heads(rng, h, d * dh, d);
+                    let w_q = draw_heads(rng, h, d * dh, d);
+                    let w_v = draw_heads(rng, h, d * dh, d);
+                    let w_o = draw_heads(rng, h, dh * d, dh);
+                    let xl = (cfg.pos == Positional::Xl).then(|| draw_xl(rng, h, d, dh));
+                    AttnP::Dense(DenseP { w_k, w_q, w_v, w_o, xl })
+                }
+                Family::Moa => {
+                    let e = cfg.moa_n_experts;
+                    let w_k = draw_init(rng, d * dh, d);
+                    let w_v = draw_init(rng, d * dh, d);
+                    let w_q = draw_heads(rng, e, d * dh, d);
+                    let w_o = draw_heads(rng, e, dh * d, dh);
+                    let w_sel = draw_init(rng, d * e, d);
+                    let xl = (cfg.pos == Positional::Xl).then(|| draw_xl(rng, 1, d, dh));
+                    AttnP::Moa(MoaP { w_k, w_v, w_q, w_o, w_sel, xl })
+                }
+            };
+            let mlp = match cfg.mlp_type {
+                MlpType::SigmaMoe => {
+                    let (e, de) = (cfg.mlp_n_experts, cfg.mlp_d_expert);
+                    MlpP::SigmaMoe {
+                        w1: draw_heads(rng, e, d * de, d),
+                        w2: draw_heads(rng, e, de * d, de),
+                        w_sel: draw_init(rng, d * e, d),
+                    }
+                }
+                MlpType::Dense => MlpP::Dense {
+                    w1: draw_init(rng, d * cfg.d_ff, d),
+                    w2: draw_init(rng, cfg.d_ff * d, cfg.d_ff),
+                },
+            };
+            layers.push(BlockP {
+                ln1: LayerNormP::unit(d),
+                ln2: LayerNormP::unit(d),
+                attn,
+                mlp,
+            });
+        }
+        NativeModel {
+            cfg: cfg.clone(),
+            embed,
+            head,
+            ln_f: LayerNormP::unit(d),
+            layers,
+        }
+    }
+
+    /// Exact stored-parameter count; agrees with `macs::param_count`
+    /// (asserted by `prop_native_param_count_matches_analytic`).
+    pub fn param_count(&self) -> usize {
+        let mut total = self.embed.len() + self.head.len() + self.ln_f.numel();
+        for bp in &self.layers {
+            total += bp.ln1.numel() + bp.ln2.numel();
+            total += match &bp.attn {
+                AttnP::SwitchHead(p) => {
+                    let projs: usize = [&p.w_k, &p.w_q, &p.w_v, &p.w_o]
+                        .iter()
+                        .map(|ps| ps.iter().map(Proj::numel).sum::<usize>())
+                        .sum();
+                    let sels: usize = p.w_sel_s.iter().map(Vec::len).sum::<usize>()
+                        + p.w_sel_d
+                            .as_ref()
+                            .map(|s| s.iter().map(Vec::len).sum::<usize>())
+                            .unwrap_or(0);
+                    projs + sels + p.xl.as_ref().map(XlP::numel).unwrap_or(0)
+                }
+                AttnP::Dense(p) => {
+                    [&p.w_k, &p.w_q, &p.w_v, &p.w_o]
+                        .iter()
+                        .map(|ws| ws.iter().map(Vec::len).sum::<usize>())
+                        .sum::<usize>()
+                        + p.xl.as_ref().map(XlP::numel).unwrap_or(0)
+                }
+                AttnP::Moa(p) => {
+                    p.w_k.len()
+                        + p.w_v.len()
+                        + p.w_q.iter().map(Vec::len).sum::<usize>()
+                        + p.w_o.iter().map(Vec::len).sum::<usize>()
+                        + p.w_sel.len()
+                        + p.xl.as_ref().map(XlP::numel).unwrap_or(0)
+                }
+            };
+            total += match &bp.mlp {
+                MlpP::Dense { w1, w2 } => w1.len() + w2.len(),
+                MlpP::SigmaMoe { w1, w2, w_sel } => {
+                    w1.iter().map(Vec::len).sum::<usize>()
+                        + w2.iter().map(Vec::len).sum::<usize>()
+                        + w_sel.len()
+                }
+            };
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn cfg(text: &str) -> ModelConfig {
+        ModelConfig::from_json(&Json::parse(text).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn init_is_deterministic_and_seed_sensitive() {
+        let c = cfg(r#"{"name":"t","d_model":16,"n_layers":1,"n_heads":2,"d_head":8,
+                        "vocab_size":32,"seq_len":8,"batch_size":1}"#);
+        let a = NativeModel::init(&c, 7);
+        let b = NativeModel::init(&c, 7);
+        let c2 = NativeModel::init(&c, 8);
+        assert_eq!(a.embed, b.embed);
+        assert_eq!(a.head, b.head);
+        assert_ne!(a.embed, c2.embed);
+    }
+
+    #[test]
+    fn param_count_matches_macs_accounting() {
+        for text in [
+            r#"{"family":"switchhead","pos":"xl","att_n_experts":4,"att_k":2}"#,
+            r#"{"family":"switchhead","pos":"rope","moe_k":true,"moe_q":true}"#,
+            r#"{"family":"switchhead","pos":"xl","shared_selection":true}"#,
+            r#"{"family":"dense","pos":"xl","n_heads":4}"#,
+            r#"{"family":"moa","pos":"xl","moa_n_experts":6,"moa_k":2}"#,
+            r#"{"family":"switchhead","pos":"xl","mlp_type":"sigma_moe"}"#,
+            r#"{"family":"dense","pos":"none","task":"listops"}"#,
+        ] {
+            let c = cfg(text);
+            let m = NativeModel::init(&c, 3);
+            assert_eq!(
+                m.param_count(),
+                crate::macs::param_count(&c),
+                "param_count mismatch for {text}"
+            );
+        }
+    }
+}

@@ -1,0 +1,411 @@
+//! Minimal f32 host-tensor primitives for the native backend.
+//!
+//! All tensors are flat row-major `Vec<f32>` with dimensions passed
+//! explicitly; no external linear-algebra crates (offline registry).
+//! Numeric twin: `python/tools/native_ref.py` — keep operation order in
+//! lock-step so the checked-in golden vectors stay valid.
+
+use crate::util::rng::Pcg;
+
+pub const NEG_INF: f32 = -1e9;
+
+/// Multiply-accumulate accounting for the native forward pass, by the
+/// categories of the paper's Eq. 11-15 (see `macs::attention_cost`).
+/// `router` is tracked separately because Eq. 13 does not charge the
+/// expert-selection matmuls (they are O(D*E) per token, negligible at
+/// paper scale).
+#[derive(Debug, Default, Clone)]
+pub struct MacCounter {
+    /// Dense projections (Q/K/V/O without expert structure).
+    pub proj_dense: f64,
+    /// MoE projections, counted as k * (matmul + gate multiply) per token.
+    pub proj_moe: f64,
+    /// Attention core: QK^T logits + attention-weighted value sum.
+    pub attn_core: f64,
+    /// Expert-selection (router) matmuls — NOT part of Eq. 13.
+    pub router: f64,
+    /// Positional machinery (XL relative-position projection + logits).
+    pub pos: f64,
+    /// Feedforward layer (dense or sigma-MoE) — outside Eq. 11-15.
+    pub mlp: f64,
+}
+
+impl MacCounter {
+    /// The attention MACs Eq. 11/13 accounts for (projections + core +
+    /// positional; excludes the router and the MLP).
+    pub fn attention_total(&self) -> f64 {
+        self.proj_dense + self.proj_moe + self.attn_core + self.pos
+    }
+}
+
+/// `[n, d] @ [d, m] -> [n, m]`.
+pub fn matmul(x: &[f32], w: &[f32], n: usize, d: usize, m: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), n * d, "matmul lhs size");
+    debug_assert_eq!(w.len(), d * m, "matmul rhs size");
+    let mut out = vec![0f32; n * m];
+    for i in 0..n {
+        let xr = &x[i * d..(i + 1) * d];
+        let or = &mut out[i * m..(i + 1) * m];
+        for (kk, &xv) in xr.iter().enumerate() {
+            let wr = &w[kk * m..(kk + 1) * m];
+            for j in 0..m {
+                or[j] += xv * wr[j];
+            }
+        }
+    }
+    out
+}
+
+/// MoE projection (paper Eq. 9-10): per token i, sum over the selected
+/// experts j of `gate[i,j] * (x_i @ experts[idx[i,j]])`.
+/// `x` is `[n, rows]`; each expert matrix is `[rows, cols]`;
+/// `idx`/`gate` are `[n, k]` flattened.
+pub fn moe_matmul(
+    x: &[f32],
+    experts: &[Vec<f32>],
+    rows: usize,
+    cols: usize,
+    idx: &[usize],
+    gate: &[f32],
+    k: usize,
+) -> Vec<f32> {
+    let n = x.len() / rows;
+    debug_assert_eq!(idx.len(), n * k);
+    let mut out = vec![0f32; n * cols];
+    let mut tmp = vec![0f32; cols];
+    for i in 0..n {
+        let xr = &x[i * rows..(i + 1) * rows];
+        for j in 0..k {
+            let w = &experts[idx[i * k + j]];
+            let g = gate[i * k + j];
+            for v in tmp.iter_mut() {
+                *v = 0.0;
+            }
+            for (kk, &xv) in xr.iter().enumerate() {
+                let wr = &w[kk * cols..(kk + 1) * cols];
+                for jj in 0..cols {
+                    tmp[jj] += xv * wr[jj];
+                }
+            }
+            let or = &mut out[i * cols..(i + 1) * cols];
+            for jj in 0..cols {
+                or[jj] += g * tmp[jj];
+            }
+        }
+    }
+    out
+}
+
+/// Row-wise layer norm over the last dimension `d` (eps = 1e-5,
+/// biased variance — matches `layers.py::layer_norm`).
+pub fn layer_norm(x: &[f32], g: &[f32], b: &[f32], d: usize) -> Vec<f32> {
+    let n = x.len() / d;
+    let mut out = vec![0f32; x.len()];
+    for i in 0..n {
+        let row = &x[i * d..(i + 1) * d];
+        let mut mu = 0f32;
+        for &v in row {
+            mu += v;
+        }
+        mu /= d as f32;
+        let mut var = 0f32;
+        for &v in row {
+            let c = v - mu;
+            var += c * c;
+        }
+        var /= d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        let or = &mut out[i * d..(i + 1) * d];
+        for j in 0..d {
+            or[j] = (row[j] - mu) * inv * g[j] + b[j];
+        }
+    }
+    out
+}
+
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// In-place row softmax over rows of width `w` (max-subtracted).
+pub fn softmax_rows(x: &mut [f32], w: usize) {
+    for row in x.chunks_mut(w) {
+        let mut m = f32::NEG_INFINITY;
+        for &v in row.iter() {
+            if v > m {
+                m = v;
+            }
+        }
+        let mut s = 0f32;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            s += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= s;
+        }
+    }
+}
+
+/// `log(sum(exp(row)))`, max-subtracted.
+pub fn logsumexp(row: &[f32]) -> f32 {
+    let mut m = f32::NEG_INFINITY;
+    for &v in row {
+        if v > m {
+            m = v;
+        }
+    }
+    let mut s = 0f32;
+    for &v in row {
+        s += (v - m).exp();
+    }
+    m + s.ln()
+}
+
+/// Iterative-argmax top-k over `scores` (first maximum wins ties) —
+/// mirrors `layers.py::small_top_k`. Returns (indices, values).
+pub fn top_k(scores: &[f32], k: usize) -> (Vec<usize>, Vec<f32>) {
+    debug_assert!(k <= scores.len());
+    let mut masked = scores.to_vec();
+    let mut idx = Vec::with_capacity(k);
+    let mut val = Vec::with_capacity(k);
+    for _ in 0..k {
+        let mut best = 0usize;
+        let mut bv = f32::NEG_INFINITY;
+        for (i, &v) in masked.iter().enumerate() {
+            if v > bv {
+                bv = v;
+                best = i;
+            }
+        }
+        idx.push(best);
+        val.push(scores[best]);
+        masked[best] = f32::NEG_INFINITY;
+    }
+    (idx, val)
+}
+
+/// Routing activation (paper §2.2 / §3.6 design choice).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Router {
+    /// sigma-MoE non-competitive selection (the paper's choice, Eq. 7-8).
+    Sigmoid,
+    /// MoA-style competitive selection with renormalized top-k gates.
+    Softmax,
+}
+
+impl Router {
+    pub fn parse(s: &str) -> Router {
+        if s == "softmax" {
+            Router::Softmax
+        } else {
+            Router::Sigmoid
+        }
+    }
+}
+
+/// Route `x [n, d]` through selector `w_sel [d, e]`: returns
+/// (idx `[n*k]`, gate `[n*k]`, scores `[n*e]` for analysis).
+pub fn route(
+    x: &[f32],
+    w_sel: &[f32],
+    d: usize,
+    e: usize,
+    k: usize,
+    router: Router,
+    macs: &mut MacCounter,
+) -> (Vec<usize>, Vec<f32>, Vec<f32>) {
+    let n = x.len() / d;
+    let mut scores = matmul(x, w_sel, n, d, e);
+    macs.router += (n * d * e) as f64;
+    match router {
+        Router::Sigmoid => {
+            for v in scores.iter_mut() {
+                *v = sigmoid(*v);
+            }
+        }
+        Router::Softmax => {
+            softmax_rows(&mut scores, e);
+        }
+    }
+    let mut idx = Vec::with_capacity(n * k);
+    let mut gate = Vec::with_capacity(n * k);
+    for i in 0..n {
+        let (ids, mut vals) = top_k(&scores[i * e..(i + 1) * e], k);
+        if router == Router::Softmax {
+            let s: f32 = vals.iter().sum();
+            for v in vals.iter_mut() {
+                *v /= s + 1e-9;
+            }
+        }
+        idx.extend(ids);
+        gate.extend(vals);
+    }
+    (idx, gate, scores)
+}
+
+/// Classic sinusoidal embedding: `[count, d]` with `[sin | cos]` halves
+/// (mirrors `layers.py::sinusoidal`; `d` must be even).
+pub fn sinusoidal(count: usize, d: usize) -> Vec<f32> {
+    let half = d / 2;
+    let lg = (10000f64).ln() / half as f64;
+    let mut out = vec![0f32; count * d];
+    for p in 0..count {
+        for j in 0..half {
+            let ang = p as f64 * (-(j as f64) * lg).exp();
+            out[p * d + j] = ang.sin() as f32;
+            out[p * d + half + j] = ang.cos() as f32;
+        }
+    }
+    out
+}
+
+/// RoPE rotation in place: `x` is `[b, t, dh]`, row `ti` sits at
+/// absolute position `pos0 + ti` (mirrors `layers.py::rope_rotate`).
+pub fn rope_rotate(x: &mut [f32], b: usize, t: usize, dh: usize, pos0: usize) {
+    let half = dh / 2;
+    let lg = (10000f64).ln() / half as f64;
+    for bi in 0..b {
+        for ti in 0..t {
+            let base = (bi * t + ti) * dh;
+            let pos = (pos0 + ti) as f64;
+            for j in 0..half {
+                let ang = pos * (-(j as f64) * lg).exp();
+                let (s, c) = (ang.sin() as f32, ang.cos() as f32);
+                let x1 = x[base + j];
+                let x2 = x[base + half + j];
+                x[base + j] = x1 * c - x2 * s;
+                x[base + half + j] = x1 * s + x2 * c;
+            }
+        }
+    }
+}
+
+/// Initialization draw: normal / sqrt(fan_in), in f64 then cast — the
+/// exact sequence the numpy twin replays to produce golden weights.
+pub fn draw_init(rng: &mut Pcg, n: usize, fan_in: usize) -> Vec<f32> {
+    let root = (fan_in as f64).sqrt();
+    (0..n).map(|_| (rng.normal() / root) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        // 2x2 identity leaves rows unchanged.
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let id = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul(&x, &id, 2, 2, 2), x);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        // [1,2;3,4] @ [5,6;7,8] = [19,22;43,50]
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![5.0, 6.0, 7.0, 8.0];
+        assert_eq!(matmul(&a, &b, 2, 2, 2), vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn moe_single_expert_unit_gate_is_dense() {
+        let x = vec![1.0, -1.0, 0.5, 2.0];
+        let w = vec![0.5, 1.0, -1.0, 0.25, 2.0, 0.0];
+        let dense = matmul(&x, &w, 2, 2, 3);
+        let moe = moe_matmul(&x, &[w.clone()], 2, 3, &[0, 0], &[1.0, 1.0], 1);
+        assert_eq!(dense, moe);
+    }
+
+    #[test]
+    fn moe_gates_scale_linearly() {
+        let x = vec![1.0, 2.0];
+        let w = vec![1.0, 0.0, 0.0, 1.0];
+        let half = moe_matmul(&x, &[w.clone()], 1, 2, &[0], &[0.5], 1);
+        assert_eq!(half, vec![0.5, 1.0]);
+    }
+
+    #[test]
+    fn softmax_rows_are_stochastic() {
+        let mut x = vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0];
+        softmax_rows(&mut x, 3);
+        for row in x.chunks(3) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+            assert!(row.iter().all(|&v| v > 0.0));
+        }
+        // Monotone in the logits.
+        assert!(x[2] > x[1] && x[1] > x[0]);
+    }
+
+    #[test]
+    fn layer_norm_zero_mean_unit_var() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let g = vec![1.0; 4];
+        let b = vec![0.0; 4];
+        let y = layer_norm(&x, &g, &b, 4);
+        let mu: f32 = y.iter().sum::<f32>() / 4.0;
+        let var: f32 = y.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / 4.0;
+        assert!(mu.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn top_k_selects_distinct_descending() {
+        let scores = vec![0.1, 0.9, 0.5, 0.9, 0.2];
+        let (idx, val) = top_k(&scores, 3);
+        assert_eq!(idx, vec![1, 3, 2], "first max wins ties");
+        assert_eq!(val, vec![0.9, 0.9, 0.5]);
+    }
+
+    #[test]
+    fn logsumexp_matches_naive() {
+        let row = vec![0.5, -1.0, 2.0];
+        let naive = row.iter().map(|v| v.exp()).sum::<f32>().ln();
+        assert!((logsumexp(&row) - naive).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sinusoidal_first_position_is_sin0_cos0() {
+        let s = sinusoidal(3, 4);
+        assert_eq!(&s[..4], &[0.0, 0.0, 1.0, 1.0], "pos 0: sin=0, cos=1");
+    }
+
+    #[test]
+    fn rope_position_zero_is_identity() {
+        let orig = vec![1.0, 2.0, 3.0, 4.0];
+        let mut x = orig.clone();
+        rope_rotate(&mut x, 1, 1, 4, 0);
+        assert_eq!(x, orig);
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut x = vec![1.0, 2.0, 3.0, 4.0];
+        let n0: f32 = x.iter().map(|v| v * v).sum();
+        rope_rotate(&mut x, 1, 1, 4, 17);
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-4);
+    }
+
+    #[test]
+    fn router_invariants() {
+        let mut rng = Pcg::new(5, 5);
+        let x: Vec<f32> = (0..6 * 8).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..8 * 4).map(|_| rng.normal() as f32).collect();
+        let mut macs = MacCounter::default();
+        let (idx, gate, scores) = route(&x, &w, 8, 4, 2, Router::Sigmoid, &mut macs);
+        assert_eq!(idx.len(), 12);
+        assert_eq!(scores.len(), 24);
+        assert!(gate.iter().all(|&g| g > 0.0 && g < 1.0), "sigmoid gate range");
+        assert!(scores.iter().all(|&s| s > 0.0 && s < 1.0));
+        assert!(macs.router > 0.0);
+        // Softmax router: per-token gates renormalize to ~1.
+        let (_, gate, _) = route(&x, &w, 8, 4, 2, Router::Softmax, &mut macs);
+        for pair in gate.chunks(2) {
+            let s: f32 = pair.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4);
+        }
+    }
+}

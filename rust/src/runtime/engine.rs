@@ -4,13 +4,21 @@
 //! ONE device-resident f32 buffer chained between executions, so the hot
 //! path does no host<->device parameter traffic — only the token upload
 //! (a few KiB) and a 4-float metrics read per step.
+//!
+//! NOTE: in offline builds the `xla` crate is replaced by
+//! [`super::xla_stub`], so `Engine::load` fails at runtime with a clear
+//! message instead of at link time; the artifact-free code path is
+//! [`crate::model::NativeEngine`]. To relink the real PJRT backend,
+//! point the import below back at the `xla` crate.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Context, Result};
-use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+use super::xla_stub::{
+    HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation,
+};
+use crate::util::error::{anyhow, bail, Context, Result};
 
 use super::manifest::Manifest;
 use crate::util::logging::info;

@@ -5,7 +5,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::{anyhow, bail, Result};
 
 use crate::util::json::Json;
 

@@ -1,13 +1,79 @@
-//! Runtime layer: PJRT client wrapper around the AOT-compiled HLO
-//! artifacts (the `xla` crate / xla_extension 0.5.1 CPU plugin).
+//! Runtime layer: the two execution backends behind one host-buffer
+//! inference API.
 //!
-//! `engine` owns compilation and the flat-buffer execution ABI;
-//! `manifest` is the contract with `python/compile/aot.py`;
-//! `checkpoint` persists the flat buffer.
+//! * **PJRT** ([`Engine`]): compiles the AOT HLO artifacts produced by
+//!   `python/compile/aot.py` and chains the device-resident flat
+//!   training-state buffer (`engine` owns the execution ABI, `manifest`
+//!   is the artifact contract, `checkpoint` persists the buffer). In
+//!   offline builds the `xla` crate is substituted by [`xla_stub`], so
+//!   loading artifacts errors at runtime with a clear message.
+//! * **Native** ([`crate::model::NativeEngine`]): the pure-Rust
+//!   reference forward pass — artifact-free, deterministic, always
+//!   available. Carries the test tier and CPU inference.
+//!
+//! The [`Backend`] trait is the seam: the zero-shot scorer
+//! (`coordinator::scorer`), the generator (`coordinator::generate`) and
+//! the benches accept `&dyn Backend` and run on either engine.
+//! Training remains PJRT-only (the native backend has no autodiff).
 
 pub mod checkpoint;
 pub mod engine;
 pub mod manifest;
+pub mod xla_stub;
 
 pub use engine::{Engine, FlatBuf, StepTimes};
 pub use manifest::Manifest;
+
+use crate::util::error::{bail, Result};
+
+/// Host-buffer inference API shared by the PJRT and native backends.
+///
+/// `tokens` is a row-major i32 buffer with `dims = [B, T]`-style shape;
+/// returns host f32 buffers (see each method). Implementations validate
+/// shapes and vocabulary range.
+pub trait Backend {
+    /// Per-position next-token log-probabilities for a `[B, T+1]`
+    /// window; returns `[B * T]`.
+    fn score(&self, tokens: &[i32], dims: &[usize]) -> Result<Vec<f32>>;
+
+    /// Logits for the token following a `[B, T]` window; `[B * V]`.
+    fn next_logits(&self, tokens: &[i32], dims: &[usize]) -> Result<Vec<f32>>;
+
+    /// Short backend identifier for logs/tables ("pjrt" / "native").
+    fn backend_name(&self) -> &'static str;
+}
+
+/// [`Backend`] adapter binding a PJRT [`Engine`] to a parameter state
+/// ([`FlatBuf`]): uploads host tokens and runs the compiled entries.
+pub struct PjrtBackend<'a> {
+    pub engine: &'a Engine,
+    pub flat: &'a FlatBuf,
+}
+
+impl<'a> PjrtBackend<'a> {
+    pub fn new(engine: &'a Engine, flat: &'a FlatBuf) -> PjrtBackend<'a> {
+        PjrtBackend { engine, flat }
+    }
+}
+
+impl Backend for PjrtBackend<'_> {
+    fn score(&self, tokens: &[i32], dims: &[usize]) -> Result<Vec<f32>> {
+        let buf = self.engine.upload_i32(tokens, dims)?;
+        self.engine.score(self.flat, &buf)
+    }
+
+    fn next_logits(&self, tokens: &[i32], dims: &[usize]) -> Result<Vec<f32>> {
+        if !self.engine.manifest.entries.contains_key("next_logits") {
+            bail!(
+                "artifact '{}' lacks the next_logits entry — rebuild with `make artifacts`",
+                self.engine.manifest.name
+            );
+        }
+        let buf = self.engine.upload_i32(tokens, dims)?;
+        self.engine.next_logits(self.flat, &buf)
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+}

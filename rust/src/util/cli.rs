@@ -3,7 +3,7 @@
 //! Supports `--flag`, `--key value`, `--key=value`, and positional
 //! arguments, with typed getters and a generated usage string.
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 
 #[derive(Debug, Default)]

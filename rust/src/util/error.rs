@@ -1,0 +1,172 @@
+//! Error substrate: a minimal, dependency-free replacement for the
+//! `anyhow` crate (which the offline registry does not carry, DESIGN.md
+//! §3). Implements the subset the repo uses: `Error`, `Result<T>`, the
+//! `anyhow!` / `bail!` / `ensure!` macros, and the `Context` extension
+//! trait for both `Result` and `Option`.
+//!
+//! Semantics match `anyhow` where it matters:
+//! * any `std::error::Error` converts via `?` (the blanket `From`);
+//! * `.context(..)` / `.with_context(..)` prepend a message;
+//! * `Display` prints the outermost message with the cause chain joined
+//!   by `": "` (so `{e}` and `{e:#}` both read naturally);
+//! * `Debug` (used by `fn main() -> Result<()>`) prints the chain.
+//!
+//! `Error` deliberately does NOT implement `std::error::Error`, exactly
+//! like `anyhow::Error`, so the blanket `From` impl stays coherent.
+
+use std::fmt;
+
+/// Crate-wide result alias (drop-in for `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A flattened error message with its context chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from a message (the `anyhow!` macro calls this).
+    pub fn new(msg: String) -> Error {
+        Error { msg }
+    }
+
+    /// Build from anything displayable (drop-in for `anyhow::Error::msg`).
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    fn wrap(self, context: impl fmt::Display) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// Context-attaching extension (drop-in for `anyhow::Context`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (drop-in for `anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::new(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] (drop-in for `bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Assert-or-error (drop-in for `ensure!`).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+pub use crate::{anyhow, bail, ensure};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/nonexistent/definitely/missing")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_prepends() {
+        let e = io_fail().context("loading config").unwrap_err();
+        assert!(e.to_string().starts_with("loading config: "), "{e}");
+        let e2 = io_fail().with_context(|| format!("pass {}", 2)).unwrap_err();
+        assert!(e2.to_string().starts_with("pass 2: "), "{e2}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        assert_eq!(Some(7u32).context("x").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_format() {
+        let x = 42;
+        let e = anyhow!("bad value {x} ({})", "detail");
+        assert_eq!(e.to_string(), "bad value 42 (detail)");
+
+        fn bails() -> Result<()> {
+            bail!("stop at {x}", x = 9);
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "stop at 9");
+
+        fn ensures(v: usize) -> Result<usize> {
+            ensure!(v < 10, "too big: {v}");
+            Ok(v)
+        }
+        assert!(ensures(3).is_ok());
+        assert_eq!(ensures(30).unwrap_err().to_string(), "too big: 30");
+    }
+
+    #[test]
+    fn alternate_format_is_stable() {
+        let e = io_fail().context("outer").unwrap_err();
+        // anyhow renders `{:#}` as "outer: inner"; we flatten eagerly so
+        // both forms agree.
+        assert_eq!(format!("{e}"), format!("{e:#}"));
+    }
+}

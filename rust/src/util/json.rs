@@ -9,7 +9,7 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::{anyhow, bail, Result};
 
 /// A JSON value. Objects use `BTreeMap` so serialization is deterministic.
 #[derive(Debug, Clone, PartialEq)]

@@ -1,8 +1,9 @@
 //! In-repo substrates replacing crates unavailable in the offline
-//! registry (DESIGN.md §3): JSON, PRNG, CLI parsing, logging, stats,
-//! PGM image output, and a property-testing mini-framework.
+//! registry (DESIGN.md §3): errors, JSON, PRNG, CLI parsing, logging,
+//! stats, PGM image output, and a property-testing mini-framework.
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod logging;
 pub mod pgm;

@@ -5,7 +5,7 @@
 use std::io::Write;
 use std::path::Path;
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Write a row-major `[h, w]` matrix as an 8-bit PGM, min-max normalized.
 pub fn write_pgm(path: &Path, data: &[f32], h: usize, w: usize) -> Result<()> {
