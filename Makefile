@@ -8,18 +8,30 @@
 CONFIGS ?= $(wildcard configs/*.json)
 CARGO ?= cargo
 
-.PHONY: check build test artifacts smoke bench-tables clean
+# Clippy allowlist: index-loop and wide-signature idioms are intrinsic
+# to the dependency-free numeric kernels (flat-Vec tensors, MAC-counted
+# loops); everything else is denied.
+CLIPPY_ALLOW = -A clippy::needless_range_loop -A clippy::too_many_arguments \
+               -A clippy::type_complexity -A clippy::manual_memcpy
 
-## Tier-1: build + full test suite, artifact-free.
+.PHONY: check build test lint artifacts smoke bench-tables clean
+
+## Tier-1: build + full test suite + lint gate, artifact-free.
 check:
 	$(CARGO) build --release
 	$(CARGO) test -q
+	$(MAKE) lint
 
 build:
 	$(CARGO) build --release
 
 test:
 	$(CARGO) test -q
+
+## Lint gate: rustfmt + clippy, warning-clean across all targets.
+lint:
+	$(CARGO) fmt --all --check
+	$(CARGO) clippy --all-targets -- -D warnings $(CLIPPY_ALLOW)
 
 ## Native-backend latency smoke (no artifacts needed): step_latency
 ## falls back to timing NativeEngine score/next_logits per config.

@@ -1,5 +1,7 @@
 //! Micro-benchmark: per-entry execution latency (train_step / eval_step
-//! / score) for the parameter-matched tiny family. This is the L3 §Perf
+//! / score) for the parameter-matched tiny family, plus the
+//! decode-throughput table that measures the Session API's incremental
+//! decoding against full-window recompute. This is the L3 §Perf
 //! instrument — it separates coordinator overhead (upload + readback)
 //! from device execute time. See EXPERIMENTS.md §Perf.
 //!
@@ -7,13 +9,14 @@
 //! checkout, no Python), the native backend is timed instead —
 //! `score` and `next_logits` on host buffers — so `make smoke` always
 //! produces latency rows. Set SWITCHHEAD_BENCH_NATIVE=0 to disable the
-//! fallback.
+//! fallback. The decode table always runs on the native backend (the
+//! incremental KV-cache path only exists there).
 use std::path::Path;
 
-use switchhead::bench::time;
+use switchhead::bench::{fmt_si, time, Table};
 use switchhead::config::{ModelConfig, Task};
 use switchhead::model::NativeEngine;
-use switchhead::runtime::Engine;
+use switchhead::runtime::{Backend, Engine, Session, TokenBatch};
 use switchhead::util::rng::Pcg;
 
 /// Native-backend smoke rows (artifact-free).
@@ -28,21 +31,24 @@ fn bench_native(cfg: &ModelConfig, name: &str, iters: usize) {
             let t1 = cfg.seq_len + 1;
             let tok: Vec<i32> =
                 (0..cfg.batch_size * t1).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+            let batch = TokenBatch::new(tok.clone(), cfg.batch_size, t1).unwrap();
             let r = time(&format!("{name}/native score"), 1, iters, || {
-                let _ = engine.score(&tok, &[cfg.batch_size, t1]).unwrap();
+                let _ = engine.score(&batch).unwrap();
             });
             println!("{}", r.row());
             let tok2: Vec<i32> = tok[..cfg.batch_size * cfg.seq_len].to_vec();
+            let batch2 = TokenBatch::new(tok2, cfg.batch_size, cfg.seq_len).unwrap();
             let r = time(&format!("{name}/native next_logits"), 1, iters, || {
-                let _ = engine.next_logits(&tok2, &[cfg.batch_size, cfg.seq_len]).unwrap();
+                let _ = engine.next_logits(&batch2).unwrap();
             });
             println!("{}", r.row());
         }
         Task::ListOps => {
             let (tok, _lab) =
                 switchhead::data::listops::gen_batch(&mut rng, cfg.batch_size, cfg.seq_len);
+            let batch = TokenBatch::new(tok, cfg.batch_size, cfg.seq_len).unwrap();
             let r = time(&format!("{name}/native class_logits"), 1, iters, || {
-                let _ = engine.class_logits(&tok, &[cfg.batch_size, cfg.seq_len]).unwrap();
+                let _ = engine.class_logits(&batch).unwrap();
             });
             println!("{}", r.row());
         }
@@ -110,6 +116,92 @@ fn bench_config(name: &str, iters: usize) {
     }
 }
 
+/// Decode-throughput table: per config, wall-clock and MAC cost of the
+/// Session prefill/decode path vs. the legacy full-window recompute —
+/// the measurable form of the paper's per-token inference claim.
+fn bench_decode(names: &[&str], iters: usize) {
+    let mut table = Table::new(
+        "Session decode throughput (native backend, tokens/sec per batch row)",
+        &[
+            "config",
+            "prefill ms",
+            "decode ms/tok",
+            "recompute ms/tok",
+            "speedup",
+            "decode tok/s",
+            "MACs/tok decode",
+            "MACs/tok recompute",
+        ],
+    );
+    for name in names {
+        let cfg = match ModelConfig::load(&format!("configs/{name}.json")) {
+            Ok(c) => c,
+            Err(e) => {
+                println!("SKIP {name}: {e:#}");
+                continue;
+            }
+        };
+        if cfg.task != Task::Lm {
+            continue;
+        }
+        let engine = NativeEngine::new(&cfg, 42).unwrap();
+        let mut rng = Pcg::new(2, 2);
+        let b = cfg.batch_size;
+        let t = cfg.seq_len;
+        let prompt: Vec<i32> = (0..b * (t / 2)).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+        let prompt = TokenBatch::new(prompt, b, t / 2).unwrap();
+
+        // Prefill latency (fresh session each iteration).
+        let r_prefill = time(&format!("{name}/prefill"), 1, iters.min(10), || {
+            let mut s = engine.open_session(b).unwrap();
+            let _ = s.prefill(&prompt).unwrap();
+        });
+
+        // Steady-state decode: one long-lived session, time per token,
+        // and capture the per-token MAC delta from the session counter.
+        let mut session = engine.open_session(b).unwrap();
+        let mut logits = session.prefill(&prompt).unwrap();
+        let macs_before = session.macs().unwrap().total();
+        let mut steps = 0u64;
+        let r_decode = time(&format!("{name}/decode"), 2, iters, || {
+            let next: Vec<i32> = (0..b)
+                .map(|row| {
+                    let l = logits.row(row);
+                    l.iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.total_cmp(b.1))
+                        .map(|(i, _)| i as i32)
+                        .unwrap()
+                })
+                .collect();
+            logits = session.decode(&next).unwrap();
+            steps += 1;
+        });
+        let decode_macs_tok =
+            (session.macs().unwrap().total() - macs_before) / steps as f64 / b as f64;
+
+        // Legacy full-window recompute per token.
+        let window: Vec<i32> = (0..b * t).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+        let window = TokenBatch::new(window, b, t).unwrap();
+        let r_full = time(&format!("{name}/recompute"), 1, iters.min(10), || {
+            let _ = engine.next_logits(&window).unwrap();
+        });
+        let full_macs_tok = engine.count_macs().unwrap().total();
+
+        table.push(vec![
+            (*name).into(),
+            format!("{:.3}", r_prefill.mean_ms),
+            format!("{:.3}", r_decode.mean_ms),
+            format!("{:.3}", r_full.mean_ms),
+            format!("{:.1}x", r_full.mean_ms / r_decode.mean_ms.max(1e-9)),
+            format!("{:.0}", 1000.0 / r_decode.mean_ms.max(1e-9)),
+            fmt_si(decode_macs_tok),
+            fmt_si(full_macs_tok),
+        ]);
+    }
+    table.print();
+}
+
 fn main() {
     let iters: usize = std::env::var("SWITCHHEAD_BENCH_ITERS")
         .ok()
@@ -118,4 +210,5 @@ fn main() {
     for name in ["tiny-dense", "tiny-sh", "tiny-moa", "tiny-switchall"] {
         bench_config(name, iters);
     }
+    bench_decode(&["tiny-dense", "tiny-sh", "tiny-rope-sh", "tiny-switchall"], iters);
 }

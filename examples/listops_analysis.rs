@@ -14,7 +14,7 @@ use switchhead::config::ModelConfig;
 use switchhead::coordinator::analysis;
 use switchhead::coordinator::trainer::{train, TrainOpts};
 use switchhead::data::listops;
-use switchhead::runtime::{checkpoint, Engine};
+use switchhead::runtime::{checkpoint, Engine, TokenBatch};
 use switchhead::util::rng::Pcg;
 
 fn run_one(name: &str, steps: usize) -> Result<(f64, PathBuf)> {
@@ -41,8 +41,8 @@ fn run_one(name: &str, steps: usize) -> Result<(f64, PathBuf)> {
     let flat = engine.upload_flat(&ck.flat)?;
     let mut rng = Pcg::new(123, 9);
     let (tok, _) = listops::gen_batch(&mut rng, cfg.batch_size, cfg.seq_len);
-    let arrays =
-        analysis::fetch_attention(&engine, &flat, &tok, &[cfg.batch_size, cfg.seq_len])?;
+    let batch = TokenBatch::new(tok, cfg.batch_size, cfg.seq_len)?;
+    let arrays = analysis::fetch_attention(&engine, &flat, &batch)?;
     let maps = arrays
         .iter()
         .find(|a| a.name.contains("attn"))
@@ -72,6 +72,6 @@ fn main() -> Result<()> {
     println!("\nIID accuracy after {steps} steps:");
     println!("  SwitchHead (2 heads, 4 experts): {:.1}%", sh_acc * 100.0);
     println!("  dense Transformer (8 heads):     {:.1}%", dense_acc * 100.0);
-    println!("\nattention maps + expert selections: runs/listops/*/maps/*.pgm (open with any viewer)");
+    println!("\nattention maps + expert selections: runs/listops/*/maps/*.pgm");
     Ok(())
 }

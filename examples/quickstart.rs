@@ -52,6 +52,9 @@ fn main() -> Result<()> {
         println!("  step {:>4}: {:6.3} {bar}", (i + 1) * 25, avg);
     }
     println!("\nfinal validation perplexity: {:.2}", report.final_metric);
-    println!("throughput: {:.0} tokens/s, {:.1} ms/iter", report.tokens_per_sec, report.ms_per_iter);
+    println!(
+        "throughput: {:.0} tokens/s, {:.1} ms/iter",
+        report.tokens_per_sec, report.ms_per_iter
+    );
     Ok(())
 }

@@ -1,0 +1,73 @@
+"""Validate the incremental-decode Session twin against the full forward.
+
+For every config family x positional scheme the Rust test tier covers,
+assert that ``Session.prefill(w[:, :n]) + decode(w[:, n]) ...`` ends on
+the same next-token logits as ``next_logits(w)`` over the full window —
+the equivalence contract `rust/tests/decode.rs` pins on the Rust side
+(this script is the float64 ground truth for the algorithm itself).
+
+Run: python3 -m python.tools.check_decode_ref
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .native_ref import Cfg, Pcg, Session, init_model, next_logits
+
+CASES = {
+    "sh-xl": dict(family="switchhead", pos="xl"),
+    "sh-xl-full-moe": dict(
+        family="switchhead", pos="xl", moe_k=True, moe_q=True,
+        shared_selection=True, att_router="softmax",
+    ),
+    "sh-rope": dict(family="switchhead", pos="rope"),
+    "switchall-xl": dict(family="switchhead", pos="xl", mlp_type="sigma_moe"),
+    "dense-xl": dict(family="dense", pos="xl"),
+    "dense-rope": dict(family="dense", pos="rope"),
+    "moa-xl": dict(family="moa", pos="xl"),
+    "moa-rope": dict(family="moa", pos="rope"),
+}
+
+
+def window(cfg: Cfg, seed: int) -> np.ndarray:
+    rng = Pcg(seed, 7)
+    return np.array(
+        [[rng.below(cfg.vocab_size) for _ in range(cfg.seq_len)]
+         for _ in range(cfg.batch_size)],
+        dtype=np.int64,
+    )
+
+
+def main() -> None:
+    failures = 0
+    for name, kw in CASES.items():
+        cfg = Cfg(**kw)
+        p = init_model(cfg, seed=11)
+        tok = window(cfg, seed=3)
+        want = next_logits(cfg, p, tok)
+        for split in (1, cfg.seq_len // 2, cfg.seq_len - 1):
+            sess = Session(cfg, p, cfg.batch_size)
+            got = sess.prefill(tok[:, :split])
+            for i in range(split, cfg.seq_len):
+                got = sess.decode(tok[:, i])
+            diff = float(np.abs(got - want).max())
+            status = "ok" if diff < 1e-9 else "FAIL"
+            if status == "FAIL":
+                failures += 1
+            print(f"{name:16s} split={split:2d}  max|diff|={diff:.3e}  {status}")
+        # Long-generation sanity: decode far past the ring capacity.
+        sess = Session(cfg, p, cfg.batch_size)
+        out = sess.prefill(tok)
+        for _ in range(3 * cfg.ctx_len):
+            nxt = out.argmax(axis=-1)
+            out = sess.decode(nxt)
+        assert np.isfinite(out).all(), f"{name}: non-finite logits past capacity"
+        print(f"{name:16s} long-gen ({3 * cfg.ctx_len} steps past prefill)  ok")
+    if failures:
+        raise SystemExit(f"{failures} case(s) FAILED")
+    print("all decode-equivalence cases passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -515,3 +515,164 @@ def class_logits(cfg, p, tokens):
     pad_mask = tokens != 0
     h, _ = encode(cfg, p, tokens, pad_mask=pad_mask)
     return h[:, 0] @ p["head"]
+
+
+# ---------------------------------------------------------------------------
+# Incremental decoding — twin of rust/src/model/decode.rs
+# ---------------------------------------------------------------------------
+#
+# A Session holds, per layer and per head, a ring buffer of the K/V
+# vectors of every context token (for SwitchHead these are the
+# gate-combined projections of ONLY the experts the sigmoid router
+# selected — the expert-sparse cache of paper Sec. 3; the unselected
+# experts are never computed or stored). `prefill` consumes the prompt
+# chunk; `decode` advances one token, attending over the cached K/V
+# instead of recomputing the whole window.
+#
+# Equivalence contract (mirrored by rust/tests/decode.rs): because the
+# model is causal and every non-attention op is per-token, prefill(w[:n])
+# followed by decode of w[n:] token-by-token produces the same final
+# logits as next_logits(w) over the full window, up to f.p. noise. For
+# pos="xl" the fixed zero-cache prefix (seq_len pseudo-columns with k=v=0
+# but nonzero relative-position logits) is replayed analytically per
+# query, so the equality is exact there too.
+
+
+class Session:
+    """Stateful incremental decoder over an ``init_model`` parameter set."""
+
+    def __init__(self, cfg: Cfg, p: dict, rows: int):
+        assert cfg.task == "lm" and cfg.pos != "none"
+        self.cfg, self.p, self.rows = cfg, p, rows
+        self.pos = 0  # tokens consumed per row so far
+        self.cap = cfg.ctx_len  # ring capacity: K/V memory is O(cap)
+        self.tc = cfg.seq_len if cfg.pos == "xl" else 0  # zero-cache cols
+        n_kv = 1 if cfg.family == "moa" else cfg.n_heads
+        dh = cfg.d_head
+        self.layers = [
+            {
+                "k": np.zeros((n_kv, rows, self.cap, dh)),
+                "v": np.zeros((n_kv, rows, self.cap, dh)),
+            }
+            for _ in range(cfg.n_layers)
+        ]
+
+    # -- attention core over the ring + the XL zero-cache pseudo-columns --
+
+    def _core(self, kbuf, vbuf, qh, q_pre, u, v, w_kr, tn):
+        cfg = self.cfg
+        rows, dh, d = self.rows, cfg.d_head, cfg.d_model
+        scale = 1.0 / math.sqrt(float(dh))
+        out = np.zeros((rows, tn, dh))
+        for ci in range(tn):
+            p_abs = self.pos + ci
+            lo = max(0, p_abs + 1 - self.cap)
+            key_pos = np.arange(lo, p_abs + 1)
+            kk = kbuf[:, key_pos % self.cap]  # [rows, L, dh]
+            vv = vbuf[:, key_pos % self.cap]
+            qc = qh[:, ci] if u is None else qh[:, ci] + u
+            logits = np.einsum("rd,rld->rl", qc, kk) * scale
+            if cfg.pos == "xl":
+                # Distances clamp at cap + tc - 1 (the table bound), like
+                # the full forward's clip; engages only past ring eviction.
+                max_dist = self.cap + self.tc - 1
+                r = sinusoidal(min(p_abs + self.tc, max_dist) + 1, d) @ w_kr
+                qpv = q_pre[:, ci] + v
+                dz = np.minimum(p_abs + self.tc - np.arange(self.tc), max_dist)
+                zl = qpv @ r[dz].T
+                logits = logits + qpv @ r[p_abs - key_pos].T
+                full = np.concatenate([zl, logits], axis=1)
+            else:
+                full = logits
+            w = softmax_rows(full)
+            out[:, ci] = np.einsum("rl,rld->rd", w[:, self.tc :], vv)
+        return out
+
+    def _push(self, st, hi, kh, vh, tn):
+        for ci in range(tn):
+            slot = (self.pos + ci) % self.cap
+            st["k"][hi][:, slot] = kh[:, ci]
+            st["v"][hi][:, slot] = vh[:, ci]
+
+    def _attn(self, li, x_ln):
+        cfg, a = self.cfg, self.p["layers"][li]["attn"]
+        rows, tn, d = x_ln.shape
+        dh, st = cfg.d_head, self.layers[li]
+        xf = x_ln.reshape(rows * tn, d)
+        rope_pos = np.arange(self.pos, self.pos + tn, dtype=np.float64)
+        y = np.zeros((rows, tn, d))
+        if cfg.family == "moa":
+            k = cfg.moa_k
+            idx, gate, _ = route(xf, a["w_sel"], k, "softmax")
+            kh = (xf @ a["w_k"]).reshape(rows, tn, dh)
+            vh = (xf @ a["w_v"]).reshape(rows, tn, dh)
+            if cfg.pos == "rope":
+                kh = rope_rotate(kh, rope_pos)
+            self._push(st, 0, kh, vh, tn)
+            ones = np.ones((xf.shape[0], 1))
+            for j in range(k):
+                qj = moe_mm(xf, a["w_q"], idx[:, j : j + 1], ones).reshape(rows, tn, dh)
+                if cfg.pos == "rope":
+                    qj = rope_rotate(qj, rope_pos)
+                u = a.get("u_bias") if cfg.pos == "xl" else None
+                att = self._core(
+                    st["k"][0], st["v"][0], qj, qj, u,
+                    a.get("v_bias"), a.get("w_kr"), tn,
+                )
+                y += moe_mm(
+                    att.reshape(rows * tn, dh), a["w_o"],
+                    idx[:, j : j + 1], gate[:, j : j + 1],
+                ).reshape(rows, tn, d)
+            return y
+        for hi in range(cfg.n_heads):
+            if cfg.family == "switchhead":
+                kk = cfg.att_k
+                idx_s, gate_s, _ = route(xf, a["w_sel_s"][hi], kk, cfg.att_router)
+                w_d = a["w_sel_s"][hi] if cfg.shared_selection else a["w_sel_d"][hi]
+                idx_d, gate_d, _ = route(xf, w_d, kk, cfg.att_router)
+                kh = moe_mm(xf, a["w_k"][hi], idx_s, gate_s) if cfg.moe_k else xf @ a["w_k"][hi, 0]
+                qh = moe_mm(xf, a["w_q"][hi], idx_d, gate_d) if cfg.moe_q else xf @ a["w_q"][hi, 0]
+                vh = moe_mm(xf, a["w_v"][hi], idx_s, gate_s) if cfg.moe_v else xf @ a["w_v"][hi, 0]
+            else:
+                kh, qh, vh = xf @ a["w_k"][hi], xf @ a["w_q"][hi], xf @ a["w_v"][hi]
+            kh = kh.reshape(rows, tn, dh)
+            qh = qh.reshape(rows, tn, dh)
+            vh = vh.reshape(rows, tn, dh)
+            if cfg.pos == "rope":
+                qh = rope_rotate(qh, rope_pos)
+                kh = rope_rotate(kh, rope_pos)
+            self._push(st, hi, kh, vh, tn)
+            u = a["u_bias"][hi] if cfg.pos == "xl" else None
+            v = a["v_bias"][hi] if cfg.pos == "xl" else None
+            w_kr = a["w_kr"][hi] if cfg.pos == "xl" else None
+            att = self._core(st["k"][hi], st["v"][hi], qh, qh, u, v, w_kr, tn)
+            att_f = att.reshape(rows * tn, dh)
+            if cfg.family == "switchhead":
+                if cfg.moe_o:
+                    y += moe_mm(att_f, a["w_o"][hi], idx_d, gate_d).reshape(rows, tn, d)
+                else:
+                    y += (att_f @ a["w_o"][hi, 0]).reshape(rows, tn, d)
+            else:
+                y += (att_f @ a["w_o"][hi]).reshape(rows, tn, d)
+        return y
+
+    def _advance(self, tokens):
+        """tokens [rows, tn] -> logits [rows, V] for the next token."""
+        cfg, p = self.cfg, self.p
+        x = p["embed"][tokens] * math.sqrt(float(cfg.d_model))
+        for li in range(cfg.n_layers):
+            lp = p["layers"][li]
+            x = x + self._attn(li, layer_norm(x, lp["ln1"]))
+            x = x + mlp_apply(cfg, lp["mlp"], layer_norm(x, lp["ln2"]))
+        h = layer_norm(x, p["ln_f"])
+        self.pos += tokens.shape[1]
+        return h[:, -1] @ p["head"]
+
+    def prefill(self, tokens):
+        assert self.pos == 0, "prefill on a non-fresh session"
+        assert 1 <= tokens.shape[1] <= self.cap
+        return self._advance(tokens)
+
+    def decode(self, next_ids):
+        assert self.pos > 0, "decode before prefill"
+        return self._advance(np.asarray(next_ids).reshape(self.rows, 1))

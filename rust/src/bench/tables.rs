@@ -79,15 +79,33 @@ pub fn wt103_paper_rows() -> Vec<PaperRow> {
     let mut rows = Vec::new();
     // ---- 47M scale (d_model 410, L16, T256) ----
     let sh = base("sh-47m-wt103", Family::SwitchHead, Positional::Xl);
-    rows.push(PaperRow { label: "47M SwitchHead h=2", cfg: sh, paper_ppl: 12.27, paper_macs: "170.4M", paper_mem: "0.8M" });
+    rows.push(PaperRow {
+        label: "47M SwitchHead h=2",
+        cfg: sh,
+        paper_ppl: 12.27,
+        paper_macs: "170.4M",
+        paper_mem: "0.8M",
+    });
     let mut d10 = base("dense10-47m-wt103", Family::Dense, Positional::Xl);
     d10.n_heads = 10;
     d10.d_head = 41;
-    rows.push(PaperRow { label: "47M Transformer h=10", cfg: d10, paper_ppl: 12.31, paper_macs: "453.4M", paper_mem: "3.5M" });
+    rows.push(PaperRow {
+        label: "47M Transformer h=10",
+        cfg: d10,
+        paper_ppl: 12.31,
+        paper_macs: "453.4M",
+        paper_mem: "3.5M",
+    });
     let mut d2 = base("dense2-47m-wt103", Family::Dense, Positional::Xl);
     d2.n_heads = 2;
     d2.d_head = 205;
-    rows.push(PaperRow { label: "47M Transformer h=2", cfg: d2, paper_ppl: 12.73, paper_macs: "453.4M", paper_mem: "3.5M" });
+    rows.push(PaperRow {
+        label: "47M Transformer h=2",
+        cfg: d2,
+        paper_ppl: 12.73,
+        paper_macs: "453.4M",
+        paper_mem: "3.5M",
+    });
     let target_47m = param_count(&rows[1].cfg); // dense-10 baseline budget
     for (k, ppl, macs, mem) in [
         (2usize, 12.84, "140.1M", "0.7M"),
@@ -126,15 +144,33 @@ pub fn wt103_paper_rows() -> Vec<PaperRow> {
     sh_big.att_n_experts = 8;
     sh_big.att_k = 4;
     sh_big.d_ff = 4147;
-    rows.push(PaperRow { label: "262M SwitchHead h=2", cfg: sh_big, paper_ppl: 9.77, paper_macs: "2.0G", paper_mem: "2.9M" });
+    rows.push(PaperRow {
+        label: "262M SwitchHead h=2",
+        cfg: sh_big,
+        paper_ppl: 9.77,
+        paper_macs: "2.0G",
+        paper_mem: "2.9M",
+    });
     let mut d16 = big("dense16-262m-wt103", Family::Dense);
     d16.n_heads = 16;
     d16.d_head = 64;
-    rows.push(PaperRow { label: "262M Transformer h=16", cfg: d16, paper_ppl: 9.80, paper_macs: "5.4G", paper_mem: "21.0M" });
+    rows.push(PaperRow {
+        label: "262M Transformer h=16",
+        cfg: d16,
+        paper_ppl: 9.80,
+        paper_macs: "5.4G",
+        paper_mem: "21.0M",
+    });
     let mut d2b = big("dense2-262m-wt103", Family::Dense);
     d2b.n_heads = 2;
     d2b.d_head = 512;
-    rows.push(PaperRow { label: "262M Transformer h=2", cfg: d2b, paper_ppl: 10.09, paper_macs: "5.4G", paper_mem: "6.3M" });
+    rows.push(PaperRow {
+        label: "262M Transformer h=2",
+        cfg: d2b,
+        paper_ppl: 10.09,
+        paper_macs: "5.4G",
+        paper_mem: "6.3M",
+    });
     let target_262m =
         param_count(&rows.iter().find(|r| r.label == "262M Transformer h=16").unwrap().cfg);
     for (k, ppl, macs, mem) in [
@@ -166,11 +202,29 @@ pub fn table2_paper_rows() -> Vec<(&'static str, PaperRow)> {
     let mut sh = base("sh-47m-c4", Family::SwitchHead, Positional::Xl);
     sh.att_k = 3;
     sh.d_ff = 2080;
-    rows.push(("C4", PaperRow { label: "47M SwitchHead h=2", cfg: sh, paper_ppl: 22.53, paper_macs: "203M", paper_mem: "0.8M" }));
+    rows.push((
+        "C4",
+        PaperRow {
+            label: "47M SwitchHead h=2",
+            cfg: sh,
+            paper_ppl: 22.53,
+            paper_macs: "203M",
+            paper_mem: "0.8M",
+        },
+    ));
     let mut d10 = base("dense10-47m-c4", Family::Dense, Positional::Xl);
     d10.n_heads = 10;
     d10.d_head = 41;
-    rows.push(("C4", PaperRow { label: "47M Transformer h=10", cfg: d10, paper_ppl: 22.71, paper_macs: "453M", paper_mem: "3.5M" }));
+    rows.push((
+        "C4",
+        PaperRow {
+            label: "47M Transformer h=10",
+            cfg: d10,
+            paper_ppl: 22.71,
+            paper_macs: "453M",
+            paper_mem: "3.5M",
+        },
+    ));
     // C4 262M: SwitchHead h=4 (E=4, k=2).
     let mut shb = base("sh-262m-c4", Family::SwitchHead, Positional::Xl);
     shb.d_model = 1024;
@@ -181,7 +235,16 @@ pub fn table2_paper_rows() -> Vec<(&'static str, PaperRow)> {
     shb.att_n_experts = 4;
     shb.att_k = 2;
     shb.d_ff = 4188;
-    rows.push(("C4", PaperRow { label: "262M SwitchHead h=4", cfg: shb, paper_ppl: 16.23, paper_macs: "2.4G", paper_mem: "5.6M" }));
+    rows.push((
+        "C4",
+        PaperRow {
+            label: "262M SwitchHead h=4",
+            cfg: shb,
+            paper_ppl: 16.23,
+            paper_macs: "2.4G",
+            paper_mem: "5.6M",
+        },
+    ));
     let mut d16 = base("dense16-262m-c4", Family::Dense, Positional::Xl);
     d16.d_model = 1024;
     d16.n_layers = 18;
@@ -189,7 +252,16 @@ pub fn table2_paper_rows() -> Vec<(&'static str, PaperRow)> {
     d16.n_heads = 16;
     d16.d_head = 64;
     d16.d_ff = 4110;
-    rows.push(("C4", PaperRow { label: "262M Transformer h=16", cfg: d16, paper_ppl: 16.28, paper_macs: "5.4G", paper_mem: "21M" }));
+    rows.push((
+        "C4",
+        PaperRow {
+            label: "262M Transformer h=16",
+            cfg: d16,
+            paper_ppl: 16.28,
+            paper_macs: "5.4G",
+            paper_mem: "21M",
+        },
+    ));
     // Enwik8 41M: SwitchHead h=2 (E=4, k=2, dh=112), dense h=8.
     let mut ew_sh = base("sh-41m-enwik8", Family::SwitchHead, Positional::Xl);
     ew_sh.d_model = 512;
@@ -202,7 +274,16 @@ pub fn table2_paper_rows() -> Vec<(&'static str, PaperRow)> {
     ew_sh.d_ff = 2088;
     ew_sh.vocab_size = 259;
     ew_sh.dataset = "enwik8".into();
-    rows.push(("Enwik8", PaperRow { label: "41M SwitchHead h=2", cfg: ew_sh, paper_ppl: 1.10, paper_macs: "709M", paper_mem: "2.8M" }));
+    rows.push((
+        "Enwik8",
+        PaperRow {
+            label: "41M SwitchHead h=2",
+            cfg: ew_sh,
+            paper_ppl: 1.10,
+            paper_macs: "709M",
+            paper_mem: "2.8M",
+        },
+    ));
     let mut ew_d = base("dense8-41m-enwik8", Family::Dense, Positional::Xl);
     ew_d.d_model = 512;
     ew_d.n_layers = 12;
@@ -212,18 +293,45 @@ pub fn table2_paper_rows() -> Vec<(&'static str, PaperRow)> {
     ew_d.d_ff = 2053;
     ew_d.vocab_size = 259;
     ew_d.dataset = "enwik8".into();
-    rows.push(("Enwik8", PaperRow { label: "41M Transformer h=8", cfg: ew_d, paper_ppl: 1.10, paper_macs: "1.6G", paper_mem: "10M" }));
+    rows.push((
+        "Enwik8",
+        PaperRow {
+            label: "41M Transformer h=8",
+            cfg: ew_d,
+            paper_ppl: 1.10,
+            paper_macs: "1.6G",
+            paper_mem: "10M",
+        },
+    ));
     // peS2o mirrors the C4 configs (same Table 9 rows).
     let mut p_sh = base("sh-47m-pes2o", Family::SwitchHead, Positional::Xl);
     p_sh.att_k = 3;
     p_sh.d_ff = 2080;
     p_sh.dataset = "pes2o".into();
-    rows.push(("peS2o", PaperRow { label: "47M SwitchHead h=2", cfg: p_sh, paper_ppl: 12.84, paper_macs: "203M", paper_mem: "0.8M" }));
+    rows.push((
+        "peS2o",
+        PaperRow {
+            label: "47M SwitchHead h=2",
+            cfg: p_sh,
+            paper_ppl: 12.84,
+            paper_macs: "203M",
+            paper_mem: "0.8M",
+        },
+    ));
     let mut p_d = base("dense10-47m-pes2o", Family::Dense, Positional::Xl);
     p_d.n_heads = 10;
     p_d.d_head = 41;
     p_d.dataset = "pes2o".into();
-    rows.push(("peS2o", PaperRow { label: "47M Transformer h=10", cfg: p_d, paper_ppl: 12.83, paper_macs: "453M", paper_mem: "3.5M" }));
+    rows.push((
+        "peS2o",
+        PaperRow {
+            label: "47M Transformer h=10",
+            cfg: p_d,
+            paper_ppl: 12.83,
+            paper_macs: "453M",
+            paper_mem: "3.5M",
+        },
+    ));
     rows
 }
 
@@ -236,12 +344,24 @@ pub fn table7_paper_rows() -> Vec<PaperRow> {
     sh.att_n_experts = 5;
     sh.att_k = 3;
     sh.d_ff = 2092;
-    rows.push(PaperRow { label: "45M SwitchHead h=2 (RoPE)", cfg: sh, paper_ppl: 12.75, paper_macs: "285.6M", paper_mem: "1.3M" });
+    rows.push(PaperRow {
+        label: "45M SwitchHead h=2 (RoPE)",
+        cfg: sh,
+        paper_ppl: 12.75,
+        paper_macs: "285.6M",
+        paper_mem: "1.3M",
+    });
     let mut d10 = base("dense10-45m-rope", Family::Dense, Positional::Rope);
     d10.seq_len = 512;
     d10.n_heads = 10;
     d10.d_head = 41;
-    rows.push(PaperRow { label: "45M Transformer h=10 (RoPE)", cfg: d10, paper_ppl: 12.78, paper_macs: "560.9M", paper_mem: "6.1M" });
+    rows.push(PaperRow {
+        label: "45M Transformer h=10 (RoPE)",
+        cfg: d10,
+        paper_ppl: 12.78,
+        paper_macs: "560.9M",
+        paper_mem: "6.1M",
+    });
     let mut shb = base("sh-244m-rope", Family::SwitchHead, Positional::Rope);
     shb.d_model = 1024;
     shb.n_layers = 18;
@@ -251,7 +371,13 @@ pub fn table7_paper_rows() -> Vec<PaperRow> {
     shb.att_n_experts = 4;
     shb.att_k = 2;
     shb.d_ff = 4136;
-    rows.push(PaperRow { label: "244M SwitchHead h=4 (RoPE)", cfg: shb, paper_ppl: 10.00, paper_macs: "4.2G", paper_mem: "18.4M" });
+    rows.push(PaperRow {
+        label: "244M SwitchHead h=4 (RoPE)",
+        cfg: shb,
+        paper_ppl: 10.00,
+        paper_macs: "4.2G",
+        paper_mem: "18.4M",
+    });
     let mut d16 = base("dense16-244m-rope", Family::Dense, Positional::Rope);
     d16.d_model = 1024;
     d16.n_layers = 18;
@@ -259,14 +385,29 @@ pub fn table7_paper_rows() -> Vec<PaperRow> {
     d16.n_heads = 16;
     d16.d_head = 64;
     d16.d_ff = 4110;
-    rows.push(PaperRow { label: "244M Transformer h=16 (RoPE)", cfg: d16, paper_ppl: 10.17, paper_macs: "6.4G", paper_mem: "37.7M" });
+    rows.push(PaperRow {
+        label: "244M Transformer h=16 (RoPE)",
+        cfg: d16,
+        paper_ppl: 10.17,
+        paper_macs: "6.4G",
+        paper_mem: "37.7M",
+    });
     rows
 }
 
 fn analytic_table(title: &str, rows: &[PaperRow]) -> Table {
     let mut t = Table::new(
         title,
-        &["model", "n_mat", "params", "MACs (ours)", "MACs (paper)", "Mem (ours)", "Mem (paper)", "ppl (paper)"],
+        &[
+            "model",
+            "n_mat",
+            "params",
+            "MACs (ours)",
+            "MACs (paper)",
+            "Mem (ours)",
+            "Mem (paper)",
+            "ppl (paper)",
+        ],
     );
     for r in rows {
         let cost = attention_cost(&r.cfg);
@@ -370,7 +511,10 @@ fn measured_table(
     steps: usize,
 ) -> Result<Table> {
     let out_root = PathBuf::from("runs/bench");
-    let mut t = Table::new(title, &["config", "params", "valid ppl", "ms/iter", "rel. iter", "peak RSS MiB"]);
+    let mut t = Table::new(
+        title,
+        &["config", "params", "valid ppl", "ms/iter", "rel. iter", "peak RSS MiB"],
+    );
     let mut runs = Vec::new();
     for (name, ds) in rows {
         info(&format!("bench: training {name} (dataset {:?}, {steps} steps)...", ds));
@@ -405,7 +549,12 @@ pub fn table1(artifacts: &Path, quick: bool, steps: usize) -> Result<String> {
             &measured_table(
                 "Table 1 (measured) — tiny-scale ppl ordering on synthetic WT103",
                 artifacts,
-                &[("tiny-dense", None), ("tiny-sh", None), ("tiny-moa", None), ("tiny-dense-2h", None)],
+                &[
+                    ("tiny-dense", None),
+                    ("tiny-sh", None),
+                    ("tiny-moa", None),
+                    ("tiny-dense-2h", None),
+                ],
                 steps,
             )?
             .render(),
@@ -418,7 +567,16 @@ pub fn table2(artifacts: &Path, quick: bool, steps: usize) -> Result<String> {
     let rows = table2_paper_rows();
     let mut t = Table::new(
         "Table 2 — datasets x scales (paper-scale analytic)",
-        &["dataset", "model", "params", "MACs (ours)", "MACs (paper)", "Mem (ours)", "Mem (paper)", "ppl/bpc (paper)"],
+        &[
+            "dataset",
+            "model",
+            "params",
+            "MACs (ours)",
+            "MACs (paper)",
+            "Mem (ours)",
+            "Mem (paper)",
+            "ppl/bpc (paper)",
+        ],
     );
     for (ds, r) in &rows {
         let cost = attention_cost(&r.cfg);
@@ -474,8 +632,20 @@ pub fn table3(artifacts: &Path, quick: bool, steps: usize) -> Result<String> {
     sa262.mlp_k = 2;
     sa262.mlp_d_expert = 1024;
     let rows = vec![
-        PaperRow { label: "47M SwitchAll h=2", cfg: sa47, paper_ppl: 12.17, paper_macs: "170M", paper_mem: "0.8M" },
-        PaperRow { label: "262M SwitchAll h=4", cfg: sa262, paper_ppl: 9.81, paper_macs: "2.4G", paper_mem: "5.6M" },
+        PaperRow {
+            label: "47M SwitchAll h=2",
+            cfg: sa47,
+            paper_ppl: 12.17,
+            paper_macs: "170M",
+            paper_mem: "0.8M",
+        },
+        PaperRow {
+            label: "262M SwitchAll h=4",
+            cfg: sa262,
+            paper_ppl: 9.81,
+            paper_macs: "2.4G",
+            paper_mem: "5.6M",
+        },
     ];
     let mut out = analytic_table("Table 3 — SwitchAll (paper-scale analytic)", &rows).render();
     if !quick {
@@ -562,7 +732,7 @@ pub fn run_from_args(args: &Args) -> Result<()> {
         })
         .unwrap_or(false);
     if !have_artifacts {
-        info("no built artifact bundles — emitting analytic tables only (run `make artifacts` for measured rows)");
+        info("no built artifact bundles — emitting analytic tables only (`make artifacts`)");
     }
     let quick = args.flag("quick") || !have_artifacts;
     let steps = args.usize_or("steps", 200)?;

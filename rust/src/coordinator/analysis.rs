@@ -8,7 +8,7 @@ use std::path::Path;
 use crate::util::error::{anyhow, Result};
 
 use crate::config::ModelConfig;
-use crate::runtime::{Engine, FlatBuf};
+use crate::runtime::{Engine, FlatBuf, TokenBatch};
 use crate::util::pgm::{write_csv, write_pgm_scaled};
 
 /// A dense multi-dim array pulled back from the device.
@@ -29,10 +29,9 @@ impl HostArray {
 pub fn fetch_attention(
     engine: &Engine,
     flat: &FlatBuf,
-    tokens: &[i32],
-    dims: &[usize],
+    batch: &TokenBatch,
 ) -> Result<Vec<HostArray>> {
-    let tok_buf = engine.upload_i32(tokens, dims)?;
+    let tok_buf = engine.upload_i32(batch.tokens(), &batch.dims())?;
     let lits = engine.attn(flat, &tok_buf)?;
     let sigs = &engine.manifest.entry("attn")?.outputs;
     if lits.len() != sigs.len() {
@@ -121,7 +120,8 @@ pub fn induction_scores(maps: &HostArray, period: usize) -> Result<Vec<Vec<f32>>
             for bi in 0..b {
                 let base = ((li * b + bi) * h + hi) * t * tk;
                 for i in period..t {
-                    let target = off + i - period + 1; // key column of "token after previous occurrence"
+                    // Key column of "token after previous occurrence".
+                    let target = off + i - period + 1;
                     acc += maps.data[base + i * tk + target];
                     cnt += 1.0;
                 }

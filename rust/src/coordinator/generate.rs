@@ -1,19 +1,23 @@
-//! Autoregressive text generation over the `next_logits` entry of
-//! either backend (PJRT artifact or native reference) — the inference
-//! path the paper's resource argument targets (SwitchHead computes
-//! fewer attention matrices per generated token).
+//! Autoregressive text generation over the stateful [`Session`] API of
+//! either backend — the inference path the paper's resource argument
+//! targets (SwitchHead computes fewer attention matrices per generated
+//! token and caches K/V only for the router-selected experts).
 //!
-//! The sampler keeps a sliding `[B=batch, T]` token window (prompts are
-//! left-padded / left-truncated so the newest tokens are always
-//! in-context), uploads it, reads the `[B, V]` logits of the final
-//! position, and samples with temperature + top-k. Batched: `B`
-//! continuations are generated per executable call.
+//! The generator opens one session over `batch_size` rows, prefills the
+//! prompts once, and then advances one token per row per step. On the
+//! native backend each step is an O(context) incremental decode against
+//! the expert-sparse KV cache; on PJRT the session transparently falls
+//! back to windowed full-window recompute (the legacy strategy), so the
+//! code path here is backend-agnostic.
+//!
+//! Row/prompt mapping is explicit: pass exactly one prompt (broadcast
+//! to every row) or one prompt per row; anything else is an error.
 
-use crate::util::error::Result;
+use crate::util::error::{bail, Result};
 
 use crate::config::ModelConfig;
 use crate::data::tokenizer::{Bpe, DOC, PAD};
-use crate::runtime::Backend;
+use crate::runtime::{Backend, Session, TokenBatch};
 use crate::util::rng::Pcg;
 
 #[derive(Debug, Clone)]
@@ -31,32 +35,50 @@ impl Default for SampleOpts {
 }
 
 /// Sample one id from logits with temperature + top-k truncation.
+/// NaN logits are treated as -inf (never sampled, never a panic).
 pub fn sample_logits(logits: &[f32], temperature: f64, top_k: usize, rng: &mut Pcg) -> usize {
     debug_assert!(!logits.is_empty());
+    let val = |v: f32| if v.is_nan() { f32::NEG_INFINITY } else { v };
     if temperature <= 1e-6 {
         // Greedy.
         return logits
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| val(*a.1).total_cmp(&val(*b.1)))
             .map(|(i, _)| i)
             .unwrap();
     }
     let mut idx: Vec<usize> = (0..logits.len()).collect();
     if top_k > 0 && top_k < logits.len() {
-        idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        idx.sort_by(|&a, &b| val(logits[b]).total_cmp(&val(logits[a])));
         idx.truncate(top_k);
     }
-    let max = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max) as f64;
+    let max = idx.iter().map(|&i| val(logits[i])).fold(f32::NEG_INFINITY, f32::max) as f64;
     let weights: Vec<f64> = idx
         .iter()
-        .map(|&i| ((logits[i] as f64 - max) / temperature).exp())
+        .map(|&i| ((val(logits[i]) as f64 - max) / temperature).exp())
         .collect();
     idx[rng.weighted(&weights)]
 }
 
-/// Generate continuations for `prompts` (one per batch row; excess rows
-/// reuse the last prompt). Returns the generated ids per row.
+/// Build the prefill window: prompts right-aligned to a common width
+/// (shorter rows left-padded with `<pad>`, longer rows left-truncated
+/// to the model window `seq_len`).
+fn prefill_batch(cfg: &ModelConfig, prompts: &[Vec<u32>], rows: usize) -> Result<TokenBatch> {
+    let width = prompts.iter().map(Vec::len).max().unwrap_or(0).clamp(1, cfg.seq_len);
+    let mut tokens = Vec::with_capacity(rows * width);
+    for row in 0..rows {
+        let ids = if prompts.len() == 1 { &prompts[0] } else { &prompts[row] };
+        let keep = ids.len().min(width);
+        tokens.resize(tokens.len() + width - keep, PAD as i32);
+        tokens.extend(ids[ids.len() - keep..].iter().map(|&id| id as i32));
+    }
+    TokenBatch::new(tokens, rows, width)
+}
+
+/// Generate continuations for `prompts`: one prompt broadcast to every
+/// batch row, or exactly `cfg.batch_size` prompts (one per row).
+/// Returns the generated ids per row.
 pub fn generate_ids(
     backend: &dyn Backend,
     cfg: &ModelConfig,
@@ -64,40 +86,28 @@ pub fn generate_ids(
     opts: &SampleOpts,
 ) -> Result<Vec<Vec<u32>>> {
     let b = cfg.batch_size;
-    let t = cfg.seq_len;
-    let v = cfg.vocab_size;
+    if prompts.is_empty() {
+        bail!("generate_ids: no prompts");
+    }
+    if prompts.len() != 1 && prompts.len() != b {
+        bail!(
+            "generate_ids: got {} prompts for batch size {b} — pass 1 (broadcast) or {b}",
+            prompts.len()
+        );
+    }
     let mut rng = Pcg::new(opts.seed, 0x9E4);
-
-    // Per-row rolling windows, right-aligned.
-    let mut windows: Vec<Vec<i32>> = (0..b)
-        .map(|row| {
-            let p = prompts.get(row).or_else(|| prompts.last());
-            let mut w = vec![PAD as i32; t];
-            if let Some(ids) = p {
-                let keep = ids.len().min(t);
-                let dst = t - keep;
-                for (i, &id) in ids[ids.len() - keep..].iter().enumerate() {
-                    w[dst + i] = id as i32;
-                }
-            }
-            w
-        })
-        .collect();
+    let mut session = backend.open_session(b)?;
+    let mut logits = session.prefill(&prefill_batch(cfg, prompts, b)?)?;
     let mut outputs: Vec<Vec<u32>> = vec![Vec::new(); b];
-
-    for _ in 0..opts.max_tokens {
-        let mut tokens = Vec::with_capacity(b * t);
-        for w in &windows {
-            tokens.extend_from_slice(w);
+    for step in 0..opts.max_tokens {
+        let mut next = Vec::with_capacity(b);
+        for (row, out) in outputs.iter_mut().enumerate() {
+            let id = sample_logits(logits.row(row), opts.temperature, opts.top_k, &mut rng);
+            out.push(id as u32);
+            next.push(id as i32);
         }
-        let out = backend.next_logits(&tokens, &[b, t])?; // [B, V]
-        for row in 0..b {
-            let logits = &out[row * v..(row + 1) * v];
-            let id = sample_logits(logits, opts.temperature, opts.top_k, &mut rng) as u32;
-            outputs[row].push(id);
-            // Slide the window.
-            windows[row].remove(0);
-            windows[row].push(id as i32);
+        if step + 1 < opts.max_tokens {
+            logits = session.decode(&next)?;
         }
     }
     Ok(outputs)
@@ -158,5 +168,22 @@ mod tests {
             seen[sample_logits(&logits, 5.0, 0, &mut rng)] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn nan_logits_never_panic_and_never_win() {
+        // Regression: the old partial_cmp(...).unwrap() panicked on NaN.
+        let mut rng = Pcg::new(6, 6);
+        let logits = vec![1.0, f32::NAN, 3.0, f32::NAN];
+        assert_eq!(sample_logits(&logits, 0.0, 0, &mut rng), 2, "greedy skips NaN");
+        for _ in 0..200 {
+            let id = sample_logits(&logits, 1.0, 2, &mut rng);
+            assert!(id == 0 || id == 2, "sampled a NaN logit: {id}");
+        }
+        // All-NaN rows still terminate without panicking
+        // (Pcg::weighted falls through to its last-index fallback).
+        let all_nan = vec![f32::NAN; 4];
+        let id = sample_logits(&all_nan, 1.0, 0, &mut rng);
+        assert!(id < 4);
     }
 }

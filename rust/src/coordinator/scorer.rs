@@ -13,7 +13,7 @@ use crate::util::error::Result;
 use crate::config::ModelConfig;
 use crate::data::tokenizer::{Bpe, DOC, PAD};
 use crate::data::zeroshot::{ChoiceTask, MinimalPair};
-use crate::runtime::Backend;
+use crate::runtime::{Backend, TokenBatch};
 
 /// Sum of next-token log-probs of `target_ids` given `ctx_ids`, via one
 /// score() call. Window layout: [pad... ctx target], length T+1.
@@ -63,12 +63,11 @@ pub fn score_pairs(
             let row: Vec<i32> = tokens[start..].to_vec();
             tokens.extend(row);
         }
-        let logp = backend.score(&tokens, &[b, t1])?; // [B, T]
-        let t = cfg.seq_len;
+        let logp = backend.score(&TokenBatch::new(tokens, b, t1)?)?; // [B, T]
         for (row, (lo, hi)) in ranges.iter().enumerate() {
             let mut s = 0.0f64;
             for pos in *lo..*hi {
-                s += logp[row * t + pos] as f64;
+                s += logp.row(row)[pos] as f64;
             }
             out.push(s);
         }
@@ -109,7 +108,7 @@ pub fn eval_choice_tasks(
         let best = slice
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i)
             .unwrap();
         if best == task.answer {

@@ -29,7 +29,8 @@ impl LmStream {
             tokens.len()
         );
         let seg = tokens.len() / batch;
-        let seg_bounds: Vec<(usize, usize)> = (0..batch).map(|b| (b * seg, (b + 1) * seg)).collect();
+        let seg_bounds: Vec<(usize, usize)> =
+            (0..batch).map(|b| (b * seg, (b + 1) * seg)).collect();
         let cursors = seg_bounds.iter().map(|&(s, _)| s).collect();
         LmStream { tokens, batch, seq_len, cursors, seg_bounds }
     }

@@ -15,8 +15,14 @@
 //!   training-state buffer. Requires `make artifacts`; in offline
 //!   builds the `xla` crate is stubbed (`runtime::xla_stub`).
 //!
-//! Both implement [`runtime::Backend`], so the zero-shot harness, the
-//! generator and the benches run on either.
+//! Both implement [`runtime::Backend`] — typed requests/responses
+//! ([`runtime::TokenBatch`], [`runtime::Logits`], [`runtime::ScoreOut`])
+//! plus the stateful [`runtime::Session`] prefill/decode API — so the
+//! zero-shot harness, the generator and the benches run on either.
+//! Incremental generation is native-backend accelerated: an
+//! expert-sparse ring-buffered KV cache ([`model::NativeSession`])
+//! makes a decode step O(context) instead of a full-window recompute;
+//! PJRT sessions fall back to windowed recompute transparently.
 //!
 //! # Artifact-free test tier
 //!

@@ -22,7 +22,9 @@ use switchhead::coordinator::trainer::{self, TrainOpts};
 use switchhead::data::{corpus_for, synth, zeroshot, TRAIN_CHARS, VALID_CHARS};
 use switchhead::macs::{attention_cost, match_params_via_dff, match_params_via_dhead, param_count};
 use switchhead::model::NativeEngine;
-use switchhead::runtime::{checkpoint, Backend, Engine, PjrtBackend};
+use switchhead::runtime::{
+    checkpoint, Backend, Engine, Logits, PjrtBackend, ScoreOut, Session, TokenBatch,
+};
 use switchhead::util::cli::Args;
 use switchhead::util::logging::info;
 use switchhead::util::rng::Pcg;
@@ -91,7 +93,8 @@ fn main() -> Result<()> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = load_cfg(args)?;
-    let engine = Engine::load(&artifact_dir(args, &cfg), Some(&["init", "train_step", "eval_step", "metrics"]))?;
+    let entries = ["init", "train_step", "eval_step", "metrics"];
+    let engine = Engine::load(&artifact_dir(args, &cfg), Some(&entries))?;
     let opts = TrainOpts {
         steps: args.usize_or("steps", cfg.train_steps)?,
         eval_every: args.usize_or("eval-every", 0)?,
@@ -118,7 +121,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn load_trained(args: &Args, cfg: &ModelConfig, engine: &Engine) -> Result<switchhead::runtime::FlatBuf> {
+fn load_trained(
+    args: &Args,
+    cfg: &ModelConfig,
+    engine: &Engine,
+) -> Result<switchhead::runtime::FlatBuf> {
     let out_dir = PathBuf::from(args.get_or("out", &format!("runs/{}", cfg.name)));
     let path = out_dir.join("last.ckpt");
     if !path.exists() {
@@ -169,18 +176,29 @@ impl LoadedBackend {
 }
 
 impl Backend for LoadedBackend {
-    fn score(&self, tokens: &[i32], dims: &[usize]) -> Result<Vec<f32>> {
+    fn score(&self, batch: &TokenBatch) -> Result<ScoreOut> {
         match self {
-            LoadedBackend::Native(e) => e.score(tokens, dims),
-            LoadedBackend::Pjrt(engine, flat) => PjrtBackend::new(engine, flat).score(tokens, dims),
+            LoadedBackend::Native(e) => e.score(batch),
+            LoadedBackend::Pjrt(engine, flat) => PjrtBackend::new(engine, flat).score(batch),
         }
     }
 
-    fn next_logits(&self, tokens: &[i32], dims: &[usize]) -> Result<Vec<f32>> {
+    fn next_logits(&self, batch: &TokenBatch) -> Result<Logits> {
         match self {
-            LoadedBackend::Native(e) => e.next_logits(tokens, dims),
+            LoadedBackend::Native(e) => e.next_logits(batch),
             LoadedBackend::Pjrt(engine, flat) => {
-                PjrtBackend::new(engine, flat).next_logits(tokens, dims)
+                PjrtBackend::new(engine, flat).next_logits(batch)
+            }
+        }
+    }
+
+    fn open_session(&self, rows: usize) -> Result<Box<dyn Session + '_>> {
+        match self {
+            LoadedBackend::Native(e) => e.open_session(rows),
+            LoadedBackend::Pjrt(engine, flat) => {
+                // The session borrows engine/flat directly, so the
+                // adapter can be a temporary.
+                Ok(Box::new(PjrtBackend::new(engine, flat).session(rows)?))
             }
         }
     }
@@ -307,13 +325,14 @@ fn cmd_analyze(args: &Args) -> Result<()> {
             (tok, vec![cfg.batch_size, cfg.seq_len], cfg.seq_len / 2)
         }
     };
+    let batch = TokenBatch::new(tokens, dims[0], dims[1])?;
     let arrays = if args.get_or("backend", "pjrt") == "native" {
         let native = NativeEngine::new(&cfg, args.u64_or("init-seed", 42)?)?;
-        native.attention_arrays(&tokens, &dims)?
+        native.attention_arrays(&batch)?
     } else {
         let engine = Engine::load(&artifact_dir(args, &cfg), Some(&["attn"]))?;
         let flat = load_trained(args, &cfg, &engine)?;
-        analysis::fetch_attention(&engine, &flat, &tokens, &dims)?
+        analysis::fetch_attention(&engine, &flat, &batch)?
     };
     let maps = arrays
         .iter()
@@ -431,9 +450,10 @@ fn cmd_probe_native(args: &Args, cfg: &ModelConfig) -> Result<()> {
             let t1 = cfg.seq_len + 1;
             let tok: Vec<i32> =
                 (0..cfg.batch_size * t1).map(|_| rng.below(cfg.vocab_size) as i32).collect();
-            let (nll, count) = engine.eval_nll(&tok, &[cfg.batch_size, t1])?;
+            let (nll, count) = engine.eval_nll(&TokenBatch::new(tok, cfg.batch_size, t1)?)?;
             let ppl = (nll / count as f64).exp();
-            info(&format!("score: mean NLL {:.4}, ppl {ppl:.2} ({count} tokens)", nll / count as f64));
+            let mean_nll = nll / count as f64;
+            info(&format!("score: mean NLL {mean_nll:.4}, ppl {ppl:.2} ({count} tokens)"));
             if !(nll / count as f64).is_finite() {
                 bail!("native probe produced non-finite NLL");
             }
@@ -441,11 +461,11 @@ fn cmd_probe_native(args: &Args, cfg: &ModelConfig) -> Result<()> {
         Task::ListOps => {
             let (tok, _lab) =
                 switchhead::data::listops::gen_batch(&mut rng, cfg.batch_size, cfg.seq_len);
-            let logits = engine.class_logits(&tok, &[cfg.batch_size, cfg.seq_len])?;
-            if !logits.iter().all(|l| l.is_finite()) {
+            let logits = engine.class_logits(&TokenBatch::new(tok, cfg.batch_size, cfg.seq_len)?)?;
+            if !logits.data().iter().all(|l| l.is_finite()) {
                 bail!("native probe produced non-finite logits");
             }
-            info(&format!("class_logits ok: {} values", logits.len()));
+            info(&format!("class_logits ok: {} values", logits.data().len()));
         }
     }
     println!("probe OK (native): {}", cfg.name);

@@ -34,8 +34,9 @@ pub struct AttnCtx<'a> {
     pub pad_mask: Option<&'a [bool]>,
 }
 
-/// Dense-or-MoE projection application with MAC accounting.
-fn proj(
+/// Dense-or-MoE projection application with MAC accounting (shared
+/// with the incremental decoder in `model::decode`).
+pub(crate) fn proj(
     x: &[f32],
     p: &Proj,
     idx: &[usize],

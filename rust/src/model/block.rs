@@ -20,7 +20,9 @@ pub struct EncodeAux {
     pub layers: Vec<LayerAux>,
 }
 
-fn mlp_apply(cfg: &ModelConfig, p: &MlpP, x: &[f32], macs: &mut MacCounter) -> Vec<f32> {
+/// Feedforward layer (dense or sigma-MoE) over `[n, d]` rows — shared
+/// with the incremental decoder in `model::decode`.
+pub(crate) fn mlp_apply(cfg: &ModelConfig, p: &MlpP, x: &[f32], macs: &mut MacCounter) -> Vec<f32> {
     let d = cfg.d_model;
     let n = x.len() / d;
     match p {

@@ -1,0 +1,467 @@
+//! Incremental decoding for the native backend: [`NativeSession`], the
+//! [`Session`] implementation behind `NativeEngine::open_session`.
+//!
+//! # Expert-sparse KV cache
+//!
+//! Per layer and per head the session keeps a ring buffer of the K/V
+//! vectors of every context token. For SwitchHead these are the
+//! gate-combined projections of ONLY the `att_k` experts the sigmoid
+//! router selected for that token (paper Sec. 3's memory argument: the
+//! source-side gates do not depend on the query, so the combination is
+//! exact and the unselected experts are never computed or stored). A
+//! decode step therefore costs one token's projections plus one
+//! attention row per head — O(context) — instead of the O(T^2) full
+//! window recompute the legacy generation path paid per token, and the
+//! ring bound (`ctx_len`) keeps memory O(context) for arbitrarily long
+//! generations.
+//!
+//! # Equivalence contract
+//!
+//! The model is causal and every non-attention op is per-token, so
+//! `prefill(w[:, :n])` followed by token-by-token `decode` of
+//! `w[:, n..]` ends on the same logits as `next_logits(w)` over the
+//! full window (pinned to <= 1e-5 by `rust/tests/decode.rs`, and to
+//! float64 machine epsilon by `python/tools/check_decode_ref.py`, the
+//! numeric twin of this file). For `pos="xl"` the fixed zero-cache
+//! prefix — `seq_len` pseudo-columns with k = v = 0 but nonzero
+//! relative-position logits — is replayed analytically per query:
+//! the columns contribute only softmax denominator mass, computed from
+//! the lazily grown table of projected distance embeddings. Past the
+//! ring capacity the oldest K/V entries are evicted (windowed
+//! attention), which is where the contract intentionally ends.
+//!
+//! Keep in lock-step with `python/tools/native_ref.py::Session`.
+
+use crate::config::{ModelConfig, Positional, Task};
+use crate::model::attention::proj;
+use crate::model::block::mlp_apply;
+use crate::model::params::{AttnP, DenseP, MoaP, NativeModel, SwitchHeadP, XlP};
+use crate::model::tensor::{
+    layer_norm, matmul, moe_matmul, rope_rotate, route, sinusoidal_row, softmax_rows, MacCounter,
+    Router,
+};
+use crate::runtime::api::{Logits, Session, TokenBatch};
+use crate::util::error::{bail, Result};
+
+/// Ring-buffered K/V vectors for one attention matrix: `[rows, cap, dh]`.
+struct Kv {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl Kv {
+    fn new(rows: usize, cap: usize, dh: usize) -> Kv {
+        Kv { k: vec![0f32; rows * cap * dh], v: vec![0f32; rows * cap * dh] }
+    }
+
+    /// Store the chunk's `[rows, tn, dh]` projections at their position
+    /// slots (`pos % cap`), evicting whatever lived there before.
+    fn push(&mut self, kh: &[f32], vh: &[f32], geo: &Geo) {
+        let (cap, dh) = (geo.cap, geo.dh);
+        for bi in 0..geo.rows {
+            for ci in 0..geo.tn {
+                let slot = (geo.pos0 + ci) % cap;
+                let dst = (bi * cap + slot) * dh;
+                let src = (bi * geo.tn + ci) * dh;
+                self.k[dst..dst + dh].copy_from_slice(&kh[src..src + dh]);
+                self.v[dst..dst + dh].copy_from_slice(&vh[src..src + dh]);
+            }
+        }
+    }
+}
+
+/// Per-layer decode state: one K/V ring per attention matrix (per head;
+/// MoA shares a single K/V), plus the lazily grown table of projected
+/// XL distance embeddings (`r[dist]`, one `[dh]` row per distance).
+struct LayerState {
+    kv: Vec<Kv>,
+    r: Vec<Vec<f32>>,
+}
+
+/// Geometry of one `advance` call.
+struct Geo {
+    rows: usize,
+    tn: usize,
+    pos0: usize,
+    cap: usize,
+    /// Zero-cache pseudo-column count (`seq_len` for XL, else 0).
+    tc: usize,
+    dh: usize,
+}
+
+/// Stateful incremental decoder over a [`NativeModel`].
+pub struct NativeSession<'m> {
+    model: &'m NativeModel,
+    rows: usize,
+    pos: usize,
+    cap: usize,
+    tc: usize,
+    layers: Vec<LayerState>,
+    macs: MacCounter,
+}
+
+impl<'m> NativeSession<'m> {
+    pub fn open(model: &'m NativeModel, rows: usize) -> Result<NativeSession<'m>> {
+        let cfg = &model.cfg;
+        if cfg.task != Task::Lm {
+            bail!("decoding sessions require an LM config");
+        }
+        if rows == 0 {
+            bail!("open_session: zero rows");
+        }
+        let cap = cfg.ctx_len();
+        let tc = if cfg.pos == Positional::Xl { cfg.seq_len } else { 0 };
+        let n_kv = match &model.layers[0].attn {
+            AttnP::Moa(_) => 1,
+            _ => cfg.n_heads,
+        };
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerState {
+                kv: (0..n_kv).map(|_| Kv::new(rows, cap, cfg.d_head)).collect(),
+                r: vec![Vec::new(); n_kv],
+            })
+            .collect();
+        Ok(NativeSession { model, rows, pos: 0, cap, tc, layers, macs: MacCounter::default() })
+    }
+
+    /// Run the block stack over a `[rows, tn]` chunk against the cached
+    /// context and return the next-token logits of the last position.
+    fn advance(&mut self, tokens: &[i32], tn: usize) -> Result<Logits> {
+        let model = self.model;
+        let cfg = &model.cfg;
+        let d = cfg.d_model;
+        let rows = self.rows;
+        let geo = Geo { rows, tn, pos0: self.pos, cap: self.cap, tc: self.tc, dh: cfg.d_head };
+
+        let scale = (d as f64).sqrt() as f32;
+        let mut x = vec![0f32; rows * tn * d];
+        for (i, &tok) in tokens.iter().enumerate() {
+            let row = &model.embed[(tok as usize) * d..(tok as usize + 1) * d];
+            let out = &mut x[i * d..(i + 1) * d];
+            for j in 0..d {
+                out[j] = row[j] * scale;
+            }
+        }
+
+        for (bp, st) in model.layers.iter().zip(self.layers.iter_mut()) {
+            let x_ln = layer_norm(&x, &bp.ln1.g, &bp.ln1.b, d);
+            let a = match &bp.attn {
+                AttnP::SwitchHead(p) => {
+                    switchhead_decode(cfg, p, st, &x_ln, &geo, &mut self.macs)
+                }
+                AttnP::Dense(p) => dense_decode(cfg, p, st, &x_ln, &geo, &mut self.macs),
+                AttnP::Moa(p) => moa_decode(cfg, p, st, &x_ln, &geo, &mut self.macs),
+            };
+            for (xv, av) in x.iter_mut().zip(&a) {
+                *xv += av;
+            }
+            let x_ln2 = layer_norm(&x, &bp.ln2.g, &bp.ln2.b, d);
+            let m = mlp_apply(cfg, &bp.mlp, &x_ln2, &mut self.macs);
+            for (xv, mv) in x.iter_mut().zip(&m) {
+                *xv += mv;
+            }
+        }
+
+        let mut last = vec![0f32; rows * d];
+        for bi in 0..rows {
+            let from = (bi * tn + tn - 1) * d;
+            last[bi * d..(bi + 1) * d].copy_from_slice(&x[from..from + d]);
+        }
+        let h = layer_norm(&last, &model.ln_f.g, &model.ln_f.b, d);
+        let n_out = NativeModel::n_out(cfg);
+        let logits = matmul(&h, &model.head, rows, d, n_out);
+        self.pos += tn;
+        Logits::new(logits, rows, n_out)
+    }
+}
+
+impl Session for NativeSession<'_> {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn consumed(&self) -> usize {
+        self.pos
+    }
+
+    fn prefill(&mut self, batch: &TokenBatch) -> Result<Logits> {
+        if self.pos > 0 {
+            bail!("prefill on a non-fresh session ({} tokens consumed)", self.pos);
+        }
+        if batch.rows() != self.rows {
+            bail!("prefill rows {} != session rows {}", batch.rows(), self.rows);
+        }
+        if batch.width() > self.cap {
+            bail!(
+                "prompt width {} exceeds the session context {} — truncate the prompt first",
+                batch.width(),
+                self.cap
+            );
+        }
+        batch.check_vocab(self.model.cfg.vocab_size)?;
+        self.advance(batch.tokens(), batch.width())
+    }
+
+    fn decode(&mut self, next: &[i32]) -> Result<Logits> {
+        if self.pos == 0 {
+            bail!("decode before prefill");
+        }
+        if next.len() != self.rows {
+            bail!("decode got {} tokens for {} rows", next.len(), self.rows);
+        }
+        for &t in next {
+            if t < 0 || t as usize >= self.model.cfg.vocab_size {
+                bail!("token id {t} outside vocab {}", self.model.cfg.vocab_size);
+            }
+        }
+        self.advance(next, 1)
+    }
+
+    fn macs(&self) -> Option<MacCounter> {
+        Some(self.macs.clone())
+    }
+}
+
+/// Grow the projected-distance table to cover `max_dist` (rows are
+/// `sinusoidal(dist) @ w_kr`, identical to the corresponding row of the
+/// full forward's `r` matrix; each decode step adds at most one row).
+/// Callers clamp `max_dist` to `cap + tc - 1`, so the table — like the
+/// K/V rings — stays O(context) for arbitrarily long generations.
+fn ensure_r(
+    r: &mut Vec<f32>,
+    w_kr: &[f32],
+    d: usize,
+    dh: usize,
+    max_dist: usize,
+    macs: &mut MacCounter,
+) {
+    let have = r.len() / dh;
+    for dist in have..=max_dist {
+        let row = sinusoidal_row(dist, d);
+        r.extend(matmul(&row, w_kr, 1, d, dh));
+        macs.pos += (d * dh) as f64;
+    }
+}
+
+/// Attention core for one matrix over the ring + the XL zero-cache
+/// pseudo-columns. `q` is `[rows, tn, dh]` pre-u-bias; `xl` carries
+/// `(u_bias, v_bias, r_table)`. Returns `[rows, tn, dh]`.
+fn attend(
+    q: &[f32],
+    xl: Option<(&[f32], &[f32], &[f32])>,
+    kv: &Kv,
+    geo: &Geo,
+    macs: &mut MacCounter,
+) -> Vec<f32> {
+    let (rows, tn, cap, tc, dh) = (geo.rows, geo.tn, geo.cap, geo.tc, geo.dh);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = vec![0f32; rows * tn * dh];
+    let mut logits: Vec<f32> = Vec::new();
+    for bi in 0..rows {
+        for ci in 0..tn {
+            let p = geo.pos0 + ci;
+            let lo = (p + 1).saturating_sub(cap);
+            let live = p + 1 - lo;
+            let qrow = &q[(bi * tn + ci) * dh..(bi * tn + ci + 1) * dh];
+            logits.clear();
+            // Zero-cache pseudo-columns: keys and values are zero, so
+            // only the relative-position term survives — pure softmax
+            // denominator mass, exactly as in the full forward. Distances
+            // clamp at the table bound (cap + tc - 1) like the full
+            // forward's `clamp(0, tk - 1)`; the clamp only engages past
+            // ring eviction, outside the equivalence window.
+            if let Some((_, vb, r)) = xl {
+                let max_dist = cap + tc - 1;
+                for j in 0..tc {
+                    let dist = (p + tc - j).min(max_dist);
+                    let rrow = &r[dist * dh..(dist + 1) * dh];
+                    let mut s = 0f32;
+                    for d0 in 0..dh {
+                        s += (qrow[d0] + vb[d0]) * rrow[d0];
+                    }
+                    logits.push(s);
+                }
+                macs.pos += (tc * dh) as f64;
+            }
+            // Live context columns, oldest first (the full forward's
+            // summation order).
+            for kpos in lo..=p {
+                let krow = {
+                    let base = (bi * cap + kpos % cap) * dh;
+                    &kv.k[base..base + dh]
+                };
+                let mut s = 0f32;
+                match xl {
+                    Some((u, _, _)) => {
+                        for d0 in 0..dh {
+                            s += (qrow[d0] + u[d0]) * krow[d0];
+                        }
+                    }
+                    None => {
+                        for d0 in 0..dh {
+                            s += qrow[d0] * krow[d0];
+                        }
+                    }
+                }
+                let mut logit = s * scale;
+                if let Some((_, vb, r)) = xl {
+                    let dist = p - kpos;
+                    let rrow = &r[dist * dh..(dist + 1) * dh];
+                    let mut pb = 0f32;
+                    for d0 in 0..dh {
+                        pb += (qrow[d0] + vb[d0]) * rrow[d0];
+                    }
+                    logit += pb;
+                }
+                logits.push(logit);
+            }
+            if xl.is_some() {
+                macs.pos += (live * dh) as f64;
+            }
+            macs.attn_core += 2.0 * (live * dh) as f64;
+            let width = logits.len();
+            softmax_rows(&mut logits, width);
+            let orow = &mut out[(bi * tn + ci) * dh..(bi * tn + ci + 1) * dh];
+            for (jj, kpos) in (lo..=p).enumerate() {
+                let w = logits[tc + jj];
+                let base = (bi * cap + kpos % cap) * dh;
+                let vrow = &kv.v[base..base + dh];
+                for d0 in 0..dh {
+                    orow[d0] += w * vrow[d0];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Resolve the XL bias/table triple for head `hi`, growing the distance
+/// table far enough for this chunk's queries.
+fn xl_tables<'a>(
+    xl: Option<&'a XlP>,
+    r: &'a mut Vec<f32>,
+    hi: usize,
+    d: usize,
+    geo: &Geo,
+    macs: &mut MacCounter,
+) -> Option<(&'a [f32], &'a [f32], &'a [f32])> {
+    let xlp = xl?;
+    let need = (geo.pos0 + geo.tn - 1 + geo.tc).min(geo.cap + geo.tc - 1);
+    ensure_r(r, &xlp.w_kr[hi], d, geo.dh, need, macs);
+    Some((xlp.u[hi].as_slice(), xlp.v[hi].as_slice(), r.as_slice()))
+}
+
+/// SwitchHead MoE attention over the cache: route the chunk, project
+/// only the selected experts' K/V (gate-combined into the ring), attend.
+fn switchhead_decode(
+    cfg: &ModelConfig,
+    p: &SwitchHeadP,
+    st: &mut LayerState,
+    x_ln: &[f32],
+    geo: &Geo,
+    macs: &mut MacCounter,
+) -> Vec<f32> {
+    let (d, e, k) = (cfg.d_model, cfg.att_n_experts, cfg.att_k);
+    let router = Router::parse(&cfg.att_router);
+    let n = geo.rows * geo.tn;
+    let mut y = vec![0f32; n * d];
+    for hi in 0..cfg.n_heads {
+        let (idx_s, gate_s, _) = route(x_ln, &p.w_sel_s[hi], d, e, k, router, macs);
+        let w_sel_d = match &p.w_sel_d {
+            Some(sels) => &sels[hi],
+            None => &p.w_sel_s[hi],
+        };
+        let (idx_d, gate_d, _) = route(x_ln, w_sel_d, d, e, k, router, macs);
+
+        let mut kh = proj(x_ln, &p.w_k[hi], &idx_s, &gate_s, k, macs);
+        let mut qh = proj(x_ln, &p.w_q[hi], &idx_d, &gate_d, k, macs);
+        let vh = proj(x_ln, &p.w_v[hi], &idx_s, &gate_s, k, macs);
+        if cfg.pos == Positional::Rope {
+            rope_rotate(&mut qh, geo.rows, geo.tn, geo.dh, geo.pos0);
+            rope_rotate(&mut kh, geo.rows, geo.tn, geo.dh, geo.pos0);
+        }
+        st.kv[hi].push(&kh, &vh, geo);
+        let xl = xl_tables(p.xl.as_ref(), &mut st.r[hi], hi, d, geo, macs);
+        let att = attend(&qh, xl, &st.kv[hi], geo, macs);
+        let yo = proj(&att, &p.w_o[hi], &idx_d, &gate_d, k, macs);
+        for (yv, ov) in y.iter_mut().zip(&yo) {
+            *yv += ov;
+        }
+    }
+    y
+}
+
+/// Dense MHA over the cache.
+fn dense_decode(
+    cfg: &ModelConfig,
+    p: &DenseP,
+    st: &mut LayerState,
+    x_ln: &[f32],
+    geo: &Geo,
+    macs: &mut MacCounter,
+) -> Vec<f32> {
+    let d = cfg.d_model;
+    let n = geo.rows * geo.tn;
+    let mut y = vec![0f32; n * d];
+    for hi in 0..cfg.n_heads {
+        let mut qh = matmul(x_ln, &p.w_q[hi], n, d, geo.dh);
+        let mut kh = matmul(x_ln, &p.w_k[hi], n, d, geo.dh);
+        let vh = matmul(x_ln, &p.w_v[hi], n, d, geo.dh);
+        macs.proj_dense += (3 * n * d * geo.dh) as f64;
+        if cfg.pos == Positional::Rope {
+            rope_rotate(&mut qh, geo.rows, geo.tn, geo.dh, geo.pos0);
+            rope_rotate(&mut kh, geo.rows, geo.tn, geo.dh, geo.pos0);
+        }
+        st.kv[hi].push(&kh, &vh, geo);
+        let xl = xl_tables(p.xl.as_ref(), &mut st.r[hi], hi, d, geo, macs);
+        let att = attend(&qh, xl, &st.kv[hi], geo, macs);
+        let yo = matmul(&att, &p.w_o[hi], n, geo.dh, d);
+        macs.proj_dense += (n * geo.dh * d) as f64;
+        for (yv, ov) in y.iter_mut().zip(&yo) {
+            *yv += ov;
+        }
+    }
+    y
+}
+
+/// MoA over the cache: shared K/V ring, `moa_k` routed query/output
+/// experts per token.
+fn moa_decode(
+    cfg: &ModelConfig,
+    p: &MoaP,
+    st: &mut LayerState,
+    x_ln: &[f32],
+    geo: &Geo,
+    macs: &mut MacCounter,
+) -> Vec<f32> {
+    let (d, dh, e, k) = (cfg.d_model, cfg.d_head, cfg.moa_n_experts, cfg.moa_k);
+    let n = geo.rows * geo.tn;
+    let mut kh = matmul(x_ln, &p.w_k, n, d, dh);
+    let vh = matmul(x_ln, &p.w_v, n, d, dh);
+    macs.proj_dense += (2 * n * d * dh) as f64;
+    if cfg.pos == Positional::Rope {
+        rope_rotate(&mut kh, geo.rows, geo.tn, dh, geo.pos0);
+    }
+    st.kv[0].push(&kh, &vh, geo);
+
+    let (idx, gate, _) = route(x_ln, &p.w_sel, d, e, k, Router::Softmax, macs);
+    let ones = vec![1.0f32; n];
+    let mut y = vec![0f32; n * d];
+    for j in 0..k {
+        let idx_j: Vec<usize> = (0..n).map(|i| idx[i * k + j]).collect();
+        let gate_j: Vec<f32> = (0..n).map(|i| gate[i * k + j]).collect();
+        let mut qj = moe_matmul(x_ln, &p.w_q, d, dh, &idx_j, &ones, 1);
+        macs.proj_moe += (n * (d * dh + dh)) as f64;
+        if cfg.pos == Positional::Rope {
+            rope_rotate(&mut qj, geo.rows, geo.tn, dh, geo.pos0);
+        }
+        let xl = xl_tables(p.xl.as_ref(), &mut st.r[0], 0, d, geo, macs);
+        let att = attend(&qj, xl, &st.kv[0], geo, macs);
+        let yo = moe_matmul(&att, &p.w_o, dh, d, &idx_j, &gate_j, 1);
+        macs.proj_moe += (n * (dh * d + d)) as f64;
+        for (yv, ov) in y.iter_mut().zip(&yo) {
+            *yv += ov;
+        }
+    }
+    y
+}

@@ -1,18 +1,21 @@
 //! `NativeEngine` — the artifact-free execution backend.
 //!
-//! Wraps a [`NativeModel`] behind the same host-buffer inference API the
-//! PJRT [`crate::runtime::Engine`] exposes (`score`, `next_logits`,
-//! attention/gate analysis), implementing [`crate::runtime::Backend`] so
-//! the zero-shot scorer, the generator and the benches run on either
-//! backend unchanged. Everything executes on host f32 buffers — no
-//! artifacts, no Python, no PJRT.
+//! Wraps a [`NativeModel`] behind the typed inference API the runtime
+//! layer defines ([`crate::runtime::Backend`]: `score`, `next_logits`,
+//! `open_session`, plus attention/gate analysis), so the zero-shot
+//! scorer, the generator and the benches run on either backend
+//! unchanged. Everything executes on host f32 buffers — no artifacts,
+//! no Python, no PJRT. Stateful generation goes through
+//! [`NativeSession`], the incremental decoder with the expert-sparse
+//! KV cache.
 
 use crate::config::{ModelConfig, Task};
 use crate::coordinator::analysis::HostArray;
 use crate::model::block::{self, EncodeAux};
+use crate::model::decode::NativeSession;
 use crate::model::params::NativeModel;
 use crate::model::tensor::MacCounter;
-use crate::runtime::Backend;
+use crate::runtime::api::{Backend, Logits, ScoreOut, Session, TokenBatch};
 use crate::util::error::{bail, Result};
 
 pub struct NativeEngine {
@@ -30,60 +33,55 @@ impl NativeEngine {
         &self.model.cfg
     }
 
-    fn check_tokens(&self, tokens: &[i32], dims: &[usize], want_cols: usize) -> Result<usize> {
-        let cfg = self.cfg();
-        if dims.len() != 2 || dims[1] != want_cols {
-            bail!("native engine: expected dims [B, {want_cols}], got {dims:?}");
+    fn check_batch(&self, batch: &TokenBatch, want_cols: usize) -> Result<usize> {
+        if batch.width() != want_cols {
+            bail!("native engine: expected width {want_cols}, got {}", batch.width());
         }
-        let b = dims[0];
-        if tokens.len() != b * want_cols {
-            bail!("native engine: token buffer {} != {b}x{want_cols}", tokens.len());
-        }
-        for &t in tokens {
-            if t < 0 || t as usize >= cfg.vocab_size {
-                bail!("native engine: token id {t} outside vocab {}", cfg.vocab_size);
-            }
-        }
-        Ok(b)
+        batch.check_vocab(self.cfg().vocab_size)?;
+        Ok(batch.rows())
     }
 
     /// Per-position next-token log-probabilities for a `[B, T+1]`
-    /// window; returns `[B * T]` (same contract as `Engine::score`).
-    pub fn score(&self, tokens: &[i32], dims: &[usize]) -> Result<Vec<f32>> {
+    /// window (same contract as the PJRT `score` entry).
+    pub fn score(&self, batch: &TokenBatch) -> Result<ScoreOut> {
         if self.cfg().task != Task::Lm {
             bail!("score requires an LM config");
         }
-        let b = self.check_tokens(tokens, dims, self.cfg().seq_len + 1)?;
+        let b = self.check_batch(batch, self.cfg().seq_len + 1)?;
         let mut macs = MacCounter::default();
-        Ok(block::score(&self.model, tokens, b, &mut macs))
+        let logp = block::score(&self.model, batch.tokens(), b, &mut macs);
+        ScoreOut::new(logp, b, self.cfg().seq_len)
     }
 
-    /// Logits for the token following a `[B, T]` window; `[B * V]`.
-    pub fn next_logits(&self, tokens: &[i32], dims: &[usize]) -> Result<Vec<f32>> {
+    /// Logits for the token following a `[B, T]` window.
+    pub fn next_logits(&self, batch: &TokenBatch) -> Result<Logits> {
         if self.cfg().task != Task::Lm {
             bail!("next_logits requires an LM config");
         }
-        let b = self.check_tokens(tokens, dims, self.cfg().seq_len)?;
+        let b = self.check_batch(batch, self.cfg().seq_len)?;
         let mut macs = MacCounter::default();
-        Ok(block::next_logits(&self.model, tokens, b, &mut macs))
+        let logits = block::next_logits(&self.model, batch.tokens(), b, &mut macs);
+        Logits::new(logits, b, self.cfg().vocab_size)
     }
 
-    /// ListOps classification logits `[B, n_classes]`.
-    pub fn class_logits(&self, tokens: &[i32], dims: &[usize]) -> Result<Vec<f32>> {
+    /// ListOps classification logits, one `[n_classes]` row per batch
+    /// row.
+    pub fn class_logits(&self, batch: &TokenBatch) -> Result<Logits> {
         if self.cfg().task != Task::ListOps {
             bail!("class_logits requires a listops config");
         }
-        let b = self.check_tokens(tokens, dims, self.cfg().seq_len)?;
+        let b = self.check_batch(batch, self.cfg().seq_len)?;
         let mut macs = MacCounter::default();
-        Ok(block::class_logits(&self.model, tokens, b, &mut macs))
+        let logits = block::class_logits(&self.model, batch.tokens(), b, &mut macs);
+        Logits::new(logits, b, self.cfg().ls_n_classes)
     }
 
     /// Total negative log-likelihood and token count over a `[B, T+1]`
     /// window (the native analog of the PJRT eval_step metrics).
-    pub fn eval_nll(&self, tokens: &[i32], dims: &[usize]) -> Result<(f64, usize)> {
-        let logp = self.score(tokens, dims)?;
-        let sum: f64 = logp.iter().map(|&x| -(x as f64)).sum();
-        Ok((sum, logp.len()))
+    pub fn eval_nll(&self, batch: &TokenBatch) -> Result<(f64, usize)> {
+        let out = self.score(batch)?;
+        let sum: f64 = out.data().iter().map(|&x| -(x as f64)).sum();
+        Ok((sum, out.data().len()))
     }
 
     /// Attention maps and router scores, shaped like the PJRT `attn`
@@ -91,15 +89,16 @@ impl NativeEngine {
     /// matrices per layer), gates are `[L, N, E]` per router.
     /// LM configs take a `[B, T+1]` window (last column dropped, as in
     /// `model.py::attn_maps`); listops takes `[B, T]`.
-    pub fn attention_arrays(&self, tokens: &[i32], dims: &[usize]) -> Result<Vec<HostArray>> {
+    pub fn attention_arrays(&self, batch: &TokenBatch) -> Result<Vec<HostArray>> {
         let cfg = self.cfg().clone();
         let t = cfg.seq_len;
         let mut aux = EncodeAux::default();
         let mut macs = MacCounter::default();
         let b;
+        let tokens = batch.tokens();
         match cfg.task {
             Task::Lm => {
-                b = self.check_tokens(tokens, dims, t + 1)?;
+                b = self.check_batch(batch, t + 1)?;
                 let mut inp = Vec::with_capacity(b * t);
                 for bi in 0..b {
                     inp.extend_from_slice(&tokens[bi * (t + 1)..bi * (t + 1) + t]);
@@ -107,9 +106,10 @@ impl NativeEngine {
                 block::encode(&self.model, &inp, b, t, None, &mut macs, Some(&mut aux));
             }
             Task::ListOps => {
-                b = self.check_tokens(tokens, dims, t)?;
+                b = self.check_batch(batch, t)?;
                 let pad_mask: Vec<bool> = tokens.iter().map(|&tok| tok != 0).collect();
-                block::encode(&self.model, tokens, b, t, Some(&pad_mask), &mut macs, Some(&mut aux));
+                let aux_ref = Some(&mut aux);
+                block::encode(&self.model, tokens, b, t, Some(&pad_mask), &mut macs, aux_ref);
             }
         }
 
@@ -176,12 +176,16 @@ impl NativeEngine {
 }
 
 impl Backend for NativeEngine {
-    fn score(&self, tokens: &[i32], dims: &[usize]) -> Result<Vec<f32>> {
-        NativeEngine::score(self, tokens, dims)
+    fn score(&self, batch: &TokenBatch) -> Result<ScoreOut> {
+        NativeEngine::score(self, batch)
     }
 
-    fn next_logits(&self, tokens: &[i32], dims: &[usize]) -> Result<Vec<f32>> {
-        NativeEngine::next_logits(self, tokens, dims)
+    fn next_logits(&self, batch: &TokenBatch) -> Result<Logits> {
+        NativeEngine::next_logits(self, batch)
+    }
+
+    fn open_session(&self, rows: usize) -> Result<Box<dyn Session + '_>> {
+        Ok(Box::new(NativeSession::open(&self.model, rows)?))
     }
 
     fn backend_name(&self) -> &'static str {

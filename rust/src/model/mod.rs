@@ -27,9 +27,11 @@
 //!   passes under XL / RoPE / no positional scheme.
 //! * [`block`] — pre-LN block stack, σ-MoE feedforward, and the
 //!   model-level `score` / `next_logits` / `class_logits` heads.
+//! * [`decode`] — [`NativeSession`], the incremental decoder with the
+//!   expert-sparse ring-buffered KV cache behind
+//!   [`crate::runtime::Session`].
 //! * [`engine`] — [`NativeEngine`], the [`crate::runtime::Backend`]
-//!   implementation wrapping it all behind the PJRT engine's
-//!   host-buffer API.
+//!   implementation wrapping it all behind the typed inference API.
 //!
 //! # Fidelity
 //!
@@ -42,10 +44,12 @@
 
 pub mod attention;
 pub mod block;
+pub mod decode;
 pub mod engine;
 pub mod params;
 pub mod tensor;
 
+pub use decode::NativeSession;
 pub use engine::NativeEngine;
 pub use params::NativeModel;
 pub use tensor::MacCounter;

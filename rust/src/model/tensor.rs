@@ -36,6 +36,12 @@ impl MacCounter {
     pub fn attention_total(&self) -> f64 {
         self.proj_dense + self.proj_moe + self.attn_core + self.pos
     }
+
+    /// Every tallied MAC (attention + router + MLP) — the whole-forward
+    /// cost the decode-vs-recompute comparison uses.
+    pub fn total(&self) -> f64 {
+        self.proj_dense + self.proj_moe + self.attn_core + self.router + self.pos + self.mlp
+    }
 }
 
 /// `[n, d] @ [d, m] -> [n, m]`.
@@ -248,15 +254,24 @@ pub fn route(
 /// Classic sinusoidal embedding: `[count, d]` with `[sin | cos]` halves
 /// (mirrors `layers.py::sinusoidal`; `d` must be even).
 pub fn sinusoidal(count: usize, d: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(count * d);
+    for p in 0..count {
+        out.extend(sinusoidal_row(p, d));
+    }
+    out
+}
+
+/// One row of [`sinusoidal`] (position `p`), bit-identical to the
+/// corresponding row of the full table — the incremental decoder grows
+/// its distance table row by row with this.
+pub fn sinusoidal_row(p: usize, d: usize) -> Vec<f32> {
     let half = d / 2;
     let lg = (10000f64).ln() / half as f64;
-    let mut out = vec![0f32; count * d];
-    for p in 0..count {
-        for j in 0..half {
-            let ang = p as f64 * (-(j as f64) * lg).exp();
-            out[p * d + j] = ang.sin() as f32;
-            out[p * d + half + j] = ang.cos() as f32;
-        }
+    let mut out = vec![0f32; d];
+    for j in 0..half {
+        let ang = p as f64 * (-(j as f64) * lg).exp();
+        out[j] = ang.sin() as f32;
+        out[half + j] = ang.cos() as f32;
     }
     out
 }

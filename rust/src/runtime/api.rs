@@ -1,0 +1,205 @@
+//! Typed inference API shared by the PJRT and native backends.
+//!
+//! This module is the execution seam of the crate: request/response
+//! types ([`TokenBatch`], [`Logits`], [`ScoreOut`]) replace the raw
+//! `(&[i32], &[usize])` flat-buffer pairs the [`Backend`] trait used to
+//! take, and the stateful [`Session`] trait carries the prefill/decode
+//! split that makes incremental autoregressive generation expressible
+//! (the paper's inference-time resource claim: per generated token,
+//! SwitchHead computes k expert projections and one attention row per
+//! head instead of re-running the full window).
+//!
+//! Shape validation lives in the constructors, so a `TokenBatch` in
+//! hand is always internally consistent; backends still validate the
+//! model-specific constraints (window width, vocabulary range).
+
+use crate::model::tensor::MacCounter;
+use crate::util::error::{bail, Result};
+
+/// A row-major `[rows, width]` batch of token ids — the typed request
+/// unit for every inference entry point.
+#[derive(Debug, Clone)]
+pub struct TokenBatch {
+    tokens: Vec<i32>,
+    rows: usize,
+    width: usize,
+}
+
+impl TokenBatch {
+    pub fn new(tokens: Vec<i32>, rows: usize, width: usize) -> Result<TokenBatch> {
+        if rows == 0 || width == 0 {
+            bail!("TokenBatch: zero-sized shape [{rows}, {width}]");
+        }
+        if tokens.len() != rows * width {
+            bail!("TokenBatch: {} tokens != [{rows}, {width}]", tokens.len());
+        }
+        Ok(TokenBatch { tokens, rows, width })
+    }
+
+    /// Build from per-row id slices; every row must have the same width.
+    pub fn from_rows(rows: &[Vec<i32>]) -> Result<TokenBatch> {
+        let Some(first) = rows.first() else {
+            bail!("TokenBatch::from_rows: no rows");
+        };
+        let width = first.len();
+        let mut tokens = Vec::with_capacity(rows.len() * width);
+        for r in rows {
+            if r.len() != width {
+                bail!("TokenBatch::from_rows: ragged rows ({} vs {width})", r.len());
+            }
+            tokens.extend_from_slice(r);
+        }
+        TokenBatch::new(tokens, rows.len(), width)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn tokens(&self) -> &[i32] {
+        &self.tokens
+    }
+
+    /// `[rows, width]`, the shape the flat-buffer ABI expects.
+    pub fn dims(&self) -> [usize; 2] {
+        [self.rows, self.width]
+    }
+
+    pub fn row(&self, r: usize) -> &[i32] {
+        &self.tokens[r * self.width..(r + 1) * self.width]
+    }
+
+    /// Validate every id against a vocabulary size.
+    pub fn check_vocab(&self, vocab: usize) -> Result<()> {
+        for &t in &self.tokens {
+            if t < 0 || t as usize >= vocab {
+                bail!("token id {t} outside vocab {vocab}");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Next-token logits, one `[vocab]` row per batch row.
+#[derive(Debug, Clone)]
+pub struct Logits {
+    data: Vec<f32>,
+    rows: usize,
+    vocab: usize,
+}
+
+impl Logits {
+    pub fn new(data: Vec<f32>, rows: usize, vocab: usize) -> Result<Logits> {
+        if data.len() != rows * vocab {
+            bail!("Logits: {} values != [{rows}, {vocab}]", data.len());
+        }
+        Ok(Logits { data, rows, vocab })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.vocab..(r + 1) * self.vocab]
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+/// Per-position next-token log-probabilities for a scored `[rows, T+1]`
+/// window: one `[width]` row of log-probs per batch row.
+#[derive(Debug, Clone)]
+pub struct ScoreOut {
+    logp: Vec<f32>,
+    rows: usize,
+    width: usize,
+}
+
+impl ScoreOut {
+    pub fn new(logp: Vec<f32>, rows: usize, width: usize) -> Result<ScoreOut> {
+        if logp.len() != rows * width {
+            bail!("ScoreOut: {} values != [{rows}, {width}]", logp.len());
+        }
+        Ok(ScoreOut { logp, rows, width })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.logp[r * self.width..(r + 1) * self.width]
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.logp
+    }
+}
+
+/// Host-buffer inference API shared by the PJRT and native backends.
+pub trait Backend {
+    /// Per-position next-token log-probabilities for a `[rows, T+1]`
+    /// window.
+    fn score(&self, batch: &TokenBatch) -> Result<ScoreOut>;
+
+    /// Logits for the token following a `[rows, T]` window.
+    fn next_logits(&self, batch: &TokenBatch) -> Result<Logits>;
+
+    /// Open a stateful decoding session over `rows` parallel
+    /// continuations. Call [`Session::prefill`] once with the prompt
+    /// window, then [`Session::decode`] per generated token.
+    fn open_session(&self, rows: usize) -> Result<Box<dyn Session + '_>>;
+
+    /// Short backend identifier for logs/tables ("pjrt" / "native").
+    fn backend_name(&self) -> &'static str;
+}
+
+/// A stateful incremental decoder: prefill builds the per-layer decode
+/// state from the prompt, decode advances one token per row.
+///
+/// The native implementation keeps an expert-sparse KV cache (only the
+/// K/V projections of the router-selected experts are computed and
+/// stored, ring-buffered to `ctx_len` entries), so a decode step costs
+/// O(context) attention instead of an O(T^2) window recompute. The PJRT
+/// implementation falls back to windowed recompute over the compiled
+/// `next_logits` entry, so both backends serve one generation code path.
+pub trait Session {
+    /// Number of parallel rows this session decodes.
+    fn rows(&self) -> usize;
+
+    /// Tokens consumed per row so far (prompt + decoded).
+    fn consumed(&self) -> usize;
+
+    /// Consume the prompt window and return the logits for the token
+    /// that follows it. Must be called exactly once, before `decode`.
+    /// Prompts wider than the backend's context bound (`ctx_len` for
+    /// native, the compiled window width for PJRT) are rejected with an
+    /// error, never silently truncated — callers clamp first (as
+    /// `generate_ids` does).
+    fn prefill(&mut self, batch: &TokenBatch) -> Result<Logits>;
+
+    /// Advance every row by one token (`next.len() == rows()`) and
+    /// return the logits for the following token.
+    fn decode(&mut self, next: &[i32]) -> Result<Logits>;
+
+    /// Cumulative multiply-accumulate count of this session's forward
+    /// work, when the backend measures it (native only).
+    fn macs(&self) -> Option<MacCounter> {
+        None
+    }
+}

@@ -5,6 +5,11 @@
 //! path does no host<->device parameter traffic — only the token upload
 //! (a few KiB) and a 4-float metrics read per step.
 //!
+//! This module is the device-level ABI only; the typed inference API
+//! ([`super::api`]: `TokenBatch`/`Logits`/`ScoreOut`, `Backend`,
+//! `Session`) sits on top via [`super::PjrtBackend`], which converts
+//! typed requests into the uploads/executions defined here.
+//!
 //! NOTE: in offline builds the `xla` crate is replaced by
 //! [`super::xla_stub`], so `Engine::load` fails at runtime with a clear
 //! message instead of at link time; the artifact-free code path is

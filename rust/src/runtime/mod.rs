@@ -1,4 +1,4 @@
-//! Runtime layer: the two execution backends behind one host-buffer
+//! Runtime layer: the two execution backends behind one typed
 //! inference API.
 //!
 //! * **PJRT** ([`Engine`]): compiles the AOT HLO artifacts produced by
@@ -9,39 +9,29 @@
 //!   loading artifacts errors at runtime with a clear message.
 //! * **Native** ([`crate::model::NativeEngine`]): the pure-Rust
 //!   reference forward pass — artifact-free, deterministic, always
-//!   available. Carries the test tier and CPU inference.
+//!   available. Carries the test tier, CPU inference, and the
+//!   incremental decoder ([`crate::model::NativeSession`]).
 //!
-//! The [`Backend`] trait is the seam: the zero-shot scorer
-//! (`coordinator::scorer`), the generator (`coordinator::generate`) and
-//! the benches accept `&dyn Backend` and run on either engine.
-//! Training remains PJRT-only (the native backend has no autodiff).
+//! The [`Backend`] trait (see [`api`]) is the seam: the zero-shot
+//! scorer (`coordinator::scorer`), the generator
+//! (`coordinator::generate`) and the benches accept `&dyn Backend` and
+//! run on either engine. Requests and responses are typed
+//! ([`TokenBatch`], [`Logits`], [`ScoreOut`]); stateful generation goes
+//! through [`Session`]. Training remains PJRT-only (the native backend
+//! has no autodiff).
 
+pub mod api;
 pub mod checkpoint;
 pub mod engine;
 pub mod manifest;
 pub mod xla_stub;
 
+pub use api::{Backend, Logits, ScoreOut, Session, TokenBatch};
 pub use engine::{Engine, FlatBuf, StepTimes};
 pub use manifest::Manifest;
 
-use crate::util::error::{bail, Result};
-
-/// Host-buffer inference API shared by the PJRT and native backends.
-///
-/// `tokens` is a row-major i32 buffer with `dims = [B, T]`-style shape;
-/// returns host f32 buffers (see each method). Implementations validate
-/// shapes and vocabulary range.
-pub trait Backend {
-    /// Per-position next-token log-probabilities for a `[B, T+1]`
-    /// window; returns `[B * T]`.
-    fn score(&self, tokens: &[i32], dims: &[usize]) -> Result<Vec<f32>>;
-
-    /// Logits for the token following a `[B, T]` window; `[B * V]`.
-    fn next_logits(&self, tokens: &[i32], dims: &[usize]) -> Result<Vec<f32>>;
-
-    /// Short backend identifier for logs/tables ("pjrt" / "native").
-    fn backend_name(&self) -> &'static str;
-}
+use crate::data::tokenizer::PAD;
+use crate::util::error::{anyhow, bail, Result};
 
 /// [`Backend`] adapter binding a PJRT [`Engine`] to a parameter state
 /// ([`FlatBuf`]): uploads host tokens and runs the compiled entries.
@@ -54,26 +44,149 @@ impl<'a> PjrtBackend<'a> {
     pub fn new(engine: &'a Engine, flat: &'a FlatBuf) -> PjrtBackend<'a> {
         PjrtBackend { engine, flat }
     }
-}
 
-impl Backend for PjrtBackend<'_> {
-    fn score(&self, tokens: &[i32], dims: &[usize]) -> Result<Vec<f32>> {
-        let buf = self.engine.upload_i32(tokens, dims)?;
-        self.engine.score(self.flat, &buf)
-    }
-
-    fn next_logits(&self, tokens: &[i32], dims: &[usize]) -> Result<Vec<f32>> {
+    /// Open a windowed-recompute session. Inherent (as opposed to the
+    /// trait method) so the session borrows the engine/parameter state
+    /// directly — the adapter itself can be a temporary.
+    pub fn session(&self, rows: usize) -> Result<PjrtSession<'a>> {
         if !self.engine.manifest.entries.contains_key("next_logits") {
             bail!(
                 "artifact '{}' lacks the next_logits entry — rebuild with `make artifacts`",
                 self.engine.manifest.name
             );
         }
-        let buf = self.engine.upload_i32(tokens, dims)?;
-        self.engine.next_logits(self.flat, &buf)
+        if rows == 0 {
+            bail!("open_session: zero rows");
+        }
+        let width = window_width(self.engine)?;
+        Ok(PjrtSession {
+            engine: self.engine,
+            flat: self.flat,
+            rows,
+            width,
+            windows: vec![vec![PAD as i32; width]; rows],
+            consumed: 0,
+        })
+    }
+}
+
+fn run_next_logits(engine: &Engine, flat: &FlatBuf, batch: &TokenBatch) -> Result<Logits> {
+    let buf = engine.upload_i32(batch.tokens(), &batch.dims())?;
+    let out = engine.next_logits(flat, &buf)?;
+    let vocab = out.len() / batch.rows();
+    Logits::new(out, batch.rows(), vocab)
+}
+
+/// Window width of the compiled `next_logits` entry (the token input's
+/// trailing dimension).
+fn window_width(engine: &Engine) -> Result<usize> {
+    let entry = engine.manifest.entry("next_logits")?;
+    let tok = entry
+        .inputs
+        .iter()
+        .rev()
+        .find(|sig| sig.shape.len() == 2)
+        .ok_or_else(|| anyhow!("next_logits entry has no [B, T] token input"))?;
+    Ok(tok.shape[1])
+}
+
+impl Backend for PjrtBackend<'_> {
+    fn score(&self, batch: &TokenBatch) -> Result<ScoreOut> {
+        let buf = self.engine.upload_i32(batch.tokens(), &batch.dims())?;
+        let logp = self.engine.score(self.flat, &buf)?;
+        ScoreOut::new(logp, batch.rows(), batch.width() - 1)
+    }
+
+    fn next_logits(&self, batch: &TokenBatch) -> Result<Logits> {
+        if !self.engine.manifest.entries.contains_key("next_logits") {
+            bail!(
+                "artifact '{}' lacks the next_logits entry — rebuild with `make artifacts`",
+                self.engine.manifest.name
+            );
+        }
+        run_next_logits(self.engine, self.flat, batch)
+    }
+
+    fn open_session(&self, rows: usize) -> Result<Box<dyn Session + '_>> {
+        Ok(Box::new(self.session(rows)?))
     }
 
     fn backend_name(&self) -> &'static str {
         "pjrt"
+    }
+}
+
+/// [`Session`] over the compiled PJRT `next_logits` entry.
+///
+/// The AOT artifact has no incremental entry point, so this session
+/// keeps a sliding `[rows, T]` window per row (prompts left-padded /
+/// left-truncated so the newest tokens are always in-context) and
+/// recomputes the full window per decode — the legacy generation
+/// strategy, now behind the same `Session` API the native incremental
+/// decoder implements.
+pub struct PjrtSession<'a> {
+    engine: &'a Engine,
+    flat: &'a FlatBuf,
+    rows: usize,
+    width: usize,
+    windows: Vec<Vec<i32>>,
+    consumed: usize,
+}
+
+impl PjrtSession<'_> {
+    fn run(&self) -> Result<Logits> {
+        let batch = TokenBatch::from_rows(&self.windows)?;
+        run_next_logits(self.engine, self.flat, &batch)
+    }
+}
+
+impl Session for PjrtSession<'_> {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn consumed(&self) -> usize {
+        self.consumed
+    }
+
+    fn prefill(&mut self, batch: &TokenBatch) -> Result<Logits> {
+        if self.consumed > 0 {
+            bail!("prefill on a non-fresh session ({} tokens consumed)", self.consumed);
+        }
+        if batch.rows() != self.rows {
+            bail!("prefill rows {} != session rows {}", batch.rows(), self.rows);
+        }
+        // Mirror the native session's contract: an over-long prompt is
+        // an explicit error, never a silent truncation (this backend's
+        // context is the compiled window width).
+        if batch.width() > self.width {
+            bail!(
+                "prompt width {} exceeds the session context {} — truncate the prompt first",
+                batch.width(),
+                self.width
+            );
+        }
+        for (r, w) in self.windows.iter_mut().enumerate() {
+            let row = batch.row(r);
+            let dst = self.width - row.len();
+            w[dst..].copy_from_slice(row);
+        }
+        self.consumed = batch.width();
+        self.run()
+    }
+
+    fn decode(&mut self, next: &[i32]) -> Result<Logits> {
+        if self.consumed == 0 {
+            bail!("decode before prefill");
+        }
+        if next.len() != self.rows {
+            bail!("decode got {} tokens for {} rows", next.len(), self.rows);
+        }
+        for (w, &id) in self.windows.iter_mut().zip(next) {
+            w.remove(0);
+            w.push(id);
+        }
+        self.consumed += 1;
+        self.run()
     }
 }

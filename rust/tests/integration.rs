@@ -10,7 +10,7 @@ use switchhead::config::ModelConfig;
 use switchhead::coordinator::analysis;
 use switchhead::data::listops;
 use switchhead::macs;
-use switchhead::runtime::{checkpoint, Engine, Manifest};
+use switchhead::runtime::{checkpoint, Engine, Manifest, TokenBatch};
 use switchhead::util::json::Json;
 use switchhead::util::rng::Pcg;
 
@@ -236,9 +236,8 @@ fn attention_maps_are_row_stochastic() {
     let engine = load_engine("tiny-sh", &["init", "attn"]);
     let flat = engine.init(3).unwrap();
     let (probe, _) = analysis::induction_probe(&cfg, 4);
-    let arrays =
-        analysis::fetch_attention(&engine, &flat, &probe, &[cfg.batch_size, cfg.seq_len + 1])
-            .unwrap();
+    let probe = TokenBatch::new(probe, cfg.batch_size, cfg.seq_len + 1).unwrap();
+    let arrays = analysis::fetch_attention(&engine, &flat, &probe).unwrap();
     let maps = arrays.iter().find(|a| a.name.contains("attn")).unwrap();
     // [L, B, H, T, Tk]: every row sums to 1 (within fp tolerance).
     let tk = *maps.shape.last().unwrap();
@@ -259,9 +258,8 @@ fn gate_outputs_present_for_switchhead() {
     let cfg = load_cfg("tiny-sh");
     let flat = engine.init(3).unwrap();
     let (probe, _) = analysis::induction_probe(&cfg, 4);
-    let arrays =
-        analysis::fetch_attention(&engine, &flat, &probe, &[cfg.batch_size, cfg.seq_len + 1])
-            .unwrap();
+    let probe = TokenBatch::new(probe, cfg.batch_size, cfg.seq_len + 1).unwrap();
+    let arrays = analysis::fetch_attention(&engine, &flat, &probe).unwrap();
     let gates: Vec<_> = arrays.iter().filter(|a| a.name.contains("gate")).collect();
     // source + destination router per head.
     assert_eq!(gates.len(), 2 * cfg.n_heads, "expected per-head src+dst gates");
