@@ -14,12 +14,18 @@ CARGO ?= cargo
 CLIPPY_ALLOW = -A clippy::needless_range_loop -A clippy::too_many_arguments \
                -A clippy::type_complexity -A clippy::manual_memcpy
 
-.PHONY: check build test lint artifacts smoke bench-tables clean
+.PHONY: check build test lint artifacts smoke bench bench-tables clean
 
-## Tier-1: build + full test suite + lint gate, artifact-free.
+## Tier-1: build + full test suite + lint gate, artifact-free. The
+## golden-vector and decode suites re-run under PALLAS_THREADS=4 (the
+## kernels must be bit-identical at any thread count), and a 1-thread
+## step_latency smoke keeps the bench harness and its JSON emitter
+## compiling and running.
 check:
 	$(CARGO) build --release
 	$(CARGO) test -q
+	PALLAS_THREADS=4 $(CARGO) test -q --test native --test decode
+	PALLAS_THREADS=1 SWITCHHEAD_BENCH_SMOKE=1 $(CARGO) bench --bench step_latency
 	$(MAKE) lint
 
 build:
@@ -33,10 +39,16 @@ lint:
 	$(CARGO) fmt --all --check
 	$(CARGO) clippy --all-targets -- -D warnings $(CLIPPY_ALLOW)
 
-## Native-backend latency smoke (no artifacts needed): step_latency
-## falls back to timing NativeEngine score/next_logits per config.
-smoke:
+## Full perf run (artifact-free; PJRT rows only when artifacts exist):
+## step_latency with the decode, thread-scaling (1/2/4) and
+## kernel-microbench tables; emits BENCH_step_latency.json for the
+## cross-PR perf trajectory. Threads default to PALLAS_THREADS (or the
+## machine's available parallelism).
+bench: build
 	$(CARGO) bench --bench step_latency
+
+## Historical alias for the artifact-free latency run.
+smoke: bench
 
 ## Analytic paper tables, artifact-free (--quick is forced when
 ## artifacts/ is missing; measured rows need `make artifacts` first).

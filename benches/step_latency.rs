@@ -11,13 +11,31 @@
 //! produces latency rows. Set SWITCHHEAD_BENCH_NATIVE=0 to disable the
 //! fallback. The decode table always runs on the native backend (the
 //! incremental KV-cache path only exists there).
+//!
+//! Since the kernels PR the harness also measures the parallel compute
+//! layer: a thread-scaling table (prefill / decode at 1, 2, 4 threads
+//! via `kernels::set_threads`) and a kernel-level microbench (dense vs
+//! expert-grouped MoE matmul GFLOP/s), and every run emits
+//! `BENCH_step_latency.json` so the perf trajectory is diffable across
+//! PRs. `SWITCHHEAD_BENCH_SMOKE=1` shrinks everything to a 1-thread
+//! sanity pass (wired into `make check`).
 use std::path::Path;
 
 use switchhead::bench::{fmt_si, time, Table};
 use switchhead::config::{ModelConfig, Task};
+use switchhead::kernels;
 use switchhead::model::NativeEngine;
 use switchhead::runtime::{Backend, Engine, Session, TokenBatch};
+use switchhead::util::json::Json;
 use switchhead::util::rng::Pcg;
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn str_(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
 
 /// Native-backend smoke rows (artifact-free).
 fn bench_native(cfg: &ModelConfig, name: &str, iters: usize) {
@@ -116,10 +134,28 @@ fn bench_config(name: &str, iters: usize) {
     }
 }
 
+fn half_prompt(cfg: &ModelConfig, rng: &mut Pcg) -> TokenBatch {
+    let b = cfg.batch_size;
+    let w = (cfg.seq_len / 2).max(1);
+    let tok: Vec<i32> = (0..b * w).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+    TokenBatch::new(tok, b, w).unwrap()
+}
+
+/// Greedy next tokens from the last logits (per batch row).
+fn greedy(logits: &switchhead::runtime::Logits, b: usize) -> Vec<i32> {
+    (0..b)
+        .map(|row| {
+            let l = logits.row(row);
+            l.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).map(|(i, _)| i as i32).unwrap()
+        })
+        .collect()
+}
+
 /// Decode-throughput table: per config, wall-clock and MAC cost of the
 /// Session prefill/decode path vs. the legacy full-window recompute —
 /// the measurable form of the paper's per-token inference claim.
-fn bench_decode(names: &[&str], iters: usize) {
+/// Returns the rows as JSON objects for BENCH_step_latency.json.
+fn bench_decode(names: &[&str], iters: usize) -> Vec<Json> {
     let mut table = Table::new(
         "Session decode throughput (native backend, tokens/sec per batch row)",
         &[
@@ -133,6 +169,7 @@ fn bench_decode(names: &[&str], iters: usize) {
             "MACs/tok recompute",
         ],
     );
+    let mut json_rows = Vec::new();
     for name in names {
         let cfg = match ModelConfig::load(&format!("configs/{name}.json")) {
             Ok(c) => c,
@@ -148,8 +185,7 @@ fn bench_decode(names: &[&str], iters: usize) {
         let mut rng = Pcg::new(2, 2);
         let b = cfg.batch_size;
         let t = cfg.seq_len;
-        let prompt: Vec<i32> = (0..b * (t / 2)).map(|_| rng.below(cfg.vocab_size) as i32).collect();
-        let prompt = TokenBatch::new(prompt, b, t / 2).unwrap();
+        let prompt = half_prompt(&cfg, &mut rng);
 
         // Prefill latency (fresh session each iteration).
         let r_prefill = time(&format!("{name}/prefill"), 1, iters.min(10), || {
@@ -164,16 +200,7 @@ fn bench_decode(names: &[&str], iters: usize) {
         let macs_before = session.macs().unwrap().total();
         let mut steps = 0u64;
         let r_decode = time(&format!("{name}/decode"), 2, iters, || {
-            let next: Vec<i32> = (0..b)
-                .map(|row| {
-                    let l = logits.row(row);
-                    l.iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.total_cmp(b.1))
-                        .map(|(i, _)| i as i32)
-                        .unwrap()
-                })
-                .collect();
+            let next = greedy(&logits, b);
             logits = session.decode(&next).unwrap();
             steps += 1;
         });
@@ -198,17 +225,177 @@ fn bench_decode(names: &[&str], iters: usize) {
             fmt_si(decode_macs_tok),
             fmt_si(full_macs_tok),
         ]);
+        json_rows.push(Json::from_pairs(vec![
+            ("config", str_(name)),
+            ("prefill_ms", num(r_prefill.mean_ms)),
+            ("decode_ms_tok", num(r_decode.mean_ms)),
+            ("recompute_ms_tok", num(r_full.mean_ms)),
+            ("decode_tok_s", num(1000.0 / r_decode.mean_ms.max(1e-9))),
+            ("macs_tok_decode", num(decode_macs_tok)),
+            ("macs_tok_recompute", num(full_macs_tok)),
+        ]));
     }
     table.print();
+    json_rows
+}
+
+/// Thread-scaling table: session prefill / steady-state decode at each
+/// thread count, same seeds — the wall-clock form of the MoE dispatch
+/// and blocked-kernel win. Returns JSON rows.
+fn bench_thread_scaling(names: &[&str], threads_list: &[usize], iters: usize) -> Vec<Json> {
+    let mut table = Table::new(
+        "Thread scaling (kernels::set_threads; identical bits at every count)",
+        &["config", "threads", "prefill ms", "decode ms/tok", "prefill speedup vs 1T"],
+    );
+    let mut json_rows = Vec::new();
+    for name in names {
+        let cfg = match ModelConfig::load(&format!("configs/{name}.json")) {
+            Ok(c) => c,
+            Err(e) => {
+                println!("SKIP {name}: {e:#}");
+                continue;
+            }
+        };
+        if cfg.task != Task::Lm {
+            continue;
+        }
+        let engine = NativeEngine::new(&cfg, 42).unwrap();
+        let b = cfg.batch_size;
+        let mut base_prefill = f64::NAN;
+        for &threads in threads_list {
+            kernels::set_threads(threads);
+            let mut rng = Pcg::new(2, 2);
+            let prompt = half_prompt(&cfg, &mut rng);
+            let r_prefill = time(&format!("{name}/{threads}T prefill"), 1, iters.min(10), || {
+                let mut s = engine.open_session(b).unwrap();
+                let _ = s.prefill(&prompt).unwrap();
+            });
+            let mut session = engine.open_session(b).unwrap();
+            let mut logits = session.prefill(&prompt).unwrap();
+            let r_decode = time(&format!("{name}/{threads}T decode"), 2, iters, || {
+                let next = greedy(&logits, b);
+                logits = session.decode(&next).unwrap();
+            });
+            if threads == threads_list[0] {
+                base_prefill = r_prefill.mean_ms;
+            }
+            let speedup = base_prefill / r_prefill.mean_ms.max(1e-9);
+            table.push(vec![
+                (*name).into(),
+                format!("{threads}"),
+                format!("{:.3}", r_prefill.mean_ms),
+                format!("{:.3}", r_decode.mean_ms),
+                format!("{speedup:.2}x"),
+            ]);
+            json_rows.push(Json::from_pairs(vec![
+                ("config", str_(name)),
+                ("threads", num(threads as f64)),
+                ("prefill_ms", num(r_prefill.mean_ms)),
+                ("decode_ms_tok", num(r_decode.mean_ms)),
+                ("prefill_speedup_vs_1t", num(speedup)),
+            ]));
+        }
+    }
+    table.print();
+    json_rows
+}
+
+/// Kernel-level microbench: dense blocked matmul vs expert-grouped MoE
+/// dispatch, GFLOP/s per thread count — the expert-grouping win in
+/// isolation from the model. Returns JSON rows.
+fn bench_kernels(threads_list: &[usize], iters: usize) -> Vec<Json> {
+    // Shapes sized like a mid-size token batch so the grouped dispatch
+    // has real buckets to exploit: n tokens of width d projected to m.
+    let (n, d, m) = (512usize, 256usize, 256usize);
+    let (ne, k) = (4usize, 2usize);
+    let mut rng = Pcg::new(3, 3);
+    let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+    let w: Vec<f32> = (0..d * m).map(|_| rng.normal() as f32).collect();
+    let experts: Vec<Vec<f32>> =
+        (0..ne).map(|_| (0..d * m).map(|_| rng.normal() as f32).collect()).collect();
+    let idx: Vec<usize> = (0..n * k).map(|_| rng.below(ne)).collect();
+    let gate: Vec<f32> = (0..n * k).map(|_| (rng.normal() as f32).abs() + 0.1).collect();
+
+    let mut table = Table::new(
+        "Kernel microbench (dense blocked matmul vs expert-grouped MoE dispatch)",
+        &["kernel", "threads", "GFLOP/s", "ms/call"],
+    );
+    let mut json_rows = Vec::new();
+    let dense_flops = 2.0 * (n * d * m) as f64;
+    let moe_flops = 2.0 * (n * k * d * m) as f64;
+    let mut out = vec![0f32; n * m];
+    for &threads in threads_list {
+        kernels::set_threads(threads);
+        let r = time(&format!("kernel/dense {threads}T"), 2, iters.min(20), || {
+            kernels::matmul_into(&mut out, &x, &w, n, d, m);
+        });
+        let gflops = dense_flops / (r.mean_ms / 1000.0) / 1e9;
+        table.push(vec![
+            "dense matmul".into(),
+            format!("{threads}"),
+            format!("{gflops:.2}"),
+            format!("{:.3}", r.mean_ms),
+        ]);
+        json_rows.push(Json::from_pairs(vec![
+            ("kernel", str_("dense_matmul")),
+            ("threads", num(threads as f64)),
+            ("gflops", num(gflops)),
+            ("ms_per_call", num(r.mean_ms)),
+        ]));
+        let r = time(&format!("kernel/moe {threads}T"), 2, iters.min(20), || {
+            kernels::moe_matmul_into(&mut out, &x, &experts, d, m, &idx, &gate, k);
+        });
+        let gflops = moe_flops / (r.mean_ms / 1000.0) / 1e9;
+        table.push(vec![
+            "moe grouped".into(),
+            format!("{threads}"),
+            format!("{gflops:.2}"),
+            format!("{:.3}", r.mean_ms),
+        ]);
+        json_rows.push(Json::from_pairs(vec![
+            ("kernel", str_("moe_grouped_matmul")),
+            ("threads", num(threads as f64)),
+            ("gflops", num(gflops)),
+            ("ms_per_call", num(r.mean_ms)),
+        ]));
+    }
+    table.print();
+    json_rows
 }
 
 fn main() {
+    let smoke = std::env::var("SWITCHHEAD_BENCH_SMOKE").as_deref() == Ok("1");
     let iters: usize = std::env::var("SWITCHHEAD_BENCH_ITERS")
         .ok()
         .and_then(|s| s.parse().ok())
-        .unwrap_or(30);
+        .unwrap_or(if smoke { 2 } else { 30 });
+    let threads_list: &[usize] = if smoke { &[1] } else { &[1, 2, 4] };
+    // Capture before any set_threads so the JSON records the
+    // PALLAS_THREADS / available_parallelism default of this host.
+    let default_threads = kernels::threads();
+
     for name in ["tiny-dense", "tiny-sh", "tiny-moa", "tiny-switchall"] {
         bench_config(name, iters);
     }
-    bench_decode(&["tiny-dense", "tiny-sh", "tiny-rope-sh", "tiny-switchall"], iters);
+    let decode = bench_decode(&["tiny-dense", "tiny-sh", "tiny-rope-sh", "tiny-switchall"], iters);
+    let scaling = bench_thread_scaling(&["tiny-sh", "tiny-dense"], threads_list, iters);
+    let kern = bench_kernels(threads_list, iters);
+
+    let out = Json::from_pairs(vec![
+        ("bench", str_("step_latency")),
+        ("iters", num(iters as f64)),
+        ("smoke", Json::Bool(smoke)),
+        ("threads_default", num(default_threads as f64)),
+        ("decode", Json::Arr(decode)),
+        ("thread_scaling", Json::Arr(scaling)),
+        ("kernels", Json::Arr(kern)),
+    ]);
+    // Smoke runs land under target/ (gitignored) so `make check` never
+    // dirties the tree or clobbers a real `make bench` trajectory file.
+    let path =
+        if smoke { "target/BENCH_step_latency.smoke.json" } else { "BENCH_step_latency.json" };
+    match std::fs::write(path, out.to_string_pretty() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\nWARN: could not write {path}: {e}"),
+    }
 }

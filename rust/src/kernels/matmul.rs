@@ -1,0 +1,76 @@
+//! Cache-blocked, row/column-parallel dense matmul.
+//!
+//! The kernel tiles over output rows (`n`) and columns (`m`) only; the
+//! `kk` reduction for any given output element runs start-to-finish in
+//! ascending order into a single accumulator — exactly the order of
+//! [`super::reference::matmul_ref`] — so results are **bit-identical**
+//! to the scalar reference at every tile size and thread count (f32
+//! addition is order-sensitive; the tiling deliberately never reorders
+//! or splits a reduction).
+
+use crate::kernels::pool::{par_rows, threads};
+use crate::kernels::SendPtr;
+
+/// Column-tile width: keeps one output tile plus one weight panel row
+/// L1-resident while the full `kk` reduction streams over them.
+pub const TILE_COLS: usize = 256;
+
+/// `out[n, m] = x[n, d] @ w[d, m]` (out is fully overwritten).
+///
+/// Parallelizes over rows when there are enough of them, otherwise
+/// over column tiles (the wide-but-short shape of a decode step's
+/// vocab-head product). Bit-identical to the scalar reference.
+pub fn matmul_into(out: &mut [f32], x: &[f32], w: &[f32], n: usize, d: usize, m: usize) {
+    assert_eq!(x.len(), n * d, "matmul lhs size");
+    assert_eq!(w.len(), d * m, "matmul rhs size");
+    assert_eq!(out.len(), n * m, "matmul out size");
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    if n >= 2 * threads() || m <= TILE_COLS {
+        par_rows(n, d * m, |lo, hi| {
+            for i in lo..hi {
+                // SAFETY: rows `lo..hi` are disjoint across chunks.
+                let or = unsafe { out_ptr.row(i * m, m) };
+                row_matmul(or, &x[i * d..(i + 1) * d], w, m);
+            }
+        });
+    } else {
+        // Few rows, wide output: shard the column tiles instead.
+        let tiles = m.div_ceil(TILE_COLS);
+        par_rows(tiles, n * d * TILE_COLS, |tlo, thi| {
+            for ti in tlo..thi {
+                let c0 = ti * TILE_COLS;
+                let cb = TILE_COLS.min(m - c0);
+                for i in 0..n {
+                    // SAFETY: (row, column-tile) blocks are disjoint.
+                    let or = unsafe { out_ptr.row(i * m + c0, cb) };
+                    or.fill(0.0);
+                    let xr = &x[i * d..(i + 1) * d];
+                    for (kk, &xv) in xr.iter().enumerate() {
+                        let wr = &w[kk * m + c0..kk * m + c0 + cb];
+                        for (o, &wv) in or.iter_mut().zip(wr) {
+                            *o += xv * wv;
+                        }
+                    }
+                }
+            }
+        });
+    }
+}
+
+/// One output row: `or[m] = xr[d] @ w[d, m]`, column-tiled, `kk`
+/// ascending per element. Shared with the MoE kernel's per-pair rows.
+pub(crate) fn row_matmul(or: &mut [f32], xr: &[f32], w: &[f32], m: usize) {
+    or.fill(0.0);
+    let mut c0 = 0;
+    while c0 < m {
+        let cb = TILE_COLS.min(m - c0);
+        for (kk, &xv) in xr.iter().enumerate() {
+            let wr = &w[kk * m + c0..kk * m + c0 + cb];
+            let ot = &mut or[c0..c0 + cb];
+            for (o, &wv) in ot.iter_mut().zip(wr) {
+                *o += xv * wv;
+            }
+        }
+        c0 += cb;
+    }
+}

@@ -1,0 +1,88 @@
+//! Parallel blocked compute kernels for the native backend.
+//!
+//! PR 1/2 made the native backend numerically complete and PR 2 made
+//! decoding MAC-cheap, but every op still ran as a single-threaded
+//! naive triple loop — measured MACs/token improvements did not
+//! translate into wall-clock milliseconds. This subsystem is the
+//! missing execution layer (zero external dependencies, consistent
+//! with the offline registry):
+//!
+//! * [`pool`] — a persistent worker pool ([`par_rows`]) sized by the
+//!   `PALLAS_THREADS` env var (or `available_parallelism`), reused
+//!   across calls, with runtime resizing ([`set_threads`]) for
+//!   thread-scaling benches.
+//! * [`matmul`] — cache-blocked dense matmul ([`matmul_into`]), tiled
+//!   over rows/columns only so every output element's `kk` reduction
+//!   order is untouched.
+//! * [`moe`] — expert-grouped MoE dispatch ([`moe_matmul_into`]):
+//!   (token, slot) pairs bucketed per selected expert (the Switch
+//!   Transformers batching argument), one grouped blocked product per
+//!   expert into a staging buffer, gates applied in original order.
+//! * [`scratch`] — thread-local buffer arena replacing the hot path's
+//!   per-op `Vec` allocations.
+//! * [`reference`] — the original scalar kernels, kept as the oracle.
+//!
+//! # The bit-identity contract
+//!
+//! f32 addition is order-sensitive, and the checked-in golden vectors
+//! (`rust/tests/golden/`) pin the native backend to the numpy twin at
+//! scalar-reference operation order. Every kernel here therefore
+//! shards and tiles **without reordering any per-element reduction**:
+//! results are bit-identical to [`reference`] at every tile size and
+//! thread count. `rust/tests/kernels.rs` enforces this property over
+//! odd shapes, duplicate expert selections and 1-8 threads.
+
+pub mod matmul;
+pub mod moe;
+pub mod pool;
+pub mod reference;
+pub mod scratch;
+
+pub use matmul::matmul_into;
+pub use moe::moe_matmul_into;
+pub use pool::{par_rows, set_threads, threads, PAR_MIN_WORK};
+
+/// Raw mutable base pointer that may cross thread boundaries so pool
+/// chunks can write disjoint regions of one output buffer.
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr(pub *mut f32);
+
+// SAFETY: every use hands each pool chunk a region disjoint from all
+// other chunks' regions (callers assert which index ranges they own),
+// and the buffer outlives the blocking `par_rows` call.
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+impl SendPtr {
+    /// View `len` elements starting at `off` as a mutable slice.
+    ///
+    /// # Safety
+    /// The `[off, off + len)` region must be in bounds of the original
+    /// buffer and not concurrently accessed by any other chunk.
+    pub(crate) unsafe fn row(self, off: usize, len: usize) -> &'static mut [f32] {
+        std::slice::from_raw_parts_mut(self.0.add(off), len)
+    }
+}
+
+/// Shard a mutable row-major buffer over its rows: calls
+/// `f(row_index, row_slice)` for every `row_len`-sized row, in
+/// parallel chunks. The per-row work estimate drives the serial
+/// cutoff, exactly as in [`par_rows`].
+pub fn par_rows_mut<F: Fn(usize, &mut [f32]) + Sync>(
+    buf: &mut [f32],
+    row_len: usize,
+    work_per_row: usize,
+    f: F,
+) {
+    debug_assert!(row_len > 0 && buf.len() % row_len == 0);
+    let rows = buf.len() / row_len;
+    let ptr = SendPtr(buf.as_mut_ptr());
+    par_rows(rows, work_per_row.max(row_len), |lo, hi| {
+        for i in lo..hi {
+            // SAFETY: rows `lo..hi` are disjoint across chunks and the
+            // buffer outlives this blocking call.
+            let row = unsafe { ptr.row(i * row_len, row_len) };
+            f(i, row);
+        }
+    });
+}

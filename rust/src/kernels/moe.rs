@@ -1,0 +1,92 @@
+//! Expert-grouped MoE projection dispatch.
+//!
+//! The scalar reference walks tokens one by one, paying a cold read of
+//! the selected expert matrix per (token, slot) pair. This kernel
+//! applies the Switch Transformers batching argument (Fedus et al.,
+//! 2021) to SwitchHead's attention experts: bucket the pairs by
+//! selected expert with a counting sort, run the per-pair products
+//! grouped so consecutive work shares one resident expert matrix, and
+//! scatter into a per-pair staging buffer. Gates are then applied in
+//! the original (token, slot) order, which keeps every output element's
+//! f32 accumulation order identical to
+//! [`super::reference::moe_matmul_ref`] — bit-identical results, just
+//! grouped for locality and sharded across the pool.
+
+use crate::kernels::matmul::row_matmul;
+use crate::kernels::pool::par_rows;
+use crate::kernels::{scratch, SendPtr};
+
+/// MoE projection (paper Eq. 9-10) into `out[n, cols]` (overwritten):
+/// per token `i`, `sum_j gate[i,j] * (x_i @ experts[idx[i,j]])`.
+/// `x` is `[n, rows]`; each expert matrix is `[rows, cols]`;
+/// `idx`/`gate` are `[n, k]` flattened.
+pub fn moe_matmul_into(
+    out: &mut [f32],
+    x: &[f32],
+    experts: &[Vec<f32>],
+    rows: usize,
+    cols: usize,
+    idx: &[usize],
+    gate: &[f32],
+    k: usize,
+) {
+    let n = x.len() / rows;
+    let pairs = n * k;
+    assert_eq!(idx.len(), pairs, "moe idx size");
+    assert_eq!(gate.len(), pairs, "moe gate size");
+    assert_eq!(out.len(), n * cols, "moe out size");
+
+    // Counting sort of (token, slot) pairs by selected expert — the
+    // grouped dispatch order. Stable, so within one expert the pairs
+    // stay in token order (good x-side locality too).
+    let ne = experts.len();
+    let mut cursor = vec![0usize; ne + 1];
+    for &e in idx {
+        cursor[e + 1] += 1;
+    }
+    for e in 0..ne {
+        cursor[e + 1] += cursor[e];
+    }
+    let mut order = vec![0u32; pairs];
+    for (p, &e) in idx.iter().enumerate() {
+        order[cursor[e]] = p as u32;
+        cursor[e] += 1;
+    }
+
+    // Stage the ungated per-pair products: one blocked row product per
+    // (token, slot) pair, grouped by expert. Chunks of the grouped
+    // order are contiguous, so a chunk mostly reuses one expert matrix.
+    let mut tmp = scratch::take(pairs * cols);
+    let tmp_ptr = SendPtr(tmp.as_mut_ptr());
+    par_rows(pairs, rows * cols, |lo, hi| {
+        for &p in &order[lo..hi] {
+            let p = p as usize;
+            let i = p / k;
+            // SAFETY: each pair id appears exactly once in `order`, so
+            // staging rows are disjoint across chunks.
+            let or = unsafe { tmp_ptr.row(p * cols, cols) };
+            row_matmul(or, &x[i * rows..(i + 1) * rows], &experts[idx[p]], cols);
+        }
+    });
+
+    // Gate application in the original (token, slot) order — the exact
+    // per-element accumulation order of the scalar reference.
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    let tmp_ref = &tmp;
+    par_rows(n, k * cols, |lo, hi| {
+        for i in lo..hi {
+            // SAFETY: output rows `lo..hi` are disjoint across chunks.
+            let or = unsafe { out_ptr.row(i * cols, cols) };
+            or.fill(0.0);
+            for j in 0..k {
+                let p = i * k + j;
+                let g = gate[p];
+                let tr = &tmp_ref[p * cols..(p + 1) * cols];
+                for (o, &tv) in or.iter_mut().zip(tr) {
+                    *o += g * tv;
+                }
+            }
+        }
+    });
+    scratch::put(tmp);
+}

@@ -1,0 +1,339 @@
+//! Persistent worker pool behind [`par_rows`] — the parallel substrate
+//! of every compute kernel in this crate.
+//!
+//! # Design
+//!
+//! A process-global pool of parked worker threads (created lazily, one
+//! pool at a time, replaced by [`set_threads`]) executes one sharded
+//! job at a time. A job is a `Fn(lo, hi)` closure called on disjoint
+//! row ranges; the submitting thread participates in chunk execution
+//! and blocks until every chunk is done, so the closure may borrow
+//! stack data freely — the pool erases the borrow lifetime at
+//! submission, and the blocking `run` call is what makes that sound.
+//!
+//! Thread count comes from the `PALLAS_THREADS` env var, falling back
+//! to `available_parallelism` (capped at [`MAX_DEFAULT_THREADS`]);
+//! benches and tests override it at runtime with [`set_threads`].
+//! Small jobs (below [`PAR_MIN_WORK`] multiply-accumulates) and jobs
+//! issued from inside a pool worker run inline on the calling thread,
+//! so nesting degrades to serial execution instead of deadlocking.
+
+use std::cell::Cell;
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::thread::JoinHandle;
+
+/// Minimum estimated multiply-accumulates (`rows * work_per_row`)
+/// before [`par_rows`] shards a job; below this, dispatch latency
+/// outweighs the parallel win and the call runs inline.
+pub const PAR_MIN_WORK: usize = 1 << 14;
+
+/// Cap on the default thread count when `PALLAS_THREADS` is unset —
+/// past this, the host-side kernels are memory-bound anyway.
+pub const MAX_DEFAULT_THREADS: usize = 16;
+
+/// Chunk oversubscription factor: jobs split into `threads * OVERSUB`
+/// ranges so uneven rows (e.g. ragged MoE buckets) load-balance.
+const OVERSUB: usize = 4;
+
+/// One sharded job: a borrowed range closure with its lifetime erased
+/// to `'static` at submission. Sound because `Pool::run` blocks until
+/// all chunks complete, keeping the referent alive for every call.
+#[derive(Clone, Copy)]
+struct Job {
+    task: &'static (dyn Fn(usize, usize) + Sync),
+    rows: usize,
+    chunks: usize,
+}
+
+struct Slot {
+    /// Monotone job counter; lets a submitter recognize that its job
+    /// finished even if another was installed right after.
+    epoch: u64,
+    job: Option<Job>,
+    /// Next unclaimed chunk index of the current job.
+    next_chunk: usize,
+    /// Threads currently executing a chunk of the current job.
+    active: usize,
+    /// Epoch of a job that had a panicking chunk, until its submitter
+    /// re-raises it (epoch-keyed so interleaved jobs can't swallow it).
+    panic_epoch: Option<u64>,
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    /// Signals workers: a job with unclaimed chunks (or shutdown).
+    work: Condvar,
+    /// Signals submitters: the current job completed.
+    done: Condvar,
+}
+
+/// A fixed-size worker pool; see the module docs. One lives in the
+/// process-global slot behind [`par_rows`]/[`set_threads`].
+pub struct Pool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl Pool {
+    /// Build a pool totalling `threads` executors: the submitting
+    /// thread plus `threads - 1` parked workers.
+    pub fn new(threads: usize) -> Pool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot {
+                epoch: 0,
+                job: None,
+                next_chunk: 0,
+                active: 0,
+                panic_epoch: None,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (1..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("pallas-worker-{i}"))
+                    .spawn(move || worker(shared))
+                    .expect("spawn pallas worker")
+            })
+            .collect();
+        Pool { shared, handles, threads }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute `task` over `0..rows` split into `chunks` disjoint
+    /// ranges, on the pool workers plus the calling thread. Blocks
+    /// until every chunk has run; re-raises worker panics.
+    pub fn run(&self, rows: usize, chunks: usize, task: &(dyn Fn(usize, usize) + Sync)) {
+        // SAFETY: lifetime erasure only — this method does not return
+        // until the job's last chunk has finished executing, so the
+        // borrow outlives every call made through the erased reference.
+        let task: &'static (dyn Fn(usize, usize) + Sync) = unsafe { std::mem::transmute(task) };
+        let shared = &*self.shared;
+        let mut slot = shared.slot.lock().unwrap();
+        // One job at a time: queue behind any job already in flight.
+        while slot.job.is_some() {
+            slot = shared.done.wait(slot).unwrap();
+        }
+        slot.epoch += 1;
+        let my_epoch = slot.epoch;
+        slot.job = Some(Job { task, rows, chunks });
+        slot.next_chunk = 0;
+        shared.work.notify_all();
+        // Participate: claim chunks alongside the workers.
+        loop {
+            let job = match slot.job {
+                Some(j) if slot.epoch == my_epoch && slot.next_chunk < j.chunks => j,
+                _ => break,
+            };
+            slot = execute_one_chunk(shared, slot, job);
+        }
+        while slot.epoch == my_epoch && slot.job.is_some() {
+            slot = shared.done.wait(slot).unwrap();
+        }
+        if slot.panic_epoch == Some(my_epoch) {
+            slot.panic_epoch = None;
+            drop(slot);
+            panic!("kernel chunk panicked on a pool worker");
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shared.slot.lock().unwrap().shutdown = true;
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Claim and run one chunk of `job`. Takes and returns the slot guard
+/// so callers keep their wait loops race-free.
+fn execute_one_chunk<'a>(
+    shared: &'a Shared,
+    mut slot: std::sync::MutexGuard<'a, Slot>,
+    job: Job,
+) -> std::sync::MutexGuard<'a, Slot> {
+    let chunk = slot.next_chunk;
+    slot.next_chunk += 1;
+    slot.active += 1;
+    drop(slot);
+    let (lo, hi) = chunk_bounds(chunk, job.chunks, job.rows);
+    // The submitter blocks in `Pool::run` until this job's last chunk
+    // completes, so the lifetime-erased closure is alive here.
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (job.task)(lo, hi)));
+    let mut slot = shared.slot.lock().unwrap();
+    slot.active -= 1;
+    if result.is_err() {
+        slot.panic_epoch = Some(slot.epoch);
+    }
+    if slot.active == 0 && slot.next_chunk >= job.chunks {
+        // Last finisher retires the job and wakes submitters.
+        slot.job = None;
+        shared.done.notify_all();
+    }
+    slot
+}
+
+fn worker(shared: Arc<Shared>) {
+    IN_POOL.with(|f| f.set(true));
+    let mut slot = shared.slot.lock().unwrap();
+    loop {
+        if slot.shutdown {
+            return;
+        }
+        let job = match slot.job {
+            Some(j) if slot.next_chunk < j.chunks => j,
+            _ => {
+                slot = shared.work.wait(slot).unwrap();
+                continue;
+            }
+        };
+        slot = execute_one_chunk(&shared, slot, job);
+    }
+}
+
+/// Even split of `rows` into `chunks` ranges (first ranges get the
+/// remainder).
+fn chunk_bounds(chunk: usize, chunks: usize, rows: usize) -> (usize, usize) {
+    (chunk * rows / chunks, (chunk + 1) * rows / chunks)
+}
+
+thread_local! {
+    /// True while this thread is executing inside a pool job; nested
+    /// `par_rows` calls then run inline instead of re-entering the pool.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+static POOL: RwLock<Option<Arc<Pool>>> = RwLock::new(None);
+
+fn default_threads() -> usize {
+    match std::env::var("PALLAS_THREADS").ok().and_then(|s| s.parse::<usize>().ok()) {
+        Some(n) if n >= 1 => n.min(256),
+        _ => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(MAX_DEFAULT_THREADS),
+    }
+}
+
+fn current_pool() -> Arc<Pool> {
+    if let Some(p) = POOL.read().unwrap().as_ref() {
+        return Arc::clone(p);
+    }
+    let mut w = POOL.write().unwrap();
+    if w.is_none() {
+        *w = Some(Arc::new(Pool::new(default_threads())));
+    }
+    Arc::clone(w.as_ref().unwrap())
+}
+
+/// Number of threads the kernel layer currently uses (creating the
+/// pool from `PALLAS_THREADS` / `available_parallelism` if needed).
+pub fn threads() -> usize {
+    current_pool().threads()
+}
+
+/// Replace the global pool with an `n`-thread one. Benches use this
+/// for thread-scaling sweeps; results are bit-identical at any count.
+pub fn set_threads(n: usize) {
+    *POOL.write().unwrap() = Some(Arc::new(Pool::new(n.max(1))));
+}
+
+/// Shard a row-major operation over its output rows: calls `f(lo, hi)`
+/// on disjoint subranges of `0..rows` covering it exactly once.
+/// `work_per_row` is an estimated multiply-accumulate count per row;
+/// jobs below [`PAR_MIN_WORK`] total (and nested calls) run inline.
+/// Every shard executes the same per-element arithmetic as a serial
+/// `f(0, rows)` call, so results are bit-identical at any thread count.
+pub fn par_rows<F: Fn(usize, usize) + Sync>(rows: usize, work_per_row: usize, f: F) {
+    if rows == 0 {
+        return;
+    }
+    if IN_POOL.with(|c| c.get()) || rows.saturating_mul(work_per_row) < PAR_MIN_WORK {
+        f(0, rows);
+        return;
+    }
+    let pool = current_pool();
+    if pool.threads() <= 1 {
+        f(0, rows);
+        return;
+    }
+    let chunks = (pool.threads() * OVERSUB).min(rows);
+    IN_POOL.with(|c| c.set(true));
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pool.run(rows, chunks, &f);
+    }));
+    IN_POOL.with(|c| c.set(false));
+    if let Err(e) = result {
+        std::panic::resume_unwind(e);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunk_bounds_cover_exactly() {
+        for &(chunks, rows) in &[(1usize, 7usize), (3, 7), (7, 7), (4, 1000), (5, 13)] {
+            let mut covered = 0;
+            for c in 0..chunks {
+                let (lo, hi) = chunk_bounds(c, chunks, rows);
+                assert_eq!(lo, covered, "gap before chunk {c}");
+                covered = hi;
+            }
+            assert_eq!(covered, rows);
+        }
+    }
+
+    #[test]
+    fn pool_runs_every_row_once() {
+        let pool = Pool::new(4);
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(1000, 16, &|lo, hi| {
+            for r in lo..hi {
+                hits[r].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn pool_is_reusable_across_jobs() {
+        let pool = Pool::new(3);
+        for _ in 0..50 {
+            let sum = AtomicUsize::new(0);
+            pool.run(128, 8, &|lo, hi| {
+                sum.fetch_add((lo..hi).sum::<usize>(), Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 127 * 128 / 2);
+        }
+    }
+
+    #[test]
+    fn nested_par_rows_runs_inline() {
+        let outer = AtomicUsize::new(0);
+        par_rows(4, PAR_MIN_WORK, |lo, hi| {
+            for _ in lo..hi {
+                // The nested call must not re-enter the pool (deadlock);
+                // it runs inline on this worker.
+                par_rows(8, PAR_MIN_WORK, |ilo, ihi| {
+                    outer.fetch_add(ihi - ilo, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(outer.load(Ordering::Relaxed), 4 * 8);
+    }
+}

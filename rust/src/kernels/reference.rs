@@ -1,0 +1,64 @@
+//! Scalar reference kernels — the executable specification.
+//!
+//! These are the original naive triple-loop implementations the
+//! blocked/parallel kernels in this module must match **bit for bit**
+//! (same f32 operations in the same per-element order). They are kept
+//! verbatim as the oracle for the property tests in
+//! `rust/tests/kernels.rs` and as readable documentation of the
+//! semantics; the hot path never calls them.
+
+/// `[n, d] @ [d, m] -> [n, m]`, naive row-major triple loop.
+pub fn matmul_ref(x: &[f32], w: &[f32], n: usize, d: usize, m: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), n * d, "matmul lhs size");
+    debug_assert_eq!(w.len(), d * m, "matmul rhs size");
+    let mut out = vec![0f32; n * m];
+    for i in 0..n {
+        let xr = &x[i * d..(i + 1) * d];
+        let or = &mut out[i * m..(i + 1) * m];
+        for (kk, &xv) in xr.iter().enumerate() {
+            let wr = &w[kk * m..(kk + 1) * m];
+            for j in 0..m {
+                or[j] += xv * wr[j];
+            }
+        }
+    }
+    out
+}
+
+/// MoE projection (paper Eq. 9-10), per-token vector-matrix products:
+/// per token `i`, `sum_j gate[i,j] * (x_i @ experts[idx[i,j]])`.
+pub fn moe_matmul_ref(
+    x: &[f32],
+    experts: &[Vec<f32>],
+    rows: usize,
+    cols: usize,
+    idx: &[usize],
+    gate: &[f32],
+    k: usize,
+) -> Vec<f32> {
+    let n = x.len() / rows;
+    debug_assert_eq!(idx.len(), n * k);
+    let mut out = vec![0f32; n * cols];
+    let mut tmp = vec![0f32; cols];
+    for i in 0..n {
+        let xr = &x[i * rows..(i + 1) * rows];
+        for j in 0..k {
+            let w = &experts[idx[i * k + j]];
+            let g = gate[i * k + j];
+            for v in tmp.iter_mut() {
+                *v = 0.0;
+            }
+            for (kk, &xv) in xr.iter().enumerate() {
+                let wr = &w[kk * cols..(kk + 1) * cols];
+                for jj in 0..cols {
+                    tmp[jj] += xv * wr[jj];
+                }
+            }
+            let or = &mut out[i * cols..(i + 1) * cols];
+            for jj in 0..cols {
+                or[jj] += g * tmp[jj];
+            }
+        }
+    }
+    out
+}

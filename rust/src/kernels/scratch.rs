@@ -1,0 +1,76 @@
+//! Thread-local scratch arena for f32 work buffers.
+//!
+//! The naive hot path allocated a fresh `Vec<f32>` for every
+//! projection, bias, logits row and residual temporary — hundreds of
+//! `malloc`/`free` round-trips per forward pass, and page-fault zeroing
+//! for the larger ones. This arena recycles those buffers: [`take`]
+//! hands out a zeroed buffer (reusing a pooled allocation when one is
+//! big enough), [`put`] returns it for reuse.
+//!
+//! The pool is thread-local, so it needs no locking, works unchanged
+//! inside [`super::pool`] workers (each keeps its own warm set), and a
+//! long-lived decoding session reaches zero-allocation steady state on
+//! whatever thread drives it. Buffers that escape (e.g. moved into a
+//! `Logits` response) simply leave the pool; nothing requires `put`.
+
+use std::cell::RefCell;
+
+/// Retention cap per thread — beyond this, returned buffers are freed
+/// rather than pooled (bounds memory for pathological call patterns).
+const MAX_POOLED: usize = 64;
+
+thread_local! {
+    static POOL: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Take a zeroed f32 buffer of length `len` from this thread's arena,
+/// reusing a pooled allocation when one has enough capacity.
+pub fn take(len: usize) -> Vec<f32> {
+    let mut buf = POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        match p.iter().rposition(|v| v.capacity() >= len) {
+            Some(i) => p.swap_remove(i),
+            None => p.pop().unwrap_or_default(),
+        }
+    });
+    buf.clear();
+    buf.resize(len, 0.0);
+    buf
+}
+
+/// Return a buffer to this thread's arena for reuse.
+pub fn put(buf: Vec<f32>) {
+    if buf.capacity() == 0 {
+        return;
+    }
+    POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        if p.len() < MAX_POOLED {
+            p.push(buf);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_after_reuse() {
+        let mut a = take(16);
+        a.iter_mut().for_each(|v| *v = 7.0);
+        put(a);
+        let b = take(8);
+        assert!(b.capacity() >= 8);
+        assert!(b.iter().all(|&v| v == 0.0), "reused buffer must be re-zeroed");
+        assert_eq!(b.len(), 8);
+    }
+
+    #[test]
+    fn grows_when_pool_is_too_small() {
+        put(take(4));
+        let big = take(1024);
+        assert_eq!(big.len(), 1024);
+        assert!(big.iter().all(|&v| v == 0.0));
+    }
+}

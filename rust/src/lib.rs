@@ -23,6 +23,9 @@
 //! expert-sparse ring-buffered KV cache ([`model::NativeSession`])
 //! makes a decode step O(context) instead of a full-window recompute;
 //! PJRT sessions fall back to windowed recompute transparently.
+//! The native hot path executes on [`kernels`] — cache-blocked,
+//! `PALLAS_THREADS`-parallel matmul and expert-grouped MoE dispatch,
+//! bit-identical to the scalar reference at every thread count.
 //!
 //! # Artifact-free test tier
 //!
@@ -50,6 +53,7 @@ pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod kernels;
 pub mod macs;
 pub mod model;
 pub mod runtime;

@@ -8,8 +8,17 @@
 //! agreement. Every multiply-accumulate is tallied into a
 //! [`MacCounter`] so the measured cost of a forward pass can be
 //! compared against the analytic `macs::attention_cost` (Eq. 11-15).
+//!
+//! Execution rides the [`crate::kernels`] layer: projections are
+//! blocked/parallel (MoE ones expert-grouped), the attention core and
+//! XL positional logits shard over query rows, per-layer invariants
+//! (`base_bias`, the sinusoidal distance embedding) are hoisted out of
+//! the per-head loop, and temporaries cycle through the scratch arena.
+//! All of it is bit-identical to the scalar reference order, so the
+//! golden vectors pin this path unchanged.
 
 use crate::config::{ModelConfig, Positional};
+use crate::kernels::{par_rows_mut, scratch};
 use crate::model::params::{DenseP, MoaP, Proj, SwitchHeadP};
 use crate::model::tensor::{
     matmul, moe_matmul, rope_rotate, route, sinusoidal, softmax_rows, MacCounter, Router, NEG_INF,
@@ -57,10 +66,11 @@ pub(crate) fn proj(
 }
 
 /// Base additive bias `[b, t, tk]`: causal mask (skipped for pos=none,
-/// the bidirectional encoder) plus the padding key-mask.
+/// the bidirectional encoder) plus the padding key-mask. Identical for
+/// every head of a layer — callers compute it once per layer.
 fn base_bias(pos: Positional, ctx: &AttnCtx) -> Vec<f32> {
     let (b, t, tk) = (ctx.b, ctx.t, ctx.tk);
-    let mut bias = vec![0f32; b * t * tk];
+    let mut bias = scratch::take(b * t * tk);
     if pos != Positional::None {
         let off = tk - t;
         for bi in 0..b {
@@ -91,6 +101,7 @@ fn base_bias(pos: Positional, ctx: &AttnCtx) -> Vec<f32> {
 
 /// Add the Transformer-XL relative-position logits: entry (i, j) gains
 /// `(q_i + v) . r_{clip(i + off - j)}` (mirrors `layers.xl_pos_bias`).
+/// Sharded over the `b * t` query rows.
 fn add_xl_pos(
     bias: &mut [f32],
     q: &[f32],  // [b, t, dh] — pre-u_bias queries
@@ -102,26 +113,27 @@ fn add_xl_pos(
 ) {
     let (b, t, tk) = (ctx.b, ctx.t, ctx.tk);
     let off = tk as isize - t as isize;
-    for bi in 0..b {
-        for i in 0..t {
-            let qrow = &q[(bi * t + i) * dh..(bi * t + i + 1) * dh];
-            let brow = &mut bias[(bi * t + i) * tk..(bi * t + i + 1) * tk];
-            for (j, bv) in brow.iter_mut().enumerate() {
-                let dist = (i as isize + off - j as isize).clamp(0, tk as isize - 1) as usize;
-                let rrow = &r[dist * dh..(dist + 1) * dh];
-                let mut s = 0f32;
-                for d0 in 0..dh {
-                    s += (qrow[d0] + vb[d0]) * rrow[d0];
-                }
-                *bv += s;
+    par_rows_mut(bias, tk, tk * dh, |row, brow| {
+        let i = row % t;
+        let qrow = &q[row * dh..(row + 1) * dh];
+        for (j, bv) in brow.iter_mut().enumerate() {
+            let dist = (i as isize + off - j as isize).clamp(0, tk as isize - 1) as usize;
+            let rrow = &r[dist * dh..(dist + 1) * dh];
+            let mut s = 0f32;
+            for d0 in 0..dh {
+                s += (qrow[d0] + vb[d0]) * rrow[d0];
             }
+            *bv += s;
         }
-    }
+    });
     macs.pos += (b * t * tk * dh) as f64;
 }
 
-/// Attention core for one head: softmax(q k^T * scale + bias) v.
-/// Returns `[b, t, dh]`; appends the `[b, t, tk]` map when collecting.
+/// Attention core for one head: softmax(q k^T * scale + bias) v,
+/// sharded over the `b * t` query rows (each row's logits, softmax and
+/// value reduction are self-contained, so sharding never reorders a
+/// sum). Returns `[b, t, dh]`; appends the `[b, t, tk]` map when
+/// collecting.
 fn attention_core(
     q: &[f32],
     k: &[f32],
@@ -134,40 +146,34 @@ fn attention_core(
 ) -> Vec<f32> {
     let (b, t, tk) = (ctx.b, ctx.t, ctx.tk);
     let scale = 1.0 / (dh as f32).sqrt();
-    let mut att = vec![0f32; b * t * dh];
+    let mut att = scratch::take(b * t * dh);
     let mut maps = collect.as_ref().map(|_| vec![0f32; b * t * tk]);
-    let mut logits = vec![0f32; t * tk];
-    for bi in 0..b {
-        for i in 0..t {
-            let qrow = &q[(bi * t + i) * dh..(bi * t + i + 1) * dh];
-            for j in 0..tk {
-                let krow = &k[(bi * tk + j) * dh..(bi * tk + j + 1) * dh];
-                let mut s = 0f32;
-                for d0 in 0..dh {
-                    s += qrow[d0] * krow[d0];
-                }
-                logits[i * tk + j] = s * scale + bias[(bi * t + i) * tk + j];
+    let maps_ptr = maps.as_mut().map(|m| crate::kernels::SendPtr(m.as_mut_ptr()));
+    par_rows_mut(&mut att, dh, 2 * tk * dh, |row, orow| {
+        let bi = row / t;
+        let qrow = &q[row * dh..(row + 1) * dh];
+        let mut logits = scratch::take(tk);
+        for (j, lv) in logits.iter_mut().enumerate() {
+            let krow = &k[(bi * tk + j) * dh..(bi * tk + j + 1) * dh];
+            let mut s = 0f32;
+            for d0 in 0..dh {
+                s += qrow[d0] * krow[d0];
             }
+            *lv = s * scale + bias[row * tk + j];
         }
         softmax_rows(&mut logits, tk);
-        if let Some(m) = maps.as_mut() {
-            m[bi * t * tk..(bi + 1) * t * tk].copy_from_slice(&logits);
+        if let Some(mp) = maps_ptr {
+            // SAFETY: map rows mirror the disjoint output rows.
+            unsafe { mp.row(row * tk, tk) }.copy_from_slice(&logits);
         }
-        for i in 0..t {
-            let arow = {
-                let base = (bi * t + i) * dh;
-                base..base + dh
-            };
-            for j in 0..tk {
-                let w = logits[i * tk + j];
-                let vrow = &v[(bi * tk + j) * dh..(bi * tk + j + 1) * dh];
-                let out = &mut att[arow.clone()];
-                for d0 in 0..dh {
-                    out[d0] += w * vrow[d0];
-                }
+        for (j, &w) in logits.iter().enumerate() {
+            let vrow = &v[(bi * tk + j) * dh..(bi * tk + j + 1) * dh];
+            for d0 in 0..dh {
+                orow[d0] += w * vrow[d0];
             }
         }
-    }
+        scratch::put(logits);
+    });
     macs.attn_core += 2.0 * (b * t * tk * dh) as f64;
     if let (Some(aux), Some(m)) = (collect, maps) {
         aux.attn.push(m);
@@ -191,34 +197,42 @@ pub fn switchhead_attention(
     let (b, t, tk) = (ctx.b, ctx.t, ctx.tk);
     let (d, dh, h, e, k) = (cfg.d_model, cfg.d_head, cfg.n_heads, cfg.att_n_experts, cfg.att_k);
     let router = Router::parse(&cfg.att_router);
+    // Per-layer invariants, identical across heads: the sinusoidal
+    // distance embedding and the mask-only base bias.
     let dist_emb = (cfg.pos == Positional::Xl).then(|| sinusoidal(tk, d));
+    let base = base_bias(cfg.pos, ctx);
 
-    let mut y = vec![0f32; b * t * d];
+    let mut y = scratch::take(b * t * d);
     for hi in 0..h {
         // Routing: source side gates K/V experts, destination side Q/O.
-        let (idx_s, gate_s, sc_s) = route(src, &p.w_sel_s[hi], d, e, k, router, macs);
+        let want_scores = collect.is_some();
+        let (idx_s, gate_s, sc_s) = route(src, &p.w_sel_s[hi], d, e, k, router, want_scores, macs);
         let w_sel_d = match &p.w_sel_d {
             Some(sels) => &sels[hi],
             None => &p.w_sel_s[hi], // shared_selection (paper §3.6)
         };
-        let (idx_d, gate_d, sc_d) = route(x_ln, w_sel_d, d, e, k, router, macs);
+        let (idx_d, gate_d, sc_d) = route(x_ln, w_sel_d, d, e, k, router, want_scores, macs);
         if let Some(aux) = collect.as_deref_mut() {
-            aux.gates.push((format!("gate_src_{hi}"), sc_s, e));
-            aux.gates.push((format!("gate_dst_{hi}"), sc_d, e));
+            aux.gates.push((format!("gate_src_{hi}"), sc_s.unwrap(), e));
+            aux.gates.push((format!("gate_dst_{hi}"), sc_d.unwrap(), e));
         }
 
         let mut kh = proj(src, &p.w_k[hi], &idx_s, &gate_s, k, macs);
         let mut qh = proj(x_ln, &p.w_q[hi], &idx_d, &gate_d, k, macs);
         let vh = proj(src, &p.w_v[hi], &idx_s, &gate_s, k, macs);
 
-        let mut bias = base_bias(cfg.pos, ctx);
+        let mut xl_bias = None;
         match cfg.pos {
             Positional::Xl => {
                 let xl = p.xl.as_ref().expect("xl params");
                 let r = matmul(dist_emb.as_ref().unwrap(), &xl.w_kr[hi], tk, d, dh);
                 macs.pos += (tk * d * dh) as f64;
+                let mut bias = scratch::take(base.len());
+                bias.copy_from_slice(&base);
                 add_xl_pos(&mut bias, &qh, &xl.v[hi], &r, ctx, dh, macs);
+                scratch::put(r);
                 add_bias_rows(&mut qh, &xl.u[hi], dh);
+                xl_bias = Some(bias);
             }
             Positional::Rope => {
                 rope_rotate(&mut qh, b, t, dh, tk - t);
@@ -227,12 +241,25 @@ pub fn switchhead_attention(
             Positional::None => {}
         }
 
-        let att = attention_core(&qh, &kh, &vh, &bias, ctx, dh, macs, collect.as_deref_mut());
+        let bias = xl_bias.as_deref().unwrap_or(&base);
+        let att = attention_core(&qh, &kh, &vh, bias, ctx, dh, macs, collect.as_deref_mut());
+        if let Some(bias) = xl_bias {
+            scratch::put(bias);
+        }
+        scratch::put(qh);
+        scratch::put(kh);
+        scratch::put(vh);
         let yo = proj(&att, &p.w_o[hi], &idx_d, &gate_d, k, macs);
+        scratch::put(att);
         for (yv, ov) in y.iter_mut().zip(&yo) {
             *yv += ov;
         }
+        scratch::put(yo);
     }
+    if let Some(de) = dist_emb {
+        scratch::put(de);
+    }
+    scratch::put(base);
     y
 }
 
@@ -249,22 +276,27 @@ pub fn dense_attention(
     let (b, t, tk) = (ctx.b, ctx.t, ctx.tk);
     let (d, dh, h) = (cfg.d_model, cfg.d_head, cfg.n_heads);
     let dist_emb = (cfg.pos == Positional::Xl).then(|| sinusoidal(tk, d));
+    let base = base_bias(cfg.pos, ctx);
 
-    let mut y = vec![0f32; b * t * d];
+    let mut y = scratch::take(b * t * d);
     for hi in 0..h {
         let mut qh = matmul(x_ln, &p.w_q[hi], b * t, d, dh);
         let mut kh = matmul(src, &p.w_k[hi], b * tk, d, dh);
         let vh = matmul(src, &p.w_v[hi], b * tk, d, dh);
         macs.proj_dense += ((b * t + 2 * b * tk) * d * dh) as f64;
 
-        let mut bias = base_bias(cfg.pos, ctx);
+        let mut xl_bias = None;
         match cfg.pos {
             Positional::Xl => {
                 let xl = p.xl.as_ref().expect("xl params");
                 let r = matmul(dist_emb.as_ref().unwrap(), &xl.w_kr[hi], tk, d, dh);
                 macs.pos += (tk * d * dh) as f64;
+                let mut bias = scratch::take(base.len());
+                bias.copy_from_slice(&base);
                 add_xl_pos(&mut bias, &qh, &xl.v[hi], &r, ctx, dh, macs);
+                scratch::put(r);
                 add_bias_rows(&mut qh, &xl.u[hi], dh);
+                xl_bias = Some(bias);
             }
             Positional::Rope => {
                 rope_rotate(&mut qh, b, t, dh, tk - t);
@@ -273,13 +305,26 @@ pub fn dense_attention(
             Positional::None => {}
         }
 
-        let att = attention_core(&qh, &kh, &vh, &bias, ctx, dh, macs, collect.as_deref_mut());
+        let bias = xl_bias.as_deref().unwrap_or(&base);
+        let att = attention_core(&qh, &kh, &vh, bias, ctx, dh, macs, collect.as_deref_mut());
+        if let Some(bias) = xl_bias {
+            scratch::put(bias);
+        }
+        scratch::put(qh);
+        scratch::put(kh);
+        scratch::put(vh);
         let yo = matmul(&att, &p.w_o[hi], b * t, dh, d);
+        scratch::put(att);
         macs.proj_dense += (b * t * dh * d) as f64;
         for (yv, ov) in y.iter_mut().zip(&yo) {
             *yv += ov;
         }
+        scratch::put(yo);
     }
+    if let Some(de) = dist_emb {
+        scratch::put(de);
+    }
+    scratch::put(base);
     y
 }
 
@@ -297,7 +342,7 @@ pub fn moa_attention(
     let (b, t, tk) = (ctx.b, ctx.t, ctx.tk);
     let (d, dh, e, k) = (cfg.d_model, cfg.d_head, cfg.moa_n_experts, cfg.moa_k);
 
-    let (idx, gate, _probs) = route(x_ln, &p.w_sel, d, e, k, Router::Softmax, macs);
+    let (idx, gate, _) = route(x_ln, &p.w_sel, d, e, k, Router::Softmax, false, macs);
     let mut kk = matmul(src, &p.w_k, b * tk, d, dh);
     let vv = matmul(src, &p.w_v, b * tk, d, dh);
     macs.proj_dense += (2 * b * tk * d * dh) as f64;
@@ -306,7 +351,9 @@ pub fn moa_attention(
         Positional::Xl => {
             let de = sinusoidal(tk, d);
             macs.pos += (tk * d * dh) as f64;
-            Some(matmul(&de, p.xl.as_ref().expect("xl params").w_kr[0].as_slice(), tk, d, dh))
+            let r = matmul(&de, p.xl.as_ref().expect("xl params").w_kr[0].as_slice(), tk, d, dh);
+            scratch::put(de);
+            Some(r)
         }
         Positional::Rope => {
             rope_rotate(&mut kk, b, tk, dh, 0);
@@ -314,10 +361,11 @@ pub fn moa_attention(
         }
         Positional::None => None,
     };
+    let base = base_bias(cfg.pos, ctx);
 
     let n = b * t;
     let ones = vec![1.0f32; n];
-    let mut y = vec![0f32; n * d];
+    let mut y = scratch::take(n * d);
     for j in 0..k {
         // Slot j: per-token expert idx[:, j]; query gate is 1, the
         // output projection carries the routing gate (as in layers.py).
@@ -325,25 +373,41 @@ pub fn moa_attention(
         let gate_j: Vec<f32> = (0..n).map(|i| gate[i * k + j]).collect();
         let mut qj = moe_matmul(x_ln, &p.w_q, d, dh, &idx_j, &ones, 1);
         macs.proj_moe += (n * (d * dh + dh)) as f64;
-        let mut bias = base_bias(cfg.pos, ctx);
+        let mut xl_bias = None;
         match cfg.pos {
             Positional::Xl => {
                 let xl = p.xl.as_ref().expect("xl params");
+                let mut bias = scratch::take(base.len());
+                bias.copy_from_slice(&base);
                 add_xl_pos(&mut bias, &qj, &xl.v[0], r.as_ref().unwrap(), ctx, dh, macs);
                 add_bias_rows(&mut qj, &xl.u[0], dh);
+                xl_bias = Some(bias);
             }
             Positional::Rope => {
                 rope_rotate(&mut qj, b, t, dh, tk - t);
             }
             Positional::None => {}
         }
-        let att = attention_core(&qj, &kk, &vv, &bias, ctx, dh, macs, collect.as_deref_mut());
+        let bias = xl_bias.as_deref().unwrap_or(&base);
+        let att = attention_core(&qj, &kk, &vv, bias, ctx, dh, macs, collect.as_deref_mut());
+        if let Some(bias) = xl_bias {
+            scratch::put(bias);
+        }
+        scratch::put(qj);
         let yo = moe_matmul(&att, &p.w_o, dh, d, &idx_j, &gate_j, 1);
+        scratch::put(att);
         macs.proj_moe += (n * (dh * d + d)) as f64;
         for (yv, ov) in y.iter_mut().zip(&yo) {
             *yv += ov;
         }
+        scratch::put(yo);
     }
+    scratch::put(kk);
+    scratch::put(vv);
+    if let Some(r) = r {
+        scratch::put(r);
+    }
+    scratch::put(base);
     y
 }
 

@@ -8,6 +8,7 @@
 //! semantically interchangeable on the inference paths.
 
 use crate::config::{ModelConfig, Positional, Task};
+use crate::kernels::scratch;
 use crate::model::attention::{
     dense_attention, moa_attention, switchhead_attention, AttnCtx, LayerAux,
 };
@@ -33,14 +34,16 @@ pub(crate) fn mlp_apply(cfg: &ModelConfig, p: &MlpP, x: &[f32], macs: &mut MacCo
                 *v = v.max(0.0); // relu
             }
             macs.mlp += (2 * n * d * f) as f64;
-            matmul(&h, w2, n, f, d)
+            let out = matmul(&h, w2, n, f, d);
+            scratch::put(h);
+            out
         }
         MlpP::SigmaMoe { w1, w2, w_sel } => {
             // sigma-MoE MLP (Csordas et al. 2023) — SwitchAll's FF layer.
             let (e, de, k) = (cfg.mlp_n_experts, cfg.mlp_d_expert, cfg.mlp_k);
-            let (idx, gate, _) = route(x, w_sel, d, e, k, Router::Sigmoid, macs);
+            let (idx, gate, _) = route(x, w_sel, d, e, k, Router::Sigmoid, false, macs);
             let ones = vec![1.0f32; n];
-            let mut y = vec![0f32; n * d];
+            let mut y = scratch::take(n * d);
             for j in 0..k {
                 let idx_j: Vec<usize> = (0..n).map(|i| idx[i * k + j]).collect();
                 let gate_j: Vec<f32> = (0..n).map(|i| gate[i * k + j]).collect();
@@ -49,10 +52,12 @@ pub(crate) fn mlp_apply(cfg: &ModelConfig, p: &MlpP, x: &[f32], macs: &mut MacCo
                     *v = v.max(0.0);
                 }
                 let o = moe_matmul(&h, w2, de, d, &idx_j, &gate_j, 1);
+                scratch::put(h);
                 macs.mlp += (n * (d * de + de + de * d + d)) as f64;
                 for (yv, ov) in y.iter_mut().zip(&o) {
                     *yv += ov;
                 }
+                scratch::put(o);
             }
             y
         }
@@ -79,7 +84,7 @@ fn block_apply(
     // zero state that is a zero prefix of length seq_len.
     let (src, tk) = if cfg.pos == Positional::Xl {
         let tc = cfg.seq_len;
-        let mut src = vec![0f32; b * (tc + t) * d];
+        let mut src = scratch::take(b * (tc + t) * d);
         for bi in 0..b {
             let dst = (bi * (tc + t) + tc) * d;
             let from = bi * t * d;
@@ -87,7 +92,9 @@ fn block_apply(
         }
         (src, tc + t)
     } else {
-        (x_ln.clone(), t)
+        let mut src = scratch::take(x_ln.len());
+        src.copy_from_slice(&x_ln);
+        (src, t)
     };
 
     let ctx = AttnCtx { b, t, tk, pad_mask };
@@ -96,15 +103,20 @@ fn block_apply(
         AttnP::Dense(p) => dense_attention(cfg, p, &x_ln, &src, &ctx, macs, collect),
         AttnP::Moa(p) => moa_attention(cfg, p, &x_ln, &src, &ctx, macs, collect),
     };
+    scratch::put(src);
+    scratch::put(x_ln);
     for (xv, av) in x.iter_mut().zip(&a) {
         *xv += av;
     }
+    scratch::put(a);
 
     let x_ln2 = layer_norm(x, &bp.ln2.g, &bp.ln2.b, d);
     let m = mlp_apply(cfg, &bp.mlp, &x_ln2, macs);
+    scratch::put(x_ln2);
     for (xv, mv) in x.iter_mut().zip(&m) {
         *xv += mv;
     }
+    scratch::put(m);
 }
 
 /// Run the block stack over `tokens` `[b, t]`. Returns the final-norm
@@ -121,7 +133,7 @@ pub fn encode(
     let cfg = &model.cfg;
     let d = cfg.d_model;
     let scale = (d as f64).sqrt() as f32;
-    let mut x = vec![0f32; b * t * d];
+    let mut x = scratch::take(b * t * d);
     for (i, &tok) in tokens.iter().enumerate() {
         let row = &model.embed[(tok as usize) * d..(tok as usize + 1) * d];
         let out = &mut x[i * d..(i + 1) * d];
@@ -136,7 +148,9 @@ pub fn encode(
         });
         block_apply(cfg, bp, &mut x, b, t, pad_mask, macs, layer_aux);
     }
-    layer_norm(&x, &model.ln_f.g, &model.ln_f.b, d)
+    let h = layer_norm(&x, &model.ln_f.g, &model.ln_f.b, d);
+    scratch::put(x);
+    h
 }
 
 /// Per-position next-token log-probabilities for a `[b, t+1]` window.
@@ -153,6 +167,7 @@ pub fn score(model: &NativeModel, tokens: &[i32], b: usize, macs: &mut MacCounte
     }
     let h = encode(model, &inp, b, t, None, macs, None);
     let logits = matmul(&h, &model.head, b * t, cfg.d_model, n_out);
+    scratch::put(h);
     let mut out = Vec::with_capacity(b * t);
     for bi in 0..b {
         for i in 0..t {
@@ -161,6 +176,7 @@ pub fn score(model: &NativeModel, tokens: &[i32], b: usize, macs: &mut MacCounte
             out.push(row[tgt] - crate::model::tensor::logsumexp(row));
         }
     }
+    scratch::put(logits);
     out
 }
 
@@ -178,12 +194,15 @@ pub fn next_logits(
     let h = encode(model, tokens, b, t, None, macs, None);
     let d = cfg.d_model;
     // Select the last position of each row, then project.
-    let mut last = vec![0f32; b * d];
+    let mut last = scratch::take(b * d);
     for bi in 0..b {
         let from = (bi * t + t - 1) * d;
         last[bi * d..(bi + 1) * d].copy_from_slice(&h[from..from + d]);
     }
-    matmul(&last, &model.head, b, d, n_out)
+    scratch::put(h);
+    let logits = matmul(&last, &model.head, b, d, n_out);
+    scratch::put(last);
+    logits
 }
 
 /// ListOps classification logits `[b, n_classes]` from position 0 with
@@ -201,10 +220,13 @@ pub fn class_logits(
     let pad_mask: Vec<bool> = tokens.iter().map(|&tok| tok != 0).collect();
     let h = encode(model, tokens, b, t, Some(&pad_mask), macs, None);
     let d = cfg.d_model;
-    let mut first = vec![0f32; b * d];
+    let mut first = scratch::take(b * d);
     for bi in 0..b {
         let from = bi * t * d;
         first[bi * d..(bi + 1) * d].copy_from_slice(&h[from..from + d]);
     }
-    matmul(&first, &model.head, b, d, n_out)
+    scratch::put(h);
+    let logits = matmul(&first, &model.head, b, d, n_out);
+    scratch::put(first);
+    logits
 }

@@ -33,6 +33,7 @@
 //! Keep in lock-step with `python/tools/native_ref.py::Session`.
 
 use crate::config::{ModelConfig, Positional, Task};
+use crate::kernels::{par_rows_mut, scratch};
 use crate::model::attention::proj;
 use crate::model::block::mlp_apply;
 use crate::model::params::{AttnP, DenseP, MoaP, NativeModel, SwitchHeadP, XlP};
@@ -134,7 +135,7 @@ impl<'m> NativeSession<'m> {
         let geo = Geo { rows, tn, pos0: self.pos, cap: self.cap, tc: self.tc, dh: cfg.d_head };
 
         let scale = (d as f64).sqrt() as f32;
-        let mut x = vec![0f32; rows * tn * d];
+        let mut x = scratch::take(rows * tn * d);
         for (i, &tok) in tokens.iter().enumerate() {
             let row = &model.embed[(tok as usize) * d..(tok as usize + 1) * d];
             let out = &mut x[i * d..(i + 1) * d];
@@ -152,24 +153,31 @@ impl<'m> NativeSession<'m> {
                 AttnP::Dense(p) => dense_decode(cfg, p, st, &x_ln, &geo, &mut self.macs),
                 AttnP::Moa(p) => moa_decode(cfg, p, st, &x_ln, &geo, &mut self.macs),
             };
+            scratch::put(x_ln);
             for (xv, av) in x.iter_mut().zip(&a) {
                 *xv += av;
             }
+            scratch::put(a);
             let x_ln2 = layer_norm(&x, &bp.ln2.g, &bp.ln2.b, d);
             let m = mlp_apply(cfg, &bp.mlp, &x_ln2, &mut self.macs);
+            scratch::put(x_ln2);
             for (xv, mv) in x.iter_mut().zip(&m) {
                 *xv += mv;
             }
+            scratch::put(m);
         }
 
-        let mut last = vec![0f32; rows * d];
+        let mut last = scratch::take(rows * d);
         for bi in 0..rows {
             let from = (bi * tn + tn - 1) * d;
             last[bi * d..(bi + 1) * d].copy_from_slice(&x[from..from + d]);
         }
+        scratch::put(x);
         let h = layer_norm(&last, &model.ln_f.g, &model.ln_f.b, d);
+        scratch::put(last);
         let n_out = NativeModel::n_out(cfg);
         let logits = matmul(&h, &model.head, rows, d, n_out);
+        scratch::put(h);
         self.pos += tn;
         Logits::new(logits, rows, n_out)
     }
@@ -238,7 +246,9 @@ fn ensure_r(
     let have = r.len() / dh;
     for dist in have..=max_dist {
         let row = sinusoidal_row(dist, d);
-        r.extend(matmul(&row, w_kr, 1, d, dh));
+        let proj = matmul(&row, w_kr, 1, d, dh);
+        r.extend_from_slice(&proj);
+        scratch::put(proj);
         macs.pos += (d * dh) as f64;
     }
 }
@@ -246,6 +256,11 @@ fn ensure_r(
 /// Attention core for one matrix over the ring + the XL zero-cache
 /// pseudo-columns. `q` is `[rows, tn, dh]` pre-u-bias; `xl` carries
 /// `(u_bias, v_bias, r_table)`. Returns `[rows, tn, dh]`.
+///
+/// Sharded over the `rows * tn` query rows — each row's logits,
+/// softmax and value reduction are self-contained, so the shards
+/// reproduce the serial loop bit for bit (MACs are tallied
+/// analytically outside the parallel region).
 fn attend(
     q: &[f32],
     xl: Option<(&[f32], &[f32], &[f32])>,
@@ -254,84 +269,93 @@ fn attend(
     macs: &mut MacCounter,
 ) -> Vec<f32> {
     let (rows, tn, cap, tc, dh) = (geo.rows, geo.tn, geo.cap, geo.tc, geo.dh);
+    let pos0 = geo.pos0;
     let scale = 1.0 / (dh as f32).sqrt();
-    let mut out = vec![0f32; rows * tn * dh];
-    let mut logits: Vec<f32> = Vec::new();
-    for bi in 0..rows {
-        for ci in 0..tn {
-            let p = geo.pos0 + ci;
-            let lo = (p + 1).saturating_sub(cap);
-            let live = p + 1 - lo;
-            let qrow = &q[(bi * tn + ci) * dh..(bi * tn + ci + 1) * dh];
-            logits.clear();
-            // Zero-cache pseudo-columns: keys and values are zero, so
-            // only the relative-position term survives — pure softmax
-            // denominator mass, exactly as in the full forward. Distances
-            // clamp at the table bound (cap + tc - 1) like the full
-            // forward's `clamp(0, tk - 1)`; the clamp only engages past
-            // ring eviction, outside the equivalence window.
-            if let Some((_, vb, r)) = xl {
-                let max_dist = cap + tc - 1;
-                for j in 0..tc {
-                    let dist = (p + tc - j).min(max_dist);
-                    let rrow = &r[dist * dh..(dist + 1) * dh];
-                    let mut s = 0f32;
-                    for d0 in 0..dh {
-                        s += (qrow[d0] + vb[d0]) * rrow[d0];
-                    }
-                    logits.push(s);
-                }
-                macs.pos += (tc * dh) as f64;
-            }
-            // Live context columns, oldest first (the full forward's
-            // summation order).
-            for kpos in lo..=p {
-                let krow = {
-                    let base = (bi * cap + kpos % cap) * dh;
-                    &kv.k[base..base + dh]
-                };
+    let mut out = scratch::take(rows * tn * dh);
+    let max_width = tc + (pos0 + tn).min(cap);
+    par_rows_mut(&mut out, dh, 2 * max_width * dh, |ridx, orow| {
+        let (bi, ci) = (ridx / tn, ridx % tn);
+        let p = pos0 + ci;
+        let lo = (p + 1).saturating_sub(cap);
+        let live = p + 1 - lo;
+        let qrow = &q[ridx * dh..(ridx + 1) * dh];
+        let mut logits = scratch::take(tc + live);
+        // Zero-cache pseudo-columns: keys and values are zero, so
+        // only the relative-position term survives — pure softmax
+        // denominator mass, exactly as in the full forward. Distances
+        // clamp at the table bound (cap + tc - 1) like the full
+        // forward's `clamp(0, tk - 1)`; the clamp only engages past
+        // ring eviction, outside the equivalence window.
+        if let Some((_, vb, r)) = xl {
+            let max_dist = cap + tc - 1;
+            for (j, lv) in logits[..tc].iter_mut().enumerate() {
+                let dist = (p + tc - j).min(max_dist);
+                let rrow = &r[dist * dh..(dist + 1) * dh];
                 let mut s = 0f32;
-                match xl {
-                    Some((u, _, _)) => {
-                        for d0 in 0..dh {
-                            s += (qrow[d0] + u[d0]) * krow[d0];
-                        }
-                    }
-                    None => {
-                        for d0 in 0..dh {
-                            s += qrow[d0] * krow[d0];
-                        }
-                    }
-                }
-                let mut logit = s * scale;
-                if let Some((_, vb, r)) = xl {
-                    let dist = p - kpos;
-                    let rrow = &r[dist * dh..(dist + 1) * dh];
-                    let mut pb = 0f32;
-                    for d0 in 0..dh {
-                        pb += (qrow[d0] + vb[d0]) * rrow[d0];
-                    }
-                    logit += pb;
-                }
-                logits.push(logit);
-            }
-            if xl.is_some() {
-                macs.pos += (live * dh) as f64;
-            }
-            macs.attn_core += 2.0 * (live * dh) as f64;
-            let width = logits.len();
-            softmax_rows(&mut logits, width);
-            let orow = &mut out[(bi * tn + ci) * dh..(bi * tn + ci + 1) * dh];
-            for (jj, kpos) in (lo..=p).enumerate() {
-                let w = logits[tc + jj];
-                let base = (bi * cap + kpos % cap) * dh;
-                let vrow = &kv.v[base..base + dh];
                 for d0 in 0..dh {
-                    orow[d0] += w * vrow[d0];
+                    s += (qrow[d0] + vb[d0]) * rrow[d0];
                 }
+                *lv = s;
             }
         }
+        // Live context columns, oldest first (the full forward's
+        // summation order).
+        for (jj, kpos) in (lo..=p).enumerate() {
+            let krow = {
+                let base = (bi * cap + kpos % cap) * dh;
+                &kv.k[base..base + dh]
+            };
+            let mut s = 0f32;
+            match xl {
+                Some((u, _, _)) => {
+                    for d0 in 0..dh {
+                        s += (qrow[d0] + u[d0]) * krow[d0];
+                    }
+                }
+                None => {
+                    for d0 in 0..dh {
+                        s += qrow[d0] * krow[d0];
+                    }
+                }
+            }
+            let mut logit = s * scale;
+            if let Some((_, vb, r)) = xl {
+                let dist = p - kpos;
+                let rrow = &r[dist * dh..(dist + 1) * dh];
+                let mut pb = 0f32;
+                for d0 in 0..dh {
+                    pb += (qrow[d0] + vb[d0]) * rrow[d0];
+                }
+                logit += pb;
+            }
+            logits[tc + jj] = logit;
+        }
+        let width = logits.len();
+        softmax_rows(&mut logits, width);
+        for (jj, kpos) in (lo..=p).enumerate() {
+            let w = logits[tc + jj];
+            let base = (bi * cap + kpos % cap) * dh;
+            let vrow = &kv.v[base..base + dh];
+            for d0 in 0..dh {
+                orow[d0] += w * vrow[d0];
+            }
+        }
+        scratch::put(logits);
+    });
+    // The per-query MAC tally from the serial loop, reproduced
+    // analytically (counters can't be touched from parallel shards).
+    let mut pos_macs = 0f64;
+    let mut core_macs = 0f64;
+    for ci in 0..tn {
+        let p = pos0 + ci;
+        let live = p + 1 - (p + 1).saturating_sub(cap);
+        if xl.is_some() {
+            pos_macs += ((tc + live) * dh) as f64;
+        }
+        core_macs += 2.0 * (live * dh) as f64;
     }
+    macs.pos += pos_macs * rows as f64;
+    macs.attn_core += core_macs * rows as f64;
     out
 }
 
@@ -364,14 +388,14 @@ fn switchhead_decode(
     let (d, e, k) = (cfg.d_model, cfg.att_n_experts, cfg.att_k);
     let router = Router::parse(&cfg.att_router);
     let n = geo.rows * geo.tn;
-    let mut y = vec![0f32; n * d];
+    let mut y = scratch::take(n * d);
     for hi in 0..cfg.n_heads {
-        let (idx_s, gate_s, _) = route(x_ln, &p.w_sel_s[hi], d, e, k, router, macs);
+        let (idx_s, gate_s, _) = route(x_ln, &p.w_sel_s[hi], d, e, k, router, false, macs);
         let w_sel_d = match &p.w_sel_d {
             Some(sels) => &sels[hi],
             None => &p.w_sel_s[hi],
         };
-        let (idx_d, gate_d, _) = route(x_ln, w_sel_d, d, e, k, router, macs);
+        let (idx_d, gate_d, _) = route(x_ln, w_sel_d, d, e, k, router, false, macs);
 
         let mut kh = proj(x_ln, &p.w_k[hi], &idx_s, &gate_s, k, macs);
         let mut qh = proj(x_ln, &p.w_q[hi], &idx_d, &gate_d, k, macs);
@@ -381,12 +405,17 @@ fn switchhead_decode(
             rope_rotate(&mut kh, geo.rows, geo.tn, geo.dh, geo.pos0);
         }
         st.kv[hi].push(&kh, &vh, geo);
+        scratch::put(kh);
+        scratch::put(vh);
         let xl = xl_tables(p.xl.as_ref(), &mut st.r[hi], hi, d, geo, macs);
         let att = attend(&qh, xl, &st.kv[hi], geo, macs);
+        scratch::put(qh);
         let yo = proj(&att, &p.w_o[hi], &idx_d, &gate_d, k, macs);
+        scratch::put(att);
         for (yv, ov) in y.iter_mut().zip(&yo) {
             *yv += ov;
         }
+        scratch::put(yo);
     }
     y
 }
@@ -402,7 +431,7 @@ fn dense_decode(
 ) -> Vec<f32> {
     let d = cfg.d_model;
     let n = geo.rows * geo.tn;
-    let mut y = vec![0f32; n * d];
+    let mut y = scratch::take(n * d);
     for hi in 0..cfg.n_heads {
         let mut qh = matmul(x_ln, &p.w_q[hi], n, d, geo.dh);
         let mut kh = matmul(x_ln, &p.w_k[hi], n, d, geo.dh);
@@ -413,13 +442,18 @@ fn dense_decode(
             rope_rotate(&mut kh, geo.rows, geo.tn, geo.dh, geo.pos0);
         }
         st.kv[hi].push(&kh, &vh, geo);
+        scratch::put(kh);
+        scratch::put(vh);
         let xl = xl_tables(p.xl.as_ref(), &mut st.r[hi], hi, d, geo, macs);
         let att = attend(&qh, xl, &st.kv[hi], geo, macs);
+        scratch::put(qh);
         let yo = matmul(&att, &p.w_o[hi], n, geo.dh, d);
+        scratch::put(att);
         macs.proj_dense += (n * geo.dh * d) as f64;
         for (yv, ov) in y.iter_mut().zip(&yo) {
             *yv += ov;
         }
+        scratch::put(yo);
     }
     y
 }
@@ -443,10 +477,12 @@ fn moa_decode(
         rope_rotate(&mut kh, geo.rows, geo.tn, dh, geo.pos0);
     }
     st.kv[0].push(&kh, &vh, geo);
+    scratch::put(kh);
+    scratch::put(vh);
 
-    let (idx, gate, _) = route(x_ln, &p.w_sel, d, e, k, Router::Softmax, macs);
+    let (idx, gate, _) = route(x_ln, &p.w_sel, d, e, k, Router::Softmax, false, macs);
     let ones = vec![1.0f32; n];
-    let mut y = vec![0f32; n * d];
+    let mut y = scratch::take(n * d);
     for j in 0..k {
         let idx_j: Vec<usize> = (0..n).map(|i| idx[i * k + j]).collect();
         let gate_j: Vec<f32> = (0..n).map(|i| gate[i * k + j]).collect();
@@ -457,11 +493,14 @@ fn moa_decode(
         }
         let xl = xl_tables(p.xl.as_ref(), &mut st.r[0], 0, d, geo, macs);
         let att = attend(&qj, xl, &st.kv[0], geo, macs);
+        scratch::put(qj);
         let yo = moe_matmul(&att, &p.w_o, dh, d, &idx_j, &gate_j, 1);
+        scratch::put(att);
         macs.proj_moe += (n * (dh * d + d)) as f64;
         for (yv, ov) in y.iter_mut().zip(&yo) {
             *yv += ov;
         }
+        scratch::put(yo);
     }
     y
 }

@@ -8,6 +8,12 @@
 //! no Python, no PJRT. Stateful generation goes through
 //! [`NativeSession`], the incremental decoder with the expert-sparse
 //! KV cache.
+//!
+//! Compute runs on the [`crate::kernels`] layer: blocked parallel
+//! matmuls, expert-grouped MoE dispatch and the scratch arena, sized
+//! by `PALLAS_THREADS` (see `kernels::set_threads`). Results are
+//! bit-identical to the single-threaded scalar reference at every
+//! thread count, so the golden vectors hold regardless of machine.
 
 use crate::config::{ModelConfig, Task};
 use crate::coordinator::analysis::HostArray;

@@ -4,7 +4,13 @@
 //! explicitly; no external linear-algebra crates (offline registry).
 //! Numeric twin: `python/tools/native_ref.py` — keep operation order in
 //! lock-step so the checked-in golden vectors stay valid.
+//!
+//! The matmul entry points delegate to [`crate::kernels`] — blocked,
+//! `PALLAS_THREADS`-parallel, expert-grouped — which preserve the
+//! scalar per-element accumulation order bit for bit, so the twin and
+//! the golden vectors are untouched by the execution strategy.
 
+use crate::kernels::{self, scratch};
 use crate::util::rng::Pcg;
 
 pub const NEG_INF: f32 = -1e9;
@@ -44,28 +50,21 @@ impl MacCounter {
     }
 }
 
-/// `[n, d] @ [d, m] -> [n, m]`.
+/// `[n, d] @ [d, m] -> [n, m]` (blocked + parallel; bit-identical to
+/// `kernels::reference::matmul_ref`). The returned buffer comes from
+/// the scratch arena — hot-path callers hand it back with
+/// `scratch::put` when done.
 pub fn matmul(x: &[f32], w: &[f32], n: usize, d: usize, m: usize) -> Vec<f32> {
-    debug_assert_eq!(x.len(), n * d, "matmul lhs size");
-    debug_assert_eq!(w.len(), d * m, "matmul rhs size");
-    let mut out = vec![0f32; n * m];
-    for i in 0..n {
-        let xr = &x[i * d..(i + 1) * d];
-        let or = &mut out[i * m..(i + 1) * m];
-        for (kk, &xv) in xr.iter().enumerate() {
-            let wr = &w[kk * m..(kk + 1) * m];
-            for j in 0..m {
-                or[j] += xv * wr[j];
-            }
-        }
-    }
+    let mut out = scratch::take(n * m);
+    kernels::matmul_into(&mut out, x, w, n, d, m);
     out
 }
 
 /// MoE projection (paper Eq. 9-10): per token i, sum over the selected
 /// experts j of `gate[i,j] * (x_i @ experts[idx[i,j]])`.
 /// `x` is `[n, rows]`; each expert matrix is `[rows, cols]`;
-/// `idx`/`gate` are `[n, k]` flattened.
+/// `idx`/`gate` are `[n, k]` flattened. Dispatch is expert-grouped and
+/// parallel (`kernels::moe`), bit-identical to the scalar reference.
 pub fn moe_matmul(
     x: &[f32],
     experts: &[Vec<f32>],
@@ -76,37 +75,17 @@ pub fn moe_matmul(
     k: usize,
 ) -> Vec<f32> {
     let n = x.len() / rows;
-    debug_assert_eq!(idx.len(), n * k);
-    let mut out = vec![0f32; n * cols];
-    let mut tmp = vec![0f32; cols];
-    for i in 0..n {
-        let xr = &x[i * rows..(i + 1) * rows];
-        for j in 0..k {
-            let w = &experts[idx[i * k + j]];
-            let g = gate[i * k + j];
-            for v in tmp.iter_mut() {
-                *v = 0.0;
-            }
-            for (kk, &xv) in xr.iter().enumerate() {
-                let wr = &w[kk * cols..(kk + 1) * cols];
-                for jj in 0..cols {
-                    tmp[jj] += xv * wr[jj];
-                }
-            }
-            let or = &mut out[i * cols..(i + 1) * cols];
-            for jj in 0..cols {
-                or[jj] += g * tmp[jj];
-            }
-        }
-    }
+    let mut out = scratch::take(n * cols);
+    kernels::moe_matmul_into(&mut out, x, experts, rows, cols, idx, gate, k);
     out
 }
 
 /// Row-wise layer norm over the last dimension `d` (eps = 1e-5,
-/// biased variance — matches `layers.py::layer_norm`).
+/// biased variance — matches `layers.py::layer_norm`). The output
+/// buffer comes from the scratch arena.
 pub fn layer_norm(x: &[f32], g: &[f32], b: &[f32], d: usize) -> Vec<f32> {
     let n = x.len() / d;
-    let mut out = vec![0f32; x.len()];
+    let mut out = scratch::take(x.len());
     for i in 0..n {
         let row = &x[i * d..(i + 1) * d];
         let mut mu = 0f32;
@@ -172,24 +151,34 @@ pub fn logsumexp(row: &[f32]) -> f32 {
 /// Iterative-argmax top-k over `scores` (first maximum wins ties) —
 /// mirrors `layers.py::small_top_k`. Returns (indices, values).
 pub fn top_k(scores: &[f32], k: usize) -> (Vec<usize>, Vec<f32>) {
+    let mut idx = vec![0usize; k];
+    let mut val = vec![0f32; k];
+    top_k_into(scores, &mut idx, &mut val);
+    (idx, val)
+}
+
+/// Allocation-free [`top_k`]: selects `idx_out.len()` experts by an
+/// in-place scan that skips already-chosen indices (k is small, so the
+/// O(k) membership check beats the reference's full `to_vec` copy +
+/// masking). Selection and tie-breaking are identical to the masked
+/// scan for the finite scores a router produces.
+pub fn top_k_into(scores: &[f32], idx_out: &mut [usize], val_out: &mut [f32]) {
+    let k = idx_out.len();
     debug_assert!(k <= scores.len());
-    let mut masked = scores.to_vec();
-    let mut idx = Vec::with_capacity(k);
-    let mut val = Vec::with_capacity(k);
-    for _ in 0..k {
+    debug_assert_eq!(val_out.len(), k);
+    for j in 0..k {
+        let chosen = &idx_out[..j];
         let mut best = 0usize;
         let mut bv = f32::NEG_INFINITY;
-        for (i, &v) in masked.iter().enumerate() {
-            if v > bv {
+        for (i, &v) in scores.iter().enumerate() {
+            if v > bv && !chosen.contains(&i) {
                 bv = v;
                 best = i;
             }
         }
-        idx.push(best);
-        val.push(scores[best]);
-        masked[best] = f32::NEG_INFINITY;
+        idx_out[j] = best;
+        val_out[j] = scores[best];
     }
-    (idx, val)
 }
 
 /// Routing activation (paper §2.2 / §3.6 design choice).
@@ -212,7 +201,11 @@ impl Router {
 }
 
 /// Route `x [n, d]` through selector `w_sel [d, e]`: returns
-/// (idx `[n*k]`, gate `[n*k]`, scores `[n*e]` for analysis).
+/// (idx `[n*k]`, gate `[n*k]`, scores `[n*e]`). The score tensor is
+/// only materialized for the analysis path — pass `want_scores =
+/// false` on the hot path and the buffer is recycled into the scratch
+/// arena instead of returned.
+#[allow(clippy::too_many_arguments)]
 pub fn route(
     x: &[f32],
     w_sel: &[f32],
@@ -220,8 +213,9 @@ pub fn route(
     e: usize,
     k: usize,
     router: Router,
+    want_scores: bool,
     macs: &mut MacCounter,
-) -> (Vec<usize>, Vec<f32>, Vec<f32>) {
+) -> (Vec<usize>, Vec<f32>, Option<Vec<f32>>) {
     let n = x.len() / d;
     let mut scores = matmul(x, w_sel, n, d, e);
     macs.router += (n * d * e) as f64;
@@ -235,20 +229,24 @@ pub fn route(
             softmax_rows(&mut scores, e);
         }
     }
-    let mut idx = Vec::with_capacity(n * k);
-    let mut gate = Vec::with_capacity(n * k);
+    let mut idx = vec![0usize; n * k];
+    let mut gate = vec![0f32; n * k];
     for i in 0..n {
-        let (ids, mut vals) = top_k(&scores[i * e..(i + 1) * e], k);
+        let (oi, og) = (&mut idx[i * k..(i + 1) * k], &mut gate[i * k..(i + 1) * k]);
+        top_k_into(&scores[i * e..(i + 1) * e], oi, og);
         if router == Router::Softmax {
-            let s: f32 = vals.iter().sum();
-            for v in vals.iter_mut() {
+            let s: f32 = og.iter().sum();
+            for v in og.iter_mut() {
                 *v /= s + 1e-9;
             }
         }
-        idx.extend(ids);
-        gate.extend(vals);
     }
-    (idx, gate, scores)
+    if want_scores {
+        (idx, gate, Some(scores))
+    } else {
+        scratch::put(scores);
+        (idx, gate, None)
+    }
 }
 
 /// Classic sinusoidal embedding: `[count, d]` with `[sin | cos]` halves
@@ -410,14 +408,17 @@ mod tests {
         let x: Vec<f32> = (0..6 * 8).map(|_| rng.normal() as f32).collect();
         let w: Vec<f32> = (0..8 * 4).map(|_| rng.normal() as f32).collect();
         let mut macs = MacCounter::default();
-        let (idx, gate, scores) = route(&x, &w, 8, 4, 2, Router::Sigmoid, &mut macs);
+        let (idx, gate, scores) = route(&x, &w, 8, 4, 2, Router::Sigmoid, true, &mut macs);
+        let scores = scores.expect("want_scores = true returns the score tensor");
         assert_eq!(idx.len(), 12);
         assert_eq!(scores.len(), 24);
         assert!(gate.iter().all(|&g| g > 0.0 && g < 1.0), "sigmoid gate range");
         assert!(scores.iter().all(|&s| s > 0.0 && s < 1.0));
         assert!(macs.router > 0.0);
-        // Softmax router: per-token gates renormalize to ~1.
-        let (_, gate, _) = route(&x, &w, 8, 4, 2, Router::Softmax, &mut macs);
+        // Softmax router: per-token gates renormalize to ~1; the hot
+        // path (want_scores = false) skips the score tensor entirely.
+        let (_, gate, scores) = route(&x, &w, 8, 4, 2, Router::Softmax, false, &mut macs);
+        assert!(scores.is_none(), "hot path must not materialize scores");
         for pair in gate.chunks(2) {
             let s: f32 = pair.iter().sum();
             assert!((s - 1.0).abs() < 1e-4);

@@ -391,7 +391,8 @@ fn prop_sigmoid_router_gates_in_unit_interval() {
             let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
             let w: Vec<f32> = (0..d * e).map(|_| rng.normal() as f32).collect();
             let mut macs = MacCounter::default();
-            let (idx, gate, scores) = route(&x, &w, d, e, k, Router::Sigmoid, &mut macs);
+            let (idx, gate, scores) = route(&x, &w, d, e, k, Router::Sigmoid, true, &mut macs);
+            let scores = scores.ok_or("want_scores = true must return scores")?;
             if idx.len() != n * k || gate.len() != n * k || scores.len() != n * e {
                 return Err("shape mismatch".into());
             }
@@ -412,7 +413,10 @@ fn prop_sigmoid_router_gates_in_unit_interval() {
                 }
             }
             // Softmax (competitive) router: top-k gates renormalize to 1.
-            let (_, sgate, _) = route(&x, &w, d, e, k, Router::Softmax, &mut macs);
+            let (_, sgate, none) = route(&x, &w, d, e, k, Router::Softmax, false, &mut macs);
+            if none.is_some() {
+                return Err("want_scores = false must skip the score tensor".into());
+            }
             for row in sgate.chunks(k) {
                 let s: f32 = row.iter().sum();
                 if (s - 1.0).abs() > 1e-4 {
@@ -439,7 +443,7 @@ fn prop_single_expert_moe_reduces_to_gated_dense() {
             let w: Vec<f32> = (0..d * c).map(|_| rng.normal() as f32).collect();
             let w_sel: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
             let mut macs = MacCounter::default();
-            let (idx, gate, _) = route(&x, &w_sel, d, 1, 1, Router::Sigmoid, &mut macs);
+            let (idx, gate, _) = route(&x, &w_sel, d, 1, 1, Router::Sigmoid, false, &mut macs);
             if idx.iter().any(|&i| i != 0) {
                 return Err("E=1 must always select expert 0".into());
             }
