@@ -14,18 +14,21 @@ CARGO ?= cargo
 CLIPPY_ALLOW = -A clippy::needless_range_loop -A clippy::too_many_arguments \
                -A clippy::type_complexity -A clippy::manual_memcpy
 
-.PHONY: check build test lint artifacts smoke bench bench-tables clean
+.PHONY: check build test lint artifacts smoke bench bench-serve bench-tables clean
 
 ## Tier-1: build + full test suite + lint gate, artifact-free. The
-## golden-vector and decode suites re-run under PALLAS_THREADS=4 (the
-## kernels must be bit-identical at any thread count), and a 1-thread
+## golden-vector, decode and serve suites re-run under PALLAS_THREADS=4
+## (the kernels must be bit-identical at any thread count); a 1-thread
 ## step_latency smoke keeps the bench harness and its JSON emitter
-## compiling and running.
+## compiling and running; and a 1-thread serve smoke (4 concurrent
+## tiny-sh requests through the continuous-batching scheduler) keeps
+## the serving bench + fused decode path exercised end to end.
 check:
 	$(CARGO) build --release
 	$(CARGO) test -q
-	PALLAS_THREADS=4 $(CARGO) test -q --test native --test decode
+	PALLAS_THREADS=4 $(CARGO) test -q --test native --test decode --test serve
 	PALLAS_THREADS=1 SWITCHHEAD_BENCH_SMOKE=1 $(CARGO) bench --bench step_latency
+	PALLAS_THREADS=1 SWITCHHEAD_BENCH_SMOKE=1 $(CARGO) bench --bench serve_throughput
 	$(MAKE) lint
 
 build:
@@ -49,6 +52,12 @@ bench: build
 
 ## Historical alias for the artifact-free latency run.
 smoke: bench
+
+## Continuous-batching serving bench: aggregate decode tok/s and
+## p50/p95 per-token latency for 8 concurrent sessions vs the serial
+## per-session loop; emits BENCH_serve_throughput.json.
+bench-serve: build
+	$(CARGO) bench --bench serve_throughput
 
 ## Analytic paper tables, artifact-free (--quick is forced when
 ## artifacts/ is missing; measured rows need `make artifacts` first).

@@ -1,0 +1,216 @@
+//! Serving-layer load generator: aggregate decode throughput and
+//! per-token latency of the continuous-batching scheduler (one fused
+//! forward per tick over every live session) versus the serial
+//! per-session loop the same traffic would cost without batching.
+//!
+//! For each config it drives N concurrent greedy requests two ways
+//! (identical synthetic traffic via `serve::load`, shared with the
+//! `serve` CLI subcommand):
+//!
+//! * **serial** — one request at a time: prefill, then single-row
+//!   decode steps (each timed — the per-token latency distribution).
+//! * **batched** — all N through `serve::Scheduler` with bounded-queue
+//!   backpressure; a token produced in a tick inherits that tick's
+//!   fused-decode-phase duration (`TickReport::decode_seconds`, which
+//!   excludes admission prefills — symmetric with the serial numbers)
+//!   as its latency.
+//!
+//! Both paths must produce identical token streams (asserted — greedy
+//! decoding plus the bit-identical fused step make this exact), so the
+//! comparison is pure execution strategy. Every number lands in
+//! `BENCH_serve_throughput.json` (`target/…smoke.json` under
+//! `SWITCHHEAD_BENCH_SMOKE=1`, which `make check` runs 1-threaded with
+//! 4 concurrent tiny-sh requests).
+
+use std::time::Instant;
+
+use switchhead::bench::Table;
+use switchhead::config::{ModelConfig, Task};
+use switchhead::coordinator::generate::sample_logits;
+use switchhead::kernels;
+use switchhead::model::NativeEngine;
+use switchhead::runtime::{Backend, Session, TokenBatch};
+use switchhead::serve::{
+    drive, synth_requests, GenRequest, SamplingParams, Scheduler, ServeOpts, SAMPLE_STREAM,
+};
+use switchhead::util::json::Json;
+use switchhead::util::rng::Pcg;
+use switchhead::util::stats::quantile;
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn str_(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
+
+struct RunResult {
+    token_streams: Vec<Vec<i32>>,
+    total_tokens: usize,
+    secs: f64,
+    /// Per-token latency samples, milliseconds.
+    lat_ms: Vec<f64>,
+}
+
+/// The no-batching baseline: each request decoded to completion on its
+/// own single-row session, one at a time.
+fn run_serial(engine: &NativeEngine, reqs: &[GenRequest]) -> RunResult {
+    let t0 = Instant::now();
+    let mut lat_ms = Vec::new();
+    let mut token_streams = Vec::with_capacity(reqs.len());
+    let mut total_tokens = 0usize;
+    for r in reqs {
+        let mut session = engine.open_session(1).unwrap();
+        let batch = TokenBatch::new(r.prompt.clone(), 1, r.prompt.len()).unwrap();
+        let mut logits = session.prefill(&batch).unwrap();
+        let mut rng = Pcg::new(r.sampling.seed, SAMPLE_STREAM);
+        let s = &r.sampling;
+        let first = sample_logits(logits.row(0), s.temperature, s.top_k, &mut rng) as i32;
+        let mut tokens = vec![first];
+        while tokens.len() < r.max_new_tokens {
+            let t1 = Instant::now();
+            logits = session.decode(&[*tokens.last().unwrap()]).unwrap();
+            lat_ms.push(t1.elapsed().as_secs_f64() * 1000.0);
+            tokens.push(sample_logits(logits.row(0), s.temperature, s.top_k, &mut rng) as i32);
+        }
+        total_tokens += tokens.len();
+        token_streams.push(tokens);
+    }
+    RunResult { token_streams, total_tokens, secs: t0.elapsed().as_secs_f64(), lat_ms }
+}
+
+/// The continuous-batching path: all requests through the scheduler,
+/// submission throttled by the bounded queue (`serve::load::drive`).
+fn run_batched(engine: &NativeEngine, reqs: &[GenRequest], slots: usize) -> RunResult {
+    let opts = ServeOpts { slots, queue_cap: reqs.len().max(1) };
+    let mut sched = Scheduler::new(engine, &opts).unwrap();
+    let t0 = Instant::now();
+    let mut lat_ms = Vec::new();
+    drive(&mut sched, reqs.to_vec(), |report| {
+        // Every token produced this tick waited one fused decode step
+        // (admission prefills excluded — symmetric with the serial
+        // baseline, which times only its decode calls).
+        for _ in 0..report.batch {
+            lat_ms.push(report.decode_seconds * 1000.0);
+        }
+    })
+    .unwrap();
+    let secs = t0.elapsed().as_secs_f64();
+    let mut outs = sched.drain_finished();
+    outs.sort_by_key(|o| o.id);
+    let total_tokens = sched.stats().total_tokens as usize;
+    RunResult {
+        token_streams: outs.into_iter().map(|o| o.tokens).collect(),
+        total_tokens,
+        secs,
+        lat_ms,
+    }
+}
+
+fn bench_one(
+    name: &str,
+    requests: usize,
+    slots: usize,
+    tokens: usize,
+    table: &mut Table,
+) -> Option<Json> {
+    let cfg = match ModelConfig::load(&format!("configs/{name}.json")) {
+        Ok(c) => c,
+        Err(e) => {
+            println!("SKIP {name}: {e:#}");
+            return None;
+        }
+    };
+    if cfg.task != Task::Lm {
+        return None;
+    }
+    let engine = NativeEngine::new(&cfg, 42).unwrap();
+    let sampling = SamplingParams { temperature: 0.0, top_k: 0, seed: 5 };
+    let reqs = synth_requests(&cfg, requests, (cfg.seq_len / 2).max(1), tokens, &sampling);
+
+    let serial = run_serial(&engine, &reqs);
+    let batched = run_batched(&engine, &reqs, slots);
+    assert_eq!(
+        serial.token_streams, batched.token_streams,
+        "{name}: batched decode diverged from the serial loop"
+    );
+
+    let serial_tok_s = serial.total_tokens as f64 / serial.secs.max(1e-9);
+    let batched_tok_s = batched.total_tokens as f64 / batched.secs.max(1e-9);
+    let speedup = batched_tok_s / serial_tok_s.max(1e-9);
+    let row = |mode: &str, r: &RunResult, tok_s: f64| {
+        vec![
+            name.into(),
+            mode.into(),
+            format!("{:.0}", tok_s),
+            format!("{:.3}", quantile(&r.lat_ms, 0.5)),
+            format!("{:.3}", quantile(&r.lat_ms, 0.95)),
+            format!("{}", r.total_tokens),
+        ]
+    };
+    table.push(row("serial", &serial, serial_tok_s));
+    table.push(row("batched", &batched, batched_tok_s));
+    Some(Json::from_pairs(vec![
+        ("config", str_(name)),
+        ("requests", num(requests as f64)),
+        ("slots", num(slots as f64)),
+        ("tokens_per_request", num(tokens as f64)),
+        ("serial_tok_s", num(serial_tok_s)),
+        ("batched_tok_s", num(batched_tok_s)),
+        ("speedup", num(speedup)),
+        ("serial_p50_ms", num(quantile(&serial.lat_ms, 0.5))),
+        ("serial_p95_ms", num(quantile(&serial.lat_ms, 0.95))),
+        ("batched_p50_ms", num(quantile(&batched.lat_ms, 0.5))),
+        ("batched_p95_ms", num(quantile(&batched.lat_ms, 0.95))),
+        ("total_tokens", num(batched.total_tokens as f64)),
+    ]))
+}
+
+fn main() {
+    let smoke = std::env::var("SWITCHHEAD_BENCH_SMOKE").as_deref() == Ok("1");
+    // Acceptance shape: 8 concurrent sessions vs the serial loop.
+    // Smoke: 4 concurrent tiny-sh requests (make check, 1 thread).
+    let (requests, slots, tokens) = if smoke { (4, 4, 8) } else { (8, 8, 32) };
+    let configs: &[&str] =
+        if smoke { &["tiny-sh"] } else { &["tiny-sh", "tiny-dense", "tiny-switchall"] };
+
+    let mut table = Table::new(
+        &format!(
+            "Serve throughput ({} concurrent requests, {} slots, {} tok/request, {} threads)",
+            requests,
+            slots,
+            tokens,
+            kernels::threads()
+        ),
+        &["config", "mode", "tok/s", "p50 ms/tok", "p95 ms/tok", "tokens"],
+    );
+    let mut rows = Vec::new();
+    for name in configs {
+        if let Some(j) = bench_one(name, requests, slots, tokens, &mut table) {
+            rows.push(j);
+        }
+    }
+    table.print();
+
+    let out = Json::from_pairs(vec![
+        ("bench", str_("serve_throughput")),
+        ("smoke", Json::Bool(smoke)),
+        ("requests", num(requests as f64)),
+        ("slots", num(slots as f64)),
+        ("tokens_per_request", num(tokens as f64)),
+        ("threads", num(kernels::threads() as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    // Smoke runs land under target/ (gitignored) so `make check` never
+    // clobbers a real `make bench-serve` trajectory file.
+    let path = if smoke {
+        "target/BENCH_serve_throughput.smoke.json"
+    } else {
+        "BENCH_serve_throughput.json"
+    };
+    match std::fs::write(path, out.to_string_pretty() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\nWARN: could not write {path}: {e}"),
+    }
+}

@@ -18,6 +18,9 @@
 //!   (token, slot) pairs bucketed per selected expert (the Switch
 //!   Transformers batching argument), one grouped blocked product per
 //!   expert into a staging buffer, gates applied in original order.
+//!   [`moe_matmul_banks_into`] extends the same sort to the union of
+//!   every head's expert bank, so the serving layer's fused decode
+//!   tick is a single dispatch per layer and projection type.
 //! * [`scratch`] — thread-local buffer arena replacing the hot path's
 //!   per-op `Vec` allocations.
 //! * [`reference`] — the original scalar kernels, kept as the oracle.
@@ -39,7 +42,7 @@ pub mod reference;
 pub mod scratch;
 
 pub use matmul::matmul_into;
-pub use moe::moe_matmul_into;
+pub use moe::{moe_matmul_banks_into, moe_matmul_into};
 pub use pool::{par_rows, set_threads, threads, PAR_MIN_WORK};
 
 /// Raw mutable base pointer that may cross thread boundaries so pool

@@ -11,6 +11,13 @@
 //! f32 accumulation order identical to
 //! [`super::reference::moe_matmul_ref`] — bit-identical results, just
 //! grouped for locality and sharded across the pool.
+//!
+//! Two entry points share the machinery: [`moe_matmul_into`] dispatches
+//! one expert bank (one head), and [`moe_matmul_banks_into`] fuses the
+//! banks of every head of a layer into a single grouped dispatch over
+//! the union of (token, head, expert) selections — the serving layer's
+//! batched decode uses it so one fused tick touches each selected
+//! expert matrix once across all sessions and heads.
 
 use crate::kernels::matmul::row_matmul;
 use crate::kernels::pool::par_rows;
@@ -31,49 +38,100 @@ pub fn moe_matmul_into(
     k: usize,
 ) {
     let n = x.len() / rows;
-    let pairs = n * k;
+    assert_eq!(idx.len(), n * k, "moe idx size");
+    // The single-bank call is the banks dispatch with one shared-x bank.
+    moe_matmul_banks_into(out, x, &[experts], rows, cols, idx, gate, k, 0);
+}
+
+/// Multi-bank MoE projection: ONE grouped dispatch over the union of
+/// (bank, token, slot) selections across `banks.len()` expert banks
+/// (= the heads of a layer). `idx`/`gate` are `[n_banks, n, k]`
+/// flattened; `out` is `[n_banks, n, cols]` (overwritten). `x` holds
+/// either a single `[n, rows]` block shared by every bank
+/// (`x_bank_stride == 0` — the Q/K/V case, where all heads project the
+/// same hidden states) or one `[n, rows]` block per bank
+/// (`x_bank_stride == n` — the output-projection case, where each head
+/// projects its own attended rows).
+///
+/// Pairs are counting-sorted by *global* expert id (bank offset +
+/// in-bank index), so consecutive per-pair products share one resident
+/// expert matrix across the whole union; gates are applied per output
+/// row in original slot order. Every output row is therefore
+/// bit-identical to `banks.len()` separate [`moe_matmul_into`] calls.
+#[allow(clippy::too_many_arguments)]
+pub fn moe_matmul_banks_into(
+    out: &mut [f32],
+    x: &[f32],
+    banks: &[&[Vec<f32>]],
+    rows: usize,
+    cols: usize,
+    idx: &[usize],
+    gate: &[f32],
+    k: usize,
+    x_bank_stride: usize,
+) {
+    let nb = banks.len();
+    assert!(nb > 0, "moe banks empty");
+    let n = idx.len() / (nb * k);
+    let pairs = nb * n * k;
     assert_eq!(idx.len(), pairs, "moe idx size");
     assert_eq!(gate.len(), pairs, "moe gate size");
-    assert_eq!(out.len(), n * cols, "moe out size");
+    assert_eq!(out.len(), nb * n * cols, "moe out size");
+    if x_bank_stride == 0 {
+        assert_eq!(x.len(), n * rows, "moe x size (shared)");
+    } else {
+        assert_eq!(x_bank_stride, n, "moe x bank stride");
+        assert_eq!(x.len(), nb * n * rows, "moe x size (per bank)");
+    }
 
-    // Counting sort of (token, slot) pairs by selected expert — the
-    // grouped dispatch order. Stable, so within one expert the pairs
-    // stay in token order (good x-side locality too).
-    let ne = experts.len();
+    // Global expert-id offsets: bank b's expert e sorts as off[b] + e.
+    let mut off = vec![0usize; nb + 1];
+    for (b, bank) in banks.iter().enumerate() {
+        off[b + 1] = off[b] + bank.len();
+    }
+    let ne = off[nb];
+
+    // Counting sort of (bank, token, slot) pairs by global expert id —
+    // the grouped dispatch order. Stable, so within one expert the
+    // pairs stay in (bank, token) order (good x-side locality too).
     let mut cursor = vec![0usize; ne + 1];
-    for &e in idx {
-        cursor[e + 1] += 1;
+    for (p, &e) in idx.iter().enumerate() {
+        cursor[off[p / (n * k)] + e + 1] += 1;
     }
     for e in 0..ne {
         cursor[e + 1] += cursor[e];
     }
     let mut order = vec![0u32; pairs];
     for (p, &e) in idx.iter().enumerate() {
-        order[cursor[e]] = p as u32;
-        cursor[e] += 1;
+        let g = off[p / (n * k)] + e;
+        order[cursor[g]] = p as u32;
+        cursor[g] += 1;
     }
 
     // Stage the ungated per-pair products: one blocked row product per
-    // (token, slot) pair, grouped by expert. Chunks of the grouped
-    // order are contiguous, so a chunk mostly reuses one expert matrix.
+    // (bank, token, slot) pair, grouped by expert. Chunks of the
+    // grouped order are contiguous, so a chunk mostly reuses one
+    // resident expert matrix.
     let mut tmp = scratch::take(pairs * cols);
     let tmp_ptr = SendPtr(tmp.as_mut_ptr());
     par_rows(pairs, rows * cols, |lo, hi| {
         for &p in &order[lo..hi] {
             let p = p as usize;
-            let i = p / k;
+            let b = p / (n * k);
+            let i = (p % (n * k)) / k;
             // SAFETY: each pair id appears exactly once in `order`, so
             // staging rows are disjoint across chunks.
             let or = unsafe { tmp_ptr.row(p * cols, cols) };
-            row_matmul(or, &x[i * rows..(i + 1) * rows], &experts[idx[p]], cols);
+            let xr = &x[(b * x_bank_stride + i) * rows..(b * x_bank_stride + i + 1) * rows];
+            row_matmul(or, xr, &banks[b][idx[p]], cols);
         }
     });
 
-    // Gate application in the original (token, slot) order — the exact
-    // per-element accumulation order of the scalar reference.
+    // Gate application in the original (bank, token, slot) order — the
+    // exact per-element accumulation order of the scalar reference.
     let out_ptr = SendPtr(out.as_mut_ptr());
     let tmp_ref = &tmp;
-    par_rows(n, k * cols, |lo, hi| {
+    par_rows(nb * n, k * cols, |lo, hi| {
         for i in lo..hi {
             // SAFETY: output rows `lo..hi` are disjoint across chunks.
             let or = unsafe { out_ptr.row(i * cols, cols) };

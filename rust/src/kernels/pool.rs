@@ -217,13 +217,41 @@ thread_local! {
 
 static POOL: RwLock<Option<Arc<Pool>>> = RwLock::new(None);
 
+/// Parse a `PALLAS_THREADS` value: `Ok(count)` for a positive integer
+/// (capped at 256), `Err(reason)` for anything else (empty, garbage,
+/// zero). Pure so the fallback policy is unit-testable without
+/// touching process environment.
+fn parse_pallas_threads(raw: &str) -> std::result::Result<usize, String> {
+    match raw.trim().parse::<usize>() {
+        Ok(0) => Err(format!("PALLAS_THREADS={raw:?} is zero (need >= 1)")),
+        Ok(n) => Ok(n.min(256)),
+        Err(_) => Err(format!("PALLAS_THREADS={raw:?} is not a thread count")),
+    }
+}
+
+/// `available_parallelism` capped at [`MAX_DEFAULT_THREADS`] — the
+/// thread count used when `PALLAS_THREADS` is unset or invalid.
+fn hardware_default() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(MAX_DEFAULT_THREADS)
+}
+
 fn default_threads() -> usize {
-    match std::env::var("PALLAS_THREADS").ok().and_then(|s| s.parse::<usize>().ok()) {
-        Some(n) if n >= 1 => n.min(256),
-        _ => std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
-            .min(MAX_DEFAULT_THREADS),
+    match std::env::var("PALLAS_THREADS") {
+        Ok(raw) => match parse_pallas_threads(&raw) {
+            Ok(n) => n,
+            Err(why) => {
+                // Invalid values degrade to the hardware default with a
+                // warning instead of panicking or silently ignoring the
+                // operator's intent.
+                let fb = hardware_default();
+                eprintln!("WARN: {why}; falling back to {fb} thread(s)");
+                fb
+            }
+        },
+        Err(_) => hardware_default(),
     }
 }
 
@@ -320,6 +348,24 @@ mod tests {
             });
             assert_eq!(sum.load(Ordering::Relaxed), 127 * 128 / 2);
         }
+    }
+
+    #[test]
+    fn pallas_threads_parsing_is_hardened() {
+        // Valid counts pass through (capped at 256).
+        assert_eq!(parse_pallas_threads("1"), Ok(1));
+        assert_eq!(parse_pallas_threads("8"), Ok(8));
+        assert_eq!(parse_pallas_threads(" 4 "), Ok(4), "whitespace is tolerated");
+        assert_eq!(parse_pallas_threads("9999"), Ok(256), "capped, not rejected");
+        // Zero and garbage fall back (with a warning at the call site),
+        // never panic.
+        assert!(parse_pallas_threads("0").is_err());
+        assert!(parse_pallas_threads("").is_err());
+        assert!(parse_pallas_threads("lots").is_err());
+        assert!(parse_pallas_threads("-2").is_err());
+        assert!(parse_pallas_threads("1.5").is_err());
+        // The fallback itself is always a usable count.
+        assert!(hardware_default() >= 1);
     }
 
     #[test]

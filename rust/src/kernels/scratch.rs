@@ -12,11 +12,20 @@
 //! long-lived decoding session reaches zero-allocation steady state on
 //! whatever thread drives it. Buffers that escape (e.g. moved into a
 //! `Logits` response) simply leave the pool; nothing requires `put`.
+//!
+//! At the [`MAX_POOLED`] retention cap the arena keeps the *largest*
+//! buffers: a returned buffer displaces the smallest pooled one when it
+//! is bigger (the smallest is freed), otherwise it is freed itself.
+//! Either way exactly one buffer is dropped, so a long decode loop —
+//! which cycles a fixed working set of shapes — converges on the cap
+//! instead of churning its biggest allocations.
 
 use std::cell::RefCell;
 
-/// Retention cap per thread — beyond this, returned buffers are freed
-/// rather than pooled (bounds memory for pathological call patterns).
+/// Retention cap per thread — beyond this, every `put` frees exactly
+/// one buffer (the smaller of: the incoming one, the smallest pooled
+/// one), which bounds both the buffer count and the churn for
+/// pathological call patterns.
 const MAX_POOLED: usize = 64;
 
 thread_local! {
@@ -38,7 +47,9 @@ pub fn take(len: usize) -> Vec<f32> {
     buf
 }
 
-/// Return a buffer to this thread's arena for reuse.
+/// Return a buffer to this thread's arena for reuse. At the retention
+/// cap the smallest buffer (incoming or pooled) is freed so the arena
+/// keeps its most useful allocations.
 pub fn put(buf: Vec<f32>) {
     if buf.capacity() == 0 {
         return;
@@ -47,8 +58,33 @@ pub fn put(buf: Vec<f32>) {
         let mut p = p.borrow_mut();
         if p.len() < MAX_POOLED {
             p.push(buf);
+            return;
+        }
+        // Cap hit: evict the smallest pooled buffer if the incoming one
+        // is bigger; otherwise the incoming one IS the smallest — drop
+        // it. Exactly one buffer is freed either way.
+        let (smallest, cap) = p
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (i, v.capacity()))
+            .min_by_key(|&(_, c)| c)
+            .expect("pool at cap is non-empty");
+        if cap < buf.capacity() {
+            p[smallest] = buf;
         }
     });
+}
+
+/// Number of buffers currently pooled on this thread (test/debug
+/// introspection; bounded by `MAX_POOLED`).
+pub fn pooled_buffers() -> usize {
+    POOL.with(|p| p.borrow().len())
+}
+
+/// Total f32 capacity currently pooled on this thread (test/debug
+/// introspection).
+pub fn pooled_floats() -> usize {
+    POOL.with(|p| p.borrow().iter().map(Vec::capacity).sum())
 }
 
 #[cfg(test)]
@@ -72,5 +108,69 @@ mod tests {
         let big = take(1024);
         assert_eq!(big.len(), 1024);
         assert!(big.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn cap_evicts_smallest_not_incoming() {
+        // Run on a dedicated thread so this test owns its thread-local
+        // pool (other tests on this thread would perturb the counts).
+        std::thread::spawn(|| {
+            // Fill the pool to the cap with small buffers.
+            for _ in 0..MAX_POOLED {
+                put(Vec::with_capacity(8));
+            }
+            assert_eq!(pooled_buffers(), MAX_POOLED);
+            let floats_before = pooled_floats();
+            // A big buffer returned at the cap must displace the
+            // smallest pooled one, not be dropped itself.
+            put(Vec::with_capacity(4096));
+            assert_eq!(pooled_buffers(), MAX_POOLED, "count stays at the cap");
+            assert!(pooled_floats() > floats_before, "smallest evicted, big one kept");
+            let got = take(4096);
+            assert!(got.capacity() >= 4096, "the retained big buffer is reusable");
+            // A small buffer returned at the cap is itself the
+            // smallest: it is dropped, the pool is unchanged.
+            put(got);
+            let floats_full = pooled_floats();
+            put(Vec::with_capacity(2));
+            assert_eq!(pooled_buffers(), MAX_POOLED);
+            assert_eq!(pooled_floats(), floats_full, "tiny incoming buffer dropped");
+        })
+        .join()
+        .unwrap();
+    }
+
+    #[test]
+    fn long_takeput_loop_stays_bounded() {
+        // A decode-loop-shaped workload: many iterations cycling a
+        // fixed set of shapes plus an occasional outlier. The arena
+        // must never exceed the cap in buffer count, and its retained
+        // capacity must converge (bounded by cap * largest shape).
+        std::thread::spawn(|| {
+            let shapes = [32usize, 128, 64, 256, 16, 1024];
+            let mut high_water = 0usize;
+            for step in 0..2000 {
+                let len = shapes[step % shapes.len()];
+                let mut bufs: Vec<Vec<f32>> = (0..4).map(|_| take(len)).collect();
+                if step % 97 == 0 {
+                    bufs.push(take(8192)); // outlier allocation
+                }
+                for b in bufs {
+                    put(b);
+                }
+                assert!(pooled_buffers() <= MAX_POOLED, "buffer count exceeded the cap");
+                high_water = high_water.max(pooled_floats());
+            }
+            assert!(pooled_buffers() <= MAX_POOLED);
+            // Retained capacity is bounded by the cap times the largest
+            // working-set shape (2x slack for allocator rounding) —
+            // i.e. it stopped growing.
+            assert!(
+                high_water <= MAX_POOLED * 2 * 8192,
+                "arena grew unbounded: {high_water} floats retained"
+            );
+        })
+        .join()
+        .unwrap();
     }
 }

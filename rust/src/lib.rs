@@ -26,6 +26,12 @@
 //! The native hot path executes on [`kernels`] — cache-blocked,
 //! `PALLAS_THREADS`-parallel matmul and expert-grouped MoE dispatch,
 //! bit-identical to the scalar reference at every thread count.
+//! Above the sessions sits [`serve`], the continuous-batching layer:
+//! a bounded request queue plus a scheduler that fuses every live
+//! session's next token into one forward per tick
+//! ([`model::decode_batched`]), so the expert-grouped dispatch runs
+//! over the union of (session, head, expert) selections instead of
+//! single-token batches.
 //!
 //! # Artifact-free test tier
 //!
@@ -57,6 +63,7 @@ pub mod kernels;
 pub mod macs;
 pub mod model;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 /// Repo-relative default locations (overridable via CLI flags).

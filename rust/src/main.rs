@@ -8,6 +8,7 @@
 //!   match-params parameter-matching solver (paper §3 procedure)
 //!   analyze      attention maps, expert usage, induction heads (§4)
 //!   probe        smoke-test an artifact bundle (init + 2 train steps)
+//!   serve        continuous-batching synthetic load (native backend)
 //!   bench-tables regenerate the paper's tables (see also cargo bench)
 
 use std::path::{Path, PathBuf};
@@ -47,6 +48,9 @@ commands:
                 [--temperature T] [--top-k K] [--seed S] [--artifacts DIR]
                 [--backend pjrt|native]
   probe         --config <json> [--artifacts DIR] [--backend pjrt|native]
+  serve         --config <json> [--requests N] [--slots S] [--queue-cap Q]
+                [--tokens M] [--prompt-len P] [--temperature T] [--top-k K]
+                [--seed S] [--init-seed S]   (native backend only)
   bench-tables  [--table 1|2|3|4|5|6|7|all] [--artifacts DIR] [--quick]
 
 backends: `pjrt` (default) replays `make artifacts` bundles and loads the
@@ -79,6 +83,7 @@ fn main() -> Result<()> {
         "analyze" => cmd_analyze(&args),
         "generate" => cmd_generate(&args),
         "probe" => cmd_probe(&args),
+        "serve" => cmd_serve(&args),
         "bench-tables" => switchhead::bench::tables::run_from_args(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -390,6 +395,73 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let text = generate_text(backend, &cfg, bpe, prompt, &opts)?;
     println!("prompt:  {prompt}");
     println!("sampled: {text}");
+    Ok(())
+}
+
+/// Synthetic continuous-batching load: submit N random-prompt requests
+/// through the bounded queue (respecting backpressure), tick the
+/// scheduler until idle, and report aggregate decode throughput.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use switchhead::serve::{
+        drive, synth_requests, FinishReason, SamplingParams, Scheduler, ServeOpts,
+    };
+
+    let cfg = load_cfg(args)?;
+    if cfg.task != Task::Lm {
+        bail!("serve requires an LM config");
+    }
+    if args.get_or("backend", "native") != "native" {
+        bail!("serve runs on the native backend only (the fused batched decode path)");
+    }
+    let engine = NativeEngine::new(&cfg, args.u64_or("init-seed", 42)?)?;
+    let n_requests = args.usize_or("requests", 8)?;
+    let opts = ServeOpts {
+        slots: args.usize_or("slots", 4)?,
+        queue_cap: args.usize_or("queue-cap", 16)?,
+    };
+    let tokens = args.usize_or("tokens", 32)?;
+    let max_prompt = args.usize_or("prompt-len", (cfg.seq_len / 2).max(1))?;
+    let sampling = SamplingParams {
+        temperature: args.f64_or("temperature", 0.0)?,
+        top_k: args.usize_or("top-k", 0)?,
+        seed: args.u64_or("seed", 0)?,
+    };
+    let reqs = synth_requests(&cfg, n_requests, max_prompt, tokens, &sampling);
+
+    let mut sched = Scheduler::new(&engine, &opts)?;
+    let t0 = std::time::Instant::now();
+    drive(&mut sched, reqs, |_| ())?;
+    let secs = t0.elapsed().as_secs_f64();
+    let mut outs = sched.drain_finished();
+    outs.sort_by_key(|o| o.id);
+
+    let mut table = Table::new(
+        &format!("Serve ({}, {} slots, queue {})", cfg.name, opts.slots, opts.queue_cap),
+        &["request", "prompt", "tokens", "finish"],
+    );
+    for o in &outs {
+        table.push(vec![
+            o.id.to_string(),
+            o.prompt_len.to_string(),
+            o.tokens.len().to_string(),
+            match o.finish {
+                FinishReason::Length => "length".into(),
+                FinishReason::Cancelled => "cancelled".into(),
+            },
+        ]);
+    }
+    table.print();
+    let st = sched.stats();
+    info(&format!(
+        "served {} requests: {} tokens in {:.3}s ({:.0} tok/s aggregate), {} ticks, \
+         peak batch {}",
+        outs.len(),
+        st.total_tokens,
+        secs,
+        st.total_tokens as f64 / secs.max(1e-9),
+        st.ticks,
+        st.peak_active,
+    ));
     Ok(())
 }
 

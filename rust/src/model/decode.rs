@@ -30,13 +30,29 @@
 //! ring capacity the oldest K/V entries are evicted (windowed
 //! attention), which is where the contract intentionally ends.
 //!
+//! # Batched step (continuous-batching serving)
+//!
+//! [`decode_batched`] fuses one decode tick of MANY sessions — at
+//! arbitrary, different positions — into a single forward pass: every
+//! per-token op (embedding, layer norm, routing, projections, MLP, the
+//! vocab head) runs once over the concatenated rows, and the MoE
+//! projections collapse into one expert-grouped dispatch over the
+//! union of (session, head, expert) selections per layer
+//! ([`crate::kernels::moe_matmul_banks_into`]). Only the attention
+//! core and the K/V ring pushes stay per-session (they depend on each
+//! session's private cache and position). Because every kernel
+//! preserves per-row accumulation order, a fused step is bit-identical
+//! to N sequential [`Session::decode`] calls — pinned by
+//! `rust/tests/serve.rs` across configs and thread counts. The
+//! `serve::Scheduler` drives this entry per tick.
+//!
 //! Keep in lock-step with `python/tools/native_ref.py::Session`.
 
 use crate::config::{ModelConfig, Positional, Task};
-use crate::kernels::{par_rows_mut, scratch};
+use crate::kernels::{matmul_into, moe_matmul_banks_into, par_rows_mut, scratch};
 use crate::model::attention::proj;
 use crate::model::block::mlp_apply;
-use crate::model::params::{AttnP, DenseP, MoaP, NativeModel, SwitchHeadP, XlP};
+use crate::model::params::{AttnP, DenseP, MoaP, NativeModel, Proj, SwitchHeadP, XlP};
 use crate::model::tensor::{
     layer_norm, matmul, moe_matmul, rope_rotate, route, sinusoidal_row, softmax_rows, MacCounter,
     Router,
@@ -450,6 +466,345 @@ fn dense_decode(
         let yo = matmul(&att, &p.w_o[hi], n, geo.dh, d);
         scratch::put(att);
         macs.proj_dense += (n * geo.dh * d) as f64;
+        for (yv, ov) in y.iter_mut().zip(&yo) {
+            *yv += ov;
+        }
+        scratch::put(yo);
+    }
+    y
+}
+
+/// Advance every session by one token per row in ONE fused forward
+/// pass — the serving layer's batched step. `next` holds one token per
+/// fused row, sessions concatenated in slice order; returns one
+/// [`Logits`] per session, in the same order.
+///
+/// All sessions must come from the same model and be prefilled; their
+/// positions may differ arbitrarily (each keeps its own K/V rings and
+/// XL distance table). Per-token work runs once over the fused batch,
+/// MoE projections as one union expert-grouped dispatch per layer and
+/// projection type; results are bit-identical to decoding each session
+/// sequentially. Per-session MAC counters advance exactly as in
+/// sequential decode: attention-core work is tallied per session, the
+/// per-token-uniform remainder is attributed by row share.
+pub fn decode_batched(
+    sessions: &mut [&mut NativeSession<'_>],
+    next: &[i32],
+) -> Result<Vec<Logits>> {
+    let Some(first) = sessions.first() else {
+        bail!("decode_batched: no sessions");
+    };
+    let model: &NativeModel = first.model;
+    let cfg = &model.cfg;
+    let mut offsets = Vec::with_capacity(sessions.len());
+    let mut n = 0usize;
+    for s in sessions.iter() {
+        if !std::ptr::eq(model as *const NativeModel, s.model as *const NativeModel) {
+            bail!("decode_batched: sessions span different models");
+        }
+        if s.pos == 0 {
+            bail!("decode_batched: session not prefilled");
+        }
+        offsets.push(n);
+        n += s.rows;
+    }
+    if next.len() != n {
+        bail!("decode_batched got {} tokens for {} fused rows", next.len(), n);
+    }
+    for &t in next {
+        if t < 0 || t as usize >= cfg.vocab_size {
+            bail!("token id {t} outside vocab {}", cfg.vocab_size);
+        }
+    }
+
+    let d = cfg.d_model;
+    let scale = (d as f64).sqrt() as f32;
+    let mut x = scratch::take(n * d);
+    for (i, &tok) in next.iter().enumerate() {
+        let row = &model.embed[(tok as usize) * d..(tok as usize + 1) * d];
+        let out = &mut x[i * d..(i + 1) * d];
+        for j in 0..d {
+            out[j] = row[j] * scale;
+        }
+    }
+
+    // Per-token-uniform work lands here and is split by row share at
+    // the end; session-position-dependent work (attention core, XL
+    // table growth) is tallied straight into each session's counter.
+    let mut step = MacCounter::default();
+    for li in 0..cfg.n_layers {
+        let bp = &model.layers[li];
+        let x_ln = layer_norm(&x, &bp.ln1.g, &bp.ln1.b, d);
+        let a = match &bp.attn {
+            AttnP::SwitchHead(p) => {
+                switchhead_step(cfg, p, sessions, &offsets, li, &x_ln, &mut step)
+            }
+            AttnP::Dense(p) => dense_step(cfg, p, sessions, &offsets, li, &x_ln, &mut step),
+            AttnP::Moa(p) => moa_step(cfg, p, sessions, &offsets, li, &x_ln, &mut step),
+        };
+        scratch::put(x_ln);
+        for (xv, av) in x.iter_mut().zip(&a) {
+            *xv += av;
+        }
+        scratch::put(a);
+        let x_ln2 = layer_norm(&x, &bp.ln2.g, &bp.ln2.b, d);
+        let m = mlp_apply(cfg, &bp.mlp, &x_ln2, &mut step);
+        scratch::put(x_ln2);
+        for (xv, mv) in x.iter_mut().zip(&m) {
+            *xv += mv;
+        }
+        scratch::put(m);
+    }
+
+    // One token per row, so every fused row IS its own last position.
+    let h = layer_norm(&x, &model.ln_f.g, &model.ln_f.b, d);
+    scratch::put(x);
+    let n_out = NativeModel::n_out(cfg);
+    let logits = matmul(&h, &model.head, n, d, n_out);
+    scratch::put(h);
+
+    let mut out = Vec::with_capacity(sessions.len());
+    for (si, s) in sessions.iter_mut().enumerate() {
+        s.macs.add_scaled(&step, s.rows as f64, n as f64);
+        s.pos += 1;
+        let from = offsets[si] * n_out;
+        out.push(Logits::new(logits[from..from + s.rows * n_out].to_vec(), s.rows, n_out)?);
+    }
+    scratch::put(logits);
+    Ok(out)
+}
+
+/// Apply one projection type (K, Q, V or O) of every head over the
+/// fused batch: returns `[n_heads, n, cols]`. MoE projections run as
+/// ONE union expert-grouped dispatch across all heads
+/// ([`moe_matmul_banks_into`]); dense ones as one blocked matmul per
+/// head. `x_bank_stride == 0` shares `x` across heads (Q/K/V);
+/// `x_bank_stride == n` gives each head its own block (O, over the
+/// per-head attended rows).
+fn proj_heads(
+    x: &[f32],
+    x_bank_stride: usize,
+    projs: &[Proj],
+    idx: &[usize],
+    gate: &[f32],
+    k: usize,
+    macs: &mut MacCounter,
+) -> Vec<f32> {
+    let h = projs.len();
+    let (rows, cols) = (projs[0].rows, projs[0].cols);
+    let n = if x_bank_stride == 0 { x.len() / rows } else { x_bank_stride };
+    let mut out = scratch::take(h * n * cols);
+    if projs[0].moe {
+        let banks: Vec<&[Vec<f32>]> = projs.iter().map(|p| p.experts.as_slice()).collect();
+        moe_matmul_banks_into(&mut out, x, &banks, rows, cols, idx, gate, k, x_bank_stride);
+        macs.proj_moe += (h * n * k * (rows * cols + cols)) as f64;
+    } else {
+        for (hi, pr) in projs.iter().enumerate() {
+            let xb = if x_bank_stride == 0 { x } else { &x[hi * n * rows..(hi + 1) * n * rows] };
+            let ob = &mut out[hi * n * cols..(hi + 1) * n * cols];
+            matmul_into(ob, xb, &pr.experts[0], n, rows, cols);
+        }
+        macs.proj_dense += (h * n * rows * cols) as f64;
+    }
+    out
+}
+
+/// Rope-rotate (if configured) and ring-push one attention matrix's
+/// fused `[n, dh]` K/V chunks into each session's cache at its own
+/// position.
+fn push_kv_step(
+    cfg: &ModelConfig,
+    sessions: &mut [&mut NativeSession<'_>],
+    offsets: &[usize],
+    li: usize,
+    mat: usize,
+    kh: &mut [f32],
+    vh: &[f32],
+) {
+    let dh = cfg.d_head;
+    for (si, sess) in sessions.iter_mut().enumerate() {
+        let (o, r) = (offsets[si], sess.rows);
+        let geo = Geo { rows: r, tn: 1, pos0: sess.pos, cap: sess.cap, tc: sess.tc, dh };
+        let ks = &mut kh[o * dh..(o + r) * dh];
+        if cfg.pos == Positional::Rope {
+            rope_rotate(ks, r, 1, dh, geo.pos0);
+        }
+        sess.layers[li].kv[mat].push(ks, &vh[o * dh..(o + r) * dh], &geo);
+    }
+}
+
+/// Rope-rotate (if configured) each session's fused `[n, dh]` query
+/// chunk and attend it against that session's ring + XL pseudo-columns,
+/// writing the attended rows into `att`.
+#[allow(clippy::too_many_arguments)]
+fn attend_q_step(
+    cfg: &ModelConfig,
+    xl: Option<&XlP>,
+    mat: usize,
+    sessions: &mut [&mut NativeSession<'_>],
+    offsets: &[usize],
+    li: usize,
+    qh: &mut [f32],
+    att: &mut [f32],
+) {
+    let (d, dh) = (cfg.d_model, cfg.d_head);
+    for (si, sess) in sessions.iter_mut().enumerate() {
+        let (o, r) = (offsets[si], sess.rows);
+        let geo = Geo { rows: r, tn: 1, pos0: sess.pos, cap: sess.cap, tc: sess.tc, dh };
+        let q = &mut qh[o * dh..(o + r) * dh];
+        if cfg.pos == Positional::Rope {
+            rope_rotate(q, r, 1, dh, geo.pos0);
+        }
+        let sess = &mut **sess;
+        let st = &mut sess.layers[li];
+        let xlt = xl_tables(xl, &mut st.r[mat], mat, d, &geo, &mut sess.macs);
+        let a = attend(q, xlt, &st.kv[mat], &geo, &mut sess.macs);
+        att[o * dh..(o + r) * dh].copy_from_slice(&a);
+        scratch::put(a);
+    }
+}
+
+/// SwitchHead MoE attention, fused over sessions: per-head routing over
+/// the whole batch, then ONE union expert-grouped dispatch per
+/// projection type (K/Q/V over shared hidden states, O over the
+/// per-head attended rows), with only rope/push/attend per session.
+fn switchhead_step(
+    cfg: &ModelConfig,
+    p: &SwitchHeadP,
+    sessions: &mut [&mut NativeSession<'_>],
+    offsets: &[usize],
+    li: usize,
+    x_ln: &[f32],
+    step: &mut MacCounter,
+) -> Vec<f32> {
+    let (d, dh, e, k, h) = (cfg.d_model, cfg.d_head, cfg.att_n_experts, cfg.att_k, cfg.n_heads);
+    let router = Router::parse(&cfg.att_router);
+    let n = x_ln.len() / d;
+
+    // All-head routing: `[h, n, k]` flattened selections for the
+    // source side (K/V) and destination side (Q/O).
+    let mut idx_s = Vec::with_capacity(h * n * k);
+    let mut gate_s = Vec::with_capacity(h * n * k);
+    let mut idx_d = Vec::with_capacity(h * n * k);
+    let mut gate_d = Vec::with_capacity(h * n * k);
+    for hi in 0..h {
+        let (is, gs, _) = route(x_ln, &p.w_sel_s[hi], d, e, k, router, false, step);
+        idx_s.extend_from_slice(&is);
+        gate_s.extend_from_slice(&gs);
+        let w_sel_d = match &p.w_sel_d {
+            Some(sels) => &sels[hi],
+            None => &p.w_sel_s[hi],
+        };
+        let (id, gd, _) = route(x_ln, w_sel_d, d, e, k, router, false, step);
+        idx_d.extend_from_slice(&id);
+        gate_d.extend_from_slice(&gd);
+    }
+
+    let mut kh = proj_heads(x_ln, 0, &p.w_k, &idx_s, &gate_s, k, step);
+    let mut qh = proj_heads(x_ln, 0, &p.w_q, &idx_d, &gate_d, k, step);
+    let vh = proj_heads(x_ln, 0, &p.w_v, &idx_s, &gate_s, k, step);
+    let mut att = scratch::take(h * n * dh);
+    for hi in 0..h {
+        let span = hi * n * dh..(hi + 1) * n * dh;
+        push_kv_step(cfg, sessions, offsets, li, hi, &mut kh[span.clone()], &vh[span.clone()]);
+        attend_q_step(
+            cfg,
+            p.xl.as_ref(),
+            hi,
+            sessions,
+            offsets,
+            li,
+            &mut qh[span.clone()],
+            &mut att[span],
+        );
+    }
+    scratch::put(kh);
+    scratch::put(qh);
+    scratch::put(vh);
+
+    let yo = proj_heads(&att, n, &p.w_o, &idx_d, &gate_d, k, step);
+    scratch::put(att);
+    // Head-order accumulation — the sequential path's summation order.
+    let mut y = scratch::take(n * d);
+    for hi in 0..h {
+        for (yv, ov) in y.iter_mut().zip(&yo[hi * n * d..(hi + 1) * n * d]) {
+            *yv += ov;
+        }
+    }
+    scratch::put(yo);
+    y
+}
+
+/// Dense MHA, fused over sessions: per-head blocked projections over
+/// the whole batch, rope/push/attend per session.
+fn dense_step(
+    cfg: &ModelConfig,
+    p: &DenseP,
+    sessions: &mut [&mut NativeSession<'_>],
+    offsets: &[usize],
+    li: usize,
+    x_ln: &[f32],
+    step: &mut MacCounter,
+) -> Vec<f32> {
+    let (d, dh, h) = (cfg.d_model, cfg.d_head, cfg.n_heads);
+    let n = x_ln.len() / d;
+    let mut y = scratch::take(n * d);
+    for hi in 0..h {
+        let mut qh = matmul(x_ln, &p.w_q[hi], n, d, dh);
+        let mut kh = matmul(x_ln, &p.w_k[hi], n, d, dh);
+        let vh = matmul(x_ln, &p.w_v[hi], n, d, dh);
+        step.proj_dense += (3 * n * d * dh) as f64;
+        push_kv_step(cfg, sessions, offsets, li, hi, &mut kh, &vh);
+        let mut att = scratch::take(n * dh);
+        attend_q_step(cfg, p.xl.as_ref(), hi, sessions, offsets, li, &mut qh, &mut att);
+        scratch::put(qh);
+        scratch::put(kh);
+        scratch::put(vh);
+        let yo = matmul(&att, &p.w_o[hi], n, dh, d);
+        scratch::put(att);
+        step.proj_dense += (n * dh * d) as f64;
+        for (yv, ov) in y.iter_mut().zip(&yo) {
+            *yv += ov;
+        }
+        scratch::put(yo);
+    }
+    y
+}
+
+/// MoA, fused over sessions: shared K/V over the whole batch, routed
+/// query/output expert slots batch-wide, attend per session.
+fn moa_step(
+    cfg: &ModelConfig,
+    p: &MoaP,
+    sessions: &mut [&mut NativeSession<'_>],
+    offsets: &[usize],
+    li: usize,
+    x_ln: &[f32],
+    step: &mut MacCounter,
+) -> Vec<f32> {
+    let (d, dh, e, k) = (cfg.d_model, cfg.d_head, cfg.moa_n_experts, cfg.moa_k);
+    let n = x_ln.len() / d;
+    let mut kh = matmul(x_ln, &p.w_k, n, d, dh);
+    let vh = matmul(x_ln, &p.w_v, n, d, dh);
+    step.proj_dense += (2 * n * d * dh) as f64;
+    push_kv_step(cfg, sessions, offsets, li, 0, &mut kh, &vh);
+    scratch::put(kh);
+    scratch::put(vh);
+
+    let (idx, gate, _) = route(x_ln, &p.w_sel, d, e, k, Router::Softmax, false, step);
+    let ones = vec![1.0f32; n];
+    let mut y = scratch::take(n * d);
+    for j in 0..k {
+        let idx_j: Vec<usize> = (0..n).map(|i| idx[i * k + j]).collect();
+        let gate_j: Vec<f32> = (0..n).map(|i| gate[i * k + j]).collect();
+        let mut qj = moe_matmul(x_ln, &p.w_q, d, dh, &idx_j, &ones, 1);
+        step.proj_moe += (n * (d * dh + dh)) as f64;
+        let mut att = scratch::take(n * dh);
+        attend_q_step(cfg, p.xl.as_ref(), 0, sessions, offsets, li, &mut qj, &mut att);
+        scratch::put(qj);
+        let yo = moe_matmul(&att, &p.w_o, dh, d, &idx_j, &gate_j, 1);
+        scratch::put(att);
+        step.proj_moe += (n * (dh * d + d)) as f64;
         for (yv, ov) in y.iter_mut().zip(&yo) {
             *yv += ov;
         }

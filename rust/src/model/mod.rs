@@ -29,7 +29,8 @@
 //!   model-level `score` / `next_logits` / `class_logits` heads.
 //! * [`decode`] — [`NativeSession`], the incremental decoder with the
 //!   expert-sparse ring-buffered KV cache behind
-//!   [`crate::runtime::Session`].
+//!   [`crate::runtime::Session`], plus [`decode_batched`], the fused
+//!   multi-session step the `serve` continuous-batching layer drives.
 //! * [`engine`] — [`NativeEngine`], the [`crate::runtime::Backend`]
 //!   implementation wrapping it all behind the typed inference API.
 //!
@@ -49,7 +50,7 @@ pub mod engine;
 pub mod params;
 pub mod tensor;
 
-pub use decode::NativeSession;
+pub use decode::{decode_batched, NativeSession};
 pub use engine::NativeEngine;
 pub use params::NativeModel;
 pub use tensor::MacCounter;

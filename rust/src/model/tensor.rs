@@ -48,6 +48,20 @@ impl MacCounter {
     pub fn total(&self) -> f64 {
         self.proj_dense + self.proj_moe + self.attn_core + self.router + self.pos + self.mlp
     }
+
+    /// Add `other * num / den` field-wise — the fused batched decode's
+    /// per-session share of its per-token-uniform work (`num` = the
+    /// session's rows, `den` = the fused batch width). Multiplying
+    /// before dividing keeps the integral tallies exact whenever the
+    /// true share is an integer.
+    pub fn add_scaled(&mut self, other: &MacCounter, num: f64, den: f64) {
+        self.proj_dense += other.proj_dense * num / den;
+        self.proj_moe += other.proj_moe * num / den;
+        self.attn_core += other.attn_core * num / den;
+        self.router += other.router * num / den;
+        self.pos += other.pos * num / den;
+        self.mlp += other.mlp * num / den;
+    }
 }
 
 /// `[n, d] @ [d, m] -> [n, m]` (blocked + parallel; bit-identical to

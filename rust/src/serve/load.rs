@@ -1,0 +1,63 @@
+//! Synthetic load generation and the backpressure drive loop — shared
+//! by the `serve` CLI subcommand and `benches/serve_throughput.rs` so
+//! both exercise the scheduler with identical traffic.
+
+use std::collections::VecDeque;
+
+use crate::config::ModelConfig;
+use crate::serve::request::{GenRequest, SamplingParams};
+use crate::serve::scheduler::{Scheduler, TickReport};
+use crate::util::error::Result;
+use crate::util::rng::Pcg;
+
+/// PRNG stream tag for synthetic prompt generation.
+pub const LOAD_STREAM: u64 = 0xC11;
+
+/// Deterministic synthetic load: `n` requests with varying prompt
+/// lengths (`1 + (i * 7) % max_prompt`, clamped to the model context)
+/// of random in-vocab tokens. Request `i` samples with
+/// `sampling.seed + i`, so per-request streams stay independent.
+pub fn synth_requests(
+    cfg: &ModelConfig,
+    n: usize,
+    max_prompt: usize,
+    max_new_tokens: usize,
+    sampling: &SamplingParams,
+) -> Vec<GenRequest> {
+    let mut rng = Pcg::new(sampling.seed, LOAD_STREAM);
+    let max_prompt = max_prompt.clamp(1, cfg.ctx_len());
+    (0..n)
+        .map(|i| {
+            let plen = 1 + (i * 7) % max_prompt;
+            let prompt: Vec<i32> =
+                (0..plen).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+            GenRequest {
+                prompt,
+                max_new_tokens,
+                sampling: SamplingParams { seed: sampling.seed + i as u64, ..sampling.clone() },
+            }
+        })
+        .collect()
+}
+
+/// Feed `requests` through the scheduler with bounded-queue
+/// backpressure (submit while the queue has room, then tick) until
+/// every request has finished. `on_tick` observes each tick's report —
+/// benches use it to collect per-token latency from
+/// [`TickReport::decode_seconds`].
+pub fn drive<F: FnMut(&TickReport)>(
+    sched: &mut Scheduler<'_>,
+    requests: Vec<GenRequest>,
+    mut on_tick: F,
+) -> Result<()> {
+    let mut pending: VecDeque<GenRequest> = requests.into();
+    while !pending.is_empty() || !sched.is_idle() {
+        while sched.queue_free() > 0 {
+            let Some(req) = pending.pop_front() else { break };
+            sched.submit(req)?;
+        }
+        let report = sched.tick()?;
+        on_tick(&report);
+    }
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Continuous-batching serving layer — the system tier above the
+//! [`Session`](crate::runtime::Session) API.
+//!
+//! # Why this exists
+//!
+//! PR 2 gave each generation request a stateful session with an
+//! expert-sparse KV cache, and PR 3 made the MoE dispatch
+//! expert-grouped — but a lone session decodes one token per call, so
+//! the grouped dispatch only ever saw single-token batches and the
+//! worker pool idled between requests. The Switch Transformers
+//! batching argument pays off precisely when many concurrent tokens
+//! are fused into one step: SwitchHead's per-head expert sparsity then
+//! means a fused step touches only the union of selected experts
+//! across sessions, each expert matrix read once per tick.
+//!
+//! This module is that missing layer:
+//!
+//! * [`RequestQueue`] — bounded FIFO of [`GenRequest`]s; a full queue
+//!   rejects `push` (the backpressure signal).
+//! * [`Scheduler`] — admits requests into decode slots (prefilling a
+//!   fresh single-row session per request), cancels/retires them, and
+//!   per [`tick`](Scheduler::tick) assembles every active session's
+//!   next token into ONE fused [`decode_batched`] forward: one
+//!   expert-grouped dispatch per layer and projection type over the
+//!   union of (session, head, expert) selections, per-session KV rings
+//!   untouched.
+//! * Determinism: slot assignment is lowest-free-slot in queue order,
+//!   batch order is ascending slot index, and each request samples
+//!   from its own seeded RNG — a request's output is independent of
+//!   the traffic that shared its ticks, and a fused step is
+//!   bit-identical to sequential per-session decode (pinned by
+//!   `rust/tests/serve.rs` across configs and 1/2/4 threads).
+//!
+//! Serving is native-backend only: the fused step needs direct access
+//! to [`NativeSession`](crate::model::NativeSession) internals, which
+//! the PJRT windowed-recompute session does not expose.
+//!
+//! Drive it via the `serve` CLI subcommand (synthetic load generator)
+//! or `benches/serve_throughput.rs` (aggregate tok/s and p50/p95
+//! per-token latency vs a serial per-session loop, emitted to
+//! `BENCH_serve_throughput.json`); both share [`load`]'s request
+//! synthesizer and backpressure drive loop, so they exercise the
+//! scheduler with identical traffic.
+//!
+//! [`decode_batched`]: crate::model::decode_batched
+
+pub mod load;
+pub mod request;
+pub mod scheduler;
+
+pub use load::{drive, synth_requests};
+pub use request::{
+    FinishReason, GenOutput, GenRequest, QueuedRequest, RequestId, RequestQueue, SamplingParams,
+};
+pub use scheduler::{Scheduler, ServeOpts, ServeStats, TickReport, SAMPLE_STREAM};

@@ -1,0 +1,177 @@
+//! Request-side types of the serving layer: generation requests,
+//! sampling parameters, finished outputs, and the bounded
+//! [`RequestQueue`] that gives the engine backpressure.
+
+use std::collections::VecDeque;
+
+use crate::util::error::{bail, Result};
+
+/// Monotone per-scheduler request identifier (admission order).
+pub type RequestId = u64;
+
+/// Per-request sampling configuration. The default is greedy
+/// (temperature 0), which makes a request's token stream a pure
+/// function of the model and prompt — the property the serve tests pin
+/// batched-vs-sequential equivalence with.
+#[derive(Debug, Clone)]
+pub struct SamplingParams {
+    /// 0 (or anything <= 1e-6) = greedy argmax.
+    pub temperature: f64,
+    /// Top-k truncation; 0 = full distribution.
+    pub top_k: usize,
+    /// Seed of the request's private sampling RNG. Streams are
+    /// per-request, so a request's output never depends on which other
+    /// requests happened to share its batch.
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> SamplingParams {
+        SamplingParams { temperature: 0.0, top_k: 0, seed: 0 }
+    }
+}
+
+/// One generation request: a prompt, a token budget, sampling params.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub sampling: SamplingParams,
+}
+
+impl GenRequest {
+    /// Greedy request with default sampling.
+    pub fn greedy(prompt: Vec<i32>, max_new_tokens: usize) -> GenRequest {
+        GenRequest { prompt, max_new_tokens, sampling: SamplingParams::default() }
+    }
+}
+
+/// Why a request left the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generated its full `max_new_tokens` budget.
+    Length,
+    /// Cancelled by the caller (possibly with partial tokens).
+    Cancelled,
+}
+
+/// A finished request: identity, prompt length, every generated token,
+/// and why it stopped.
+#[derive(Debug, Clone)]
+pub struct GenOutput {
+    pub id: RequestId,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    pub finish: FinishReason,
+}
+
+/// A queued (not yet admitted) request.
+#[derive(Debug, Clone)]
+pub struct QueuedRequest {
+    pub id: RequestId,
+    pub req: GenRequest,
+}
+
+/// Bounded FIFO of pending requests. `push` errors when the queue is
+/// full — that error IS the backpressure signal: callers tick the
+/// scheduler (draining slots and therefore the queue) and retry.
+#[derive(Debug)]
+pub struct RequestQueue {
+    cap: usize,
+    next_id: RequestId,
+    items: VecDeque<QueuedRequest>,
+}
+
+impl RequestQueue {
+    pub fn new(cap: usize) -> RequestQueue {
+        RequestQueue { cap: cap.max(1), next_id: 0, items: VecDeque::new() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Free positions before `push` starts rejecting.
+    pub fn free(&self) -> usize {
+        self.cap - self.items.len()
+    }
+
+    /// Enqueue a request, assigning its id. Errors (without consuming a
+    /// queue position) when the queue is at capacity.
+    pub fn push(&mut self, req: GenRequest) -> Result<RequestId> {
+        if self.items.len() >= self.cap {
+            bail!(
+                "request queue full ({} pending, cap {}) — backpressure: tick the scheduler \
+                 and retry",
+                self.items.len(),
+                self.cap
+            );
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.items.push_back(QueuedRequest { id, req });
+        Ok(id)
+    }
+
+    /// Dequeue the oldest pending request.
+    pub fn pop(&mut self) -> Option<QueuedRequest> {
+        self.items.pop_front()
+    }
+
+    /// Remove a pending request by id (queued-state cancellation).
+    pub fn remove(&mut self, id: RequestId) -> Option<QueuedRequest> {
+        let at = self.items.iter().position(|q| q.id == id)?;
+        self.items.remove(at)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> GenRequest {
+        GenRequest::greedy(vec![1, 2, 3], 4)
+    }
+
+    #[test]
+    fn queue_is_fifo_with_monotone_ids() {
+        let mut q = RequestQueue::new(4);
+        let a = q.push(req()).unwrap();
+        let b = q.push(req()).unwrap();
+        assert!(b > a);
+        assert_eq!(q.pop().unwrap().id, a);
+        assert_eq!(q.pop().unwrap().id, b);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn queue_bounds_and_backpressure() {
+        let mut q = RequestQueue::new(2);
+        q.push(req()).unwrap();
+        q.push(req()).unwrap();
+        assert_eq!(q.free(), 0);
+        assert!(q.push(req()).is_err(), "full queue must reject");
+        q.pop().unwrap();
+        assert_eq!(q.free(), 1);
+        q.push(req()).unwrap();
+    }
+
+    #[test]
+    fn queue_remove_by_id() {
+        let mut q = RequestQueue::new(4);
+        let a = q.push(req()).unwrap();
+        let b = q.push(req()).unwrap();
+        assert_eq!(q.remove(b).unwrap().id, b);
+        assert!(q.remove(b).is_none());
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop().unwrap().id, a);
+    }
+}

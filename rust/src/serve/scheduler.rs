@@ -1,0 +1,352 @@
+//! The continuous-batching scheduler: slot admission, cancellation,
+//! and the fused per-tick decode over every live session.
+//!
+//! # Tick anatomy
+//!
+//! Each [`Scheduler::tick`] runs four deterministic phases:
+//!
+//! 1. **Evict** — slots whose request was cancelled are freed and
+//!    their partial output emitted.
+//! 2. **Admit** — queued requests fill free slots (lowest slot index
+//!    first, queue order): the request's prompt is prefilled into a
+//!    fresh single-row [`NativeSession`] and its first token sampled.
+//! 3. **Decode** — ONE fused [`decode_batched`] step over every active
+//!    session in ascending slot order. Per layer this is a single
+//!    expert-grouped dispatch over the union of (session, head,
+//!    expert) selections, instead of N independent single-row passes.
+//!    Each row's next token is then sampled from its logits with the
+//!    request's private RNG.
+//! 4. **Retire** — rows that generated `max_new_tokens` are freed and
+//!    emitted.
+//!
+//! Slot assignment and batch order are deterministic, and every
+//! request samples from its own seeded RNG stream, so a request's
+//! output is identical whatever other traffic shared its ticks —
+//! `rust/tests/serve.rs` pins scheduler output against sequential
+//! single-session generation.
+
+use crate::coordinator::generate::sample_logits;
+use crate::model::decode::decode_batched;
+use crate::model::{NativeEngine, NativeSession};
+use crate::runtime::{Session, TokenBatch};
+use crate::serve::request::{
+    FinishReason, GenOutput, GenRequest, QueuedRequest, RequestId, RequestQueue, SamplingParams,
+};
+use crate::util::error::{bail, Result};
+use crate::util::rng::Pcg;
+
+/// PRNG stream tag for per-request sampling (sequential oracles in the
+/// tests replay the same stream to reproduce scheduler output).
+pub const SAMPLE_STREAM: u64 = 0x5E4E;
+
+/// Serving shape: concurrent decode slots and queue depth.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Maximum concurrently decoding sessions (fused batch width cap).
+    pub slots: usize,
+    /// Bounded request-queue depth ([`RequestQueue`] backpressure).
+    pub queue_cap: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts { slots: 8, queue_cap: 64 }
+    }
+}
+
+/// Aggregate serving counters (monotone over the scheduler's life).
+#[derive(Debug, Default, Clone)]
+pub struct ServeStats {
+    pub ticks: u64,
+    pub prefills: u64,
+    /// Tokens produced by fused decode steps.
+    pub decode_tokens: u64,
+    /// All generated tokens (prefill-sampled + decode-sampled).
+    pub total_tokens: u64,
+    pub finished: u64,
+    pub cancelled: u64,
+    /// Widest fused batch observed.
+    pub peak_active: usize,
+}
+
+/// What one tick did.
+#[derive(Debug, Clone)]
+pub struct TickReport {
+    pub admitted: usize,
+    /// Fused decode batch width this tick.
+    pub batch: usize,
+    pub finished: usize,
+    /// Active sessions after the tick.
+    pub active: usize,
+    /// Still-queued requests after the tick.
+    pub queued: usize,
+    /// Wall time of the fused decode phase alone (excludes admission
+    /// prefills) — the per-token latency a batched token actually
+    /// waited; 0 when no session decoded this tick.
+    pub decode_seconds: f64,
+}
+
+/// One admitted request: its session, sampling state, and progress.
+struct Active<'m> {
+    id: RequestId,
+    session: NativeSession<'m>,
+    rng: Pcg,
+    sampling: SamplingParams,
+    prompt_len: usize,
+    max_new_tokens: usize,
+    tokens: Vec<i32>,
+    /// The most recently sampled token — fed at the next fused step.
+    next: i32,
+    cancelled: bool,
+}
+
+/// Continuous-batching engine over a [`NativeEngine`]: accepts
+/// requests, admits them into decode slots, and advances every live
+/// session one token per [`tick`](Scheduler::tick) with a single fused
+/// forward pass.
+pub struct Scheduler<'m> {
+    engine: &'m NativeEngine,
+    queue: RequestQueue,
+    slots: Vec<Option<Active<'m>>>,
+    finished: Vec<GenOutput>,
+    stats: ServeStats,
+}
+
+impl<'m> Scheduler<'m> {
+    pub fn new(engine: &'m NativeEngine, opts: &ServeOpts) -> Result<Scheduler<'m>> {
+        if engine.cfg().task != crate::config::Task::Lm {
+            bail!("serving requires an LM config");
+        }
+        if opts.slots == 0 {
+            bail!("serve: need at least one slot");
+        }
+        Ok(Scheduler {
+            engine,
+            queue: RequestQueue::new(opts.queue_cap),
+            slots: (0..opts.slots).map(|_| None).collect(),
+            finished: Vec::new(),
+            stats: ServeStats::default(),
+        })
+    }
+
+    /// Validate and enqueue a request. Errors on an invalid request
+    /// (empty/over-long prompt, out-of-vocab token, zero budget) and on
+    /// a full queue — the latter is backpressure: tick and retry
+    /// (check [`queue_free`](Scheduler::queue_free) first to tell the
+    /// cases apart without parsing messages).
+    pub fn submit(&mut self, req: GenRequest) -> Result<RequestId> {
+        let cfg = self.engine.cfg();
+        if req.prompt.is_empty() {
+            bail!("serve: empty prompt");
+        }
+        if req.prompt.len() > cfg.ctx_len() {
+            bail!(
+                "serve: prompt of {} tokens exceeds the session context {} — truncate first",
+                req.prompt.len(),
+                cfg.ctx_len()
+            );
+        }
+        for &t in &req.prompt {
+            if t < 0 || t as usize >= cfg.vocab_size {
+                bail!("serve: token id {t} outside vocab {}", cfg.vocab_size);
+            }
+        }
+        if req.max_new_tokens == 0 {
+            bail!("serve: max_new_tokens must be >= 1");
+        }
+        self.queue.push(req)
+    }
+
+    /// Cancel a request wherever it lives. Queued requests leave
+    /// immediately (empty output); active ones are evicted at the next
+    /// tick with their partial tokens. Returns false for unknown /
+    /// already-finished ids.
+    pub fn cancel(&mut self, id: RequestId) -> bool {
+        if let Some(q) = self.queue.remove(id) {
+            self.finished.push(GenOutput {
+                id,
+                prompt_len: q.req.prompt.len(),
+                tokens: Vec::new(),
+                finish: FinishReason::Cancelled,
+            });
+            self.stats.cancelled += 1;
+            return true;
+        }
+        for a in self.slots.iter_mut().flatten() {
+            if a.id == id && !a.cancelled {
+                a.cancelled = true;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Prefill a dequeued request into a fresh single-row session and
+    /// sample its first token. Returns `None` when the request finished
+    /// at prefill (`max_new_tokens == 1`).
+    fn admit(&mut self, q: QueuedRequest) -> Result<Option<Active<'m>>> {
+        let engine = self.engine;
+        let mut session = NativeSession::open(&engine.model, 1)?;
+        let width = q.req.prompt.len();
+        let logits = session.prefill(&TokenBatch::new(q.req.prompt.clone(), 1, width)?)?;
+        self.stats.prefills += 1;
+        let sampling = q.req.sampling.clone();
+        let mut rng = Pcg::new(sampling.seed, SAMPLE_STREAM);
+        let first = sample_logits(logits.row(0), sampling.temperature, sampling.top_k, &mut rng);
+        self.stats.total_tokens += 1;
+        let active = Active {
+            id: q.id,
+            session,
+            rng,
+            sampling,
+            prompt_len: width,
+            max_new_tokens: q.req.max_new_tokens,
+            tokens: vec![first as i32],
+            next: first as i32,
+            cancelled: false,
+        };
+        if active.tokens.len() >= active.max_new_tokens {
+            self.finished.push(GenOutput {
+                id: active.id,
+                prompt_len: active.prompt_len,
+                tokens: active.tokens,
+                finish: FinishReason::Length,
+            });
+            self.stats.finished += 1;
+            return Ok(None);
+        }
+        Ok(Some(active))
+    }
+
+    /// One scheduler tick: evict cancellations, admit queued requests
+    /// into free slots, run ONE fused decode step over every active
+    /// session, retire rows that hit their budget. See the module docs.
+    pub fn tick(&mut self) -> Result<TickReport> {
+        self.stats.ticks += 1;
+        let mut finished = 0usize;
+
+        // Phase 1: evict cancellations, freeing slots before admission.
+        for slot in self.slots.iter_mut() {
+            if slot.as_ref().is_some_and(|a| a.cancelled) {
+                let a = slot.take().expect("slot checked occupied");
+                self.finished.push(GenOutput {
+                    id: a.id,
+                    prompt_len: a.prompt_len,
+                    tokens: a.tokens,
+                    finish: FinishReason::Cancelled,
+                });
+                self.stats.cancelled += 1;
+                finished += 1;
+            }
+        }
+
+        // Phase 2: admission — lowest free slot first, queue order.
+        let mut admitted = 0usize;
+        for sidx in 0..self.slots.len() {
+            if self.slots[sidx].is_some() {
+                continue;
+            }
+            while let Some(q) = self.queue.pop() {
+                match self.admit(q)? {
+                    Some(active) => {
+                        self.slots[sidx] = Some(active);
+                        admitted += 1;
+                        break;
+                    }
+                    // Finished at prefill: the slot is still free for
+                    // the next queued request.
+                    None => finished += 1,
+                }
+            }
+        }
+
+        // Phase 3: one fused decode step, ascending slot order.
+        let mut parts: Vec<&mut Active<'m>> = self.slots.iter_mut().flatten().collect();
+        let batch = parts.len();
+        self.stats.peak_active = self.stats.peak_active.max(batch);
+        let mut decode_seconds = 0.0;
+        if batch > 0 {
+            let t0 = std::time::Instant::now();
+            let next: Vec<i32> = parts.iter().map(|a| a.next).collect();
+            let mut sess: Vec<&mut NativeSession<'_>> =
+                parts.iter_mut().map(|a| &mut a.session).collect();
+            let logits = decode_batched(&mut sess, &next)?;
+            drop(sess);
+            for (a, lg) in parts.iter_mut().zip(&logits) {
+                let s = &a.sampling;
+                let id = sample_logits(lg.row(0), s.temperature, s.top_k, &mut a.rng) as i32;
+                a.tokens.push(id);
+                a.next = id;
+            }
+            self.stats.decode_tokens += batch as u64;
+            self.stats.total_tokens += batch as u64;
+            decode_seconds = t0.elapsed().as_secs_f64();
+        }
+
+        // Phase 4: retire rows that generated their full budget.
+        for slot in self.slots.iter_mut() {
+            if slot.as_ref().is_some_and(|a| a.tokens.len() >= a.max_new_tokens) {
+                let a = slot.take().expect("slot checked occupied");
+                self.finished.push(GenOutput {
+                    id: a.id,
+                    prompt_len: a.prompt_len,
+                    tokens: a.tokens,
+                    finish: FinishReason::Length,
+                });
+                self.stats.finished += 1;
+                finished += 1;
+            }
+        }
+
+        Ok(TickReport {
+            admitted,
+            batch,
+            finished,
+            active: self.active_count(),
+            queued: self.queue.len(),
+            decode_seconds,
+        })
+    }
+
+    /// Tick until no work remains (bounded by `max_ticks` as a runaway
+    /// guard) and return every finished output.
+    pub fn run_until_idle(&mut self, max_ticks: usize) -> Result<Vec<GenOutput>> {
+        let mut used = 0usize;
+        while !self.is_idle() {
+            used += 1;
+            if used > max_ticks {
+                bail!("run_until_idle: work still pending after {max_ticks} ticks");
+            }
+            self.tick()?;
+        }
+        Ok(self.drain_finished())
+    }
+
+    /// Take every finished output accumulated so far (admission order
+    /// is NOT guaranteed; sort by id if needed).
+    pub fn drain_finished(&mut self) -> Vec<GenOutput> {
+        std::mem::take(&mut self.finished)
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn queued_count(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Free queue positions — poll before [`submit`](Scheduler::submit)
+    /// to avoid the backpressure error.
+    pub fn queue_free(&self) -> usize {
+        self.queue.free()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.active_count() == 0 && self.queue.is_empty()
+    }
+
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+}

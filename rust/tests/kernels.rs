@@ -109,6 +109,68 @@ fn moe_matmul_bit_identical_with_duplicate_experts() {
     }
 }
 
+/// The head-union dispatch (`moe_matmul_banks_into`) must equal
+/// per-bank scalar MoE products bit for bit — shared x (Q/K/V shape)
+/// and per-bank x (O shape), ragged bank sizes, duplicate experts,
+/// 1-8 threads.
+#[test]
+fn moe_banks_union_dispatch_bit_identical_to_per_bank_reference() {
+    let _guard = pool_lock();
+    let shapes = [(1usize, 4usize, 9usize), (6, 5, 64), (9, 16, 257)];
+    for threads in 1..=8usize {
+        kernels::set_threads(threads);
+        for &(n, rows, cols) in &shapes {
+            for (bank_sizes, k) in [(vec![3usize], 2usize), (vec![2, 4], 2), (vec![5, 1, 3], 1)] {
+                let nb = bank_sizes.len();
+                let mut rng = Pcg::new(0xBA2C + (n * rows * cols) as u64, (nb * k) as u64);
+                let banks: Vec<Vec<Vec<f32>>> = bank_sizes
+                    .iter()
+                    .map(|&ne| (0..ne).map(|_| rand_vec(&mut rng, rows * cols)).collect())
+                    .collect();
+                let bank_refs: Vec<&[Vec<f32>]> = banks.iter().map(|b| b.as_slice()).collect();
+                let mut idx = Vec::with_capacity(nb * n * k);
+                let mut gate = Vec::with_capacity(nb * n * k);
+                for &ne in &bank_sizes {
+                    for i in 0..n {
+                        let dup = i % 3 == 0;
+                        let first = rng.below(ne);
+                        for _ in 0..k {
+                            idx.push(if dup { first } else { rng.below(ne) });
+                            gate.push((rng.normal() as f32).abs() + 0.01);
+                        }
+                    }
+                }
+                for shared in [true, false] {
+                    let stride = if shared { 0 } else { n };
+                    let x = rand_vec(&mut rng, if shared { n * rows } else { nb * n * rows });
+                    let mut got = vec![f32::NAN; nb * n * cols];
+                    kernels::moe_matmul_banks_into(
+                        &mut got, &x, &bank_refs, rows, cols, &idx, &gate, k, stride,
+                    );
+                    for b in 0..nb {
+                        let xb = if shared { &x[..] } else { &x[b * n * rows..(b + 1) * n * rows] };
+                        let want = reference::moe_matmul_ref(
+                            xb,
+                            &banks[b],
+                            rows,
+                            cols,
+                            &idx[b * n * k..(b + 1) * n * k],
+                            &gate[b * n * k..(b + 1) * n * k],
+                            k,
+                        );
+                        assert_eq!(
+                            got[b * n * cols..(b + 1) * n * cols],
+                            want[..],
+                            "banks ({n},{rows},{cols}) bank {b}/{nb} k={k} shared={shared} \
+                             differs at {threads} threads"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[test]
 fn scratch_backed_tensor_wrappers_match_reference() {
     let _guard = pool_lock();

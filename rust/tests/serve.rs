@@ -1,0 +1,411 @@
+//! Serving-subsystem contract tests.
+//!
+//! The load-bearing claim: ONE fused [`decode_batched`] step over many
+//! sessions at different positions is equivalent to decoding each
+//! session sequentially through [`Session::decode`] — logits within
+//! 1e-5 (bit-identical by construction), greedy tokens identical —
+//! across attention families, positional schemes, and 1/2/4 kernel
+//! threads. On top of that, the scheduler's continuous batching must
+//! reproduce sequential per-request generation exactly, honor
+//! cancellation and `max_new_tokens` expiry, and apply bounded-queue
+//! backpressure.
+
+use switchhead::config::ModelConfig;
+use switchhead::coordinator::generate::sample_logits;
+use switchhead::kernels;
+use switchhead::model::{decode_batched, NativeEngine, NativeSession};
+use switchhead::runtime::{Session, TokenBatch};
+use switchhead::serve::{
+    FinishReason, GenRequest, SamplingParams, Scheduler, ServeOpts, SAMPLE_STREAM,
+};
+use switchhead::util::json::Json;
+use switchhead::util::rng::Pcg;
+
+const TOL: f32 = 1e-5;
+
+fn cfg_json(text: &str) -> ModelConfig {
+    let cfg = ModelConfig::from_json(&Json::parse(text).unwrap()).unwrap();
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn sh_xl() -> ModelConfig {
+    cfg_json(
+        r#"{"name":"sh-xl","family":"switchhead","pos":"xl","vocab_size":64,
+            "d_model":16,"n_layers":2,"n_heads":2,"d_head":8,"d_ff":32,
+            "seq_len":8,"batch_size":2,"att_n_experts":3,"att_k":2}"#,
+    )
+}
+
+fn sh_rope() -> ModelConfig {
+    cfg_json(
+        r#"{"name":"sh-rope","family":"switchhead","pos":"rope","vocab_size":64,
+            "d_model":16,"n_layers":2,"n_heads":2,"d_head":8,"d_ff":32,
+            "seq_len":8,"batch_size":2,"att_n_experts":3,"att_k":2}"#,
+    )
+}
+
+fn dense_xl() -> ModelConfig {
+    cfg_json(
+        r#"{"name":"dense-xl","family":"dense","pos":"xl","vocab_size":64,
+            "d_model":16,"n_layers":2,"n_heads":2,"d_head":8,"d_ff":32,
+            "seq_len":8,"batch_size":2}"#,
+    )
+}
+
+fn switchall_xl() -> ModelConfig {
+    cfg_json(
+        r#"{"name":"switchall-xl","family":"switchhead","pos":"xl","vocab_size":64,
+            "d_model":16,"n_layers":2,"n_heads":2,"d_head":8,"seq_len":8,
+            "batch_size":2,"att_n_experts":3,"att_k":2,"moe_k":true,"moe_q":true,
+            "mlp_type":"sigma_moe","mlp_n_experts":3,"mlp_k":2,"mlp_d_expert":8}"#,
+    )
+}
+
+fn moa_xl() -> ModelConfig {
+    cfg_json(
+        r#"{"name":"moa-xl","family":"moa","pos":"xl","vocab_size":64,
+            "d_model":16,"n_layers":2,"n_heads":2,"d_head":8,"d_ff":32,
+            "seq_len":8,"batch_size":2,"moa_n_experts":4,"moa_k":2}"#,
+    )
+}
+
+fn argmax(row: &[f32]) -> usize {
+    row.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).map(|(i, _)| i).unwrap()
+}
+
+fn opened_session<'m>(engine: &'m NativeEngine, prompt: &[i32]) -> NativeSession<'m> {
+    let mut s = NativeSession::open(&engine.model, 1).unwrap();
+    s.prefill(&TokenBatch::new(prompt.to_vec(), 1, prompt.len()).unwrap()).unwrap();
+    s
+}
+
+/// One fused `decode_batched` step per token must equal N sequential
+/// `Session::decode` calls — sessions prefilled to DIFFERENT positions
+/// so per-session geometry (ring slots, XL distances, RoPE phases) is
+/// actually exercised. Also pins per-session MAC attribution.
+fn check_fused_equivalence(cfg: &ModelConfig) {
+    let engine = NativeEngine::new(cfg, 11).unwrap();
+    let t = cfg.seq_len;
+    let mut rng = Pcg::new(13, 5);
+    let prompt_lens = [1usize, (t / 2).max(1), t - 1];
+    let prompts: Vec<Vec<i32>> = prompt_lens
+        .iter()
+        .map(|&l| (0..l).map(|_| rng.below(cfg.vocab_size) as i32).collect())
+        .collect();
+    let n_sess = prompts.len();
+    let steps = 5usize;
+    let streams: Vec<Vec<i32>> = (0..n_sess)
+        .map(|_| (0..steps).map(|_| rng.below(cfg.vocab_size) as i32).collect())
+        .collect();
+
+    // Sequential oracle: each session decoded on its own.
+    let mut seq_logits = Vec::with_capacity(n_sess);
+    let mut seq_macs = Vec::with_capacity(n_sess);
+    for si in 0..n_sess {
+        let mut s = opened_session(&engine, &prompts[si]);
+        let mut per = Vec::with_capacity(steps);
+        for step in 0..steps {
+            per.push(s.decode(&[streams[si][step]]).unwrap());
+        }
+        seq_macs.push(s.macs().unwrap().total());
+        seq_logits.push(per);
+    }
+
+    // Fused path: same prompts and token streams, one batched step per
+    // token across all sessions at once.
+    let mut sessions: Vec<NativeSession> =
+        (0..n_sess).map(|si| opened_session(&engine, &prompts[si])).collect();
+    for step in 0..steps {
+        let next: Vec<i32> = (0..n_sess).map(|si| streams[si][step]).collect();
+        let mut refs: Vec<&mut NativeSession> = sessions.iter_mut().collect();
+        let outs = decode_batched(&mut refs, &next).unwrap();
+        assert_eq!(outs.len(), n_sess);
+        for si in 0..n_sess {
+            let worst = outs[si]
+                .data()
+                .iter()
+                .zip(seq_logits[si][step].data())
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            assert!(
+                worst <= TOL,
+                "{} session {si} step {step}: fused vs sequential max |diff| {worst} > {TOL}",
+                cfg.name
+            );
+            assert_eq!(
+                argmax(outs[si].row(0)),
+                argmax(seq_logits[si][step].row(0)),
+                "{} session {si} step {step}: greedy token diverged",
+                cfg.name
+            );
+        }
+    }
+    // Per-session MAC attribution matches sequential decode.
+    for si in 0..n_sess {
+        let fused = sessions[si].macs().unwrap().total();
+        let rel = (fused - seq_macs[si]).abs() / seq_macs[si].max(1.0);
+        assert!(
+            rel < 1e-9,
+            "{} session {si}: fused MACs {fused} != sequential {}",
+            cfg.name,
+            seq_macs[si]
+        );
+        assert_eq!(sessions[si].consumed(), prompt_lens[si] + steps);
+    }
+}
+
+/// The acceptance sweep: every config at 1, 2 and 4 kernel threads
+/// (results are bit-identical at any count, so cross-test races on the
+/// global pool cannot perturb the assertions).
+fn check_all_threads(cfg: &ModelConfig) {
+    for threads in [1usize, 2, 4] {
+        kernels::set_threads(threads);
+        check_fused_equivalence(cfg);
+    }
+}
+
+#[test]
+fn fused_matches_sequential_switchhead_xl() {
+    check_all_threads(&sh_xl());
+}
+
+#[test]
+fn fused_matches_sequential_switchhead_rope() {
+    check_all_threads(&sh_rope());
+}
+
+#[test]
+fn fused_matches_sequential_dense_xl() {
+    check_all_threads(&dense_xl());
+}
+
+#[test]
+fn fused_matches_sequential_switchall_full_moe() {
+    check_all_threads(&switchall_xl());
+}
+
+#[test]
+fn fused_matches_sequential_moa_xl() {
+    check_all_threads(&moa_xl());
+}
+
+/// The fused step is an explicit protocol, not a best-effort path.
+#[test]
+fn decode_batched_protocol_is_enforced() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+
+    let mut none: Vec<&mut NativeSession> = Vec::new();
+    assert!(decode_batched(&mut none, &[]).is_err(), "empty session list");
+
+    // Not prefilled.
+    let mut fresh = NativeSession::open(&engine.model, 1).unwrap();
+    let mut refs = vec![&mut fresh];
+    assert!(decode_batched(&mut refs, &[1]).is_err(), "decode before prefill");
+
+    // Token-count mismatch and out-of-vocab ids.
+    let mut s = opened_session(&engine, &[1, 2, 3]);
+    let mut refs = vec![&mut s];
+    assert!(decode_batched(&mut refs, &[1, 2]).is_err(), "token count != fused rows");
+    assert!(decode_batched(&mut refs, &[-1]).is_err(), "out-of-vocab token");
+    assert!(decode_batched(&mut refs, &[1]).is_ok());
+
+    // Sessions over different model instances cannot be fused, even
+    // with identical configs and seeds.
+    let other = NativeEngine::new(&cfg, 11).unwrap();
+    let mut a = opened_session(&engine, &[1, 2]);
+    let mut b = opened_session(&other, &[1, 2]);
+    let mut refs = vec![&mut a, &mut b];
+    assert!(decode_batched(&mut refs, &[1, 1]).is_err(), "sessions span different models");
+}
+
+/// Sequential single-request oracle replaying exactly the scheduler's
+/// sampling procedure (same RNG stream, same sampling params).
+fn oracle_generate(engine: &NativeEngine, req: &GenRequest) -> Vec<i32> {
+    let mut session = NativeSession::open(&engine.model, 1).unwrap();
+    let s = &req.sampling;
+    let mut rng = Pcg::new(s.seed, SAMPLE_STREAM);
+    let batch = TokenBatch::new(req.prompt.clone(), 1, req.prompt.len()).unwrap();
+    let mut logits = session.prefill(&batch).unwrap();
+    let mut tokens = vec![sample_logits(logits.row(0), s.temperature, s.top_k, &mut rng) as i32];
+    while tokens.len() < req.max_new_tokens {
+        logits = session.decode(&[*tokens.last().unwrap()]).unwrap();
+        tokens.push(sample_logits(logits.row(0), s.temperature, s.top_k, &mut rng) as i32);
+    }
+    tokens
+}
+
+fn synth_request(cfg: &ModelConfig, rng: &mut Pcg, plen: usize, max_new: usize) -> GenRequest {
+    let prompt: Vec<i32> = (0..plen).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+    GenRequest::greedy(prompt, max_new)
+}
+
+/// Continuous batching must not change ANY request's output: more
+/// requests than slots (so admission waves interleave), varying prompt
+/// lengths and budgets, compared against one-at-a-time generation.
+#[test]
+fn scheduler_matches_sequential_generation() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let mut rng = Pcg::new(21, 9);
+    let reqs: Vec<GenRequest> = (0..6)
+        .map(|i| synth_request(&cfg, &mut rng, 1 + i % 7, 3 + (i * 2) % 6))
+        .collect();
+
+    let expected: Vec<Vec<i32>> = reqs.iter().map(|r| oracle_generate(&engine, r)).collect();
+
+    let mut sched =
+        Scheduler::new(&engine, &ServeOpts { slots: 2, queue_cap: reqs.len() }).unwrap();
+    for r in &reqs {
+        sched.submit(r.clone()).unwrap();
+    }
+    let mut outs = sched.run_until_idle(10_000).unwrap();
+    outs.sort_by_key(|o| o.id);
+    assert_eq!(outs.len(), reqs.len());
+    for (i, o) in outs.iter().enumerate() {
+        assert_eq!(o.finish, FinishReason::Length);
+        assert_eq!(o.prompt_len, reqs[i].prompt.len());
+        assert_eq!(
+            o.tokens, expected[i],
+            "request {i}: batched serving diverged from sequential generation"
+        );
+        assert_eq!(o.tokens.len(), reqs[i].max_new_tokens);
+    }
+    assert!(sched.is_idle());
+    assert!(sched.stats().peak_active <= 2, "slot cap exceeded");
+}
+
+/// Stochastic sampling stays reproducible under batching: each request
+/// draws from its own seeded RNG stream, and the fused logits are
+/// bit-identical, so temperature/top-k streams match the sequential
+/// oracle token for token.
+#[test]
+fn scheduler_sampled_streams_are_batch_invariant() {
+    let cfg = sh_rope();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let mut rng = Pcg::new(31, 3);
+    let reqs: Vec<GenRequest> = (0..4)
+        .map(|i| {
+            let mut r = synth_request(&cfg, &mut rng, 2 + i, 6);
+            r.sampling = SamplingParams { temperature: 1.0, top_k: 5, seed: 100 + i as u64 };
+            r
+        })
+        .collect();
+    let expected: Vec<Vec<i32>> = reqs.iter().map(|r| oracle_generate(&engine, r)).collect();
+
+    let mut sched =
+        Scheduler::new(&engine, &ServeOpts { slots: 3, queue_cap: reqs.len() }).unwrap();
+    for r in &reqs {
+        sched.submit(r.clone()).unwrap();
+    }
+    let mut outs = sched.run_until_idle(10_000).unwrap();
+    outs.sort_by_key(|o| o.id);
+    for (i, o) in outs.iter().enumerate() {
+        assert_eq!(o.tokens, expected[i], "request {i}: sampled stream changed under batching");
+    }
+}
+
+/// A cancelled mid-decode request frees its slot and a queued request
+/// is admitted on the next tick; queued requests cancel instantly.
+#[test]
+fn cancellation_frees_slot_and_admits_queued() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let mut rng = Pcg::new(41, 1);
+    let mut sched = Scheduler::new(&engine, &ServeOpts { slots: 1, queue_cap: 4 }).unwrap();
+
+    let a = sched.submit(synth_request(&cfg, &mut rng, 3, 100)).unwrap();
+    let b = sched.submit(synth_request(&cfg, &mut rng, 2, 3)).unwrap();
+    let c = sched.submit(synth_request(&cfg, &mut rng, 2, 3)).unwrap();
+
+    // Tick 1: A takes the only slot (prefill + 1 token), then decodes.
+    let r1 = sched.tick().unwrap();
+    assert_eq!((r1.admitted, r1.batch, r1.active, r1.queued), (1, 1, 1, 2));
+    let r2 = sched.tick().unwrap();
+    assert_eq!((r2.admitted, r2.batch), (0, 1));
+
+    // Cancel queued C: leaves immediately, empty output.
+    assert!(sched.cancel(c), "queued cancel");
+    let cancelled_queued =
+        sched.drain_finished().into_iter().find(|o| o.id == c).expect("C finished");
+    assert_eq!(cancelled_queued.finish, FinishReason::Cancelled);
+    assert!(cancelled_queued.tokens.is_empty());
+
+    // Cancel active A mid-decode: evicted at the next tick, B admitted
+    // into the freed slot on that same tick.
+    assert!(sched.cancel(a), "active cancel");
+    assert!(!sched.cancel(a), "double cancel is a no-op");
+    let r3 = sched.tick().unwrap();
+    assert_eq!(r3.admitted, 1, "B admitted into the freed slot");
+    assert_eq!(r3.batch, 1, "B decodes in the same tick");
+    let a_out = sched.drain_finished().into_iter().find(|o| o.id == a).expect("A finished");
+    assert_eq!(a_out.finish, FinishReason::Cancelled);
+    assert!(a_out.tokens.len() >= 2, "partial tokens preserved: {:?}", a_out.tokens);
+
+    // B runs to its budget.
+    let outs = sched.run_until_idle(100).unwrap();
+    let b_out = outs.iter().find(|o| o.id == b).expect("B finished");
+    assert_eq!(b_out.finish, FinishReason::Length);
+    assert_eq!(b_out.tokens.len(), 3);
+    assert!(!sched.cancel(b), "finished requests cannot be cancelled");
+}
+
+/// `max_new_tokens` expiry frees slots for the next admission wave,
+/// including the degenerate 1-token budget that finishes at prefill.
+#[test]
+fn budget_expiry_recycles_slots() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let mut rng = Pcg::new(51, 2);
+    let mut sched = Scheduler::new(&engine, &ServeOpts { slots: 2, queue_cap: 8 }).unwrap();
+    let budgets = [1usize, 2, 5, 1, 3, 4];
+    let ids: Vec<_> = budgets
+        .iter()
+        .map(|&m| sched.submit(synth_request(&cfg, &mut rng, 2, m)).unwrap())
+        .collect();
+    let mut outs = sched.run_until_idle(1000).unwrap();
+    outs.sort_by_key(|o| o.id);
+    assert_eq!(outs.len(), budgets.len());
+    for ((o, &m), &id) in outs.iter().zip(&budgets).zip(&ids) {
+        assert_eq!(o.id, id);
+        assert_eq!(o.finish, FinishReason::Length);
+        assert_eq!(o.tokens.len(), m, "request {id} budget not honored");
+    }
+    let st = sched.stats();
+    assert_eq!(st.finished, budgets.len() as u64);
+    assert!(st.peak_active <= 2);
+    assert_eq!(st.total_tokens as usize, budgets.iter().sum::<usize>());
+}
+
+/// The bounded queue rejects overflow (backpressure) and accepts again
+/// once admission drains it; invalid requests are rejected outright.
+#[test]
+fn queue_backpressure_and_validation() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let mut rng = Pcg::new(61, 4);
+    let mut sched = Scheduler::new(&engine, &ServeOpts { slots: 1, queue_cap: 2 }).unwrap();
+
+    // Validation failures never consume queue space.
+    assert!(sched.submit(GenRequest::greedy(vec![], 4)).is_err(), "empty prompt");
+    assert!(sched.submit(GenRequest::greedy(vec![1], 0)).is_err(), "zero budget");
+    assert!(sched.submit(GenRequest::greedy(vec![-3, 1], 4)).is_err(), "bad token id");
+    let too_long = vec![1i32; cfg.ctx_len() + 1];
+    assert!(sched.submit(GenRequest::greedy(too_long, 4)).is_err(), "over-long prompt");
+    assert_eq!(sched.queue_free(), 2);
+
+    sched.submit(synth_request(&cfg, &mut rng, 2, 4)).unwrap();
+    sched.submit(synth_request(&cfg, &mut rng, 2, 4)).unwrap();
+    assert_eq!(sched.queue_free(), 0);
+    assert!(
+        sched.submit(synth_request(&cfg, &mut rng, 2, 4)).is_err(),
+        "full queue must reject (backpressure)"
+    );
+
+    // A tick admits one request, freeing one queue position.
+    sched.tick().unwrap();
+    assert_eq!(sched.queue_free(), 1);
+    sched.submit(synth_request(&cfg, &mut rng, 2, 4)).unwrap();
+    sched.run_until_idle(1000).unwrap();
+}
