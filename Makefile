@@ -14,22 +14,24 @@ CARGO ?= cargo
 CLIPPY_ALLOW = -A clippy::needless_range_loop -A clippy::too_many_arguments \
                -A clippy::type_complexity -A clippy::manual_memcpy
 
-.PHONY: check build test lint artifacts smoke bench bench-serve bench-tables clean
+.PHONY: check build test lint doc artifacts smoke bench bench-serve bench-tables clean
 
-## Tier-1: build + full test suite + lint gate, artifact-free. The
-## golden-vector, decode and serve suites re-run under PALLAS_THREADS=4
-## (the kernels must be bit-identical at any thread count); a 1-thread
-## step_latency smoke keeps the bench harness and its JSON emitter
-## compiling and running; and a 1-thread serve smoke (4 concurrent
-## tiny-sh requests through the continuous-batching scheduler) keeps
-## the serving bench + fused decode path exercised end to end.
+## Tier-1: build + full test suite + lint + doc gates, artifact-free.
+## The golden-vector, decode, kv-cache and serve suites re-run under
+## PALLAS_THREADS=4 (the kernels must be bit-identical at any thread
+## count); a 1-thread step_latency smoke keeps the bench harness and
+## its JSON emitter compiling and running; and a 1-thread serve smoke
+## (4 concurrent tiny-sh requests through the continuous-batching
+## scheduler) keeps the serving bench + fused decode path exercised
+## end to end.
 check:
 	$(CARGO) build --release
 	$(CARGO) test -q
-	PALLAS_THREADS=4 $(CARGO) test -q --test native --test decode --test serve
+	PALLAS_THREADS=4 $(CARGO) test -q --test native --test decode --test kv_cache --test serve
 	PALLAS_THREADS=1 SWITCHHEAD_BENCH_SMOKE=1 $(CARGO) bench --bench step_latency
 	PALLAS_THREADS=1 SWITCHHEAD_BENCH_SMOKE=1 $(CARGO) bench --bench serve_throughput
 	$(MAKE) lint
+	$(MAKE) doc
 
 build:
 	$(CARGO) build --release
@@ -41,6 +43,12 @@ test:
 lint:
 	$(CARGO) fmt --all --check
 	$(CARGO) clippy --all-targets -- -D warnings $(CLIPPY_ALLOW)
+
+## Doc gate: rustdoc must build warning-clean (broken intra-doc links
+## are errors) — the module docs state each subsystem's invariants and
+## docs/ARCHITECTURE.md links into them, so they must stay resolvable.
+doc:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
 
 ## Full perf run (artifact-free; PJRT rows only when artifacts exist):
 ## step_latency with the decode, thread-scaling (1/2/4) and

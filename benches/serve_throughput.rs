@@ -17,7 +17,11 @@
 //!
 //! Both paths must produce identical token streams (asserted — greedy
 //! decoding plus the bit-identical fused step make this exact), so the
-//! comparison is pure execution strategy. Every number lands in
+//! comparison is pure execution strategy. The batched run also reports
+//! KV memory: the paged pool's peak floats
+//! (`paged_peak_kv_floats`) against the preallocated-ring formula the
+//! pre-paging design pinned (`ring_kv_floats` = slots × layers ×
+//! streams × 2 × ctx_len × d_head). Every number lands in
 //! `BENCH_serve_throughput.json` (`target/…smoke.json` under
 //! `SWITCHHEAD_BENCH_SMOKE=1`, which `make check` runs 1-threaded with
 //! 4 concurrent tiny-sh requests).
@@ -28,7 +32,7 @@ use switchhead::bench::Table;
 use switchhead::config::{ModelConfig, Task};
 use switchhead::coordinator::generate::sample_logits;
 use switchhead::kernels;
-use switchhead::model::NativeEngine;
+use switchhead::model::{NativeEngine, PoolStats};
 use switchhead::runtime::{Backend, Session, TokenBatch};
 use switchhead::serve::{
     drive, synth_requests, GenRequest, SamplingParams, Scheduler, ServeOpts, SAMPLE_STREAM,
@@ -82,8 +86,14 @@ fn run_serial(engine: &NativeEngine, reqs: &[GenRequest]) -> RunResult {
 
 /// The continuous-batching path: all requests through the scheduler,
 /// submission throttled by the bounded queue (`serve::load::drive`).
-fn run_batched(engine: &NativeEngine, reqs: &[GenRequest], slots: usize) -> RunResult {
-    let opts = ServeOpts { slots, queue_cap: reqs.len().max(1) };
+/// Also returns the shared KV pool's counters, for the paged-vs-ring
+/// memory comparison.
+fn run_batched(
+    engine: &NativeEngine,
+    reqs: &[GenRequest],
+    slots: usize,
+) -> (RunResult, PoolStats) {
+    let opts = ServeOpts { slots, queue_cap: reqs.len().max(1), ..ServeOpts::default() };
     let mut sched = Scheduler::new(engine, &opts).unwrap();
     let t0 = Instant::now();
     let mut lat_ms = Vec::new();
@@ -97,15 +107,17 @@ fn run_batched(engine: &NativeEngine, reqs: &[GenRequest], slots: usize) -> RunR
     })
     .unwrap();
     let secs = t0.elapsed().as_secs_f64();
+    let pool = sched.pool_stats();
     let mut outs = sched.drain_finished();
     outs.sort_by_key(|o| o.id);
     let total_tokens = sched.stats().total_tokens as usize;
-    RunResult {
+    let result = RunResult {
         token_streams: outs.into_iter().map(|o| o.tokens).collect(),
         total_tokens,
         secs,
         lat_ms,
-    }
+    };
+    (result, pool)
 }
 
 fn bench_one(
@@ -130,10 +142,24 @@ fn bench_one(
     let reqs = synth_requests(&cfg, requests, (cfg.seq_len / 2).max(1), tokens, &sampling);
 
     let serial = run_serial(&engine, &reqs);
-    let batched = run_batched(&engine, &reqs, slots);
+    let (batched, pool) = run_batched(&engine, &reqs, slots);
     assert_eq!(
         serial.token_streams, batched.token_streams,
         "{name}: batched decode diverged from the serial loop"
+    );
+
+    // Memory: what the paged pool actually peaked at, vs what `slots`
+    // preallocated full rings (the pre-paging design) would pin
+    // regardless of traffic: 2 (K+V) * ctx_len * d_head floats per
+    // (session, layer, stream).
+    let paged_peak_kv_floats = pool.peak_floats();
+    let ring_kv_floats = slots * cfg.n_layers * cfg.kv_streams() * 2 * cfg.ctx_len() * cfg.d_head;
+    let kv_ratio = paged_peak_kv_floats as f64 / ring_kv_floats as f64;
+    println!(
+        "{name}: peak paged KV {} floats vs {} ring-preallocated ({:.0}%)",
+        paged_peak_kv_floats,
+        ring_kv_floats,
+        100.0 * kv_ratio
     );
 
     let serial_tok_s = serial.total_tokens as f64 / serial.secs.max(1e-9);
@@ -164,6 +190,9 @@ fn bench_one(
         ("batched_p50_ms", num(quantile(&batched.lat_ms, 0.5))),
         ("batched_p95_ms", num(quantile(&batched.lat_ms, 0.95))),
         ("total_tokens", num(batched.total_tokens as f64)),
+        ("paged_peak_kv_floats", num(paged_peak_kv_floats as f64)),
+        ("ring_kv_floats", num(ring_kv_floats as f64)),
+        ("paged_over_ring_kv", num(kv_ratio)),
     ]))
 }
 

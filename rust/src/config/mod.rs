@@ -213,6 +213,16 @@ impl ModelConfig {
             _ => self.n_heads,
         }
     }
+
+    /// K/V cache streams per layer of a decoding session: MoA shares
+    /// one K/V across its routed queries, every other family caches
+    /// per head. Sizes the paged KV pool (`model::kv_cache`).
+    pub fn kv_streams(&self) -> usize {
+        match self.family {
+            Family::Moa => 1,
+            _ => self.n_heads,
+        }
+    }
 }
 
 #[cfg(test)]

@@ -17,6 +17,23 @@
 //! Small jobs (below [`PAR_MIN_WORK`] multiply-accumulates) and jobs
 //! issued from inside a pool worker run inline on the calling thread,
 //! so nesting degrades to serial execution instead of deadlocking.
+//!
+//! # Invariants
+//!
+//! * **Blocking submission** — [`par_rows`] returns only after every
+//!   chunk ran; callers may hand chunks borrowed stack data, and
+//!   callers holding locks (e.g. the KV pool's read view) stay sound
+//!   because workers never take locks of their own.
+//! * **Disjoint ranges** — a job's `(lo, hi)` chunks partition the row
+//!   space; two chunks never overlap, which is what makes
+//!   `SendPtr`-based shared-output writes race-free.
+//! * **Chunk order is irrelevant by construction** — kernels built on
+//!   the pool never split or reorder a per-element reduction across
+//!   chunks, so results are bit-identical at any thread count and any
+//!   chunk schedule.
+//! * **Panic propagation** — a panicking chunk poisons the job's
+//!   epoch; the submitting thread re-panics rather than returning
+//!   partial output.
 
 use std::cell::Cell;
 use std::sync::{Arc, Condvar, Mutex, RwLock};

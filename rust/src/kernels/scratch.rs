@@ -13,6 +13,11 @@
 //! whatever thread drives it. Buffers that escape (e.g. moved into a
 //! `Logits` response) simply leave the pool; nothing requires `put`.
 //!
+//! Invariant: [`take`] always returns a **zeroed** buffer of exactly
+//! the requested length — recycling is invisible to numerics (callers
+//! may accumulate into the buffer assuming fresh zeros), so the arena
+//! can never perturb the bit-identity contract.
+//!
 //! At the [`MAX_POOLED`] retention cap the arena keeps the *largest*
 //! buffers: a returned buffer displaces the smallest pooled one when it
 //! is bigger (the smallest is freed), otherwise it is freed itself.
@@ -26,7 +31,7 @@ use std::cell::RefCell;
 /// one buffer (the smaller of: the incoming one, the smallest pooled
 /// one), which bounds both the buffer count and the churn for
 /// pathological call patterns.
-const MAX_POOLED: usize = 64;
+pub const MAX_POOLED: usize = 64;
 
 thread_local! {
     static POOL: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };

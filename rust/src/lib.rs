@@ -20,9 +20,11 @@
 //! plus the stateful [`runtime::Session`] prefill/decode API — so the
 //! zero-shot harness, the generator and the benches run on either.
 //! Incremental generation is native-backend accelerated: an
-//! expert-sparse ring-buffered KV cache ([`model::NativeSession`])
-//! makes a decode step O(context) instead of a full-window recompute;
-//! PJRT sessions fall back to windowed recompute transparently.
+//! expert-sparse **paged** KV cache ([`model::kv_cache`], behind
+//! [`model::NativeSession`]) makes a decode step O(context) instead of
+//! a full-window recompute while holding only the pages the live
+//! attention window touches; PJRT sessions fall back to windowed
+//! recompute transparently.
 //! The native hot path executes on [`kernels`] — cache-blocked,
 //! `PALLAS_THREADS`-parallel matmul and expert-grouped MoE dispatch,
 //! bit-identical to the scalar reference at every thread count.
@@ -31,7 +33,8 @@
 //! session's next token into one forward per tick
 //! ([`model::decode_batched`]), so the expert-grouped dispatch runs
 //! over the union of (session, head, expert) selections instead of
-//! single-token batches.
+//! single-token batches — with admission capacity-aware over the
+//! shared KV page pool. `docs/ARCHITECTURE.md` is the end-to-end tour.
 //!
 //! # Artifact-free test tier
 //!

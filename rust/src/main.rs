@@ -49,8 +49,13 @@ commands:
                 [--backend pjrt|native]
   probe         --config <json> [--artifacts DIR] [--backend pjrt|native]
   serve         --config <json> [--requests N] [--slots S] [--queue-cap Q]
-                [--tokens M] [--prompt-len P] [--temperature T] [--top-k K]
-                [--seed S] [--init-seed S]   (native backend only)
+                [--tokens M] [--prompt-len P] [--kv-page C] [--kv-pages P]
+                [--temperature T] [--top-k K] [--seed S] [--init-seed S]
+                (native backend only; --slots caps the fused batch width,
+                 but admission is also capacity-aware over the paged KV
+                 pool: --kv-page sets positions per page, --kv-pages the
+                 pool size — requests whose worst-case page demand will
+                 not fit are deferred, not failed)
   bench-tables  [--table 1|2|3|4|5|6|7|all] [--artifacts DIR] [--quick]
 
 backends: `pjrt` (default) replays `make artifacts` bundles and loads the
@@ -418,6 +423,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let opts = ServeOpts {
         slots: args.usize_or("slots", 4)?,
         queue_cap: args.usize_or("queue-cap", 16)?,
+        kv_page_cols: args.usize_opt("kv-page")?,
+        kv_pool_pages: args.usize_opt("kv-pages")?,
     };
     let tokens = args.usize_or("tokens", 32)?;
     let max_prompt = args.usize_or("prompt-len", (cfg.seq_len / 2).max(1))?;
@@ -451,6 +458,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ]);
     }
     table.print();
+    let ps = sched.pool_stats();
     let st = sched.stats();
     info(&format!(
         "served {} requests: {} tokens in {:.3}s ({:.0} tok/s aggregate), {} ticks, \
@@ -461,6 +469,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         st.total_tokens as f64 / secs.max(1e-9),
         st.ticks,
         st.peak_active,
+    ));
+    // Pool occupancy: peak pages the paged KV cache actually held vs
+    // the pool bound; deferrals count ticks where admission waited on
+    // pages rather than slots.
+    info(&format!(
+        "kv pool: peak {} / {} pages ({:.0}% of the pool, {} floats), \
+         {} deferral tick(s)",
+        ps.high_water,
+        ps.max_pages,
+        100.0 * ps.high_water as f64 / ps.max_pages.max(1) as f64,
+        ps.peak_floats(),
+        st.deferrals,
     ));
     Ok(())
 }

@@ -1,9 +1,9 @@
 //! Incremental decoding for the native backend: [`NativeSession`], the
 //! [`Session`] implementation behind `NativeEngine::open_session`.
 //!
-//! # Expert-sparse KV cache
+//! # Expert-sparse paged KV cache
 //!
-//! Per layer and per head the session keeps a ring buffer of the K/V
+//! Per layer and per attention matrix the session caches the K/V
 //! vectors of every context token. For SwitchHead these are the
 //! gate-combined projections of ONLY the `att_k` experts the sigmoid
 //! router selected for that token (paper Sec. 3's memory argument: the
@@ -11,9 +11,19 @@
 //! exact and the unselected experts are never computed or stored). A
 //! decode step therefore costs one token's projections plus one
 //! attention row per head — O(context) — instead of the O(T^2) full
-//! window recompute the legacy generation path paid per token, and the
-//! ring bound (`ctx_len`) keeps memory O(context) for arbitrarily long
-//! generations.
+//! window recompute the legacy generation path paid per token.
+//!
+//! Storage is **paged** ([`crate::model::kv_cache`]): columns live in
+//! fixed-size pages drawn from a shared [`KvPool`], mapped per stream
+//! by a page table, and pages that slide out of the `ctx_len`
+//! attention window return to the pool — so a session holds only what
+//! its live window touches (a short session a page or two per stream,
+//! never a full preallocated ring), memory stays O(context) for
+//! arbitrarily long generations, and many sessions opened in one pool
+//! ([`NativeSession::open_in_pool`]) share capacity. Paging moves
+//! bytes, never arithmetic: reads resolve to the same column values in
+//! the same order, so decode stays bit-identical to the ring design it
+//! replaced.
 //!
 //! # Equivalence contract
 //!
@@ -27,8 +37,9 @@
 //! relative-position logits — is replayed analytically per query:
 //! the columns contribute only softmax denominator mass, computed from
 //! the lazily grown table of projected distance embeddings. Past the
-//! ring capacity the oldest K/V entries are evicted (windowed
-//! attention), which is where the contract intentionally ends.
+//! `ctx_len` window the oldest K/V entries are evicted — their pages
+//! return to the pool (windowed attention), which is where the
+//! contract intentionally ends.
 //!
 //! # Batched step (continuous-batching serving)
 //!
@@ -39,7 +50,7 @@
 //! projections collapse into one expert-grouped dispatch over the
 //! union of (session, head, expert) selections per layer
 //! ([`crate::kernels::moe_matmul_banks_into`]). Only the attention
-//! core and the K/V ring pushes stay per-session (they depend on each
+//! core and the K/V page pushes stay per-session (they depend on each
 //! session's private cache and position). Because every kernel
 //! preserves per-row accumulation order, a fused step is bit-identical
 //! to N sequential [`Session::decode`] calls — pinned by
@@ -52,6 +63,7 @@ use crate::config::{ModelConfig, Positional, Task};
 use crate::kernels::{matmul_into, moe_matmul_banks_into, par_rows_mut, scratch};
 use crate::model::attention::proj;
 use crate::model::block::mlp_apply;
+use crate::model::kv_cache::{stream_pages, Kv, KvPool};
 use crate::model::params::{AttnP, DenseP, MoaP, NativeModel, Proj, SwitchHeadP, XlP};
 use crate::model::tensor::{
     layer_norm, matmul, moe_matmul, rope_rotate, route, sinusoidal_row, softmax_rows, MacCounter,
@@ -60,36 +72,10 @@ use crate::model::tensor::{
 use crate::runtime::api::{Logits, Session, TokenBatch};
 use crate::util::error::{bail, Result};
 
-/// Ring-buffered K/V vectors for one attention matrix: `[rows, cap, dh]`.
-struct Kv {
-    k: Vec<f32>,
-    v: Vec<f32>,
-}
-
-impl Kv {
-    fn new(rows: usize, cap: usize, dh: usize) -> Kv {
-        Kv { k: vec![0f32; rows * cap * dh], v: vec![0f32; rows * cap * dh] }
-    }
-
-    /// Store the chunk's `[rows, tn, dh]` projections at their position
-    /// slots (`pos % cap`), evicting whatever lived there before.
-    fn push(&mut self, kh: &[f32], vh: &[f32], geo: &Geo) {
-        let (cap, dh) = (geo.cap, geo.dh);
-        for bi in 0..geo.rows {
-            for ci in 0..geo.tn {
-                let slot = (geo.pos0 + ci) % cap;
-                let dst = (bi * cap + slot) * dh;
-                let src = (bi * geo.tn + ci) * dh;
-                self.k[dst..dst + dh].copy_from_slice(&kh[src..src + dh]);
-                self.v[dst..dst + dh].copy_from_slice(&vh[src..src + dh]);
-            }
-        }
-    }
-}
-
-/// Per-layer decode state: one K/V ring per attention matrix (per head;
-/// MoA shares a single K/V), plus the lazily grown table of projected
-/// XL distance embeddings (`r[dist]`, one `[dh]` row per distance).
+/// Per-layer decode state: one paged K/V store per attention matrix
+/// (per head; MoA shares a single K/V), plus the lazily grown table of
+/// projected XL distance embeddings (`r[dist]`, one `[dh]` row per
+/// distance).
 struct LayerState {
     kv: Vec<Kv>,
     r: Vec<Vec<f32>>,
@@ -113,11 +99,36 @@ pub struct NativeSession<'m> {
     pos: usize,
     cap: usize,
     tc: usize,
+    pool: KvPool,
+    /// Worst-case pages reserved in `pool` at open; returned on drop.
+    reserved_pages: usize,
     layers: Vec<LayerState>,
     macs: MacCounter,
 }
 
 impl<'m> NativeSession<'m> {
+    /// Worst-case concurrent page demand [`open_in_pool`] will reserve
+    /// for a session of `rows` rows bounded by `max_positions` pushed
+    /// positions (`None` = the full attention window). This is THE
+    /// demand formula: admission gates ([`crate::serve::Scheduler`])
+    /// must call it rather than re-deriving it, so a capacity check
+    /// and the reservation it guards can never disagree.
+    ///
+    /// [`open_in_pool`]: NativeSession::open_in_pool
+    pub fn pool_demand(
+        cfg: &ModelConfig,
+        rows: usize,
+        pool: &KvPool,
+        max_positions: Option<usize>,
+    ) -> usize {
+        let positions = max_positions.unwrap_or(usize::MAX).max(1);
+        rows * cfg.n_layers * cfg.kv_streams() * pool.stream_pages(cfg.ctx_len(), positions)
+    }
+
+    /// Open a session with a private page pool sized to its own
+    /// worst case (full attention window) — the standalone path, where
+    /// paging still means short-lived sessions materialize only the
+    /// pages they touch.
     pub fn open(model: &'m NativeModel, rows: usize) -> Result<NativeSession<'m>> {
         let cfg = &model.cfg;
         if cfg.task != Task::Lm {
@@ -127,18 +138,68 @@ impl<'m> NativeSession<'m> {
             bail!("open_session: zero rows");
         }
         let cap = cfg.ctx_len();
+        let pc = KvPool::default_page_cols(cap);
+        let n_streams = rows * cfg.n_layers * cfg.kv_streams();
+        let pool = KvPool::new(pc, cfg.d_head, n_streams * stream_pages(pc, cap, usize::MAX))?;
+        Self::open_in_pool(model, rows, &pool, None)
+    }
+
+    /// Open a session whose K/V pages come from a shared pool (the
+    /// serving path: one pool across every admitted session). Reserves
+    /// the session's worst-case concurrent page demand up front —
+    /// bounded by `max_positions` when the caller knows the total
+    /// positions the session will ever push (prompt + decoded tokens),
+    /// the full attention window otherwise — and fails, reserving
+    /// nothing, when the pool cannot cover it: callers treat that as
+    /// "defer admission", not as an error state. Sessions must not
+    /// push past `max_positions`; the reservation (and with it the
+    /// pool's no-exhaustion guarantee) only covers that budget.
+    pub fn open_in_pool(
+        model: &'m NativeModel,
+        rows: usize,
+        pool: &KvPool,
+        max_positions: Option<usize>,
+    ) -> Result<NativeSession<'m>> {
+        let cfg = &model.cfg;
+        if cfg.task != Task::Lm {
+            bail!("decoding sessions require an LM config");
+        }
+        if rows == 0 {
+            bail!("open_session: zero rows");
+        }
+        if pool.dh() != cfg.d_head {
+            bail!("kv pool dh {} != model d_head {}", pool.dh(), cfg.d_head);
+        }
+        let cap = cfg.ctx_len();
         let tc = if cfg.pos == Positional::Xl { cfg.seq_len } else { 0 };
-        let n_kv = match &model.layers[0].attn {
-            AttnP::Moa(_) => 1,
-            _ => cfg.n_heads,
-        };
+        let n_kv = cfg.kv_streams();
+        let demand = Self::pool_demand(cfg, rows, pool, max_positions);
+        if !pool.try_reserve(demand) {
+            let st = pool.stats();
+            bail!(
+                "kv pool cannot cover this session's worst-case demand of {demand} pages \
+                 ({} of {} already reserved) — defer admission or grow the pool",
+                st.reserved,
+                st.max_pages
+            );
+        }
         let layers = (0..cfg.n_layers)
             .map(|_| LayerState {
-                kv: (0..n_kv).map(|_| Kv::new(rows, cap, cfg.d_head)).collect(),
+                kv: (0..n_kv).map(|_| Kv::new(pool, rows, cap)).collect(),
                 r: vec![Vec::new(); n_kv],
             })
             .collect();
-        Ok(NativeSession { model, rows, pos: 0, cap, tc, layers, macs: MacCounter::default() })
+        Ok(NativeSession {
+            model,
+            rows,
+            pos: 0,
+            cap,
+            tc,
+            pool: pool.clone(),
+            reserved_pages: demand,
+            layers,
+            macs: MacCounter::default(),
+        })
     }
 
     /// Run the block stack over a `[rows, tn]` chunk against the cached
@@ -199,6 +260,15 @@ impl<'m> NativeSession<'m> {
     }
 }
 
+impl Drop for NativeSession<'_> {
+    /// Return the admission reservation (the pages themselves go back
+    /// via each [`Kv`]'s own drop) — a retired, cancelled or simply
+    /// dropped session frees everything it promised to use.
+    fn drop(&mut self) {
+        self.pool.unreserve(self.reserved_pages);
+    }
+}
+
 impl Session for NativeSession<'_> {
     fn rows(&self) -> usize {
         self.rows
@@ -250,7 +320,8 @@ impl Session for NativeSession<'_> {
 /// `sinusoidal(dist) @ w_kr`, identical to the corresponding row of the
 /// full forward's `r` matrix; each decode step adds at most one row).
 /// Callers clamp `max_dist` to `cap + tc - 1`, so the table — like the
-/// K/V rings — stays O(context) for arbitrarily long generations.
+/// paged K/V window — stays O(context) for arbitrarily long
+/// generations.
 fn ensure_r(
     r: &mut Vec<f32>,
     w_kr: &[f32],
@@ -269,7 +340,7 @@ fn ensure_r(
     }
 }
 
-/// Attention core for one matrix over the ring + the XL zero-cache
+/// Attention core for one matrix over the paged window + the XL zero-cache
 /// pseudo-columns. `q` is `[rows, tn, dh]` pre-u-bias; `xl` carries
 /// `(u_bias, v_bias, r_table)`. Returns `[rows, tn, dh]`.
 ///
@@ -289,6 +360,11 @@ fn attend(
     let scale = 1.0 / (dh as f32).sqrt();
     let mut out = scratch::take(rows * tn * dh);
     let max_width = tc + (pos0 + tn).min(cap);
+    // One pool lock for the whole attention core: shards resolve
+    // columns with lock-free page-table math (`Kv::for_window`, one
+    // resolution per contiguous run) over the raw store slices.
+    let view = kv.read();
+    let (kst, vst) = view.slices();
     par_rows_mut(&mut out, dh, 2 * max_width * dh, |ridx, orow| {
         let (bi, ci) = (ridx / tn, ridx % tn);
         let p = pos0 + ci;
@@ -301,7 +377,7 @@ fn attend(
         // denominator mass, exactly as in the full forward. Distances
         // clamp at the table bound (cap + tc - 1) like the full
         // forward's `clamp(0, tk - 1)`; the clamp only engages past
-        // ring eviction, outside the equivalence window.
+        // window eviction, outside the equivalence window.
         if let Some((_, vb, r)) = xl {
             let max_dist = cap + tc - 1;
             for (j, lv) in logits[..tc].iter_mut().enumerate() {
@@ -315,12 +391,10 @@ fn attend(
             }
         }
         // Live context columns, oldest first (the full forward's
-        // summation order).
-        for (jj, kpos) in (lo..=p).enumerate() {
-            let krow = {
-                let base = (bi * cap + kpos % cap) * dh;
-                &kv.k[base..base + dh]
-            };
+        // summation order); `for_window` resolves each page once per
+        // contiguous run rather than once per column.
+        kv.for_window(bi, lo, p, |jj, base| {
+            let krow = &kst[base..base + dh];
             let mut s = 0f32;
             match xl {
                 Some((u, _, _)) => {
@@ -336,7 +410,7 @@ fn attend(
             }
             let mut logit = s * scale;
             if let Some((_, vb, r)) = xl {
-                let dist = p - kpos;
+                let dist = p - (lo + jj);
                 let rrow = &r[dist * dh..(dist + 1) * dh];
                 let mut pb = 0f32;
                 for d0 in 0..dh {
@@ -345,17 +419,16 @@ fn attend(
                 logit += pb;
             }
             logits[tc + jj] = logit;
-        }
+        });
         let width = logits.len();
         softmax_rows(&mut logits, width);
-        for (jj, kpos) in (lo..=p).enumerate() {
+        kv.for_window(bi, lo, p, |jj, base| {
             let w = logits[tc + jj];
-            let base = (bi * cap + kpos % cap) * dh;
-            let vrow = &kv.v[base..base + dh];
+            let vrow = &vst[base..base + dh];
             for d0 in 0..dh {
                 orow[d0] += w * vrow[d0];
             }
-        }
+        });
         scratch::put(logits);
     });
     // The per-query MAC tally from the serial loop, reproduced
@@ -392,7 +465,7 @@ fn xl_tables<'a>(
 }
 
 /// SwitchHead MoE attention over the cache: route the chunk, project
-/// only the selected experts' K/V (gate-combined into the ring), attend.
+/// only the selected experts' K/V (gate-combined into the cache), attend.
 fn switchhead_decode(
     cfg: &ModelConfig,
     p: &SwitchHeadP,
@@ -420,7 +493,7 @@ fn switchhead_decode(
             rope_rotate(&mut qh, geo.rows, geo.tn, geo.dh, geo.pos0);
             rope_rotate(&mut kh, geo.rows, geo.tn, geo.dh, geo.pos0);
         }
-        st.kv[hi].push(&kh, &vh, geo);
+        st.kv[hi].push(&kh, &vh, geo.tn, geo.pos0);
         scratch::put(kh);
         scratch::put(vh);
         let xl = xl_tables(p.xl.as_ref(), &mut st.r[hi], hi, d, geo, macs);
@@ -457,7 +530,7 @@ fn dense_decode(
             rope_rotate(&mut qh, geo.rows, geo.tn, geo.dh, geo.pos0);
             rope_rotate(&mut kh, geo.rows, geo.tn, geo.dh, geo.pos0);
         }
-        st.kv[hi].push(&kh, &vh, geo);
+        st.kv[hi].push(&kh, &vh, geo.tn, geo.pos0);
         scratch::put(kh);
         scratch::put(vh);
         let xl = xl_tables(p.xl.as_ref(), &mut st.r[hi], hi, d, geo, macs);
@@ -480,10 +553,11 @@ fn dense_decode(
 /// [`Logits`] per session, in the same order.
 ///
 /// All sessions must come from the same model and be prefilled; their
-/// positions may differ arbitrarily (each keeps its own K/V rings and
-/// XL distance table). Per-token work runs once over the fused batch,
-/// MoE projections as one union expert-grouped dispatch per layer and
-/// projection type; results are bit-identical to decoding each session
+/// positions may differ arbitrarily (each keeps its own K/V page
+/// tables and XL distance table). Per-token work runs once over the
+/// fused batch, MoE projections as one union expert-grouped dispatch
+/// per layer and projection type; results are bit-identical to
+/// decoding each session
 /// sequentially. Per-session MAC counters advance exactly as in
 /// sequential decode: attention-core work is tallied per session, the
 /// per-token-uniform remainder is attributed by row share.
@@ -609,7 +683,7 @@ fn proj_heads(
     out
 }
 
-/// Rope-rotate (if configured) and ring-push one attention matrix's
+/// Rope-rotate (if configured) and page-push one attention matrix's
 /// fused `[n, dh]` K/V chunks into each session's cache at its own
 /// position.
 fn push_kv_step(
@@ -624,18 +698,17 @@ fn push_kv_step(
     let dh = cfg.d_head;
     for (si, sess) in sessions.iter_mut().enumerate() {
         let (o, r) = (offsets[si], sess.rows);
-        let geo = Geo { rows: r, tn: 1, pos0: sess.pos, cap: sess.cap, tc: sess.tc, dh };
         let ks = &mut kh[o * dh..(o + r) * dh];
         if cfg.pos == Positional::Rope {
-            rope_rotate(ks, r, 1, dh, geo.pos0);
+            rope_rotate(ks, r, 1, dh, sess.pos);
         }
-        sess.layers[li].kv[mat].push(ks, &vh[o * dh..(o + r) * dh], &geo);
+        sess.layers[li].kv[mat].push(ks, &vh[o * dh..(o + r) * dh], 1, sess.pos);
     }
 }
 
 /// Rope-rotate (if configured) each session's fused `[n, dh]` query
-/// chunk and attend it against that session's ring + XL pseudo-columns,
-/// writing the attended rows into `att`.
+/// chunk and attend it against that session's cached window + XL
+/// pseudo-columns, writing the attended rows into `att`.
 #[allow(clippy::too_many_arguments)]
 fn attend_q_step(
     cfg: &ModelConfig,
@@ -813,8 +886,8 @@ fn moa_step(
     y
 }
 
-/// MoA over the cache: shared K/V ring, `moa_k` routed query/output
-/// experts per token.
+/// MoA over the cache: one shared K/V stream, `moa_k` routed
+/// query/output experts per token.
 fn moa_decode(
     cfg: &ModelConfig,
     p: &MoaP,
@@ -831,7 +904,7 @@ fn moa_decode(
     if cfg.pos == Positional::Rope {
         rope_rotate(&mut kh, geo.rows, geo.tn, dh, geo.pos0);
     }
-    st.kv[0].push(&kh, &vh, geo);
+    st.kv[0].push(&kh, &vh, geo.tn, geo.pos0);
     scratch::put(kh);
     scratch::put(vh);
 

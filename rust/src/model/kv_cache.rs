@@ -1,0 +1,546 @@
+//! Paged expert-sparse KV cache: one shared block pool, per-session
+//! page tables.
+//!
+//! # Why paging
+//!
+//! Until PR 5 every [`NativeSession`](super::decode::NativeSession)
+//! preallocated `ctx_len` K/V columns per (layer, stream) as a ring
+//! buffer — full-window memory the moment a session opened, even for a
+//! three-token request. That gave SwitchHead's serving-side memory win
+//! (gate-combined K/V of only the selected experts, paper Sec. 3) back
+//! at scale: the scheduler could admit by slot count only, and N
+//! mostly-short sessions paid N full rings. This module replaces the
+//! rings with fixed-size **pages** of K/V columns drawn from a shared
+//! [`KvPool`], so a session holds exactly the pages its live attention
+//! window touches and thousands of short sessions share one pool — the
+//! Switch Transformers turn-sparsity-into-capacity argument applied to
+//! the KV cache.
+//!
+//! # Structure
+//!
+//! * [`KvPool`] — the shared block pool: two flat f32 stores (K and V,
+//!   `max_pages * page_cols * d_head` floats each, materialized
+//!   lazily), a LIFO free list of recycled page ids, and the
+//!   reservation counter capacity-aware admission runs on. Cheap to
+//!   clone (an `Arc` handle); all mutation is behind one mutex.
+//! * [`Kv`] — one attention stream group (one layer × one attention
+//!   matrix) of one session: per row, a page table mapping logical
+//!   page index `pos / page_cols` to a pool page id. Pushes append at
+//!   strictly increasing positions; pages whose last position falls
+//!   out of the `cap` (= `ctx_len`) attention window are freed back to
+//!   the pool *before* the new position's page is allocated, so the
+//!   ring/XL window semantics are preserved with bounded pages held.
+//!
+//! # Invariants
+//!
+//! * **Bit identity.** Paging changes WHERE a K/V column lives, never
+//!   its value or any reduction order: [`Kv::push`] stores exactly the
+//!   floats the old ring stored, and reads resolve through
+//!   [`Kv::locate`] / [`Kv::for_window`] (same offsets, enumerated in
+//!   ascending position order) to the same column bytes. The decode/serve
+//!   equivalence suites (`rust/tests/decode.rs`, `rust/tests/serve.rs`)
+//!   therefore pin paged decode to the full-window forward unchanged.
+//! * **Page lifetime.** A page is owned by exactly one stream from
+//!   allocation to the free that retires it (window slide, or
+//!   [`Kv`]'s `Drop`, which returns every held page). The free list
+//!   never holds a page that a live table still maps. Freed pages are
+//!   not zeroed: a stream only ever reads positions it wrote, and
+//!   within a stream positions are written consecutively from 0.
+//! * **Reservation soundness.** Admission reserves a session's
+//!   worst-case concurrent page demand ([`stream_pages`] per stream)
+//!   up front and [`KvPool::try_reserve`] refuses past `max_pages`, so
+//!   `sum(reservations) <= max_pages` always holds and an in-decode
+//!   allocation cannot fail for any session that stays within its
+//!   declared position budget. Exceeding the budget is a caller bug
+//!   and panics with the pool state (the scheduler's retire logic
+//!   makes it unreachable in serving).
+//! * **Locking.** The pool mutex is held only inside `push`, the
+//!   stats/reservation accessors, and for the duration of a borrowed
+//!   [`KvRead`] view; nothing ever locks it re-entrantly (attention
+//!   reads go through raw slices captured from the view, so worker
+//!   threads never touch the mutex).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::util::error::{bail, Result};
+
+/// Worst-case pages a single stream can hold at once when writing
+/// `positions` consecutive positions (from 0) under an attention
+/// window of `cap` positions, with pages of `page_cols` columns.
+///
+/// While the stream is still growing (`positions <= cap`) pages are
+/// never freed, so the bound is the aligned span `ceil(positions /
+/// page_cols)`. Once the window slides, free-before-alloc keeps at
+/// most `ceil((cap - 1) / page_cols) + 1` pages live (the `+1` is the
+/// boundary page that still holds the window's oldest column). The
+/// bound is the smaller of the two, and is what admission reserves.
+pub fn stream_pages(page_cols: usize, cap: usize, positions: usize) -> usize {
+    debug_assert!(page_cols > 0 && cap > 0);
+    let grow = (positions.max(1) - 1) / page_cols + 1;
+    let windowed = (cap - 1) / page_cols + 2 - usize::from((cap - 1) % page_cols == 0);
+    grow.min(windowed)
+}
+
+/// Immutable pool geometry, shared by every handle clone.
+#[derive(Debug, Clone, Copy)]
+struct Geom {
+    page_cols: usize,
+    dh: usize,
+    max_pages: usize,
+}
+
+/// Mutable pool state (behind the handle's mutex). `k`/`v` hold
+/// `materialized * page_cols * dh` floats each; page `p` owns the span
+/// `[p * page_cols * dh, (p + 1) * page_cols * dh)` of both.
+struct PoolInner {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Recycled page ids, LIFO so reuse stays cache-warm.
+    free: Vec<u32>,
+    /// Pages whose backing floats exist (monotone; never shrinks).
+    materialized: usize,
+    in_use: usize,
+    /// Peak of `in_use` over the pool's life — the measured memory
+    /// footprint the benches compare against ring preallocation.
+    high_water: usize,
+    /// Pages promised to admitted sessions (worst-case demand).
+    reserved: usize,
+}
+
+impl PoolInner {
+    fn alloc(&mut self, geom: &Geom) -> Option<u32> {
+        let pid = match self.free.pop() {
+            Some(pid) => pid,
+            None => {
+                if self.materialized >= geom.max_pages {
+                    return None;
+                }
+                let pid = self.materialized as u32;
+                self.materialized += 1;
+                let floats = self.materialized * geom.page_cols * geom.dh;
+                self.k.resize(floats, 0.0);
+                self.v.resize(floats, 0.0);
+                pid
+            }
+        };
+        self.in_use += 1;
+        self.high_water = self.high_water.max(self.in_use);
+        Some(pid)
+    }
+
+    fn free(&mut self, pid: u32) {
+        debug_assert!((pid as usize) < self.materialized);
+        self.free.push(pid);
+        self.in_use -= 1;
+    }
+}
+
+/// Point-in-time pool counters (pages). Floats follow via
+/// [`floats_per_page`](PoolStats::floats_per_page): each page stores
+/// `page_cols` K columns *and* `page_cols` V columns of `dh` floats.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolStats {
+    pub page_cols: usize,
+    pub dh: usize,
+    pub max_pages: usize,
+    pub materialized: usize,
+    pub in_use: usize,
+    pub high_water: usize,
+    pub reserved: usize,
+    /// Free-list length (recycled pages awaiting reuse);
+    /// `materialized == in_use + free_pages` always.
+    pub free_pages: usize,
+}
+
+impl PoolStats {
+    /// K + V floats one page stores.
+    pub fn floats_per_page(&self) -> usize {
+        2 * self.page_cols * self.dh
+    }
+
+    /// Peak floats ever live at once (the paged analog of "N
+    /// preallocated rings") — what the serve CLI's `kv pool:` line and
+    /// the serve bench's `paged_peak_kv_floats` report.
+    pub fn peak_floats(&self) -> usize {
+        self.high_water * self.floats_per_page()
+    }
+}
+
+/// Shared page pool handle. Clones share the same pool; drop of the
+/// last handle frees the backing stores.
+#[derive(Clone)]
+pub struct KvPool {
+    geom: Geom,
+    inner: Arc<Mutex<PoolInner>>,
+}
+
+impl KvPool {
+    /// A pool of at most `max_pages` pages, each holding `page_cols`
+    /// K/V columns of `dh` floats. Backing memory is materialized
+    /// lazily, page by page, so a large `max_pages` costs nothing
+    /// until sessions actually write.
+    pub fn new(page_cols: usize, dh: usize, max_pages: usize) -> Result<KvPool> {
+        if page_cols == 0 || dh == 0 || max_pages == 0 {
+            bail!("KvPool: page_cols, dh and max_pages must all be >= 1");
+        }
+        Ok(KvPool {
+            geom: Geom { page_cols, dh, max_pages },
+            inner: Arc::new(Mutex::new(PoolInner {
+                k: Vec::new(),
+                v: Vec::new(),
+                free: Vec::new(),
+                materialized: 0,
+                in_use: 0,
+                high_water: 0,
+                reserved: 0,
+            })),
+        })
+    }
+
+    /// Default page width for a context of `cap` positions: fine
+    /// enough that short sessions hold a fraction of a ring, coarse
+    /// enough that page-table overhead stays negligible.
+    pub fn default_page_cols(cap: usize) -> usize {
+        (cap / 8).clamp(1, 16)
+    }
+
+    pub fn page_cols(&self) -> usize {
+        self.geom.page_cols
+    }
+
+    pub fn dh(&self) -> usize {
+        self.geom.dh
+    }
+
+    pub fn max_pages(&self) -> usize {
+        self.geom.max_pages
+    }
+
+    /// [`stream_pages`] with this pool's page width.
+    pub fn stream_pages(&self, cap: usize, positions: usize) -> usize {
+        stream_pages(self.geom.page_cols, cap, positions)
+    }
+
+    /// Reserve `pages` for a session about to open; refuses (without
+    /// reserving) when the pool cannot cover them on top of existing
+    /// reservations.
+    pub fn try_reserve(&self, pages: usize) -> bool {
+        let mut inner = self.lock();
+        if inner.reserved + pages > self.geom.max_pages {
+            return false;
+        }
+        inner.reserved += pages;
+        true
+    }
+
+    /// Return a reservation (session retired/cancelled/dropped).
+    pub fn unreserve(&self, pages: usize) {
+        let mut inner = self.lock();
+        debug_assert!(inner.reserved >= pages);
+        inner.reserved = inner.reserved.saturating_sub(pages);
+    }
+
+    /// Would [`try_reserve`](KvPool::try_reserve)`(pages)` succeed
+    /// right now? The scheduler polls this before dequeuing a request
+    /// so pool exhaustion defers admission instead of consuming the
+    /// request.
+    pub fn can_admit(&self, pages: usize) -> bool {
+        self.lock().reserved + pages <= self.geom.max_pages
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let inner = self.lock();
+        PoolStats {
+            page_cols: self.geom.page_cols,
+            dh: self.geom.dh,
+            max_pages: self.geom.max_pages,
+            materialized: inner.materialized,
+            in_use: inner.in_use,
+            high_water: inner.high_water,
+            reserved: inner.reserved,
+            free_pages: inner.free.len(),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, PoolInner> {
+        self.inner.lock().expect("kv pool mutex poisoned")
+    }
+}
+
+/// One row's page table: `pages[i]` backs logical page `first_lp + i`
+/// (positions `lp * page_cols ..`). Contiguous by construction —
+/// pushes arrive at consecutive positions and frees only pop the
+/// front.
+struct Stream {
+    first_lp: usize,
+    pages: VecDeque<u32>,
+}
+
+/// Paged K/V storage for one attention stream group (one layer × one
+/// attention matrix) across a session's `rows` — the drop-in
+/// replacement for the old `[rows, cap, dh]` ring pair. Holds a pool
+/// handle; every held page returns to the pool on drop.
+pub struct Kv {
+    pool: KvPool,
+    cap: usize,
+    rows: usize,
+    streams: Vec<Stream>,
+}
+
+impl Kv {
+    pub fn new(pool: &KvPool, rows: usize, cap: usize) -> Kv {
+        debug_assert!(rows > 0 && cap > 0);
+        Kv {
+            pool: pool.clone(),
+            cap,
+            rows,
+            streams: (0..rows).map(|_| Stream { first_lp: 0, pages: VecDeque::new() }).collect(),
+        }
+    }
+
+    /// Store a chunk's `[rows, tn, dh]` K/V projections at positions
+    /// `pos0 .. pos0 + tn` (strictly increasing across calls). Pages
+    /// that the post-write attention window no longer covers are freed
+    /// back to the pool before the new position's page is allocated,
+    /// so a same-stream slide can recycle its own page and the pool
+    /// never sees more than [`stream_pages`] pages from this stream.
+    ///
+    /// # Panics
+    /// If the pool is exhausted — unreachable when every session in
+    /// the pool stays within the position budget it reserved.
+    pub fn push(&mut self, kh: &[f32], vh: &[f32], tn: usize, pos0: usize) {
+        let (pc, dh, cap) = (self.pool.page_cols(), self.pool.dh(), self.cap);
+        debug_assert_eq!(kh.len(), self.rows * tn * dh, "push k chunk shape");
+        debug_assert_eq!(vh.len(), self.rows * tn * dh, "push v chunk shape");
+        let geom = self.pool.geom;
+        let mut inner = self.pool.lock();
+        for (bi, st) in self.streams.iter_mut().enumerate() {
+            for ci in 0..tn {
+                let p = pos0 + ci;
+                // Slide the window: drop pages fully below the low
+                // edge after this write lands.
+                let lo = (p + 1).saturating_sub(cap);
+                while !st.pages.is_empty() && (st.first_lp + 1) * pc <= lo {
+                    let pid = st.pages.pop_front().expect("non-empty page table");
+                    inner.free(pid);
+                    st.first_lp += 1;
+                }
+                let lp = p / pc;
+                if st.pages.is_empty() {
+                    st.first_lp = lp;
+                }
+                if lp >= st.first_lp + st.pages.len() {
+                    debug_assert_eq!(
+                        lp,
+                        st.first_lp + st.pages.len(),
+                        "positions must be pushed consecutively"
+                    );
+                    let pid = inner.alloc(&geom).unwrap_or_else(|| {
+                        panic!(
+                            "kv page pool exhausted ({} / {} pages in use, {} reserved): \
+                             a session decoded past its reserved position budget",
+                            inner.in_use, geom.max_pages, inner.reserved
+                        )
+                    });
+                    st.pages.push_back(pid);
+                }
+                let pid = st.pages[lp - st.first_lp] as usize;
+                let dst = (pid * pc + p % pc) * dh;
+                let src = (bi * tn + ci) * dh;
+                inner.k[dst..dst + dh].copy_from_slice(&kh[src..src + dh]);
+                inner.v[dst..dst + dh].copy_from_slice(&vh[src..src + dh]);
+            }
+        }
+    }
+
+    /// Flat float offset of position `pos` of row `row` in the pool
+    /// stores — pure page-table math, no lock. The position must be
+    /// inside the row's live window (pushed, not yet slid out).
+    #[inline]
+    pub fn locate(&self, row: usize, pos: usize) -> usize {
+        let pc = self.pool.page_cols();
+        let st = &self.streams[row];
+        debug_assert!(pos / pc >= st.first_lp, "position below the live window");
+        let pid = st.pages[pos / pc - st.first_lp] as usize;
+        (pid * pc + pos % pc) * self.pool.dh()
+    }
+
+    /// Call `f(jj, base)` for every position `lo + jj` in `lo..=hi`
+    /// (ascending — the attention core's summation order), with `base`
+    /// the [`locate`](Kv::locate) offset of that position's column.
+    /// Columns within a page are contiguous, so each page is resolved
+    /// once per run instead of once per column — the hot read path of
+    /// `attend`. Lock-free, like `locate`; the window must be live.
+    #[inline]
+    pub fn for_window(&self, row: usize, lo: usize, hi: usize, mut f: impl FnMut(usize, usize)) {
+        let (pc, dh) = (self.pool.page_cols(), self.pool.dh());
+        let st = &self.streams[row];
+        let mut pos = lo;
+        let mut jj = 0usize;
+        while pos <= hi {
+            let lp = pos / pc;
+            debug_assert!(lp >= st.first_lp, "position below the live window");
+            let pid = st.pages[lp - st.first_lp] as usize;
+            let run_end = ((lp + 1) * pc - 1).min(hi);
+            let mut base = (pid * pc + pos % pc) * dh;
+            while pos <= run_end {
+                f(jj, base);
+                jj += 1;
+                base += dh;
+                pos += 1;
+            }
+        }
+    }
+
+    /// Borrow the pool stores for reading (holds the pool lock for the
+    /// view's lifetime). The attention core captures the raw slices
+    /// and resolves columns via [`Kv::for_window`] / [`Kv::locate`],
+    /// so pool workers never touch the mutex.
+    pub fn read(&self) -> KvRead<'_> {
+        KvRead(self.pool.lock())
+    }
+
+    /// Pages currently held across all rows (tests/introspection).
+    pub fn pages_held(&self) -> usize {
+        self.streams.iter().map(|s| s.pages.len()).sum()
+    }
+}
+
+impl Drop for Kv {
+    /// Every held page goes back to the pool — cancelled and retired
+    /// sessions restore the free list in full.
+    fn drop(&mut self) {
+        let mut inner = self.pool.lock();
+        for st in &mut self.streams {
+            while let Some(pid) = st.pages.pop_front() {
+                inner.free(pid);
+            }
+        }
+    }
+}
+
+/// A read view over the pool's K/V stores (the pool lock, held until
+/// drop).
+pub struct KvRead<'a>(MutexGuard<'a, PoolInner>);
+
+impl KvRead<'_> {
+    /// `(k_store, v_store)` — index with [`Kv::locate`] offsets.
+    pub fn slices(&self) -> (&[f32], &[f32]) {
+        (self.0.k.as_slice(), self.0.v.as_slice())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_pages_bounds() {
+        // Growing phase: aligned span from 0.
+        assert_eq!(stream_pages(4, 16, 1), 1);
+        assert_eq!(stream_pages(4, 16, 4), 1);
+        assert_eq!(stream_pages(4, 16, 5), 2);
+        assert_eq!(stream_pages(4, 16, 16), 4);
+        // Windowed phase: ceil((cap-1)/pc) + 1.
+        assert_eq!(stream_pages(4, 16, 100), 5);
+        assert_eq!(stream_pages(16, 16, usize::MAX), 2);
+        assert_eq!(stream_pages(1, 1, usize::MAX), 1);
+        // Odd page width straddles.
+        assert_eq!(stream_pages(7, 16, 17), 3);
+        assert_eq!(stream_pages(7, 16, usize::MAX), 4);
+    }
+
+    #[test]
+    fn reservation_accounting() {
+        let pool = KvPool::new(4, 8, 10).unwrap();
+        assert!(pool.can_admit(10));
+        assert!(pool.try_reserve(6));
+        assert!(!pool.can_admit(5));
+        assert!(!pool.try_reserve(5), "over-reserve must refuse");
+        assert_eq!(pool.stats().reserved, 6, "failed reserve must not leak");
+        assert!(pool.try_reserve(4));
+        pool.unreserve(10);
+        assert_eq!(pool.stats().reserved, 0);
+    }
+
+    #[test]
+    fn push_read_roundtrip_across_pages_and_window() {
+        let (pc, dh, cap) = (2usize, 3usize, 6usize);
+        let pool = KvPool::new(pc, dh, 8).unwrap();
+        let mut kv = Kv::new(&pool, 1, cap);
+        // Push 10 positions one at a time; position p stores value
+        // p*10+j so every column is distinguishable.
+        let col = |p: usize, neg: bool| -> Vec<f32> {
+            (0..dh).map(|j| (p * 10 + j) as f32 * if neg { -1.0 } else { 1.0 }).collect()
+        };
+        for p in 0..10usize {
+            kv.push(&col(p, false), &col(p, true), 1, p);
+            // The live window after writing p is [lo, p].
+            let lo = (p + 1).saturating_sub(cap);
+            assert!(
+                kv.pages_held() <= stream_pages(pc, cap, cap + 1),
+                "held {} pages at p={p}",
+                kv.pages_held()
+            );
+            let view = kv.read();
+            let (ks, vs) = view.slices();
+            for q in lo..=p {
+                let at = kv.locate(0, q);
+                assert_eq!(&ks[at..at + dh], col(q, false).as_slice(), "k at pos {q}");
+                assert_eq!(&vs[at..at + dh], col(q, true).as_slice(), "v at pos {q}");
+            }
+            // The run-based enumeration must yield exactly locate's
+            // offsets, in ascending position order.
+            let mut seen = Vec::new();
+            kv.for_window(0, lo, p, |jj, base| seen.push((jj, base)));
+            let want: Vec<(usize, usize)> =
+                (lo..=p).enumerate().map(|(jj, q)| (jj, kv.locate(0, q))).collect();
+            assert_eq!(seen, want, "for_window diverged from locate at p={p}");
+        }
+        // The stream never exceeded its windowed worst case, and drop
+        // returns everything.
+        let before = pool.stats();
+        assert!(before.high_water <= stream_pages(pc, cap, usize::MAX));
+        drop(kv);
+        let after = pool.stats();
+        assert_eq!(after.in_use, 0);
+        assert_eq!(after.free_pages, after.materialized, "drop must restore the free list");
+    }
+
+    #[test]
+    fn multi_row_streams_are_independent() {
+        let (pc, dh, cap) = (2usize, 2usize, 4usize);
+        let pool = KvPool::new(pc, dh, 16).unwrap();
+        let mut kv = Kv::new(&pool, 2, cap);
+        // One chunk push of 3 positions for both rows: [rows, tn, dh].
+        let mk = |base: f32| (0..2 * 3 * dh).map(|i| base + i as f32).collect::<Vec<f32>>();
+        let (kh, vh) = (mk(100.0), mk(500.0));
+        kv.push(&kh, &vh, 3, 0);
+        let view = kv.read();
+        let (ks, _) = view.slices();
+        for bi in 0..2 {
+            for ci in 0..3 {
+                let at = kv.locate(bi, ci);
+                let src = (bi * 3 + ci) * dh;
+                assert_eq!(&ks[at..at + dh], &kh[src..src + dh], "row {bi} pos {ci}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_materializes_lazily_and_recycles() {
+        let pool = KvPool::new(2, 2, 100).unwrap();
+        assert_eq!(pool.stats().materialized, 0, "no upfront allocation");
+        let mut kv = Kv::new(&pool, 1, 4);
+        for p in 0..20usize {
+            kv.push(&[1.0, 2.0], &[3.0, 4.0], 1, p);
+        }
+        let st = pool.stats();
+        // Window cap 4, pages of 2: at most ceil(3/2)+1 = 3 live, and
+        // recycling means materialization stops there too.
+        assert!(st.high_water <= 3, "high water {}", st.high_water);
+        assert!(st.materialized <= 3, "materialized {}", st.materialized);
+        assert!(st.peak_floats() <= 3 * 2 * 2 * 2);
+    }
+}

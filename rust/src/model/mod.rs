@@ -27,10 +27,14 @@
 //!   passes under XL / RoPE / no positional scheme.
 //! * [`block`] — pre-LN block stack, σ-MoE feedforward, and the
 //!   model-level `score` / `next_logits` / `class_logits` heads.
-//! * [`decode`] — [`NativeSession`], the incremental decoder with the
-//!   expert-sparse ring-buffered KV cache behind
-//!   [`crate::runtime::Session`], plus [`decode_batched`], the fused
-//!   multi-session step the `serve` continuous-batching layer drives.
+//! * [`kv_cache`] — the paged expert-sparse KV store: a shared
+//!   [`KvPool`] of fixed-size K/V pages (free list + reservations for
+//!   capacity-aware admission) and per-session page tables with
+//!   `ctx_len`-window lifetime.
+//! * [`decode`] — [`NativeSession`], the incremental decoder over the
+//!   paged KV cache behind [`crate::runtime::Session`], plus
+//!   [`decode_batched`], the fused multi-session step the `serve`
+//!   continuous-batching layer drives.
 //! * [`engine`] — [`NativeEngine`], the [`crate::runtime::Backend`]
 //!   implementation wrapping it all behind the typed inference API.
 //!
@@ -47,10 +51,12 @@ pub mod attention;
 pub mod block;
 pub mod decode;
 pub mod engine;
+pub mod kv_cache;
 pub mod params;
 pub mod tensor;
 
 pub use decode::{decode_batched, NativeSession};
 pub use engine::NativeEngine;
+pub use kv_cache::{KvPool, PoolStats};
 pub use params::NativeModel;
 pub use tensor::MacCounter;

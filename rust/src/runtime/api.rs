@@ -172,10 +172,11 @@ pub trait Backend {
 /// A stateful incremental decoder: prefill builds the per-layer decode
 /// state from the prompt, decode advances one token per row.
 ///
-/// The native implementation keeps an expert-sparse KV cache (only the
-/// K/V projections of the router-selected experts are computed and
-/// stored, ring-buffered to `ctx_len` entries), so a decode step costs
-/// O(context) attention instead of an O(T^2) window recompute. The PJRT
+/// The native implementation keeps an expert-sparse paged KV cache
+/// (only the K/V projections of the router-selected experts are
+/// computed and stored, in pool-backed pages windowed to `ctx_len`),
+/// so a decode step costs O(context) attention instead of an O(T^2)
+/// window recompute. The PJRT
 /// implementation falls back to windowed recompute over the compiled
 /// `next_logits` entry, so both backends serve one generation code path.
 pub trait Session {

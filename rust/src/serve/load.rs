@@ -1,6 +1,14 @@
 //! Synthetic load generation and the backpressure drive loop — shared
 //! by the `serve` CLI subcommand and `benches/serve_throughput.rs` so
 //! both exercise the scheduler with identical traffic.
+//!
+//! Invariants: [`synth_requests`] is a pure function of its arguments
+//! (seeded PRNG stream, no global state), so CLI and bench runs see
+//! byte-identical request sets; [`drive`] only ever submits while the
+//! queue reports room, so the bounded-queue backpressure error cannot
+//! fire from this loop — and a scheduler that defers admission on KV
+//! pool capacity simply drains more slowly, ticks still making
+//! progress until idle.
 
 use std::collections::VecDeque;
 

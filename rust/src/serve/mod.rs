@@ -22,8 +22,13 @@
 //!   per [`tick`](Scheduler::tick) assembles every active session's
 //!   next token into ONE fused [`decode_batched`] forward: one
 //!   expert-grouped dispatch per layer and projection type over the
-//!   union of (session, head, expert) selections, per-session KV rings
-//!   untouched.
+//!   union of (session, head, expert) selections, per-session KV page
+//!   tables untouched. Admission is **capacity-aware** over the shared
+//!   paged KV pool ([`crate::model::kv_cache`]): a request is admitted
+//!   only when the pool can cover its worst-case page demand, and
+//!   deferred (left queued, FIFO intact) otherwise — so thousands of
+//!   mostly-short sessions can share a pool far smaller than
+//!   slot-count × full-window preallocation.
 //! * Determinism: slot assignment is lowest-free-slot in queue order,
 //!   batch order is ascending slot index, and each request samples
 //!   from its own seeded RNG — a request's output is independent of

@@ -121,6 +121,16 @@ impl RequestQueue {
         Ok(id)
     }
 
+    /// The oldest pending request, without dequeuing it — the
+    /// scheduler inspects its KV page demand here and only [`pop`]s
+    /// once the pool can cover it (capacity-aware admission never
+    /// consumes a request it must defer).
+    ///
+    /// [`pop`]: RequestQueue::pop
+    pub fn peek(&self) -> Option<&QueuedRequest> {
+        self.items.front()
+    }
+
     /// Dequeue the oldest pending request.
     pub fn pop(&mut self) -> Option<QueuedRequest> {
         self.items.pop_front()

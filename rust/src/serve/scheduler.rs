@@ -8,8 +8,16 @@
 //! 1. **Evict** — slots whose request was cancelled are freed and
 //!    their partial output emitted.
 //! 2. **Admit** — queued requests fill free slots (lowest slot index
-//!    first, queue order): the request's prompt is prefilled into a
-//!    fresh single-row [`NativeSession`] and its first token sampled.
+//!    first, queue order), **capacity-aware**: a request is dequeued
+//!    only when the shared [`KvPool`] can cover its worst-case page
+//!    demand (prompt + budget positions, windowed to `ctx_len`) on
+//!    top of every admitted session's reservation. When it cannot,
+//!    admission stops for the tick — the request stays queued
+//!    (deferred, FIFO order intact) and [`TickReport::deferred`] /
+//!    [`ServeStats::deferrals`] record it; pool exhaustion is
+//!    backpressure here, never a panic. An admitted request's prompt
+//!    is prefilled into a fresh single-row [`NativeSession`] opened in
+//!    the pool and its first token sampled.
 //! 3. **Decode** — ONE fused [`decode_batched`] step over every active
 //!    session in ascending slot order. Per layer this is a single
 //!    expert-grouped dispatch over the union of (session, head,
@@ -17,17 +25,28 @@
 //!    Each row's next token is then sampled from its logits with the
 //!    request's private RNG.
 //! 4. **Retire** — rows that generated `max_new_tokens` are freed and
-//!    emitted.
+//!    emitted; their sessions return every KV page and reservation to
+//!    the pool.
 //!
 //! Slot assignment and batch order are deterministic, and every
 //! request samples from its own seeded RNG stream, so a request's
 //! output is identical whatever other traffic shared its ticks —
 //! `rust/tests/serve.rs` pins scheduler output against sequential
 //! single-session generation.
+//!
+//! # Capacity invariant
+//!
+//! Every admitted session reserved its worst-case concurrent page
+//! count before prefill and the reservations never exceed the pool, so
+//! a mid-decode page allocation cannot fail — the only pool-exhaustion
+//! surface is deferred admission. Sessions never outlive their pages:
+//! evict/retire/cancel all drop the session, which returns its pages
+//! and its reservation.
 
 use crate::coordinator::generate::sample_logits;
 use crate::model::decode::decode_batched;
-use crate::model::{NativeEngine, NativeSession};
+use crate::model::kv_cache::stream_pages;
+use crate::model::{KvPool, NativeEngine, NativeSession, PoolStats};
 use crate::runtime::{Session, TokenBatch};
 use crate::serve::request::{
     FinishReason, GenOutput, GenRequest, QueuedRequest, RequestId, RequestQueue, SamplingParams,
@@ -39,18 +58,30 @@ use crate::util::rng::Pcg;
 /// tests replay the same stream to reproduce scheduler output).
 pub const SAMPLE_STREAM: u64 = 0x5E4E;
 
-/// Serving shape: concurrent decode slots and queue depth.
+/// Serving shape: concurrent decode slots, queue depth, and the paged
+/// KV pool's geometry. Admission is bounded by BOTH `slots` (fused
+/// batch width) and the pool (worst-case page demand must fit).
 #[derive(Debug, Clone)]
 pub struct ServeOpts {
     /// Maximum concurrently decoding sessions (fused batch width cap).
+    /// With the default pool size this is also the admission bound;
+    /// shrink `kv_pool_pages` to make admission memory-bound instead.
     pub slots: usize,
     /// Bounded request-queue depth ([`RequestQueue`] backpressure).
     pub queue_cap: usize,
+    /// K/V positions per page. `None` →
+    /// [`KvPool::default_page_cols`] of the model's `ctx_len`.
+    pub kv_page_cols: Option<usize>,
+    /// Total pages in the shared pool. `None` → `slots` full-window
+    /// sessions' worth (admission then degenerates to slot-count-only,
+    /// the pre-paging behavior, while short sessions still materialize
+    /// only what they touch).
+    pub kv_pool_pages: Option<usize>,
 }
 
 impl Default for ServeOpts {
     fn default() -> ServeOpts {
-        ServeOpts { slots: 8, queue_cap: 64 }
+        ServeOpts { slots: 8, queue_cap: 64, kv_page_cols: None, kv_pool_pages: None }
     }
 }
 
@@ -67,6 +98,14 @@ pub struct ServeStats {
     pub cancelled: u64,
     /// Widest fused batch observed.
     pub peak_active: usize,
+    /// Ticks on which admission stopped because the KV pool could not
+    /// cover the next request's worst-case page demand.
+    pub deferrals: u64,
+    /// Total pages in the shared KV pool.
+    pub kv_pages: usize,
+    /// Peak KV pages ever live at once (the paged footprint the
+    /// benches compare against `slots` preallocated full rings).
+    pub peak_kv_pages: usize,
 }
 
 /// What one tick did.
@@ -84,6 +123,16 @@ pub struct TickReport {
     /// prefills) — the per-token latency a batched token actually
     /// waited; 0 when no session decoded this tick.
     pub decode_seconds: f64,
+    /// Requests left queued this tick because the KV pool could not
+    /// cover the next one's worst-case page demand (0 when admission
+    /// was slot-bound or the queue drained).
+    pub deferred: usize,
+    /// KV pages live after the tick (pool occupancy numerator; the
+    /// denominator is [`ServeStats::kv_pages`]).
+    pub kv_pages_in_use: usize,
+    /// KV pages promised to admitted sessions (worst case) after the
+    /// tick — what admission decisions are made against.
+    pub kv_pages_reserved: usize,
 }
 
 /// One admitted request: its session, sampling state, and progress.
@@ -108,25 +157,64 @@ pub struct Scheduler<'m> {
     engine: &'m NativeEngine,
     queue: RequestQueue,
     slots: Vec<Option<Active<'m>>>,
+    /// Shared paged KV pool every admitted session draws from.
+    pool: KvPool,
     finished: Vec<GenOutput>,
     stats: ServeStats,
 }
 
 impl<'m> Scheduler<'m> {
     pub fn new(engine: &'m NativeEngine, opts: &ServeOpts) -> Result<Scheduler<'m>> {
-        if engine.cfg().task != crate::config::Task::Lm {
+        let cfg = engine.cfg();
+        if cfg.task != crate::config::Task::Lm {
             bail!("serving requires an LM config");
         }
         if opts.slots == 0 {
             bail!("serve: need at least one slot");
         }
+        let cap = cfg.ctx_len();
+        let page_cols = opts.kv_page_cols.unwrap_or_else(|| KvPool::default_page_cols(cap));
+        let pool_pages = match opts.kv_pool_pages {
+            Some(pages) => pages,
+            None => {
+                // Default: room for `slots` full-window sessions, so
+                // admission stays slot-bound unless shrunk explicitly.
+                let per_stream = stream_pages(page_cols.max(1), cap, usize::MAX);
+                opts.slots * cfg.n_layers * cfg.kv_streams() * per_stream
+            }
+        };
+        let pool = KvPool::new(page_cols, cfg.d_head, pool_pages)?;
         Ok(Scheduler {
             engine,
             queue: RequestQueue::new(opts.queue_cap),
             slots: (0..opts.slots).map(|_| None).collect(),
+            pool,
             finished: Vec::new(),
-            stats: ServeStats::default(),
+            stats: ServeStats { kv_pages: pool_pages, ..ServeStats::default() },
         })
+    }
+
+    /// Total positions a request's session can ever push: the prompt
+    /// plus one per decode step (the last sampled token is never fed
+    /// back). Saturating, so absurd budgets clamp instead of
+    /// overflowing — the windowed bound caps the page demand anyway.
+    fn request_positions(req: &GenRequest) -> usize {
+        req.prompt.len().saturating_add(req.max_new_tokens).saturating_sub(1)
+    }
+
+    /// Worst-case concurrent KV pages a request's session can hold —
+    /// delegated to [`NativeSession::pool_demand`], the same formula
+    /// `admit` reserves through, so the admission gate and the
+    /// reservation can never disagree.
+    fn request_pages(&self, req: &GenRequest) -> usize {
+        let cfg = self.engine.cfg();
+        NativeSession::pool_demand(cfg, 1, &self.pool, Some(Self::request_positions(req)))
+    }
+
+    /// The shared KV pool's counters (occupancy, peak, reservations) —
+    /// the serve CLI and benches report from here.
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
     }
 
     /// Validate and enqueue a request. Errors on an invalid request
@@ -153,6 +241,15 @@ impl<'m> Scheduler<'m> {
         }
         if req.max_new_tokens == 0 {
             bail!("serve: max_new_tokens must be >= 1");
+        }
+        let demand = self.request_pages(&req);
+        if demand > self.pool.max_pages() {
+            bail!(
+                "serve: request's worst-case KV demand of {demand} pages exceeds the whole \
+                 pool ({}) — it could never be admitted; grow the pool or lower \
+                 max_new_tokens",
+                self.pool.max_pages()
+            );
         }
         self.queue.push(req)
     }
@@ -181,12 +278,15 @@ impl<'m> Scheduler<'m> {
         false
     }
 
-    /// Prefill a dequeued request into a fresh single-row session and
-    /// sample its first token. Returns `None` when the request finished
-    /// at prefill (`max_new_tokens == 1`).
+    /// Prefill a dequeued request into a fresh single-row session —
+    /// opened in the shared pool with a page reservation bounded by
+    /// the request's position budget — and sample its first token.
+    /// Returns `None` when the request finished at prefill
+    /// (`max_new_tokens == 1`).
     fn admit(&mut self, q: QueuedRequest) -> Result<Option<Active<'m>>> {
         let engine = self.engine;
-        let mut session = NativeSession::open(&engine.model, 1)?;
+        let budget = Self::request_positions(&q.req);
+        let mut session = NativeSession::open_in_pool(&engine.model, 1, &self.pool, Some(budget))?;
         let width = q.req.prompt.len();
         let logits = session.prefill(&TokenBatch::new(q.req.prompt.clone(), 1, width)?)?;
         self.stats.prefills += 1;
@@ -240,18 +340,32 @@ impl<'m> Scheduler<'m> {
             }
         }
 
-        // Phase 2: admission — lowest free slot first, queue order.
+        // Phase 2: admission — lowest free slot first, queue order,
+        // gated on pool capacity. A request is dequeued only once the
+        // pool can cover its worst-case page demand; otherwise it (and
+        // everything behind it — FIFO order is part of the contract)
+        // stays queued until retirements free reservations.
         let mut admitted = 0usize;
-        for sidx in 0..self.slots.len() {
+        let mut deferred = 0usize;
+        'admission: for sidx in 0..self.slots.len() {
             if self.slots[sidx].is_some() {
                 continue;
             }
-            while let Some(q) = self.queue.pop() {
+            while self.slots[sidx].is_none() {
+                let demand = match self.queue.peek() {
+                    None => break 'admission,
+                    Some(q) => self.request_pages(&q.req),
+                };
+                if !self.pool.can_admit(demand) {
+                    deferred = self.queue.len();
+                    self.stats.deferrals += 1;
+                    break 'admission;
+                }
+                let q = self.queue.pop().expect("peeked request present");
                 match self.admit(q)? {
                     Some(active) => {
                         self.slots[sidx] = Some(active);
                         admitted += 1;
-                        break;
                     }
                     // Finished at prefill: the slot is still free for
                     // the next queued request.
@@ -298,6 +412,8 @@ impl<'m> Scheduler<'m> {
             }
         }
 
+        let ps = self.pool.stats();
+        self.stats.peak_kv_pages = ps.high_water;
         Ok(TickReport {
             admitted,
             batch,
@@ -305,6 +421,9 @@ impl<'m> Scheduler<'m> {
             active: self.active_count(),
             queued: self.queue.len(),
             decode_seconds,
+            deferred,
+            kv_pages_in_use: ps.in_use,
+            kv_pages_reserved: ps.reserved,
         })
     }
 

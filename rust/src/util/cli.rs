@@ -65,6 +65,15 @@ impl Args {
         }
     }
 
+    /// Optional numeric option: `None` when absent (no default), an
+    /// error on an unparsable value.
+    pub fn usize_opt(&self, name: &str) -> Result<Option<usize>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|e| anyhow!("--{name}: {e}")),
+        }
+    }
+
     pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
         match self.get(name) {
             None => Ok(default),
@@ -127,6 +136,9 @@ mod tests {
         assert_eq!(a.usize_or("n", 0).unwrap(), 12);
         assert_eq!(a.f64_or("f", 0.0).unwrap(), 0.5);
         assert_eq!(a.usize_or("absent", 9).unwrap(), 9);
+        assert_eq!(a.usize_opt("n").unwrap(), Some(12));
+        assert_eq!(a.usize_opt("absent").unwrap(), None);
+        assert!(a.usize_opt("f").is_err());
         assert!(a.req("absent").is_err());
         assert!(a.usize_or("f", 0).is_err());
     }

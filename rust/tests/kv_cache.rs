@@ -1,0 +1,177 @@
+//! Paged-KV-cache contract tests: page lifetime (windowed recycle,
+//! drop returns everything), reservation-based capacity (open refuses
+//! what it cannot cover, never mid-decode), pool sharing across
+//! sessions, and storage-level bit identity (where a column lives must
+//! not change what attention computes).
+//!
+//! The full numeric safety net is `rust/tests/decode.rs` /
+//! `rust/tests/serve.rs` (paged decode vs full-window forward / fused
+//! batch); these tests pin the memory behavior those suites do not
+//! observe.
+
+use switchhead::config::ModelConfig;
+use switchhead::model::{KvPool, NativeEngine, NativeSession};
+use switchhead::runtime::{Session, TokenBatch};
+use switchhead::util::json::Json;
+use switchhead::util::rng::Pcg;
+
+fn cfg_json(text: &str) -> ModelConfig {
+    let cfg = ModelConfig::from_json(&Json::parse(text).unwrap()).unwrap();
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn sh_xl() -> ModelConfig {
+    cfg_json(
+        r#"{"name":"sh-xl","family":"switchhead","pos":"xl","vocab_size":64,
+            "d_model":16,"n_layers":2,"n_heads":2,"d_head":8,"d_ff":32,
+            "seq_len":8,"batch_size":2,"att_n_experts":3,"att_k":2}"#,
+    )
+}
+
+fn prompt(cfg: &ModelConfig, seed: u64, len: usize) -> Vec<i32> {
+    let mut rng = Pcg::new(seed, 7);
+    (0..len).map(|_| rng.below(cfg.vocab_size) as i32).collect()
+}
+
+fn argmax(row: &[f32]) -> usize {
+    row.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).map(|(i, _)| i).unwrap()
+}
+
+/// Worst-case pages one single-row session of `cfg` can hold in
+/// `pool`, with an unbounded decode budget.
+fn windowed_demand(cfg: &ModelConfig, pool: &KvPool) -> usize {
+    cfg.n_layers * cfg.kv_streams() * pool.stream_pages(cfg.ctx_len(), usize::MAX)
+}
+
+/// A session decoding far past `ctx_len` must recycle its own pages:
+/// the pool never exceeds the windowed worst case the session
+/// reserved, and dropping the session restores the free list in full.
+#[test]
+fn session_outliving_the_window_recycles_pages() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let pool = KvPool::new(4, cfg.d_head, 64).unwrap();
+    let demand = windowed_demand(&cfg, &pool);
+    let mut session = NativeSession::open_in_pool(&engine.model, 1, &pool, None).unwrap();
+    assert_eq!(pool.stats().reserved, demand, "open reserves the windowed worst case");
+
+    let p = prompt(&cfg, 3, cfg.seq_len);
+    let mut logits = session.prefill(&TokenBatch::new(p, 1, cfg.seq_len).unwrap()).unwrap();
+    for step in 0..3 * cfg.ctx_len() {
+        logits = session.decode(&[argmax(logits.row(0)) as i32]).unwrap();
+        let st = pool.stats();
+        assert!(
+            st.in_use <= demand,
+            "step {step}: {} pages in use exceeds the reserved worst case {demand}",
+            st.in_use
+        );
+    }
+    assert!(logits.data().iter().all(|x| x.is_finite()));
+    let st = pool.stats();
+    assert!(st.high_water <= demand);
+    // Window recycling also bounds materialization: decoding 3x the
+    // context never needed more backing memory than the window itself.
+    assert!(st.materialized <= demand, "materialized {} > windowed demand", st.materialized);
+
+    drop(session);
+    let st = pool.stats();
+    assert_eq!(st.in_use, 0, "drop must return every page");
+    assert_eq!(st.reserved, 0, "drop must return the reservation");
+    assert_eq!(st.free_pages, st.materialized, "free list restored in full");
+}
+
+/// `open_in_pool` validates geometry and refuses (reserving nothing)
+/// when the pool cannot cover the session's worst case; a bounded
+/// position budget shrinks the demand until it fits.
+#[test]
+fn open_in_pool_reservation_and_validation() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+
+    let wrong_dh = KvPool::new(4, cfg.d_head + 1, 64).unwrap();
+    assert!(
+        NativeSession::open_in_pool(&engine.model, 1, &wrong_dh, None).is_err(),
+        "pool dh must match the model"
+    );
+
+    // Too small for an unbounded session...
+    let tiny = KvPool::new(4, cfg.d_head, 8).unwrap();
+    assert!(windowed_demand(&cfg, &tiny) > 8);
+    assert!(NativeSession::open_in_pool(&engine.model, 1, &tiny, None).is_err());
+    assert_eq!(tiny.stats().reserved, 0, "failed open must not leak a reservation");
+
+    // ...but a short declared budget fits: 4 positions -> one page per
+    // stream -> n_layers * kv_streams pages.
+    let short = cfg.n_layers * cfg.kv_streams();
+    assert!(short <= 8);
+    let mut s = NativeSession::open_in_pool(&engine.model, 1, &tiny, Some(4)).unwrap();
+    assert_eq!(tiny.stats().reserved, short);
+    let mut logits = s.prefill(&TokenBatch::new(prompt(&cfg, 5, 2), 1, 2).unwrap()).unwrap();
+    for _ in 0..2 {
+        logits = s.decode(&[argmax(logits.row(0)) as i32]).unwrap();
+    }
+    assert!(logits.data().iter().all(|x| x.is_finite()));
+    drop(s);
+    assert_eq!(tiny.stats().reserved, 0);
+    assert_eq!(tiny.stats().in_use, 0);
+}
+
+/// Sessions sharing one pool must decode exactly what sessions with
+/// private pools decode — paging moves columns, never values: the
+/// logits are bit-identical, whatever pool they came from.
+#[test]
+fn shared_pool_is_bit_identical_to_private_pools() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let shared = KvPool::new(2, cfg.d_head, 256).unwrap();
+    let prompts = [prompt(&cfg, 21, 3), prompt(&cfg, 22, 7)];
+    let steps = 2 * cfg.ctx_len();
+
+    for p in &prompts {
+        let batch = TokenBatch::new(p.clone(), 1, p.len()).unwrap();
+        let mut in_shared = NativeSession::open_in_pool(&engine.model, 1, &shared, None).unwrap();
+        let mut private = NativeSession::open(&engine.model, 1).unwrap();
+        let mut a = in_shared.prefill(&batch).unwrap();
+        let mut b = private.prefill(&batch).unwrap();
+        for step in 0..steps {
+            assert_eq!(a.data(), b.data(), "prompt {p:?} step {step}: logits diverged");
+            let next = argmax(a.row(0)) as i32;
+            a = in_shared.decode(&[next]).unwrap();
+            b = private.decode(&[next]).unwrap();
+        }
+    }
+    assert_eq!(shared.stats().in_use, 0);
+    assert_eq!(shared.stats().reserved, 0);
+}
+
+/// Multi-row sessions (the batch-generation path) page per row and
+/// stay equivalent to themselves across page widths — any page_cols
+/// choice reads back the same columns.
+#[test]
+fn page_width_does_not_change_decode() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let rows = 2usize;
+    let p: Vec<i32> = (0..rows).flat_map(|r| prompt(&cfg, 30 + r as u64, 5)).collect();
+    let batch = TokenBatch::new(p, rows, 5).unwrap();
+
+    let mut reference: Option<Vec<Vec<f32>>> = None;
+    for page_cols in [1usize, 3, 16] {
+        let pool = KvPool::new(page_cols, cfg.d_head, 1024).unwrap();
+        let mut s = NativeSession::open_in_pool(&engine.model, rows, &pool, None).unwrap();
+        let mut logits = s.prefill(&batch).unwrap();
+        let mut trace = Vec::new();
+        for _ in 0..cfg.ctx_len() + 3 {
+            let next: Vec<i32> = (0..rows).map(|r| argmax(logits.row(r)) as i32).collect();
+            logits = s.decode(&next).unwrap();
+            trace.push(logits.data().to_vec());
+        }
+        match &reference {
+            None => reference = Some(trace),
+            Some(want) => {
+                assert_eq!(want, &trace, "page_cols={page_cols} changed decode output");
+            }
+        }
+    }
+}

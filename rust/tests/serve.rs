@@ -255,8 +255,8 @@ fn scheduler_matches_sequential_generation() {
 
     let expected: Vec<Vec<i32>> = reqs.iter().map(|r| oracle_generate(&engine, r)).collect();
 
-    let mut sched =
-        Scheduler::new(&engine, &ServeOpts { slots: 2, queue_cap: reqs.len() }).unwrap();
+    let opts = ServeOpts { slots: 2, queue_cap: reqs.len(), ..ServeOpts::default() };
+    let mut sched = Scheduler::new(&engine, &opts).unwrap();
     for r in &reqs {
         sched.submit(r.clone()).unwrap();
     }
@@ -294,8 +294,8 @@ fn scheduler_sampled_streams_are_batch_invariant() {
         .collect();
     let expected: Vec<Vec<i32>> = reqs.iter().map(|r| oracle_generate(&engine, r)).collect();
 
-    let mut sched =
-        Scheduler::new(&engine, &ServeOpts { slots: 3, queue_cap: reqs.len() }).unwrap();
+    let opts = ServeOpts { slots: 3, queue_cap: reqs.len(), ..ServeOpts::default() };
+    let mut sched = Scheduler::new(&engine, &opts).unwrap();
     for r in &reqs {
         sched.submit(r.clone()).unwrap();
     }
@@ -313,7 +313,8 @@ fn cancellation_frees_slot_and_admits_queued() {
     let cfg = sh_xl();
     let engine = NativeEngine::new(&cfg, 11).unwrap();
     let mut rng = Pcg::new(41, 1);
-    let mut sched = Scheduler::new(&engine, &ServeOpts { slots: 1, queue_cap: 4 }).unwrap();
+    let opts = ServeOpts { slots: 1, queue_cap: 4, ..ServeOpts::default() };
+    let mut sched = Scheduler::new(&engine, &opts).unwrap();
 
     let a = sched.submit(synth_request(&cfg, &mut rng, 3, 100)).unwrap();
     let b = sched.submit(synth_request(&cfg, &mut rng, 2, 3)).unwrap();
@@ -358,7 +359,8 @@ fn budget_expiry_recycles_slots() {
     let cfg = sh_xl();
     let engine = NativeEngine::new(&cfg, 11).unwrap();
     let mut rng = Pcg::new(51, 2);
-    let mut sched = Scheduler::new(&engine, &ServeOpts { slots: 2, queue_cap: 8 }).unwrap();
+    let opts = ServeOpts { slots: 2, queue_cap: 8, ..ServeOpts::default() };
+    let mut sched = Scheduler::new(&engine, &opts).unwrap();
     let budgets = [1usize, 2, 5, 1, 3, 4];
     let ids: Vec<_> = budgets
         .iter()
@@ -385,7 +387,8 @@ fn queue_backpressure_and_validation() {
     let cfg = sh_xl();
     let engine = NativeEngine::new(&cfg, 11).unwrap();
     let mut rng = Pcg::new(61, 4);
-    let mut sched = Scheduler::new(&engine, &ServeOpts { slots: 1, queue_cap: 2 }).unwrap();
+    let opts = ServeOpts { slots: 1, queue_cap: 2, ..ServeOpts::default() };
+    let mut sched = Scheduler::new(&engine, &opts).unwrap();
 
     // Validation failures never consume queue space.
     assert!(sched.submit(GenRequest::greedy(vec![], 4)).is_err(), "empty prompt");
@@ -408,4 +411,140 @@ fn queue_backpressure_and_validation() {
     assert_eq!(sched.queue_free(), 1);
     sched.submit(synth_request(&cfg, &mut rng, 2, 4)).unwrap();
     sched.run_until_idle(1000).unwrap();
+}
+
+/// The acceptance memory pin: 8 short sessions served concurrently
+/// must peak WELL below 8 preallocated full rings — the paged pool
+/// holds only the pages the live windows touch.
+#[test]
+fn eight_short_sessions_peak_below_half_of_eight_rings() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let opts = ServeOpts { slots: 8, queue_cap: 8, kv_page_cols: Some(4), kv_pool_pages: None };
+    let mut sched = Scheduler::new(&engine, &opts).unwrap();
+    let mut rng = Pcg::new(71, 6);
+    // Short requests: 2-token prompts, 3 generated tokens -> 4 pushed
+    // positions per session, a single page per (layer, head) stream.
+    for _ in 0..8 {
+        sched.submit(synth_request(&cfg, &mut rng, 2, 3)).unwrap();
+    }
+    let outs = sched.run_until_idle(1000).unwrap();
+    assert_eq!(outs.len(), 8);
+    assert!(outs.iter().all(|o| o.finish == FinishReason::Length && o.tokens.len() == 3));
+    assert_eq!(sched.stats().peak_active, 8, "all 8 must have decoded concurrently");
+
+    let ps = sched.pool_stats();
+    // What the pre-paging design held for the same traffic: one full
+    // `[2, cap, dh]` K+V ring per (session, layer, stream).
+    let ring_floats = 8 * cfg.n_layers * cfg.kv_streams() * 2 * cfg.ctx_len() * cfg.d_head;
+    let peak = ps.peak_floats();
+    assert!(
+        peak * 2 < ring_floats,
+        "paged peak {peak} floats is not < 50% of {ring_floats} ring floats"
+    );
+    assert_eq!(ps.in_use, 0, "idle scheduler must hold no pages");
+    assert_eq!(ps.reserved, 0, "idle scheduler must hold no reservations");
+}
+
+/// Pool exhaustion is backpressure, not failure: with a pool sized for
+/// exactly one worst-case session, the second request defers (slot
+/// free, pages not), admits once the first retires, and still produces
+/// the sequential oracle's exact stream. Requests that could NEVER fit
+/// are rejected at submit instead of deferring forever.
+#[test]
+fn pool_exhaustion_defers_admission_then_succeeds() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    // One worst-case single-row session at page_cols=4:
+    // n_layers * kv_streams * (ceil((cap-1)/4) + 1) pages.
+    let per_session = cfg.n_layers * cfg.kv_streams() * (cfg.ctx_len().div_ceil(4) + 1);
+    let opts = ServeOpts {
+        slots: 2,
+        queue_cap: 4,
+        kv_page_cols: Some(4),
+        kv_pool_pages: Some(per_session),
+    };
+    let mut sched = Scheduler::new(&engine, &opts).unwrap();
+    let mut rng = Pcg::new(81, 2);
+    // Budgets past the context window -> both requests demand the full
+    // windowed worst case.
+    let reqs = [synth_request(&cfg, &mut rng, 8, 16), synth_request(&cfg, &mut rng, 8, 16)];
+    let expected: Vec<Vec<i32>> = reqs.iter().map(|r| oracle_generate(&engine, r)).collect();
+    let a = sched.submit(reqs[0].clone()).unwrap();
+    let b = sched.submit(reqs[1].clone()).unwrap();
+
+    // Tick 1: A takes the pool; B is deferred even though slot 1 is
+    // free — and stays queued, not consumed.
+    let r1 = sched.tick().unwrap();
+    assert_eq!((r1.admitted, r1.active, r1.queued), (1, 1, 1));
+    assert_eq!(r1.deferred, 1, "B must be reported deferred");
+    assert!(r1.kv_pages_reserved > 0);
+    assert!(sched.stats().deferrals >= 1);
+
+    let mut outs = sched.run_until_idle(1000).unwrap();
+    outs.sort_by_key(|o| o.id);
+    assert_eq!(outs.len(), 2);
+    for (o, (id, want)) in outs.iter().zip([(a, &expected[0]), (b, &expected[1])]) {
+        assert_eq!(o.id, id);
+        assert_eq!(o.finish, FinishReason::Length);
+        assert_eq!(&o.tokens, want, "deferral must not change request {id}'s stream");
+    }
+    // Never more than one session's pages/reservations at once.
+    assert_eq!(sched.stats().peak_active, 1);
+    assert!(sched.stats().peak_kv_pages <= per_session);
+    assert!(sched.stats().deferrals >= 1);
+
+    // A request whose demand exceeds the whole pool can never be
+    // admitted: submit must reject it outright (no livelock).
+    let half_pool = ServeOpts { kv_pool_pages: Some(per_session / 2), ..opts.clone() };
+    let mut small = Scheduler::new(&engine, &half_pool).unwrap();
+    assert!(
+        small.submit(synth_request(&cfg, &mut rng, 8, 64)).is_err(),
+        "impossible demand must fail at submit"
+    );
+    assert_eq!(small.queued_count(), 0);
+    // Short requests still fit and run to completion.
+    small.submit(synth_request(&cfg, &mut rng, 2, 2)).unwrap();
+    let outs = small.run_until_idle(100).unwrap();
+    assert_eq!(outs.len(), 1);
+}
+
+/// Cancelled (queued AND mid-decode) and retired requests return every
+/// page and reservation: after idle the free list equals everything
+/// ever materialized.
+#[test]
+fn cancel_and_retire_return_every_page() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let opts = ServeOpts { slots: 2, queue_cap: 8, kv_page_cols: Some(2), kv_pool_pages: None };
+    let mut sched = Scheduler::new(&engine, &opts).unwrap();
+    let mut rng = Pcg::new(91, 3);
+    let long = sched.submit(synth_request(&cfg, &mut rng, 6, 200)).unwrap();
+    let retired = sched.submit(synth_request(&cfg, &mut rng, 3, 4)).unwrap();
+    let queued = sched.submit(synth_request(&cfg, &mut rng, 3, 4)).unwrap();
+
+    sched.tick().unwrap();
+    sched.tick().unwrap();
+    let mid = sched.pool_stats();
+    assert!(mid.in_use > 0 && mid.reserved > 0, "live sessions hold pages");
+
+    assert!(sched.cancel(queued), "queued cancel");
+    assert!(sched.cancel(long), "active cancel");
+    let mut outs = sched.run_until_idle(1000).unwrap();
+    outs.sort_by_key(|o| o.id);
+    assert_eq!(outs.len(), 3, "long + queued cancelled, retired finished");
+    assert_eq!(outs[0].id, long);
+    assert_eq!(outs[0].finish, FinishReason::Cancelled);
+    assert_eq!(outs[1].id, retired);
+    assert_eq!(outs[1].finish, FinishReason::Length);
+    assert_eq!(outs[2].id, queued);
+    assert_eq!(outs[2].finish, FinishReason::Cancelled);
+
+    let ps = sched.pool_stats();
+    assert_eq!(ps.in_use, 0, "every page returned");
+    assert_eq!(ps.reserved, 0, "every reservation returned");
+    assert_eq!(
+        ps.free_pages, ps.materialized,
+        "free list must hold every page ever materialized"
+    );
 }
