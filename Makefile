@@ -19,17 +19,24 @@ CLIPPY_ALLOW = -A clippy::needless_range_loop -A clippy::too_many_arguments \
 ## Tier-1: build + full test suite + lint + doc gates, artifact-free.
 ## The golden-vector, decode, kv-cache and serve suites re-run under
 ## PALLAS_THREADS=4 (the kernels must be bit-identical at any thread
-## count); a 1-thread step_latency smoke keeps the bench harness and
-## its JSON emitter compiling and running; and a 1-thread serve smoke
-## (4 concurrent tiny-sh requests through the continuous-batching
-## scheduler) keeps the serving bench + fused decode path exercised
-## end to end.
+## count), and the serve suite re-runs again under PREFILL_CHUNK=1
+## (scheduler output must be invariant to the prefill chunk size, so
+## the degenerate one-position-per-tick chunking must pass the same
+## contracts); a 1-thread step_latency smoke keeps the bench harness
+## and its JSON emitter compiling and running; and a 1-thread serve
+## smoke (4 concurrent tiny-sh requests through the continuous-batching
+## scheduler) keeps the serving bench + fused decode path exercised end
+## to end — the smoke itself asserts the TTFT/ITL percentile fields
+## exist in the JSON it emits, and the grep below keeps that contract
+## visible from the Makefile.
 check:
 	$(CARGO) build --release
 	$(CARGO) test -q
 	PALLAS_THREADS=4 $(CARGO) test -q --test native --test decode --test kv_cache --test serve
+	PREFILL_CHUNK=1 $(CARGO) test -q --test serve
 	PALLAS_THREADS=1 SWITCHHEAD_BENCH_SMOKE=1 $(CARGO) bench --bench step_latency
 	PALLAS_THREADS=1 SWITCHHEAD_BENCH_SMOKE=1 $(CARGO) bench --bench serve_throughput
+	grep -q ttft_p99_ms target/BENCH_serve_throughput.smoke.json
 	$(MAKE) lint
 	$(MAKE) doc
 
@@ -61,9 +68,11 @@ bench: build
 ## Historical alias for the artifact-free latency run.
 smoke: bench
 
-## Continuous-batching serving bench: aggregate decode tok/s and
-## p50/p95 per-token latency for 8 concurrent sessions vs the serial
-## per-session loop; emits BENCH_serve_throughput.json.
+## Continuous-batching serving bench: aggregate decode tok/s,
+## p50/p95/p99 inter-token latency and time-to-first-token for 8
+## concurrent sessions vs the serial per-session loop, plus the
+## head-of-line scenario (long prompt next to short decoders, chunked
+## vs monolithic prefill); emits BENCH_serve_throughput.json.
 bench-serve: build
 	$(CARGO) bench --bench serve_throughput
 

@@ -1,30 +1,37 @@
-//! Serving-layer load generator: aggregate decode throughput and
-//! per-token latency of the continuous-batching scheduler (one fused
-//! forward per tick over every live session) versus the serial
-//! per-session loop the same traffic would cost without batching.
+//! Serving-layer load generator: aggregate decode throughput,
+//! time-to-first-token (TTFT), and inter-token latency (ITL) of the
+//! continuous-batching scheduler (one fused forward per tick over
+//! every live session) versus the serial per-session loop the same
+//! traffic would cost without batching.
 //!
 //! For each config it drives N concurrent greedy requests two ways
 //! (identical synthetic traffic via `serve::load`, shared with the
 //! `serve` CLI subcommand):
 //!
-//! * **serial** — one request at a time: prefill, then single-row
-//!   decode steps (each timed — the per-token latency distribution).
+//! * **serial** — one request at a time: prefill (timed — its TTFT),
+//!   then single-row decode steps (each timed — the ITL
+//!   distribution).
 //! * **batched** — all N through `serve::Scheduler` with bounded-queue
 //!   backpressure; a token produced in a tick inherits that tick's
-//!   fused-decode-phase duration (`TickReport::decode_seconds`, which
-//!   excludes admission prefills — symmetric with the serial numbers)
-//!   as its latency.
+//!   fused-step duration (`TickReport::decode_seconds`) as its ITL,
+//!   and each request's TTFT is its submit→first-token wall time
+//!   (`GenOutput::ttft_s`).
 //!
 //! Both paths must produce identical token streams (asserted — greedy
 //! decoding plus the bit-identical fused step make this exact), so the
-//! comparison is pure execution strategy. The batched run also reports
-//! KV memory: the paged pool's peak floats
-//! (`paged_peak_kv_floats`) against the preallocated-ring formula the
-//! pre-paging design pinned (`ring_kv_floats` = slots × layers ×
-//! streams × 2 × ctx_len × d_head). Every number lands in
+//! comparison is pure execution strategy. A separate **head-of-line**
+//! scenario pins what chunked prefill buys: short decoding requests
+//! co-resident with one ctx-length prompt, run with a small
+//! `prefill_chunk` vs a monolithic one — per-tick prefill work is
+//! asserted bounded by the chunk, and the co-resident ITL tail is
+//! reported for both. The batched run also reports KV memory: the
+//! paged pool's peak floats (`paged_peak_kv_floats`) against the
+//! preallocated-ring formula the pre-paging design pinned
+//! (`ring_kv_floats`). Every number lands in
 //! `BENCH_serve_throughput.json` (`target/…smoke.json` under
 //! `SWITCHHEAD_BENCH_SMOKE=1`, which `make check` runs 1-threaded with
-//! 4 concurrent tiny-sh requests).
+//! 4 concurrent tiny-sh requests; the smoke run also asserts the
+//! TTFT/ITL fields are present in the emitted JSON).
 
 use std::time::Instant;
 
@@ -53,8 +60,10 @@ struct RunResult {
     token_streams: Vec<Vec<i32>>,
     total_tokens: usize,
     secs: f64,
-    /// Per-token latency samples, milliseconds.
+    /// Per-token (inter-token) latency samples, milliseconds.
     lat_ms: Vec<f64>,
+    /// Per-request time-to-first-token samples, milliseconds.
+    ttft_ms: Vec<f64>,
 }
 
 /// The no-batching baseline: each request decoded to completion on its
@@ -62,15 +71,18 @@ struct RunResult {
 fn run_serial(engine: &NativeEngine, reqs: &[GenRequest]) -> RunResult {
     let t0 = Instant::now();
     let mut lat_ms = Vec::new();
+    let mut ttft_ms = Vec::new();
     let mut token_streams = Vec::with_capacity(reqs.len());
     let mut total_tokens = 0usize;
     for r in reqs {
+        let ta = Instant::now();
         let mut session = engine.open_session(1).unwrap();
         let batch = TokenBatch::new(r.prompt.clone(), 1, r.prompt.len()).unwrap();
         let mut logits = session.prefill(&batch).unwrap();
         let mut rng = Pcg::new(r.sampling.seed, SAMPLE_STREAM);
         let s = &r.sampling;
         let first = sample_logits(logits.row(0), s.temperature, s.top_k, &mut rng) as i32;
+        ttft_ms.push(ta.elapsed().as_secs_f64() * 1000.0);
         let mut tokens = vec![first];
         while tokens.len() < r.max_new_tokens {
             let t1 = Instant::now();
@@ -81,7 +93,7 @@ fn run_serial(engine: &NativeEngine, reqs: &[GenRequest]) -> RunResult {
         total_tokens += tokens.len();
         token_streams.push(tokens);
     }
-    RunResult { token_streams, total_tokens, secs: t0.elapsed().as_secs_f64(), lat_ms }
+    RunResult { token_streams, total_tokens, secs: t0.elapsed().as_secs_f64(), lat_ms, ttft_ms }
 }
 
 /// The continuous-batching path: all requests through the scheduler,
@@ -98,10 +110,10 @@ fn run_batched(
     let t0 = Instant::now();
     let mut lat_ms = Vec::new();
     drive(&mut sched, reqs.to_vec(), |report| {
-        // Every token produced this tick waited one fused decode step
-        // (admission prefills excluded — symmetric with the serial
-        // baseline, which times only its decode calls).
-        for _ in 0..report.batch {
+        // Every token sampled this tick waited one fused step (which
+        // may include co-resident prefill chunks — that interference
+        // is exactly what `prefill_chunk` bounds).
+        for _ in 0..report.tokens {
             lat_ms.push(report.decode_seconds * 1000.0);
         }
     })
@@ -111,13 +123,71 @@ fn run_batched(
     let mut outs = sched.drain_finished();
     outs.sort_by_key(|o| o.id);
     let total_tokens = sched.stats().total_tokens as usize;
+    let ttft_ms: Vec<f64> = outs.iter().filter_map(|o| o.ttft_s.map(|t| t * 1000.0)).collect();
     let result = RunResult {
         token_streams: outs.into_iter().map(|o| o.tokens).collect(),
         total_tokens,
         secs,
         lat_ms,
+        ttft_ms,
     };
     (result, pool)
+}
+
+/// Head-of-line scenario: short decoding requests co-resident with one
+/// ctx-length prompt arriving mid-flight, at a given `prefill_chunk`.
+/// Returns (max per-tick prefill positions, co-resident ITL p99 ms,
+/// co-resident max ITL ms) where "co-resident" means ticks that
+/// sampled at least one token (the short requests' experience).
+fn run_hol(engine: &NativeEngine, cfg: &ModelConfig, chunk: usize) -> (usize, f64, f64) {
+    let ctx = cfg.ctx_len();
+    let sampling = SamplingParams { temperature: 0.0, top_k: 0, seed: 11 };
+    // Three short prompts decoding long enough to overlap the long
+    // prompt's whole prefill, plus the stressor: a full-window prompt.
+    let mut reqs = synth_requests(cfg, 3, 2, ctx.max(16), &sampling);
+    let long = synth_requests(cfg, 1, 1, 4, &sampling).remove(0);
+    let long_prompt: Vec<i32> = (0..ctx).map(|i| (i % cfg.vocab_size) as i32).collect();
+    let long = GenRequest { prompt: long_prompt, ..long };
+
+    let opts = ServeOpts { slots: 4, queue_cap: 8, prefill_chunk: chunk, ..ServeOpts::default() };
+    let mut sched = Scheduler::new(engine, &opts).unwrap();
+    for r in &reqs {
+        sched.submit(r.clone()).unwrap();
+    }
+    reqs.push(long.clone());
+    let mut max_prefill = 0usize;
+    let mut itl = Vec::new();
+    let mut track = |r: &switchhead::serve::TickReport| {
+        max_prefill = max_prefill.max(r.prefill_positions);
+        if r.tokens > 0 {
+            itl.push(r.decode_seconds * 1000.0);
+        }
+    };
+    // Let the shorts start decoding, then drop the long prompt in.
+    for _ in 0..3 {
+        track(&sched.tick().unwrap());
+    }
+    sched.submit(long).unwrap();
+    let mut guard = 0;
+    while !sched.is_idle() {
+        track(&sched.tick().unwrap());
+        guard += 1;
+        assert!(guard < 100_000, "HOL scenario did not drain");
+    }
+    // The tentpole's structural claim: per-tick prefill work is
+    // bounded by the chunk size, however long the prompt.
+    assert!(
+        max_prefill <= chunk,
+        "per-tick prefill positions {max_prefill} exceeded prefill_chunk {chunk}"
+    );
+    // Chunking must not change any stream: compare against the serial
+    // oracle for all four requests.
+    let serial = run_serial(engine, &reqs);
+    let mut outs = sched.drain_finished();
+    outs.sort_by_key(|o| o.id);
+    let streams: Vec<Vec<i32>> = outs.into_iter().map(|o| o.tokens).collect();
+    assert_eq!(serial.token_streams, streams, "HOL chunked streams diverged from serial");
+    (max_prefill, quantile(&itl, 0.99), itl.iter().cloned().fold(0.0f64, f64::max))
 }
 
 fn bench_one(
@@ -148,6 +218,14 @@ fn bench_one(
         "{name}: batched decode diverged from the serial loop"
     );
 
+    // Head-of-line interference: a ctx-length prompt next to short
+    // decoders, chunked (bounded per-tick prefill) vs monolithic
+    // (whole prompt in one tick).
+    let ctx = cfg.ctx_len();
+    let chunk = (ctx / 4).max(1);
+    let (hol_chunk_prefill, hol_chunk_p99, hol_chunk_max) = run_hol(&engine, &cfg, chunk);
+    let (hol_mono_prefill, hol_mono_p99, hol_mono_max) = run_hol(&engine, &cfg, ctx);
+
     // Memory: what the paged pool actually peaked at, vs what `slots`
     // preallocated full rings (the pre-paging design) would pin
     // regardless of traffic: 2 (K+V) * ctx_len * d_head floats per
@@ -156,10 +234,14 @@ fn bench_one(
     let ring_kv_floats = slots * cfg.n_layers * cfg.kv_streams() * 2 * cfg.ctx_len() * cfg.d_head;
     let kv_ratio = paged_peak_kv_floats as f64 / ring_kv_floats as f64;
     println!(
-        "{name}: peak paged KV {} floats vs {} ring-preallocated ({:.0}%)",
+        "{name}: peak paged KV {} floats vs {} ring-preallocated ({:.0}%); \
+         HOL max prefill/tick {} (chunk {}) vs {} (monolithic)",
         paged_peak_kv_floats,
         ring_kv_floats,
-        100.0 * kv_ratio
+        100.0 * kv_ratio,
+        hol_chunk_prefill,
+        chunk,
+        hol_mono_prefill,
     );
 
     let serial_tok_s = serial.total_tokens as f64 / serial.secs.max(1e-9);
@@ -171,7 +253,9 @@ fn bench_one(
             mode.into(),
             format!("{:.0}", tok_s),
             format!("{:.3}", quantile(&r.lat_ms, 0.5)),
-            format!("{:.3}", quantile(&r.lat_ms, 0.95)),
+            format!("{:.3}", quantile(&r.lat_ms, 0.99)),
+            format!("{:.3}", quantile(&r.ttft_ms, 0.5)),
+            format!("{:.3}", quantile(&r.ttft_ms, 0.99)),
             format!("{}", r.total_tokens),
         ]
     };
@@ -187,8 +271,29 @@ fn bench_one(
         ("speedup", num(speedup)),
         ("serial_p50_ms", num(quantile(&serial.lat_ms, 0.5))),
         ("serial_p95_ms", num(quantile(&serial.lat_ms, 0.95))),
+        ("serial_itl_p99_ms", num(quantile(&serial.lat_ms, 0.99))),
         ("batched_p50_ms", num(quantile(&batched.lat_ms, 0.5))),
         ("batched_p95_ms", num(quantile(&batched.lat_ms, 0.95))),
+        ("batched_itl_p99_ms", num(quantile(&batched.lat_ms, 0.99))),
+        ("serial_ttft_p50_ms", num(quantile(&serial.ttft_ms, 0.5))),
+        ("serial_ttft_p95_ms", num(quantile(&serial.ttft_ms, 0.95))),
+        ("serial_ttft_p99_ms", num(quantile(&serial.ttft_ms, 0.99))),
+        ("batched_ttft_p50_ms", num(quantile(&batched.ttft_ms, 0.5))),
+        ("batched_ttft_p95_ms", num(quantile(&batched.ttft_ms, 0.95))),
+        ("batched_ttft_p99_ms", num(quantile(&batched.ttft_ms, 0.99))),
+        (
+            "hol",
+            Json::from_pairs(vec![
+                ("long_prompt_len", num(ctx as f64)),
+                ("prefill_chunk", num(chunk as f64)),
+                ("chunked_max_prefill_positions", num(hol_chunk_prefill as f64)),
+                ("chunked_itl_p99_ms", num(hol_chunk_p99)),
+                ("chunked_max_itl_ms", num(hol_chunk_max)),
+                ("mono_max_prefill_positions", num(hol_mono_prefill as f64)),
+                ("mono_itl_p99_ms", num(hol_mono_p99)),
+                ("mono_max_itl_ms", num(hol_mono_max)),
+            ]),
+        ),
         ("total_tokens", num(batched.total_tokens as f64)),
         ("paged_peak_kv_floats", num(paged_peak_kv_floats as f64)),
         ("ring_kv_floats", num(ring_kv_floats as f64)),
@@ -212,7 +317,16 @@ fn main() {
             tokens,
             kernels::threads()
         ),
-        &["config", "mode", "tok/s", "p50 ms/tok", "p95 ms/tok", "tokens"],
+        &[
+            "config",
+            "mode",
+            "tok/s",
+            "p50 ms/tok",
+            "p99 ms/tok",
+            "ttft p50 ms",
+            "ttft p99 ms",
+            "tokens",
+        ],
     );
     let mut rows = Vec::new();
     for name in configs {
@@ -231,6 +345,22 @@ fn main() {
         ("threads", num(kernels::threads() as f64)),
         ("rows", Json::Arr(rows)),
     ]);
+    let text = out.to_string_pretty() + "\n";
+    if smoke {
+        // The smoke run is the CI gate for the latency schema: the
+        // TTFT/ITL percentile fields must exist in the emitted JSON.
+        for key in [
+            "serial_ttft_p50_ms",
+            "serial_ttft_p99_ms",
+            "batched_ttft_p50_ms",
+            "batched_ttft_p95_ms",
+            "batched_ttft_p99_ms",
+            "batched_itl_p99_ms",
+            "chunked_max_prefill_positions",
+        ] {
+            assert!(text.contains(key), "smoke JSON is missing the `{key}` field");
+        }
+    }
     // Smoke runs land under target/ (gitignored) so `make check` never
     // clobbers a real `make bench-serve` trajectory file.
     let path = if smoke {
@@ -238,7 +368,7 @@ fn main() {
     } else {
         "BENCH_serve_throughput.json"
     };
-    match std::fs::write(path, out.to_string_pretty() + "\n") {
+    match std::fs::write(path, text) {
         Ok(()) => println!("\nwrote {path}"),
         Err(e) => println!("\nWARN: could not write {path}: {e}"),
     }

@@ -36,6 +36,13 @@ impl Default for SampleOpts {
 
 /// Sample one id from logits with temperature + top-k truncation.
 /// NaN logits are treated as -inf (never sampled, never a panic).
+///
+/// Degenerate candidate sets are deterministic: when the running max
+/// over the (post-top-k) candidates is not finite — every candidate
+/// NaN/-inf, or a +inf present — the softmax weights would all be
+/// NaN/0 and the weighted draw ill-defined, so the sampler falls back
+/// to greedy-by-index over the candidates (highest value, lowest index
+/// on ties) WITHOUT consuming an RNG draw.
 pub fn sample_logits(logits: &[f32], temperature: f64, top_k: usize, rng: &mut Pcg) -> usize {
     debug_assert!(!logits.is_empty());
     let val = |v: f32| if v.is_nan() { f32::NEG_INFINITY } else { v };
@@ -53,7 +60,17 @@ pub fn sample_logits(logits: &[f32], temperature: f64, top_k: usize, rng: &mut P
         idx.sort_by(|&a, &b| val(logits[b]).total_cmp(&val(logits[a])));
         idx.truncate(top_k);
     }
-    let max = idx.iter().map(|&i| val(logits[i])).fold(f32::NEG_INFINITY, f32::max) as f64;
+    let max = idx.iter().map(|&i| val(logits[i])).fold(f32::NEG_INFINITY, f32::max);
+    if !max.is_finite() {
+        let mut best = idx[0];
+        for &i in idx.iter().skip(1) {
+            if val(logits[i]) > val(logits[best]) {
+                best = i;
+            }
+        }
+        return best;
+    }
+    let max = max as f64;
     let weights: Vec<f64> = idx
         .iter()
         .map(|&i| ((val(logits[i]) as f64 - max) / temperature).exp())
@@ -180,10 +197,43 @@ mod tests {
             let id = sample_logits(&logits, 1.0, 2, &mut rng);
             assert!(id == 0 || id == 2, "sampled a NaN logit: {id}");
         }
-        // All-NaN rows still terminate without panicking
-        // (Pcg::weighted falls through to its last-index fallback).
+        // All-NaN rows still terminate without panicking — and now
+        // deterministically (see the dedicated regression below).
         let all_nan = vec![f32::NAN; 4];
         let id = sample_logits(&all_nan, 1.0, 0, &mut rng);
         assert!(id < 4);
+    }
+
+    #[test]
+    fn degenerate_weighted_sampling_is_greedy_by_index() {
+        // Regression: with every candidate logit NaN/-inf the softmax
+        // weights were all NaN/0 and `rng.weighted` was ill-defined
+        // (its answer depended on the fallback inside the RNG). The
+        // sampler must now return the greedy-by-index candidate
+        // without consuming an RNG draw.
+        let mut rng = Pcg::new(7, 7);
+        let before = rng.clone().below(1 << 30);
+
+        let all_nan = vec![f32::NAN; 5];
+        assert_eq!(sample_logits(&all_nan, 1.0, 0, &mut rng), 0);
+        let all_ninf = vec![f32::NEG_INFINITY; 5];
+        assert_eq!(sample_logits(&all_ninf, 1.0, 0, &mut rng), 0);
+        // Mixed NaN/-inf, truncated by top-k: still index 0 of the
+        // candidate set (stable sort keeps ascending order on ties).
+        let mixed = vec![f32::NAN, f32::NEG_INFINITY, f32::NAN, f32::NEG_INFINITY];
+        assert_eq!(sample_logits(&mixed, 1.0, 2, &mut rng), 0);
+        // +inf dominates: greedy fallback picks it deterministically.
+        let inf = vec![1.0, f32::INFINITY, 2.0, f32::NAN];
+        assert_eq!(sample_logits(&inf, 1.0, 0, &mut rng), 1);
+
+        // No RNG draw was consumed by any of the fallbacks.
+        assert_eq!(rng.below(1 << 30), before, "degenerate paths must not advance the RNG");
+
+        // One finite candidate among garbage: normal weighted path,
+        // and only the finite candidate can win.
+        let lone = vec![f32::NAN, f32::NEG_INFINITY, 0.5, f32::NAN];
+        for _ in 0..50 {
+            assert_eq!(sample_logits(&lone, 1.0, 0, &mut rng), 2);
+        }
     }
 }

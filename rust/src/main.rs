@@ -50,12 +50,20 @@ commands:
   probe         --config <json> [--artifacts DIR] [--backend pjrt|native]
   serve         --config <json> [--requests N] [--slots S] [--queue-cap Q]
                 [--tokens M] [--prompt-len P] [--kv-page C] [--kv-pages P]
+                [--prefill-chunk C] [--arrivals batch|poisson|pareto]
+                [--rate R] [--alpha A] [--long-frac F]
                 [--temperature T] [--top-k K] [--seed S] [--init-seed S]
                 (native backend only; --slots caps the fused batch width,
                  but admission is also capacity-aware over the paged KV
                  pool: --kv-page sets positions per page, --kv-pages the
                  pool size — requests whose worst-case page demand will
-                 not fit are deferred, not failed)
+                 not fit are deferred, not failed. Prompts stream in
+                 --prefill-chunk positions per tick (or the PREFILL_CHUNK
+                 env), fused with decodes, so long prompts cannot stall
+                 co-resident requests; --arrivals poisson|pareto replays
+                 a seeded open-loop trace at --rate requests/tick with a
+                 --long-frac share of long prompts; prints TTFT and
+                 inter-token p50/p95/p99)
   bench-tables  [--table 1|2|3|4|5|6|7|all] [--artifacts DIR] [--quick]
 
 backends: `pjrt` (default) replays `make artifacts` bundles and loads the
@@ -403,13 +411,17 @@ fn cmd_generate(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Synthetic continuous-batching load: submit N random-prompt requests
+/// Synthetic continuous-batching load: submit N requests — as a batch,
+/// or released along a seeded Poisson / heavy-tailed arrival trace —
 /// through the bounded queue (respecting backpressure), tick the
-/// scheduler until idle, and report aggregate decode throughput.
+/// scheduler until idle, and report aggregate throughput plus
+/// TTFT / inter-token latency percentiles.
 fn cmd_serve(args: &Args) -> Result<()> {
     use switchhead::serve::{
-        drive, synth_requests, FinishReason, SamplingParams, Scheduler, ServeOpts,
+        drive, drive_trace, synth_requests, synth_trace, Arrivals, FinishReason, LoadSpec,
+        SamplingParams, Scheduler, ServeOpts, TickReport,
     };
+    use switchhead::util::stats::quantile;
 
     let cfg = load_cfg(args)?;
     if cfg.task != Task::Lm {
@@ -420,12 +432,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let engine = NativeEngine::new(&cfg, args.u64_or("init-seed", 42)?)?;
     let n_requests = args.usize_or("requests", 8)?;
-    let opts = ServeOpts {
+    let mut opts = ServeOpts {
         slots: args.usize_or("slots", 4)?,
         queue_cap: args.usize_or("queue-cap", 16)?,
         kv_page_cols: args.usize_opt("kv-page")?,
         kv_pool_pages: args.usize_opt("kv-pages")?,
+        ..ServeOpts::default()
     };
+    if let Some(chunk) = args.usize_opt("prefill-chunk")? {
+        opts.prefill_chunk = chunk;
+    }
     let tokens = args.usize_or("tokens", 32)?;
     let max_prompt = args.usize_or("prompt-len", (cfg.seq_len / 2).max(1))?;
     let sampling = SamplingParams {
@@ -433,18 +449,54 @@ fn cmd_serve(args: &Args) -> Result<()> {
         top_k: args.usize_or("top-k", 0)?,
         seed: args.u64_or("seed", 0)?,
     };
-    let reqs = synth_requests(&cfg, n_requests, max_prompt, tokens, &sampling);
 
     let mut sched = Scheduler::new(&engine, &opts)?;
+    // Inter-token latency samples: a tick's fused-step wall time, once
+    // per token it sampled (what a batched token actually waited).
+    let mut itl = Vec::new();
+    let mut on_tick = |r: &TickReport| {
+        for _ in 0..r.tokens {
+            itl.push(r.decode_seconds * 1e3);
+        }
+    };
     let t0 = std::time::Instant::now();
-    drive(&mut sched, reqs, |_| ())?;
+    match args.get_or("arrivals", "batch") {
+        "batch" => {
+            let reqs = synth_requests(&cfg, n_requests, max_prompt, tokens, &sampling);
+            drive(&mut sched, reqs, &mut on_tick)?;
+        }
+        mode @ ("poisson" | "pareto") => {
+            let rate = args.f64_or("rate", 1.0)?;
+            let arrivals = if mode == "poisson" {
+                Arrivals::Poisson { rate }
+            } else {
+                Arrivals::Pareto { rate, alpha: args.f64_or("alpha", 1.5)? }
+            };
+            let ctx = cfg.ctx_len();
+            let spec = LoadSpec {
+                n: n_requests,
+                arrivals,
+                short_prompt: (1, max_prompt.clamp(1, ctx)),
+                long_prompt: ((ctx / 2).max(1), ctx),
+                long_frac: args.f64_or("long-frac", 0.1)?,
+                new_tokens: (1, tokens.max(1)),
+                sampling: sampling.clone(),
+            };
+            let trace = synth_trace(&cfg, &spec)?;
+            drive_trace(&mut sched, &trace, &mut on_tick)?;
+        }
+        other => bail!("serve: unknown --arrivals '{other}' (batch|poisson|pareto)"),
+    }
     let secs = t0.elapsed().as_secs_f64();
     let mut outs = sched.drain_finished();
     outs.sort_by_key(|o| o.id);
 
     let mut table = Table::new(
-        &format!("Serve ({}, {} slots, queue {})", cfg.name, opts.slots, opts.queue_cap),
-        &["request", "prompt", "tokens", "finish"],
+        &format!(
+            "Serve ({}, {} slots, queue {}, chunk {})",
+            cfg.name, opts.slots, opts.queue_cap, opts.prefill_chunk
+        ),
+        &["request", "prompt", "tokens", "finish", "ttft_ms", "preempt"],
     );
     for o in &outs {
         table.push(vec![
@@ -454,7 +506,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             match o.finish {
                 FinishReason::Length => "length".into(),
                 FinishReason::Cancelled => "cancelled".into(),
+                FinishReason::Error => "error".into(),
             },
+            o.ttft_s.map_or("-".into(), |t| format!("{:.2}", t * 1e3)),
+            o.preemptions.to_string(),
         ]);
     }
     table.print();
@@ -462,13 +517,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let st = sched.stats();
     info(&format!(
         "served {} requests: {} tokens in {:.3}s ({:.0} tok/s aggregate), {} ticks, \
-         peak batch {}",
+         peak batch {}, {} preemption(s), {} error(s)",
         outs.len(),
         st.total_tokens,
         secs,
         st.total_tokens as f64 / secs.max(1e-9),
         st.ticks,
         st.peak_active,
+        st.preemptions,
+        st.errors,
+    ));
+    let ttft: Vec<f64> = outs.iter().filter_map(|o| o.ttft_s.map(|t| t * 1e3)).collect();
+    info(&format!(
+        "latency: ttft p50/p95/p99 {:.2}/{:.2}/{:.2} ms, inter-token p50/p95/p99 \
+         {:.3}/{:.3}/{:.3} ms (prefill chunk {} caps per-tick prompt work)",
+        quantile(&ttft, 0.50),
+        quantile(&ttft, 0.95),
+        quantile(&ttft, 0.99),
+        quantile(&itl, 0.50),
+        quantile(&itl, 0.95),
+        quantile(&itl, 0.99),
+        opts.prefill_chunk,
     ));
     // Pool occupancy: peak pages the paged KV cache actually held vs
     // the pool bound; deferrals count ticks where admission waited on

@@ -548,44 +548,88 @@ fn dense_decode(
 }
 
 /// Advance every session by one token per row in ONE fused forward
-/// pass — the serving layer's batched step. `next` holds one token per
-/// fused row, sessions concatenated in slice order; returns one
-/// [`Logits`] per session, in the same order.
+/// pass — the serving layer's batched decode step. `next` holds one
+/// token per fused row, sessions concatenated in slice order; returns
+/// one [`Logits`] per session, in the same order.
 ///
 /// All sessions must come from the same model and be prefilled; their
-/// positions may differ arbitrarily (each keeps its own K/V page
-/// tables and XL distance table). Per-token work runs once over the
-/// fused batch, MoE projections as one union expert-grouped dispatch
-/// per layer and projection type; results are bit-identical to
-/// decoding each session
-/// sequentially. Per-session MAC counters advance exactly as in
-/// sequential decode: attention-core work is tallied per session, the
-/// per-token-uniform remainder is attributed by row share.
+/// positions may differ arbitrarily. This is the all-widths-1 case of
+/// [`step_batched`] — see there for the full contract (layout,
+/// bit-identity, MAC attribution).
 pub fn decode_batched(
     sessions: &mut [&mut NativeSession<'_>],
     next: &[i32],
 ) -> Result<Vec<Logits>> {
-    let Some(first) = sessions.first() else {
-        bail!("decode_batched: no sessions");
-    };
-    let model: &NativeModel = first.model;
-    let cfg = &model.cfg;
-    let mut offsets = Vec::with_capacity(sessions.len());
-    let mut n = 0usize;
     for s in sessions.iter() {
-        if !std::ptr::eq(model as *const NativeModel, s.model as *const NativeModel) {
-            bail!("decode_batched: sessions span different models");
-        }
         if s.pos == 0 {
             bail!("decode_batched: session not prefilled");
         }
+    }
+    let widths = vec![1usize; sessions.len()];
+    step_batched(sessions, next, &widths)
+}
+
+/// Advance every session by `widths[i]` positions per row in ONE fused
+/// forward pass — the general batched step underneath both fused decode
+/// (`widths` all 1) and chunked prefill (a session feeding `width`
+/// prompt positions per tick, starting from `pos == 0`).
+///
+/// `tokens` holds, per session, `rows * width` ids in row-major
+/// `[rows, width]` order, sessions concatenated in slice order. Returns
+/// one [`Logits`] per session holding each row's LAST fed position's
+/// logits — for a width-1 decode row the decoded token's logits, for
+/// the prefill chunk that exhausts a prompt the first-sample logits,
+/// exactly as a monolithic [`prefill`](NativeSession::prefill) would
+/// have returned.
+///
+/// Bit-identity: per-token work (embedding, layer norms, routing, MoE
+/// and dense projections, MLP) is row-independent; the attention core
+/// pushes each chunk with the same per-position window slide as the
+/// sequential path ([`Kv::push`]) and each query attends causally over
+/// its own `[lo, pos]` window; and no reduction ever crosses fused
+/// rows — so a chunked feed is bit-identical to a monolithic prefill,
+/// and a fused step to sequential per-session decode (both pinned in
+/// `rust/tests/serve.rs`).
+///
+/// Per-session MAC counters advance exactly as in the sequential path:
+/// attention-core work and XL table growth are tallied per session,
+/// the per-token-uniform remainder is attributed by token-row share
+/// `rows * width / n`.
+///
+/// [`Kv::push`]: crate::model::kv_cache::Kv::push
+pub fn step_batched(
+    sessions: &mut [&mut NativeSession<'_>],
+    tokens: &[i32],
+    widths: &[usize],
+) -> Result<Vec<Logits>> {
+    let Some(first) = sessions.first() else {
+        bail!("step_batched: no sessions");
+    };
+    if widths.len() != sessions.len() {
+        bail!("step_batched: {} widths for {} sessions", widths.len(), sessions.len());
+    }
+    let model: &NativeModel = first.model;
+    let cfg = &model.cfg;
+    // Token-row offset of each session's block in the fused batch.
+    let mut offsets = Vec::with_capacity(sessions.len());
+    let mut n = 0usize;
+    for (s, &w) in sessions.iter().zip(widths) {
+        if !std::ptr::eq(model as *const NativeModel, s.model as *const NativeModel) {
+            bail!("step_batched: sessions span different models");
+        }
+        if w == 0 {
+            bail!("step_batched: zero chunk width");
+        }
+        if w > s.cap {
+            bail!("step_batched: chunk width {w} exceeds context cap {}", s.cap);
+        }
         offsets.push(n);
-        n += s.rows;
+        n += s.rows * w;
     }
-    if next.len() != n {
-        bail!("decode_batched got {} tokens for {} fused rows", next.len(), n);
+    if tokens.len() != n {
+        bail!("step_batched got {} tokens for {} fused token rows", tokens.len(), n);
     }
-    for &t in next {
+    for &t in tokens {
         if t < 0 || t as usize >= cfg.vocab_size {
             bail!("token id {t} outside vocab {}", cfg.vocab_size);
         }
@@ -594,7 +638,7 @@ pub fn decode_batched(
     let d = cfg.d_model;
     let scale = (d as f64).sqrt() as f32;
     let mut x = scratch::take(n * d);
-    for (i, &tok) in next.iter().enumerate() {
+    for (i, &tok) in tokens.iter().enumerate() {
         let row = &model.embed[(tok as usize) * d..(tok as usize + 1) * d];
         let out = &mut x[i * d..(i + 1) * d];
         for j in 0..d {
@@ -602,8 +646,8 @@ pub fn decode_batched(
         }
     }
 
-    // Per-token-uniform work lands here and is split by row share at
-    // the end; session-position-dependent work (attention core, XL
+    // Per-token-uniform work lands here and is split by token-row share
+    // at the end; session-position-dependent work (attention core, XL
     // table growth) is tallied straight into each session's counter.
     let mut step = MacCounter::default();
     for li in 0..cfg.n_layers {
@@ -611,10 +655,12 @@ pub fn decode_batched(
         let x_ln = layer_norm(&x, &bp.ln1.g, &bp.ln1.b, d);
         let a = match &bp.attn {
             AttnP::SwitchHead(p) => {
-                switchhead_step(cfg, p, sessions, &offsets, li, &x_ln, &mut step)
+                switchhead_step(cfg, p, sessions, &offsets, widths, li, &x_ln, &mut step)
             }
-            AttnP::Dense(p) => dense_step(cfg, p, sessions, &offsets, li, &x_ln, &mut step),
-            AttnP::Moa(p) => moa_step(cfg, p, sessions, &offsets, li, &x_ln, &mut step),
+            AttnP::Dense(p) => {
+                dense_step(cfg, p, sessions, &offsets, widths, li, &x_ln, &mut step)
+            }
+            AttnP::Moa(p) => moa_step(cfg, p, sessions, &offsets, widths, li, &x_ln, &mut step),
         };
         scratch::put(x_ln);
         for (xv, av) in x.iter_mut().zip(&a) {
@@ -630,19 +676,37 @@ pub fn decode_batched(
         scratch::put(m);
     }
 
-    // One token per row, so every fused row IS its own last position.
-    let h = layer_norm(&x, &model.ln_f.g, &model.ln_f.b, d);
+    // Gather each row's last fed position — exactly what the sequential
+    // chunk path keeps — then run the final norm + head over the
+    // gathered rows only. (With all widths 1 the gather is the
+    // identity, so fused decode's bits are unchanged.)
+    let out_rows: usize = sessions.iter().map(|s| s.rows).sum();
+    let mut last = scratch::take(out_rows * d);
+    let mut lr = 0usize;
+    for (si, s) in sessions.iter().enumerate() {
+        let w = widths[si];
+        for bi in 0..s.rows {
+            let from = (offsets[si] + bi * w + w - 1) * d;
+            last[lr * d..(lr + 1) * d].copy_from_slice(&x[from..from + d]);
+            lr += 1;
+        }
+    }
     scratch::put(x);
+    let h = layer_norm(&last, &model.ln_f.g, &model.ln_f.b, d);
+    scratch::put(last);
     let n_out = NativeModel::n_out(cfg);
-    let logits = matmul(&h, &model.head, n, d, n_out);
+    let logits = matmul(&h, &model.head, out_rows, d, n_out);
     scratch::put(h);
 
     let mut out = Vec::with_capacity(sessions.len());
+    let mut row_off = 0usize;
     for (si, s) in sessions.iter_mut().enumerate() {
-        s.macs.add_scaled(&step, s.rows as f64, n as f64);
-        s.pos += 1;
-        let from = offsets[si] * n_out;
+        let w = widths[si];
+        s.macs.add_scaled(&step, (s.rows * w) as f64, n as f64);
+        s.pos += w;
+        let from = row_off * n_out;
         out.push(Logits::new(logits[from..from + s.rows * n_out].to_vec(), s.rows, n_out)?);
+        row_off += s.rows;
     }
     scratch::put(logits);
     Ok(out)
@@ -685,11 +749,12 @@ fn proj_heads(
 
 /// Rope-rotate (if configured) and page-push one attention matrix's
 /// fused `[n, dh]` K/V chunks into each session's cache at its own
-/// position.
+/// position, `widths[si]` positions per row.
 fn push_kv_step(
     cfg: &ModelConfig,
     sessions: &mut [&mut NativeSession<'_>],
     offsets: &[usize],
+    widths: &[usize],
     li: usize,
     mat: usize,
     kh: &mut [f32],
@@ -697,12 +762,12 @@ fn push_kv_step(
 ) {
     let dh = cfg.d_head;
     for (si, sess) in sessions.iter_mut().enumerate() {
-        let (o, r) = (offsets[si], sess.rows);
-        let ks = &mut kh[o * dh..(o + r) * dh];
+        let (o, r, w) = (offsets[si], sess.rows, widths[si]);
+        let ks = &mut kh[o * dh..(o + r * w) * dh];
         if cfg.pos == Positional::Rope {
-            rope_rotate(ks, r, 1, dh, sess.pos);
+            rope_rotate(ks, r, w, dh, sess.pos);
         }
-        sess.layers[li].kv[mat].push(ks, &vh[o * dh..(o + r) * dh], 1, sess.pos);
+        sess.layers[li].kv[mat].push(ks, &vh[o * dh..(o + r * w) * dh], w, sess.pos);
     }
 }
 
@@ -716,23 +781,24 @@ fn attend_q_step(
     mat: usize,
     sessions: &mut [&mut NativeSession<'_>],
     offsets: &[usize],
+    widths: &[usize],
     li: usize,
     qh: &mut [f32],
     att: &mut [f32],
 ) {
     let (d, dh) = (cfg.d_model, cfg.d_head);
     for (si, sess) in sessions.iter_mut().enumerate() {
-        let (o, r) = (offsets[si], sess.rows);
-        let geo = Geo { rows: r, tn: 1, pos0: sess.pos, cap: sess.cap, tc: sess.tc, dh };
-        let q = &mut qh[o * dh..(o + r) * dh];
+        let (o, r, w) = (offsets[si], sess.rows, widths[si]);
+        let geo = Geo { rows: r, tn: w, pos0: sess.pos, cap: sess.cap, tc: sess.tc, dh };
+        let q = &mut qh[o * dh..(o + r * w) * dh];
         if cfg.pos == Positional::Rope {
-            rope_rotate(q, r, 1, dh, geo.pos0);
+            rope_rotate(q, r, w, dh, geo.pos0);
         }
         let sess = &mut **sess;
         let st = &mut sess.layers[li];
         let xlt = xl_tables(xl, &mut st.r[mat], mat, d, &geo, &mut sess.macs);
         let a = attend(q, xlt, &st.kv[mat], &geo, &mut sess.macs);
-        att[o * dh..(o + r) * dh].copy_from_slice(&a);
+        att[o * dh..(o + r * w) * dh].copy_from_slice(&a);
         scratch::put(a);
     }
 }
@@ -741,11 +807,13 @@ fn attend_q_step(
 /// the whole batch, then ONE union expert-grouped dispatch per
 /// projection type (K/Q/V over shared hidden states, O over the
 /// per-head attended rows), with only rope/push/attend per session.
+#[allow(clippy::too_many_arguments)]
 fn switchhead_step(
     cfg: &ModelConfig,
     p: &SwitchHeadP,
     sessions: &mut [&mut NativeSession<'_>],
     offsets: &[usize],
+    widths: &[usize],
     li: usize,
     x_ln: &[f32],
     step: &mut MacCounter,
@@ -779,13 +847,23 @@ fn switchhead_step(
     let mut att = scratch::take(h * n * dh);
     for hi in 0..h {
         let span = hi * n * dh..(hi + 1) * n * dh;
-        push_kv_step(cfg, sessions, offsets, li, hi, &mut kh[span.clone()], &vh[span.clone()]);
+        push_kv_step(
+            cfg,
+            sessions,
+            offsets,
+            widths,
+            li,
+            hi,
+            &mut kh[span.clone()],
+            &vh[span.clone()],
+        );
         attend_q_step(
             cfg,
             p.xl.as_ref(),
             hi,
             sessions,
             offsets,
+            widths,
             li,
             &mut qh[span.clone()],
             &mut att[span],
@@ -810,11 +888,13 @@ fn switchhead_step(
 
 /// Dense MHA, fused over sessions: per-head blocked projections over
 /// the whole batch, rope/push/attend per session.
+#[allow(clippy::too_many_arguments)]
 fn dense_step(
     cfg: &ModelConfig,
     p: &DenseP,
     sessions: &mut [&mut NativeSession<'_>],
     offsets: &[usize],
+    widths: &[usize],
     li: usize,
     x_ln: &[f32],
     step: &mut MacCounter,
@@ -827,9 +907,9 @@ fn dense_step(
         let mut kh = matmul(x_ln, &p.w_k[hi], n, d, dh);
         let vh = matmul(x_ln, &p.w_v[hi], n, d, dh);
         step.proj_dense += (3 * n * d * dh) as f64;
-        push_kv_step(cfg, sessions, offsets, li, hi, &mut kh, &vh);
+        push_kv_step(cfg, sessions, offsets, widths, li, hi, &mut kh, &vh);
         let mut att = scratch::take(n * dh);
-        attend_q_step(cfg, p.xl.as_ref(), hi, sessions, offsets, li, &mut qh, &mut att);
+        attend_q_step(cfg, p.xl.as_ref(), hi, sessions, offsets, widths, li, &mut qh, &mut att);
         scratch::put(qh);
         scratch::put(kh);
         scratch::put(vh);
@@ -846,11 +926,13 @@ fn dense_step(
 
 /// MoA, fused over sessions: shared K/V over the whole batch, routed
 /// query/output expert slots batch-wide, attend per session.
+#[allow(clippy::too_many_arguments)]
 fn moa_step(
     cfg: &ModelConfig,
     p: &MoaP,
     sessions: &mut [&mut NativeSession<'_>],
     offsets: &[usize],
+    widths: &[usize],
     li: usize,
     x_ln: &[f32],
     step: &mut MacCounter,
@@ -860,7 +942,7 @@ fn moa_step(
     let mut kh = matmul(x_ln, &p.w_k, n, d, dh);
     let vh = matmul(x_ln, &p.w_v, n, d, dh);
     step.proj_dense += (2 * n * d * dh) as f64;
-    push_kv_step(cfg, sessions, offsets, li, 0, &mut kh, &vh);
+    push_kv_step(cfg, sessions, offsets, widths, li, 0, &mut kh, &vh);
     scratch::put(kh);
     scratch::put(vh);
 
@@ -873,7 +955,7 @@ fn moa_step(
         let mut qj = moe_matmul(x_ln, &p.w_q, d, dh, &idx_j, &ones, 1);
         step.proj_moe += (n * (d * dh + dh)) as f64;
         let mut att = scratch::take(n * dh);
-        attend_q_step(cfg, p.xl.as_ref(), 0, sessions, offsets, li, &mut qj, &mut att);
+        attend_q_step(cfg, p.xl.as_ref(), 0, sessions, offsets, widths, li, &mut qj, &mut att);
         scratch::put(qj);
         let yo = moe_matmul(&att, &p.w_o, dh, d, &idx_j, &gate_j, 1);
         scratch::put(att);

@@ -1,12 +1,23 @@
-//! Synthetic load generation and the backpressure drive loop — shared
+//! Synthetic load generation and the backpressure drive loops — shared
 //! by the `serve` CLI subcommand and `benches/serve_throughput.rs` so
 //! both exercise the scheduler with identical traffic.
 //!
-//! Invariants: [`synth_requests`] is a pure function of its arguments
+//! Two generators:
+//!
+//! * [`synth_requests`] — the closed-loop batch set (every request
+//!   available up front), driven by [`drive`].
+//! * [`synth_trace`] — an open-loop, trace-driven workload: seeded
+//!   arrival processes (Poisson via exponential inter-arrival gaps, or
+//!   heavy-tailed via Pareto gaps — bursty traffic whose tail
+//!   stresses admission and chunked prefill), mixed short/long prompt
+//!   lengths, and per-request output budgets; driven by
+//!   [`drive_trace`], which releases each request at its arrival tick.
+//!
+//! Invariants: both generators are pure functions of their arguments
 //! (seeded PRNG stream, no global state), so CLI and bench runs see
-//! byte-identical request sets; [`drive`] only ever submits while the
-//! queue reports room, so the bounded-queue backpressure error cannot
-//! fire from this loop — and a scheduler that defers admission on KV
+//! byte-identical request sets; the drive loops only ever submit while
+//! the queue reports room, so the bounded-queue backpressure error
+//! cannot fire from here — and a scheduler that defers admission on KV
 //! pool capacity simply drains more slowly, ticks still making
 //! progress until idle.
 
@@ -15,11 +26,16 @@ use std::collections::VecDeque;
 use crate::config::ModelConfig;
 use crate::serve::request::{GenRequest, SamplingParams};
 use crate::serve::scheduler::{Scheduler, TickReport};
-use crate::util::error::Result;
+use crate::util::error::{bail, Result};
 use crate::util::rng::Pcg;
 
 /// PRNG stream tag for synthetic prompt generation.
 pub const LOAD_STREAM: u64 = 0xC11;
+
+/// PRNG stream tag for trace-driven arrival/length sampling (distinct
+/// from [`LOAD_STREAM`] so trace shape and prompt content never
+/// correlate).
+pub const TRACE_STREAM: u64 = 0xC12;
 
 /// Deterministic synthetic load: `n` requests with varying prompt
 /// lengths (`1 + (i * 7) % max_prompt`, clamped to the model context)
@@ -43,9 +59,124 @@ pub fn synth_requests(
                 prompt,
                 max_new_tokens,
                 sampling: SamplingParams { seed: sampling.seed + i as u64, ..sampling.clone() },
+                priority: 0,
+                deadline_ticks: None,
             }
         })
         .collect()
+}
+
+/// Arrival process of a [`synth_trace`] workload, in units of
+/// scheduler ticks.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrivals {
+    /// Every request available at tick 0 (closed-loop batch — the
+    /// trace equivalent of [`synth_requests`] + [`drive`]).
+    Batch,
+    /// Poisson process: i.i.d. exponential inter-arrival gaps with
+    /// mean `1 / rate` ticks (`rate` = expected arrivals per tick).
+    Poisson { rate: f64 },
+    /// Heavy-tailed process: i.i.d. Pareto(`alpha`) gaps scaled so the
+    /// mean gap is `1 / rate` ticks. `alpha` must exceed 1 (finite
+    /// mean); values near 1 give extreme burstiness — long quiet
+    /// stretches punctuated by arrival pile-ups.
+    Pareto { rate: f64, alpha: f64 },
+}
+
+/// Shape of a trace-driven workload (all sampling seeded from
+/// `sampling.seed`).
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    /// Total requests in the trace.
+    pub n: usize,
+    pub arrivals: Arrivals,
+    /// Inclusive prompt-length range of ordinary ("short") requests.
+    pub short_prompt: (usize, usize),
+    /// Inclusive prompt-length range of "long" requests — the
+    /// head-of-line-blocking stressor chunked prefill exists for.
+    pub long_prompt: (usize, usize),
+    /// Probability a request draws from `long_prompt`.
+    pub long_frac: f64,
+    /// Inclusive `max_new_tokens` range.
+    pub new_tokens: (usize, usize),
+    /// Base sampling params; request `i` gets `seed + i`.
+    pub sampling: SamplingParams,
+}
+
+/// One trace entry: the tick at which the request becomes visible to
+/// the driver, and the request itself.
+#[derive(Debug, Clone)]
+pub struct TracedRequest {
+    pub at_tick: u64,
+    pub req: GenRequest,
+}
+
+fn sample_range(rng: &mut Pcg, lo: usize, hi: usize) -> usize {
+    if hi <= lo {
+        lo
+    } else {
+        lo + rng.below(hi - lo + 1)
+    }
+}
+
+/// Generate a seeded trace: arrival ticks from the spec's process
+/// (monotone non-decreasing), prompt lengths from the short/long
+/// mixture (clamped to the model context), output budgets and random
+/// in-vocab prompt tokens. Pure: same (cfg, spec) → same trace.
+pub fn synth_trace(cfg: &ModelConfig, spec: &LoadSpec) -> Result<Vec<TracedRequest>> {
+    if let Arrivals::Poisson { rate } | Arrivals::Pareto { rate, .. } = spec.arrivals {
+        if !(rate > 0.0) {
+            bail!("synth_trace: arrival rate must be > 0 (got {rate})");
+        }
+    }
+    if let Arrivals::Pareto { alpha, .. } = spec.arrivals {
+        if !(alpha > 1.0) {
+            bail!("synth_trace: Pareto alpha must be > 1 for a finite mean gap (got {alpha})");
+        }
+    }
+    let mut shape = Pcg::new(spec.sampling.seed, TRACE_STREAM);
+    let mut content = Pcg::new(spec.sampling.seed, LOAD_STREAM);
+    let ctx = cfg.ctx_len();
+    let mut at = 0.0f64;
+    let mut out = Vec::with_capacity(spec.n);
+    for i in 0..spec.n {
+        let gap = match spec.arrivals {
+            Arrivals::Batch => 0.0,
+            Arrivals::Poisson { rate } => {
+                // Exponential(rate): -ln(1 - U) / rate, U ∈ [0, 1).
+                -(1.0 - shape.uniform()).ln() / rate
+            }
+            Arrivals::Pareto { rate, alpha } => {
+                // Pareto(xm, alpha) via inverse CDF xm · U^(-1/alpha),
+                // with xm = (alpha - 1) / (alpha · rate) so the mean
+                // gap xm · alpha / (alpha - 1) equals 1 / rate.
+                let xm = (alpha - 1.0) / (alpha * rate);
+                let u = (1.0 - shape.uniform()).max(f64::MIN_POSITIVE);
+                xm * u.powf(-1.0 / alpha)
+            }
+        };
+        at += gap;
+        let long = shape.uniform() < spec.long_frac;
+        let (lo, hi) = if long { spec.long_prompt } else { spec.short_prompt };
+        let plen = sample_range(&mut shape, lo.max(1), hi.max(1)).clamp(1, ctx);
+        let budget = sample_range(&mut shape, spec.new_tokens.0.max(1), spec.new_tokens.1.max(1));
+        let prompt: Vec<i32> =
+            (0..plen).map(|_| content.below(cfg.vocab_size) as i32).collect();
+        out.push(TracedRequest {
+            at_tick: at as u64,
+            req: GenRequest {
+                prompt,
+                max_new_tokens: budget,
+                sampling: SamplingParams {
+                    seed: spec.sampling.seed + i as u64,
+                    ..spec.sampling.clone()
+                },
+                priority: 0,
+                deadline_ticks: None,
+            },
+        });
+    }
+    Ok(out)
 }
 
 /// Feed `requests` through the scheduler with bounded-queue
@@ -66,6 +197,31 @@ pub fn drive<F: FnMut(&TickReport)>(
         }
         let report = sched.tick()?;
         on_tick(&report);
+    }
+    Ok(())
+}
+
+/// Open-loop trace drive: each request is submitted no earlier than
+/// its `at_tick` (and later only under queue backpressure — a full
+/// queue delays submission, it never drops). Ticks advance a shared
+/// clock even while the trace is quiet, so heavy-tailed gaps really do
+/// leave the engine idle between bursts. `trace` must be sorted by
+/// `at_tick` (as [`synth_trace`] produces).
+pub fn drive_trace<F: FnMut(&TickReport)>(
+    sched: &mut Scheduler<'_>,
+    trace: &[TracedRequest],
+    mut on_tick: F,
+) -> Result<()> {
+    let mut i = 0usize;
+    let mut now = 0u64;
+    while i < trace.len() || !sched.is_idle() {
+        while i < trace.len() && trace[i].at_tick <= now && sched.queue_free() > 0 {
+            sched.submit(trace[i].req.clone())?;
+            i += 1;
+        }
+        let report = sched.tick()?;
+        on_tick(&report);
+        now += 1;
     }
     Ok(())
 }

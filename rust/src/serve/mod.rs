@@ -15,46 +15,58 @@
 //!
 //! This module is that missing layer:
 //!
-//! * [`RequestQueue`] — bounded FIFO of [`GenRequest`]s; a full queue
-//!   rejects `push` (the backpressure signal).
-//! * [`Scheduler`] — admits requests into decode slots (prefilling a
-//!   fresh single-row session per request), cancels/retires them, and
-//!   per [`tick`](Scheduler::tick) assembles every active session's
-//!   next token into ONE fused [`decode_batched`] forward: one
-//!   expert-grouped dispatch per layer and projection type over the
-//!   union of (session, head, expert) selections, per-session KV page
-//!   tables untouched. Admission is **capacity-aware** over the shared
-//!   paged KV pool ([`crate::model::kv_cache`]): a request is admitted
-//!   only when the pool can cover its worst-case page demand, and
-//!   deferred (left queued, FIFO intact) otherwise — so thousands of
+//! * [`RequestQueue`] — bounded priority queue of [`GenRequest`]s
+//!   (priority descending, FIFO within a class); a full queue rejects
+//!   `push` (the backpressure signal).
+//! * [`Scheduler`] — admits requests into decode slots as
+//!   **Prefilling** rows, streams each prompt through the model in
+//!   bounded chunks ([`ServeOpts::prefill_chunk`] positions per tick,
+//!   handed out round-robin so one long prompt cannot stall
+//!   co-resident decodes), preempts over-budget low-priority
+//!   generations for higher-priority arrivals (partial state
+//!   re-queued, resumed bit-identically), cancels/retires rows, and
+//!   per [`tick`](Scheduler::tick) assembles every active session —
+//!   width-1 decode rows AND prefill chunks — into ONE fused
+//!   [`step_batched`] forward: one expert-grouped dispatch per layer
+//!   and projection type over the union of (session, head, expert)
+//!   selections, per-session KV page tables untouched. Admission is
+//!   **capacity-aware** over the shared paged KV pool
+//!   ([`crate::model::kv_cache`]): a request is admitted only when the
+//!   pool can cover its worst-case page demand, and deferred (left
+//!   queued, class order intact) otherwise — so thousands of
 //!   mostly-short sessions can share a pool far smaller than
 //!   slot-count × full-window preallocation.
 //! * Determinism: slot assignment is lowest-free-slot in queue order,
 //!   batch order is ascending slot index, and each request samples
 //!   from its own seeded RNG — a request's output is independent of
-//!   the traffic that shared its ticks, and a fused step is
-//!   bit-identical to sequential per-session decode (pinned by
-//!   `rust/tests/serve.rs` across configs and 1/2/4 threads).
+//!   the traffic that shared its ticks, of the prefill chunk size, and
+//!   of preemptions, and a fused step is bit-identical to sequential
+//!   per-session generation (pinned by `rust/tests/serve.rs` across
+//!   configs, 1/2/4 threads, and chunk sizes {1, 7, 64, ctx_len}).
 //!
 //! Serving is native-backend only: the fused step needs direct access
 //! to [`NativeSession`](crate::model::NativeSession) internals, which
 //! the PJRT windowed-recompute session does not expose.
 //!
-//! Drive it via the `serve` CLI subcommand (synthetic load generator)
-//! or `benches/serve_throughput.rs` (aggregate tok/s and p50/p95
-//! per-token latency vs a serial per-session loop, emitted to
-//! `BENCH_serve_throughput.json`); both share [`load`]'s request
-//! synthesizer and backpressure drive loop, so they exercise the
-//! scheduler with identical traffic.
+//! Drive it via the `serve` CLI subcommand or
+//! `benches/serve_throughput.rs` (aggregate tok/s plus p50/p95/p99
+//! time-to-first-token and inter-token latency vs a serial per-session
+//! loop, emitted to `BENCH_serve_throughput.json`); both share
+//! [`load`]'s request synthesizer — including its seeded trace
+//! generator with Poisson / heavy-tailed arrivals — and backpressure
+//! drive loops, so they exercise the scheduler with identical traffic.
 //!
-//! [`decode_batched`]: crate::model::decode_batched
+//! [`step_batched`]: crate::model::step_batched
 
 pub mod load;
 pub mod request;
 pub mod scheduler;
 
-pub use load::{drive, synth_requests};
+pub use load::{drive, drive_trace, synth_requests, synth_trace, Arrivals, LoadSpec, TracedRequest};
 pub use request::{
-    FinishReason, GenOutput, GenRequest, QueuedRequest, RequestId, RequestQueue, SamplingParams,
+    FinishReason, GenOutput, GenRequest, QueuedRequest, RequestId, RequestQueue, ResumeState,
+    SamplingParams,
 };
-pub use scheduler::{Scheduler, ServeOpts, ServeStats, TickReport, SAMPLE_STREAM};
+pub use scheduler::{
+    Scheduler, ServeOpts, ServeStats, TickReport, DEFAULT_PREFILL_CHUNK, SAMPLE_STREAM,
+};

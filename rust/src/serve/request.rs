@@ -1,10 +1,13 @@
 //! Request-side types of the serving layer: generation requests,
-//! sampling parameters, finished outputs, and the bounded
-//! [`RequestQueue`] that gives the engine backpressure.
+//! sampling parameters, SLO attributes (priority / deadline), finished
+//! outputs, and the bounded priority [`RequestQueue`] that gives the
+//! engine backpressure.
 
 use std::collections::VecDeque;
+use std::time::Instant;
 
 use crate::util::error::{bail, Result};
+use crate::util::rng::Pcg;
 
 /// Monotone per-scheduler request identifier (admission order).
 pub type RequestId = u64;
@@ -31,18 +34,56 @@ impl Default for SamplingParams {
     }
 }
 
-/// One generation request: a prompt, a token budget, sampling params.
+/// One generation request: a prompt, a token budget, sampling params,
+/// and its SLO attributes.
+///
+/// SLO semantics (enforced by the scheduler):
+///
+/// * `priority` — higher admits first. Admission is ordered by
+///   priority, then FIFO within a priority class; a higher-priority
+///   arrival may also preempt an over-budget lower-priority generation
+///   when slots or KV pages are exhausted. Priority never changes
+///   WHAT a request generates — only when.
+/// * `deadline_ticks` — a service budget in scheduler ticks. A
+///   decoding request that has held its slot for more than
+///   `deadline_ticks` ticks is considered over-budget and becomes
+///   preemptible by higher-priority arrivals. `None` means the request
+///   is never preempted.
 #[derive(Debug, Clone)]
 pub struct GenRequest {
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
     pub sampling: SamplingParams,
+    /// Higher = more urgent; 0 (the default) = bulk.
+    pub priority: u8,
+    /// Service budget in ticks before the request becomes preemptible;
+    /// `None` = never preempted.
+    pub deadline_ticks: Option<u64>,
 }
 
 impl GenRequest {
-    /// Greedy request with default sampling.
+    /// Greedy request with default sampling, bulk priority, no deadline.
     pub fn greedy(prompt: Vec<i32>, max_new_tokens: usize) -> GenRequest {
-        GenRequest { prompt, max_new_tokens, sampling: SamplingParams::default() }
+        GenRequest {
+            prompt,
+            max_new_tokens,
+            sampling: SamplingParams::default(),
+            priority: 0,
+            deadline_ticks: None,
+        }
+    }
+
+    /// Builder: set the admission/preemption priority.
+    pub fn with_priority(mut self, priority: u8) -> GenRequest {
+        self.priority = priority;
+        self
+    }
+
+    /// Builder: set the service budget (ticks) after which the request
+    /// becomes preemptible.
+    pub fn with_deadline_ticks(mut self, ticks: u64) -> GenRequest {
+        self.deadline_ticks = Some(ticks);
+        self
     }
 }
 
@@ -53,28 +94,71 @@ pub enum FinishReason {
     Length,
     /// Cancelled by the caller (possibly with partial tokens).
     Cancelled,
+    /// Admission failed (session open / KV reservation error). The
+    /// request is reported rather than silently dropped; its tokens
+    /// hold whatever a prior admission had produced (empty for a fresh
+    /// request).
+    Error,
 }
 
 /// A finished request: identity, prompt length, every generated token,
-/// and why it stopped.
+/// why it stopped, and its latency/SLO telemetry.
 #[derive(Debug, Clone)]
 pub struct GenOutput {
     pub id: RequestId,
     pub prompt_len: usize,
     pub tokens: Vec<i32>,
     pub finish: FinishReason,
+    /// Wall-clock time-to-first-token (submit → first sampled token);
+    /// `None` if the request never produced a token.
+    pub ttft_s: Option<f64>,
+    /// TTFT in scheduler ticks — deterministic, so tests can pin
+    /// admission/priority ordering without wall-clock flakiness.
+    pub ttft_ticks: Option<u64>,
+    /// How many times the request was preempted and later resumed.
+    pub preemptions: u32,
 }
 
-/// A queued (not yet admitted) request.
+/// Partial progress of a preempted request, carried through the queue
+/// so the next admission resumes the exact token stream: the sampled
+/// tokens so far (replayed as chunked prefill on re-admission) and the
+/// sampling RNG mid-stream (its state is exactly after the last
+/// token's draw, so the next draw continues the sequence).
+#[derive(Debug, Clone)]
+pub struct ResumeState {
+    pub tokens: Vec<i32>,
+    pub rng: Pcg,
+    pub service_ticks: u64,
+    pub ttft_s: Option<f64>,
+    pub ttft_ticks: Option<u64>,
+    pub preemptions: u32,
+}
+
+/// A queued (not yet admitted, or preempted-and-re-queued) request.
 #[derive(Debug, Clone)]
 pub struct QueuedRequest {
     pub id: RequestId,
     pub req: GenRequest,
+    /// Submit instant — the TTFT zero point. Preserved across
+    /// preemption re-queues.
+    pub submitted: Instant,
+    /// Scheduler tick count at submit (tick-denominated zero point).
+    pub submit_tick: u64,
+    /// `Some` when this entry is a preempted request re-queued with its
+    /// partial state; `None` for a fresh submission.
+    pub resume: Option<ResumeState>,
 }
 
-/// Bounded FIFO of pending requests. `push` errors when the queue is
-/// full — that error IS the backpressure signal: callers tick the
-/// scheduler (draining slots and therefore the queue) and retry.
+/// Bounded priority queue of pending requests, ordered by `priority`
+/// descending then FIFO (monotone ids) within a class. `push` errors
+/// when the queue is full — that error IS the backpressure signal:
+/// callers tick the scheduler (draining slots and therefore the queue)
+/// and retry. Preemption re-queues ([`requeue`]) are exempt from the
+/// bound: a preempted request already holds a caller-visible id and
+/// must never be droppable, so it re-enters at the back of its
+/// priority class regardless of occupancy.
+///
+/// [`requeue`]: RequestQueue::requeue
 #[derive(Debug)]
 pub struct RequestQueue {
     cap: usize,
@@ -99,14 +183,22 @@ impl RequestQueue {
         self.items.is_empty()
     }
 
-    /// Free positions before `push` starts rejecting.
+    /// Free positions before `push` starts rejecting. Preemption
+    /// re-queues can push occupancy past `cap`, in which case this
+    /// saturates at 0.
     pub fn free(&self) -> usize {
-        self.cap - self.items.len()
+        self.cap.saturating_sub(self.items.len())
     }
 
-    /// Enqueue a request, assigning its id. Errors (without consuming a
-    /// queue position) when the queue is at capacity.
-    pub fn push(&mut self, req: GenRequest) -> Result<RequestId> {
+    /// Insertion point keeping `items` sorted by (priority desc, id
+    /// asc): after every entry of priority >= `priority`.
+    fn insert_at(&self, priority: u8) -> usize {
+        self.items.iter().position(|q| q.req.priority < priority).unwrap_or(self.items.len())
+    }
+
+    /// Enqueue a fresh request, assigning its id. Errors (without
+    /// consuming a queue position) when the queue is at capacity.
+    pub fn push(&mut self, req: GenRequest, submit_tick: u64) -> Result<RequestId> {
         if self.items.len() >= self.cap {
             bail!(
                 "request queue full ({} pending, cap {}) — backpressure: tick the scheduler \
@@ -117,21 +209,35 @@ impl RequestQueue {
         }
         let id = self.next_id;
         self.next_id += 1;
-        self.items.push_back(QueuedRequest { id, req });
+        let at = self.insert_at(req.priority);
+        self.items.insert(
+            at,
+            QueuedRequest { id, req, submitted: Instant::now(), submit_tick, resume: None },
+        );
         Ok(id)
     }
 
-    /// The oldest pending request, without dequeuing it — the
-    /// scheduler inspects its KV page demand here and only [`pop`]s
-    /// once the pool can cover it (capacity-aware admission never
-    /// consumes a request it must defer).
+    /// Re-enqueue a preempted request with its partial state, keeping
+    /// its original id and submit instant. Exempt from the capacity
+    /// bound (see the type docs); lands at the back of its priority
+    /// class, behind peers that have not yet had service.
+    pub fn requeue(&mut self, q: QueuedRequest) {
+        let at = self.insert_at(q.req.priority);
+        self.items.insert(at, q);
+    }
+
+    /// The highest-priority pending request (FIFO within a class),
+    /// without dequeuing it — the scheduler inspects its KV page
+    /// demand here and only [`pop`]s once the pool can cover it
+    /// (capacity-aware admission never consumes a request it must
+    /// defer).
     ///
     /// [`pop`]: RequestQueue::pop
     pub fn peek(&self) -> Option<&QueuedRequest> {
         self.items.front()
     }
 
-    /// Dequeue the oldest pending request.
+    /// Dequeue the highest-priority pending request.
     pub fn pop(&mut self) -> Option<QueuedRequest> {
         self.items.pop_front()
     }
@@ -154,8 +260,8 @@ mod tests {
     #[test]
     fn queue_is_fifo_with_monotone_ids() {
         let mut q = RequestQueue::new(4);
-        let a = q.push(req()).unwrap();
-        let b = q.push(req()).unwrap();
+        let a = q.push(req(), 0).unwrap();
+        let b = q.push(req(), 0).unwrap();
         assert!(b > a);
         assert_eq!(q.pop().unwrap().id, a);
         assert_eq!(q.pop().unwrap().id, b);
@@ -165,23 +271,55 @@ mod tests {
     #[test]
     fn queue_bounds_and_backpressure() {
         let mut q = RequestQueue::new(2);
-        q.push(req()).unwrap();
-        q.push(req()).unwrap();
+        q.push(req(), 0).unwrap();
+        q.push(req(), 0).unwrap();
         assert_eq!(q.free(), 0);
-        assert!(q.push(req()).is_err(), "full queue must reject");
+        assert!(q.push(req(), 0).is_err(), "full queue must reject");
         q.pop().unwrap();
         assert_eq!(q.free(), 1);
-        q.push(req()).unwrap();
+        q.push(req(), 0).unwrap();
     }
 
     #[test]
     fn queue_remove_by_id() {
         let mut q = RequestQueue::new(4);
-        let a = q.push(req()).unwrap();
-        let b = q.push(req()).unwrap();
+        let a = q.push(req(), 0).unwrap();
+        let b = q.push(req(), 0).unwrap();
         assert_eq!(q.remove(b).unwrap().id, b);
         assert!(q.remove(b).is_none());
         assert_eq!(q.len(), 1);
+        assert_eq!(q.pop().unwrap().id, a);
+    }
+
+    #[test]
+    fn queue_orders_by_priority_then_fifo() {
+        let mut q = RequestQueue::new(8);
+        let bulk_a = q.push(req(), 0).unwrap();
+        let bulk_b = q.push(req(), 0).unwrap();
+        let hot = q.push(req().with_priority(5), 0).unwrap();
+        let warm = q.push(req().with_priority(3), 0).unwrap();
+        let hot_b = q.push(req().with_priority(5), 0).unwrap();
+        let order: Vec<RequestId> = std::iter::from_fn(|| q.pop().map(|e| e.id)).collect();
+        // priority desc, FIFO (id asc) within a class
+        assert_eq!(order, vec![hot, hot_b, warm, bulk_a, bulk_b]);
+    }
+
+    #[test]
+    fn requeue_bypasses_cap_and_joins_back_of_class() {
+        let mut q = RequestQueue::new(2);
+        let a = q.push(req(), 0).unwrap();
+        let b = q.push(req(), 0).unwrap();
+        let popped = q.pop().unwrap();
+        assert_eq!(popped.id, a);
+        q.push(req(), 0).unwrap(); // refill to cap
+        // Re-queue at capacity must not error or drop.
+        q.requeue(popped);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.free(), 0);
+        // Same priority class: the requeued entry sits behind b and the
+        // refill, preserving class FIFO over queue events.
+        assert_eq!(q.pop().unwrap().id, b);
+        q.pop().unwrap();
         assert_eq!(q.pop().unwrap().id, a);
     }
 }

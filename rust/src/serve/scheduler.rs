@@ -1,5 +1,6 @@
-//! The continuous-batching scheduler: slot admission, cancellation,
-//! and the fused per-tick decode over every live session.
+//! The continuous-batching scheduler: SLO-aware slot admission,
+//! chunked prefill, preemption, cancellation, and the fused per-tick
+//! step over every live session.
 //!
 //! # Tick anatomy
 //!
@@ -8,59 +9,100 @@
 //! 1. **Evict** — slots whose request was cancelled are freed and
 //!    their partial output emitted.
 //! 2. **Admit** — queued requests fill free slots (lowest slot index
-//!    first, queue order), **capacity-aware**: a request is dequeued
-//!    only when the shared [`KvPool`] can cover its worst-case page
-//!    demand (prompt + budget positions, windowed to `ctx_len`) on
-//!    top of every admitted session's reservation. When it cannot,
-//!    admission stops for the tick — the request stays queued
-//!    (deferred, FIFO order intact) and [`TickReport::deferred`] /
-//!    [`ServeStats::deferrals`] record it; pool exhaustion is
-//!    backpressure here, never a panic. An admitted request's prompt
-//!    is prefilled into a fresh single-row [`NativeSession`] opened in
-//!    the pool and its first token sampled.
-//! 3. **Decode** — ONE fused [`decode_batched`] step over every active
-//!    session in ascending slot order. Per layer this is a single
-//!    expert-grouped dispatch over the union of (session, head,
-//!    expert) selections, instead of N independent single-row passes.
-//!    Each row's next token is then sampled from its logits with the
-//!    request's private RNG.
+//!    first) in priority-then-FIFO order, **capacity-aware**: a
+//!    request is dequeued only when a slot is free AND the shared
+//!    [`KvPool`] can cover its worst-case page demand (prompt + budget
+//!    positions, windowed to `ctx_len`) on top of every admitted
+//!    session's reservation. When the head is blocked on either
+//!    resource, the scheduler may **preempt** one over-budget
+//!    lower-priority decoding row (its session drops, returning pages
+//!    and reservation; the request re-queues with its partial tokens
+//!    and RNG recorded) and retry; with no eligible victim, admission
+//!    stops for the tick — the head (and everything behind it in its
+//!    class) stays queued and [`TickReport::deferred`] /
+//!    [`ServeStats::deferrals`] record it when the block was the pool.
+//!    Pool exhaustion is backpressure here, never a panic. Admission
+//!    itself is cheap: it only opens a single-row session in the pool;
+//!    the prompt is NOT run yet — the request enters the
+//!    **Prefilling** state. If opening the session fails, the request
+//!    is emitted as [`FinishReason::Error`] (never silently lost) and
+//!    admission continues.
+//! 3. **Step** — ONE fused [`step_batched`] forward over every active
+//!    session in ascending slot order: width-1 rows for decoding
+//!    sessions, plus up to [`ServeOpts::prefill_chunk`] prompt
+//!    positions spread round-robin over Prefilling rows (a rotating
+//!    cursor hands the per-tick chunk budget to the next prefilling
+//!    slot first, so one long prompt cannot monopolize consecutive
+//!    ticks while other prompts wait — and per-tick prefill work is
+//!    bounded by the chunk size however long the prompt is). Per layer
+//!    this is a single expert-grouped dispatch over the union of
+//!    (session, head, expert) selections. Decoding rows then sample
+//!    their next token; a Prefilling row that just exhausted its feed
+//!    samples its FIRST token from that chunk's last-position logits —
+//!    bit-identical to what a monolithic prefill would have sampled —
+//!    and transitions to decoding.
 //! 4. **Retire** — rows that generated `max_new_tokens` are freed and
 //!    emitted; their sessions return every KV page and reservation to
 //!    the pool.
 //!
 //! Slot assignment and batch order are deterministic, and every
 //! request samples from its own seeded RNG stream, so a request's
-//! output is identical whatever other traffic shared its ticks —
-//! `rust/tests/serve.rs` pins scheduler output against sequential
-//! single-session generation.
+//! output is identical whatever other traffic shared its ticks, at
+//! every chunk size — `rust/tests/serve.rs` pins scheduler output
+//! against sequential single-session generation across
+//! `prefill_chunk` ∈ {1, 7, 64, ctx_len}.
+//!
+//! # Preemption and resume
+//!
+//! A decoding row is *preemptible* once it has exceeded its
+//! [`deadline_ticks`](crate::serve::GenRequest::deadline_ticks)
+//! service budget AND a strictly-higher-priority request is blocked at
+//! the queue head. The victim (lowest priority, then most service
+//! ticks, then highest id — deterministic) re-queues with a
+//! [`ResumeState`]: its sampled tokens and its mid-stream sampling
+//! RNG. On re-admission the scheduler replays prompt + recorded tokens
+//! through chunked prefill — the same computation the original session
+//! ran, so the resumed stream is bit-identical to an uninterrupted
+//! one — and the preserved RNG continues the sample sequence.
 //!
 //! # Capacity invariant
 //!
-//! Every admitted session reserved its worst-case concurrent page
-//! count before prefill and the reservations never exceed the pool, so
-//! a mid-decode page allocation cannot fail — the only pool-exhaustion
-//! surface is deferred admission. Sessions never outlive their pages:
-//! evict/retire/cancel all drop the session, which returns its pages
-//! and its reservation.
+//! Every admitted session reserves its worst-case concurrent page
+//! count at open and the reservations never exceed the pool, so a
+//! mid-decode page allocation cannot fail — the only pool-exhaustion
+//! surface is deferred admission. The demand formula is
+//! [`NativeSession::pool_demand`] in BOTH the gate and the
+//! reservation, and a resumed request's demand (replay + remaining
+//! budget) equals its fresh demand, so preemption cycles never change
+//! the arithmetic. Sessions never outlive their pages:
+//! evict/retire/cancel/preempt all drop the session, which returns its
+//! pages and its reservation.
+//!
+//! [`ResumeState`]: crate::serve::request::ResumeState
 
 use crate::coordinator::generate::sample_logits;
-use crate::model::decode::decode_batched;
+use crate::model::decode::step_batched;
 use crate::model::kv_cache::stream_pages;
 use crate::model::{KvPool, NativeEngine, NativeSession, PoolStats};
-use crate::runtime::{Session, TokenBatch};
 use crate::serve::request::{
-    FinishReason, GenOutput, GenRequest, QueuedRequest, RequestId, RequestQueue, SamplingParams,
+    FinishReason, GenOutput, GenRequest, QueuedRequest, RequestId, RequestQueue, ResumeState,
+    SamplingParams,
 };
-use crate::util::error::{bail, Result};
+use crate::util::error::{bail, Error, Result};
 use crate::util::rng::Pcg;
 
 /// PRNG stream tag for per-request sampling (sequential oracles in the
 /// tests replay the same stream to reproduce scheduler output).
 pub const SAMPLE_STREAM: u64 = 0x5E4E;
 
-/// Serving shape: concurrent decode slots, queue depth, and the paged
-/// KV pool's geometry. Admission is bounded by BOTH `slots` (fused
-/// batch width) and the pool (worst-case page demand must fit).
+/// Default per-tick prefill chunk (positions) when neither
+/// [`ServeOpts`] nor `PREFILL_CHUNK` says otherwise.
+pub const DEFAULT_PREFILL_CHUNK: usize = 64;
+
+/// Serving shape: concurrent decode slots, queue depth, prefill
+/// chunking, and the paged KV pool's geometry. Admission is bounded by
+/// BOTH `slots` (fused batch width) and the pool (worst-case page
+/// demand must fit).
 #[derive(Debug, Clone)]
 pub struct ServeOpts {
     /// Maximum concurrently decoding sessions (fused batch width cap).
@@ -77,11 +119,48 @@ pub struct ServeOpts {
     /// the pre-paging behavior, while short sessions still materialize
     /// only what they touch).
     pub kv_pool_pages: Option<usize>,
+    /// Per-tick prefill position budget, shared round-robin across
+    /// Prefilling rows — the bound on how much prompt work one tick
+    /// may fuse next to latency-sensitive decode rows. The default
+    /// honors the `PREFILL_CHUNK` env var (invalid/zero values warn
+    /// and fall back to [`DEFAULT_PREFILL_CHUNK`]).
+    pub prefill_chunk: usize,
 }
 
 impl Default for ServeOpts {
     fn default() -> ServeOpts {
-        ServeOpts { slots: 8, queue_cap: 64, kv_page_cols: None, kv_pool_pages: None }
+        ServeOpts {
+            slots: 8,
+            queue_cap: 64,
+            kv_page_cols: None,
+            kv_pool_pages: None,
+            prefill_chunk: default_prefill_chunk(),
+        }
+    }
+}
+
+/// Pure parse of a `PREFILL_CHUNK` value (positions per tick).
+fn parse_prefill_chunk(raw: &str) -> std::result::Result<usize, String> {
+    match raw.trim().parse::<usize>() {
+        Ok(0) => Err(format!("PREFILL_CHUNK={raw:?} is zero (need >= 1)")),
+        Ok(n) => Ok(n),
+        Err(_) => Err(format!("PREFILL_CHUNK={raw:?} is not a position count")),
+    }
+}
+
+/// `PREFILL_CHUNK` env override, falling back (with a warning on
+/// invalid values, mirroring `PALLAS_THREADS`) to
+/// [`DEFAULT_PREFILL_CHUNK`].
+fn default_prefill_chunk() -> usize {
+    match std::env::var("PREFILL_CHUNK") {
+        Ok(raw) => match parse_prefill_chunk(&raw) {
+            Ok(n) => n,
+            Err(why) => {
+                eprintln!("WARN: {why}; falling back to {DEFAULT_PREFILL_CHUNK}");
+                DEFAULT_PREFILL_CHUNK
+            }
+        },
+        Err(_) => DEFAULT_PREFILL_CHUNK,
     }
 }
 
@@ -89,14 +168,28 @@ impl Default for ServeOpts {
 #[derive(Debug, Default, Clone)]
 pub struct ServeStats {
     pub ticks: u64,
+    /// Prefill chunks processed (one per Prefilling row per tick it
+    /// advanced).
     pub prefills: u64,
-    /// Tokens produced by fused decode steps.
+    /// Prompt/replay positions fed through chunked prefill.
+    pub prefill_positions: u64,
+    /// Tokens produced by width-1 fused decode rows.
     pub decode_tokens: u64,
-    /// All generated tokens (prefill-sampled + decode-sampled).
+    /// All generated tokens (prefill-exhaustion-sampled + decode-sampled).
     pub total_tokens: u64,
+    /// Requests that generated their full budget. Excludes
+    /// cancellations and admission errors — those are `cancelled` /
+    /// `errors`.
     pub finished: u64,
     pub cancelled: u64,
-    /// Widest fused batch observed.
+    /// Requests emitted as [`FinishReason::Error`] because admission
+    /// failed (the request is reported, never silently dropped).
+    pub errors: u64,
+    /// Over-budget rows preempted for a higher-priority arrival.
+    pub preemptions: u64,
+    /// Admissions that resumed a previously preempted request.
+    pub resumes: u64,
+    /// Widest fused batch observed (decode + prefill rows).
     pub peak_active: usize,
     /// Ticks on which admission stopped because the KV pool could not
     /// cover the next request's worst-case page demand.
@@ -112,16 +205,38 @@ pub struct ServeStats {
 #[derive(Debug, Clone)]
 pub struct TickReport {
     pub admitted: usize,
-    /// Fused decode batch width this tick.
+    /// Fused batch width this tick: decoding rows plus Prefilling rows
+    /// that advanced a chunk.
     pub batch: usize,
+    /// Tokens sampled this tick (decode rows + prefill exhaustions).
+    pub tokens: usize,
+    /// Prompt/replay positions fed this tick — bounded by
+    /// [`ServeOpts::prefill_chunk`] by construction.
+    pub prefill_positions: usize,
+    /// Requests that completed their budget and were emitted as
+    /// [`FinishReason::Length`] this tick. Does NOT include
+    /// cancellations (see `cancelled`) — the aggregate
+    /// [`ServeStats::finished`] counts the same thing, so the two
+    /// counters agree tick by tick.
     pub finished: usize,
+    /// Cancelled requests evicted (active) this tick, emitted as
+    /// [`FinishReason::Cancelled`]. Kept separate from `finished` so
+    /// per-tick and aggregate accounting use the same taxonomy.
+    pub cancelled: usize,
+    /// Requests emitted as [`FinishReason::Error`] at admission this
+    /// tick.
+    pub errors: usize,
+    /// Over-budget rows preempted this tick (each re-queued with its
+    /// partial state).
+    pub preempted: usize,
     /// Active sessions after the tick.
     pub active: usize,
     /// Still-queued requests after the tick.
     pub queued: usize,
-    /// Wall time of the fused decode phase alone (excludes admission
-    /// prefills) — the per-token latency a batched token actually
-    /// waited; 0 when no session decoded this tick.
+    /// Wall time of the fused step phase alone — decode rows AND
+    /// prefill chunks, since they share the forward; this is the
+    /// latency a batched token actually waited, which is exactly what
+    /// chunking bounds. 0 when no session stepped this tick.
     pub decode_seconds: f64,
     /// Requests left queued this tick because the KV pool could not
     /// cover the next one's worst-case page demand (0 when admission
@@ -135,30 +250,65 @@ pub struct TickReport {
     pub kv_pages_reserved: usize,
 }
 
-/// One admitted request: its session, sampling state, and progress.
+/// One admitted request: its session, sampling state, SLO attributes,
+/// and progress. A row is **Prefilling** while `fed < feed.len()`
+/// (its prompt — plus replayed tokens after a preemption — is still
+/// streaming into the KV cache chunk by chunk) and decoding after.
 struct Active<'m> {
     id: RequestId,
     session: NativeSession<'m>,
     rng: Pcg,
     sampling: SamplingParams,
+    priority: u8,
+    deadline_ticks: Option<u64>,
     prompt_len: usize,
+    /// Positions to stream before sampling: the prompt, plus every
+    /// already-sampled token when resuming a preempted request.
+    feed: Vec<i32>,
+    /// Positions of `feed` already pushed through the model.
+    fed: usize,
     max_new_tokens: usize,
+    /// Sampled tokens so far (carried across preemptions).
     tokens: Vec<i32>,
-    /// The most recently sampled token — fed at the next fused step.
+    /// The most recently sampled token — fed at the next fused step
+    /// once the row is decoding.
     next: i32,
+    submitted: std::time::Instant,
+    submit_tick: u64,
+    ttft_s: Option<f64>,
+    ttft_ticks: Option<u64>,
+    /// Ticks this request has held a slot (across admissions).
+    service_ticks: u64,
+    preemptions: u32,
     cancelled: bool,
 }
 
+impl Active<'_> {
+    fn prefilling(&self) -> bool {
+        self.fed < self.feed.len()
+    }
+}
+
 /// Continuous-batching engine over a [`NativeEngine`]: accepts
-/// requests, admits them into decode slots, and advances every live
-/// session one token per [`tick`](Scheduler::tick) with a single fused
-/// forward pass.
+/// requests, admits them into decode slots in priority order, streams
+/// prompts in bounded chunks, and advances every live session per
+/// [`tick`](Scheduler::tick) with a single fused forward pass.
 pub struct Scheduler<'m> {
     engine: &'m NativeEngine,
     queue: RequestQueue,
     slots: Vec<Option<Active<'m>>>,
     /// Shared paged KV pool every admitted session draws from.
     pool: KvPool,
+    /// Context window cap (chunk widths never exceed it).
+    cap: usize,
+    /// Per-tick prefill position budget ([`ServeOpts::prefill_chunk`]).
+    prefill_chunk: usize,
+    /// Round-robin start slot for handing out the next tick's prefill
+    /// budget.
+    prefill_cursor: usize,
+    /// Test hook: admissions to fail deliberately (see
+    /// [`inject_admit_failures`](Scheduler::inject_admit_failures)).
+    admit_faults: usize,
     finished: Vec<GenOutput>,
     stats: ServeStats,
 }
@@ -171,6 +321,9 @@ impl<'m> Scheduler<'m> {
         }
         if opts.slots == 0 {
             bail!("serve: need at least one slot");
+        }
+        if opts.prefill_chunk == 0 {
+            bail!("serve: prefill_chunk must be >= 1");
         }
         let cap = cfg.ctx_len();
         let page_cols = opts.kv_page_cols.unwrap_or_else(|| KvPool::default_page_cols(cap));
@@ -189,26 +342,35 @@ impl<'m> Scheduler<'m> {
             queue: RequestQueue::new(opts.queue_cap),
             slots: (0..opts.slots).map(|_| None).collect(),
             pool,
+            cap,
+            prefill_chunk: opts.prefill_chunk,
+            prefill_cursor: 0,
+            admit_faults: 0,
             finished: Vec::new(),
             stats: ServeStats { kv_pages: pool_pages, ..ServeStats::default() },
         })
     }
 
-    /// Total positions a request's session can ever push: the prompt
-    /// plus one per decode step (the last sampled token is never fed
-    /// back). Saturating, so absurd budgets clamp instead of
-    /// overflowing — the windowed bound caps the page demand anyway.
-    fn request_positions(req: &GenRequest) -> usize {
-        req.prompt.len().saturating_add(req.max_new_tokens).saturating_sub(1)
+    /// Total positions a session admitted for this queue entry can
+    /// ever push: its feed (prompt, plus replayed tokens on resume)
+    /// plus one per remaining decode step (the last sampled token is
+    /// never fed back). Algebraically `prompt + max_new_tokens - 1`
+    /// whether fresh or resumed — so a preemption cycle never changes
+    /// a request's worst-case demand. Saturating, so absurd budgets
+    /// clamp instead of overflowing — the windowed bound caps the page
+    /// demand anyway.
+    fn entry_positions(q: &QueuedRequest) -> usize {
+        let done = q.resume.as_ref().map_or(0, |r| r.tokens.len());
+        let feed = q.req.prompt.len().saturating_add(done);
+        feed.saturating_add(q.req.max_new_tokens.saturating_sub(done)).saturating_sub(1)
     }
 
-    /// Worst-case concurrent KV pages a request's session can hold —
-    /// delegated to [`NativeSession::pool_demand`], the same formula
-    /// `admit` reserves through, so the admission gate and the
-    /// reservation can never disagree.
-    fn request_pages(&self, req: &GenRequest) -> usize {
-        let cfg = self.engine.cfg();
-        NativeSession::pool_demand(cfg, 1, &self.pool, Some(Self::request_positions(req)))
+    /// Worst-case concurrent KV pages a session with this position
+    /// budget can hold — delegated to [`NativeSession::pool_demand`],
+    /// the same formula `admit` reserves through, so the admission
+    /// gate and the reservation can never disagree.
+    fn request_pages(&self, positions: usize) -> usize {
+        NativeSession::pool_demand(self.engine.cfg(), 1, &self.pool, Some(positions))
     }
 
     /// The shared KV pool's counters (occupancy, peak, reservations) —
@@ -242,7 +404,9 @@ impl<'m> Scheduler<'m> {
         if req.max_new_tokens == 0 {
             bail!("serve: max_new_tokens must be >= 1");
         }
-        let demand = self.request_pages(&req);
+        let positions =
+            req.prompt.len().saturating_add(req.max_new_tokens).saturating_sub(1);
+        let demand = self.request_pages(positions);
         if demand > self.pool.max_pages() {
             bail!(
                 "serve: request's worst-case KV demand of {demand} pages exceeds the whole \
@@ -251,20 +415,29 @@ impl<'m> Scheduler<'m> {
                 self.pool.max_pages()
             );
         }
-        self.queue.push(req)
+        self.queue.push(req, self.stats.ticks)
     }
 
     /// Cancel a request wherever it lives. Queued requests leave
-    /// immediately (empty output); active ones are evicted at the next
-    /// tick with their partial tokens. Returns false for unknown /
+    /// immediately (with whatever tokens a pre-preemption admission
+    /// had produced); active ones are evicted at the next tick with
+    /// their partial tokens. Returns false for unknown /
     /// already-finished ids.
     pub fn cancel(&mut self, id: RequestId) -> bool {
         if let Some(q) = self.queue.remove(id) {
+            let prompt_len = q.req.prompt.len();
+            let (tokens, ttft_s, ttft_ticks, preemptions) = match q.resume {
+                Some(r) => (r.tokens, r.ttft_s, r.ttft_ticks, r.preemptions),
+                None => (Vec::new(), None, None, 0),
+            };
             self.finished.push(GenOutput {
                 id,
-                prompt_len: q.req.prompt.len(),
-                tokens: Vec::new(),
+                prompt_len,
+                tokens,
                 finish: FinishReason::Cancelled,
+                ttft_s,
+                ttft_ticks,
+                preemptions,
             });
             self.stats.cancelled += 1;
             return true;
@@ -278,52 +451,151 @@ impl<'m> Scheduler<'m> {
         false
     }
 
-    /// Prefill a dequeued request into a fresh single-row session —
-    /// opened in the shared pool with a page reservation bounded by
-    /// the request's position budget — and sample its first token.
-    /// Returns `None` when the request finished at prefill
-    /// (`max_new_tokens == 1`).
-    fn admit(&mut self, q: QueuedRequest) -> Result<Option<Active<'m>>> {
-        let engine = self.engine;
-        let budget = Self::request_positions(&q.req);
-        let mut session = NativeSession::open_in_pool(&engine.model, 1, &self.pool, Some(budget))?;
-        let width = q.req.prompt.len();
-        let logits = session.prefill(&TokenBatch::new(q.req.prompt.clone(), 1, width)?)?;
-        self.stats.prefills += 1;
-        let sampling = q.req.sampling.clone();
-        let mut rng = Pcg::new(sampling.seed, SAMPLE_STREAM);
-        let first = sample_logits(logits.row(0), sampling.temperature, sampling.top_k, &mut rng);
-        self.stats.total_tokens += 1;
-        let active = Active {
-            id: q.id,
+    /// Test-only fault injection: make the next `n` admissions fail as
+    /// if the session open had errored, pinning the
+    /// no-request-is-silently-lost contract ([`FinishReason::Error`])
+    /// without needing a genuinely unopenable pool.
+    #[doc(hidden)]
+    pub fn inject_admit_failures(&mut self, n: usize) {
+        self.admit_faults = n;
+    }
+
+    /// Open a dequeued request's single-row session in the shared pool
+    /// (reserving its worst-case page demand) and build its Prefilling
+    /// row. The prompt is NOT run here — chunked prefill happens in
+    /// the tick's fused step. On failure the entry is handed back so
+    /// the caller can emit it as [`FinishReason::Error`].
+    fn admit(&mut self, q: QueuedRequest) -> std::result::Result<Active<'m>, (QueuedRequest, Error)> {
+        if self.admit_faults > 0 {
+            self.admit_faults -= 1;
+            return Err((q, Error::msg("injected admission failure (test hook)")));
+        }
+        let budget = Self::entry_positions(&q);
+        let session =
+            match NativeSession::open_in_pool(&self.engine.model, 1, &self.pool, Some(budget)) {
+                Ok(s) => s,
+                Err(e) => return Err((q, e)),
+            };
+        let QueuedRequest { id, req, submitted, submit_tick, resume } = q;
+        if resume.is_some() {
+            self.stats.resumes += 1;
+        }
+        let (tokens, rng, service_ticks, ttft_s, ttft_ticks, preemptions) = match resume {
+            Some(r) => (r.tokens, r.rng, r.service_ticks, r.ttft_s, r.ttft_ticks, r.preemptions),
+            None => (Vec::new(), Pcg::new(req.sampling.seed, SAMPLE_STREAM), 0, None, None, 0),
+        };
+        let prompt_len = req.prompt.len();
+        let mut feed = req.prompt;
+        feed.extend_from_slice(&tokens);
+        Ok(Active {
+            id,
+            session,
+            rng,
+            sampling: req.sampling,
+            priority: req.priority,
+            deadline_ticks: req.deadline_ticks,
+            prompt_len,
+            feed,
+            fed: 0,
+            max_new_tokens: req.max_new_tokens,
+            tokens,
+            next: 0,
+            submitted,
+            submit_tick,
+            ttft_s,
+            ttft_ticks,
+            service_ticks,
+            preemptions,
+            cancelled: false,
+        })
+    }
+
+    /// Preempt ONE over-budget decoding row of priority strictly below
+    /// `below_priority`, if any: deterministically the lowest
+    /// priority, then the most service ticks, then the highest id. The
+    /// victim's session drops (pages + reservation return to the
+    /// pool) and the request re-queues with its partial state.
+    /// Returns whether a victim was found.
+    fn preempt_one(&mut self, below_priority: u8) -> bool {
+        let mut pick: Option<usize> = None;
+        for (i, slot) in self.slots.iter().enumerate() {
+            let Some(a) = slot else { continue };
+            if a.cancelled || a.prefilling() || a.priority >= below_priority {
+                continue;
+            }
+            if !a.deadline_ticks.is_some_and(|d| a.service_ticks > d) {
+                continue;
+            }
+            let better = match pick {
+                None => true,
+                Some(j) => {
+                    let b = self.slots[j].as_ref().expect("picked slot occupied");
+                    let ka = (a.priority, std::cmp::Reverse(a.service_ticks), std::cmp::Reverse(a.id));
+                    let kb = (b.priority, std::cmp::Reverse(b.service_ticks), std::cmp::Reverse(b.id));
+                    ka < kb
+                }
+            };
+            if better {
+                pick = Some(i);
+            }
+        }
+        let Some(i) = pick else { return false };
+        let a = self.slots[i].take().expect("victim slot occupied");
+        let Active {
+            id,
             session,
             rng,
             sampling,
-            prompt_len: width,
-            max_new_tokens: q.req.max_new_tokens,
-            tokens: vec![first as i32],
-            next: first as i32,
-            cancelled: false,
-        };
-        if active.tokens.len() >= active.max_new_tokens {
-            self.finished.push(GenOutput {
-                id: active.id,
-                prompt_len: active.prompt_len,
-                tokens: active.tokens,
-                finish: FinishReason::Length,
-            });
-            self.stats.finished += 1;
-            return Ok(None);
-        }
-        Ok(Some(active))
+            priority,
+            deadline_ticks,
+            prompt_len,
+            feed,
+            max_new_tokens,
+            tokens,
+            submitted,
+            submit_tick,
+            ttft_s,
+            ttft_ticks,
+            service_ticks,
+            preemptions,
+            ..
+        } = a;
+        // Pages and the worst-case reservation return here; resume
+        // re-reserves the identical demand (see `entry_positions`).
+        drop(session);
+        self.queue.requeue(QueuedRequest {
+            id,
+            req: GenRequest {
+                prompt: feed[..prompt_len].to_vec(),
+                max_new_tokens,
+                sampling,
+                priority,
+                deadline_ticks,
+            },
+            submitted,
+            submit_tick,
+            resume: Some(ResumeState {
+                tokens,
+                rng,
+                service_ticks,
+                ttft_s,
+                ttft_ticks,
+                preemptions: preemptions + 1,
+            }),
+        });
+        self.stats.preemptions += 1;
+        true
     }
 
     /// One scheduler tick: evict cancellations, admit queued requests
-    /// into free slots, run ONE fused decode step over every active
-    /// session, retire rows that hit their budget. See the module docs.
+    /// (priority order, preempting where allowed), run ONE fused step
+    /// over every active session — decode rows plus bounded prefill
+    /// chunks — and retire rows that hit their budget. See the module
+    /// docs.
     pub fn tick(&mut self) -> Result<TickReport> {
         self.stats.ticks += 1;
         let mut finished = 0usize;
+        let mut cancelled = 0usize;
 
         // Phase 1: evict cancellations, freeing slots before admission.
         for slot in self.slots.iter_mut() {
@@ -334,67 +606,185 @@ impl<'m> Scheduler<'m> {
                     prompt_len: a.prompt_len,
                     tokens: a.tokens,
                     finish: FinishReason::Cancelled,
+                    ttft_s: a.ttft_s,
+                    ttft_ticks: a.ttft_ticks,
+                    preemptions: a.preemptions,
                 });
                 self.stats.cancelled += 1;
-                finished += 1;
+                cancelled += 1;
             }
         }
 
-        // Phase 2: admission — lowest free slot first, queue order,
-        // gated on pool capacity. A request is dequeued only once the
-        // pool can cover its worst-case page demand; otherwise it (and
-        // everything behind it — FIFO order is part of the contract)
-        // stays queued until retirements free reservations.
+        // Phase 2: admission — queue is priority-then-FIFO ordered;
+        // each head needs a free slot (lowest index first) and pool
+        // coverage of its worst-case page demand before it is dequeued
+        // (capacity-aware admission never consumes a request it must
+        // defer). A blocked head may preempt ONE over-budget
+        // lower-priority row per attempt and retry.
         let mut admitted = 0usize;
         let mut deferred = 0usize;
-        'admission: for sidx in 0..self.slots.len() {
-            if self.slots[sidx].is_some() {
-                continue;
-            }
-            while self.slots[sidx].is_none() {
-                let demand = match self.queue.peek() {
-                    None => break 'admission,
-                    Some(q) => self.request_pages(&q.req),
-                };
-                if !self.pool.can_admit(demand) {
-                    deferred = self.queue.len();
-                    self.stats.deferrals += 1;
-                    break 'admission;
+        let mut preempted = 0usize;
+        let mut errors = 0usize;
+        loop {
+            let (priority, demand) = match self.queue.peek() {
+                None => break,
+                Some(q) => (q.req.priority, self.request_pages(Self::entry_positions(q))),
+            };
+            if !self.slots.iter().any(|s| s.is_none()) {
+                if self.preempt_one(priority) {
+                    preempted += 1;
+                    continue;
                 }
-                let q = self.queue.pop().expect("peeked request present");
-                match self.admit(q)? {
-                    Some(active) => {
-                        self.slots[sidx] = Some(active);
-                        admitted += 1;
-                    }
-                    // Finished at prefill: the slot is still free for
-                    // the next queued request.
-                    None => finished += 1,
+                break;
+            }
+            if !self.pool.can_admit(demand) {
+                if self.preempt_one(priority) {
+                    preempted += 1;
+                    continue;
+                }
+                deferred = self.queue.len();
+                self.stats.deferrals += 1;
+                break;
+            }
+            let q = self.queue.pop().expect("peeked request present");
+            let sidx = self.slots.iter().position(|s| s.is_none()).expect("free slot checked");
+            match self.admit(q) {
+                Ok(active) => {
+                    self.slots[sidx] = Some(active);
+                    admitted += 1;
+                }
+                Err((q, e)) => {
+                    // Satellite contract: an admission failure must
+                    // never silently lose the (already dequeued)
+                    // request — emit it as an Error output and keep
+                    // admitting.
+                    eprintln!("WARN: serve: admission of request {} failed: {e}", q.id);
+                    let prompt_len = q.req.prompt.len();
+                    let (tokens, ttft_s, ttft_ticks, preemptions) = match q.resume {
+                        Some(r) => (r.tokens, r.ttft_s, r.ttft_ticks, r.preemptions),
+                        None => (Vec::new(), None, None, 0),
+                    };
+                    self.finished.push(GenOutput {
+                        id: q.id,
+                        prompt_len,
+                        tokens,
+                        finish: FinishReason::Error,
+                        ttft_s,
+                        ttft_ticks,
+                        preemptions,
+                    });
+                    self.stats.errors += 1;
+                    errors += 1;
                 }
             }
         }
 
-        // Phase 3: one fused decode step, ascending slot order.
-        let mut parts: Vec<&mut Active<'m>> = self.slots.iter_mut().flatten().collect();
+        // Phase 3a: hand the tick's prefill budget to Prefilling rows,
+        // round-robin from the rotating cursor. Chunk widths never
+        // exceed the context window (`step_batched`'s bound), and the
+        // total never exceeds `prefill_chunk` — that bound is what
+        // keeps a long prompt from stalling co-resident decodes.
+        let nslots = self.slots.len();
+        let mut chunk_w = vec![0usize; nslots];
+        let mut budget = self.prefill_chunk;
+        let mut last_served: Option<usize> = None;
+        for k in 0..nslots {
+            if budget == 0 {
+                break;
+            }
+            let sidx = (self.prefill_cursor + k) % nslots;
+            if let Some(a) = self.slots[sidx].as_ref() {
+                if a.prefilling() {
+                    let w = (a.feed.len() - a.fed).min(budget).min(self.cap);
+                    chunk_w[sidx] = w;
+                    budget -= w;
+                    last_served = Some(sidx);
+                }
+            }
+        }
+        if let Some(s) = last_served {
+            // Next tick's budget starts just past the last slot served,
+            // so a prompt that consumed the budget yields to the next
+            // prefilling request (the fairness bound on consecutive
+            // chunks per request).
+            self.prefill_cursor = (s + 1) % nslots;
+        }
+
+        // Phase 3b: one fused step, ascending slot order — width-1
+        // decode rows plus the scheduled prefill chunks.
+        let mut parts: Vec<(&mut Active<'m>, usize, bool)> = Vec::new();
+        for (sidx, slot) in self.slots.iter_mut().enumerate() {
+            if let Some(a) = slot {
+                if a.prefilling() {
+                    if chunk_w[sidx] > 0 {
+                        parts.push((a, chunk_w[sidx], true));
+                    }
+                } else {
+                    parts.push((a, 1, false));
+                }
+            }
+        }
         let batch = parts.len();
         self.stats.peak_active = self.stats.peak_active.max(batch);
         let mut decode_seconds = 0.0;
+        let mut tokens_sampled = 0usize;
+        let mut prefill_positions = 0usize;
         if batch > 0 {
             let t0 = std::time::Instant::now();
-            let next: Vec<i32> = parts.iter().map(|a| a.next).collect();
-            let mut sess: Vec<&mut NativeSession<'_>> =
-                parts.iter_mut().map(|a| &mut a.session).collect();
-            let logits = decode_batched(&mut sess, &next)?;
-            drop(sess);
-            for (a, lg) in parts.iter_mut().zip(&logits) {
-                let s = &a.sampling;
-                let id = sample_logits(lg.row(0), s.temperature, s.top_k, &mut a.rng) as i32;
-                a.tokens.push(id);
-                a.next = id;
+            let mut toks: Vec<i32> = Vec::new();
+            let mut widths: Vec<usize> = Vec::with_capacity(batch);
+            for (a, w, is_prefill) in parts.iter() {
+                if *is_prefill {
+                    toks.extend_from_slice(&a.feed[a.fed..a.fed + w]);
+                } else {
+                    toks.push(a.next);
+                }
+                widths.push(*w);
             }
-            self.stats.decode_tokens += batch as u64;
-            self.stats.total_tokens += batch as u64;
+            let mut sess: Vec<&mut NativeSession<'_>> =
+                parts.iter_mut().map(|(a, _, _)| &mut a.session).collect();
+            let logits = step_batched(&mut sess, &toks, &widths)?;
+            drop(sess);
+            let tick_now = self.stats.ticks;
+            for ((a, w, is_prefill), lg) in parts.iter_mut().zip(&logits) {
+                let s = &a.sampling;
+                if *is_prefill {
+                    a.fed += *w;
+                    prefill_positions += *w;
+                    self.stats.prefills += 1;
+                    self.stats.prefill_positions += *w as u64;
+                    if a.fed == a.feed.len() {
+                        // Feed exhausted: this chunk's last position is
+                        // exactly where a monolithic prefill would have
+                        // sampled — take the (first, or post-resume
+                        // next) token from its logits.
+                        let id =
+                            sample_logits(lg.row(0), s.temperature, s.top_k, &mut a.rng) as i32;
+                        a.tokens.push(id);
+                        a.next = id;
+                        tokens_sampled += 1;
+                        if a.ttft_ticks.is_none() {
+                            a.ttft_s = Some(a.submitted.elapsed().as_secs_f64());
+                            a.ttft_ticks = Some(tick_now.saturating_sub(a.submit_tick));
+                        }
+                    }
+                } else {
+                    let id = sample_logits(lg.row(0), s.temperature, s.top_k, &mut a.rng) as i32;
+                    a.tokens.push(id);
+                    a.next = id;
+                    tokens_sampled += 1;
+                    self.stats.decode_tokens += 1;
+                }
+            }
+            self.stats.total_tokens += tokens_sampled as u64;
             decode_seconds = t0.elapsed().as_secs_f64();
+        }
+        drop(parts);
+
+        // Every resident row consumed one tick of service, prefilling
+        // or decoding — `deadline_ticks` budgets slot residency.
+        for a in self.slots.iter_mut().flatten() {
+            a.service_ticks += 1;
         }
 
         // Phase 4: retire rows that generated their full budget.
@@ -406,6 +796,9 @@ impl<'m> Scheduler<'m> {
                     prompt_len: a.prompt_len,
                     tokens: a.tokens,
                     finish: FinishReason::Length,
+                    ttft_s: a.ttft_s,
+                    ttft_ticks: a.ttft_ticks,
+                    preemptions: a.preemptions,
                 });
                 self.stats.finished += 1;
                 finished += 1;
@@ -417,7 +810,12 @@ impl<'m> Scheduler<'m> {
         Ok(TickReport {
             admitted,
             batch,
+            tokens: tokens_sampled,
+            prefill_positions,
             finished,
+            cancelled,
+            errors,
+            preempted,
             active: self.active_count(),
             queued: self.queue.len(),
             decode_seconds,
@@ -467,5 +865,25 @@ impl<'m> Scheduler<'m> {
 
     pub fn stats(&self) -> &ServeStats {
         &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefill_chunk_parse_accepts_counts() {
+        assert_eq!(parse_prefill_chunk("1"), Ok(1));
+        assert_eq!(parse_prefill_chunk("64"), Ok(64));
+        assert_eq!(parse_prefill_chunk(" 128 "), Ok(128));
+    }
+
+    #[test]
+    fn prefill_chunk_parse_rejects_garbage_and_zero() {
+        assert!(parse_prefill_chunk("0").is_err());
+        assert!(parse_prefill_chunk("-3").is_err());
+        assert!(parse_prefill_chunk("lots").is_err());
+        assert!(parse_prefill_chunk("").is_err());
     }
 }

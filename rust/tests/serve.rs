@@ -5,18 +5,33 @@
 //! session sequentially through [`Session::decode`] — logits within
 //! 1e-5 (bit-identical by construction), greedy tokens identical —
 //! across attention families, positional schemes, and 1/2/4 kernel
-//! threads. On top of that, the scheduler's continuous batching must
-//! reproduce sequential per-request generation exactly, honor
-//! cancellation and `max_new_tokens` expiry, and apply bounded-queue
-//! backpressure.
+//! threads — and the width-generalized [`step_batched`] must make a
+//! chunked prompt feed bit-identical to a monolithic prefill, at any
+//! chunk split, even fused with co-resident decode rows. On top of
+//! that, the scheduler's continuous batching must reproduce sequential
+//! per-request generation exactly at every `prefill_chunk` in
+//! {1, 7, 64, ctx_len}, honor priority-then-FIFO admission, preempt
+//! and resume over-budget rows bit-identically, report (never lose)
+//! admission failures, honor cancellation and `max_new_tokens` expiry,
+//! and apply bounded-queue backpressure.
+//!
+//! Note on chunk-sensitive pins: most scheduler tests assert only
+//! outputs and admission-phase behavior, so they hold at ANY chunk
+//! size and `make check` re-runs them under `PREFILL_CHUNK=1`. The two
+//! tests with tick-precise timing assertions
+//! (`cancellation_frees_slot_and_admits_queued`,
+//! `eight_short_sessions_peak_below_half_of_eight_rings`) pin
+//! `prefill_chunk: 64` explicitly — their per-tick expectations assume
+//! whole-prompt-per-tick prefill.
 
 use switchhead::config::ModelConfig;
 use switchhead::coordinator::generate::sample_logits;
 use switchhead::kernels;
-use switchhead::model::{decode_batched, NativeEngine, NativeSession};
+use switchhead::model::{decode_batched, step_batched, NativeEngine, NativeSession};
 use switchhead::runtime::{Session, TokenBatch};
 use switchhead::serve::{
-    FinishReason, GenRequest, SamplingParams, Scheduler, ServeOpts, SAMPLE_STREAM,
+    drive_trace, synth_trace, Arrivals, FinishReason, GenRequest, LoadSpec, SamplingParams,
+    Scheduler, ServeOpts, SAMPLE_STREAM,
 };
 use switchhead::util::json::Json;
 use switchhead::util::rng::Pcg;
@@ -313,7 +328,9 @@ fn cancellation_frees_slot_and_admits_queued() {
     let cfg = sh_xl();
     let engine = NativeEngine::new(&cfg, 11).unwrap();
     let mut rng = Pcg::new(41, 1);
-    let opts = ServeOpts { slots: 1, queue_cap: 4, ..ServeOpts::default() };
+    // Tick-precise assertions below assume whole-prompt-per-tick
+    // prefill — pin the chunk rather than inherit PREFILL_CHUNK.
+    let opts = ServeOpts { slots: 1, queue_cap: 4, prefill_chunk: 64, ..ServeOpts::default() };
     let mut sched = Scheduler::new(&engine, &opts).unwrap();
 
     let a = sched.submit(synth_request(&cfg, &mut rng, 3, 100)).unwrap();
@@ -420,7 +437,15 @@ fn queue_backpressure_and_validation() {
 fn eight_short_sessions_peak_below_half_of_eight_rings() {
     let cfg = sh_xl();
     let engine = NativeEngine::new(&cfg, 11).unwrap();
-    let opts = ServeOpts { slots: 8, queue_cap: 8, kv_page_cols: Some(4), kv_pool_pages: None };
+    // peak_active == 8 needs every prompt prefilled in its admission
+    // tick — pin the chunk rather than inherit PREFILL_CHUNK.
+    let opts = ServeOpts {
+        slots: 8,
+        queue_cap: 8,
+        kv_page_cols: Some(4),
+        kv_pool_pages: None,
+        prefill_chunk: 64,
+    };
     let mut sched = Scheduler::new(&engine, &opts).unwrap();
     let mut rng = Pcg::new(71, 6);
     // Short requests: 2-token prompts, 3 generated tokens -> 4 pushed
@@ -463,6 +488,7 @@ fn pool_exhaustion_defers_admission_then_succeeds() {
         queue_cap: 4,
         kv_page_cols: Some(4),
         kv_pool_pages: Some(per_session),
+        ..ServeOpts::default()
     };
     let mut sched = Scheduler::new(&engine, &opts).unwrap();
     let mut rng = Pcg::new(81, 2);
@@ -516,7 +542,13 @@ fn pool_exhaustion_defers_admission_then_succeeds() {
 fn cancel_and_retire_return_every_page() {
     let cfg = sh_xl();
     let engine = NativeEngine::new(&cfg, 11).unwrap();
-    let opts = ServeOpts { slots: 2, queue_cap: 8, kv_page_cols: Some(2), kv_pool_pages: None };
+    let opts = ServeOpts {
+        slots: 2,
+        queue_cap: 8,
+        kv_page_cols: Some(2),
+        kv_pool_pages: None,
+        ..ServeOpts::default()
+    };
     let mut sched = Scheduler::new(&engine, &opts).unwrap();
     let mut rng = Pcg::new(91, 3);
     let long = sched.submit(synth_request(&cfg, &mut rng, 6, 200)).unwrap();
@@ -547,4 +579,375 @@ fn cancel_and_retire_return_every_page() {
         ps.free_pages, ps.materialized,
         "free list must hold every page ever materialized"
     );
+}
+
+/// Feeding a prompt through [`step_batched`] in chunks must land the
+/// model in exactly the state a monolithic [`Session::prefill`]
+/// produces: same last-position logits after the final chunk, and
+/// identical logits on the next decode step. Checked across every
+/// attention family and positional scheme.
+fn check_chunked_feed_matches_prefill(cfg: &ModelConfig) {
+    let engine = NativeEngine::new(cfg, 11).unwrap();
+    let t = cfg.seq_len;
+    let mut rng = Pcg::new(111, 5);
+    let prompt: Vec<i32> = (0..t).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+
+    let mut mono = NativeSession::open(&engine.model, 1).unwrap();
+    let mono_logits =
+        mono.prefill(&TokenBatch::new(prompt.clone(), 1, t).unwrap()).unwrap();
+
+    // Deliberately ragged chunk split (3, 1, 2, rest) so chunk
+    // boundaries fall at odd positions.
+    let mut chunked = NativeSession::open(&engine.model, 1).unwrap();
+    let mut fed = 0usize;
+    let mut last = None;
+    for w in [3usize, 1, 2, usize::MAX] {
+        let w = w.min(t - fed);
+        if w == 0 {
+            break;
+        }
+        let mut refs = vec![&mut chunked];
+        let mut lgs = step_batched(&mut refs, &prompt[fed..fed + w], &[w]).unwrap();
+        fed += w;
+        last = Some(lgs.remove(0));
+    }
+    assert_eq!(fed, t);
+    let last = last.unwrap();
+    let worst = last
+        .data()
+        .iter()
+        .zip(mono_logits.data())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(
+        worst <= TOL,
+        "{}: chunked feed vs monolithic prefill max |diff| {worst} > {TOL}",
+        cfg.name
+    );
+    assert_eq!(argmax(last.row(0)), argmax(mono_logits.row(0)), "{}: greedy diverged", cfg.name);
+
+    // Both sessions must continue identically from here.
+    let tok = argmax(mono_logits.row(0)) as i32;
+    let a = mono.decode(&[tok]).unwrap();
+    let mut refs = vec![&mut chunked];
+    let b = step_batched(&mut refs, &[tok], &[1]).unwrap();
+    let worst = a
+        .data()
+        .iter()
+        .zip(b[0].data())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0f32, f32::max);
+    assert!(worst <= TOL, "{}: post-chunk decode diverged by {worst}", cfg.name);
+}
+
+#[test]
+fn chunked_feed_matches_monolithic_prefill_all_configs() {
+    kernels::set_threads(1);
+    for cfg in [sh_xl(), sh_rope(), dense_xl(), switchall_xl(), moa_xl()] {
+        check_chunked_feed_matches_prefill(&cfg);
+    }
+}
+
+/// One fused [`step_batched`] call mixing a width-1 decode row with a
+/// multi-position prefill chunk must equal running the two sessions
+/// separately — the fused step the scheduler issues every tick.
+#[test]
+fn mixed_width_fused_step_matches_sequential() {
+    kernels::set_threads(1);
+    for cfg in [sh_xl(), sh_rope(), moa_xl()] {
+        let engine = NativeEngine::new(&cfg, 11).unwrap();
+        let mut rng = Pcg::new(121, 9);
+        let pa: Vec<i32> = (0..5).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+        let pb: Vec<i32> = (0..7).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+        let tok = rng.below(cfg.vocab_size) as i32;
+
+        // Sequential: A decodes one token; B feeds its prompt chunk.
+        let mut a_seq = opened_session(&engine, &pa);
+        let la = a_seq.decode(&[tok]).unwrap();
+        let mut b_seq = NativeSession::open(&engine.model, 1).unwrap();
+        let mut refs = vec![&mut b_seq];
+        let lb = step_batched(&mut refs, &pb, &[pb.len()]).unwrap();
+
+        // Fused: the same two operations in ONE mixed-width step.
+        let mut a_fused = opened_session(&engine, &pa);
+        let mut b_fused = NativeSession::open(&engine.model, 1).unwrap();
+        let mut toks = vec![tok];
+        toks.extend_from_slice(&pb);
+        let mut refs = vec![&mut a_fused, &mut b_fused];
+        let fused = step_batched(&mut refs, &toks, &[1, pb.len()]).unwrap();
+
+        for (name, seq, got) in [("decode", &la, &fused[0]), ("prefill", &lb[0], &fused[1])] {
+            let worst = seq
+                .data()
+                .iter()
+                .zip(got.data())
+                .map(|(x, y)| (x - y).abs())
+                .fold(0f32, f32::max);
+            assert!(
+                worst <= TOL,
+                "{} {name} row: mixed-width fused step diverged by {worst}",
+                cfg.name
+            );
+        }
+    }
+}
+
+/// The tentpole pin: scheduler output is identical at EVERY prefill
+/// chunk size — near-window prompts streamed over many ticks at
+/// chunk 1 produce the same tokens as whole-prompt-per-tick prefill —
+/// and per-tick prefill work never exceeds the chunk.
+#[test]
+fn scheduler_output_is_chunk_size_invariant() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let ctx = cfg.ctx_len();
+    let mut rng = Pcg::new(101, 7);
+    // Near-window prompts so small chunks really span many ticks.
+    let reqs: Vec<GenRequest> = (0..4)
+        .map(|i| synth_request(&cfg, &mut rng, ctx - 3 + i % 4, 3 + i))
+        .collect();
+    let expected: Vec<Vec<i32>> = reqs.iter().map(|r| oracle_generate(&engine, r)).collect();
+
+    for chunk in [1usize, 7, 64, ctx] {
+        let opts = ServeOpts {
+            slots: 2,
+            queue_cap: reqs.len(),
+            prefill_chunk: chunk,
+            ..ServeOpts::default()
+        };
+        let mut sched = Scheduler::new(&engine, &opts).unwrap();
+        for r in &reqs {
+            sched.submit(r.clone()).unwrap();
+        }
+        let mut ticks = 0usize;
+        while !sched.is_idle() {
+            let r = sched.tick().unwrap();
+            assert!(
+                r.prefill_positions <= chunk,
+                "chunk {chunk}: tick fed {} prefill positions",
+                r.prefill_positions
+            );
+            ticks += 1;
+            assert!(ticks < 10_000, "chunk {chunk}: scheduler did not drain");
+        }
+        let mut outs = sched.drain_finished();
+        outs.sort_by_key(|o| o.id);
+        assert_eq!(outs.len(), reqs.len());
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(o.finish, FinishReason::Length);
+            assert_eq!(
+                o.tokens, expected[i],
+                "request {i}: stream changed at prefill_chunk {chunk}"
+            );
+            assert!(o.ttft_ticks.is_some(), "finished request must report TTFT");
+        }
+        // Chunked prefill really happened: positions add up to the
+        // prompts (+ nothing else — no request resumed here).
+        let fed: usize = reqs.iter().map(|r| r.prompt.len()).sum();
+        assert_eq!(sched.stats().prefill_positions as usize, fed, "chunk {chunk}");
+    }
+}
+
+/// Priority classes jump the FIFO queue (within a class order is
+/// unchanged), without perturbing any request's stream.
+#[test]
+fn priority_admission_beats_fifo() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let mut rng = Pcg::new(131, 3);
+    let bulk_a = synth_request(&cfg, &mut rng, 3, 4);
+    let bulk_b = synth_request(&cfg, &mut rng, 2, 4);
+    let hot = synth_request(&cfg, &mut rng, 2, 3).with_priority(9);
+    let expected: Vec<Vec<i32>> =
+        [&bulk_a, &bulk_b, &hot].iter().map(|r| oracle_generate(&engine, r)).collect();
+
+    let opts = ServeOpts { slots: 1, queue_cap: 4, ..ServeOpts::default() };
+    let mut sched = Scheduler::new(&engine, &opts).unwrap();
+    let ids = [
+        sched.submit(bulk_a).unwrap(),
+        sched.submit(bulk_b).unwrap(),
+        sched.submit(hot).unwrap(),
+    ];
+    let mut outs = sched.run_until_idle(10_000).unwrap();
+    outs.sort_by_key(|o| o.id);
+    assert_eq!(outs.len(), 3);
+    for (i, o) in outs.iter().enumerate() {
+        assert_eq!(o.id, ids[i]);
+        assert_eq!(o.finish, FinishReason::Length);
+        assert_eq!(o.tokens, expected[i], "request {i}: priority scheduling changed its stream");
+    }
+    // The single slot went to `hot` first despite it being submitted
+    // last; the bulk class then ran in FIFO order.
+    let ttft = |i: usize| outs[i].ttft_ticks.expect("ttft recorded");
+    assert!(ttft(2) < ttft(0), "priority 9 must beat bulk: {} vs {}", ttft(2), ttft(0));
+    assert!(ttft(0) < ttft(1), "bulk class must stay FIFO: {} vs {}", ttft(0), ttft(1));
+}
+
+/// An over-budget low-priority generation is preempted for a
+/// high-priority arrival, re-queued with its partial state, and
+/// resumes BIT-IDENTICALLY — both streams equal the uninterrupted
+/// sequential oracle, and the pool ends empty.
+#[test]
+fn preemption_requeues_and_resumes_bit_identically() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let mut rng = Pcg::new(141, 5);
+    // Sampled (not greedy) low-priority request: resume must continue
+    // the mid-stream RNG, which greedy would not detect.
+    let mut low = synth_request(&cfg, &mut rng, 2, 10).with_deadline_ticks(1);
+    low.sampling = SamplingParams { temperature: 1.0, top_k: 5, seed: 900 };
+    let high = synth_request(&cfg, &mut rng, 2, 3).with_priority(5);
+    let want_low = oracle_generate(&engine, &low);
+    let want_high = oracle_generate(&engine, &high);
+
+    let opts = ServeOpts { slots: 1, queue_cap: 4, prefill_chunk: 64, ..ServeOpts::default() };
+    let mut sched = Scheduler::new(&engine, &opts).unwrap();
+    let low_id = sched.submit(low).unwrap();
+    sched.tick().unwrap(); // prefill + first token (service tick 1)
+    sched.tick().unwrap(); // decode (service tick 2 > deadline 1)
+    let high_id = sched.submit(high).unwrap();
+    let r = sched.tick().unwrap();
+    assert_eq!(r.preempted, 1, "over-budget low-priority row must be preempted");
+    assert_eq!(r.admitted, 1, "high-priority request admitted into the freed slot");
+
+    let mut outs = sched.run_until_idle(10_000).unwrap();
+    outs.sort_by_key(|o| o.id);
+    assert_eq!(outs.len(), 2);
+    assert_eq!(outs[0].id, low_id);
+    assert_eq!(outs[0].finish, FinishReason::Length);
+    assert_eq!(outs[0].tokens, want_low, "preempt + resume changed the low-priority stream");
+    assert!(outs[0].preemptions >= 1, "output must record its preemptions");
+    assert_eq!(outs[1].id, high_id);
+    assert_eq!(outs[1].tokens, want_high, "preemption changed the high-priority stream");
+    assert_eq!(outs[1].preemptions, 0);
+
+    let st = sched.stats();
+    assert!(st.preemptions >= 1);
+    assert!(st.resumes >= 1, "the victim must have been re-admitted");
+    let ps = sched.pool_stats();
+    assert_eq!((ps.in_use, ps.reserved), (0, 0), "preemption cycle leaked pool state");
+}
+
+/// Without a higher-priority arrival (or without an expired deadline)
+/// nothing is preempted: the blocked head defers like any
+/// capacity-bound request.
+#[test]
+fn no_preemption_without_priority_or_deadline() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let mut rng = Pcg::new(151, 8);
+    let opts = ServeOpts { slots: 1, queue_cap: 4, prefill_chunk: 64, ..ServeOpts::default() };
+
+    // Same priority: never preempted, however long it runs.
+    let mut sched = Scheduler::new(&engine, &opts).unwrap();
+    sched.submit(synth_request(&cfg, &mut rng, 2, 8).with_deadline_ticks(1)).unwrap();
+    for _ in 0..3 {
+        sched.tick().unwrap();
+    }
+    sched.submit(synth_request(&cfg, &mut rng, 2, 2)).unwrap();
+    let r = sched.tick().unwrap();
+    assert_eq!((r.preempted, r.admitted), (0, 0), "equal priority must not preempt");
+
+    // Higher priority but no deadline on the resident: not eligible.
+    let mut sched = Scheduler::new(&engine, &opts).unwrap();
+    sched.submit(synth_request(&cfg, &mut rng, 2, 8)).unwrap();
+    for _ in 0..3 {
+        sched.tick().unwrap();
+    }
+    sched.submit(synth_request(&cfg, &mut rng, 2, 2).with_priority(9)).unwrap();
+    let r = sched.tick().unwrap();
+    assert_eq!((r.preempted, r.admitted), (0, 0), "no deadline -> not preemptible");
+    assert!(sched.run_until_idle(10_000).is_ok());
+}
+
+/// Satellite pin: a request whose admission fails is emitted as
+/// [`FinishReason::Error`] — never silently lost — and admission
+/// continues for the rest of the queue.
+#[test]
+fn admission_failure_reports_error_output() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let mut rng = Pcg::new(161, 2);
+    let doomed = synth_request(&cfg, &mut rng, 2, 4);
+    let fine = synth_request(&cfg, &mut rng, 3, 4);
+    let want_fine = oracle_generate(&engine, &fine);
+
+    let opts = ServeOpts { slots: 2, queue_cap: 4, ..ServeOpts::default() };
+    let mut sched = Scheduler::new(&engine, &opts).unwrap();
+    sched.inject_admit_failures(1);
+    let doomed_id = sched.submit(doomed).unwrap();
+    let fine_id = sched.submit(fine).unwrap();
+    let r = sched.tick().unwrap();
+    assert_eq!(r.errors, 1, "failed admission must be reported in the tick");
+    assert_eq!(r.admitted, 1, "admission must continue past the failure");
+
+    let mut outs = sched.run_until_idle(1000).unwrap();
+    outs.sort_by_key(|o| o.id);
+    assert_eq!(outs.len(), 2, "no request may be silently lost");
+    assert_eq!(outs[0].id, doomed_id);
+    assert_eq!(outs[0].finish, FinishReason::Error);
+    assert!(outs[0].tokens.is_empty());
+    assert_eq!(outs[1].id, fine_id);
+    assert_eq!(outs[1].finish, FinishReason::Length);
+    assert_eq!(outs[1].tokens, want_fine);
+    assert_eq!(sched.stats().errors, 1);
+    let ps = sched.pool_stats();
+    assert_eq!((ps.in_use, ps.reserved), (0, 0));
+}
+
+/// The trace generator is a pure function of its spec (seeded), its
+/// arrival ticks are monotone, bad specs are rejected, and an
+/// open-loop Poisson trace drives to completion with every stream
+/// matching the sequential oracle.
+#[test]
+fn trace_generator_is_seeded_and_drives_to_oracle_streams() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let sampling = SamplingParams { temperature: 0.0, top_k: 0, seed: 7 };
+    let spec = LoadSpec {
+        n: 16,
+        arrivals: Arrivals::Pareto { rate: 0.5, alpha: 1.5 },
+        short_prompt: (1, 4),
+        long_prompt: (12, 16),
+        long_frac: 0.3,
+        new_tokens: (1, 4),
+        sampling: sampling.clone(),
+    };
+    let t1 = synth_trace(&cfg, &spec).unwrap();
+    let t2 = synth_trace(&cfg, &spec).unwrap();
+    assert_eq!(t1.len(), 16);
+    for (a, b) in t1.iter().zip(&t2) {
+        assert_eq!(a.at_tick, b.at_tick, "trace must be deterministic");
+        assert_eq!(a.req.prompt, b.req.prompt);
+        assert_eq!(a.req.max_new_tokens, b.req.max_new_tokens);
+    }
+    for w in t1.windows(2) {
+        assert!(w[0].at_tick <= w[1].at_tick, "arrival ticks must be monotone");
+    }
+    for tr in &t1 {
+        assert!((1..=cfg.ctx_len()).contains(&tr.req.prompt.len()));
+        assert!((1..=4).contains(&tr.req.max_new_tokens));
+    }
+
+    let bad_alpha =
+        LoadSpec { arrivals: Arrivals::Pareto { rate: 0.5, alpha: 1.0 }, ..spec.clone() };
+    assert!(synth_trace(&cfg, &bad_alpha).is_err(), "alpha <= 1 has no mean gap");
+    let bad_rate = LoadSpec { arrivals: Arrivals::Poisson { rate: 0.0 }, ..spec.clone() };
+    assert!(synth_trace(&cfg, &bad_rate).is_err(), "rate must be positive");
+
+    // Open-loop drive: arrivals spread over ticks, streams unchanged.
+    let spec = LoadSpec { n: 6, arrivals: Arrivals::Poisson { rate: 0.7 }, ..spec };
+    let trace = synth_trace(&cfg, &spec).unwrap();
+    let expected: Vec<Vec<i32>> =
+        trace.iter().map(|tr| oracle_generate(&engine, &tr.req)).collect();
+    let opts = ServeOpts { slots: 2, queue_cap: 4, ..ServeOpts::default() };
+    let mut sched = Scheduler::new(&engine, &opts).unwrap();
+    drive_trace(&mut sched, &trace, |_| {}).unwrap();
+    let mut outs = sched.drain_finished();
+    outs.sort_by_key(|o| o.id);
+    assert_eq!(outs.len(), trace.len());
+    for (i, o) in outs.iter().enumerate() {
+        assert_eq!(o.finish, FinishReason::Length);
+        assert_eq!(o.tokens, expected[i], "traced request {i} diverged from the oracle");
+    }
 }
