@@ -22,21 +22,28 @@ CLIPPY_ALLOW = -A clippy::needless_range_loop -A clippy::too_many_arguments \
 ## count), and the serve suite re-runs again under PREFILL_CHUNK=1
 ## (scheduler output must be invariant to the prefill chunk size, so
 ## the degenerate one-position-per-tick chunking must pass the same
-## contracts); a 1-thread step_latency smoke keeps the bench harness
-## and its JSON emitter compiling and running; and a 1-thread serve
-## smoke (4 concurrent tiny-sh requests through the continuous-batching
-## scheduler) keeps the serving bench + fused decode path exercised end
-## to end — the smoke itself asserts the TTFT/ITL percentile fields
-## exist in the JSON it emits, and the grep below keeps that contract
-## visible from the Makefile.
+## contracts); the serve + spec suites re-run under SPEC_K=4 at 4
+## threads (speculative streams must stay bit-identical to plain
+## decoding at the default draft width, fused across threads); a
+## 1-thread step_latency smoke keeps the bench harness and its JSON
+## emitter compiling and running; and a 1-thread serve smoke (4
+## concurrent tiny-sh requests through the continuous-batching
+## scheduler, plus the draft-and-verify speculative scenario) keeps the
+## serving bench + fused decode path exercised end to end — the smoke
+## itself asserts the TTFT/ITL and speculation fields exist in the JSON
+## it emits, and the greps below keep that contract visible from the
+## Makefile.
 check:
 	$(CARGO) build --release
 	$(CARGO) test -q
 	PALLAS_THREADS=4 $(CARGO) test -q --test native --test decode --test kv_cache --test serve
 	PREFILL_CHUNK=1 $(CARGO) test -q --test serve
+	SPEC_K=4 PALLAS_THREADS=4 $(CARGO) test -q --test serve --test spec
 	PALLAS_THREADS=1 SWITCHHEAD_BENCH_SMOKE=1 $(CARGO) bench --bench step_latency
 	PALLAS_THREADS=1 SWITCHHEAD_BENCH_SMOKE=1 $(CARGO) bench --bench serve_throughput
 	grep -q ttft_p99_ms target/BENCH_serve_throughput.smoke.json
+	grep -q acceptance_rate target/BENCH_serve_throughput.smoke.json
+	grep -q scheduler_overhead target/BENCH_serve_throughput.smoke.json
 	$(MAKE) lint
 	$(MAKE) doc
 

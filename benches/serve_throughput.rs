@@ -19,7 +19,15 @@
 //!
 //! Both paths must produce identical token streams (asserted — greedy
 //! decoding plus the bit-identical fused step make this exact), so the
-//! comparison is pure execution strategy. A separate **head-of-line**
+//! comparison is pure execution strategy. A **spec** scenario runs the
+//! same traffic through a draft-and-verify scheduler
+//! (`Scheduler::with_draft`, 1-layer draft from
+//! `configs/tiny-sh-draft.json`, width `SPEC_K`): streams are asserted
+//! identical to serial again, and the JSON reports the acceptance
+//! rate, the draft/step/overhead time split, the scheduler's
+//! `scheduler_overhead` op tally, and the measured **break-even
+//! acceptance** — the rate above which speculation beats plain fused
+//! decoding at this draft/target cost ratio. A separate **head-of-line**
 //! scenario pins what chunked prefill buys: short decoding requests
 //! co-resident with one ctx-length prompt, run with a small
 //! `prefill_chunk` vs a monolithic one — per-tick prefill work is
@@ -42,7 +50,8 @@ use switchhead::kernels;
 use switchhead::model::{NativeEngine, PoolStats};
 use switchhead::runtime::{Backend, Session, TokenBatch};
 use switchhead::serve::{
-    drive, synth_requests, GenRequest, SamplingParams, Scheduler, ServeOpts, SAMPLE_STREAM,
+    drive, synth_requests, GenRequest, SamplingParams, Scheduler, ServeOpts, ServeStats,
+    SAMPLE_STREAM,
 };
 use switchhead::util::json::Json;
 use switchhead::util::rng::Pcg;
@@ -104,7 +113,7 @@ fn run_batched(
     engine: &NativeEngine,
     reqs: &[GenRequest],
     slots: usize,
-) -> (RunResult, PoolStats) {
+) -> (RunResult, PoolStats, ServeStats) {
     let opts = ServeOpts { slots, queue_cap: reqs.len().max(1), ..ServeOpts::default() };
     let mut sched = Scheduler::new(engine, &opts).unwrap();
     let t0 = Instant::now();
@@ -120,9 +129,10 @@ fn run_batched(
     .unwrap();
     let secs = t0.elapsed().as_secs_f64();
     let pool = sched.pool_stats();
+    let stats = sched.stats().clone();
     let mut outs = sched.drain_finished();
     outs.sort_by_key(|o| o.id);
-    let total_tokens = sched.stats().total_tokens as usize;
+    let total_tokens = stats.total_tokens as usize;
     let ttft_ms: Vec<f64> = outs.iter().filter_map(|o| o.ttft_s.map(|t| t * 1000.0)).collect();
     let result = RunResult {
         token_streams: outs.into_iter().map(|o| o.tokens).collect(),
@@ -131,7 +141,84 @@ fn run_batched(
         lat_ms,
         ttft_ms,
     };
-    (result, pool)
+    (result, pool, stats)
+}
+
+/// Draft-and-verify speculative scenario: the same traffic through
+/// [`Scheduler::with_draft`] with the stock 1-layer draft model
+/// (`configs/tiny-sh-draft.json`). Streams are asserted identical to
+/// the serial oracle — the sample-and-match accept walk is exact — so
+/// the only thing speculation may change is cost per emitted token.
+/// Returns the table row's RunResult plus a JSON blob with the
+/// acceptance rate, the per-phase time split, the scheduler-overhead
+/// op tally, and the measured break-even acceptance. `None` when the
+/// draft config is missing or incompatible with this target (the
+/// shared-pool contract needs equal vocab and d_head).
+fn run_spec(
+    engine: &NativeEngine,
+    cfg: &ModelConfig,
+    reqs: &[GenRequest],
+    slots: usize,
+    serial: &RunResult,
+    plain: &ServeStats,
+) -> Option<(RunResult, Json)> {
+    let draft_cfg = match ModelConfig::load("configs/tiny-sh-draft.json") {
+        Ok(c) => c,
+        Err(e) => {
+            println!("SKIP spec scenario: {e:#}");
+            return None;
+        }
+    };
+    if draft_cfg.vocab_size != cfg.vocab_size || draft_cfg.d_head != cfg.d_head {
+        return None;
+    }
+    let draft = NativeEngine::new(&draft_cfg, 43).unwrap();
+    let opts = ServeOpts { slots, queue_cap: reqs.len().max(1), ..ServeOpts::default() };
+    let mut sched = Scheduler::with_draft(engine, &draft, &opts).unwrap();
+    let k = sched.spec_k();
+    let t0 = Instant::now();
+    let mut lat_ms = Vec::new();
+    drive(&mut sched, reqs.to_vec(), |report| {
+        for _ in 0..report.tokens {
+            lat_ms.push(report.decode_seconds * 1000.0);
+        }
+    })
+    .unwrap();
+    let secs = t0.elapsed().as_secs_f64();
+    let overhead_ops = sched.overhead_macs().scheduler_overhead;
+    let st = sched.stats().clone();
+    let mut outs = sched.drain_finished();
+    outs.sort_by_key(|o| o.id);
+    let ttft_ms: Vec<f64> = outs.iter().filter_map(|o| o.ttft_s.map(|t| t * 1000.0)).collect();
+    let streams: Vec<Vec<i32>> = outs.into_iter().map(|o| o.tokens).collect();
+    assert_eq!(
+        serial.token_streams, streams,
+        "speculative decode diverged from the serial loop"
+    );
+    // Break-even: one verify cycle costs draft + verify wall time and
+    // emits `1 + acceptance * k` tokens where a plain step emits one —
+    // speculation pays off when acceptance exceeds
+    // ((cycle / plain_step) - 1) / k. Both sides are whole-run
+    // per-token averages (prefill work included in both), so this is
+    // an aggregate estimate, not a per-tick microbenchmark.
+    let cycles = (st.drafted as f64 / k.max(1) as f64).max(1.0);
+    let cycle_s = (st.draft_seconds + st.step_seconds) / cycles;
+    let plain_step_s = plain.step_seconds / plain.decode_tokens.max(1) as f64;
+    let breakeven = (cycle_s / plain_step_s.max(1e-12) - 1.0) / k.max(1) as f64;
+    let total_tokens = st.total_tokens as usize;
+    let json = Json::from_pairs(vec![
+        ("spec_k", num(k as f64)),
+        ("drafted", num(st.drafted as f64)),
+        ("accepted", num(st.accepted as f64)),
+        ("acceptance_rate", num(st.acceptance_rate())),
+        ("breakeven_acceptance", num(breakeven)),
+        ("spec_tok_s", num(total_tokens as f64 / secs.max(1e-9))),
+        ("draft_seconds", num(st.draft_seconds)),
+        ("step_seconds", num(st.step_seconds)),
+        ("overhead_seconds", num(st.overhead_seconds)),
+        ("scheduler_overhead", num(overhead_ops)),
+    ]);
+    Some((RunResult { token_streams: streams, total_tokens, secs, lat_ms, ttft_ms }, json))
 }
 
 /// Head-of-line scenario: short decoding requests co-resident with one
@@ -141,7 +228,7 @@ fn run_batched(
 /// sampled at least one token (the short requests' experience).
 fn run_hol(engine: &NativeEngine, cfg: &ModelConfig, chunk: usize) -> (usize, f64, f64) {
     let ctx = cfg.ctx_len();
-    let sampling = SamplingParams { temperature: 0.0, top_k: 0, seed: 11 };
+    let sampling = SamplingParams { temperature: 0.0, top_k: 0, seed: 11, eos_token: None };
     // Three short prompts decoding long enough to overlap the long
     // prompt's whole prefill, plus the stressor: a full-window prompt.
     let mut reqs = synth_requests(cfg, 3, 2, ctx.max(16), &sampling);
@@ -208,15 +295,18 @@ fn bench_one(
         return None;
     }
     let engine = NativeEngine::new(&cfg, 42).unwrap();
-    let sampling = SamplingParams { temperature: 0.0, top_k: 0, seed: 5 };
+    let sampling = SamplingParams { temperature: 0.0, top_k: 0, seed: 5, eos_token: None };
     let reqs = synth_requests(&cfg, requests, (cfg.seq_len / 2).max(1), tokens, &sampling);
 
     let serial = run_serial(&engine, &reqs);
-    let (batched, pool) = run_batched(&engine, &reqs, slots);
+    let (batched, pool, batched_stats) = run_batched(&engine, &reqs, slots);
     assert_eq!(
         serial.token_streams, batched.token_streams,
         "{name}: batched decode diverged from the serial loop"
     );
+
+    // Speculative decoding: same traffic, draft-and-verify scheduler.
+    let spec = run_spec(&engine, &cfg, &reqs, slots, &serial, &batched_stats);
 
     // Head-of-line interference: a ctx-length prompt next to short
     // decoders, chunked (bounded per-tick prefill) vs monolithic
@@ -261,7 +351,10 @@ fn bench_one(
     };
     table.push(row("serial", &serial, serial_tok_s));
     table.push(row("batched", &batched, batched_tok_s));
-    Some(Json::from_pairs(vec![
+    if let Some((r, _)) = &spec {
+        table.push(row("spec", r, r.total_tokens as f64 / r.secs.max(1e-9)));
+    }
+    let mut pairs = vec![
         ("config", str_(name)),
         ("requests", num(requests as f64)),
         ("slots", num(slots as f64)),
@@ -298,7 +391,11 @@ fn bench_one(
         ("paged_peak_kv_floats", num(paged_peak_kv_floats as f64)),
         ("ring_kv_floats", num(ring_kv_floats as f64)),
         ("paged_over_ring_kv", num(kv_ratio)),
-    ]))
+    ];
+    if let Some((_, sj)) = spec {
+        pairs.push(("spec", sj));
+    }
+    Some(Json::from_pairs(pairs))
 }
 
 fn main() {
@@ -357,6 +454,9 @@ fn main() {
             "batched_ttft_p99_ms",
             "batched_itl_p99_ms",
             "chunked_max_prefill_positions",
+            "acceptance_rate",
+            "breakeven_acceptance",
+            "scheduler_overhead",
         ] {
             assert!(text.contains(key), "smoke JSON is missing the `{key}` field");
         }

@@ -37,6 +37,13 @@ impl Default for SampleOpts {
 /// Sample one id from logits with temperature + top-k truncation.
 /// NaN logits are treated as -inf (never sampled, never a panic).
 ///
+/// Greedy mode (`temperature <= 1e-6`) consumes NO RNG draw — a
+/// load-bearing contract for speculative decoding: the draft engine
+/// proposes greedily through a scratch RNG it never advances, and the
+/// verify walk (`spec::accept_tokens`) replays exactly the draws a
+/// sequential decode would have made, keeping emitted streams
+/// bit-identical to non-speculative decoding in every sampling mode.
+///
 /// Degenerate candidate sets are deterministic: when the running max
 /// over the (post-top-k) candidates is not finite — every candidate
 /// NaN/-inf, or a +inf present — the softmax weights would all be
@@ -202,6 +209,20 @@ mod tests {
         let all_nan = vec![f32::NAN; 4];
         let id = sample_logits(&all_nan, 1.0, 0, &mut rng);
         assert!(id < 4);
+    }
+
+    #[test]
+    fn greedy_consumes_no_rng_draw() {
+        // Pinned contract for speculative decoding: a greedy call must
+        // leave the RNG untouched, so draft proposals (greedy through
+        // a scratch RNG) never perturb the request's sampling stream.
+        let mut rng = Pcg::new(11, 11);
+        let before = rng.clone().below(1 << 30);
+        let logits = vec![0.25, -1.0, 7.5, 0.0];
+        for _ in 0..8 {
+            assert_eq!(sample_logits(&logits, 0.0, 0, &mut rng), 2);
+        }
+        assert_eq!(rng.below(1 << 30), before, "greedy must not advance the RNG");
     }
 
     #[test]

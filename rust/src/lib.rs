@@ -34,7 +34,12 @@
 //! ([`model::decode_batched`]), so the expert-grouped dispatch runs
 //! over the union of (session, head, expert) selections instead of
 //! single-token batches — with admission capacity-aware over the
-//! shared KV page pool. `docs/ARCHITECTURE.md` is the end-to-end tour.
+//! shared KV page pool. [`spec`] adds draft-and-verify speculative
+//! decoding on the same fused path: a tiny draft model proposes k
+//! tokens per session, one width-(k+1) fused verify step checks them
+//! all, and the accept walk keeps emitted streams bit-identical to
+//! non-speculative decoding. `docs/ARCHITECTURE.md` is the end-to-end
+//! tour.
 //!
 //! # Artifact-free test tier
 //!
@@ -67,6 +72,7 @@ pub mod macs;
 pub mod model;
 pub mod runtime;
 pub mod serve;
+pub mod spec;
 pub mod util;
 
 /// Repo-relative default locations (overridable via CLI flags).

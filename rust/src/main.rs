@@ -53,6 +53,8 @@ commands:
                 [--prefill-chunk C] [--arrivals batch|poisson|pareto]
                 [--rate R] [--alpha A] [--long-frac F]
                 [--temperature T] [--top-k K] [--seed S] [--init-seed S]
+                [--spec-config <json>] [--spec-k K] [--eos-token T]
+                [--stream]
                 (native backend only; --slots caps the fused batch width,
                  but admission is also capacity-aware over the paged KV
                  pool: --kv-page sets positions per page, --kv-pages the
@@ -63,7 +65,14 @@ commands:
                  co-resident requests; --arrivals poisson|pareto replays
                  a seeded open-loop trace at --rate requests/tick with a
                  --long-frac share of long prompts; prints TTFT and
-                 inter-token p50/p95/p99)
+                 inter-token p50/p95/p99. --spec-config enables
+                 speculative decoding: a small draft model proposes
+                 --spec-k tokens per tick (or the SPEC_K env), verified
+                 in one fused step — streams stay bit-identical, the
+                 summary adds acceptance rate and the draft/verify/
+                 overhead time split. --eos-token stops a request early
+                 when it samples that id; --stream prints tokens as
+                 they are accepted)
   bench-tables  [--table 1|2|3|4|5|6|7|all] [--artifacts DIR] [--quick]
 
 backends: `pjrt` (default) replays `make artifacts` bundles and loads the
@@ -86,7 +95,7 @@ fn main() -> Result<()> {
         eprint!("{USAGE}");
         std::process::exit(2);
     };
-    let args = Args::parse(&argv[1..], &["quiet", "induction", "quick"])?;
+    let args = Args::parse(&argv[1..], &["quiet", "induction", "quick", "stream"])?;
     match cmd.as_str() {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
@@ -448,9 +457,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
         temperature: args.f64_or("temperature", 0.0)?,
         top_k: args.usize_or("top-k", 0)?,
         seed: args.u64_or("seed", 0)?,
+        eos_token: args.usize_opt("eos-token")?.map(|t| t as i32),
     };
 
-    let mut sched = Scheduler::new(&engine, &opts)?;
+    // Speculative decoding: the draft engine is caller-owned (it must
+    // outlive the scheduler), so build it before the scheduler.
+    if let Some(k) = args.usize_opt("spec-k")? {
+        opts.spec_k = k;
+    }
+    let draft_engine = match args.get("spec-config") {
+        Some(path) => {
+            let dcfg = ModelConfig::load(path)?;
+            Some(NativeEngine::new(&dcfg, args.u64_or("init-seed", 42)?)?)
+        }
+        None => None,
+    };
+    let mut sched = match &draft_engine {
+        Some(d) => Scheduler::with_draft(&engine, d, &opts)?,
+        None => Scheduler::new(&engine, &opts)?,
+    };
+    if args.flag("stream") {
+        // Per-tick accepted tokens, in stream order — the serving
+        // analogue of watching `generate` print as it samples.
+        sched.set_on_tokens(|id, toks| println!("[req {id}] += {toks:?}"));
+    }
     // Inter-token latency samples: a tick's fused-step wall time, once
     // per token it sampled (what a batched token actually waited).
     let mut itl = Vec::new();
@@ -505,6 +535,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             o.tokens.len().to_string(),
             match o.finish {
                 FinishReason::Length => "length".into(),
+                FinishReason::Eos => "eos".into(),
                 FinishReason::Cancelled => "cancelled".into(),
                 FinishReason::Error => "error".into(),
             },
@@ -551,6 +582,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ps.peak_floats(),
         st.deferrals,
     ));
+    if sched.spec_k() > 0 {
+        info(&format!(
+            "speculative: k={}, {} drafted / {} accepted ({:.0}% acceptance), \
+             draft {:.3}s + fused step {:.3}s + scheduler overhead {:.3}s \
+             ({:.0} overhead ops)",
+            sched.spec_k(),
+            st.drafted,
+            st.accepted,
+            100.0 * st.acceptance_rate(),
+            st.draft_seconds,
+            st.step_seconds,
+            st.overhead_seconds,
+            sched.overhead_macs().scheduler_overhead,
+        ));
+    }
     Ok(())
 }
 

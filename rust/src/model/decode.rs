@@ -63,7 +63,7 @@ use crate::config::{ModelConfig, Positional, Task};
 use crate::kernels::{matmul_into, moe_matmul_banks_into, par_rows_mut, scratch};
 use crate::model::attention::proj;
 use crate::model::block::mlp_apply;
-use crate::model::kv_cache::{stream_pages, Kv, KvPool};
+use crate::model::kv_cache::{stream_pages, stream_pages_spec, Kv, KvPool};
 use crate::model::params::{AttnP, DenseP, MoaP, NativeModel, Proj, SwitchHeadP, XlP};
 use crate::model::tensor::{
     layer_norm, matmul, moe_matmul, rope_rotate, route, sinusoidal_row, softmax_rows, MacCounter,
@@ -121,8 +121,30 @@ impl<'m> NativeSession<'m> {
         pool: &KvPool,
         max_positions: Option<usize>,
     ) -> usize {
+        Self::pool_demand_spec(cfg, rows, pool, max_positions, 0)
+    }
+
+    /// [`pool_demand`](NativeSession::pool_demand) for a session opened
+    /// with a speculative eviction lag ([`open_in_pool_spec`]): the
+    /// per-stream bound widens to [`stream_pages_spec`], covering both
+    /// the up-to-`evict_lag`-position overshoot a verify step pushes
+    /// before rollback and the pages lagged eviction keeps alive.
+    /// `evict_lag == 0` is exactly `pool_demand`. Like `pool_demand`,
+    /// this is THE formula for speculative sessions — admission gates
+    /// must call it, not re-derive it.
+    ///
+    /// [`open_in_pool_spec`]: NativeSession::open_in_pool_spec
+    pub fn pool_demand_spec(
+        cfg: &ModelConfig,
+        rows: usize,
+        pool: &KvPool,
+        max_positions: Option<usize>,
+        evict_lag: usize,
+    ) -> usize {
         let positions = max_positions.unwrap_or(usize::MAX).max(1);
-        rows * cfg.n_layers * cfg.kv_streams() * pool.stream_pages(cfg.ctx_len(), positions)
+        rows * cfg.n_layers
+            * cfg.kv_streams()
+            * stream_pages_spec(pool.page_cols(), cfg.ctx_len(), positions, evict_lag)
     }
 
     /// Open a session with a private page pool sized to its own
@@ -160,6 +182,25 @@ impl<'m> NativeSession<'m> {
         pool: &KvPool,
         max_positions: Option<usize>,
     ) -> Result<NativeSession<'m>> {
+        Self::open_in_pool_spec(model, rows, pool, max_positions, 0)
+    }
+
+    /// [`open_in_pool`](NativeSession::open_in_pool) with a speculative
+    /// eviction lag: every K/V stream keeps window eviction `evict_lag`
+    /// positions behind the newest push ([`Kv::set_evict_lag`]), so the
+    /// session supports [`rollback_to`](NativeSession::rollback_to) of
+    /// up to `evict_lag` positions at any time — the contract a
+    /// draft-and-verify decode loop needs. Reserves the matching
+    /// [`pool_demand_spec`](NativeSession::pool_demand_spec); the
+    /// position budget still bounds the COMMITTED stream (rolled-back
+    /// overshoot does not consume budget, and the lag prices it).
+    pub fn open_in_pool_spec(
+        model: &'m NativeModel,
+        rows: usize,
+        pool: &KvPool,
+        max_positions: Option<usize>,
+        evict_lag: usize,
+    ) -> Result<NativeSession<'m>> {
         let cfg = &model.cfg;
         if cfg.task != Task::Lm {
             bail!("decoding sessions require an LM config");
@@ -173,7 +214,7 @@ impl<'m> NativeSession<'m> {
         let cap = cfg.ctx_len();
         let tc = if cfg.pos == Positional::Xl { cfg.seq_len } else { 0 };
         let n_kv = cfg.kv_streams();
-        let demand = Self::pool_demand(cfg, rows, pool, max_positions);
+        let demand = Self::pool_demand_spec(cfg, rows, pool, max_positions, evict_lag);
         if !pool.try_reserve(demand) {
             let st = pool.stats();
             bail!(
@@ -185,7 +226,13 @@ impl<'m> NativeSession<'m> {
         }
         let layers = (0..cfg.n_layers)
             .map(|_| LayerState {
-                kv: (0..n_kv).map(|_| Kv::new(pool, rows, cap)).collect(),
+                kv: (0..n_kv)
+                    .map(|_| {
+                        let mut kv = Kv::new(pool, rows, cap);
+                        kv.set_evict_lag(evict_lag);
+                        kv
+                    })
+                    .collect(),
                 r: vec![Vec::new(); n_kv],
             })
             .collect();
@@ -200,6 +247,29 @@ impl<'m> NativeSession<'m> {
             layers,
             macs: MacCounter::default(),
         })
+    }
+
+    /// Roll the session back so `pos` positions are committed,
+    /// discarding the K/V of every later pushed position (their pages
+    /// return to the pool via [`Kv::truncate_to`]). The speculative
+    /// accept step pushes `k + 1` verify positions and then commits
+    /// only the accepted prefix; the discarded distance must stay
+    /// within the `evict_lag` the session was opened with
+    /// ([`open_in_pool_spec`](NativeSession::open_in_pool_spec)), which
+    /// guarantees the post-rollback attention window is still resident.
+    /// MAC counters are NOT rolled back — rejected verify work was
+    /// real compute and stays tallied.
+    pub fn rollback_to(&mut self, pos: usize) {
+        assert!(pos <= self.pos, "rollback_to({pos}) past the stream end ({})", self.pos);
+        if pos == self.pos {
+            return;
+        }
+        for st in self.layers.iter_mut() {
+            for kv in st.kv.iter_mut() {
+                kv.truncate_to(pos);
+            }
+        }
+        self.pos = pos;
     }
 
     /// Run the block stack over a `[rows, tn]` chunk against the cached
@@ -602,12 +672,45 @@ pub fn step_batched(
     tokens: &[i32],
     widths: &[usize],
 ) -> Result<Vec<Logits>> {
+    step_batched_impl(sessions, tokens, widths, None)
+}
+
+/// [`step_batched`] that can return EVERY fed position's logits for
+/// selected sessions instead of only the last one — the speculative
+/// verify entry. For a session with `keep_all[i]` set, the returned
+/// [`Logits`] holds `rows * widths[i]` rows in row-major
+/// `[rows, width]` order: row `bi * width + j` is the next-token
+/// distribution after that row consumed its chunk's first `j + 1`
+/// tokens, bit-identical to what `j + 1` narrower sequential steps
+/// would have produced (the final norm + vocab head are per-row ops,
+/// so widening the gather changes which rows are kept, never their
+/// values). Sessions with `keep_all[i]` unset behave exactly as in
+/// [`step_batched`].
+pub fn step_batched_full(
+    sessions: &mut [&mut NativeSession<'_>],
+    tokens: &[i32],
+    widths: &[usize],
+    keep_all: &[bool],
+) -> Result<Vec<Logits>> {
+    if keep_all.len() != sessions.len() {
+        bail!("step_batched_full: {} keep flags for {} sessions", keep_all.len(), sessions.len());
+    }
+    step_batched_impl(sessions, tokens, widths, Some(keep_all))
+}
+
+fn step_batched_impl(
+    sessions: &mut [&mut NativeSession<'_>],
+    tokens: &[i32],
+    widths: &[usize],
+    keep_all: Option<&[bool]>,
+) -> Result<Vec<Logits>> {
     let Some(first) = sessions.first() else {
         bail!("step_batched: no sessions");
     };
     if widths.len() != sessions.len() {
         bail!("step_batched: {} widths for {} sessions", widths.len(), sessions.len());
     }
+    let keep = |si: usize| keep_all.is_some_and(|ks| ks[si]);
     let model: &NativeModel = first.model;
     let cfg = &model.cfg;
     // Token-row offset of each session's block in the fused batch.
@@ -679,16 +782,32 @@ pub fn step_batched(
     // Gather each row's last fed position — exactly what the sequential
     // chunk path keeps — then run the final norm + head over the
     // gathered rows only. (With all widths 1 the gather is the
-    // identity, so fused decode's bits are unchanged.)
-    let out_rows: usize = sessions.iter().map(|s| s.rows).sum();
+    // identity, so fused decode's bits are unchanged.) Keep-all
+    // sessions instead keep every fed position, in the chunk's
+    // row-major `[rows, width]` order — the speculative verify needs
+    // the next-token distribution after every drafted prefix, and
+    // since ln_f and the vocab head are per-row ops the extra rows are
+    // bit-identical to the narrower sequential steps they stand for.
+    let out_rows: usize = sessions
+        .iter()
+        .enumerate()
+        .map(|(si, s)| s.rows * if keep(si) { widths[si] } else { 1 })
+        .sum();
     let mut last = scratch::take(out_rows * d);
     let mut lr = 0usize;
     for (si, s) in sessions.iter().enumerate() {
         let w = widths[si];
-        for bi in 0..s.rows {
-            let from = (offsets[si] + bi * w + w - 1) * d;
-            last[lr * d..(lr + 1) * d].copy_from_slice(&x[from..from + d]);
-            lr += 1;
+        if keep(si) {
+            let from = offsets[si] * d;
+            let span = s.rows * w;
+            last[lr * d..(lr + span) * d].copy_from_slice(&x[from..from + span * d]);
+            lr += span;
+        } else {
+            for bi in 0..s.rows {
+                let from = (offsets[si] + bi * w + w - 1) * d;
+                last[lr * d..(lr + 1) * d].copy_from_slice(&x[from..from + d]);
+                lr += 1;
+            }
         }
     }
     scratch::put(x);
@@ -704,9 +823,10 @@ pub fn step_batched(
         let w = widths[si];
         s.macs.add_scaled(&step, (s.rows * w) as f64, n as f64);
         s.pos += w;
+        let kept = s.rows * if keep(si) { w } else { 1 };
         let from = row_off * n_out;
-        out.push(Logits::new(logits[from..from + s.rows * n_out].to_vec(), s.rows, n_out)?);
-        row_off += s.rows;
+        out.push(Logits::new(logits[from..from + kept * n_out].to_vec(), kept, n_out)?);
+        row_off += kept;
     }
     scratch::put(logits);
     Ok(out)

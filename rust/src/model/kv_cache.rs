@@ -82,6 +82,31 @@ pub fn stream_pages(page_cols: usize, cap: usize, positions: usize) -> usize {
     grow.min(windowed)
 }
 
+/// [`stream_pages`] for a stream whose eviction trails the window by
+/// `evict_lag` positions ([`Kv::set_evict_lag`] — the speculative
+/// decoding mode, where the last ≤ `evict_lag` pushed positions must
+/// stay rollback-safe). The lag widens the live span by at most
+/// `evict_lag` positions, which costs at most
+/// `ceil(evict_lag / page_cols) + 1` extra pages over the eager bound
+/// (`ceil(a/pc) + ceil(b/pc) >= ceil((a+b)/pc)`, plus one page of
+/// boundary slop); rollback re-pushes never raise the maximum position
+/// reached, so the grow-phase arm needs only `positions + evict_lag`.
+/// A safe (slightly over-) estimate — admission reserves through it,
+/// so over is the sound direction.
+pub fn stream_pages_spec(
+    page_cols: usize,
+    cap: usize,
+    positions: usize,
+    evict_lag: usize,
+) -> usize {
+    let base = stream_pages(page_cols, cap, positions.saturating_add(evict_lag));
+    if evict_lag == 0 {
+        base
+    } else {
+        base + (evict_lag + page_cols - 1) / page_cols + 1
+    }
+}
+
 /// Immutable pool geometry, shared by every handle clone.
 #[derive(Debug, Clone, Copy)]
 struct Geom {
@@ -285,6 +310,9 @@ pub struct Kv {
     pool: KvPool,
     cap: usize,
     rows: usize,
+    /// Window eviction trails the newest position by this many extra
+    /// positions (0 = eager). See [`Kv::set_evict_lag`].
+    evict_lag: usize,
     streams: Vec<Stream>,
 }
 
@@ -295,12 +323,28 @@ impl Kv {
             pool: pool.clone(),
             cap,
             rows,
+            evict_lag: 0,
             streams: (0..rows).map(|_| Stream { first_lp: 0, pages: VecDeque::new() }).collect(),
         }
     }
 
+    /// Speculative-decoding mode: keep window eviction `lag` positions
+    /// behind the newest push. A verify step pushes up to `lag`
+    /// positions past the committed stream and may then
+    /// [`truncate_to`](Kv::truncate_to) the rejected suffix; with eager
+    /// eviction those pushes could free pages the post-rollback window
+    /// still needs. Lagged eviction guarantees any rollback of at most
+    /// `lag` positions leaves the full attention window resident, at a
+    /// bounded page cost priced by [`stream_pages_spec`]. Reads are
+    /// unaffected (the attention core never looks below its window);
+    /// stale pages are reclaimed by later pushes' slide loop.
+    pub fn set_evict_lag(&mut self, lag: usize) {
+        self.evict_lag = lag;
+    }
+
     /// Store a chunk's `[rows, tn, dh]` K/V projections at positions
-    /// `pos0 .. pos0 + tn` (strictly increasing across calls). Pages
+    /// `pos0 .. pos0 + tn` (consecutive across calls, except where a
+    /// [`truncate_to`](Kv::truncate_to) rollback rewinds them). Pages
     /// that the post-write attention window no longer covers are freed
     /// back to the pool before the new position's page is allocated,
     /// so a same-stream slide can recycle its own page and the pool
@@ -319,8 +363,9 @@ impl Kv {
             for ci in 0..tn {
                 let p = pos0 + ci;
                 // Slide the window: drop pages fully below the low
-                // edge after this write lands.
-                let lo = (p + 1).saturating_sub(cap);
+                // edge after this write lands (lag positions behind in
+                // speculative mode, so rollbacks stay window-safe).
+                let lo = (p + 1).saturating_sub(cap + self.evict_lag);
                 while !st.pages.is_empty() && (st.first_lp + 1) * pc <= lo {
                     let pid = st.pages.pop_front().expect("non-empty page table");
                     inner.free(pid);
@@ -350,6 +395,28 @@ impl Kv {
                 let src = (bi * tn + ci) * dh;
                 inner.k[dst..dst + dh].copy_from_slice(&kh[src..src + dh]);
                 inner.v[dst..dst + dh].copy_from_slice(&vh[src..src + dh]);
+            }
+        }
+    }
+
+    /// Roll the stream back so `len` positions (`0..len`) remain
+    /// committed: every page whose span lies entirely at positions
+    /// `>= len` is freed back to the pool. A page straddling `len`
+    /// stays (its live prefix is still addressable); its stale suffix
+    /// columns are simply overwritten when pushes resume at `len`.
+    /// This is the speculative-decode rollback — the caller must only
+    /// truncate positions it has not let eviction reach, i.e. at most
+    /// the configured [`evict lag`](Kv::set_evict_lag) behind the
+    /// newest push.
+    pub fn truncate_to(&mut self, len: usize) {
+        let pc = self.pool.page_cols();
+        // First logical page fully at positions >= len.
+        let keep_lp = (len + pc - 1) / pc;
+        let mut inner = self.pool.lock();
+        for st in self.streams.iter_mut() {
+            while st.first_lp + st.pages.len() > keep_lp {
+                let pid = st.pages.pop_back().expect("non-empty page table");
+                inner.free(pid);
             }
         }
     }
@@ -525,6 +592,103 @@ mod tests {
                 let src = (bi * 3 + ci) * dh;
                 assert_eq!(&ks[at..at + dh], &kh[src..src + dh], "row {bi} pos {ci}");
             }
+        }
+    }
+
+    #[test]
+    fn stream_pages_spec_dominates_eager_bound() {
+        for &pc in &[1usize, 3, 4, 16] {
+            for &cap in &[1usize, 4, 16, 64] {
+                for &lag in &[0usize, 1, 2, 5, 9] {
+                    for &pos in &[1usize, 3, 17, usize::MAX] {
+                        let spec = stream_pages_spec(pc, cap, pos, lag);
+                        assert!(
+                            spec >= stream_pages(pc, cap, pos),
+                            "pc={pc} cap={cap} lag={lag} pos={pos}"
+                        );
+                        // The analytical worst case under lagged
+                        // eviction: a span of cap + lag live positions
+                        // plus one page of boundary slop each side.
+                        let span = cap + lag;
+                        let worst = (span + pc - 1) / pc + 1;
+                        assert!(spec >= worst.min(stream_pages_spec(pc, cap, usize::MAX, lag)));
+                    }
+                }
+            }
+        }
+        assert_eq!(stream_pages_spec(4, 16, usize::MAX, 0), stream_pages(4, 16, usize::MAX));
+    }
+
+    /// The speculative rollback satellite: interleave push / truncate /
+    /// push across page boundaries at several page widths and check
+    /// that (a) every committed column stays readable and exact,
+    /// (b) freed tail pages actually return to the pool, and (c) the
+    /// stream never exceeds its [`stream_pages_spec`] reservation.
+    #[test]
+    fn truncate_to_returns_pages_and_preserves_columns() {
+        for &pc in &[1usize, 3, 16] {
+            let (dh, cap, lag) = (2usize, 8usize, 5usize);
+            let pool = KvPool::new(pc, dh, 64).unwrap();
+            let mut kv = Kv::new(&pool, 1, cap);
+            kv.set_evict_lag(lag);
+            let col = |p: usize, ver: usize, neg: bool| -> Vec<f32> {
+                (0..dh)
+                    .map(|j| (p * 100 + ver * 10 + j) as f32 * if neg { -1.0 } else { 1.0 })
+                    .collect()
+            };
+            // committed[p] = version written at position p, for live checks.
+            let mut committed: Vec<usize> = Vec::new();
+            let mut push_at = |kv: &mut Kv, committed: &mut Vec<usize>, p: usize, ver: usize| {
+                kv.push(&col(p, ver, false), &col(p, ver, true), 1, p);
+                committed.truncate(p);
+                committed.push(ver);
+            };
+            let check = |kv: &Kv, committed: &[usize]| {
+                let last = committed.len() - 1;
+                let lo = committed.len().saturating_sub(cap);
+                let view = kv.read();
+                let (ks, vs) = view.slices();
+                for q in lo..=last {
+                    let at = kv.locate(0, q);
+                    assert_eq!(&ks[at..at + dh], col(q, committed[q], false).as_slice());
+                    assert_eq!(&vs[at..at + dh], col(q, committed[q], true).as_slice());
+                }
+            };
+            // Grow to 7, roll back to 4 (crosses a page boundary at
+            // every pc in {1, 3, 16}), regrow with fresh values, then
+            // push far enough that the lagged window slides.
+            for p in 0..7 {
+                push_at(&mut kv, &mut committed, p, 1);
+            }
+            check(&kv, &committed);
+            let held_before = kv.pages_held();
+            kv.truncate_to(4);
+            committed.truncate(4);
+            let freed = held_before - kv.pages_held();
+            assert_eq!(freed, held_before - (4 + pc - 1) / pc, "pc={pc} tail pages freed");
+            assert!(pool.stats().free_pages >= freed, "freed pages must hit the free list");
+            check(&kv, &committed);
+            for p in 4..9 {
+                push_at(&mut kv, &mut committed, p, 2);
+            }
+            check(&kv, &committed);
+            // Second rollback inside the same page, then a long run:
+            // the lagged stream must stay within its spec reservation.
+            kv.truncate_to(7);
+            committed.truncate(7);
+            for p in 7..40 {
+                push_at(&mut kv, &mut committed, p, 3);
+                assert!(
+                    kv.pages_held() <= stream_pages_spec(pc, cap, usize::MAX, lag),
+                    "pc={pc} p={p} held {} over spec bound",
+                    kv.pages_held()
+                );
+                check(&kv, &committed);
+            }
+            drop(kv);
+            let st = pool.stats();
+            assert_eq!(st.in_use, 0, "pc={pc} drop must return everything");
+            assert_eq!(st.free_pages, st.materialized);
         }
     }
 

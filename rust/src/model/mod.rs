@@ -55,7 +55,7 @@ pub mod kv_cache;
 pub mod params;
 pub mod tensor;
 
-pub use decode::{decode_batched, step_batched, NativeSession};
+pub use decode::{decode_batched, step_batched, step_batched_full, NativeSession};
 pub use engine::NativeEngine;
 pub use kv_cache::{KvPool, PoolStats};
 pub use params::NativeModel;

@@ -34,19 +34,35 @@ pub struct MacCounter {
     pub pos: f64,
     /// Feedforward layer (dense or sigma-MoE) — outside Eq. 11-15.
     pub mlp: f64,
+    /// Serving-layer bookkeeping OUTSIDE the model forward: sampling
+    /// scans, speculative accept walks, queue/admission arithmetic.
+    /// Tallied in scalar ops (not true MACs) by `serve::Scheduler` so
+    /// `bench-serve` can split model cost from scheduler overhead;
+    /// never touched by model code, and excluded from
+    /// [`attention_total`](MacCounter::attention_total).
+    pub scheduler_overhead: f64,
 }
 
 impl MacCounter {
     /// The attention MACs Eq. 11/13 accounts for (projections + core +
-    /// positional; excludes the router and the MLP).
+    /// positional; excludes the router, the MLP and scheduler
+    /// overhead).
     pub fn attention_total(&self) -> f64 {
         self.proj_dense + self.proj_moe + self.attn_core + self.pos
     }
 
-    /// Every tallied MAC (attention + router + MLP) — the whole-forward
-    /// cost the decode-vs-recompute comparison uses.
+    /// Every tallied op (attention + router + MLP + scheduler
+    /// overhead) — the whole-forward cost the decode-vs-recompute
+    /// comparison uses (model sessions never tally overhead, so for
+    /// them this is still pure model MACs).
     pub fn total(&self) -> f64 {
-        self.proj_dense + self.proj_moe + self.attn_core + self.router + self.pos + self.mlp
+        self.proj_dense
+            + self.proj_moe
+            + self.attn_core
+            + self.router
+            + self.pos
+            + self.mlp
+            + self.scheduler_overhead
     }
 
     /// Add `other * num / den` field-wise — the fused batched decode's
@@ -61,6 +77,7 @@ impl MacCounter {
         self.router += other.router * num / den;
         self.pos += other.pos * num / den;
         self.mlp += other.mlp * num / den;
+        self.scheduler_overhead += other.scheduler_overhead * num / den;
     }
 }
 

@@ -44,6 +44,18 @@
 //!   per-session generation (pinned by `rust/tests/serve.rs` across
 //!   configs, 1/2/4 threads, and chunk sizes {1, 7, 64, ctx_len}).
 //!
+//! With a draft model ([`Scheduler::with_draft`]) the scheduler runs
+//! **speculative decoding** on the same fused path: the
+//! [`crate::spec`] subsystem proposes `k` greedy draft tokens per
+//! decoding row per tick, the target verifies them all in one fused
+//! width-`k+1` step, and the sample-and-match accept walk keeps every
+//! emitted stream bit-identical to non-speculative decoding — streams
+//! are observable per tick via [`Scheduler::set_on_tokens`], requests
+//! stop early at [`SamplingParams::eos_token`]
+//! ([`FinishReason::Eos`]), and
+//! [`ServeStats::acceptance_rate`] / [`Scheduler::overhead_macs`]
+//! report whether speculation paid off.
+//!
 //! Serving is native-backend only: the fused step needs direct access
 //! to [`NativeSession`](crate::model::NativeSession) internals, which
 //! the PJRT windowed-recompute session does not expose.
@@ -68,5 +80,6 @@ pub use request::{
     SamplingParams,
 };
 pub use scheduler::{
-    Scheduler, ServeOpts, ServeStats, TickReport, DEFAULT_PREFILL_CHUNK, SAMPLE_STREAM,
+    Scheduler, ServeOpts, ServeStats, TickReport, DEFAULT_PREFILL_CHUNK, DEFAULT_SPEC_K,
+    SAMPLE_STREAM,
 };

@@ -26,11 +26,17 @@ pub struct SamplingParams {
     /// per-request, so a request's output never depends on which other
     /// requests happened to share its batch.
     pub seed: u64,
+    /// End-of-sequence token: the request retires with
+    /// [`FinishReason::Eos`] the tick this token is sampled (it is the
+    /// last token of the output). Speculative decoding never emits past
+    /// it — the accept walk truncates a draft at EOS mid-window.
+    /// `None` (the default) disables early stop.
+    pub eos_token: Option<i32>,
 }
 
 impl Default for SamplingParams {
     fn default() -> SamplingParams {
-        SamplingParams { temperature: 0.0, top_k: 0, seed: 0 }
+        SamplingParams { temperature: 0.0, top_k: 0, seed: 0, eos_token: None }
     }
 }
 
@@ -92,6 +98,10 @@ impl GenRequest {
 pub enum FinishReason {
     /// Generated its full `max_new_tokens` budget.
     Length,
+    /// Sampled its [`SamplingParams::eos_token`] (the stream's last
+    /// token). Takes precedence over `Length` when EOS lands exactly on
+    /// the budget boundary.
+    Eos,
     /// Cancelled by the caller (possibly with partial tokens).
     Cancelled,
     /// Admission failed (session open / KV reservation error). The
@@ -117,6 +127,12 @@ pub struct GenOutput {
     pub ttft_ticks: Option<u64>,
     /// How many times the request was preempted and later resumed.
     pub preemptions: u32,
+    /// Draft tokens proposed for this request (0 when the scheduler
+    /// runs without speculative decoding).
+    pub spec_drafted: u64,
+    /// Draft tokens the verify step accepted into the stream; the
+    /// per-request acceptance rate is `spec_accepted / spec_drafted`.
+    pub spec_accepted: u64,
 }
 
 /// Partial progress of a preempted request, carried through the queue
@@ -132,6 +148,12 @@ pub struct ResumeState {
     pub ttft_s: Option<f64>,
     pub ttft_ticks: Option<u64>,
     pub preemptions: u32,
+    /// Speculative counters survive preemption so a resumed request's
+    /// final [`GenOutput`] reports its whole-life acceptance rate. (The
+    /// draft session itself is NOT carried — re-admission reconstructs
+    /// it by replaying prompt + tokens, like the target session.)
+    pub spec_drafted: u64,
+    pub spec_accepted: u64,
 }
 
 /// A queued (not yet admitted, or preempted-and-re-queued) request.

@@ -27,7 +27,7 @@
 //!    **Prefilling** state. If opening the session fails, the request
 //!    is emitted as [`FinishReason::Error`] (never silently lost) and
 //!    admission continues.
-//! 3. **Step** — ONE fused [`step_batched`] forward over every active
+//! 3. **Step** — ONE fused [`step_batched_full`] forward over every active
 //!    session in ascending slot order: width-1 rows for decoding
 //!    sessions, plus up to [`ServeOpts::prefill_chunk`] prompt
 //!    positions spread round-robin over Prefilling rows (a rotating
@@ -41,9 +41,31 @@
 //!    samples its FIRST token from that chunk's last-position logits —
 //!    bit-identical to what a monolithic prefill would have sampled —
 //!    and transitions to decoding.
-//! 4. **Retire** — rows that generated `max_new_tokens` are freed and
-//!    emitted; their sessions return every KV page and reservation to
-//!    the pool.
+//! 4. **Retire** — rows that generated `max_new_tokens` or sampled
+//!    their EOS token are freed and emitted ([`FinishReason::Length`]
+//!    / [`FinishReason::Eos`]); their sessions return every KV page
+//!    and reservation to the pool.
+//!
+//! # Speculative decoding
+//!
+//! Built with [`Scheduler::with_draft`], the tick grows a **draft
+//! phase** between chunk scheduling and the fused step: a small draft
+//! model ([`DraftEngine`]) shadows every row in the SAME shared KV
+//! pool — prefilling rows' chunks are mirrored into their draft
+//! sessions (`follow`), and each decoding row catches its draft up on
+//! committed tokens and takes `k` greedy proposals (`propose`). The
+//! fused step then runs each decoding row at width `k + 1`
+//! ([`step_batched_full`] keeps all its logits), and
+//! [`accept_tokens`](crate::spec::accept_tokens) walks them with the
+//! request's own RNG — emitting up to `k + 1` tokens per row per tick
+//! while staying **bit-identical to non-speculative decoding in every
+//! sampling mode** (pinned by `rust/tests/spec.rs`). Rejected
+//! positions roll back ([`NativeSession::rollback_to`]); both target
+//! and draft sessions open with an eviction lag of `k + 1` so the
+//! rollback is page-safe, priced into admission via
+//! [`NativeSession::pool_demand_spec`] plus the draft session's own
+//! demand. On preemption the draft session drops with the target one
+//! and resume replays the committed stream into a fresh pair.
 //!
 //! Slot assignment and batch order are deterministic, and every
 //! request samples from its own seeded RNG stream, so a request's
@@ -80,14 +102,16 @@
 //!
 //! [`ResumeState`]: crate::serve::request::ResumeState
 
+use crate::config::ModelConfig;
 use crate::coordinator::generate::sample_logits;
-use crate::model::decode::step_batched;
-use crate::model::kv_cache::stream_pages;
-use crate::model::{KvPool, NativeEngine, NativeSession, PoolStats};
+use crate::model::decode::step_batched_full;
+use crate::model::kv_cache::stream_pages_spec;
+use crate::model::{KvPool, MacCounter, NativeEngine, NativeSession, PoolStats};
 use crate::serve::request::{
     FinishReason, GenOutput, GenRequest, QueuedRequest, RequestId, RequestQueue, ResumeState,
     SamplingParams,
 };
+use crate::spec::{accept_tokens, DraftEngine, DraftSession};
 use crate::util::error::{bail, Error, Result};
 use crate::util::rng::Pcg;
 
@@ -98,6 +122,10 @@ pub const SAMPLE_STREAM: u64 = 0x5E4E;
 /// Default per-tick prefill chunk (positions) when neither
 /// [`ServeOpts`] nor `PREFILL_CHUNK` says otherwise.
 pub const DEFAULT_PREFILL_CHUNK: usize = 64;
+
+/// Default speculation width (draft tokens per verify cycle) when
+/// neither [`ServeOpts`] nor `SPEC_K` says otherwise.
+pub const DEFAULT_SPEC_K: usize = 4;
 
 /// Serving shape: concurrent decode slots, queue depth, prefill
 /// chunking, and the paged KV pool's geometry. Admission is bounded by
@@ -125,6 +153,18 @@ pub struct ServeOpts {
     /// honors the `PREFILL_CHUNK` env var (invalid/zero values warn
     /// and fall back to [`DEFAULT_PREFILL_CHUNK`]).
     pub prefill_chunk: usize,
+    /// Draft model for speculative decoding, `None` = off. This field
+    /// is a caller-side declaration: the caller builds the draft
+    /// `NativeEngine` from it (the engine must outlive the scheduler)
+    /// and constructs via [`Scheduler::with_draft`];
+    /// [`Scheduler::new`] rejects opts with a draft config set so the
+    /// intent cannot be silently dropped.
+    pub spec_config: Option<ModelConfig>,
+    /// Draft tokens proposed per verify cycle (`k`). Only meaningful
+    /// with a draft engine. The default honors the `SPEC_K` env var
+    /// (invalid/zero values warn and fall back to
+    /// [`DEFAULT_SPEC_K`]).
+    pub spec_k: usize,
 }
 
 impl Default for ServeOpts {
@@ -135,6 +175,8 @@ impl Default for ServeOpts {
             kv_page_cols: None,
             kv_pool_pages: None,
             prefill_chunk: default_prefill_chunk(),
+            spec_config: None,
+            spec_k: default_spec_k(),
         }
     }
 }
@@ -161,6 +203,30 @@ fn default_prefill_chunk() -> usize {
             }
         },
         Err(_) => DEFAULT_PREFILL_CHUNK,
+    }
+}
+
+/// Pure parse of a `SPEC_K` value (draft tokens per verify cycle).
+fn parse_spec_k(raw: &str) -> std::result::Result<usize, String> {
+    match raw.trim().parse::<usize>() {
+        Ok(0) => Err(format!("SPEC_K={raw:?} is zero (need >= 1)")),
+        Ok(n) => Ok(n),
+        Err(_) => Err(format!("SPEC_K={raw:?} is not a draft length")),
+    }
+}
+
+/// `SPEC_K` env override, falling back (with a warning on invalid
+/// values, mirroring `PREFILL_CHUNK`) to [`DEFAULT_SPEC_K`].
+fn default_spec_k() -> usize {
+    match std::env::var("SPEC_K") {
+        Ok(raw) => match parse_spec_k(&raw) {
+            Ok(n) => n,
+            Err(why) => {
+                eprintln!("WARN: {why}; falling back to {DEFAULT_SPEC_K}");
+                DEFAULT_SPEC_K
+            }
+        },
+        Err(_) => DEFAULT_SPEC_K,
     }
 }
 
@@ -199,6 +265,34 @@ pub struct ServeStats {
     /// Peak KV pages ever live at once (the paged footprint the
     /// benches compare against `slots` preallocated full rings).
     pub peak_kv_pages: usize,
+    /// Draft tokens proposed across all verify cycles (speculative
+    /// mode only; `accepted / drafted` is the acceptance rate).
+    pub drafted: u64,
+    /// Draft proposals the verify step accepted into streams.
+    pub accepted: u64,
+    /// Wall time spent in the draft phase (follow + catch-up +
+    /// propose) — the "draft cost" side of the break-even equation.
+    pub draft_seconds: f64,
+    /// Wall time spent inside the fused target forward (the sum of
+    /// per-tick `decode_seconds`).
+    pub step_seconds: f64,
+    /// Wall time spent on scheduler bookkeeping outside any model
+    /// forward: admission, sampling, the accept walk, retirement
+    /// (tick wall minus draft minus step).
+    pub overhead_seconds: f64,
+}
+
+impl ServeStats {
+    /// Fraction of drafted tokens the verify step accepted (0 when
+    /// nothing was drafted). Compare against the bench's reported
+    /// break-even acceptance to tell whether speculation paid off.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
 }
 
 /// What one tick did.
@@ -233,11 +327,24 @@ pub struct TickReport {
     pub active: usize,
     /// Still-queued requests after the tick.
     pub queued: usize,
-    /// Wall time of the fused step phase alone — decode rows AND
-    /// prefill chunks, since they share the forward; this is the
+    /// Wall time of the fused target forward alone — decode/verify
+    /// rows AND prefill chunks, since they share the step; this is the
     /// latency a batched token actually waited, which is exactly what
-    /// chunking bounds. 0 when no session stepped this tick.
+    /// chunking bounds. 0 when no session stepped this tick. Sampling
+    /// and bookkeeping land in `overhead_seconds`, drafting in
+    /// `draft_seconds`.
     pub decode_seconds: f64,
+    /// Draft tokens proposed this tick (`k` per decoding row in
+    /// speculative mode, 0 otherwise).
+    pub drafted: usize,
+    /// Draft proposals accepted by this tick's verify walks.
+    pub accepted: usize,
+    /// Wall time of this tick's draft phase (0 when not speculative).
+    pub draft_seconds: f64,
+    /// This tick's wall time minus `draft_seconds` and
+    /// `decode_seconds`: scheduler bookkeeping, sampling, the accept
+    /// walk.
+    pub overhead_seconds: f64,
     /// Requests left queued this tick because the KV pool could not
     /// cover the next one's worst-case page demand (0 when admission
     /// was slot-bound or the queue drained).
@@ -273,6 +380,18 @@ struct Active<'m> {
     /// The most recently sampled token — fed at the next fused step
     /// once the row is decoding.
     next: i32,
+    /// Shadow session on the draft model (speculative mode only).
+    /// Opens and drops in lockstep with `session`; its `fed` tracks
+    /// the committed stream, never this tick's speculative overshoot.
+    draft: Option<DraftSession<'m>>,
+    /// The row sampled its EOS token — retire this tick with
+    /// [`FinishReason::Eos`] (checked before the budget, so EOS wins
+    /// at the boundary).
+    eos_hit: bool,
+    /// Draft tokens proposed for this request (across admissions).
+    spec_drafted: u64,
+    /// Draft proposals accepted for this request (across admissions).
+    spec_accepted: u64,
     submitted: std::time::Instant,
     submit_tick: u64,
     ttft_s: Option<f64>,
@@ -287,6 +406,17 @@ impl Active<'_> {
     fn prefilling(&self) -> bool {
         self.fed < self.feed.len()
     }
+}
+
+/// How a slot participates in the tick's fused step.
+enum StepRow {
+    /// A scheduled prefill chunk (width = the chunk).
+    Prefill,
+    /// A plain width-1 decode row.
+    Decode,
+    /// A speculative decode row: width `k + 1`, feeding `next` plus
+    /// the draft's proposals, keeping every position's logits.
+    Spec(Vec<i32>),
 }
 
 /// Continuous-batching engine over a [`NativeEngine`]: accepts
@@ -309,12 +439,54 @@ pub struct Scheduler<'m> {
     /// Test hook: admissions to fail deliberately (see
     /// [`inject_admit_failures`](Scheduler::inject_admit_failures)).
     admit_faults: usize,
+    /// Draft engine for speculative decoding (None = plain decode).
+    draft: Option<DraftEngine<'m>>,
+    /// Scheduler-side bookkeeping tally: approximate scalar ops spent
+    /// in sampling and the accept walk, kept OUT of the model's MAC
+    /// counters (the `scheduler_overhead` category).
+    overhead: MacCounter,
+    /// Streaming sink: called after each tick, once per request that
+    /// emitted tokens, with exactly the newly emitted tokens.
+    on_tokens: Option<Box<dyn FnMut(RequestId, &[i32]) + 'm>>,
     finished: Vec<GenOutput>,
     stats: ServeStats,
 }
 
 impl<'m> Scheduler<'m> {
     pub fn new(engine: &'m NativeEngine, opts: &ServeOpts) -> Result<Scheduler<'m>> {
+        if opts.spec_config.is_some() {
+            bail!(
+                "serve: opts declare a draft model — build the draft NativeEngine and \
+                 construct via Scheduler::with_draft"
+            );
+        }
+        Self::build(engine, None, opts)
+    }
+
+    /// Build a **speculative** scheduler: `draft` is the small model
+    /// that shadows every request, proposing [`ServeOpts::spec_k`]
+    /// greedy tokens per decoding row per tick, verified by the target
+    /// in one fused width-`k+1` step. The caller owns the draft engine
+    /// (it must outlive the scheduler, like the target). Draft and
+    /// target must share `vocab_size` and `d_head` — their sessions
+    /// draw from ONE shared KV pool.
+    pub fn with_draft(
+        engine: &'m NativeEngine,
+        draft: &'m NativeEngine,
+        opts: &ServeOpts,
+    ) -> Result<Scheduler<'m>> {
+        if draft.cfg().task != crate::config::Task::Lm {
+            bail!("serve: the draft model must be an LM config");
+        }
+        let de = DraftEngine::new(engine.cfg(), draft, opts.spec_k)?;
+        Self::build(engine, Some(de), opts)
+    }
+
+    fn build(
+        engine: &'m NativeEngine,
+        draft: Option<DraftEngine<'m>>,
+        opts: &ServeOpts,
+    ) -> Result<Scheduler<'m>> {
         let cfg = engine.cfg();
         if cfg.task != crate::config::Task::Lm {
             bail!("serving requires an LM config");
@@ -332,8 +504,18 @@ impl<'m> Scheduler<'m> {
             None => {
                 // Default: room for `slots` full-window sessions, so
                 // admission stays slot-bound unless shrunk explicitly.
-                let per_stream = stream_pages(page_cols.max(1), cap, usize::MAX);
-                opts.slots * cfg.n_layers * cfg.kv_streams() * per_stream
+                // Speculative mode prices the eviction lag AND each
+                // slot's draft session into the same default.
+                let lag = draft.as_ref().map_or(0, |de| de.evict_lag());
+                let per_stream = stream_pages_spec(page_cols.max(1), cap, usize::MAX, lag);
+                let mut pages = opts.slots * cfg.n_layers * cfg.kv_streams() * per_stream;
+                if let Some(de) = &draft {
+                    let dcfg = de.cfg();
+                    let dper =
+                        stream_pages_spec(page_cols.max(1), dcfg.ctx_len(), usize::MAX, lag);
+                    pages += opts.slots * dcfg.n_layers * dcfg.kv_streams() * dper;
+                }
+                pages
             }
         };
         let pool = KvPool::new(page_cols, cfg.d_head, pool_pages)?;
@@ -346,6 +528,9 @@ impl<'m> Scheduler<'m> {
             prefill_chunk: opts.prefill_chunk,
             prefill_cursor: 0,
             admit_faults: 0,
+            draft,
+            overhead: MacCounter::default(),
+            on_tokens: None,
             finished: Vec::new(),
             stats: ServeStats { kv_pages: pool_pages, ..ServeStats::default() },
         })
@@ -366,11 +551,27 @@ impl<'m> Scheduler<'m> {
     }
 
     /// Worst-case concurrent KV pages a session with this position
-    /// budget can hold — delegated to [`NativeSession::pool_demand`],
-    /// the same formula `admit` reserves through, so the admission
-    /// gate and the reservation can never disagree.
+    /// budget can hold — delegated to
+    /// [`NativeSession::pool_demand_spec`], the same formula `admit`
+    /// reserves through, so the admission gate and the reservation can
+    /// never disagree. Speculative mode adds the lag-priced target
+    /// demand AND the request's draft session (opened with one spare
+    /// committed position, matching `admit`).
     fn request_pages(&self, positions: usize) -> usize {
-        NativeSession::pool_demand(self.engine.cfg(), 1, &self.pool, Some(positions))
+        match &self.draft {
+            None => NativeSession::pool_demand(self.engine.cfg(), 1, &self.pool, Some(positions)),
+            Some(de) => {
+                let lag = de.evict_lag();
+                let target = NativeSession::pool_demand_spec(
+                    self.engine.cfg(),
+                    1,
+                    &self.pool,
+                    Some(positions),
+                    lag,
+                );
+                target + de.session_demand(&self.pool, positions.saturating_add(1))
+            }
+        }
     }
 
     /// The shared KV pool's counters (occupancy, peak, reservations) —
@@ -426,10 +627,18 @@ impl<'m> Scheduler<'m> {
     pub fn cancel(&mut self, id: RequestId) -> bool {
         if let Some(q) = self.queue.remove(id) {
             let prompt_len = q.req.prompt.len();
-            let (tokens, ttft_s, ttft_ticks, preemptions) = match q.resume {
-                Some(r) => (r.tokens, r.ttft_s, r.ttft_ticks, r.preemptions),
-                None => (Vec::new(), None, None, 0),
-            };
+            let (tokens, ttft_s, ttft_ticks, preemptions, spec_drafted, spec_accepted) =
+                match q.resume {
+                    Some(r) => (
+                        r.tokens,
+                        r.ttft_s,
+                        r.ttft_ticks,
+                        r.preemptions,
+                        r.spec_drafted,
+                        r.spec_accepted,
+                    ),
+                    None => (Vec::new(), None, None, 0, 0, 0),
+                };
             self.finished.push(GenOutput {
                 id,
                 prompt_len,
@@ -438,6 +647,8 @@ impl<'m> Scheduler<'m> {
                 ttft_s,
                 ttft_ticks,
                 preemptions,
+                spec_drafted,
+                spec_accepted,
             });
             self.stats.cancelled += 1;
             return true;
@@ -471,19 +682,51 @@ impl<'m> Scheduler<'m> {
             return Err((q, Error::msg("injected admission failure (test hook)")));
         }
         let budget = Self::entry_positions(&q);
-        let session =
-            match NativeSession::open_in_pool(&self.engine.model, 1, &self.pool, Some(budget)) {
-                Ok(s) => s,
-                Err(e) => return Err((q, e)),
-            };
+        let lag = self.draft.as_ref().map_or(0, |de| de.evict_lag());
+        let session = match NativeSession::open_in_pool_spec(
+            &self.engine.model,
+            1,
+            &self.pool,
+            Some(budget),
+            lag,
+        ) {
+            Ok(s) => s,
+            Err(e) => return Err((q, e)),
+        };
+        // Speculative mode: the shadow draft session opens (and on
+        // failure, fails admission) atomically with the target one —
+        // the gate (`request_pages`) priced both, with the same one
+        // spare committed position.
+        let draft = match &self.draft {
+            None => None,
+            Some(de) => match de.open_session(&self.pool, budget.saturating_add(1)) {
+                Ok(ds) => Some(ds),
+                Err(e) => {
+                    drop(session);
+                    return Err((q, e));
+                }
+            },
+        };
         let QueuedRequest { id, req, submitted, submit_tick, resume } = q;
         if resume.is_some() {
             self.stats.resumes += 1;
         }
-        let (tokens, rng, service_ticks, ttft_s, ttft_ticks, preemptions) = match resume {
-            Some(r) => (r.tokens, r.rng, r.service_ticks, r.ttft_s, r.ttft_ticks, r.preemptions),
-            None => (Vec::new(), Pcg::new(req.sampling.seed, SAMPLE_STREAM), 0, None, None, 0),
-        };
+        let (tokens, rng, service_ticks, ttft_s, ttft_ticks, preemptions, spec_drafted, spec_accepted) =
+            match resume {
+                Some(r) => (
+                    r.tokens,
+                    r.rng,
+                    r.service_ticks,
+                    r.ttft_s,
+                    r.ttft_ticks,
+                    r.preemptions,
+                    r.spec_drafted,
+                    r.spec_accepted,
+                ),
+                None => {
+                    (Vec::new(), Pcg::new(req.sampling.seed, SAMPLE_STREAM), 0, None, None, 0, 0, 0)
+                }
+            };
         let prompt_len = req.prompt.len();
         let mut feed = req.prompt;
         feed.extend_from_slice(&tokens);
@@ -500,6 +743,10 @@ impl<'m> Scheduler<'m> {
             max_new_tokens: req.max_new_tokens,
             tokens,
             next: 0,
+            draft,
+            eos_hit: false,
+            spec_drafted,
+            spec_accepted,
             submitted,
             submit_tick,
             ttft_s,
@@ -552,6 +799,9 @@ impl<'m> Scheduler<'m> {
             feed,
             max_new_tokens,
             tokens,
+            draft,
+            spec_drafted,
+            spec_accepted,
             submitted,
             submit_tick,
             ttft_s,
@@ -560,9 +810,12 @@ impl<'m> Scheduler<'m> {
             preemptions,
             ..
         } = a;
-        // Pages and the worst-case reservation return here; resume
-        // re-reserves the identical demand (see `entry_positions`).
+        // Pages and the worst-case reservation return here (draft
+        // session included — re-admission rebuilds it by replaying the
+        // committed stream); resume re-reserves the identical demand
+        // (see `entry_positions`).
         drop(session);
+        drop(draft);
         self.queue.requeue(QueuedRequest {
             id,
             req: GenRequest {
@@ -581,6 +834,8 @@ impl<'m> Scheduler<'m> {
                 ttft_s,
                 ttft_ticks,
                 preemptions: preemptions + 1,
+                spec_drafted,
+                spec_accepted,
             }),
         });
         self.stats.preemptions += 1;
@@ -594,6 +849,7 @@ impl<'m> Scheduler<'m> {
     /// docs.
     pub fn tick(&mut self) -> Result<TickReport> {
         self.stats.ticks += 1;
+        let tick_t0 = std::time::Instant::now();
         let mut finished = 0usize;
         let mut cancelled = 0usize;
 
@@ -609,6 +865,8 @@ impl<'m> Scheduler<'m> {
                     ttft_s: a.ttft_s,
                     ttft_ticks: a.ttft_ticks,
                     preemptions: a.preemptions,
+                    spec_drafted: a.spec_drafted,
+                    spec_accepted: a.spec_accepted,
                 });
                 self.stats.cancelled += 1;
                 cancelled += 1;
@@ -660,10 +918,18 @@ impl<'m> Scheduler<'m> {
                     // admitting.
                     eprintln!("WARN: serve: admission of request {} failed: {e}", q.id);
                     let prompt_len = q.req.prompt.len();
-                    let (tokens, ttft_s, ttft_ticks, preemptions) = match q.resume {
-                        Some(r) => (r.tokens, r.ttft_s, r.ttft_ticks, r.preemptions),
-                        None => (Vec::new(), None, None, 0),
-                    };
+                    let (tokens, ttft_s, ttft_ticks, preemptions, spec_drafted, spec_accepted) =
+                        match q.resume {
+                            Some(r) => (
+                                r.tokens,
+                                r.ttft_s,
+                                r.ttft_ticks,
+                                r.preemptions,
+                                r.spec_drafted,
+                                r.spec_accepted,
+                            ),
+                            None => (Vec::new(), None, None, 0, 0, 0),
+                        };
                     self.finished.push(GenOutput {
                         id: q.id,
                         prompt_len,
@@ -672,6 +938,8 @@ impl<'m> Scheduler<'m> {
                         ttft_s,
                         ttft_ticks,
                         preemptions,
+                        spec_drafted,
+                        spec_accepted,
                     });
                     self.stats.errors += 1;
                     errors += 1;
@@ -710,17 +978,74 @@ impl<'m> Scheduler<'m> {
             self.prefill_cursor = (s + 1) % nslots;
         }
 
-        // Phase 3b: one fused step, ascending slot order — width-1
-        // decode rows plus the scheduled prefill chunks.
-        let mut parts: Vec<(&mut Active<'m>, usize, bool)> = Vec::new();
+        // Phase 3a': speculative draft. The draft model shadows every
+        // row: prefilling rows' scheduled chunks are mirrored into
+        // their draft sessions (`follow`), and each decoding row
+        // catches its draft up on committed tokens it has not seen
+        // (width 1 after a rejection, 2 after a full accept) and takes
+        // `k` greedy proposals (`propose`). Timed separately — this is
+        // the draft-cost side of the break-even equation.
+        let mut proposals: Vec<Option<Vec<i32>>> = vec![None; nslots];
+        let mut draft_seconds = 0.0;
+        if let Some(de) = &self.draft {
+            let t0 = std::time::Instant::now();
+            let mut follow_sessions: Vec<&mut DraftSession<'m>> = Vec::new();
+            let mut follow_chunks: Vec<&[i32]> = Vec::new();
+            let mut prop_sessions: Vec<&mut DraftSession<'m>> = Vec::new();
+            let mut prop_catchups: Vec<Vec<i32>> = Vec::new();
+            let mut prop_slots: Vec<usize> = Vec::new();
+            for (sidx, slot) in self.slots.iter_mut().enumerate() {
+                let Some(a) = slot else { continue };
+                // Disjoint-field borrows: the draft session steps
+                // while the committed stream (feed/tokens) is read.
+                let Active { draft, feed, fed, tokens, prompt_len, .. } = a;
+                let Some(dr) = draft.as_mut() else { continue };
+                if *fed < feed.len() {
+                    if chunk_w[sidx] > 0 {
+                        follow_sessions.push(dr);
+                        follow_chunks.push(&feed[*fed..*fed + chunk_w[sidx]]);
+                    }
+                } else {
+                    // Committed stream: prompt then sampled tokens
+                    // (the last of which is `next`, which this tick's
+                    // verify step will consume).
+                    let s_len = *prompt_len + tokens.len();
+                    let catchup: Vec<i32> = (dr.fed..s_len)
+                        .map(|i| {
+                            if i < *prompt_len {
+                                feed[i]
+                            } else {
+                                tokens[i - *prompt_len]
+                            }
+                        })
+                        .collect();
+                    prop_catchups.push(catchup);
+                    prop_slots.push(sidx);
+                    prop_sessions.push(dr);
+                }
+            }
+            de.follow(&mut follow_sessions, &follow_chunks)?;
+            let props = de.propose(&mut prop_sessions, &prop_catchups)?;
+            for (sidx, p) in prop_slots.into_iter().zip(props) {
+                proposals[sidx] = Some(p);
+            }
+            draft_seconds = t0.elapsed().as_secs_f64();
+        }
+
+        // Phase 3b: one fused step, ascending slot order — decode rows
+        // (width 1 plain, width k+1 speculative with all logits kept)
+        // plus the scheduled prefill chunks.
+        let mut parts: Vec<(&mut Active<'m>, usize, StepRow)> = Vec::new();
         for (sidx, slot) in self.slots.iter_mut().enumerate() {
             if let Some(a) = slot {
                 if a.prefilling() {
                     if chunk_w[sidx] > 0 {
-                        parts.push((a, chunk_w[sidx], true));
+                        parts.push((a, chunk_w[sidx], StepRow::Prefill));
                     }
+                } else if let Some(props) = proposals[sidx].take() {
+                    parts.push((a, props.len() + 1, StepRow::Spec(props)));
                 } else {
-                    parts.push((a, 1, false));
+                    parts.push((a, 1, StepRow::Decode));
                 }
             }
         }
@@ -729,57 +1054,121 @@ impl<'m> Scheduler<'m> {
         let mut decode_seconds = 0.0;
         let mut tokens_sampled = 0usize;
         let mut prefill_positions = 0usize;
+        let mut drafted_tick = 0usize;
+        let mut accepted_tick = 0usize;
+        let mut emissions: Vec<(RequestId, Vec<i32>)> = Vec::new();
         if batch > 0 {
-            let t0 = std::time::Instant::now();
             let mut toks: Vec<i32> = Vec::new();
             let mut widths: Vec<usize> = Vec::with_capacity(batch);
-            for (a, w, is_prefill) in parts.iter() {
-                if *is_prefill {
-                    toks.extend_from_slice(&a.feed[a.fed..a.fed + w]);
-                } else {
-                    toks.push(a.next);
+            let mut keep_all: Vec<bool> = Vec::with_capacity(batch);
+            for (a, w, kind) in parts.iter() {
+                match kind {
+                    StepRow::Prefill => toks.extend_from_slice(&a.feed[a.fed..a.fed + w]),
+                    StepRow::Decode => toks.push(a.next),
+                    StepRow::Spec(props) => {
+                        toks.push(a.next);
+                        toks.extend_from_slice(props);
+                    }
                 }
                 widths.push(*w);
+                keep_all.push(matches!(kind, StepRow::Spec(_)));
             }
             let mut sess: Vec<&mut NativeSession<'_>> =
                 parts.iter_mut().map(|(a, _, _)| &mut a.session).collect();
-            let logits = step_batched(&mut sess, &toks, &widths)?;
+            let t0 = std::time::Instant::now();
+            let logits = step_batched_full(&mut sess, &toks, &widths, &keep_all)?;
+            decode_seconds = t0.elapsed().as_secs_f64();
             drop(sess);
             let tick_now = self.stats.ticks;
-            for ((a, w, is_prefill), lg) in parts.iter_mut().zip(&logits) {
+            let vocab = self.engine.cfg().vocab_size as f64;
+            for ((a, w, kind), lg) in parts.iter_mut().zip(&logits) {
                 let s = &a.sampling;
-                if *is_prefill {
-                    a.fed += *w;
-                    prefill_positions += *w;
-                    self.stats.prefills += 1;
-                    self.stats.prefill_positions += *w as u64;
-                    if a.fed == a.feed.len() {
-                        // Feed exhausted: this chunk's last position is
-                        // exactly where a monolithic prefill would have
-                        // sampled — take the (first, or post-resume
-                        // next) token from its logits.
-                        let id =
-                            sample_logits(lg.row(0), s.temperature, s.top_k, &mut a.rng) as i32;
-                        a.tokens.push(id);
-                        a.next = id;
-                        tokens_sampled += 1;
-                        if a.ttft_ticks.is_none() {
-                            a.ttft_s = Some(a.submitted.elapsed().as_secs_f64());
-                            a.ttft_ticks = Some(tick_now.saturating_sub(a.submit_tick));
+                match kind {
+                    StepRow::Prefill => {
+                        a.fed += *w;
+                        prefill_positions += *w;
+                        self.stats.prefills += 1;
+                        self.stats.prefill_positions += *w as u64;
+                        if a.fed == a.feed.len() {
+                            // Feed exhausted: this chunk's last position
+                            // is exactly where a monolithic prefill
+                            // would have sampled — take the (first, or
+                            // post-resume next) token from its logits.
+                            let id = sample_logits(lg.row(0), s.temperature, s.top_k, &mut a.rng)
+                                as i32;
+                            self.overhead.scheduler_overhead += vocab;
+                            a.tokens.push(id);
+                            a.next = id;
+                            a.eos_hit = s.eos_token == Some(id);
+                            tokens_sampled += 1;
+                            emissions.push((a.id, vec![id]));
+                            if a.ttft_ticks.is_none() {
+                                a.ttft_s = Some(a.submitted.elapsed().as_secs_f64());
+                                a.ttft_ticks = Some(tick_now.saturating_sub(a.submit_tick));
+                            }
                         }
                     }
-                } else {
-                    let id = sample_logits(lg.row(0), s.temperature, s.top_k, &mut a.rng) as i32;
-                    a.tokens.push(id);
-                    a.next = id;
-                    tokens_sampled += 1;
-                    self.stats.decode_tokens += 1;
+                    StepRow::Decode => {
+                        let id =
+                            sample_logits(lg.row(0), s.temperature, s.top_k, &mut a.rng) as i32;
+                        self.overhead.scheduler_overhead += vocab;
+                        a.tokens.push(id);
+                        a.next = id;
+                        a.eos_hit = s.eos_token == Some(id);
+                        tokens_sampled += 1;
+                        self.stats.decode_tokens += 1;
+                        emissions.push((a.id, vec![id]));
+                    }
+                    StepRow::Spec(props) => {
+                        // Committed stream length before this verify;
+                        // the target consumed stream[..s_old - 1] and
+                        // this step fed [next, d_1 .. d_k].
+                        let s_old = a.prompt_len + a.tokens.len();
+                        let out = accept_tokens(lg, props, s, &mut a.rng);
+                        self.overhead.scheduler_overhead +=
+                            vocab * out.emitted.len() as f64 + props.len() as f64;
+                        drafted_tick += props.len();
+                        accepted_tick += out.accepted;
+                        a.spec_drafted += props.len() as u64;
+                        a.spec_accepted += out.accepted as u64;
+                        let mut emitted = out.emitted;
+                        // Token budget: keep at most the remaining
+                        // allowance (the row then retires; RNG draws
+                        // past the cut are never reused).
+                        emitted.truncate(a.max_new_tokens - a.tokens.len());
+                        a.eos_hit = s.eos_token.is_some_and(|e| emitted.last() == Some(&e));
+                        a.tokens.extend_from_slice(&emitted);
+                        a.next = *emitted.last().expect("accept walk emits >= 1 token");
+                        tokens_sampled += emitted.len();
+                        self.stats.decode_tokens += emitted.len() as u64;
+                        let retiring = a.eos_hit || a.tokens.len() >= a.max_new_tokens;
+                        if !retiring {
+                            // Roll the rejected tail out of both
+                            // sessions (page-safe under the k+1
+                            // eviction lag). The target returns to its
+                            // committed prefix; the draft keeps the
+                            // committed part of its self-fed proposals
+                            // so the next catch-up is 1-2 tokens.
+                            a.session.rollback_to(s_old + out.accepted);
+                            let dr = a.draft.as_mut().expect("spec row has a draft session");
+                            let d_keep = s_old + out.accepted.min(props.len() - 1);
+                            dr.session.rollback_to(d_keep);
+                            dr.fed = d_keep;
+                        }
+                        emissions.push((a.id, emitted));
+                    }
                 }
             }
             self.stats.total_tokens += tokens_sampled as u64;
-            decode_seconds = t0.elapsed().as_secs_f64();
         }
         drop(parts);
+
+        // Streaming sink: per-request newly emitted tokens, slot order.
+        if let Some(cb) = self.on_tokens.as_mut() {
+            for (id, toks) in &emissions {
+                cb(*id, toks);
+            }
+        }
 
         // Every resident row consumed one tick of service, prefilling
         // or decoding — `deadline_ticks` budgets slot residency.
@@ -787,18 +1176,24 @@ impl<'m> Scheduler<'m> {
             a.service_ticks += 1;
         }
 
-        // Phase 4: retire rows that generated their full budget.
+        // Phase 4: retire rows that sampled EOS or generated their
+        // full budget (EOS checked first, so it wins at the boundary).
         for slot in self.slots.iter_mut() {
-            if slot.as_ref().is_some_and(|a| a.tokens.len() >= a.max_new_tokens) {
+            let done =
+                slot.as_ref().is_some_and(|a| a.eos_hit || a.tokens.len() >= a.max_new_tokens);
+            if done {
                 let a = slot.take().expect("slot checked occupied");
+                let finish = if a.eos_hit { FinishReason::Eos } else { FinishReason::Length };
                 self.finished.push(GenOutput {
                     id: a.id,
                     prompt_len: a.prompt_len,
                     tokens: a.tokens,
-                    finish: FinishReason::Length,
+                    finish,
                     ttft_s: a.ttft_s,
                     ttft_ticks: a.ttft_ticks,
                     preemptions: a.preemptions,
+                    spec_drafted: a.spec_drafted,
+                    spec_accepted: a.spec_accepted,
                 });
                 self.stats.finished += 1;
                 finished += 1;
@@ -807,6 +1202,13 @@ impl<'m> Scheduler<'m> {
 
         let ps = self.pool.stats();
         self.stats.peak_kv_pages = ps.high_water;
+        self.stats.drafted += drafted_tick as u64;
+        self.stats.accepted += accepted_tick as u64;
+        self.stats.draft_seconds += draft_seconds;
+        self.stats.step_seconds += decode_seconds;
+        let overhead_seconds =
+            (tick_t0.elapsed().as_secs_f64() - draft_seconds - decode_seconds).max(0.0);
+        self.stats.overhead_seconds += overhead_seconds;
         Ok(TickReport {
             admitted,
             batch,
@@ -819,6 +1221,10 @@ impl<'m> Scheduler<'m> {
             active: self.active_count(),
             queued: self.queue.len(),
             decode_seconds,
+            drafted: drafted_tick,
+            accepted: accepted_tick,
+            draft_seconds,
+            overhead_seconds,
             deferred,
             kv_pages_in_use: ps.in_use,
             kv_pages_reserved: ps.reserved,
@@ -866,6 +1272,30 @@ impl<'m> Scheduler<'m> {
     pub fn stats(&self) -> &ServeStats {
         &self.stats
     }
+
+    /// Install a streaming sink: after every tick it is called once
+    /// per request that emitted tokens (slot order), with exactly the
+    /// newly emitted tokens — one for a plain decode or prefill
+    /// exhaustion, up to `k + 1` for a speculative row. Replaces any
+    /// previous sink. Concatenating a request's calls reproduces its
+    /// final [`GenOutput::tokens`] (pinned by `rust/tests/spec.rs`).
+    pub fn set_on_tokens(&mut self, cb: impl FnMut(RequestId, &[i32]) + 'm) {
+        self.on_tokens = Some(Box::new(cb));
+    }
+
+    /// The scheduler-side bookkeeping tally — approximate scalar ops
+    /// spent on sampling and accept walks, in the
+    /// [`MacCounter::scheduler_overhead`] category, deliberately kept
+    /// out of the model's own MAC accounting so benches can split
+    /// model work from serving overhead.
+    pub fn overhead_macs(&self) -> &MacCounter {
+        &self.overhead
+    }
+
+    /// Speculation width `k`, 0 when speculative decoding is off.
+    pub fn spec_k(&self) -> usize {
+        self.draft.as_ref().map_or(0, |de| de.k())
+    }
 }
 
 #[cfg(test)]
@@ -885,5 +1315,29 @@ mod tests {
         assert!(parse_prefill_chunk("-3").is_err());
         assert!(parse_prefill_chunk("lots").is_err());
         assert!(parse_prefill_chunk("").is_err());
+    }
+
+    #[test]
+    fn spec_k_parse_accepts_widths() {
+        assert_eq!(parse_spec_k("1"), Ok(1));
+        assert_eq!(parse_spec_k("8"), Ok(8));
+        assert_eq!(parse_spec_k(" 4 "), Ok(4));
+    }
+
+    #[test]
+    fn spec_k_parse_rejects_garbage_and_zero() {
+        assert!(parse_spec_k("0").is_err());
+        assert!(parse_spec_k("-2").is_err());
+        assert!(parse_spec_k("fast").is_err());
+        assert!(parse_spec_k("").is_err());
+    }
+
+    #[test]
+    fn acceptance_rate_handles_empty_and_partial() {
+        let mut st = ServeStats::default();
+        assert_eq!(st.acceptance_rate(), 0.0);
+        st.drafted = 8;
+        st.accepted = 6;
+        assert!((st.acceptance_rate() - 0.75).abs() < 1e-12);
     }
 }

@@ -1,0 +1,208 @@
+//! The draft side of speculative decoding: a small `NativeEngine`
+//! shadowing every active request, proposing `k` greedy tokens per
+//! decode tick through the same fused batched entries the target uses.
+//!
+//! A [`DraftSession`] tracks, per request, how much of the request's
+//! COMMITTED stream (prompt + sampled tokens) the draft has consumed
+//! (`fed`). Each tick the scheduler:
+//!
+//! * [`DraftEngine::follow`]s prefilling rows — the draft eats the same
+//!   prompt chunk the target is eating (sub-chunked to the draft's own
+//!   context cap when the draft model is smaller);
+//! * [`DraftEngine::propose`]s for decoding rows — one fused catch-up
+//!   step over the committed tokens the draft has not seen yet (width
+//!   1 after a rejection, 2 after a fully accepted draft), whose
+//!   logits yield proposal `d_1`, then `k - 1` fused width-1 steps
+//!   feeding each proposal back to get the next.
+//!
+//! Proposals are **always greedy** through a scratch RNG that greedy
+//! sampling never advances, so drafting cannot perturb any request's
+//! sampling stream. After the verify step the scheduler rolls the
+//! draft session back to its committed prefix
+//! ([`NativeSession::rollback_to`]) — sessions open with an eviction
+//! lag of `k + 1` so the rollback is always page-safe.
+
+use crate::config::ModelConfig;
+use crate::coordinator::generate::sample_logits;
+use crate::model::{decode_batched, step_batched, KvPool, NativeEngine, NativeSession};
+use crate::util::error::{bail, Result};
+use crate::util::rng::Pcg;
+
+/// The draft model plus the speculation width `k`. Holds only a
+/// borrow: the caller owns the draft `NativeEngine` (it must outlive
+/// the scheduler, exactly like the target engine).
+pub struct DraftEngine<'m> {
+    engine: &'m NativeEngine,
+    k: usize,
+}
+
+/// One request's shadow session on the draft model.
+pub struct DraftSession<'m> {
+    pub session: NativeSession<'m>,
+    /// Committed-stream tokens (prompt + sampled) the draft has
+    /// consumed. Speculative self-feeds (its own proposals) do NOT
+    /// count: they are rolled back each tick, and `fed` is exactly the
+    /// position [`NativeSession::rollback_to`] returns the session to.
+    pub fed: usize,
+}
+
+impl<'m> DraftEngine<'m> {
+    /// Validate draft-against-target compatibility and fix `k`.
+    ///
+    /// The draft must share the target's vocabulary (proposals are
+    /// target token ids) and its `d_head` (both models' sessions draw
+    /// K/V pages from ONE shared pool, whose column width is
+    /// `d_head`). `k + 1` must fit both context windows — the verify
+    /// step feeds `k + 1` positions in one chunk.
+    pub fn new(target: &ModelConfig, engine: &'m NativeEngine, k: usize) -> Result<DraftEngine<'m>> {
+        let cfg = engine.cfg();
+        if k == 0 {
+            bail!("spec_k must be >= 1");
+        }
+        if cfg.vocab_size != target.vocab_size {
+            bail!(
+                "draft vocab {} != target vocab {} — speculative proposals are target token ids",
+                cfg.vocab_size,
+                target.vocab_size
+            );
+        }
+        if cfg.d_head != target.d_head {
+            bail!(
+                "draft d_head {} != target d_head {} — draft sessions share the target's KV pool",
+                cfg.d_head,
+                target.d_head
+            );
+        }
+        if k + 1 > target.ctx_len() || k + 1 > cfg.ctx_len() {
+            bail!(
+                "spec_k {k} needs k + 1 <= both context windows (target {}, draft {})",
+                target.ctx_len(),
+                cfg.ctx_len()
+            );
+        }
+        Ok(DraftEngine { engine, k })
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        self.engine.cfg()
+    }
+
+    /// The eviction lag speculative sessions (target AND draft) open
+    /// with: one verify cycle pushes at most `k + 1` positions past
+    /// the committed stream before rolling back.
+    pub fn evict_lag(&self) -> usize {
+        self.k + 1
+    }
+
+    /// Worst-case page demand of one request's draft session with a
+    /// committed-position budget of `positions` — the term admission
+    /// adds on top of the target session's demand.
+    pub fn session_demand(&self, pool: &KvPool, positions: usize) -> usize {
+        NativeSession::pool_demand_spec(self.cfg(), 1, pool, Some(positions), self.evict_lag())
+    }
+
+    /// Open one request's draft session in the shared pool, reserving
+    /// [`session_demand`](DraftEngine::session_demand).
+    pub fn open_session(&self, pool: &KvPool, positions: usize) -> Result<DraftSession<'m>> {
+        let session = NativeSession::open_in_pool_spec(
+            &self.engine.model,
+            1,
+            pool,
+            Some(positions),
+            self.evict_lag(),
+        )?;
+        Ok(DraftSession { session, fed: 0 })
+    }
+
+    /// Shadow chunked prefill: feed each draft session its row's
+    /// already-known chunk of committed tokens, fused across rows.
+    /// Chunks wider than the draft's own context window run as several
+    /// fused sub-steps (per-row widths may differ). Logits are
+    /// discarded — proposals only ever start from a catch-up step.
+    pub fn follow(&self, drafts: &mut [&mut DraftSession<'_>], chunks: &[&[i32]]) -> Result<()> {
+        if drafts.len() != chunks.len() {
+            bail!("follow: {} chunks for {} draft sessions", chunks.len(), drafts.len());
+        }
+        let cap = self.cfg().ctx_len();
+        let mut offs = vec![0usize; drafts.len()];
+        loop {
+            let mut sess: Vec<&mut NativeSession> = Vec::new();
+            let mut widths = Vec::new();
+            let mut toks: Vec<i32> = Vec::new();
+            let mut idxs = Vec::new();
+            for (i, d) in drafts.iter_mut().enumerate() {
+                let rem = chunks[i].len() - offs[i];
+                if rem == 0 {
+                    continue;
+                }
+                let w = rem.min(cap);
+                toks.extend_from_slice(&chunks[i][offs[i]..offs[i] + w]);
+                widths.push(w);
+                idxs.push(i);
+                sess.push(&mut d.session);
+            }
+            if sess.is_empty() {
+                return Ok(());
+            }
+            step_batched(&mut sess, &toks, &widths)?;
+            drop(sess);
+            for (j, &i) in idxs.iter().enumerate() {
+                offs[i] += widths[j];
+                drafts[i].fed += widths[j];
+            }
+        }
+    }
+
+    /// One fused proposal cycle over the decoding rows. `catchups[i]`
+    /// holds the committed tokens draft `i` has not consumed yet — at
+    /// least one (the token the target will verify first), two right
+    /// after a fully accepted draft. Returns `k` greedy proposals per
+    /// row and advances each `fed` by its catch-up length; the `k - 1`
+    /// speculative self-feeds are left for the caller to roll back
+    /// after the verify step.
+    pub fn propose(
+        &self,
+        drafts: &mut [&mut DraftSession<'_>],
+        catchups: &[Vec<i32>],
+    ) -> Result<Vec<Vec<i32>>> {
+        if drafts.len() != catchups.len() {
+            bail!("propose: {} catchups for {} draft sessions", catchups.len(), drafts.len());
+        }
+        if drafts.is_empty() {
+            return Ok(Vec::new());
+        }
+        let n = drafts.len();
+        let mut props: Vec<Vec<i32>> = vec![Vec::with_capacity(self.k); n];
+        // Greedy draws consume nothing from this RNG (pinned in
+        // `coordinator::generate`); it exists only to satisfy the
+        // sampler's signature.
+        let mut scratch_rng = Pcg::new(0, 0x5bec);
+        {
+            let widths: Vec<usize> = catchups.iter().map(Vec::len).collect();
+            let toks: Vec<i32> = catchups.iter().flatten().copied().collect();
+            let mut sess: Vec<&mut NativeSession> =
+                drafts.iter_mut().map(|d| &mut d.session).collect();
+            let lgs = step_batched(&mut sess, &toks, &widths)?;
+            for (p, lg) in props.iter_mut().zip(&lgs) {
+                p.push(sample_logits(lg.row(0), 0.0, 0, &mut scratch_rng) as i32);
+            }
+        }
+        for (d, c) in drafts.iter_mut().zip(catchups) {
+            d.fed += c.len();
+        }
+        for _ in 1..self.k {
+            let next: Vec<i32> = props.iter().map(|p| *p.last().expect("non-empty")).collect();
+            let mut sess: Vec<&mut NativeSession> =
+                drafts.iter_mut().map(|d| &mut d.session).collect();
+            let lgs = decode_batched(&mut sess, &next)?;
+            for (p, lg) in props.iter_mut().zip(&lgs) {
+                p.push(sample_logits(lg.row(0), 0.0, 0, &mut scratch_rng) as i32);
+            }
+        }
+        Ok(props)
+    }
+}

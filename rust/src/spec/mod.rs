@@ -1,0 +1,61 @@
+//! Draft-and-verify speculative decoding on the fused serve path.
+//!
+//! # The idea, and why it suits SwitchHead
+//!
+//! Autoregressive decoding is latency-bound: one fused step per emitted
+//! token, however cheap the per-token math. Speculative decoding breaks
+//! the serialization with a tiny **draft** model that proposes `k`
+//! tokens per request per tick; the target model then checks all `k`
+//! in ONE fused step of width `k + 1` ([`step_batched_full`] keeps
+//! every fed position's logits) and commits the longest verified
+//! prefix plus one freshly sampled token. When the draft agrees often,
+//! a request emits up to `k + 1` tokens per target step.
+//!
+//! The trade is `(draft cost + verify cost) per cycle` against
+//! `accepted tokens per cycle` — the break-even acceptance rate is
+//! `((draft + verify) / plain_step − 1) / k`. SwitchHead lowers that
+//! bar from both sides: the verify step is a width-`k+1` chunk whose
+//! MoE projections run as one expert-grouped dispatch (near-decode
+//! cost per extra position, paper Sec. 3's cheap-attention argument),
+//! and the σ-MoE config family provides naturally tiny draft models
+//! sharing the target's vocabulary. The serve bench measures and
+//! reports the break-even point (`benches/serve_throughput.rs`).
+//!
+//! # Exactness: sample-and-match
+//!
+//! [`verify::accept_tokens`] walks the verified logits *sampling each
+//! position with the request's own RNG* and accepts while the sample
+//! equals the draft's proposal. A sequential non-speculative decode
+//! would make exactly the same `sample_logits` calls on bit-identical
+//! logits (the fused-chunk equivalence contract) with the same RNG
+//! state — so emitted streams are **bit-identical to non-speculative
+//! decoding in every sampling mode**, greedy and temperature/top-k
+//! alike, which subsumes distribution-correctness. Draft proposals are
+//! always greedy and greedy consumes no RNG draw
+//! ([`sample_logits`](crate::coordinator::generate::sample_logits)),
+//! so drafting never perturbs a request's sampling stream.
+//!
+//! # Plumbing
+//!
+//! [`draft::DraftEngine`] wraps the small `NativeEngine`; each admitted
+//! request gets a [`draft::DraftSession`] in the SAME shared
+//! [`KvPool`](crate::model::KvPool) (the models must share `d_head`),
+//! with its demand included in the admission reservation. Both target
+//! and draft sessions open with an eviction lag of `k + 1`
+//! ([`NativeSession::open_in_pool_spec`]) so rejected positions roll
+//! back safely ([`NativeSession::rollback_to`]); on preemption the
+//! draft session drops with the target one, and resume replays the
+//! committed stream into a fresh draft session, so speculative resume
+//! stays bit-identical too. `serve::Scheduler` owns the per-tick
+//! choreography (draft follow/catch-up/propose → fused verify →
+//! accept/rollback); see its module docs.
+//!
+//! [`step_batched_full`]: crate::model::step_batched_full
+//! [`NativeSession::open_in_pool_spec`]: crate::model::NativeSession::open_in_pool_spec
+//! [`NativeSession::rollback_to`]: crate::model::NativeSession::rollback_to
+
+pub mod draft;
+pub mod verify;
+
+pub use draft::{DraftEngine, DraftSession};
+pub use verify::{accept_tokens, SpecOutcome};

@@ -1,0 +1,171 @@
+//! The accept/reject walk of speculative decoding — the exactness core.
+//!
+//! One verify step hands this module, per request, the `k + 1` rows of
+//! target logits produced by feeding `[t, d_1 .. d_k]` (the committed
+//! next token plus the draft's proposals) through
+//! [`step_batched_full`](crate::model::step_batched_full). Row `j` is
+//! the target's next-token distribution after consuming `t, d_1 ..
+//! d_j` — bit-identical to what `j + 1` sequential width-1 decodes
+//! would have produced. [`accept_tokens`] then replays, in order, the
+//! exact sampling calls a sequential decode would have made.
+
+use crate::coordinator::generate::sample_logits;
+use crate::runtime::api::Logits;
+use crate::serve::request::SamplingParams;
+use crate::util::rng::Pcg;
+
+/// Result of one request's accept walk.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpecOutcome {
+    /// Draft proposals accepted (committed into the stream). The
+    /// target session's committed length advances by `accepted + 1`
+    /// minus any EOS/budget truncation the scheduler applies.
+    pub accepted: usize,
+    /// Tokens to emit, in stream order: the accepted proposals
+    /// followed by one final sampled token (the correction after a
+    /// rejection, or the bonus token after a fully accepted draft).
+    /// `accepted + 1` long — except when the walk stops on an
+    /// *accepted* EOS proposal, where it is exactly `accepted` long
+    /// (EOS is the last accepted token; nothing may follow it).
+    pub emitted: Vec<i32>,
+}
+
+/// Walk `k + 1` verified logit rows against the draft's `k` proposals,
+/// sampling each position with the request's own RNG (sample-and-match):
+///
+/// * position `j` samples `x_j = sample_logits(row_j, …, rng)`;
+/// * if `j < k` and `x_j == proposals[j]`, the proposal is accepted;
+/// * if `x_j` is the request's EOS token, emit it and stop — the
+///   stream may never contain tokens past EOS (an agreeing EOS
+///   proposal still counts as accepted);
+/// * while accepted and not EOS, the walk continues;
+/// * otherwise `x_j` is emitted as the final token (the rejection's
+///   correction, or — at `j == k` — the bonus token) and the walk
+///   stops.
+///
+/// Exactness: a sequential non-speculative decode makes the same
+/// `sample_logits` calls on bit-identical logits with the same RNG
+/// state, so the emitted prefix AND the post-walk RNG state match the
+/// sequential stream exactly, in every sampling mode. (RNG draws past
+/// a truncation the caller applies afterwards — token budget — are
+/// irrelevant: the request retires and its RNG is never used again.)
+pub fn accept_tokens(
+    verified: &Logits,
+    proposals: &[i32],
+    sampling: &SamplingParams,
+    rng: &mut Pcg,
+) -> SpecOutcome {
+    let k = proposals.len();
+    debug_assert_eq!(verified.rows(), k + 1, "verify logits must cover k + 1 positions");
+    let mut emitted = Vec::with_capacity(k + 1);
+    let mut accepted = 0usize;
+    for j in 0..=k {
+        let tok = sample_logits(verified.row(j), sampling.temperature, sampling.top_k, rng) as i32;
+        emitted.push(tok);
+        let matched = j < k && tok == proposals[j];
+        if matched {
+            accepted += 1;
+        }
+        if sampling.eos_token == Some(tok) || !matched {
+            break;
+        }
+    }
+    SpecOutcome { accepted, emitted }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Rows of width-4 "logits" whose argmax is the given token.
+    fn rows(argmaxes: &[i32]) -> Logits {
+        let vocab = 4usize;
+        let mut data = Vec::new();
+        for &t in argmaxes {
+            for v in 0..vocab {
+                data.push(if v as i32 == t { 5.0 } else { 0.1 * v as f32 });
+            }
+        }
+        Logits::new(data, argmaxes.len(), vocab).unwrap()
+    }
+
+    fn greedy() -> SamplingParams {
+        SamplingParams::default()
+    }
+
+    #[test]
+    fn full_acceptance_emits_bonus() {
+        let mut rng = Pcg::new(1, 1);
+        let out = accept_tokens(&rows(&[2, 3, 1, 0]), &[2, 3, 1], &greedy(), &mut rng);
+        assert_eq!(out.accepted, 3);
+        assert_eq!(out.emitted, vec![2, 3, 1, 0]);
+    }
+
+    #[test]
+    fn rejection_resamples_from_target_row() {
+        let mut rng = Pcg::new(1, 1);
+        // Draft diverges at position 1: target's row says 0, draft said 1.
+        let out = accept_tokens(&rows(&[2, 0, 1, 3]), &[2, 1, 1], &greedy(), &mut rng);
+        assert_eq!(out.accepted, 1);
+        assert_eq!(out.emitted, vec![2, 0], "correction comes from the target's own row");
+    }
+
+    #[test]
+    fn immediate_rejection_still_emits_one_token() {
+        let mut rng = Pcg::new(1, 1);
+        let out = accept_tokens(&rows(&[3, 0]), &[1], &greedy(), &mut rng);
+        assert_eq!(out.accepted, 0);
+        assert_eq!(out.emitted, vec![3]);
+    }
+
+    #[test]
+    fn eos_truncates_mid_window() {
+        let mut rng = Pcg::new(1, 1);
+        let mut sp = greedy();
+        sp.eos_token = Some(3);
+        // Proposals all agree, but position 1 samples EOS: the walk
+        // must stop there and never emit positions 2...
+        let out = accept_tokens(&rows(&[2, 3, 1, 0]), &[2, 3, 1], &sp, &mut rng);
+        assert_eq!(out.emitted, vec![2, 3], "nothing may be emitted past EOS");
+        assert_eq!(out.accepted, 2, "the agreeing EOS proposal itself is accepted");
+    }
+
+    #[test]
+    fn sampled_walk_matches_sequential_draws_and_rng_state() {
+        // Temperature sampling: the walk's draws must be exactly the
+        // draws a sequential decode makes on the same rows, leaving
+        // the RNG in the same state.
+        let vocab = 16usize;
+        let mut data = Vec::new();
+        let mut g = Pcg::new(9, 9);
+        for _ in 0..5 * vocab {
+            data.push((g.below(1000) as f32) / 100.0);
+        }
+        let lg = Logits::new(data, 5, vocab).unwrap();
+        let sp = SamplingParams { temperature: 0.9, top_k: 8, ..SamplingParams::default() };
+
+        for trial in 0..32u64 {
+            let mut rng_spec = Pcg::new(trial, 0x5eed);
+            let mut rng_seq = Pcg::new(trial, 0x5eed);
+            // A draft that happens to propose whatever sequential
+            // sampling would pick for the first two positions, then
+            // diverges (vocab is 16, proposal 99 never matches).
+            let p0 = sample_logits(lg.row(0), sp.temperature, sp.top_k, &mut rng_seq.clone());
+            let proposals = vec![p0 as i32, 99, 99, 99];
+            let out = accept_tokens(&lg, &proposals, &sp, &mut rng_spec);
+
+            // Sequential oracle: same rows, same RNG, draw until the
+            // walk would have stopped.
+            let mut seq = Vec::new();
+            for j in 0..out.emitted.len() {
+                seq.push(sample_logits(lg.row(j), sp.temperature, sp.top_k, &mut rng_seq) as i32);
+            }
+            assert_eq!(out.emitted, seq, "trial {trial}: emitted must equal sequential draws");
+            assert_eq!(
+                rng_spec.below(1 << 30),
+                rng_seq.below(1 << 30),
+                "trial {trial}: RNG streams must stay in lock-step"
+            );
+        }
+    }
+}

@@ -303,7 +303,12 @@ fn scheduler_sampled_streams_are_batch_invariant() {
     let reqs: Vec<GenRequest> = (0..4)
         .map(|i| {
             let mut r = synth_request(&cfg, &mut rng, 2 + i, 6);
-            r.sampling = SamplingParams { temperature: 1.0, top_k: 5, seed: 100 + i as u64 };
+            r.sampling = SamplingParams {
+                temperature: 1.0,
+                top_k: 5,
+                seed: 100 + i as u64,
+                ..SamplingParams::default()
+            };
             r
         })
         .collect();
@@ -445,6 +450,7 @@ fn eight_short_sessions_peak_below_half_of_eight_rings() {
         kv_page_cols: Some(4),
         kv_pool_pages: None,
         prefill_chunk: 64,
+        ..ServeOpts::default()
     };
     let mut sched = Scheduler::new(&engine, &opts).unwrap();
     let mut rng = Pcg::new(71, 6);
@@ -795,7 +801,8 @@ fn preemption_requeues_and_resumes_bit_identically() {
     // Sampled (not greedy) low-priority request: resume must continue
     // the mid-stream RNG, which greedy would not detect.
     let mut low = synth_request(&cfg, &mut rng, 2, 10).with_deadline_ticks(1);
-    low.sampling = SamplingParams { temperature: 1.0, top_k: 5, seed: 900 };
+    low.sampling =
+        SamplingParams { temperature: 1.0, top_k: 5, seed: 900, ..SamplingParams::default() };
     let high = synth_request(&cfg, &mut rng, 2, 3).with_priority(5);
     let want_low = oracle_generate(&engine, &low);
     let want_high = oracle_generate(&engine, &high);
@@ -903,7 +910,7 @@ fn admission_failure_reports_error_output() {
 fn trace_generator_is_seeded_and_drives_to_oracle_streams() {
     let cfg = sh_xl();
     let engine = NativeEngine::new(&cfg, 11).unwrap();
-    let sampling = SamplingParams { temperature: 0.0, top_k: 0, seed: 7 };
+    let sampling = SamplingParams { temperature: 0.0, top_k: 0, seed: 7, eos_token: None };
     let spec = LoadSpec {
         n: 16,
         arrivals: Arrivals::Pareto { rate: 0.5, alpha: 1.5 },

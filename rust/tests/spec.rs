@@ -1,0 +1,341 @@
+//! Speculative-decoding contract tests.
+//!
+//! The load-bearing claim: a scheduler built with
+//! [`Scheduler::with_draft`] — draft proposals, one fused width-`k+1`
+//! verify step per decoding row, sample-and-match acceptance, page-safe
+//! rollback under the `k + 1` eviction lag — emits BIT-IDENTICAL token
+//! streams to the non-speculative scheduler and to the sequential
+//! per-request oracle, at every draft length `k` in {1, 2, 4, 8},
+//! across attention families and positional schemes, at 1 and 4 kernel
+//! threads, in greedy AND temperature/top-k sampling modes. On top of
+//! that: EOS early-stop retires a request the tick its
+//! [`SamplingParams::eos_token`] is sampled (never emitting past it,
+//! [`FinishReason::Eos`]), preemption mid-draft resumes bit-identically
+//! (the draft session is dropped and rebuilt by replay), the streaming
+//! callback sees exactly the finished stream in per-tick pieces, and a
+//! drained scheduler returns every page and reservation of BOTH models
+//! to the shared pool.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use switchhead::config::ModelConfig;
+use switchhead::coordinator::generate::sample_logits;
+use switchhead::kernels;
+use switchhead::model::{NativeEngine, NativeSession};
+use switchhead::runtime::{Session, TokenBatch};
+use switchhead::serve::{
+    FinishReason, GenRequest, SamplingParams, Scheduler, ServeOpts, SAMPLE_STREAM,
+};
+use switchhead::util::json::Json;
+use switchhead::util::rng::Pcg;
+
+fn cfg_json(text: &str) -> ModelConfig {
+    let cfg = ModelConfig::from_json(&Json::parse(text).unwrap()).unwrap();
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn sh_xl() -> ModelConfig {
+    cfg_json(
+        r#"{"name":"sh-xl","family":"switchhead","pos":"xl","vocab_size":64,
+            "d_model":16,"n_layers":2,"n_heads":2,"d_head":8,"d_ff":32,
+            "seq_len":8,"batch_size":2,"att_n_experts":3,"att_k":2}"#,
+    )
+}
+
+/// RoPE target with a 16-position window so the k = 8 sweep fits the
+/// `k + 1 <= ctx_len` verify-chunk constraint (rope has no XL context
+/// doubling).
+fn sh_rope() -> ModelConfig {
+    cfg_json(
+        r#"{"name":"sh-rope","family":"switchhead","pos":"rope","vocab_size":64,
+            "d_model":16,"n_layers":2,"n_heads":2,"d_head":8,"d_ff":32,
+            "seq_len":16,"batch_size":2,"att_n_experts":3,"att_k":2}"#,
+    )
+}
+
+fn switchall_xl() -> ModelConfig {
+    cfg_json(
+        r#"{"name":"switchall-xl","family":"switchhead","pos":"xl","vocab_size":64,
+            "d_model":16,"n_layers":2,"n_heads":2,"d_head":8,"seq_len":8,
+            "batch_size":2,"att_n_experts":3,"att_k":2,"moe_k":true,"moe_q":true,
+            "mlp_type":"sigma_moe","mlp_n_experts":3,"mlp_k":2,"mlp_d_expert":8}"#,
+    )
+}
+
+/// The 1-layer draft: shares the targets' vocab (proposals are target
+/// token ids) and d_head (draft sessions draw from the target's KV
+/// pool), and is otherwise as small as the config validator allows.
+fn draft_cfg() -> ModelConfig {
+    cfg_json(
+        r#"{"name":"sh-draft","family":"switchhead","pos":"xl","vocab_size":64,
+            "d_model":8,"n_layers":1,"n_heads":1,"d_head":8,"d_ff":16,
+            "seq_len":8,"batch_size":2,"att_n_experts":2,"att_k":1}"#,
+    )
+}
+
+/// Sequential single-request oracle replaying exactly the scheduler's
+/// sampling procedure (same RNG stream, same sampling params, EOS
+/// early-stop included).
+fn oracle_generate(engine: &NativeEngine, req: &GenRequest) -> Vec<i32> {
+    let mut session = NativeSession::open(&engine.model, 1).unwrap();
+    let s = &req.sampling;
+    let mut rng = Pcg::new(s.seed, SAMPLE_STREAM);
+    let batch = TokenBatch::new(req.prompt.clone(), 1, req.prompt.len()).unwrap();
+    let mut logits = session.prefill(&batch).unwrap();
+    let mut tokens = vec![sample_logits(logits.row(0), s.temperature, s.top_k, &mut rng) as i32];
+    while tokens.len() < req.max_new_tokens && s.eos_token != tokens.last().copied() {
+        logits = session.decode(&[*tokens.last().unwrap()]).unwrap();
+        tokens.push(sample_logits(logits.row(0), s.temperature, s.top_k, &mut rng) as i32);
+    }
+    tokens
+}
+
+fn synth_request(cfg: &ModelConfig, rng: &mut Pcg, plen: usize, max_new: usize) -> GenRequest {
+    let prompt: Vec<i32> = (0..plen).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+    GenRequest::greedy(prompt, max_new)
+}
+
+/// Run `reqs` through a scheduler — speculative when `draft` is given —
+/// and return outputs sorted by id, asserting the drained pool holds
+/// nothing.
+fn run_sched(
+    engine: &NativeEngine,
+    draft: Option<&NativeEngine>,
+    opts: &ServeOpts,
+    reqs: &[GenRequest],
+) -> Vec<switchhead::serve::GenOutput> {
+    let mut sched = match draft {
+        Some(d) => Scheduler::with_draft(engine, d, opts).unwrap(),
+        None => Scheduler::new(engine, opts).unwrap(),
+    };
+    for r in reqs {
+        sched.submit(r.clone()).unwrap();
+    }
+    let mut outs = sched.run_until_idle(100_000).unwrap();
+    outs.sort_by_key(|o| o.id);
+    let ps = sched.pool_stats();
+    assert_eq!(
+        (ps.in_use, ps.reserved),
+        (0, 0),
+        "drained scheduler must return every page and reservation"
+    );
+    outs
+}
+
+/// The acceptance matrix: greedy speculative serving is bit-identical
+/// to the plain scheduler and the sequential oracle for every config in
+/// {sh-xl, sh-rope, switchall} x k in {1, 2, 4, 8} x {1, 4} threads.
+#[test]
+fn speculative_greedy_matches_plain_all_configs_and_widths() {
+    for cfg in [sh_xl(), sh_rope(), switchall_xl()] {
+        let engine = NativeEngine::new(&cfg, 11).unwrap();
+        let draft = NativeEngine::new(&draft_cfg(), 43).unwrap();
+        let mut rng = Pcg::new(171, 4);
+        let reqs: Vec<GenRequest> = (0..5)
+            .map(|i| synth_request(&cfg, &mut rng, 1 + i % 4, 3 + (i * 2) % 5))
+            .collect();
+        let expected: Vec<Vec<i32>> = reqs.iter().map(|r| oracle_generate(&engine, r)).collect();
+
+        for threads in [1usize, 4] {
+            kernels::set_threads(threads);
+            let plain_opts = ServeOpts { slots: 2, queue_cap: reqs.len(), ..ServeOpts::default() };
+            let plain = run_sched(&engine, None, &plain_opts, &reqs);
+            for (i, o) in plain.iter().enumerate() {
+                assert_eq!(o.tokens, expected[i], "{}: plain diverged from oracle", cfg.name);
+                assert_eq!((o.spec_drafted, o.spec_accepted), (0, 0), "plain must not draft");
+            }
+
+            for k in [1usize, 2, 4, 8] {
+                let opts = ServeOpts {
+                    slots: 2,
+                    queue_cap: reqs.len(),
+                    spec_k: k,
+                    ..ServeOpts::default()
+                };
+                let outs = run_sched(&engine, Some(&draft), &opts, &reqs);
+                assert_eq!(outs.len(), reqs.len());
+                for (i, o) in outs.iter().enumerate() {
+                    assert_eq!(o.finish, FinishReason::Length);
+                    assert_eq!(
+                        o.tokens, expected[i],
+                        "{} k={k} threads={threads}: speculative stream diverged",
+                        cfg.name
+                    );
+                    assert!(o.spec_accepted <= o.spec_drafted);
+                }
+                // Speculation actually ran: every multi-token request
+                // saw at least one k-token draft window.
+                let drafted: u64 = outs.iter().map(|o| o.spec_drafted).sum();
+                assert!(drafted > 0, "{} k={k}: no draft proposals recorded", cfg.name);
+            }
+        }
+    }
+}
+
+/// Stochastic sampling survives speculation exactly: the accept walk
+/// makes the same `sample_logits` calls on bit-identical logits with
+/// the same per-request RNG as a sequential decode, so temperature /
+/// top-k streams match the oracle token for token.
+#[test]
+fn speculative_sampled_streams_match_oracle() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let draft = NativeEngine::new(&draft_cfg(), 43).unwrap();
+    let mut rng = Pcg::new(181, 6);
+    let reqs: Vec<GenRequest> = (0..4)
+        .map(|i| {
+            let mut r = synth_request(&cfg, &mut rng, 2 + i, 6);
+            r.sampling = SamplingParams {
+                temperature: 1.0,
+                top_k: 5,
+                seed: 300 + i as u64,
+                ..SamplingParams::default()
+            };
+            r
+        })
+        .collect();
+    let expected: Vec<Vec<i32>> = reqs.iter().map(|r| oracle_generate(&engine, r)).collect();
+
+    let opts = ServeOpts { slots: 3, queue_cap: reqs.len(), spec_k: 4, ..ServeOpts::default() };
+    let outs = run_sched(&engine, Some(&draft), &opts, &reqs);
+    for (i, o) in outs.iter().enumerate() {
+        assert_eq!(
+            o.tokens, expected[i],
+            "request {i}: sampled stream changed under speculation"
+        );
+    }
+}
+
+/// EOS early-stop, speculative and plain: the request retires with
+/// [`FinishReason::Eos`] the tick its EOS token is sampled, the stream
+/// ends exactly at the first EOS occurrence (the accept walk never
+/// emits past it, even when EOS lands mid-draft-window), and both
+/// schedulers agree with the truncated oracle.
+#[test]
+fn eos_early_stop_spec_and_plain() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let draft = NativeEngine::new(&draft_cfg(), 43).unwrap();
+    let mut rng = Pcg::new(191, 8);
+    let base = synth_request(&cfg, &mut rng, 3, 10);
+    let full = oracle_generate(&engine, &base);
+    assert_eq!(full.len(), 10);
+    // Pick an EOS id that provably appears mid-stream, then expect the
+    // prefix through its FIRST occurrence.
+    let eos = full[4];
+    let cut = full.iter().position(|&t| t == eos).unwrap();
+    let expected = &full[..=cut];
+    assert!(expected.len() < full.len(), "EOS must genuinely stop early");
+
+    let mut req = base.clone();
+    req.sampling.eos_token = Some(eos);
+
+    for draft_opt in [None, Some(&draft)] {
+        let opts = ServeOpts { slots: 1, queue_cap: 1, spec_k: 4, ..ServeOpts::default() };
+        let outs = run_sched(&engine, draft_opt, &opts, &[req.clone()]);
+        assert_eq!(outs.len(), 1);
+        let o = &outs[0];
+        let mode = if draft_opt.is_some() { "speculative" } else { "plain" };
+        assert_eq!(o.finish, FinishReason::Eos, "{mode}: EOS must retire the request");
+        assert_eq!(o.tokens, expected, "{mode}: stream must end at the first EOS");
+        assert_eq!(o.tokens.iter().filter(|&&t| t == eos).count(), 1);
+    }
+}
+
+/// Preemption mid-draft: an over-budget low-priority SAMPLED request is
+/// preempted while its draft session is live, re-queued, and resumes
+/// BIT-IDENTICALLY — the draft session is dropped at preemption and
+/// rebuilt by replay, the RNG continues mid-stream, the whole-life
+/// speculative counters survive, and the pool drains to zero.
+#[test]
+fn preemption_mid_draft_resumes_bit_identically() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let draft = NativeEngine::new(&draft_cfg(), 43).unwrap();
+    let mut rng = Pcg::new(201, 5);
+    let mut low = synth_request(&cfg, &mut rng, 2, 10).with_deadline_ticks(1);
+    low.sampling =
+        SamplingParams { temperature: 1.0, top_k: 5, seed: 901, ..SamplingParams::default() };
+    let high = synth_request(&cfg, &mut rng, 2, 3).with_priority(5);
+    let want_low = oracle_generate(&engine, &low);
+    let want_high = oracle_generate(&engine, &high);
+
+    let opts = ServeOpts {
+        slots: 1,
+        queue_cap: 4,
+        prefill_chunk: 64,
+        spec_k: 4,
+        ..ServeOpts::default()
+    };
+    let mut sched = Scheduler::with_draft(&engine, &draft, &opts).unwrap();
+    let low_id = sched.submit(low).unwrap();
+    sched.tick().unwrap(); // prefill + first token (service tick 1)
+    sched.tick().unwrap(); // speculative decode (service tick 2 > deadline 1)
+    let high_id = sched.submit(high).unwrap();
+    let r = sched.tick().unwrap();
+    assert_eq!(r.preempted, 1, "over-budget low-priority row must be preempted mid-draft");
+    assert_eq!(r.admitted, 1, "high-priority request admitted into the freed slot");
+
+    let mut outs = sched.run_until_idle(100_000).unwrap();
+    outs.sort_by_key(|o| o.id);
+    assert_eq!(outs.len(), 2);
+    assert_eq!(outs[0].id, low_id);
+    assert_eq!(outs[0].finish, FinishReason::Length);
+    assert_eq!(outs[0].tokens, want_low, "preempt + resume changed the speculative stream");
+    assert!(outs[0].preemptions >= 1);
+    assert!(outs[0].spec_drafted > 0, "whole-life draft counter must survive preemption");
+    assert_eq!(outs[1].id, high_id);
+    assert_eq!(outs[1].tokens, want_high);
+
+    let st = sched.stats();
+    assert!(st.preemptions >= 1 && st.resumes >= 1);
+    assert!(st.drafted >= st.accepted);
+    let ps = sched.pool_stats();
+    assert_eq!((ps.in_use, ps.reserved), (0, 0), "spec preemption cycle leaked pool state");
+}
+
+/// The streaming sink: per-tick callbacks concatenate to exactly each
+/// request's finished stream — in order, nothing duplicated, nothing
+/// dropped — for the plain AND speculative schedulers (where a tick may
+/// deliver several accepted tokens at once).
+#[test]
+fn streaming_callback_concatenates_to_final_streams() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let draft = NativeEngine::new(&draft_cfg(), 43).unwrap();
+    let mut rng = Pcg::new(211, 7);
+    let reqs: Vec<GenRequest> =
+        (0..4).map(|i| synth_request(&cfg, &mut rng, 1 + i, 4 + i)).collect();
+
+    for draft_opt in [None, Some(&draft)] {
+        let opts =
+            ServeOpts { slots: 2, queue_cap: reqs.len(), spec_k: 3, ..ServeOpts::default() };
+        let mut sched = match draft_opt {
+            Some(d) => Scheduler::with_draft(&engine, d, &opts).unwrap(),
+            None => Scheduler::new(&engine, &opts).unwrap(),
+        };
+        let streamed: Rc<RefCell<HashMap<u64, Vec<i32>>>> = Rc::new(RefCell::new(HashMap::new()));
+        let sink = Rc::clone(&streamed);
+        sched.set_on_tokens(move |id, toks| {
+            sink.borrow_mut().entry(id).or_default().extend_from_slice(toks);
+        });
+        for r in &reqs {
+            sched.submit(r.clone()).unwrap();
+        }
+        let outs = sched.run_until_idle(100_000).unwrap();
+        assert_eq!(outs.len(), reqs.len());
+        let streamed = streamed.borrow();
+        let mode = if draft_opt.is_some() { "speculative" } else { "plain" };
+        for o in &outs {
+            assert_eq!(
+                streamed.get(&o.id),
+                Some(&o.tokens),
+                "{mode}: streamed tokens must concatenate to request {}'s output",
+                o.id
+            );
+        }
+    }
+}
