@@ -14,7 +14,7 @@ CARGO ?= cargo
 CLIPPY_ALLOW = -A clippy::needless_range_loop -A clippy::too_many_arguments \
                -A clippy::type_complexity -A clippy::manual_memcpy
 
-.PHONY: check build test lint doc artifacts smoke bench bench-serve bench-tables clean
+.PHONY: check build test lint doc artifacts smoke soak bench bench-serve bench-tables clean
 
 ## Tier-1: build + full test suite + lint + doc gates, artifact-free.
 ## The golden-vector, decode, kv-cache and serve suites re-run under
@@ -24,7 +24,11 @@ CLIPPY_ALLOW = -A clippy::needless_range_loop -A clippy::too_many_arguments \
 ## the degenerate one-position-per-tick chunking must pass the same
 ## contracts); the serve + spec suites re-run under SPEC_K=4 at 4
 ## threads (speculative streams must stay bit-identical to plain
-## decoding at the default draft width, fused across threads); a
+## decoding at the default draft width, fused across threads); the
+## serve + spec + chaos suites re-run with the per-tick invariant
+## auditor forced on (PALLAS_AUDIT=1 — pool conservation, paged-KV
+## structure and stream monotonicity re-checked after every tick,
+## including every chaos-injected fault tick); a
 ## 1-thread step_latency smoke keeps the bench harness and its JSON
 ## emitter compiling and running; and a 1-thread serve smoke (4
 ## concurrent tiny-sh requests through the continuous-batching
@@ -39,11 +43,14 @@ check:
 	PALLAS_THREADS=4 $(CARGO) test -q --test native --test decode --test kv_cache --test serve
 	PREFILL_CHUNK=1 $(CARGO) test -q --test serve
 	SPEC_K=4 PALLAS_THREADS=4 $(CARGO) test -q --test serve --test spec
+	PALLAS_AUDIT=1 $(CARGO) test -q --test serve --test spec --test chaos
 	PALLAS_THREADS=1 SWITCHHEAD_BENCH_SMOKE=1 $(CARGO) bench --bench step_latency
 	PALLAS_THREADS=1 SWITCHHEAD_BENCH_SMOKE=1 $(CARGO) bench --bench serve_throughput
 	grep -q ttft_p99_ms target/BENCH_serve_throughput.smoke.json
 	grep -q acceptance_rate target/BENCH_serve_throughput.smoke.json
 	grep -q scheduler_overhead target/BENCH_serve_throughput.smoke.json
+	grep -q faults_injected target/BENCH_serve_throughput.smoke.json
+	grep -q goodput_tok_s target/BENCH_serve_throughput.smoke.json
 	$(MAKE) lint
 	$(MAKE) doc
 
@@ -74,6 +81,15 @@ bench: build
 
 ## Historical alias for the artifact-free latency run.
 smoke: bench
+
+## Long-running chaos soak: the #[ignore]d seeded sweep in
+## rust/tests/chaos.rs — 16-request random fault plans across many
+## seeds and both arrival processes, plus a speculative run faulted at
+## every site, all with the invariant auditor on. Not part of tier-1
+## (`make check` runs the fast chaos suite); run before serving-layer
+## releases or after touching scheduler fault paths.
+soak: build
+	PALLAS_AUDIT=1 $(CARGO) test --release --test chaos -- --ignored --nocapture
 
 ## Continuous-batching serving bench: aggregate decode tok/s,
 ## p50/p95/p99 inter-token latency and time-to-first-token for 8

@@ -50,8 +50,8 @@ use switchhead::kernels;
 use switchhead::model::{NativeEngine, PoolStats};
 use switchhead::runtime::{Backend, Session, TokenBatch};
 use switchhead::serve::{
-    drive, synth_requests, GenRequest, SamplingParams, Scheduler, ServeOpts, ServeStats,
-    SAMPLE_STREAM,
+    drive, synth_requests, FaultPlan, FinishReason, GenRequest, SamplingParams, Scheduler,
+    ServeOpts, ServeStats, SAMPLE_STREAM,
 };
 use switchhead::util::json::Json;
 use switchhead::util::rng::Pcg;
@@ -221,6 +221,75 @@ fn run_spec(
     Some((RunResult { token_streams: streams, total_tokens, secs, lat_ms, ttft_ms }, json))
 }
 
+/// Chaos scenario: the same traffic under a fixed seeded fault plan
+/// with the per-tick invariant auditor on. Reports goodput (tokens
+/// from requests that finished clean), the fault/error/recovery
+/// counts, and breaker trips — and asserts the robustness contract on
+/// the bench path too: surviving streams bit-identical to the serial
+/// oracle, `faults_injected == errors + retries_recovered`, auditor
+/// green every tick.
+fn run_chaos(engine: &NativeEngine, reqs: &[GenRequest], slots: usize, serial: &RunResult) -> Json {
+    let plan = FaultPlan::random(0xFA17, 6, 64, reqs.len() as u64);
+    let opts = ServeOpts {
+        slots,
+        queue_cap: reqs.len().max(1),
+        audit: true,
+        faults: Some(plan),
+        ..ServeOpts::default()
+    };
+    let mut sched = Scheduler::new(engine, &opts).unwrap();
+    let t0 = Instant::now();
+    drive(&mut sched, reqs.to_vec(), |_r| {}).unwrap();
+    let secs = t0.elapsed().as_secs_f64();
+    let st = sched.stats().clone();
+    let mut outs = sched.drain_finished();
+    outs.sort_by_key(|o| o.id);
+    let mut good_tokens = 0usize;
+    let mut errored = 0usize;
+    for o in &outs {
+        match o.finish {
+            FinishReason::Length => {
+                assert_eq!(
+                    o.tokens, serial.token_streams[o.id as usize],
+                    "chaos: surviving request {} diverged from the serial oracle",
+                    o.id
+                );
+                good_tokens += o.tokens.len();
+            }
+            FinishReason::Error => {
+                assert!(o.error.is_some(), "chaos: error output without a reason");
+                errored += 1;
+            }
+            other => panic!("chaos: unexpected finish {other:?}"),
+        }
+    }
+    assert_eq!(
+        st.faults_injected,
+        st.errors + st.retries_recovered,
+        "chaos: fault accounting identity broken"
+    );
+    assert_eq!(st.audit_ticks, st.ticks, "chaos: auditor skipped a tick");
+    println!(
+        "chaos: {} fault(s) injected, {} request(s) errored, {} recovered, \
+         {:.0} goodput tok/s over {} audited tick(s)",
+        st.faults_injected,
+        errored,
+        st.retries_recovered,
+        good_tokens as f64 / secs.max(1e-9),
+        st.audit_ticks,
+    );
+    Json::from_pairs(vec![
+        ("faults_injected", num(st.faults_injected as f64)),
+        ("errors", num(st.errors as f64)),
+        ("retries_recovered", num(st.retries_recovered as f64)),
+        ("spec_trips", num(st.spec_trips as f64)),
+        ("audit_ticks", num(st.audit_ticks as f64)),
+        ("errored_requests", num(errored as f64)),
+        ("error_rate", num(errored as f64 / outs.len().max(1) as f64)),
+        ("goodput_tok_s", num(good_tokens as f64 / secs.max(1e-9))),
+    ])
+}
+
 /// Head-of-line scenario: short decoding requests co-resident with one
 /// ctx-length prompt arriving mid-flight, at a given `prefill_chunk`.
 /// Returns (max per-tick prefill positions, co-resident ITL p99 ms,
@@ -308,6 +377,10 @@ fn bench_one(
     // Speculative decoding: same traffic, draft-and-verify scheduler.
     let spec = run_spec(&engine, &cfg, &reqs, slots, &serial, &batched_stats);
 
+    // Chaos: same traffic again, now under a seeded fault plan with
+    // the per-tick auditor on — measures goodput under injected faults.
+    let chaos = run_chaos(&engine, &reqs, slots, &serial);
+
     // Head-of-line interference: a ctx-length prompt next to short
     // decoders, chunked (bounded per-tick prefill) vs monolithic
     // (whole prompt in one tick).
@@ -392,6 +465,7 @@ fn bench_one(
         ("ring_kv_floats", num(ring_kv_floats as f64)),
         ("paged_over_ring_kv", num(kv_ratio)),
     ];
+    pairs.push(("chaos", chaos));
     if let Some((_, sj)) = spec {
         pairs.push(("spec", sj));
     }
@@ -457,6 +531,9 @@ fn main() {
             "acceptance_rate",
             "breakeven_acceptance",
             "scheduler_overhead",
+            "faults_injected",
+            "retries_recovered",
+            "goodput_tok_s",
         ] {
             assert!(text.contains(key), "smoke JSON is missing the `{key}` field");
         }

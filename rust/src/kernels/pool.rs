@@ -33,7 +33,10 @@
 //!   chunk schedule.
 //! * **Panic propagation** — a panicking chunk poisons the job's
 //!   epoch; the submitting thread re-panics rather than returning
-//!   partial output.
+//!   partial output, carrying the worker's original payload message
+//!   plus the chunk's row range (so a `catch_unwind` boundary above —
+//!   e.g. the serve scheduler's poisoned-row containment — sees the
+//!   real cause).
 
 use std::cell::Cell;
 use std::sync::{Arc, Condvar, Mutex, RwLock};
@@ -71,9 +74,11 @@ struct Slot {
     next_chunk: usize,
     /// Threads currently executing a chunk of the current job.
     active: usize,
-    /// Epoch of a job that had a panicking chunk, until its submitter
-    /// re-raises it (epoch-keyed so interleaved jobs can't swallow it).
-    panic_epoch: Option<u64>,
+    /// Epoch and captured payload message (plus chunk range) of a job
+    /// that had a panicking chunk, until its submitter re-raises it
+    /// (epoch-keyed so interleaved jobs can't swallow it). The first
+    /// panicking chunk wins; later ones of the same job are dropped.
+    panic_info: Option<(u64, String)>,
     shutdown: bool,
 }
 
@@ -104,7 +109,7 @@ impl Pool {
                 job: None,
                 next_chunk: 0,
                 active: 0,
-                panic_epoch: None,
+                panic_info: None,
                 shutdown: false,
             }),
             work: Condvar::new(),
@@ -156,10 +161,12 @@ impl Pool {
         while slot.epoch == my_epoch && slot.job.is_some() {
             slot = shared.done.wait(slot).unwrap();
         }
-        if slot.panic_epoch == Some(my_epoch) {
-            slot.panic_epoch = None;
+        if slot.panic_info.as_ref().is_some_and(|(e, _)| *e == my_epoch) {
+            let (_, msg) = slot.panic_info.take().expect("checked panic info present");
             drop(slot);
-            panic!("kernel chunk panicked on a pool worker");
+            // Re-raise with the worker's original message so the cause
+            // (and the chunk that hit it) survives the thread hop.
+            panic!("{msg}");
         }
     }
 }
@@ -191,8 +198,23 @@ fn execute_one_chunk<'a>(
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (job.task)(lo, hi)));
     let mut slot = shared.slot.lock().unwrap();
     slot.active -= 1;
-    if result.is_err() {
-        slot.panic_epoch = Some(slot.epoch);
+    if let Err(payload) = result {
+        // Capture the payload message (the common &str / String cases;
+        // anything else gets a stable placeholder) so the submitter can
+        // re-raise the original cause, not a generic marker.
+        let msg = payload
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "non-string panic payload".to_string());
+        match &slot.panic_info {
+            // Keep the job's first panic (deterministic message).
+            Some((e, _)) if *e == slot.epoch => {}
+            _ => {
+                slot.panic_info =
+                    Some((slot.epoch, format!("kernel chunk [{lo}, {hi}) panicked: {msg}")));
+            }
+        }
     }
     if slot.active == 0 && slot.next_chunk >= job.chunks {
         // Last finisher retires the job and wakes submitters.
@@ -383,6 +405,32 @@ mod tests {
         assert!(parse_pallas_threads("1.5").is_err());
         // The fallback itself is always a usable count.
         assert!(hardware_default() >= 1);
+    }
+
+    #[test]
+    fn worker_panic_payload_and_chunk_range_survive() {
+        let pool = Pool::new(3);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(100, 4, &|lo, _hi| {
+                if lo >= 50 {
+                    panic!("poisoned row at {lo}");
+                }
+            });
+        }))
+        .expect_err("a panicking chunk must re-raise on the submitter");
+        let msg = caught
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| caught.downcast_ref::<&str>().map(|s| s.to_string()))
+            .expect("re-raised payload is a string");
+        assert!(msg.contains("poisoned row at"), "original payload lost: {msg}");
+        assert!(msg.contains("kernel chunk ["), "chunk range lost: {msg}");
+        // The pool stays usable after containing a panic.
+        let sum = AtomicUsize::new(0);
+        pool.run(64, 4, &|lo, hi| {
+            sum.fetch_add(hi - lo, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 64);
     }
 
     #[test]

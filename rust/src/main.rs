@@ -54,7 +54,7 @@ commands:
                 [--rate R] [--alpha A] [--long-frac F]
                 [--temperature T] [--top-k K] [--seed S] [--init-seed S]
                 [--spec-config <json>] [--spec-k K] [--eos-token T]
-                [--stream]
+                [--stream] [--faults N[@SEED]] [--audit]
                 (native backend only; --slots caps the fused batch width,
                  but admission is also capacity-aware over the paged KV
                  pool: --kv-page sets positions per page, --kv-pages the
@@ -72,7 +72,13 @@ commands:
                  summary adds acceptance rate and the draft/verify/
                  overhead time split. --eos-token stops a request early
                  when it samples that id; --stream prints tokens as
-                 they are accepted)
+                 they are accepted. --faults N[@SEED] injects N seeded
+                 random faults (session-open / kv-alloc / draft /
+                 kernel-panic / NaN-logits) to exercise the containment
+                 paths — faulted requests retry with backoff or finish
+                 as errors, survivors are unaffected; --audit (or the
+                 PALLAS_AUDIT env) runs the per-tick invariant auditor,
+                 failing fast on any pool or KV inconsistency)
   bench-tables  [--table 1|2|3|4|5|6|7|all] [--artifacts DIR] [--quick]
 
 backends: `pjrt` (default) replays `make artifacts` bundles and loads the
@@ -95,7 +101,7 @@ fn main() -> Result<()> {
         eprint!("{USAGE}");
         std::process::exit(2);
     };
-    let args = Args::parse(&argv[1..], &["quiet", "induction", "quick", "stream"])?;
+    let args = Args::parse(&argv[1..], &["quiet", "induction", "quick", "stream", "audit"])?;
     match cmd.as_str() {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
@@ -427,8 +433,8 @@ fn cmd_generate(args: &Args) -> Result<()> {
 /// TTFT / inter-token latency percentiles.
 fn cmd_serve(args: &Args) -> Result<()> {
     use switchhead::serve::{
-        drive, drive_trace, synth_requests, synth_trace, Arrivals, FinishReason, LoadSpec,
-        SamplingParams, Scheduler, ServeOpts, TickReport,
+        drive, drive_trace, synth_requests, synth_trace, Arrivals, FaultPlan, FinishReason,
+        LoadSpec, SamplingParams, Scheduler, ServeOpts, TickReport,
     };
     use switchhead::util::stats::quantile;
 
@@ -453,6 +459,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let tokens = args.usize_or("tokens", 32)?;
     let max_prompt = args.usize_or("prompt-len", (cfg.seq_len / 2).max(1))?;
+    opts.audit = opts.audit || args.flag("audit");
+    if let Some(spec) = args.get("faults") {
+        let (n, seed) = match spec.split_once('@') {
+            Some((n, s)) => (n.parse::<usize>()?, s.parse::<u64>()?),
+            None => (spec.parse::<usize>()?, 0xFA17),
+        };
+        // Trigger domain: ticks and request ids this run can plausibly
+        // reach, so random rules land on live traffic.
+        let est_ticks = (n_requests * tokens).max(64) as u64;
+        opts.faults = Some(FaultPlan::random(seed, n, est_ticks, n_requests as u64));
+    }
     let sampling = SamplingParams {
         temperature: args.f64_or("temperature", 0.0)?,
         top_k: args.usize_or("top-k", 0)?,
@@ -582,6 +599,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ps.peak_floats(),
         st.deferrals,
     ));
+    if st.faults_injected > 0 || st.spec_trips > 0 || opts.audit {
+        info(&format!(
+            "robustness: {} fault(s) injected, {} error(s), {} recovered (retry/absorbed), \
+             {} breaker trip(s), {} audited tick(s)",
+            st.faults_injected, st.errors, st.retries_recovered, st.spec_trips, st.audit_ticks,
+        ));
+    }
     if sched.spec_k() > 0 {
         info(&format!(
             "speculative: k={}, {} drafted / {} accepted ({:.0}% acceptance), \

@@ -272,6 +272,47 @@ impl<'m> NativeSession<'m> {
         self.pos = pos;
     }
 
+    /// Best-effort cleanup after a panic escaped mid-step: drop any K/V
+    /// positions pushed past the committed stream end. `pos` only
+    /// advances at the END of a successful step, so a panicking step
+    /// leaves `pos` at the last committed position while some layers may
+    /// already hold pushes for the in-flight chunk; this truncates every
+    /// stream back to `pos` so a sequential retry starts from a
+    /// consistent cache. Best-effort only: with an eviction lag of 0 a
+    /// mid-chunk window slide may already have freed low pages, in which
+    /// case the retry fails too (and the serve layer reports the row as
+    /// errored rather than letting the panic escape).
+    pub fn discard_uncommitted(&mut self) {
+        for st in self.layers.iter_mut() {
+            for kv in st.kv.iter_mut() {
+                kv.truncate_to(self.pos);
+            }
+        }
+    }
+
+    /// Pages this session reserved in its pool at open (its worst-case
+    /// demand). The serve auditor sums these across live sessions and
+    /// checks the total against the pool's reservation counter.
+    pub fn reserved_pages(&self) -> usize {
+        self.reserved_pages
+    }
+
+    /// Structural audit of every layer's paged K/V state against the
+    /// session's committed position count ([`Kv::audit`] per stream) —
+    /// the serve layer's per-tick invariant auditor calls this on every
+    /// live session. Returns a structured error naming the layer and
+    /// stream; never panics.
+    pub fn audit_kv(&self) -> Result<()> {
+        for (li, st) in self.layers.iter().enumerate() {
+            for (mi, kv) in st.kv.iter().enumerate() {
+                if let Err(e) = kv.audit(self.pos) {
+                    bail!("layer {li} stream {mi}: {e}");
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Run the block stack over a `[rows, tn]` chunk against the cached
     /// context and return the next-token logits of the last position.
     fn advance(&mut self, tokens: &[i32], tn: usize) -> Result<Logits> {

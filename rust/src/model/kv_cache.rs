@@ -472,6 +472,76 @@ impl Kv {
     pub fn pages_held(&self) -> usize {
         self.streams.iter().map(|s| s.pages.len()).sum()
     }
+
+    /// Structural audit for the serve layer's per-tick invariant
+    /// auditor: with `len` committed positions per row (positions are
+    /// pushed strictly increasing, so `len` is also the newest
+    /// position + 1), every row's page table must
+    ///
+    /// * be empty iff `len == 0`,
+    /// * end at the page of the newest committed position (pushes
+    ///   allocated it; truncation keeps it),
+    /// * still cover the attention window's low edge (eviction only
+    ///   frees pages fully below the lagged low edge),
+    /// * hold no more pages than the [`stream_pages_spec`] bound the
+    ///   session reserved through, and
+    /// * map no page id twice and none outside the pool.
+    ///
+    /// Violations return a structured error naming the broken
+    /// invariant; this never panics and never takes the pool lock.
+    pub fn audit(&self, len: usize) -> Result<()> {
+        let pc = self.pool.page_cols();
+        let bound = stream_pages_spec(pc, self.cap, usize::MAX, self.evict_lag);
+        let mut pids: Vec<u32> = Vec::new();
+        for (bi, st) in self.streams.iter().enumerate() {
+            if len == 0 {
+                if !st.pages.is_empty() {
+                    bail!("kv audit: row {bi} holds {} pages before any push", st.pages.len());
+                }
+                continue;
+            }
+            if st.pages.is_empty() {
+                bail!("kv audit: row {bi} lost its page table at {len} committed positions");
+            }
+            let top_lp = st.first_lp + st.pages.len() - 1;
+            if top_lp != (len - 1) / pc {
+                bail!(
+                    "kv audit: row {bi} top page {top_lp} != newest position's page {} \
+                     ({len} committed, {pc} cols/page)",
+                    (len - 1) / pc
+                );
+            }
+            let win_lo = len.saturating_sub(self.cap);
+            if st.first_lp > win_lo / pc {
+                bail!(
+                    "kv audit: row {bi} first page {} is above the attention window's low \
+                     edge page {} — a live column was evicted",
+                    st.first_lp,
+                    win_lo / pc
+                );
+            }
+            if st.pages.len() > bound {
+                bail!(
+                    "kv audit: row {bi} holds {} pages, over the {bound}-page reservation \
+                     bound (cap {}, lag {})",
+                    st.pages.len(),
+                    self.cap,
+                    self.evict_lag
+                );
+            }
+            pids.extend(st.pages.iter().copied());
+        }
+        pids.sort_unstable();
+        if pids.windows(2).any(|w| w[0] == w[1]) {
+            bail!("kv audit: a pool page is mapped by two rows");
+        }
+        if let Some(&top) = pids.last() {
+            if top as usize >= self.pool.max_pages() {
+                bail!("kv audit: page id {top} outside the pool's {} pages", self.pool.max_pages());
+            }
+        }
+        Ok(())
+    }
 }
 
 impl Drop for Kv {
@@ -690,6 +760,28 @@ mod tests {
             assert_eq!(st.in_use, 0, "pc={pc} drop must return everything");
             assert_eq!(st.free_pages, st.materialized);
         }
+    }
+
+    #[test]
+    fn kv_audit_accepts_live_streams_and_catches_corruption() {
+        let (pc, dh, cap, lag) = (2usize, 2usize, 4usize, 3usize);
+        let pool = KvPool::new(pc, dh, 64).unwrap();
+        let mut kv = Kv::new(&pool, 2, cap);
+        kv.set_evict_lag(lag);
+        kv.audit(0).expect("fresh stream audits clean");
+        let chunk = vec![0.5f32; 2 * dh];
+        for p in 0..12usize {
+            kv.push(&chunk, &chunk, 1, p);
+            kv.audit(p + 1).expect("live stream audits clean");
+        }
+        kv.truncate_to(10);
+        kv.audit(10).expect("post-rollback stream audits clean");
+        // Wrong committed length: the top page no longer matches.
+        assert!(kv.audit(12).is_err(), "stale length must fail the audit");
+        // Corrupt a page table: duplicate a page across rows.
+        let dup = kv.streams[0].pages[0];
+        kv.streams[1].pages[0] = dup;
+        assert!(kv.audit(10).is_err(), "duplicate page id must fail the audit");
     }
 
     #[test]

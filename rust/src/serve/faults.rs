@@ -1,0 +1,306 @@
+//! Deterministic, seeded fault injection for the serve stack.
+//!
+//! A [`FaultPlan`] is a list of single-shot [`FaultRule`]s, each naming
+//! a [`FaultSite`] (where in the tick the fault fires) and a
+//! [`Trigger`] (when it fires: at a tick, against a request id, or on
+//! the site's nth eligibility check). The scheduler consults the plan
+//! at every eligible point ([`FaultPlan::fire`]); a firing rule is
+//! spent and never fires again, so `injected()` counts exactly the
+//! faults the run experienced and the accounting identity
+//! `faults_injected == errors + retries_recovered` pinned by
+//! `rust/tests/chaos.rs` can close.
+//!
+//! Plans are plain data (`Clone + Debug`, no interior mutability, no
+//! wall clock): the same plan against the same trace produces the same
+//! faults on every run, which is what lets the chaos suite assert
+//! surviving streams bit-identical to a no-fault oracle.
+//!
+//! Transient vs. permanent: a `transient` fault models a recoverable
+//! condition (the scheduler re-queues the victim with backoff and
+//! retries within [`crate::serve::ServeOpts::retry_budget`]); a
+//! permanent one fails the request with
+//! [`crate::serve::FinishReason::Error`] immediately. Both leave every
+//! other in-flight request untouched.
+
+use crate::serve::request::RequestId;
+use crate::util::rng::Pcg;
+
+/// Pcg stream tag for [`FaultPlan::random`] (disjoint from the
+/// scheduler's sampling stream `0x5E4E` and the load generator's
+/// `0xC11`/`0xC12`).
+pub const FAULT_STREAM: u64 = 0xFA17;
+
+/// Where in the scheduler tick a fault injects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Admission: opening the target `NativeSession` fails.
+    SessionOpen,
+    /// Admission: the KV page reservation fails. (Reservation at admit
+    /// is the only point a page shortfall can surface — the
+    /// reserve-worst-case-up-front invariant makes in-decode allocation
+    /// failure unreachable, so this site injects where the real
+    /// condition lives.)
+    KvAlloc,
+    /// The draft engine's follow/propose step fails; trips the
+    /// speculation circuit breaker, never the request.
+    DraftPropose,
+    /// A kernel chunk panics inside the fused step; contained by the
+    /// scheduler's `catch_unwind` + sequential-fallback boundary.
+    KernelPanic,
+    /// A request's logits row comes back NaN-poisoned; caught by the
+    /// always-on non-finite scan before sampling.
+    NanLogits,
+}
+
+impl FaultSite {
+    /// Every site, in a fixed order (the per-site occurrence counters
+    /// and [`FaultPlan::random`] index into this).
+    pub const ALL: [FaultSite; 5] = [
+        FaultSite::SessionOpen,
+        FaultSite::KvAlloc,
+        FaultSite::DraftPropose,
+        FaultSite::KernelPanic,
+        FaultSite::NanLogits,
+    ];
+
+    fn index(self) -> usize {
+        match self {
+            FaultSite::SessionOpen => 0,
+            FaultSite::KvAlloc => 1,
+            FaultSite::DraftPropose => 2,
+            FaultSite::KernelPanic => 3,
+            FaultSite::NanLogits => 4,
+        }
+    }
+
+    /// Stable human-readable name (used in error reasons and bench
+    /// output).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::SessionOpen => "session-open",
+            FaultSite::KvAlloc => "kv-alloc",
+            FaultSite::DraftPropose => "draft-propose",
+            FaultSite::KernelPanic => "kernel-panic",
+            FaultSite::NanLogits => "nan-logits",
+        }
+    }
+}
+
+/// When a rule fires. All triggers are deterministic predicates over
+/// (tick, request id, per-site occurrence count).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trigger {
+    /// First eligibility check at or after this tick.
+    AtTick(u64),
+    /// First eligibility check carrying this request id.
+    OnRequest(RequestId),
+    /// The site's nth eligibility check overall (1-based).
+    Nth(u64),
+}
+
+/// One single-shot fault: site + trigger + severity. `spent` flips when
+/// the rule fires so it can never fire twice.
+#[derive(Debug, Clone)]
+pub struct FaultRule {
+    pub site: FaultSite,
+    pub trigger: Trigger,
+    /// Transient faults are retried (with backoff, within the
+    /// per-request budget); permanent ones error the request.
+    pub transient: bool,
+    spent: bool,
+}
+
+/// A fired fault, as handed to the scheduler's containment machinery.
+#[derive(Debug, Clone)]
+pub struct Fault {
+    pub site: FaultSite,
+    pub transient: bool,
+    /// Human-readable reason, propagated into
+    /// [`crate::serve::GenOutput::error`] when the fault ends a request.
+    pub reason: String,
+}
+
+/// A deterministic, seeded set of single-shot fault rules.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    rules: Vec<FaultRule>,
+    /// Per-site eligibility-check counters ([`Trigger::Nth`] domain),
+    /// indexed by [`FaultSite::index`].
+    counts: [u64; 5],
+    injected: u64,
+}
+
+impl FaultPlan {
+    /// The empty plan (no rules; `fire` never fires).
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Builder: append one rule.
+    pub fn with_rule(mut self, site: FaultSite, trigger: Trigger, transient: bool) -> FaultPlan {
+        self.push(site, trigger, transient);
+        self
+    }
+
+    /// Append one rule.
+    pub fn push(&mut self, site: FaultSite, trigger: Trigger, transient: bool) {
+        self.rules.push(FaultRule { site, trigger, transient, spent: false });
+    }
+
+    /// Append `n` rules firing on the site's NEXT `n` eligibility
+    /// checks (relative to its current occurrence counter). This is how
+    /// the scheduler's legacy `inject_admit_failures(n)` test hook is
+    /// expressed as a plan: n permanent session-open faults on the next
+    /// n admissions.
+    pub fn next_n(&mut self, site: FaultSite, n: usize, transient: bool) {
+        let base = self.counts[site.index()];
+        for i in 0..n {
+            self.push(site, Trigger::Nth(base + 1 + i as u64), transient);
+        }
+    }
+
+    /// A seeded random plan of `n` rules: sites uniform over
+    /// [`FaultSite::ALL`], triggers uniform over the three kinds with
+    /// ticks below `max_tick`, request ids below `max_req`, and nth in
+    /// `1..=4`; each rule transient with p = 0.5. Deterministic in
+    /// `seed` (Pcg stream [`FAULT_STREAM`]).
+    pub fn random(seed: u64, n: usize, max_tick: u64, max_req: u64) -> FaultPlan {
+        let mut rng = Pcg::new(seed, FAULT_STREAM);
+        let mut plan = FaultPlan::new();
+        for _ in 0..n {
+            let site = FaultSite::ALL[rng.below(FaultSite::ALL.len())];
+            let trigger = match rng.below(3) {
+                0 => Trigger::AtTick(rng.below(max_tick.max(1) as usize) as u64),
+                1 => Trigger::OnRequest(rng.below(max_req.max(1) as usize) as u64),
+                _ => Trigger::Nth(1 + rng.below(4) as u64),
+            };
+            let transient = rng.coin(0.5);
+            plan.push(site, trigger, transient);
+        }
+        plan
+    }
+
+    /// Number of rules (spent or not).
+    pub fn len(&self) -> usize {
+        self.rules.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    /// Total faults fired so far.
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+
+    /// Rules that have not fired (a finite plan drains to 0 under
+    /// enough load).
+    pub fn pending(&self) -> usize {
+        self.rules.iter().filter(|r| !r.spent).count()
+    }
+
+    /// One eligibility check: the scheduler reached `site` at `tick`
+    /// for request `id` (`None` for sites with no single victim, e.g. a
+    /// batch-wide kernel panic probe without a row id). Advances the
+    /// site's occurrence counter, then fires (and spends) the first
+    /// matching unspent rule, if any.
+    pub fn fire(&mut self, site: FaultSite, tick: u64, id: Option<RequestId>) -> Option<Fault> {
+        let count = {
+            let c = &mut self.counts[site.index()];
+            *c += 1;
+            *c
+        };
+        let rule = self.rules.iter_mut().find(|r| {
+            !r.spent
+                && r.site == site
+                && match r.trigger {
+                    Trigger::AtTick(t) => tick >= t,
+                    Trigger::OnRequest(r_id) => id == Some(r_id),
+                    Trigger::Nth(n) => count == n,
+                }
+        })?;
+        rule.spent = true;
+        self.injected += 1;
+        let kind = if rule.transient { "transient" } else { "permanent" };
+        let victim = match id {
+            Some(r_id) => format!("req {r_id}"),
+            None => "no single victim".to_string(),
+        };
+        Some(Fault {
+            site,
+            transient: rule.transient,
+            reason: format!(
+                "injected {kind} {} fault (tick {tick}, {victim}, occurrence {count})",
+                site.name()
+            ),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rules_fire_once_and_count() {
+        let mut plan = FaultPlan::new()
+            .with_rule(FaultSite::SessionOpen, Trigger::Nth(2), false)
+            .with_rule(FaultSite::NanLogits, Trigger::AtTick(5), true);
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan.pending(), 2);
+        // Nth(2): first check passes, second fires, third passes.
+        assert!(plan.fire(FaultSite::SessionOpen, 0, Some(0)).is_none());
+        let f = plan.fire(FaultSite::SessionOpen, 0, Some(1)).expect("2nd occurrence fires");
+        assert_eq!(f.site, FaultSite::SessionOpen);
+        assert!(!f.transient);
+        assert!(f.reason.contains("session-open"), "reason names the site: {}", f.reason);
+        assert!(plan.fire(FaultSite::SessionOpen, 0, Some(2)).is_none(), "spent rules stay spent");
+        // AtTick(5): nothing before tick 5, fires at the first check >= 5.
+        assert!(plan.fire(FaultSite::NanLogits, 4, Some(0)).is_none());
+        let f = plan.fire(FaultSite::NanLogits, 7, Some(0)).expect("tick trigger fires");
+        assert!(f.transient);
+        assert_eq!(plan.injected(), 2);
+        assert_eq!(plan.pending(), 0);
+    }
+
+    #[test]
+    fn request_trigger_matches_id_only() {
+        let mut plan =
+            FaultPlan::new().with_rule(FaultSite::KvAlloc, Trigger::OnRequest(3), false);
+        assert!(plan.fire(FaultSite::KvAlloc, 0, Some(2)).is_none());
+        assert!(plan.fire(FaultSite::KvAlloc, 0, None).is_none());
+        assert!(plan.fire(FaultSite::KvAlloc, 9, Some(3)).is_some());
+        assert_eq!(plan.injected(), 1);
+    }
+
+    #[test]
+    fn sites_have_independent_counters() {
+        let mut plan = FaultPlan::new()
+            .with_rule(FaultSite::KernelPanic, Trigger::Nth(1), false)
+            .with_rule(FaultSite::DraftPropose, Trigger::Nth(1), true);
+        // Checks against one site never advance another's counter.
+        assert!(plan.fire(FaultSite::NanLogits, 0, Some(0)).is_none());
+        assert!(plan.fire(FaultSite::KernelPanic, 0, None).is_some());
+        assert!(plan.fire(FaultSite::DraftPropose, 0, None).is_some());
+    }
+
+    #[test]
+    fn random_plans_are_deterministic_in_seed() {
+        let a = FaultPlan::random(42, 8, 100, 16);
+        let b = FaultPlan::random(42, 8, 100, 16);
+        assert_eq!(a.len(), 8);
+        for (ra, rb) in a.rules.iter().zip(&b.rules) {
+            assert_eq!(ra.site, rb.site);
+            assert_eq!(ra.trigger, rb.trigger);
+            assert_eq!(ra.transient, rb.transient);
+        }
+        let c = FaultPlan::random(43, 8, 100, 16);
+        let differs = a
+            .rules
+            .iter()
+            .zip(&c.rules)
+            .any(|(ra, rc)| ra.site != rc.site || ra.trigger != rc.trigger);
+        assert!(differs, "different seeds should give different plans");
+    }
+}

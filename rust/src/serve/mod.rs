@@ -60,6 +60,20 @@
 //! to [`NativeSession`](crate::model::NativeSession) internals, which
 //! the PJRT windowed-recompute session does not expose.
 //!
+//! Robustness is a first-class contract here, not an afterthought:
+//! [`faults`] provides deterministic seeded fault injection
+//! ([`FaultPlan`]) across five sites (session open, KV reservation,
+//! draft propose, kernel panic, NaN logits), and the scheduler
+//! contains each fault to the smallest domain that can absorb it —
+//! transient retries with backoff, per-row eviction behind a
+//! `catch_unwind` + sequential-fallback boundary, a speculation
+//! circuit breaker — while an optional per-tick invariant auditor
+//! ([`ServeOpts::audit`] / `PALLAS_AUDIT=1`) checks pool conservation
+//! and paged-KV structure after every tick. `rust/tests/chaos.rs`
+//! pins the contract: under any built-in fault plan the scheduler
+//! never panics, surviving streams are bit-identical to a no-fault
+//! run, and `faults_injected == errors + retries_recovered`.
+//!
 //! Drive it via the `serve` CLI subcommand or
 //! `benches/serve_throughput.rs` (aggregate tok/s plus p50/p95/p99
 //! time-to-first-token and inter-token latency vs a serial per-session
@@ -70,16 +84,19 @@
 //!
 //! [`step_batched`]: crate::model::step_batched
 
+pub mod faults;
 pub mod load;
 pub mod request;
 pub mod scheduler;
 
+pub use faults::{Fault, FaultPlan, FaultRule, FaultSite, Trigger, FAULT_STREAM};
 pub use load::{drive, drive_trace, synth_requests, synth_trace, Arrivals, LoadSpec, TracedRequest};
 pub use request::{
     FinishReason, GenOutput, GenRequest, QueuedRequest, RequestId, RequestQueue, ResumeState,
     SamplingParams,
 };
 pub use scheduler::{
-    Scheduler, ServeOpts, ServeStats, TickReport, DEFAULT_PREFILL_CHUNK, DEFAULT_SPEC_K,
-    SAMPLE_STREAM,
+    Scheduler, ServeOpts, ServeStats, TickReport, DEFAULT_PREFILL_CHUNK, DEFAULT_RETRY_BUDGET,
+    DEFAULT_SPEC_K, SAMPLE_STREAM, SPEC_REENABLE_TICKS, SPEC_TRIP_ACCEPT_FLOOR,
+    SPEC_TRIP_MIN_DRAFTED, SPEC_TRIP_WINDOW,
 };

@@ -104,9 +104,11 @@ pub enum FinishReason {
     Eos,
     /// Cancelled by the caller (possibly with partial tokens).
     Cancelled,
-    /// Admission failed (session open / KV reservation error). The
-    /// request is reported rather than silently dropped; its tokens
-    /// hold whatever a prior admission had produced (empty for a fresh
+    /// The request failed — admission (session open / KV reservation),
+    /// a poisoned decode step, or a transient fault that exhausted its
+    /// retry budget. The request is reported rather than silently
+    /// dropped: [`GenOutput::error`] carries the reason and `tokens`
+    /// holds whatever earlier service had produced (empty for a fresh
     /// request).
     Error,
 }
@@ -133,6 +135,9 @@ pub struct GenOutput {
     /// Draft tokens the verify step accepted into the stream; the
     /// per-request acceptance rate is `spec_accepted / spec_drafted`.
     pub spec_accepted: u64,
+    /// Human-readable failure reason; `Some` exactly when `finish` is
+    /// [`FinishReason::Error`].
+    pub error: Option<String>,
 }
 
 /// Partial progress of a preempted request, carried through the queue
@@ -169,6 +174,14 @@ pub struct QueuedRequest {
     /// `Some` when this entry is a preempted request re-queued with its
     /// partial state; `None` for a fresh submission.
     pub resume: Option<ResumeState>,
+    /// Transient-fault retries consumed so far (admission fails the
+    /// request with [`FinishReason::Error`] once this exhausts the
+    /// scheduler's retry budget). Preemption re-queues preserve it.
+    pub retries: u32,
+    /// Earliest tick this entry may be admitted — the retry backoff.
+    /// 0 (always the case for fresh submissions and preemption
+    /// re-queues) means immediately eligible.
+    pub not_before: u64,
 }
 
 /// Bounded priority queue of pending requests, ordered by `priority`
@@ -234,7 +247,15 @@ impl RequestQueue {
         let at = self.insert_at(req.priority);
         self.items.insert(
             at,
-            QueuedRequest { id, req, submitted: Instant::now(), submit_tick, resume: None },
+            QueuedRequest {
+                id,
+                req,
+                submitted: Instant::now(),
+                submit_tick,
+                resume: None,
+                retries: 0,
+                not_before: 0,
+            },
         );
         Ok(id)
     }
@@ -262,6 +283,13 @@ impl RequestQueue {
     /// Dequeue the highest-priority pending request.
     pub fn pop(&mut self) -> Option<QueuedRequest> {
         self.items.pop_front()
+    }
+
+    /// Iterate pending entries in queue order (priority desc, FIFO
+    /// within a class) — the serve auditor walks this to check id
+    /// uniqueness and retry-state sanity without dequeuing anything.
+    pub fn iter(&self) -> impl Iterator<Item = &QueuedRequest> + '_ {
+        self.items.iter()
     }
 
     /// Remove a pending request by id (queued-state cancellation).

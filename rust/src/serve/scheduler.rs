@@ -100,13 +100,49 @@
 //! evict/retire/cancel/preempt all drop the session, which returns its
 //! pages and its reservation.
 //!
+//! # Failure domains and degraded modes
+//!
+//! Faults are contained to the smallest domain that can absorb them —
+//! never the process, never an unrelated request:
+//!
+//! * **Admission faults** (session open / KV reservation, including
+//!   injected [`FaultSite::SessionOpen`] / [`FaultSite::KvAlloc`])
+//!   fail or retry ONE queued request; transient ones re-queue with a
+//!   linear backoff ([`QueuedRequest::not_before`]) within
+//!   [`ServeOpts::retry_budget`], and the resumed stream is
+//!   bit-identical because its RNG and tokens were never touched.
+//! * **Step faults** — a panicking kernel chunk or a non-finite logits
+//!   row — are caught at a `catch_unwind` boundary around the fused
+//!   step; the scheduler falls back to per-session sequential stepping
+//!   (bit-identical to the fused step by the batch-invariance
+//!   contract) to locate the poisoned row, evicts exactly that row
+//!   (retry or [`FinishReason::Error`]), and every survivor continues
+//!   unperturbed. The non-finite scan runs BEFORE sampling, so a
+//!   retried row's RNG stream is untouched.
+//! * **Draft faults** trip a speculation **circuit breaker**: drafting
+//!   disables for a cooldown ([`SPEC_REENABLE_TICKS`]) and re-enables
+//!   with hysteresis; rows fall back to plain decode, which is
+//!   bit-identical by the speculative-equivalence contract. A windowed
+//!   acceptance collapse trips the same breaker.
+//! * The **per-tick invariant auditor** ([`ServeOpts::audit`], or
+//!   `PALLAS_AUDIT=1`) checks pool conservation, reservation
+//!   accounting, slot/queue id consistency and per-stream paged-KV
+//!   structure after every tick, returning structured errors (never
+//!   panicking) so harness code can stop at the first corrupt state.
+//!
 //! [`ResumeState`]: crate::serve::request::ResumeState
+//! [`QueuedRequest::not_before`]: crate::serve::request::QueuedRequest::not_before
+
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 
 use crate::config::ModelConfig;
 use crate::coordinator::generate::sample_logits;
 use crate::model::decode::step_batched_full;
 use crate::model::kv_cache::stream_pages_spec;
 use crate::model::{KvPool, MacCounter, NativeEngine, NativeSession, PoolStats};
+use crate::runtime::api::{Logits, Session};
+use crate::serve::faults::{FaultPlan, FaultSite};
 use crate::serve::request::{
     FinishReason, GenOutput, GenRequest, QueuedRequest, RequestId, RequestQueue, ResumeState,
     SamplingParams,
@@ -126,6 +162,28 @@ pub const DEFAULT_PREFILL_CHUNK: usize = 64;
 /// Default speculation width (draft tokens per verify cycle) when
 /// neither [`ServeOpts`] nor `SPEC_K` says otherwise.
 pub const DEFAULT_SPEC_K: usize = 4;
+
+/// Default per-request transient-fault retry budget
+/// ([`ServeOpts::retry_budget`]).
+pub const DEFAULT_RETRY_BUDGET: u32 = 3;
+
+/// Speculation circuit breaker: ticks of plain decode before drafting
+/// re-enables after a trip (the hysteresis half of the breaker — a
+/// re-enabled breaker cannot re-trip until the acceptance window
+/// refills past [`SPEC_TRIP_MIN_DRAFTED`]).
+pub const SPEC_REENABLE_TICKS: u64 = 64;
+
+/// Acceptance window length (ticks) the breaker judges collapse over.
+pub const SPEC_TRIP_WINDOW: usize = 32;
+
+/// Minimum drafted tokens inside the window before a collapse verdict
+/// is allowed (prevents tripping on noise from one or two cycles).
+pub const SPEC_TRIP_MIN_DRAFTED: u64 = 16;
+
+/// Windowed acceptance rate below which the breaker trips: at 1/8,
+/// speculation is burning k draft steps per cycle to land well under
+/// one extra token — strictly worse than plain decode.
+pub const SPEC_TRIP_ACCEPT_FLOOR: f64 = 0.125;
 
 /// Serving shape: concurrent decode slots, queue depth, prefill
 /// chunking, and the paged KV pool's geometry. Admission is bounded by
@@ -165,6 +223,20 @@ pub struct ServeOpts {
     /// (invalid/zero values warn and fall back to
     /// [`DEFAULT_SPEC_K`]).
     pub spec_k: usize,
+    /// Run the per-tick invariant auditor: after every tick, check pool
+    /// conservation, reservation accounting, slot/queue consistency and
+    /// per-stream paged-KV structure, failing the tick with a
+    /// structured error (never a panic) on the first violation. The
+    /// default honors the `PALLAS_AUDIT` env var (`1`/`true`/`on` to
+    /// enable; invalid values warn and fall back to off).
+    pub audit: bool,
+    /// Transient-fault retries each request may consume before it is
+    /// failed with [`FinishReason::Error`]. Retries re-queue the
+    /// request with a linear backoff (`n`th retry waits `n` ticks).
+    pub retry_budget: u32,
+    /// Deterministic fault-injection plan (`None` = no injected
+    /// faults). See [`FaultPlan`].
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for ServeOpts {
@@ -177,6 +249,9 @@ impl Default for ServeOpts {
             prefill_chunk: default_prefill_chunk(),
             spec_config: None,
             spec_k: default_spec_k(),
+            audit: default_audit(),
+            retry_budget: DEFAULT_RETRY_BUDGET,
+            faults: None,
         }
     }
 }
@@ -230,6 +305,30 @@ fn default_spec_k() -> usize {
     }
 }
 
+/// Pure parse of a `PALLAS_AUDIT` value.
+fn parse_audit(raw: &str) -> std::result::Result<bool, String> {
+    match raw.trim() {
+        "1" | "true" | "on" | "yes" => Ok(true),
+        "0" | "false" | "off" | "no" => Ok(false),
+        _ => Err(format!("PALLAS_AUDIT={raw:?} is not a boolean (1/0/true/false/on/off/yes/no)")),
+    }
+}
+
+/// `PALLAS_AUDIT` env override, falling back (with a warning on
+/// invalid values, mirroring `PREFILL_CHUNK`) to off.
+fn default_audit() -> bool {
+    match std::env::var("PALLAS_AUDIT") {
+        Ok(raw) => match parse_audit(&raw) {
+            Ok(b) => b,
+            Err(why) => {
+                eprintln!("WARN: {why}; falling back to off");
+                false
+            }
+        },
+        Err(_) => false,
+    }
+}
+
 /// Aggregate serving counters (monotone over the scheduler's life).
 #[derive(Debug, Default, Clone)]
 pub struct ServeStats {
@@ -248,8 +347,10 @@ pub struct ServeStats {
     /// `errors`.
     pub finished: u64,
     pub cancelled: u64,
-    /// Requests emitted as [`FinishReason::Error`] because admission
-    /// failed (the request is reported, never silently dropped).
+    /// Requests emitted as [`FinishReason::Error`] — admission failed,
+    /// a step fault poisoned the row, or a transient fault exhausted
+    /// the retry budget (the request is reported with its reason in
+    /// [`GenOutput::error`], never silently dropped).
     pub errors: u64,
     /// Over-budget rows preempted for a higher-priority arrival.
     pub preemptions: u64,
@@ -280,6 +381,23 @@ pub struct ServeStats {
     /// forward: admission, sampling, the accept walk, retirement
     /// (tick wall minus draft minus step).
     pub overhead_seconds: f64,
+    /// Faults the [`FaultPlan`] fired so far (0 without a plan). Under
+    /// a fault plan whose faults all resolve (the chaos suite), the
+    /// identity `faults_injected == errors + retries_recovered` closes:
+    /// every fired fault either failed a request or was absorbed.
+    pub faults_injected: u64,
+    /// Injected faults the scheduler absorbed WITHOUT failing the
+    /// request: transient faults that re-queued within the retry
+    /// budget, plus draft-engine faults the speculation breaker
+    /// contained (no request is a victim there at all).
+    pub retries_recovered: u64,
+    /// Times the speculation circuit breaker tripped (draft fault or
+    /// windowed acceptance collapse).
+    pub spec_trips: u64,
+    /// Ticks the invariant auditor ran and passed (equals `ticks` when
+    /// [`ServeOpts::audit`] was on from the start — a failed audit
+    /// aborts the tick with an error instead of counting).
+    pub audit_ticks: u64,
 }
 
 impl ServeStats {
@@ -317,8 +435,9 @@ pub struct TickReport {
     /// [`FinishReason::Cancelled`]. Kept separate from `finished` so
     /// per-tick and aggregate accounting use the same taxonomy.
     pub cancelled: usize,
-    /// Requests emitted as [`FinishReason::Error`] at admission this
-    /// tick.
+    /// Requests emitted as [`FinishReason::Error`] this tick —
+    /// admission failures and step-fault evictions past the retry
+    /// budget.
     pub errors: usize,
     /// Over-budget rows preempted this tick (each re-queued with its
     /// partial state).
@@ -399,6 +518,10 @@ struct Active<'m> {
     /// Ticks this request has held a slot (across admissions).
     service_ticks: u64,
     preemptions: u32,
+    /// Transient-fault retries consumed (carried through preemption
+    /// re-queues; a step fault beyond [`ServeOpts::retry_budget`]
+    /// errors the request instead of re-queuing).
+    retries: u32,
     cancelled: bool,
 }
 
@@ -436,11 +559,30 @@ pub struct Scheduler<'m> {
     /// Round-robin start slot for handing out the next tick's prefill
     /// budget.
     prefill_cursor: usize,
-    /// Test hook: admissions to fail deliberately (see
-    /// [`inject_admit_failures`](Scheduler::inject_admit_failures)).
-    admit_faults: usize,
+    /// Deterministic fault-injection plan (empty = no injected faults).
+    /// [`inject_admit_failures`](Scheduler::inject_admit_failures) is
+    /// sugar for appending session-open rules here.
+    faults: FaultPlan,
+    /// Per-tick invariant auditor toggle ([`ServeOpts::audit`]).
+    audit: bool,
+    /// Highest committed stream length (prompt + tokens) the auditor
+    /// has seen per request — per-stream KV positions must never
+    /// regress below it (spec rollbacks only shed UNcommitted tail).
+    audit_progress: HashMap<RequestId, usize>,
+    /// Transient-fault retries allowed per request
+    /// ([`ServeOpts::retry_budget`]).
+    retry_budget: u32,
     /// Draft engine for speculative decoding (None = plain decode).
     draft: Option<DraftEngine<'m>>,
+    /// Speculation circuit breaker state: drafting runs only while
+    /// enabled; a draft fault or acceptance collapse trips it.
+    spec_enabled: bool,
+    /// Per-tick (drafted, accepted) over the trailing
+    /// [`SPEC_TRIP_WINDOW`] ticks — the breaker's collapse detector.
+    spec_window: VecDeque<(u64, u64)>,
+    /// Ticks since the breaker tripped (re-enables at
+    /// [`SPEC_REENABLE_TICKS`]).
+    spec_disabled_ticks: u64,
     /// Scheduler-side bookkeeping tally: approximate scalar ops spent
     /// in sampling and the accept walk, kept OUT of the model's MAC
     /// counters (the `scheduler_overhead` category).
@@ -527,8 +669,14 @@ impl<'m> Scheduler<'m> {
             cap,
             prefill_chunk: opts.prefill_chunk,
             prefill_cursor: 0,
-            admit_faults: 0,
+            faults: opts.faults.clone().unwrap_or_default(),
+            audit: opts.audit,
+            audit_progress: HashMap::new(),
+            retry_budget: opts.retry_budget,
             draft,
+            spec_enabled: true,
+            spec_window: VecDeque::new(),
+            spec_disabled_ticks: 0,
             overhead: MacCounter::default(),
             on_tokens: None,
             finished: Vec::new(),
@@ -626,30 +774,7 @@ impl<'m> Scheduler<'m> {
     /// already-finished ids.
     pub fn cancel(&mut self, id: RequestId) -> bool {
         if let Some(q) = self.queue.remove(id) {
-            let prompt_len = q.req.prompt.len();
-            let (tokens, ttft_s, ttft_ticks, preemptions, spec_drafted, spec_accepted) =
-                match q.resume {
-                    Some(r) => (
-                        r.tokens,
-                        r.ttft_s,
-                        r.ttft_ticks,
-                        r.preemptions,
-                        r.spec_drafted,
-                        r.spec_accepted,
-                    ),
-                    None => (Vec::new(), None, None, 0, 0, 0),
-                };
-            self.finished.push(GenOutput {
-                id,
-                prompt_len,
-                tokens,
-                finish: FinishReason::Cancelled,
-                ttft_s,
-                ttft_ticks,
-                preemptions,
-                spec_drafted,
-                spec_accepted,
-            });
+            self.finished.push(Self::output_from_queued(q, FinishReason::Cancelled, None));
             self.stats.cancelled += 1;
             return true;
         }
@@ -665,21 +790,95 @@ impl<'m> Scheduler<'m> {
     /// Test-only fault injection: make the next `n` admissions fail as
     /// if the session open had errored, pinning the
     /// no-request-is-silently-lost contract ([`FinishReason::Error`])
-    /// without needing a genuinely unopenable pool.
+    /// without needing a genuinely unopenable pool. Sugar for `n`
+    /// permanent [`FaultSite::SessionOpen`] rules on the plan's next
+    /// `n` admission checks.
     #[doc(hidden)]
     pub fn inject_admit_failures(&mut self, n: usize) {
-        self.admit_faults = n;
+        self.faults.next_n(FaultSite::SessionOpen, n, false);
+    }
+
+    /// Build the terminal [`GenOutput`] for a request that dies in the
+    /// queue (cancellation, admission failure): whatever partial state
+    /// a pre-preemption admission recorded, or an empty stream.
+    fn output_from_queued(
+        q: QueuedRequest,
+        finish: FinishReason,
+        error: Option<String>,
+    ) -> GenOutput {
+        let QueuedRequest { id, req, resume, .. } = q;
+        let prompt_len = req.prompt.len();
+        match resume {
+            Some(r) => GenOutput {
+                id,
+                prompt_len,
+                tokens: r.tokens,
+                finish,
+                ttft_s: r.ttft_s,
+                ttft_ticks: r.ttft_ticks,
+                preemptions: r.preemptions,
+                spec_drafted: r.spec_drafted,
+                spec_accepted: r.spec_accepted,
+                error,
+            },
+            None => GenOutput {
+                id,
+                prompt_len,
+                tokens: Vec::new(),
+                finish,
+                ttft_s: None,
+                ttft_ticks: None,
+                preemptions: 0,
+                spec_drafted: 0,
+                spec_accepted: 0,
+                error,
+            },
+        }
+    }
+
+    /// Build the terminal [`GenOutput`] for an evicted slot. Consumes
+    /// the row — its sessions drop here, returning every page and
+    /// reservation to the pool.
+    fn output_from_active(a: Active<'_>, finish: FinishReason, error: Option<String>) -> GenOutput {
+        GenOutput {
+            id: a.id,
+            prompt_len: a.prompt_len,
+            tokens: a.tokens,
+            finish,
+            ttft_s: a.ttft_s,
+            ttft_ticks: a.ttft_ticks,
+            preemptions: a.preemptions,
+            spec_drafted: a.spec_drafted,
+            spec_accepted: a.spec_accepted,
+            error,
+        }
     }
 
     /// Open a dequeued request's single-row session in the shared pool
     /// (reserving its worst-case page demand) and build its Prefilling
     /// row. The prompt is NOT run here — chunked prefill happens in
-    /// the tick's fused step. On failure the entry is handed back so
-    /// the caller can emit it as [`FinishReason::Error`].
-    fn admit(&mut self, q: QueuedRequest) -> std::result::Result<Active<'m>, (QueuedRequest, Error)> {
-        if self.admit_faults > 0 {
-            self.admit_faults -= 1;
-            return Err((q, Error::msg("injected admission failure (test hook)")));
+    /// the tick's fused step. On failure the entry is handed back with
+    /// the error and a transient flag so the caller can retry (with
+    /// backoff) or emit it as [`FinishReason::Error`].
+    ///
+    /// Fault sites: [`FaultSite::SessionOpen`] injects here where a
+    /// real open error would surface; [`FaultSite::KvAlloc`] injects at
+    /// the reservation, the only point a page shortfall can really
+    /// occur — the reserve-worst-case-up-front invariant makes
+    /// in-decode allocation failure unreachable. Real open errors are
+    /// treated as permanent (the gate and the reservation use the same
+    /// arithmetic, so a genuine failure here is a logic bug worth
+    /// surfacing, not a retryable blip).
+    fn admit(
+        &mut self,
+        q: QueuedRequest,
+    ) -> std::result::Result<Active<'m>, (QueuedRequest, Error, bool)> {
+        let tick = self.stats.ticks;
+        if let Some(f) = self.faults.fire(FaultSite::SessionOpen, tick, Some(q.id)) {
+            return Err((q, Error::msg(f.reason), f.transient));
+        }
+        if let Some(f) = self.faults.fire(FaultSite::KvAlloc, tick, Some(q.id)) {
+            return Err((q, Error::msg(f.reason), f.transient));
         }
         let budget = Self::entry_positions(&q);
         let lag = self.draft.as_ref().map_or(0, |de| de.evict_lag());
@@ -691,7 +890,7 @@ impl<'m> Scheduler<'m> {
             lag,
         ) {
             Ok(s) => s,
-            Err(e) => return Err((q, e)),
+            Err(e) => return Err((q, e, false)),
         };
         // Speculative mode: the shadow draft session opens (and on
         // failure, fails admission) atomically with the target one —
@@ -703,11 +902,11 @@ impl<'m> Scheduler<'m> {
                 Ok(ds) => Some(ds),
                 Err(e) => {
                     drop(session);
-                    return Err((q, e));
+                    return Err((q, e, false));
                 }
             },
         };
-        let QueuedRequest { id, req, submitted, submit_tick, resume } = q;
+        let QueuedRequest { id, req, submitted, submit_tick, resume, retries, not_before: _ } = q;
         if resume.is_some() {
             self.stats.resumes += 1;
         }
@@ -753,6 +952,7 @@ impl<'m> Scheduler<'m> {
             ttft_ticks,
             service_ticks,
             preemptions,
+            retries,
             cancelled: false,
         })
     }
@@ -776,7 +976,9 @@ impl<'m> Scheduler<'m> {
             let better = match pick {
                 None => true,
                 Some(j) => {
-                    let b = self.slots[j].as_ref().expect("picked slot occupied");
+                    let b = self.slots[j]
+                        .as_ref()
+                        .expect("invariant: preemption candidates only index occupied slots");
                     let ka = (a.priority, std::cmp::Reverse(a.service_ticks), std::cmp::Reverse(a.id));
                     let kb = (b.priority, std::cmp::Reverse(b.service_ticks), std::cmp::Reverse(b.id));
                     ka < kb
@@ -787,7 +989,20 @@ impl<'m> Scheduler<'m> {
             }
         }
         let Some(i) = pick else { return false };
-        let a = self.slots[i].take().expect("victim slot occupied");
+        let a = self.slots[i].take().expect("invariant: preemption pick indexes an occupied slot");
+        self.requeue_active(a, true, 0);
+        self.stats.preemptions += 1;
+        true
+    }
+
+    /// Re-queue an evicted row with its partial state — the shared
+    /// machinery behind preemption AND transient-fault retries. The
+    /// resumed stream is bit-identical to an uninterrupted one:
+    /// re-admission replays prompt + recorded tokens through chunked
+    /// prefill and the preserved RNG continues the sample sequence.
+    /// `preempted` rows count a preemption; retry rows count a consumed
+    /// retry instead and carry `not_before` as their backoff gate.
+    fn requeue_active(&mut self, a: Active<'m>, preempted: bool, not_before: u64) {
         let Active {
             id,
             session,
@@ -808,6 +1023,7 @@ impl<'m> Scheduler<'m> {
             ttft_ticks,
             service_ticks,
             preemptions,
+            retries,
             ..
         } = a;
         // Pages and the worst-case reservation return here (draft
@@ -833,13 +1049,13 @@ impl<'m> Scheduler<'m> {
                 service_ticks,
                 ttft_s,
                 ttft_ticks,
-                preemptions: preemptions + 1,
+                preemptions: preemptions + u32::from(preempted),
                 spec_drafted,
                 spec_accepted,
             }),
+            retries: retries + u32::from(!preempted),
+            not_before,
         });
-        self.stats.preemptions += 1;
-        true
     }
 
     /// One scheduler tick: evict cancellations, admit queued requests
@@ -849,6 +1065,7 @@ impl<'m> Scheduler<'m> {
     /// docs.
     pub fn tick(&mut self) -> Result<TickReport> {
         self.stats.ticks += 1;
+        let tick_now = self.stats.ticks;
         let tick_t0 = std::time::Instant::now();
         let mut finished = 0usize;
         let mut cancelled = 0usize;
@@ -856,18 +1073,8 @@ impl<'m> Scheduler<'m> {
         // Phase 1: evict cancellations, freeing slots before admission.
         for slot in self.slots.iter_mut() {
             if slot.as_ref().is_some_and(|a| a.cancelled) {
-                let a = slot.take().expect("slot checked occupied");
-                self.finished.push(GenOutput {
-                    id: a.id,
-                    prompt_len: a.prompt_len,
-                    tokens: a.tokens,
-                    finish: FinishReason::Cancelled,
-                    ttft_s: a.ttft_s,
-                    ttft_ticks: a.ttft_ticks,
-                    preemptions: a.preemptions,
-                    spec_drafted: a.spec_drafted,
-                    spec_accepted: a.spec_accepted,
-                });
+                let a = slot.take().expect("invariant: slot checked occupied (cancel evict)");
+                self.finished.push(Self::output_from_active(a, FinishReason::Cancelled, None));
                 self.stats.cancelled += 1;
                 cancelled += 1;
             }
@@ -886,7 +1093,15 @@ impl<'m> Scheduler<'m> {
         loop {
             let (priority, demand) = match self.queue.peek() {
                 None => break,
-                Some(q) => (q.req.priority, self.request_pages(Self::entry_positions(q))),
+                Some(q) => {
+                    if q.not_before > tick_now {
+                        // The head is waiting out a transient-fault
+                        // backoff; strict priority order holds the
+                        // class behind it, exactly like a pool defer.
+                        break;
+                    }
+                    (q.req.priority, self.request_pages(Self::entry_positions(q)))
+                }
             };
             if !self.slots.iter().any(|s| s.is_none()) {
                 if self.preempt_one(priority) {
@@ -904,45 +1119,45 @@ impl<'m> Scheduler<'m> {
                 self.stats.deferrals += 1;
                 break;
             }
-            let q = self.queue.pop().expect("peeked request present");
-            let sidx = self.slots.iter().position(|s| s.is_none()).expect("free slot checked");
+            let q = self.queue.pop().expect("invariant: peeked request still at queue head");
+            let sidx = self
+                .slots
+                .iter()
+                .position(|s| s.is_none())
+                .expect("invariant: free slot checked before dequeue");
             match self.admit(q) {
                 Ok(active) => {
                     self.slots[sidx] = Some(active);
                     admitted += 1;
                 }
-                Err((q, e)) => {
-                    // Satellite contract: an admission failure must
-                    // never silently lose the (already dequeued)
-                    // request — emit it as an Error output and keep
-                    // admitting.
-                    eprintln!("WARN: serve: admission of request {} failed: {e}", q.id);
-                    let prompt_len = q.req.prompt.len();
-                    let (tokens, ttft_s, ttft_ticks, preemptions, spec_drafted, spec_accepted) =
-                        match q.resume {
-                            Some(r) => (
-                                r.tokens,
-                                r.ttft_s,
-                                r.ttft_ticks,
-                                r.preemptions,
-                                r.spec_drafted,
-                                r.spec_accepted,
-                            ),
-                            None => (Vec::new(), None, None, 0, 0, 0),
-                        };
-                    self.finished.push(GenOutput {
-                        id: q.id,
-                        prompt_len,
-                        tokens,
-                        finish: FinishReason::Error,
-                        ttft_s,
-                        ttft_ticks,
-                        preemptions,
-                        spec_drafted,
-                        spec_accepted,
-                    });
-                    self.stats.errors += 1;
-                    errors += 1;
+                Err((mut q, e, transient)) => {
+                    // Contract: an admission failure must never
+                    // silently lose the (already dequeued) request —
+                    // transient faults re-queue with backoff within the
+                    // retry budget (RNG and tokens untouched, so the
+                    // eventual stream is bit-identical); everything
+                    // else is emitted as an Error output. Admission
+                    // continues either way.
+                    if transient && q.retries < self.retry_budget {
+                        q.retries += 1;
+                        q.not_before = tick_now + q.retries as u64;
+                        eprintln!(
+                            "WARN: serve: admission of request {} hit a transient fault \
+                             ({e}); retry {}/{} deferred to tick {}",
+                            q.id, q.retries, self.retry_budget, q.not_before
+                        );
+                        self.queue.requeue(q);
+                        self.stats.retries_recovered += 1;
+                    } else {
+                        eprintln!("WARN: serve: admission of request {} failed: {e}", q.id);
+                        self.finished.push(Self::output_from_queued(
+                            q,
+                            FinishReason::Error,
+                            Some(format!("{e}")),
+                        ));
+                        self.stats.errors += 1;
+                        errors += 1;
+                    }
                 }
             }
         }
@@ -987,65 +1202,104 @@ impl<'m> Scheduler<'m> {
         // the draft-cost side of the break-even equation.
         let mut proposals: Vec<Option<Vec<i32>>> = vec![None; nslots];
         let mut draft_seconds = 0.0;
-        if let Some(de) = &self.draft {
-            let t0 = std::time::Instant::now();
-            let mut follow_sessions: Vec<&mut DraftSession<'m>> = Vec::new();
-            let mut follow_chunks: Vec<&[i32]> = Vec::new();
-            let mut prop_sessions: Vec<&mut DraftSession<'m>> = Vec::new();
-            let mut prop_catchups: Vec<Vec<i32>> = Vec::new();
-            let mut prop_slots: Vec<usize> = Vec::new();
-            for (sidx, slot) in self.slots.iter_mut().enumerate() {
-                let Some(a) = slot else { continue };
-                // Disjoint-field borrows: the draft session steps
-                // while the committed stream (feed/tokens) is read.
-                let Active { draft, feed, fed, tokens, prompt_len, .. } = a;
-                let Some(dr) = draft.as_mut() else { continue };
-                if *fed < feed.len() {
-                    if chunk_w[sidx] > 0 {
-                        follow_sessions.push(dr);
-                        follow_chunks.push(&feed[*fed..*fed + chunk_w[sidx]]);
+        // (reason, poisoned, injected): a draft-phase failure to hand
+        // the circuit breaker once the slot borrows end. `poisoned`
+        // marks a REAL engine error, whose sessions are in an unknown
+        // mid-propose state and must drop; an injected fault fires
+        // before any draft step, so the (untouched) sessions survive
+        // for the post-cooldown catch-up.
+        let mut draft_fault: Option<(String, bool, bool)> = None;
+        if self.spec_enabled {
+            if let Some(de) = &self.draft {
+                let t0 = std::time::Instant::now();
+                let mut follow_sessions: Vec<&mut DraftSession<'m>> = Vec::new();
+                let mut follow_chunks: Vec<&[i32]> = Vec::new();
+                let mut prop_sessions: Vec<&mut DraftSession<'m>> = Vec::new();
+                let mut prop_catchups: Vec<Vec<i32>> = Vec::new();
+                let mut prop_slots: Vec<usize> = Vec::new();
+                for (sidx, slot) in self.slots.iter_mut().enumerate() {
+                    let Some(a) = slot else { continue };
+                    // Disjoint-field borrows: the draft session steps
+                    // while the committed stream (feed/tokens) is read.
+                    let Active { draft, feed, fed, tokens, prompt_len, .. } = a;
+                    let Some(dr) = draft.as_mut() else { continue };
+                    if *fed < feed.len() {
+                        if chunk_w[sidx] > 0 {
+                            follow_sessions.push(dr);
+                            follow_chunks.push(&feed[*fed..*fed + chunk_w[sidx]]);
+                        }
+                    } else {
+                        // Committed stream: prompt then sampled tokens
+                        // (the last of which is `next`, which this tick's
+                        // verify step will consume).
+                        let s_len = *prompt_len + tokens.len();
+                        let catchup: Vec<i32> = (dr.fed..s_len)
+                            .map(|i| {
+                                if i < *prompt_len {
+                                    feed[i]
+                                } else {
+                                    tokens[i - *prompt_len]
+                                }
+                            })
+                            .collect();
+                        prop_catchups.push(catchup);
+                        prop_slots.push(sidx);
+                        prop_sessions.push(dr);
                     }
-                } else {
-                    // Committed stream: prompt then sampled tokens
-                    // (the last of which is `next`, which this tick's
-                    // verify step will consume).
-                    let s_len = *prompt_len + tokens.len();
-                    let catchup: Vec<i32> = (dr.fed..s_len)
-                        .map(|i| {
-                            if i < *prompt_len {
-                                feed[i]
-                            } else {
-                                tokens[i - *prompt_len]
-                            }
-                        })
-                        .collect();
-                    prop_catchups.push(catchup);
-                    prop_slots.push(sidx);
-                    prop_sessions.push(dr);
                 }
+                if !(follow_sessions.is_empty() && prop_sessions.is_empty()) {
+                    if let Some(f) = self.faults.fire(FaultSite::DraftPropose, tick_now, None) {
+                        draft_fault = Some((f.reason, false, true));
+                    } else {
+                        let stepped = de
+                            .follow(&mut follow_sessions, &follow_chunks)
+                            .and_then(|()| de.propose(&mut prop_sessions, &prop_catchups));
+                        match stepped {
+                            Ok(props) => {
+                                for (sidx, p) in prop_slots.into_iter().zip(props) {
+                                    proposals[sidx] = Some(p);
+                                }
+                            }
+                            Err(e) => {
+                                draft_fault =
+                                    Some((format!("draft engine failed: {e}"), true, false));
+                            }
+                        }
+                    }
+                }
+                draft_seconds = t0.elapsed().as_secs_f64();
             }
-            de.follow(&mut follow_sessions, &follow_chunks)?;
-            let props = de.propose(&mut prop_sessions, &prop_catchups)?;
-            for (sidx, p) in prop_slots.into_iter().zip(props) {
-                proposals[sidx] = Some(p);
+        }
+        if let Some((why, poisoned, injected)) = draft_fault {
+            // Draft faults never fail a request: decoding rows simply
+            // run plain this tick (their proposals stayed None), which
+            // is bit-identical by the speculative-equivalence contract.
+            // An injected fault therefore counts as absorbed.
+            self.trip_speculation(&why, poisoned);
+            if injected {
+                self.stats.retries_recovered += 1;
             }
-            draft_seconds = t0.elapsed().as_secs_f64();
         }
 
         // Phase 3b: one fused step, ascending slot order — decode rows
         // (width 1 plain, width k+1 speculative with all logits kept)
-        // plus the scheduled prefill chunks.
-        let mut parts: Vec<(&mut Active<'m>, usize, StepRow)> = Vec::new();
+        // plus the scheduled prefill chunks. The step runs inside a
+        // `catch_unwind` boundary: a panicking kernel chunk (real or
+        // injected) demotes the tick to per-session sequential stepping
+        // — bit-identical to the fused step by the batch-invariance
+        // contract — so the poisoned row can be located and evicted
+        // while every survivor continues.
+        let mut parts: Vec<(usize, &mut Active<'m>, usize, StepRow)> = Vec::new();
         for (sidx, slot) in self.slots.iter_mut().enumerate() {
             if let Some(a) = slot {
                 if a.prefilling() {
                     if chunk_w[sidx] > 0 {
-                        parts.push((a, chunk_w[sidx], StepRow::Prefill));
+                        parts.push((sidx, a, chunk_w[sidx], StepRow::Prefill));
                     }
                 } else if let Some(props) = proposals[sidx].take() {
-                    parts.push((a, props.len() + 1, StepRow::Spec(props)));
+                    parts.push((sidx, a, props.len() + 1, StepRow::Spec(props)));
                 } else {
-                    parts.push((a, 1, StepRow::Decode));
+                    parts.push((sidx, a, 1, StepRow::Decode));
                 }
             }
         }
@@ -1057,11 +1311,16 @@ impl<'m> Scheduler<'m> {
         let mut drafted_tick = 0usize;
         let mut accepted_tick = 0usize;
         let mut emissions: Vec<(RequestId, Vec<i32>)> = Vec::new();
+        // (slot, reason, transient) of rows that failed this tick —
+        // resolved to retry/Error once the slot borrows end.
+        let mut failed_rows: Vec<(usize, String, bool)> = Vec::new();
         if batch > 0 {
             let mut toks: Vec<i32> = Vec::new();
+            let mut offs: Vec<usize> = Vec::with_capacity(batch);
             let mut widths: Vec<usize> = Vec::with_capacity(batch);
             let mut keep_all: Vec<bool> = Vec::with_capacity(batch);
-            for (a, w, kind) in parts.iter() {
+            for (_, a, w, kind) in parts.iter() {
+                offs.push(toks.len());
                 match kind {
                     StepRow::Prefill => toks.extend_from_slice(&a.feed[a.fed..a.fed + w]),
                     StepRow::Decode => toks.push(a.next),
@@ -1073,15 +1332,134 @@ impl<'m> Scheduler<'m> {
                 widths.push(*w);
                 keep_all.push(matches!(kind, StepRow::Spec(_)));
             }
-            let mut sess: Vec<&mut NativeSession<'_>> =
-                parts.iter_mut().map(|(a, _, _)| &mut a.session).collect();
+            // Injected kernel-panic probe: one eligibility check per
+            // row. An injected panic is modeled as firing BEFORE the
+            // row's kernels run, so its session state is untouched and
+            // a retry resumes bit-identically.
+            let mut poison: Vec<Option<(String, bool)>> = Vec::with_capacity(batch);
+            for (_, a, _, _) in parts.iter() {
+                poison.push(
+                    self.faults
+                        .fire(FaultSite::KernelPanic, tick_now, Some(a.id))
+                        .map(|f| (f.reason, f.transient)),
+                );
+            }
+            let any_poison = poison.iter().any(Option::is_some);
+            // Per-part failure marker: a failed row skips sampling and
+            // retirement this tick and is evicted in resolution below.
+            let mut row_fault: Vec<Option<(String, bool)>> = (0..batch).map(|_| None).collect();
+            let mut logits_row: Vec<Option<Logits>> = (0..batch).map(|_| None).collect();
             let t0 = std::time::Instant::now();
-            let logits = step_batched_full(&mut sess, &toks, &widths, &keep_all)?;
+            let mut fused_panic: Option<String> = None;
+            if !any_poison {
+                let step_res = {
+                    let mut sess: Vec<&mut NativeSession<'_>> =
+                        parts.iter_mut().map(|(_, a, _, _)| &mut a.session).collect();
+                    catch_unwind(AssertUnwindSafe(|| {
+                        step_batched_full(&mut sess, &toks, &widths, &keep_all)
+                    }))
+                };
+                match step_res {
+                    Ok(Ok(lgs)) => {
+                        for (slot, lg) in logits_row.iter_mut().zip(lgs) {
+                            *slot = Some(lg);
+                        }
+                    }
+                    // Structural errors (shape/vocab validation) are
+                    // scheduler bugs, not row faults — propagate.
+                    Ok(Err(e)) => return Err(e),
+                    Err(payload) => {
+                        let msg = panic_message(payload);
+                        eprintln!(
+                            "WARN: serve: fused step panicked ({msg}); isolating the poisoned \
+                             row via per-session stepping"
+                        );
+                        fused_panic = Some(msg);
+                    }
+                }
+            }
+            if any_poison || fused_panic.is_some() {
+                // Sequential fallback: step every row alone, each under
+                // its own catch_unwind, to locate the poisoned row(s).
+                // After a REAL fused panic each session first discards
+                // any K/V positions the aborted step pushed past its
+                // committed stream (best-effort — see
+                // `NativeSession::discard_uncommitted`).
+                let real_panic = fused_panic.is_some();
+                for (i, part) in parts.iter_mut().enumerate() {
+                    let (_, a, w, _) = part;
+                    if let Some((reason, transient)) = poison[i].take() {
+                        row_fault[i] = Some((reason, transient));
+                        continue;
+                    }
+                    let part_toks = &toks[offs[i]..offs[i] + *w];
+                    let keep = keep_all[i];
+                    let solo = catch_unwind(AssertUnwindSafe(|| {
+                        if real_panic {
+                            a.session.discard_uncommitted();
+                        }
+                        step_batched_full(&mut [&mut a.session], part_toks, &[*w], &[keep])
+                    }));
+                    match solo {
+                        Ok(Ok(mut lgs)) => logits_row[i] = lgs.pop(),
+                        Ok(Err(e)) => {
+                            row_fault[i] =
+                                Some((format!("sequential fallback step failed: {e}"), false));
+                        }
+                        Err(payload) => {
+                            let msg = panic_message(payload);
+                            row_fault[i] = Some((
+                                format!("row panicked under sequential stepping: {msg}"),
+                                false,
+                            ));
+                        }
+                    }
+                }
+            }
             decode_seconds = t0.elapsed().as_secs_f64();
-            drop(sess);
-            let tick_now = self.stats.ticks;
-            let vocab = self.engine.cfg().vocab_size as f64;
-            for ((a, w, kind), lg) in parts.iter_mut().zip(&logits) {
+            // Injected NaN poisoning: replace the victim row's logits
+            // wholesale (the fault models a corrupted kernel output).
+            let vocab_n = self.engine.cfg().vocab_size;
+            for (i, (_, a, _, _)) in parts.iter().enumerate() {
+                let Some(lg) = logits_row[i].as_ref() else { continue };
+                if let Some(f) = self.faults.fire(FaultSite::NanLogits, tick_now, Some(a.id)) {
+                    let rows = lg.rows();
+                    logits_row[i] = Some(
+                        Logits::new(vec![f32::NAN; rows * vocab_n], rows, vocab_n)
+                            .expect("invariant: NaN poison logits match their own shape"),
+                    );
+                    row_fault[i] = Some((f.reason, f.transient));
+                }
+            }
+            // Always-on non-finite scan, BEFORE any sampling: a
+            // poisoned row fails without touching its RNG or token
+            // stream, so a retried (or surviving) request's output is
+            // bit-identical to the no-fault run. Organic non-finite
+            // logits are deterministic, so they are never retried.
+            for (i, lg) in logits_row.iter().enumerate() {
+                if row_fault[i].is_some() {
+                    continue;
+                }
+                let Some(lg) = lg else { continue };
+                if lg.data().iter().any(|v| !v.is_finite()) {
+                    row_fault[i] =
+                        Some(("non-finite logits detected before sampling".to_string(), false));
+                }
+            }
+            let vocab = vocab_n as f64;
+            for (i, ((_, a, w, kind), maybe_lg)) in
+                parts.iter_mut().zip(logits_row.iter()).enumerate()
+            {
+                if row_fault[i].is_some() {
+                    continue;
+                }
+                let Some(lg) = maybe_lg else {
+                    row_fault[i] = Some((
+                        "row produced no logits (scheduler invariant violation)".to_string(),
+                        false,
+                    ));
+                    continue;
+                };
                 let s = &a.sampling;
                 match kind {
                     StepRow::Prefill => {
@@ -1138,7 +1516,19 @@ impl<'m> Scheduler<'m> {
                         emitted.truncate(a.max_new_tokens - a.tokens.len());
                         a.eos_hit = s.eos_token.is_some_and(|e| emitted.last() == Some(&e));
                         a.tokens.extend_from_slice(&emitted);
-                        a.next = *emitted.last().expect("accept walk emits >= 1 token");
+                        // Fault-reachable in principle (the accept walk
+                        // contract is >= 1 emitted token): a violation
+                        // fails THIS row with a structured error
+                        // instead of panicking the whole tick.
+                        let Some(&last) = emitted.last() else {
+                            row_fault[i] = Some((
+                                "speculative accept walk emitted no tokens (contract: >= 1)"
+                                    .to_string(),
+                                false,
+                            ));
+                            continue;
+                        };
+                        a.next = last;
                         tokens_sampled += emitted.len();
                         self.stats.decode_tokens += emitted.len() as u64;
                         let retiring = a.eos_hit || a.tokens.len() >= a.max_new_tokens;
@@ -1150,7 +1540,17 @@ impl<'m> Scheduler<'m> {
                             // committed part of its self-fed proposals
                             // so the next catch-up is 1-2 tokens.
                             a.session.rollback_to(s_old + out.accepted);
-                            let dr = a.draft.as_mut().expect("spec row has a draft session");
+                            // Fault-reachable: the breaker drops draft
+                            // sessions on a poisoned draft engine; a
+                            // Spec row that lost its draft mid-tick is
+                            // failed structurally, not unwrapped.
+                            let Some(dr) = a.draft.as_mut() else {
+                                row_fault[i] = Some((
+                                    "speculative row lost its draft session mid-tick".to_string(),
+                                    false,
+                                ));
+                                continue;
+                            };
                             let d_keep = s_old + out.accepted.min(props.len() - 1);
                             dr.session.rollback_to(d_keep);
                             dr.fed = d_keep;
@@ -1160,8 +1560,45 @@ impl<'m> Scheduler<'m> {
                 }
             }
             self.stats.total_tokens += tokens_sampled as u64;
+            for (i, f) in row_fault.into_iter().enumerate() {
+                if let Some((reason, transient)) = f {
+                    failed_rows.push((parts[i].0, reason, transient));
+                }
+            }
         }
         drop(parts);
+
+        // Row-failure resolution: evict each failed row. Transient
+        // faults within the retry budget re-queue with linear backoff —
+        // the failed step never touched the row's RNG or token stream,
+        // so the resumed output is bit-identical to the no-fault run.
+        // Everything else is emitted as a structured Error output.
+        for (sidx, reason, transient) in failed_rows {
+            let a = self.slots[sidx]
+                .take()
+                .expect("invariant: failed rows index slots that were stepped this tick");
+            if transient && a.retries < self.retry_budget {
+                let next_try = tick_now + (a.retries as u64 + 1);
+                eprintln!(
+                    "WARN: serve: request {} hit a transient step fault ({reason}); retry {}/{} \
+                     deferred to tick {next_try}",
+                    a.id,
+                    a.retries + 1,
+                    self.retry_budget
+                );
+                self.requeue_active(a, false, next_try);
+                self.stats.retries_recovered += 1;
+            } else {
+                eprintln!("WARN: serve: request {} failed: {reason}", a.id);
+                self.finished.push(Self::output_from_active(
+                    a,
+                    FinishReason::Error,
+                    Some(reason),
+                ));
+                self.stats.errors += 1;
+                errors += 1;
+            }
+        }
 
         // Streaming sink: per-request newly emitted tokens, slot order.
         if let Some(cb) = self.on_tokens.as_mut() {
@@ -1182,21 +1619,45 @@ impl<'m> Scheduler<'m> {
             let done =
                 slot.as_ref().is_some_and(|a| a.eos_hit || a.tokens.len() >= a.max_new_tokens);
             if done {
-                let a = slot.take().expect("slot checked occupied");
+                let a = slot.take().expect("invariant: slot checked occupied (retire)");
                 let finish = if a.eos_hit { FinishReason::Eos } else { FinishReason::Length };
-                self.finished.push(GenOutput {
-                    id: a.id,
-                    prompt_len: a.prompt_len,
-                    tokens: a.tokens,
-                    finish,
-                    ttft_s: a.ttft_s,
-                    ttft_ticks: a.ttft_ticks,
-                    preemptions: a.preemptions,
-                    spec_drafted: a.spec_drafted,
-                    spec_accepted: a.spec_accepted,
-                });
+                self.finished.push(Self::output_from_active(a, finish, None));
                 self.stats.finished += 1;
                 finished += 1;
+            }
+        }
+
+        // Speculation circuit breaker: while enabled, judge windowed
+        // acceptance; while tripped, count down the cooldown and
+        // re-enable with hysteresis (the refilled window must again
+        // reach SPEC_TRIP_MIN_DRAFTED before another collapse verdict).
+        if self.draft.is_some() {
+            if self.spec_enabled {
+                self.spec_window.push_back((drafted_tick as u64, accepted_tick as u64));
+                while self.spec_window.len() > SPEC_TRIP_WINDOW {
+                    self.spec_window.pop_front();
+                }
+                let (d, acc) = self
+                    .spec_window
+                    .iter()
+                    .fold((0u64, 0u64), |(d, acc), (dd, aa)| (d + dd, acc + aa));
+                if d >= SPEC_TRIP_MIN_DRAFTED && (acc as f64) < SPEC_TRIP_ACCEPT_FLOOR * d as f64 {
+                    self.trip_speculation(
+                        &format!("windowed acceptance collapsed ({acc}/{d} accepted)"),
+                        false,
+                    );
+                }
+            } else {
+                self.spec_disabled_ticks += 1;
+                if self.spec_disabled_ticks >= SPEC_REENABLE_TICKS {
+                    self.spec_enabled = true;
+                    self.spec_disabled_ticks = 0;
+                    self.spec_window.clear();
+                    eprintln!(
+                        "WARN: serve: speculation re-enabled after {SPEC_REENABLE_TICKS} \
+                         cooldown ticks"
+                    );
+                }
             }
         }
 
@@ -1206,6 +1667,11 @@ impl<'m> Scheduler<'m> {
         self.stats.accepted += accepted_tick as u64;
         self.stats.draft_seconds += draft_seconds;
         self.stats.step_seconds += decode_seconds;
+        self.stats.faults_injected = self.faults.injected();
+        if self.audit {
+            self.audit_tick(&ps)?;
+            self.stats.audit_ticks += 1;
+        }
         let overhead_seconds =
             (tick_t0.elapsed().as_secs_f64() - draft_seconds - decode_seconds).max(0.0);
         self.stats.overhead_seconds += overhead_seconds;
@@ -1296,6 +1762,196 @@ impl<'m> Scheduler<'m> {
     pub fn spec_k(&self) -> usize {
         self.draft.as_ref().map_or(0, |de| de.k())
     }
+
+    /// Whether speculative drafting is currently enabled (false while
+    /// the circuit breaker's cooldown runs, and always false without a
+    /// draft engine).
+    pub fn spec_enabled(&self) -> bool {
+        self.draft.is_some() && self.spec_enabled
+    }
+
+    /// Trip the speculation circuit breaker: disable drafting for
+    /// [`SPEC_REENABLE_TICKS`], clear the acceptance window, and — when
+    /// the draft engine's own state is suspect (`poisoned`) — drop
+    /// every row's draft session (their pages and reservations return;
+    /// those rows decode plain for the rest of their life, which is
+    /// bit-identical by the speculative-equivalence contract; fresh
+    /// admissions open new draft sessions as usual).
+    fn trip_speculation(&mut self, why: &str, poisoned: bool) {
+        self.spec_enabled = false;
+        self.spec_disabled_ticks = 0;
+        self.spec_window.clear();
+        self.stats.spec_trips += 1;
+        eprintln!(
+            "WARN: serve: speculation circuit breaker tripped ({why}); plain decode for the \
+             next {SPEC_REENABLE_TICKS} ticks"
+        );
+        if poisoned {
+            for a in self.slots.iter_mut().flatten() {
+                a.draft = None;
+            }
+        }
+    }
+
+    /// The per-tick invariant auditor ([`ServeOpts::audit`] /
+    /// `PALLAS_AUDIT=1`). Checks, in order:
+    ///
+    /// 1. **Pool conservation** — every materialized page is either
+    ///    mapped by a live stream or on the free list
+    ///    (`in_use + free == materialized <= max`); the pool
+    ///    materializes lazily, so the law binds against `materialized`,
+    ///    not `max_pages`.
+    /// 2. **Reservation accounting** — the pool's reservation counter
+    ///    equals the sum of every live session's (target and draft)
+    ///    recorded worst-case demand.
+    /// 3. **Identity consistency** — no request id appears twice across
+    ///    slots and queue; queued retry state within budget.
+    /// 4. **Per-row progress** — `fed`/token counts inside bounds, the
+    ///    session's consumed position exactly matches the row's state
+    ///    (prefilling: `fed`; decoding: `prompt + tokens - 1`), and the
+    ///    committed stream never regresses below its high-water mark
+    ///    (per-stream KV positions are strictly increasing: speculative
+    ///    rollbacks shed only uncommitted overshoot).
+    /// 5. **Paged-KV structure** — [`NativeSession::audit_kv`] on every
+    ///    live target and draft session (page-table alignment, window
+    ///    coverage, no double-mapped pages).
+    ///
+    /// Violations return structured errors — the auditor never panics.
+    fn audit_tick(&mut self, ps: &PoolStats) -> Result<()> {
+        if ps.in_use + ps.free_pages != ps.materialized {
+            bail!(
+                "audit: pool conservation violated: {} in use + {} free != {} materialized",
+                ps.in_use,
+                ps.free_pages,
+                ps.materialized
+            );
+        }
+        if ps.materialized > ps.max_pages {
+            bail!(
+                "audit: pool materialized {} pages past its cap {}",
+                ps.materialized,
+                ps.max_pages
+            );
+        }
+        if ps.reserved > ps.max_pages {
+            bail!("audit: pool reserved {} pages past its cap {}", ps.reserved, ps.max_pages);
+        }
+        let mut promised = 0usize;
+        for a in self.slots.iter().flatten() {
+            promised += a.session.reserved_pages();
+            if let Some(dr) = &a.draft {
+                promised += dr.session.reserved_pages();
+            }
+        }
+        if promised != ps.reserved {
+            bail!(
+                "audit: live sessions reserve {promised} pages but the pool records {}",
+                ps.reserved
+            );
+        }
+        let mut ids: Vec<RequestId> = self.slots.iter().flatten().map(|a| a.id).collect();
+        ids.extend(self.queue.iter().map(|q| q.id));
+        ids.sort_unstable();
+        if let Some(w) = ids.windows(2).find(|w| w[0] == w[1]) {
+            bail!("audit: request id {} appears twice across slots and queue", w[0]);
+        }
+        for q in self.queue.iter() {
+            if q.retries > self.retry_budget {
+                bail!(
+                    "audit: queued request {} consumed {} retries past the budget {}",
+                    q.id,
+                    q.retries,
+                    self.retry_budget
+                );
+            }
+            if let Some(r) = &q.resume {
+                if r.tokens.len() > q.req.max_new_tokens {
+                    bail!(
+                        "audit: queued request {} resumes with {} tokens past its budget {}",
+                        q.id,
+                        r.tokens.len(),
+                        q.req.max_new_tokens
+                    );
+                }
+            }
+        }
+        for (sidx, slot) in self.slots.iter().enumerate() {
+            let Some(a) = slot else { continue };
+            if a.fed > a.feed.len() {
+                bail!("audit: slot {sidx} fed {} positions past its feed {}", a.fed, a.feed.len());
+            }
+            if a.tokens.len() > a.max_new_tokens {
+                bail!(
+                    "audit: slot {sidx} holds {} tokens past its budget {}",
+                    a.tokens.len(),
+                    a.max_new_tokens
+                );
+            }
+            let consumed = a.session.consumed();
+            if a.prefilling() {
+                if consumed != a.fed {
+                    bail!(
+                        "audit: prefilling slot {sidx} consumed {consumed} != fed {}",
+                        a.fed
+                    );
+                }
+            } else {
+                let want = a.prompt_len + a.tokens.len() - 1;
+                if consumed != want {
+                    bail!(
+                        "audit: decoding slot {sidx} consumed {consumed} != committed {want} \
+                         (prompt {} + tokens {} - 1)",
+                        a.prompt_len,
+                        a.tokens.len()
+                    );
+                }
+            }
+            if let Err(e) = a.session.audit_kv() {
+                bail!("audit: slot {sidx} target session: {e}");
+            }
+            if let Some(dr) = &a.draft {
+                let committed = a.prompt_len + a.tokens.len();
+                if dr.fed > committed {
+                    bail!(
+                        "audit: slot {sidx} draft fed {} past the committed stream {committed}",
+                        dr.fed
+                    );
+                }
+                if dr.session.consumed() != dr.fed {
+                    bail!(
+                        "audit: slot {sidx} draft consumed {} != fed {} (speculative overshoot \
+                         must roll back within the tick)",
+                        dr.session.consumed(),
+                        dr.fed
+                    );
+                }
+                if let Err(e) = dr.session.audit_kv() {
+                    bail!("audit: slot {sidx} draft session: {e}");
+                }
+            }
+            let committed = a.prompt_len + a.tokens.len();
+            let mark = self.audit_progress.entry(a.id).or_insert(committed);
+            if committed < *mark {
+                bail!(
+                    "audit: request {} committed stream regressed from {} to {committed}",
+                    a.id,
+                    *mark
+                );
+            }
+            *mark = committed;
+        }
+        Ok(())
+    }
+}
+
+/// Render a caught panic payload (the `&str`/`String` forms `panic!`
+/// produces) for error messages; other payload types get a fixed tag.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".to_string())
 }
 
 #[cfg(test)]
@@ -1330,6 +1986,25 @@ mod tests {
         assert!(parse_spec_k("-2").is_err());
         assert!(parse_spec_k("fast").is_err());
         assert!(parse_spec_k("").is_err());
+    }
+
+    #[test]
+    fn audit_parse_accepts_booleans() {
+        assert_eq!(parse_audit("1"), Ok(true));
+        assert_eq!(parse_audit("true"), Ok(true));
+        assert_eq!(parse_audit(" on "), Ok(true));
+        assert_eq!(parse_audit("yes"), Ok(true));
+        assert_eq!(parse_audit("0"), Ok(false));
+        assert_eq!(parse_audit("false"), Ok(false));
+        assert_eq!(parse_audit("off"), Ok(false));
+        assert_eq!(parse_audit("no"), Ok(false));
+    }
+
+    #[test]
+    fn audit_parse_rejects_garbage() {
+        assert!(parse_audit("2").is_err());
+        assert!(parse_audit("maybe").is_err());
+        assert!(parse_audit("").is_err());
     }
 
     #[test]

@@ -175,6 +175,21 @@ impl<'m> DraftEngine<'m> {
         if drafts.is_empty() {
             return Ok(Vec::new());
         }
+        let cap = self.cfg().ctx_len();
+        // A catch-up can outgrow the draft's own context window when a
+        // session went un-drafted for many ticks (the scheduler's
+        // speculation circuit breaker does exactly that): feed the
+        // prefix beyond the last `cap` tokens through `follow`'s
+        // sub-chunked path first, then propose from the tail — the
+        // same split `follow` applies to oversized prompt chunks.
+        if catchups.iter().any(|c| c.len() > cap) {
+            let prefixes: Vec<&[i32]> =
+                catchups.iter().map(|c| &c[..c.len().saturating_sub(cap)]).collect();
+            self.follow(drafts, &prefixes)?;
+            let tails: Vec<Vec<i32>> =
+                catchups.iter().map(|c| c[c.len().saturating_sub(cap)..].to_vec()).collect();
+            return self.propose(drafts, &tails);
+        }
         let n = drafts.len();
         let mut props: Vec<Vec<i32>> = vec![Vec::with_capacity(self.k); n];
         // Greedy draws consume nothing from this RNG (pinned in

@@ -1,0 +1,390 @@
+//! Chaos suite: deterministic fault injection against the serve stack.
+//!
+//! The load-bearing claims, pinned under EVERY built-in fault site
+//! (session-open, kv-alloc, draft-propose, kernel-panic, nan-logits):
+//!
+//! * the scheduler never panics and never deadlocks — every run
+//!   drains to idle with a structured outcome per request;
+//! * a faulted request either finishes as [`FinishReason::Error`]
+//!   (with [`GenOutput::error`] naming the fault) or recovers within
+//!   the retry budget — and a RECOVERED request's token stream is
+//!   bit-identical to the no-fault sequential oracle, because retries
+//!   re-queue with the RNG and committed tokens untouched;
+//! * requests the faults never touched are bit-identical to the
+//!   oracle — failure isolation, not just failure reporting;
+//! * the shared KV pool drains completely (no leaked pages or
+//!   reservations, whatever was evicted mid-flight);
+//! * the accounting identity `faults_injected == errors +
+//!   retries_recovered` closes — every fired fault is visible in the
+//!   stats, none double-counted;
+//! * the per-tick invariant auditor ([`ServeOpts::audit`]) passes on
+//!   every tick of every chaos run (`audit_ticks == ticks`).
+//!
+//! Each test runs with `audit: true` regardless of `PALLAS_AUDIT`, so
+//! the auditor itself is exercised under fault churn, not just on
+//! clean traffic.
+
+use switchhead::config::ModelConfig;
+use switchhead::coordinator::generate::sample_logits;
+use switchhead::model::{NativeEngine, NativeSession};
+use switchhead::runtime::{Session, TokenBatch};
+use switchhead::serve::{
+    drive_trace, synth_trace, Arrivals, FaultPlan, FaultSite, FinishReason, GenOutput, GenRequest,
+    LoadSpec, SamplingParams, Scheduler, ServeOpts, Trigger, SAMPLE_STREAM,
+};
+use switchhead::util::json::Json;
+use switchhead::util::rng::Pcg;
+
+fn cfg_json(text: &str) -> ModelConfig {
+    let cfg = ModelConfig::from_json(&Json::parse(text).unwrap()).unwrap();
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn sh_xl() -> ModelConfig {
+    cfg_json(
+        r#"{"name":"sh-xl","family":"switchhead","pos":"xl","vocab_size":64,
+            "d_model":16,"n_layers":2,"n_heads":2,"d_head":8,"d_ff":32,
+            "seq_len":8,"batch_size":2,"att_n_experts":3,"att_k":2}"#,
+    )
+}
+
+/// The 1-layer draft for speculative chaos runs (same vocab/d_head as
+/// the target so both share one KV pool).
+fn draft_cfg() -> ModelConfig {
+    cfg_json(
+        r#"{"name":"sh-draft","family":"switchhead","pos":"xl","vocab_size":64,
+            "d_model":8,"n_layers":1,"n_heads":1,"d_head":8,"d_ff":16,
+            "seq_len":8,"batch_size":2,"att_n_experts":2,"att_k":1}"#,
+    )
+}
+
+/// Sequential single-request oracle replaying exactly the scheduler's
+/// sampling procedure (same RNG stream, same sampling params).
+fn oracle_generate(engine: &NativeEngine, req: &GenRequest) -> Vec<i32> {
+    let mut session = NativeSession::open(&engine.model, 1).unwrap();
+    let s = &req.sampling;
+    let mut rng = Pcg::new(s.seed, SAMPLE_STREAM);
+    let batch = TokenBatch::new(req.prompt.clone(), 1, req.prompt.len()).unwrap();
+    let mut logits = session.prefill(&batch).unwrap();
+    let mut tokens = vec![sample_logits(logits.row(0), s.temperature, s.top_k, &mut rng) as i32];
+    while tokens.len() < req.max_new_tokens && s.eos_token != tokens.last().copied() {
+        logits = session.decode(&[*tokens.last().unwrap()]).unwrap();
+        tokens.push(sample_logits(logits.row(0), s.temperature, s.top_k, &mut rng) as i32);
+    }
+    tokens
+}
+
+fn synth_request(cfg: &ModelConfig, rng: &mut Pcg, plen: usize, max_new: usize) -> GenRequest {
+    let prompt: Vec<i32> = (0..plen).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+    GenRequest::greedy(prompt, max_new)
+}
+
+/// Submit `reqs`, run to idle under `plan`, and check every
+/// plan-independent invariant: pool drained, identity closed, auditor
+/// passed every tick. Returns (outputs sorted by id, final stats).
+fn run_chaos(
+    engine: &NativeEngine,
+    draft: Option<&NativeEngine>,
+    plan: FaultPlan,
+    reqs: &[GenRequest],
+) -> (Vec<GenOutput>, switchhead::serve::ServeStats) {
+    let opts = ServeOpts {
+        slots: 2,
+        queue_cap: reqs.len().max(1),
+        audit: true,
+        faults: Some(plan),
+        ..ServeOpts::default()
+    };
+    let mut sched = match draft {
+        Some(d) => Scheduler::with_draft(engine, d, &opts).unwrap(),
+        None => Scheduler::new(engine, &opts).unwrap(),
+    };
+    for r in reqs {
+        sched.submit(r.clone()).unwrap();
+    }
+    let mut outs = sched.run_until_idle(100_000).unwrap();
+    outs.sort_by_key(|o| o.id);
+    let st = sched.stats().clone();
+    let ps = sched.pool_stats();
+    assert_eq!(
+        (ps.in_use, ps.reserved),
+        (0, 0),
+        "drained scheduler must return every page and reservation"
+    );
+    assert_eq!(ps.free_pages, ps.materialized, "every materialized page back on the free list");
+    assert_eq!(
+        st.faults_injected,
+        st.errors + st.retries_recovered,
+        "every injected fault must be accounted as an error or a recovery"
+    );
+    assert_eq!(st.audit_ticks, st.ticks, "the auditor must run and pass on every tick");
+    (outs, st)
+}
+
+/// Permanent faults at three different sites each kill exactly their
+/// victim; every other stream is bit-identical to the oracle.
+#[test]
+fn permanent_faults_error_victims_and_isolate_survivors() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let mut rng = Pcg::new(91, 2);
+    let reqs: Vec<GenRequest> =
+        (0..6).map(|i| synth_request(&cfg, &mut rng, 1 + i % 4, 3 + i % 4)).collect();
+    let expected: Vec<Vec<i32>> = reqs.iter().map(|r| oracle_generate(&engine, r)).collect();
+
+    let plan = FaultPlan::new()
+        .with_rule(FaultSite::SessionOpen, Trigger::OnRequest(1), false)
+        .with_rule(FaultSite::KernelPanic, Trigger::OnRequest(3), false)
+        .with_rule(FaultSite::NanLogits, Trigger::OnRequest(4), false);
+    let (outs, st) = run_chaos(&engine, None, plan, &reqs);
+    assert_eq!(outs.len(), reqs.len(), "no request may be silently lost");
+    for (i, o) in outs.iter().enumerate() {
+        match i {
+            1 | 3 | 4 => {
+                assert_eq!(o.finish, FinishReason::Error, "request {i} should have failed");
+                let why = o.error.as_deref().expect("error outputs carry a reason");
+                let site = match i {
+                    1 => "session-open",
+                    3 => "kernel-panic",
+                    _ => "nan-logits",
+                };
+                assert!(why.contains(site), "request {i} reason should name the fault: {why}");
+            }
+            _ => {
+                assert_eq!(o.finish, FinishReason::Length);
+                assert_eq!(o.tokens, expected[i], "survivor {i} diverged from the oracle");
+            }
+        }
+    }
+    assert_eq!(st.faults_injected, 3);
+    assert_eq!(st.errors, 3);
+    assert_eq!(st.retries_recovered, 0);
+}
+
+/// Transient faults at every request-level site recover within the
+/// retry budget and the recovered streams are bit-identical — the
+/// failed admission/step never touched the RNG or committed tokens.
+#[test]
+fn transient_faults_recover_bit_identically() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let mut rng = Pcg::new(92, 3);
+    let reqs: Vec<GenRequest> =
+        (0..4).map(|i| synth_request(&cfg, &mut rng, 2 + i % 3, 4 + i % 3)).collect();
+    let expected: Vec<Vec<i32>> = reqs.iter().map(|r| oracle_generate(&engine, r)).collect();
+
+    let plan = FaultPlan::new()
+        .with_rule(FaultSite::SessionOpen, Trigger::OnRequest(0), true)
+        .with_rule(FaultSite::KvAlloc, Trigger::OnRequest(1), true)
+        .with_rule(FaultSite::KernelPanic, Trigger::OnRequest(2), true)
+        .with_rule(FaultSite::NanLogits, Trigger::OnRequest(3), true);
+    let (outs, st) = run_chaos(&engine, None, plan, &reqs);
+    assert_eq!(outs.len(), reqs.len());
+    for (i, o) in outs.iter().enumerate() {
+        assert_eq!(o.finish, FinishReason::Length, "request {i} should have recovered");
+        assert_eq!(o.tokens, expected[i], "recovered request {i} diverged from the oracle");
+    }
+    assert_eq!(st.faults_injected, 4);
+    assert_eq!(st.errors, 0);
+    assert_eq!(st.retries_recovered, 4);
+}
+
+/// A request whose transient faults outlast the retry budget finishes
+/// as an Error — retries are bounded, never an infinite loop.
+#[test]
+fn retry_budget_exhaustion_errors_the_request() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let mut rng = Pcg::new(93, 4);
+    let req = synth_request(&cfg, &mut rng, 3, 4);
+
+    // Budget is 3 retries (the default): four transient admission
+    // faults means attempts 1-3 re-queue with backoff and attempt 4
+    // fails the request.
+    let mut plan = FaultPlan::new();
+    for _ in 0..4 {
+        plan.push(FaultSite::SessionOpen, Trigger::OnRequest(0), true);
+    }
+    let (outs, st) = run_chaos(&engine, None, plan, &[req]);
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].finish, FinishReason::Error);
+    assert!(outs[0].error.is_some());
+    assert_eq!(st.faults_injected, 4);
+    assert_eq!(st.retries_recovered, 3);
+    assert_eq!(st.errors, 1);
+    assert!(st.ticks >= 7, "linear backoff should have spaced the retries out");
+}
+
+/// An injected draft-engine fault trips the speculation circuit
+/// breaker — no request fails, every stream stays bit-identical to the
+/// plain oracle, and the fault is accounted as absorbed.
+#[test]
+fn draft_fault_trips_breaker_and_streams_stay_identical() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let draft = NativeEngine::new(&draft_cfg(), 43).unwrap();
+    let mut rng = Pcg::new(94, 5);
+    let reqs: Vec<GenRequest> =
+        (0..5).map(|i| synth_request(&cfg, &mut rng, 1 + i % 4, 3 + i % 5)).collect();
+    let expected: Vec<Vec<i32>> = reqs.iter().map(|r| oracle_generate(&engine, r)).collect();
+
+    let plan = FaultPlan::new().with_rule(FaultSite::DraftPropose, Trigger::AtTick(2), false);
+    let (outs, st) = run_chaos(&engine, Some(&draft), plan, &reqs);
+    assert_eq!(outs.len(), reqs.len());
+    for (i, o) in outs.iter().enumerate() {
+        assert_eq!(o.finish, FinishReason::Length, "breaker must not fail requests");
+        assert_eq!(o.tokens, expected[i], "request {i} diverged across the breaker trip");
+    }
+    assert!(st.spec_trips >= 1, "the injected draft fault should have tripped the breaker");
+    assert_eq!(st.faults_injected, 1);
+    assert_eq!(st.errors, 0);
+    assert_eq!(st.retries_recovered, 1, "a breaker-contained fault counts as absorbed");
+}
+
+/// One seeded random chaos pass: a random fault plan against a seeded
+/// arrival trace. Checks every plan-independent invariant plus
+/// survivor bit-identity.
+fn random_chaos_round(
+    engine: &NativeEngine,
+    cfg: &ModelConfig,
+    seed: u64,
+    n_requests: usize,
+    n_faults: usize,
+    arrivals: Arrivals,
+) {
+    let spec = LoadSpec {
+        n: n_requests,
+        arrivals,
+        short_prompt: (1, 4),
+        long_prompt: (4, cfg.ctx_len().min(8)),
+        long_frac: 0.25,
+        new_tokens: (1, 6),
+        sampling: SamplingParams { seed, ..SamplingParams::default() },
+    };
+    let trace = synth_trace(cfg, &spec).unwrap();
+    let expected: Vec<Vec<i32>> =
+        trace.iter().map(|t| oracle_generate(engine, &t.req)).collect();
+
+    let plan = FaultPlan::random(seed, n_faults, 48, n_requests as u64);
+    let opts = ServeOpts {
+        slots: 3,
+        queue_cap: 16,
+        audit: true,
+        faults: Some(plan),
+        ..ServeOpts::default()
+    };
+    let mut sched = Scheduler::new(engine, &opts).unwrap();
+    drive_trace(&mut sched, &trace, |_r| {}).unwrap();
+    let mut outs = sched.drain_finished();
+    outs.sort_by_key(|o| o.id);
+    assert_eq!(outs.len(), trace.len(), "seed {seed}: no request may be silently lost");
+    for (i, o) in outs.iter().enumerate() {
+        match o.finish {
+            FinishReason::Length => {
+                // Survivors AND recovered requests: bit-identical.
+                assert_eq!(
+                    o.tokens, expected[i],
+                    "seed {seed}: request {i} diverged from the no-fault oracle"
+                );
+            }
+            FinishReason::Error => {
+                assert!(o.error.is_some(), "seed {seed}: error output without a reason");
+            }
+            other => panic!("seed {seed}: unexpected finish {other:?} for request {i}"),
+        }
+    }
+    let st = sched.stats();
+    assert_eq!(
+        st.faults_injected,
+        st.errors + st.retries_recovered,
+        "seed {seed}: fault accounting identity broken"
+    );
+    assert_eq!(st.audit_ticks, st.ticks, "seed {seed}: auditor skipped a tick");
+    let ps = sched.pool_stats();
+    assert_eq!((ps.in_use, ps.reserved), (0, 0), "seed {seed}: pool leaked");
+    assert_eq!(ps.free_pages, ps.materialized, "seed {seed}: free-list incomplete");
+}
+
+/// Seeded random fault plans against Poisson and heavy-tailed arrival
+/// traces: never panics, survivors bit-identical, identity closes,
+/// auditor green on every tick.
+#[test]
+fn seeded_random_chaos_sweep() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    for seed in [1u64, 2, 3] {
+        random_chaos_round(&engine, &cfg, seed, 8, 5, Arrivals::Poisson { rate: 0.7 });
+        random_chaos_round(
+            &engine,
+            &cfg,
+            seed,
+            8,
+            5,
+            Arrivals::Pareto { rate: 0.7, alpha: 1.7 },
+        );
+    }
+}
+
+/// A clean (no-fault) run under the auditor: audit must be pure
+/// observation — outputs identical to the oracle, one audit per tick.
+#[test]
+fn auditor_is_pure_observation_on_clean_runs() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let mut rng = Pcg::new(95, 6);
+    let reqs: Vec<GenRequest> =
+        (0..5).map(|i| synth_request(&cfg, &mut rng, 1 + i % 5, 2 + i % 4)).collect();
+    let expected: Vec<Vec<i32>> = reqs.iter().map(|r| oracle_generate(&engine, r)).collect();
+    let (outs, st) = run_chaos(&engine, None, FaultPlan::new(), &reqs);
+    for (i, o) in outs.iter().enumerate() {
+        assert_eq!(o.finish, FinishReason::Length);
+        assert_eq!(o.tokens, expected[i], "audit perturbed request {i}");
+    }
+    assert_eq!(st.faults_injected, 0);
+    assert_eq!(st.errors, 0);
+}
+
+/// Long soak (run via `make soak` / `cargo test --test chaos --
+/// --ignored`): many seeds, larger traces, plain AND speculative
+/// schedulers, all under the auditor.
+#[test]
+#[ignore]
+fn soak_seeded_chaos() {
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    for seed in 10u64..18 {
+        random_chaos_round(&engine, &cfg, seed, 16, 10, Arrivals::Poisson { rate: 0.5 });
+        random_chaos_round(
+            &engine,
+            &cfg,
+            seed,
+            16,
+            10,
+            Arrivals::Pareto { rate: 0.5, alpha: 1.5 },
+        );
+    }
+    // Speculative soak: targeted faults at every site while drafting,
+    // amid clean traffic — streams must stay bit-identical wherever
+    // they finish as Length.
+    let draft = NativeEngine::new(&draft_cfg(), 43).unwrap();
+    let mut rng = Pcg::new(96, 7);
+    let reqs: Vec<GenRequest> =
+        (0..8).map(|i| synth_request(&cfg, &mut rng, 1 + i % 4, 3 + i % 5)).collect();
+    let expected: Vec<Vec<i32>> = reqs.iter().map(|r| oracle_generate(&engine, r)).collect();
+    let plan = FaultPlan::new()
+        .with_rule(FaultSite::SessionOpen, Trigger::OnRequest(1), true)
+        .with_rule(FaultSite::KvAlloc, Trigger::OnRequest(2), false)
+        .with_rule(FaultSite::DraftPropose, Trigger::AtTick(3), false)
+        .with_rule(FaultSite::KernelPanic, Trigger::OnRequest(5), true)
+        .with_rule(FaultSite::NanLogits, Trigger::OnRequest(6), false);
+    let (outs, st) = run_chaos(&engine, Some(&draft), plan, &reqs);
+    for (i, o) in outs.iter().enumerate() {
+        match o.finish {
+            FinishReason::Length => assert_eq!(o.tokens, expected[i], "request {i} diverged"),
+            FinishReason::Error => assert!(o.error.is_some()),
+            other => panic!("unexpected finish {other:?}"),
+        }
+    }
+    assert!(st.spec_trips >= 1);
+}
