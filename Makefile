@@ -36,7 +36,11 @@ CLIPPY_ALLOW = -A clippy::needless_range_loop -A clippy::too_many_arguments \
 ## serving bench + fused decode path exercised end to end — the smoke
 ## itself asserts the TTFT/ITL and speculation fields exist in the JSON
 ## it emits, and the greps below keep that contract visible from the
-## Makefile.
+## Makefile. The serve bench smoke also measures the observability
+## sink's overhead (obs_overhead_pct + routing-balance summary in the
+## JSON), and a CLI serve smoke runs with --metrics/--trace on and
+## validates both outputs with the obs-check subcommand (JSONL parses
+## line-by-line, Chrome trace spans balance).
 check:
 	$(CARGO) build --release
 	$(CARGO) test -q
@@ -51,6 +55,13 @@ check:
 	grep -q scheduler_overhead target/BENCH_serve_throughput.smoke.json
 	grep -q faults_injected target/BENCH_serve_throughput.smoke.json
 	grep -q goodput_tok_s target/BENCH_serve_throughput.smoke.json
+	grep -q obs_overhead_pct target/BENCH_serve_throughput.smoke.json
+	grep -q routing_entropy_min target/BENCH_serve_throughput.smoke.json
+	PALLAS_THREADS=1 $(CARGO) run --release --bin switchhead -- serve \
+		--config configs/tiny-sh.json --requests 4 --slots 2 --tokens 6 \
+		--metrics target/obs_smoke_metrics.jsonl --trace target/obs_smoke_trace.json
+	$(CARGO) run --release --bin switchhead -- obs-check \
+		--metrics target/obs_smoke_metrics.jsonl --trace target/obs_smoke_trace.json
 	$(MAKE) lint
 	$(MAKE) doc
 

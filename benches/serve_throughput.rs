@@ -35,7 +35,15 @@
 //! reported for both. The batched run also reports KV memory: the
 //! paged pool's peak floats (`paged_peak_kv_floats`) against the
 //! preallocated-ring formula the pre-paging design pinned
-//! (`ring_kv_floats`). Every number lands in
+//! (`ring_kv_floats`). An **obs** scenario re-runs the batched traffic
+//! with both observability sinks on (JSONL metrics + Chrome trace,
+//! under `target/`) and the global MoE routing collector enabled:
+//! streams are asserted bit-identical to the obs-off run, histogram
+//! counts are asserted to reconcile exactly with `ServeStats`, and the
+//! JSON reports the sink's measured per-tick overhead
+//! (`obs_overhead_pct`) plus a routing-balance summary (per-layer
+//! selection entropy, hottest-expert share, fused-dispatch union
+//! fraction). Every number lands in
 //! `BENCH_serve_throughput.json` (`target/…smoke.json` under
 //! `SWITCHHEAD_BENCH_SMOKE=1`, which `make check` runs 1-threaded with
 //! 4 concurrent tiny-sh requests; the smoke run also asserts the
@@ -49,13 +57,14 @@ use switchhead::coordinator::generate::sample_logits;
 use switchhead::kernels;
 use switchhead::model::{NativeEngine, PoolStats};
 use switchhead::runtime::{Backend, Session, TokenBatch};
+use switchhead::obs::{routing, ObsOpts};
 use switchhead::serve::{
     drive, synth_requests, FaultPlan, FinishReason, GenRequest, SamplingParams, Scheduler,
-    ServeOpts, ServeStats, SAMPLE_STREAM,
+    ServeHists, ServeOpts, ServeStats, SAMPLE_STREAM,
 };
 use switchhead::util::json::Json;
 use switchhead::util::rng::Pcg;
-use switchhead::util::stats::quantile;
+use switchhead::util::stats::{max_share, normalized_entropy, quantile};
 
 fn num(x: f64) -> Json {
     Json::Num(x)
@@ -113,7 +122,7 @@ fn run_batched(
     engine: &NativeEngine,
     reqs: &[GenRequest],
     slots: usize,
-) -> (RunResult, PoolStats, ServeStats) {
+) -> (RunResult, PoolStats, ServeStats, ServeHists) {
     let opts = ServeOpts { slots, queue_cap: reqs.len().max(1), ..ServeOpts::default() };
     let mut sched = Scheduler::new(engine, &opts).unwrap();
     let t0 = Instant::now();
@@ -130,6 +139,7 @@ fn run_batched(
     let secs = t0.elapsed().as_secs_f64();
     let pool = sched.pool_stats();
     let stats = sched.stats().clone();
+    let hists = sched.hists().clone();
     let mut outs = sched.drain_finished();
     outs.sort_by_key(|o| o.id);
     let total_tokens = stats.total_tokens as usize;
@@ -141,7 +151,104 @@ fn run_batched(
         lat_ms,
         ttft_ms,
     };
-    (result, pool, stats)
+    (result, pool, stats, hists)
+}
+
+/// Observability scenario: the same traffic with both sinks on (JSONL
+/// metrics + Chrome trace under `target/`) and the global MoE routing
+/// collector enabled. Asserts the zero-behavior-change contract —
+/// token streams bit-identical to the obs-off batched run, histogram
+/// counts reconciling exactly with [`ServeStats`] — and measures the
+/// sink's per-tick overhead against the obs-off run (the two runs tick
+/// the same deterministic schedule, so per-tick means are comparable).
+fn run_obs(
+    engine: &NativeEngine,
+    name: &str,
+    reqs: &[GenRequest],
+    slots: usize,
+    plain: &RunResult,
+    plain_hists: &ServeHists,
+) -> Json {
+    let _ = std::fs::create_dir_all("target");
+    let metrics_path = format!("target/obs_{name}_metrics.jsonl");
+    let trace_path = format!("target/obs_{name}_trace.json");
+    let opts = ServeOpts {
+        slots,
+        queue_cap: reqs.len().max(1),
+        obs: ObsOpts { metrics: Some(metrics_path.clone()), trace: Some(trace_path.clone()) },
+        ..ServeOpts::default()
+    };
+    routing::reset();
+    routing::set_enabled(true);
+    let mut sched = Scheduler::new(engine, &opts).unwrap();
+    drive(&mut sched, reqs.to_vec(), |_r| {}).unwrap();
+    routing::set_enabled(false);
+    let rt = routing::snapshot();
+    let st = sched.stats().clone();
+    let h = sched.hists().clone();
+    let mut outs = sched.drain_finished();
+    outs.sort_by_key(|o| o.id);
+    let streams: Vec<Vec<i32>> = outs.into_iter().map(|o| o.tokens).collect();
+    assert_eq!(plain.token_streams, streams, "obs-on streams diverged from obs-off");
+    assert_eq!(
+        h.ttft_s.count(),
+        st.finished + st.errors,
+        "obs: ttft histogram count != finished + errors"
+    );
+    assert_eq!(h.itl_s.count(), st.total_tokens, "obs: itl histogram count != total tokens");
+
+    let off = plain_hists.tick_s.mean();
+    let on = h.tick_s.mean();
+    let overhead_pct = if off > 0.0 { (on / off - 1.0) * 100.0 } else { 0.0 };
+
+    // Routing balance: per-layer selection counts aggregated over the
+    // four MoE projections — the worst layer's entropy and hottest
+    // expert share summarize how balanced routing stayed.
+    let n_layers = rt.selections.keys().map(|&(l, _)| l + 1).max().unwrap_or(0);
+    let mut entropy_min = 1.0f64;
+    let mut share_max = 0.0f64;
+    for layer in 0..n_layers {
+        let mut counts: Vec<u64> = Vec::new();
+        for proj in 0..routing::PROJ_NAMES.len() {
+            if let Some(c) = rt.selections.get(&(layer, proj)) {
+                if counts.len() < c.len() {
+                    counts.resize(c.len(), 0);
+                }
+                for (acc, &n) in counts.iter_mut().zip(c) {
+                    *acc += n;
+                }
+            }
+        }
+        entropy_min = entropy_min.min(normalized_entropy(&counts));
+        share_max = share_max.max(max_share(&counts));
+    }
+    let metrics_records = std::fs::read_to_string(&metrics_path)
+        .map(|t| t.lines().filter(|l| !l.trim().is_empty()).count())
+        .unwrap_or(0);
+    let trace_events = Json::parse_file(&trace_path)
+        .ok()
+        .and_then(|d| d.get("traceEvents").map(|e| e.as_arr().map_or(0, <[Json]>::len)))
+        .unwrap_or(0);
+    assert!(metrics_records > 0, "obs run emitted no metrics records");
+    assert!(trace_events > 0, "obs run emitted no trace events");
+    println!(
+        "obs: sink overhead {overhead_pct:+.1}%/tick \
+         ({metrics_records} metrics records, {trace_events} trace events); \
+         routing entropy >= {entropy_min:.3}, max expert share <= {share_max:.2}, \
+         fused union {:.0}% of slots",
+        100.0 * rt.mean_union_frac(),
+    );
+    Json::from_pairs(vec![
+        ("obs_overhead_pct", num(overhead_pct)),
+        ("tick_mean_off_ms", num(off * 1e3)),
+        ("tick_mean_on_ms", num(on * 1e3)),
+        ("metrics_records", num(metrics_records as f64)),
+        ("trace_events", num(trace_events as f64)),
+        ("routing_entropy_min", num(entropy_min)),
+        ("routing_max_share", num(share_max)),
+        ("union_mean_experts", num(rt.mean_union())),
+        ("union_frac", num(rt.mean_union_frac())),
+    ])
 }
 
 /// Draft-and-verify speculative scenario: the same traffic through
@@ -368,11 +475,15 @@ fn bench_one(
     let reqs = synth_requests(&cfg, requests, (cfg.seq_len / 2).max(1), tokens, &sampling);
 
     let serial = run_serial(&engine, &reqs);
-    let (batched, pool, batched_stats) = run_batched(&engine, &reqs, slots);
+    let (batched, pool, batched_stats, batched_hists) = run_batched(&engine, &reqs, slots);
     assert_eq!(
         serial.token_streams, batched.token_streams,
         "{name}: batched decode diverged from the serial loop"
     );
+
+    // Observability: same traffic with sinks + routing telemetry on —
+    // asserts zero behavior change, measures the sink overhead.
+    let obs = run_obs(&engine, name, &reqs, slots, &batched, &batched_hists);
 
     // Speculative decoding: same traffic, draft-and-verify scheduler.
     let spec = run_spec(&engine, &cfg, &reqs, slots, &serial, &batched_stats);
@@ -466,6 +577,7 @@ fn bench_one(
         ("paged_over_ring_kv", num(kv_ratio)),
     ];
     pairs.push(("chaos", chaos));
+    pairs.push(("obs", obs));
     if let Some((_, sj)) = spec {
         pairs.push(("spec", sj));
     }
@@ -534,6 +646,10 @@ fn main() {
             "faults_injected",
             "retries_recovered",
             "goodput_tok_s",
+            "obs_overhead_pct",
+            "routing_entropy_min",
+            "metrics_records",
+            "union_frac",
         ] {
             assert!(text.contains(key), "smoke JSON is missing the `{key}` field");
         }

@@ -318,45 +318,65 @@ fn bench_kernels(threads_list: &[usize], iters: usize) -> Vec<Json> {
 
     let mut table = Table::new(
         "Kernel microbench (dense blocked matmul vs expert-grouped MoE dispatch)",
-        &["kernel", "threads", "GFLOP/s", "ms/call"],
+        &["kernel", "threads", "GFLOP/s", "ms/call", "pool busy"],
     );
     let mut json_rows = Vec::new();
     let dense_flops = 2.0 * (n * d * m) as f64;
     let moe_flops = 2.0 * (n * k * d * m) as f64;
     let mut out = vec![0f32; n * m];
+    // Worker occupancy per timed region: busy_ns over the pool's
+    // wall-clock capacity. The `time` helper runs `warmup + iters`
+    // calls, all of which the busy counter covers.
+    let busy_frac = |mean_ms: f64, calls: usize, threads: usize| {
+        let wall_s = mean_ms / 1e3 * calls as f64;
+        kernels::pool::busy_ns() as f64 * 1e-9 / (wall_s * threads as f64).max(1e-12)
+    };
     for &threads in threads_list {
         kernels::set_threads(threads);
+        let calls = 2 + iters.min(20);
+        kernels::pool::reset_busy_ns();
+        kernels::pool::set_busy_timing(true);
         let r = time(&format!("kernel/dense {threads}T"), 2, iters.min(20), || {
             kernels::matmul_into(&mut out, &x, &w, n, d, m);
         });
+        kernels::pool::set_busy_timing(false);
+        let dense_busy = busy_frac(r.mean_ms, calls, threads);
         let gflops = dense_flops / (r.mean_ms / 1000.0) / 1e9;
         table.push(vec![
             "dense matmul".into(),
             format!("{threads}"),
             format!("{gflops:.2}"),
             format!("{:.3}", r.mean_ms),
+            format!("{:.0}%", 100.0 * dense_busy),
         ]);
         json_rows.push(Json::from_pairs(vec![
             ("kernel", str_("dense_matmul")),
             ("threads", num(threads as f64)),
             ("gflops", num(gflops)),
             ("ms_per_call", num(r.mean_ms)),
+            ("pool_busy_frac", num(dense_busy)),
         ]));
+        kernels::pool::reset_busy_ns();
+        kernels::pool::set_busy_timing(true);
         let r = time(&format!("kernel/moe {threads}T"), 2, iters.min(20), || {
             kernels::moe_matmul_into(&mut out, &x, &experts, d, m, &idx, &gate, k);
         });
+        kernels::pool::set_busy_timing(false);
+        let moe_busy = busy_frac(r.mean_ms, calls, threads);
         let gflops = moe_flops / (r.mean_ms / 1000.0) / 1e9;
         table.push(vec![
             "moe grouped".into(),
             format!("{threads}"),
             format!("{gflops:.2}"),
             format!("{:.3}", r.mean_ms),
+            format!("{:.0}%", 100.0 * moe_busy),
         ]);
         json_rows.push(Json::from_pairs(vec![
             ("kernel", str_("moe_grouped_matmul")),
             ("threads", num(threads as f64)),
             ("gflops", num(gflops)),
             ("ms_per_call", num(r.mean_ms)),
+            ("pool_busy_frac", num(moe_busy)),
         ]));
     }
     table.print();

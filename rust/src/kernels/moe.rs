@@ -98,6 +98,12 @@ pub fn moe_matmul_banks_into(
     for (p, &e) in idx.iter().enumerate() {
         cursor[off[p / (n * k)] + e + 1] += 1;
     }
+    if crate::obs::routing::enabled() {
+        // Union telemetry: distinct experts this fused dispatch touches
+        // (the per-expert counts are free right before the prefix sum).
+        let active = cursor[1..].iter().filter(|&&c| c > 0).count();
+        crate::obs::routing::record_union(active, ne);
+    }
     for e in 0..ne {
         cursor[e + 1] += cursor[e];
     }

@@ -39,8 +39,10 @@
 //!   real cause).
 
 use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// Minimum estimated multiply-accumulates (`rows * work_per_row`)
 /// before [`par_rows`] shards a job; below this, dispatch latency
@@ -54,6 +56,51 @@ pub const MAX_DEFAULT_THREADS: usize = 16;
 /// Chunk oversubscription factor: jobs split into `threads * OVERSUB`
 /// ranges so uneven rows (e.g. ragged MoE buckets) load-balance.
 const OVERSUB: usize = 4;
+
+// ---- worker busy accounting (observability, off by default) ----
+//
+// When enabled ([`set_busy_timing`]), every top-level unit of kernel
+// work — a pool chunk, or an inline `par_rows` body — adds its wall
+// time to a process-global nanosecond counter. Nested inline calls are
+// NOT timed (the enclosing chunk's timer already covers them), so the
+// counter is the summed busy time across all executors and
+// `busy_ns / (wall_ns * threads)` is the pool's busy fraction. Off,
+// the cost is one relaxed load per unit of work; timing never touches
+// arithmetic, so results are bit-identical either way.
+
+static BUSY_TIMING: AtomicBool = AtomicBool::new(false);
+static BUSY_NS: AtomicU64 = AtomicU64::new(0);
+
+/// Turn busy accounting on or off (does not clear the counter).
+pub fn set_busy_timing(on: bool) {
+    BUSY_TIMING.store(on, Ordering::Relaxed);
+}
+
+/// Accumulated kernel busy time in nanoseconds, summed over executors.
+pub fn busy_ns() -> u64 {
+    BUSY_NS.load(Ordering::Relaxed)
+}
+
+/// Clear the busy counter (start of a measured window).
+pub fn reset_busy_ns() {
+    BUSY_NS.store(0, Ordering::Relaxed);
+}
+
+#[inline]
+fn busy_start() -> Option<Instant> {
+    if BUSY_TIMING.load(Ordering::Relaxed) {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+#[inline]
+fn busy_stop(t0: Option<Instant>) {
+    if let Some(t0) = t0 {
+        BUSY_NS.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+}
 
 /// One sharded job: a borrowed range closure with its lifetime erased
 /// to `'static` at submission. Sound because `Pool::run` blocks until
@@ -195,7 +242,9 @@ fn execute_one_chunk<'a>(
     let (lo, hi) = chunk_bounds(chunk, job.chunks, job.rows);
     // The submitter blocks in `Pool::run` until this job's last chunk
     // completes, so the lifetime-erased closure is alive here.
+    let t0 = busy_start();
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (job.task)(lo, hi)));
+    busy_stop(t0);
     let mut slot = shared.slot.lock().unwrap();
     slot.active -= 1;
     if let Err(payload) = result {
@@ -262,9 +311,9 @@ static POOL: RwLock<Option<Arc<Pool>>> = RwLock::new(None);
 /// touching process environment.
 fn parse_pallas_threads(raw: &str) -> std::result::Result<usize, String> {
     match raw.trim().parse::<usize>() {
-        Ok(0) => Err(format!("PALLAS_THREADS={raw:?} is zero (need >= 1)")),
+        Ok(0) => Err("thread count must be >= 1".to_string()),
         Ok(n) => Ok(n.min(256)),
-        Err(_) => Err(format!("PALLAS_THREADS={raw:?} is not a thread count")),
+        Err(_) => Err("not a thread count".to_string()),
     }
 }
 
@@ -278,20 +327,9 @@ fn hardware_default() -> usize {
 }
 
 fn default_threads() -> usize {
-    match std::env::var("PALLAS_THREADS") {
-        Ok(raw) => match parse_pallas_threads(&raw) {
-            Ok(n) => n,
-            Err(why) => {
-                // Invalid values degrade to the hardware default with a
-                // warning instead of panicking or silently ignoring the
-                // operator's intent.
-                let fb = hardware_default();
-                eprintln!("WARN: {why}; falling back to {fb} thread(s)");
-                fb
-            }
-        },
-        Err(_) => hardware_default(),
-    }
+    // Invalid values degrade to the hardware default with a warning
+    // (the shared hardened-env-knob policy), never a panic.
+    crate::util::cli::env_parsed("PALLAS_THREADS", hardware_default(), parse_pallas_threads)
 }
 
 fn current_pool() -> Arc<Pool> {
@@ -327,13 +365,23 @@ pub fn par_rows<F: Fn(usize, usize) + Sync>(rows: usize, work_per_row: usize, f:
     if rows == 0 {
         return;
     }
-    if IN_POOL.with(|c| c.get()) || rows.saturating_mul(work_per_row) < PAR_MIN_WORK {
+    if IN_POOL.with(|c| c.get()) {
+        // Nested call: runs inside a chunk whose busy timer (if any)
+        // already covers this work.
         f(0, rows);
+        return;
+    }
+    if rows.saturating_mul(work_per_row) < PAR_MIN_WORK {
+        let t0 = busy_start();
+        f(0, rows);
+        busy_stop(t0);
         return;
     }
     let pool = current_pool();
     if pool.threads() <= 1 {
+        let t0 = busy_start();
         f(0, rows);
+        busy_stop(t0);
         return;
     }
     let chunks = (pool.threads() * OVERSUB).min(rows);
@@ -431,6 +479,30 @@ mod tests {
             sum.fetch_add(hi - lo, Ordering::Relaxed);
         });
         assert_eq!(sum.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn busy_accounting_counts_only_when_enabled() {
+        fn spin(lo: usize, hi: usize) {
+            let mut acc = 0.0f64;
+            for i in lo * 1000..hi * 1000 {
+                acc += (i as f64).sqrt();
+            }
+            std::hint::black_box(acc);
+        }
+        // Disabled (the default): the counter never moves.
+        reset_busy_ns();
+        par_rows(64, PAR_MIN_WORK, spin);
+        assert_eq!(busy_ns(), 0, "timing off must cost nothing");
+        // Enabled: sharded and inline work both accumulate.
+        set_busy_timing(true);
+        let before = busy_ns();
+        par_rows(64, PAR_MIN_WORK, spin); // pool path
+        par_rows(1, 1, spin); // inline path (sub-threshold)
+        set_busy_timing(false);
+        assert!(busy_ns() > before, "busy work must accumulate when enabled");
+        reset_busy_ns();
+        assert_eq!(busy_ns(), 0);
     }
 
     #[test]

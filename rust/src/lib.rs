@@ -38,8 +38,10 @@
 //! decoding on the same fused path: a tiny draft model proposes k
 //! tokens per session, one width-(k+1) fused verify step checks them
 //! all, and the accept walk keeps emitted streams bit-identical to
-//! non-speculative decoding. `docs/ARCHITECTURE.md` is the end-to-end
-//! tour.
+//! non-speculative decoding. [`obs`] watches all of it —
+//! request-lifecycle traces, online latency histograms and MoE routing
+//! telemetry — without ever changing a stream. `docs/ARCHITECTURE.md`
+//! is the end-to-end tour.
 //!
 //! # Artifact-free test tier
 //!
@@ -70,6 +72,7 @@ pub mod data;
 pub mod kernels;
 pub mod macs;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod spec;

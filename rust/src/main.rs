@@ -9,6 +9,7 @@
 //!   analyze      attention maps, expert usage, induction heads (§4)
 //!   probe        smoke-test an artifact bundle (init + 2 train steps)
 //!   serve        continuous-batching synthetic load (native backend)
+//!   obs-check    validate a serve run's --metrics / --trace outputs
 //!   bench-tables regenerate the paper's tables (see also cargo bench)
 
 use std::path::{Path, PathBuf};
@@ -55,6 +56,7 @@ commands:
                 [--temperature T] [--top-k K] [--seed S] [--init-seed S]
                 [--spec-config <json>] [--spec-k K] [--eos-token T]
                 [--stream] [--faults N[@SEED]] [--audit]
+                [--metrics PATH] [--trace PATH]
                 (native backend only; --slots caps the fused batch width,
                  but admission is also capacity-aware over the paged KV
                  pool: --kv-page sets positions per page, --kv-pages the
@@ -78,7 +80,17 @@ commands:
                  paths — faulted requests retry with backoff or finish
                  as errors, survivors are unaffected; --audit (or the
                  PALLAS_AUDIT env) runs the per-tick invariant auditor,
-                 failing fast on any pool or KV inconsistency)
+                 failing fast on any pool or KV inconsistency.
+                 --metrics PATH (or the PALLAS_METRICS env) streams a
+                 JSONL event log of the request lifecycle; --trace PATH
+                 writes a Chrome trace_event JSON (open in Perfetto or
+                 chrome://tracing) with one lane per request plus the
+                 tick-phase lane — both are off by default and never
+                 change the token streams)
+  obs-check     [--metrics PATH] [--trace PATH]
+                (validate serve observability outputs: the JSONL event
+                 stream parses line-by-line, the trace is well-formed
+                 Chrome trace_event JSON with balanced B/E spans)
   bench-tables  [--table 1|2|3|4|5|6|7|all] [--artifacts DIR] [--quick]
 
 backends: `pjrt` (default) replays `make artifacts` bundles and loads the
@@ -96,6 +108,9 @@ fn load_cfg(args: &Args) -> Result<ModelConfig> {
 }
 
 fn main() -> Result<()> {
+    // Anchor the monotonic trace/metrics clock as early as possible so
+    // every span timestamp shares one epoch.
+    switchhead::util::logging::init_clock();
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else {
         eprint!("{USAGE}");
@@ -112,6 +127,7 @@ fn main() -> Result<()> {
         "generate" => cmd_generate(&args),
         "probe" => cmd_probe(&args),
         "serve" => cmd_serve(&args),
+        "obs-check" => cmd_obs_check(&args),
         "bench-tables" => switchhead::bench::tables::run_from_args(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -436,7 +452,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         drive, drive_trace, synth_requests, synth_trace, Arrivals, FaultPlan, FinishReason,
         LoadSpec, SamplingParams, Scheduler, ServeOpts, TickReport,
     };
-    use switchhead::util::stats::quantile;
+    use switchhead::util::stats::{max_share, normalized_entropy};
 
     let cfg = load_cfg(args)?;
     if cfg.task != Task::Lm {
@@ -460,6 +476,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let tokens = args.usize_or("tokens", 32)?;
     let max_prompt = args.usize_or("prompt-len", (cfg.seq_len / 2).max(1))?;
     opts.audit = opts.audit || args.flag("audit");
+    if let Some(p) = args.get("metrics") {
+        opts.obs.metrics = Some(p.to_string());
+    }
+    if let Some(p) = args.get("trace") {
+        opts.obs.trace = Some(p.to_string());
+    }
     if let Some(spec) = args.get("faults") {
         let (n, seed) = match spec.split_once('@') {
             Some((n, s)) => (n.parse::<usize>()?, s.parse::<u64>()?),
@@ -498,14 +520,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // analogue of watching `generate` print as it samples.
         sched.set_on_tokens(|id, toks| println!("[req {id}] += {toks:?}"));
     }
-    // Inter-token latency samples: a tick's fused-step wall time, once
-    // per token it sampled (what a batched token actually waited).
-    let mut itl = Vec::new();
-    let mut on_tick = |r: &TickReport| {
-        for _ in 0..r.tokens {
-            itl.push(r.decode_seconds * 1e3);
-        }
-    };
+    // Latency percentiles come from the scheduler's always-on online
+    // histograms (ServeHists) — nothing to collect per tick here.
+    let mut on_tick = |_: &TickReport| {};
+    // Routing telemetry + worker busy accounting for the end-of-run
+    // summary. Both are process-global and read-only on the hot path;
+    // reset so the counters cover exactly this run.
+    switchhead::obs::routing::reset();
+    switchhead::obs::routing::set_enabled(true);
+    switchhead::kernels::pool::reset_busy_ns();
+    switchhead::kernels::pool::set_busy_timing(true);
     let t0 = std::time::Instant::now();
     match args.get_or("arrivals", "batch") {
         "batch" => {
@@ -535,6 +559,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         other => bail!("serve: unknown --arrivals '{other}' (batch|poisson|pareto)"),
     }
     let secs = t0.elapsed().as_secs_f64();
+    switchhead::kernels::pool::set_busy_timing(false);
+    switchhead::obs::routing::set_enabled(false);
     let mut outs = sched.drain_finished();
     outs.sort_by_key(|o| o.id);
 
@@ -575,16 +601,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         st.preemptions,
         st.errors,
     ));
-    let ttft: Vec<f64> = outs.iter().filter_map(|o| o.ttft_s.map(|t| t * 1e3)).collect();
+    let h = sched.hists();
     info(&format!(
         "latency: ttft p50/p95/p99 {:.2}/{:.2}/{:.2} ms, inter-token p50/p95/p99 \
-         {:.3}/{:.3}/{:.3} ms (prefill chunk {} caps per-tick prompt work)",
-        quantile(&ttft, 0.50),
-        quantile(&ttft, 0.95),
-        quantile(&ttft, 0.99),
-        quantile(&itl, 0.50),
-        quantile(&itl, 0.95),
-        quantile(&itl, 0.99),
+         {:.3}/{:.3}/{:.3} ms (online histograms, {} + {} samples; \
+         prefill chunk {} caps per-tick prompt work)",
+        h.ttft_s.quantile(0.50) * 1e3,
+        h.ttft_s.quantile(0.95) * 1e3,
+        h.ttft_s.quantile(0.99) * 1e3,
+        h.itl_s.quantile(0.50) * 1e3,
+        h.itl_s.quantile(0.95) * 1e3,
+        h.itl_s.quantile(0.99) * 1e3,
+        h.ttft_s.count(),
+        h.itl_s.count(),
         opts.prefill_chunk,
     ));
     // Pool occupancy: peak pages the paged KV cache actually held vs
@@ -621,6 +650,142 @@ fn cmd_serve(args: &Args) -> Result<()> {
             sched.overhead_macs().scheduler_overhead,
         ));
     }
+    // Routing-balance summary: per-layer selection counts aggregated
+    // over the four MoE projections, hottest experts first. The paper's
+    // sparsity claim only pays at serve time if these stay balanced.
+    let rt = switchhead::obs::routing::snapshot();
+    let n_layers = rt.selections.keys().map(|&(l, _)| l + 1).max().unwrap_or(0);
+    for layer in 0..n_layers {
+        let mut counts: Vec<u64> = Vec::new();
+        for proj in 0..switchhead::obs::routing::PROJ_NAMES.len() {
+            if let Some(c) = rt.selections.get(&(layer, proj)) {
+                if counts.len() < c.len() {
+                    counts.resize(c.len(), 0);
+                }
+                for (acc, &n) in counts.iter_mut().zip(c) {
+                    *acc += n;
+                }
+            }
+        }
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            continue;
+        }
+        let mut ranked: Vec<(usize, u64)> = counts.iter().copied().enumerate().collect();
+        ranked.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        let top: Vec<String> = ranked
+            .iter()
+            .take(3)
+            .map(|&(e, c)| format!("e{e} {:.1}%", 100.0 * c as f64 / total as f64))
+            .collect();
+        info(&format!(
+            "routing layer {layer}: top experts {} (entropy {:.3}, max share {:.2})",
+            top.join(", "),
+            normalized_entropy(&counts),
+            max_share(&counts),
+        ));
+    }
+    if rt.union_calls > 0 {
+        info(&format!(
+            "routing: fused dispatch touched {:.1} experts/call on average \
+             ({:.0}% of available slots, {} calls)",
+            rt.mean_union(),
+            100.0 * rt.mean_union_frac(),
+            rt.union_calls,
+        ));
+    }
+    let threads = switchhead::kernels::pool::threads();
+    let busy_s = switchhead::kernels::pool::busy_ns() as f64 * 1e-9;
+    let capacity_s = secs * threads as f64;
+    info(&format!(
+        "pool: {threads} worker thread(s), {busy_s:.3}s busy of {capacity_s:.3}s capacity \
+         ({:.0}% occupancy)",
+        100.0 * busy_s / capacity_s.max(1e-9),
+    ));
+    Ok(())
+}
+
+/// Validate serve observability outputs: the `--metrics` JSONL stream
+/// must parse line-by-line into objects, and the `--trace` file must be
+/// well-formed Chrome `trace_event` JSON with balanced `B`/`E` spans on
+/// every lane. Exits non-zero on the first malformed record — `make
+/// check` runs this against a serve smoke so a broken emitter cannot
+/// land silently.
+fn cmd_obs_check(args: &Args) -> Result<()> {
+    use std::collections::BTreeMap;
+    use switchhead::util::json::Json;
+
+    let metrics = args.get("metrics");
+    let trace = args.get("trace");
+    if metrics.is_none() && trace.is_none() {
+        bail!("obs-check: need --metrics PATH and/or --trace PATH");
+    }
+
+    if let Some(path) = metrics {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("obs-check: reading metrics {path}"))?;
+        let mut records = 0usize;
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let rec = Json::parse(line)
+                .with_context(|| format!("obs-check: {path} line {}", i + 1))?;
+            rec.as_obj()
+                .with_context(|| format!("obs-check: {path} line {} is not an object", i + 1))?;
+            records += 1;
+        }
+        if records == 0 {
+            bail!("obs-check: {path} holds no records");
+        }
+        info(&format!("metrics OK: {records} JSONL record(s) in {path}"));
+    }
+
+    if let Some(path) = trace {
+        let doc = Json::parse_file(path)?;
+        let events = doc
+            .req("traceEvents")
+            .and_then(Json::as_arr)
+            .with_context(|| format!("obs-check: {path} is not a Chrome trace"))?;
+        // Balance check: on each lane, every E must match an open B and
+        // every B must be closed by the end of the file.
+        let mut depth: BTreeMap<u64, i64> = BTreeMap::new();
+        let mut spans = 0usize;
+        for (i, e) in events.iter().enumerate() {
+            let ph = e.req("ph").and_then(Json::as_str).with_context(|| {
+                format!("obs-check: {path} event {i} lacks a phase")
+            })?;
+            let tid = e.req("tid").and_then(Json::as_f64).with_context(|| {
+                format!("obs-check: {path} event {i} lacks a tid")
+            })? as u64;
+            match ph {
+                "B" => {
+                    *depth.entry(tid).or_default() += 1;
+                    spans += 1;
+                }
+                "E" => {
+                    let d = depth.entry(tid).or_default();
+                    *d -= 1;
+                    if *d < 0 {
+                        bail!("obs-check: {path} event {i}: E with no open B on tid {tid}");
+                    }
+                }
+                _ => {}
+            }
+        }
+        if let Some((tid, d)) = depth.iter().find(|(_, &d)| d != 0) {
+            bail!("obs-check: {path}: {d} unclosed span(s) on tid {tid}");
+        }
+        if spans == 0 {
+            bail!("obs-check: {path} holds no spans");
+        }
+        info(&format!(
+            "trace OK: {} event(s), {spans} balanced span(s) across {} lane(s) in {path}",
+            events.len(),
+            depth.len(),
+        ));
+    }
+    println!("obs-check OK");
     Ok(())
 }
 

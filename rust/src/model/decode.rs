@@ -1001,6 +1001,12 @@ fn switchhead_step(
         idx_d.extend_from_slice(&id);
         gate_d.extend_from_slice(&gd);
     }
+    if crate::obs::routing::enabled() {
+        // Routing telemetry (read-only): source side feeds K and V,
+        // destination side feeds Q and O.
+        crate::obs::routing::record_route(li, &[1, 2], &idx_s, e);
+        crate::obs::routing::record_route(li, &[0, 3], &idx_d, e);
+    }
 
     let mut kh = proj_heads(x_ln, 0, &p.w_k, &idx_s, &gate_s, k, step);
     let mut qh = proj_heads(x_ln, 0, &p.w_q, &idx_d, &gate_d, k, step);
@@ -1108,6 +1114,10 @@ fn moa_step(
     scratch::put(vh);
 
     let (idx, gate, _) = route(x_ln, &p.w_sel, d, e, k, Router::Softmax, false, step);
+    if crate::obs::routing::enabled() {
+        // MoA routes once per token; the selections drive Q and O.
+        crate::obs::routing::record_route(li, &[0, 3], &idx, e);
+    }
     let ones = vec![1.0f32; n];
     let mut y = scratch::take(n * d);
     for j in 0..k {

@@ -1,0 +1,312 @@
+//! Online log-bucketed histogram: O(1) record, fixed memory, mergeable.
+//!
+//! The serving layer needs latency percentiles over unbounded streams
+//! (every tick, every token) without storing samples — the
+//! store-every-sample `Vec<f64>` + sort approach the benches started
+//! with is O(n) memory and unusable inside the scheduler. This
+//! histogram buckets positive values by power-of-two octave: bucket 0
+//! absorbs zero/negative/NaN, buckets `1..=64` cover binary exponents
+//! `-40..=23` (≈ 9e-13 .. 1.7e7, clamped at both ends) — wide enough
+//! for seconds-denominated latencies from nanoseconds to months and
+//! for small integer magnitudes like batch widths.
+//!
+//! A quantile query returns the geometric midpoint of the bucket
+//! holding the q-th sample (nearest rank), clamped into the observed
+//! `[min, max]` — within a factor of √2 of the true order statistic by
+//! construction, exact when all samples share a bucket. Count, sum,
+//! min and max are tracked exactly, so reconciliation contracts
+//! (`hist.count() == ServeStats.finished + errors`) hold precisely
+//! even though quantiles are approximate.
+//!
+//! The bucket index is the IEEE-754 exponent read straight from the
+//! bits — no float log, no search:
+//! `((bits >> 52) & 0x7ff) - 1023`.
+
+/// Lowest binary exponent with its own bucket; smaller positives clamp.
+const MIN_EXP: i32 = -40;
+/// Number of octave buckets (exponents `MIN_EXP ..= MIN_EXP + 63`).
+const N_OCTAVES: usize = 64;
+/// Total buckets: zero/negative catch-all + the octaves.
+pub const HIST_BUCKETS: usize = 1 + N_OCTAVES;
+
+/// Fixed-size online histogram. `Default` is the empty histogram.
+#[derive(Clone, Debug)]
+pub struct Hist {
+    counts: [u64; HIST_BUCKETS],
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist {
+            counts: [0; HIST_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Bucket index for a value: 0 for zero/negative/NaN, else the
+    /// clamped IEEE-754 exponent offset into the octave range.
+    fn bucket_of(v: f64) -> usize {
+        if !(v > 0.0) {
+            return 0;
+        }
+        // Biased exponent from the bits; subnormals read as -1023 and
+        // clamp into the bottom octave like every other tiny value.
+        let e = ((v.to_bits() >> 52) & 0x7ff) as i32 - 1023;
+        let e = e.clamp(MIN_EXP, MIN_EXP + N_OCTAVES as i32 - 1);
+        (e - MIN_EXP) as usize + 1
+    }
+
+    /// Record one sample. O(1), no allocation.
+    pub fn record(&mut self, v: f64) {
+        self.record_n(v, 1);
+    }
+
+    /// Record `n` samples of the same value in O(1) — the scheduler
+    /// uses this to attribute one tick's decode time to every token it
+    /// produced without a per-token loop.
+    pub fn record_n(&mut self, v: f64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.counts[Self::bucket_of(v)] += n;
+        self.count += n;
+        self.sum += v * n as f64;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    /// Merge another histogram into this one (bucket-wise addition;
+    /// exact fields combine exactly).
+    pub fn merge(&mut self, other: &Hist) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Nearest-rank q-quantile estimate (q in [0, 1]): the geometric
+    /// midpoint of the bucket containing the ⌈q·count⌉-th smallest
+    /// sample, clamped into the observed [min, max]. 0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                if b == 0 {
+                    return 0.0_f64.max(self.min).min(self.max);
+                }
+                let e = MIN_EXP + (b - 1) as i32;
+                // Geometric midpoint of [2^e, 2^(e+1)): 2^(e + 0.5).
+                let mid = (2.0_f64).powi(e) * std::f64::consts::SQRT_2;
+                return mid.max(self.min).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Raw bucket counts (index 0 = zero/negative catch-all), for
+    /// serialization and tests.
+    pub fn buckets(&self) -> &[u64; HIST_BUCKETS] {
+        &self.counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_hist_is_all_zero() {
+        let h = Hist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn bucketing_by_octave() {
+        // Values in [2^e, 2^(e+1)) share a bucket; octave boundaries split.
+        let mut h = Hist::new();
+        h.record(1.0); // exponent 0
+        h.record(1.5); // exponent 0
+        h.record(2.0); // exponent 1
+        let nonzero: Vec<_> =
+            h.buckets().iter().enumerate().filter(|(_, &c)| c > 0).collect();
+        assert_eq!(nonzero.len(), 2);
+        assert_eq!(*nonzero[0].1, 2);
+        assert_eq!(*nonzero[1].1, 1);
+        assert_eq!(nonzero[1].0, nonzero[0].0 + 1, "adjacent octaves");
+    }
+
+    #[test]
+    fn zero_negative_nan_land_in_bucket_zero() {
+        let mut h = Hist::new();
+        h.record(0.0);
+        h.record(-3.5);
+        h.record(f64::NAN);
+        assert_eq!(h.buckets()[0], 3);
+        assert_eq!(h.count(), 3);
+    }
+
+    #[test]
+    fn extremes_clamp_instead_of_overflowing() {
+        let mut h = Hist::new();
+        h.record(1e-300); // far below 2^-40
+        h.record(1e300); // far above 2^23
+        h.record(f64::MIN_POSITIVE / 2.0); // subnormal
+        assert_eq!(h.buckets()[1], 2, "tiny values clamp to the bottom octave");
+        assert_eq!(h.buckets()[HIST_BUCKETS - 1], 1, "huge values clamp to the top octave");
+    }
+
+    #[test]
+    fn quantile_within_sqrt2_of_oracle() {
+        // Pseudo-random positive samples vs a sorted-sample oracle.
+        let mut h = Hist::new();
+        let mut samples = Vec::new();
+        let mut x = 0x2545f4914f6cdd1du64;
+        for _ in 0..5000 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            // Spread over ~6 decades.
+            let v = 1e-6 * (1.0 + (x % 1_000_000) as f64);
+            samples.push(v);
+            h.record(v);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.0, 0.1, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            let rank = ((q * samples.len() as f64).ceil() as usize).clamp(1, samples.len());
+            let oracle = samples[rank - 1];
+            let est = h.quantile(q);
+            let ratio = est / oracle;
+            assert!(
+                ratio > std::f64::consts::FRAC_1_SQRT_2 / 1.0001
+                    && ratio < std::f64::consts::SQRT_2 * 1.0001,
+                "q={q}: estimate {est} vs oracle {oracle} (ratio {ratio})"
+            );
+        }
+    }
+
+    #[test]
+    fn quantile_exact_for_single_bucket() {
+        let mut h = Hist::new();
+        for _ in 0..10 {
+            h.record(3.0);
+        }
+        // All samples share min == max == 3.0; the clamp makes it exact.
+        assert_eq!(h.quantile(0.5), 3.0);
+        assert_eq!(h.quantile(0.99), 3.0);
+    }
+
+    #[test]
+    fn record_n_equals_n_records() {
+        let mut a = Hist::new();
+        let mut b = Hist::new();
+        a.record_n(0.25, 7);
+        for _ in 0..7 {
+            b.record(0.25);
+        }
+        assert_eq!(a.buckets(), b.buckets());
+        assert_eq!(a.count(), b.count());
+        assert!((a.sum() - b.sum()).abs() < 1e-12);
+        a.record_n(9.0, 0);
+        assert_eq!(a.count(), 7, "n=0 records nothing");
+    }
+
+    #[test]
+    fn merge_equals_combined_stream() {
+        let vals_a = [0.001, 0.5, 3.0, 700.0];
+        let vals_b = [0.002, 0.5, 42.0];
+        let mut a = Hist::new();
+        let mut b = Hist::new();
+        let mut both = Hist::new();
+        for &v in &vals_a {
+            a.record(v);
+            both.record(v);
+        }
+        for &v in &vals_b {
+            b.record(v);
+            both.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.buckets(), both.buckets());
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.min(), both.min());
+        assert_eq!(a.max(), both.max());
+        assert!((a.sum() - both.sum()).abs() < 1e-12);
+        for q in [0.25, 0.5, 0.75, 1.0] {
+            assert_eq!(a.quantile(q), both.quantile(q));
+        }
+    }
+
+    #[test]
+    fn exact_fields_are_exact() {
+        let mut h = Hist::new();
+        for v in [0.1, 0.2, 0.3, 0.4] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 1.0).abs() < 1e-12);
+        assert!((h.mean() - 0.25).abs() < 1e-12);
+        assert_eq!(h.min(), 0.1);
+        assert_eq!(h.max(), 0.4);
+    }
+}

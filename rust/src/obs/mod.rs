@@ -1,0 +1,307 @@
+//! Serve-stack observability: request-lifecycle tracing, online
+//! latency histograms, and MoE routing telemetry.
+//!
+//! Three pillars, one contract:
+//!
+//! * [`hist`] — fixed-size log-bucketed histograms (O(1) record,
+//!   mergeable) the scheduler keeps always-on for TTFT, inter-token
+//!   latency, tick duration, fused batch width and speculative
+//!   acceptance; counters are exact, quantiles within √2.
+//! * [`trace`] — request-lifecycle + tick-phase spans, emitted as a
+//!   JSONL event stream (via [`crate::util::logging::MetricsLog`])
+//!   and/or a Chrome `trace_event` JSON loadable in Perfetto.
+//! * [`routing`] — per-layer per-projection expert-selection counters
+//!   and fused-dispatch union sizes from the MoE routing path, plus
+//!   worker busy accounting in [`crate::kernels::pool`].
+//!
+//! **The contract: observability never changes behavior.** Emission is
+//! off by default ([`ObsOpts`] all-`None`), touches no RNG and no
+//! arithmetic, and only ever *reads* scheduler state — token streams
+//! are bit-identical with sinks on or off (pinned in
+//! `rust/tests/obs.rs`), and the serve bench measures and reports the
+//! sink's tick-time overhead. File writes are best-effort: a full disk
+//! degrades observability, never a request.
+
+pub mod hist;
+pub mod routing;
+pub mod trace;
+
+pub use hist::Hist;
+pub use trace::TraceBuf;
+
+use std::path::Path;
+
+use crate::util::cli::env_parsed;
+use crate::util::error::Result;
+use crate::util::json::Json;
+use crate::util::logging::MetricsLog;
+
+/// Where (if anywhere) the scheduler's [`ObsSink`] emits. Both sinks
+/// default to off; `PALLAS_METRICS=<path>` turns the JSONL sink on
+/// from the environment (CLI `--metrics` / `--trace` override).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ObsOpts {
+    /// JSONL event-stream path (`MetricsLog`), streamed as it happens.
+    pub metrics: Option<String>,
+    /// Chrome `trace_event` JSON path, buffered and written at finish.
+    pub trace: Option<String>,
+}
+
+/// Pure parser for the `PALLAS_METRICS` value: a non-empty path turns
+/// the JSONL sink on; empty/whitespace is rejected (the hardened env
+/// helper then warns and keeps the default).
+pub fn parse_metrics_path(s: &str) -> std::result::Result<Option<String>, String> {
+    let t = s.trim();
+    if t.is_empty() {
+        Err("empty path".to_string())
+    } else {
+        Ok(Some(t.to_string()))
+    }
+}
+
+impl ObsOpts {
+    /// Environment default: `PALLAS_METRICS=<path>` enables the JSONL
+    /// sink (hardened — garbage warns and stays off); the trace sink
+    /// has no env knob (it buffers in memory, so it is opt-in per run).
+    pub fn from_env() -> ObsOpts {
+        ObsOpts { metrics: env_parsed("PALLAS_METRICS", None, parse_metrics_path), trace: None }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.metrics.is_some() || self.trace.is_some()
+    }
+}
+
+/// Tick-phase lane in the trace (request lanes are `id + 1`).
+const TICK_LANE: u64 = 0;
+
+/// The scheduler-owned emission sink: an optional JSONL event stream
+/// plus an optional Chrome-trace buffer behind one no-op-when-off
+/// facade. Every method is a cheap early-return when both sinks are
+/// off, so the scheduler calls them unconditionally.
+pub struct ObsSink {
+    metrics: Option<MetricsLog>,
+    trace: Option<TraceBuf>,
+}
+
+impl ObsSink {
+    /// The always-off sink (default scheduler construction).
+    pub fn disabled() -> ObsSink {
+        ObsSink { metrics: None, trace: None }
+    }
+
+    /// Open the sinks named by `opts`. Only file *creation* can fail;
+    /// later writes are best-effort.
+    pub fn open(opts: &ObsOpts) -> Result<ObsSink> {
+        let metrics = match &opts.metrics {
+            Some(p) => Some(MetricsLog::create(Path::new(p))?),
+            None => None,
+        };
+        let trace = opts.trace.as_ref().map(|p| {
+            let mut tb = TraceBuf::new(Path::new(p));
+            tb.name_lane(TICK_LANE, "scheduler ticks");
+            tb
+        });
+        Ok(ObsSink { metrics, trace })
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.metrics.is_some() || self.trace.is_some()
+    }
+
+    /// Emit one JSONL event record (`{"event": kind, ...}`).
+    /// Best-effort: write errors degrade observability, not serving.
+    pub fn event(&self, kind: &str, pairs: Vec<(&str, Json)>) {
+        let Some(m) = &self.metrics else {
+            return;
+        };
+        let mut rec = Json::from_pairs(pairs);
+        rec.set("event", Json::Str(kind.to_string()));
+        let _ = m.log(rec);
+    }
+
+    /// Begin a tick-phase span (trace lane 0).
+    pub fn phase_begin(&mut self, name: &str) {
+        if let Some(t) = &mut self.trace {
+            t.begin(TICK_LANE, name);
+        }
+    }
+
+    /// End the innermost open tick-phase span.
+    pub fn phase_end(&mut self) {
+        if let Some(t) = &mut self.trace {
+            t.end(TICK_LANE);
+        }
+    }
+
+    /// Label a request's trace lane (called once at submit).
+    pub fn req_lane(&mut self, id: u64, label: &str) {
+        if let Some(t) = &mut self.trace {
+            t.name_lane(id + 1, label);
+        }
+    }
+
+    /// Begin a span on a request's lane (`request`, `queued`,
+    /// `prefill`, `decode`).
+    pub fn req_begin(&mut self, id: u64, name: &str) {
+        if let Some(t) = &mut self.trace {
+            t.begin(id + 1, name);
+        }
+    }
+
+    /// End the innermost open span on a request's lane.
+    pub fn req_end(&mut self, id: u64) {
+        if let Some(t) = &mut self.trace {
+            t.end(id + 1);
+        }
+    }
+
+    /// Zero-duration marker on a request's lane (e.g. `first_token`).
+    pub fn req_instant(&mut self, id: u64, name: &str, args: Vec<(&str, Json)>) {
+        if let Some(t) = &mut self.trace {
+            t.instant(id + 1, name, args);
+        }
+    }
+
+    // --- request-lifecycle vocabulary -------------------------------
+    //
+    // The scheduler speaks these composite verbs instead of raw spans
+    // so every lane follows one grammar: `request` wraps the whole
+    // life, and exactly one state span (`queued` → `prefill` →
+    // `decode`, looping back to `queued` on preemption/retry) is open
+    // inside it at any time. Retire closes the state span and then
+    // `request` — two `req_end`s always balance.
+
+    /// A request entered the queue: open its lane with `request` +
+    /// `queued` and emit the submit event.
+    pub fn req_submit(&mut self, id: u64, prompt_len: usize, max_new: usize, priority: u8) {
+        if !self.enabled() {
+            return;
+        }
+        self.event(
+            "submit",
+            vec![
+                ("id", Json::Num(id as f64)),
+                ("prompt_len", Json::Num(prompt_len as f64)),
+                ("max_new_tokens", Json::Num(max_new as f64)),
+                ("priority", Json::Num(priority as f64)),
+            ],
+        );
+        self.req_lane(id, &format!("req {id}"));
+        self.req_begin(id, "request");
+        self.req_begin(id, "queued");
+    }
+
+    /// A request won a slot: swap `queued` for `prefill` and emit the
+    /// admit event (`resumed` marks a preempted request's re-entry).
+    pub fn req_admit(&mut self, id: u64, slot: usize, resumed: bool) {
+        if !self.enabled() {
+            return;
+        }
+        self.event(
+            "admit",
+            vec![
+                ("id", Json::Num(id as f64)),
+                ("slot", Json::Num(slot as f64)),
+                ("resumed", Json::Bool(resumed)),
+            ],
+        );
+        self.req_end(id);
+        self.req_begin(id, "prefill");
+    }
+
+    /// A prefilling row sampled from its exhausted feed and became a
+    /// decode row: swap `prefill` for `decode`.
+    pub fn req_decode_start(&mut self, id: u64) {
+        if let Some(t) = &mut self.trace {
+            t.end(id + 1);
+            t.begin(id + 1, "decode");
+        }
+    }
+
+    /// First-token marker (fires once per request life, at the tick
+    /// its first token was sampled).
+    pub fn req_first_token(&mut self, id: u64, ttft_s: f64) {
+        if !self.enabled() {
+            return;
+        }
+        self.event(
+            "first_token",
+            vec![("id", Json::Num(id as f64)), ("ttft_s", Json::Num(ttft_s))],
+        );
+        self.req_instant(id, "first_token", vec![("ttft_s", Json::Num(ttft_s))]);
+    }
+
+    /// A request went back to the queue mid-life (`kind` is `preempt`
+    /// or `retry`): swap its current state span for `queued`.
+    pub fn req_requeue(&mut self, id: u64, kind: &str, not_before: u64) {
+        if !self.enabled() {
+            return;
+        }
+        self.event(
+            kind,
+            vec![("id", Json::Num(id as f64)), ("not_before", Json::Num(not_before as f64))],
+        );
+        self.req_end(id);
+        self.req_begin(id, "queued");
+    }
+
+    /// Terminal event: emit `retire` and close the request's state
+    /// span and its `request` span.
+    pub fn req_retire(&mut self, id: u64, reason: &str, tokens: usize, ttft_s: Option<f64>) {
+        if !self.enabled() {
+            return;
+        }
+        let mut pairs = vec![
+            ("id", Json::Num(id as f64)),
+            ("reason", Json::Str(reason.to_string())),
+            ("tokens", Json::Num(tokens as f64)),
+        ];
+        if let Some(t) = ttft_s {
+            pairs.push(("ttft_s", Json::Num(t)));
+        }
+        self.event("retire", pairs);
+        self.req_end(id);
+        self.req_end(id);
+    }
+
+    /// Close open spans and write the trace file. Idempotent; the
+    /// JSONL stream needs no finish (it streams).
+    pub fn finish(&mut self) -> Result<()> {
+        if let Some(t) = &mut self.trace {
+            t.finish()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_sink_is_inert() {
+        let mut s = ObsSink::disabled();
+        assert!(!s.enabled());
+        s.event("submit", vec![("id", Json::Num(1.0))]);
+        s.phase_begin("step");
+        s.phase_end();
+        s.req_begin(3, "request");
+        s.req_end(3);
+        s.finish().unwrap();
+    }
+
+    #[test]
+    fn metrics_path_parser_hardened() {
+        assert_eq!(parse_metrics_path("/tmp/m.jsonl"), Ok(Some("/tmp/m.jsonl".to_string())));
+        assert_eq!(parse_metrics_path(" x "), Ok(Some("x".to_string())));
+        assert!(parse_metrics_path("").is_err());
+        assert!(parse_metrics_path("   ").is_err());
+    }
+
+    #[test]
+    fn obs_opts_default_off() {
+        assert!(!ObsOpts::default().enabled());
+        assert!(ObsOpts { metrics: Some("m".into()), trace: None }.enabled());
+    }
+}

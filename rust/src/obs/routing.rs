@@ -1,0 +1,175 @@
+//! MoE routing telemetry: per-layer per-projection expert-selection
+//! counters plus fused-dispatch union sizes, collected from the
+//! routing path in `model::decode` and `kernels::moe`.
+//!
+//! The paper's compute/memory headline is a claim about routing
+//! sparsity — it only pays off at serve time if expert selections stay
+//! balanced and the fused union dispatch stays small. This module
+//! makes both observable on a live run.
+//!
+//! Collection is **process-global and off by default**: the hot path
+//! pays exactly one relaxed atomic load per routed layer step when
+//! disabled, and recording never touches routing decisions, RNG or
+//! arithmetic — streams are bit-identical either way. Enable with
+//! [`set_enabled`], read with [`snapshot`], clear with [`reset`].
+//! Tests that enable collection must serialize on
+//! [`test_guard`] — the collector is shared across the whole process
+//! and `cargo test` runs tests concurrently.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+/// Projection-slot names, indexed by the `proj` argument of
+/// [`record_route`]: destination-side Q/O, source-side K/V.
+pub const PROJ_NAMES: [&str; 4] = ["q", "k", "v", "o"];
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static STATS: Mutex<RoutingStats> = Mutex::new(RoutingStats::new());
+static TEST_GUARD: Mutex<()> = Mutex::new(());
+
+/// Accumulated routing counters. Cloned out by [`snapshot`].
+#[derive(Clone, Debug)]
+pub struct RoutingStats {
+    /// `(layer, proj)` → per-expert selection counts (summed over
+    /// heads, tokens and ticks). `proj` indexes [`PROJ_NAMES`].
+    pub selections: BTreeMap<(usize, usize), Vec<u64>>,
+    /// Fused-dispatch union accounting: calls, summed active experts,
+    /// summed available expert slots (= heads × experts per call).
+    pub union_calls: u64,
+    pub union_active: u64,
+    pub union_slots: u64,
+}
+
+impl RoutingStats {
+    pub const fn new() -> RoutingStats {
+        RoutingStats {
+            selections: BTreeMap::new(),
+            union_calls: 0,
+            union_active: 0,
+            union_slots: 0,
+        }
+    }
+
+    /// Total selections recorded for one `(layer, proj)` counter.
+    pub fn total(&self, layer: usize, proj: usize) -> u64 {
+        self.selections.get(&(layer, proj)).map_or(0, |c| c.iter().sum())
+    }
+
+    /// Mean number of distinct experts touched per fused dispatch.
+    pub fn mean_union(&self) -> f64 {
+        if self.union_calls == 0 {
+            0.0
+        } else {
+            self.union_active as f64 / self.union_calls as f64
+        }
+    }
+
+    /// Mean fraction of available expert slots a fused dispatch
+    /// actually touches (the paper's sparsity, observed).
+    pub fn mean_union_frac(&self) -> f64 {
+        if self.union_slots == 0 {
+            0.0
+        } else {
+            self.union_active as f64 / self.union_slots as f64
+        }
+    }
+}
+
+impl Default for RoutingStats {
+    fn default() -> RoutingStats {
+        RoutingStats::new()
+    }
+}
+
+/// Is collection on? One relaxed load — the hot path's entire cost
+/// when observability is off.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn collection on or off (does not clear counters).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Clear all counters.
+pub fn reset() {
+    *STATS.lock().unwrap() = RoutingStats::new();
+}
+
+/// Clone the current counters out.
+pub fn snapshot() -> RoutingStats {
+    STATS.lock().unwrap().clone()
+}
+
+/// Serialize tests that enable the global collector. A poisoned guard
+/// (a prior test panicked) is recovered — the collector itself is
+/// reset by each test.
+pub fn test_guard() -> MutexGuard<'static, ()> {
+    TEST_GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Record one layer step's routing decisions for the projections in
+/// `projs` (indices into [`PROJ_NAMES`]): `idx` holds in-bank expert
+/// ids, `[heads, tokens, k]` flattened, each entry one selection.
+/// Call only when [`enabled`] — the caller owns the gate so the
+/// disabled path never builds arguments.
+pub fn record_route(layer: usize, projs: &[usize], idx: &[usize], n_experts: usize) {
+    let mut st = STATS.lock().unwrap();
+    for &p in projs {
+        let counts =
+            st.selections.entry((layer, p)).or_insert_with(|| vec![0u64; n_experts]);
+        if counts.len() < n_experts {
+            counts.resize(n_experts, 0);
+        }
+        for &e in idx {
+            counts[e] += 1;
+        }
+    }
+}
+
+/// Record one fused MoE dispatch's union size: `active` distinct
+/// experts touched out of `slots` available (heads × experts). Call
+/// only when [`enabled`].
+pub fn record_union(active: usize, slots: usize) {
+    let mut st = STATS.lock().unwrap();
+    st.union_calls += 1;
+    st.union_active += active as u64;
+    st.union_slots += slots as u64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_by_default_and_counters_accumulate() {
+        let _g = test_guard();
+        assert!(!enabled());
+        set_enabled(true);
+        reset();
+        // 2 heads × 3 tokens × k=2 selections for layer 0, sides s and d.
+        let idx_s = [0usize, 1, 0, 2, 1, 1, 0, 0, 2, 1, 0, 1];
+        let idx_d = [2usize, 2, 1, 0, 0, 1, 2, 2, 1, 1, 0, 0];
+        record_route(0, &[1, 2], &idx_s, 3);
+        record_route(0, &[0, 3], &idx_d, 3);
+        record_union(4, 6);
+        record_union(2, 6);
+        set_enabled(false);
+
+        let s = snapshot();
+        for proj in 0..4 {
+            assert_eq!(s.total(0, proj), 12, "proj {} total", PROJ_NAMES[proj]);
+        }
+        // K and V share the source-side counts; Q and O the dest-side.
+        assert_eq!(s.selections[&(0, 1)], s.selections[&(0, 2)]);
+        assert_eq!(s.selections[&(0, 0)], s.selections[&(0, 3)]);
+        assert_eq!(s.selections[&(0, 1)], vec![5, 5, 2]);
+        assert!((s.mean_union() - 3.0).abs() < 1e-12);
+        assert!((s.mean_union_frac() - 0.5).abs() < 1e-12);
+        reset();
+        assert_eq!(snapshot().total(0, 0), 0);
+    }
+}

@@ -1,0 +1,216 @@
+//! Chrome `trace_event` emitter: buffered duration spans written as a
+//! single JSON file loadable in Perfetto (`ui.perfetto.dev`) or
+//! `chrome://tracing`.
+//!
+//! The serving layer emits two kinds of timelines into one process
+//! (`pid` 1):
+//!
+//! * **tid 0** — scheduler tick phases (`evict`, `admit`, `draft`,
+//!   `step`, `accept`, `audit`) as nested `B`/`E` duration spans;
+//! * **tid `request_id + 1`** — one lane per request: an outer
+//!   `request` span from submit to final output, with sequential
+//!   `queued` / `prefill` / `decode` state sub-spans (a preempted
+//!   request re-enters `queued`, so its lane shows the full lifecycle
+//!   including resume).
+//!
+//! Timestamps are monotonic microseconds from the process anchor
+//! ([`crate::util::logging::monotonic_us`]) — they can never go
+//! backwards. Spans are balanced by construction: `end` pops the
+//! per-lane stack of open spans, and [`TraceBuf::finish`] closes any
+//! spans still open (in reverse nesting order) before writing the
+//! file, so a trace cut short by an error still loads.
+//!
+//! Buffering is deliberate: a trace run holds its events in memory and
+//! pays one write at the end, keeping per-span overhead to a Vec push
+//! (no I/O, no syscalls inside the tick).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::error::Result;
+use crate::util::json::Json;
+use crate::util::logging::monotonic_us;
+
+/// One buffered trace event (`ph` is the Chrome phase letter).
+struct Event {
+    ph: char,
+    tid: u64,
+    ts_us: u64,
+    name: String,
+    args: Vec<(String, Json)>,
+}
+
+/// Buffered Chrome-trace writer. Created with a target path; events
+/// accumulate in memory until [`finish`](TraceBuf::finish).
+pub struct TraceBuf {
+    path: std::path::PathBuf,
+    events: Vec<Event>,
+    /// Per-tid stack of open `B` span names (for balance + auto-close).
+    open: BTreeMap<u64, Vec<String>>,
+    finished: bool,
+}
+
+impl TraceBuf {
+    pub fn new(path: &Path) -> TraceBuf {
+        TraceBuf {
+            path: path.to_path_buf(),
+            events: Vec::new(),
+            open: BTreeMap::new(),
+            finished: false,
+        }
+    }
+
+    /// Begin a duration span on lane `tid`.
+    pub fn begin(&mut self, tid: u64, name: &str) {
+        self.open.entry(tid).or_default().push(name.to_string());
+        self.events.push(Event {
+            ph: 'B',
+            tid,
+            ts_us: monotonic_us(),
+            name: name.to_string(),
+            args: Vec::new(),
+        });
+    }
+
+    /// End the innermost open span on lane `tid`. A stray end with no
+    /// open span is dropped (never unbalances the trace).
+    pub fn end(&mut self, tid: u64) {
+        let Some(name) = self.open.get_mut(&tid).and_then(Vec::pop) else {
+            return;
+        };
+        self.events.push(Event { ph: 'E', tid, ts_us: monotonic_us(), name, args: Vec::new() });
+    }
+
+    /// Emit an instant event (a zero-duration marker on lane `tid`).
+    pub fn instant(&mut self, tid: u64, name: &str, args: Vec<(&str, Json)>) {
+        self.events.push(Event {
+            ph: 'i',
+            tid,
+            ts_us: monotonic_us(),
+            name: name.to_string(),
+            args: args.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+        });
+    }
+
+    /// Name lane `tid` in the viewer (a `thread_name` metadata event).
+    pub fn name_lane(&mut self, tid: u64, name: &str) {
+        self.events.push(Event {
+            ph: 'M',
+            tid,
+            ts_us: 0,
+            name: "thread_name".to_string(),
+            args: vec![("name".to_string(), Json::Str(name.to_string()))],
+        });
+    }
+
+    /// Number of buffered events (tests and overhead accounting).
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Close any still-open spans and write the trace file. Idempotent:
+    /// the second call is a no-op.
+    pub fn finish(&mut self) -> Result<()> {
+        if self.finished {
+            return Ok(());
+        }
+        self.finished = true;
+        // Auto-close in reverse nesting order per lane.
+        let tids: Vec<u64> = self.open.keys().copied().collect();
+        for tid in tids {
+            while self.open.get(&tid).is_some_and(|s| !s.is_empty()) {
+                self.end(tid);
+            }
+        }
+        let json = self.to_json();
+        if let Some(dir) = self.path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(&self.path, json.to_string())?;
+        Ok(())
+    }
+
+    /// The full `{"traceEvents": [...]}` document (also used by tests
+    /// without touching the filesystem).
+    fn to_json(&self) -> Json {
+        let events: Vec<Json> = self.events.iter().map(event_json).collect();
+        Json::from_pairs(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::Str("ms".to_string())),
+        ])
+    }
+}
+
+fn event_json(e: &Event) -> Json {
+    let mut pairs = vec![
+        ("ph", Json::Str(e.ph.to_string())),
+        ("pid", Json::Num(1.0)),
+        ("tid", Json::Num(e.tid as f64)),
+        ("ts", Json::Num(e.ts_us as f64)),
+        ("name", Json::Str(e.name.clone())),
+    ];
+    if e.ph == 'i' {
+        // Instant events need a scope; "t" = thread.
+        pairs.push(("s", Json::Str("t".to_string())));
+    }
+    if !e.args.is_empty() {
+        let args = Json::Obj(e.args.iter().map(|(k, v)| (k.clone(), v.clone())).collect());
+        pairs.push(("args", args));
+    }
+    Json::from_pairs(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_balance_and_auto_close() {
+        let dir = std::env::temp_dir().join("switchhead-tracetest");
+        let path = dir.join("t.json");
+        let _ = std::fs::remove_file(&path);
+        let mut tb = TraceBuf::new(&path);
+        tb.name_lane(0, "ticks");
+        tb.begin(0, "tick");
+        tb.begin(0, "step");
+        tb.end(0);
+        tb.begin(7, "request"); // left open: finish must close it
+        tb.end(3); // stray end on an empty lane: dropped
+        tb.instant(7, "first_token", vec![("id", Json::Num(6.0))]);
+        tb.finish().unwrap();
+        tb.finish().unwrap(); // idempotent
+
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // Per-tid begin/end balance.
+        let mut depth: BTreeMap<u64, i64> = BTreeMap::new();
+        for e in evs {
+            let tid = e.get("tid").unwrap().as_f64().unwrap() as u64;
+            match e.get("ph").unwrap().as_str().unwrap() {
+                "B" => *depth.entry(tid).or_default() += 1,
+                "E" => {
+                    let d = depth.entry(tid).or_default();
+                    *d -= 1;
+                    assert!(*d >= 0, "E before B on tid {tid}");
+                }
+                _ => {}
+            }
+        }
+        assert!(depth.values().all(|&d| d == 0), "unbalanced spans: {depth:?}");
+        // Monotonic timestamps per lane (B/E/i only; metadata is ts 0).
+        let mut last: BTreeMap<u64, f64> = BTreeMap::new();
+        for e in evs {
+            if e.get("ph").unwrap().as_str().unwrap() == "M" {
+                continue;
+            }
+            let tid = e.get("tid").unwrap().as_f64().unwrap() as u64;
+            let ts = e.get("ts").unwrap().as_f64().unwrap();
+            assert!(ts >= *last.get(&tid).unwrap_or(&0.0), "ts went backwards");
+            last.insert(tid, ts);
+        }
+    }
+}

@@ -198,6 +198,7 @@ pub fn drive<F: FnMut(&TickReport)>(
         let report = sched.tick()?;
         on_tick(&report);
     }
+    sched.obs_finish()?;
     Ok(())
 }
 
@@ -223,5 +224,6 @@ pub fn drive_trace<F: FnMut(&TickReport)>(
         on_tick(&report);
         now += 1;
     }
+    sched.obs_finish()?;
     Ok(())
 }

@@ -74,6 +74,14 @@
 //! never panics, surviving streams are bit-identical to a no-fault
 //! run, and `faults_injected == errors + retries_recovered`.
 //!
+//! The scheduler is also self-observing ([`crate::obs`]): always-on
+//! O(1) histograms ([`ServeHists`] — TTFT, inter-token latency, tick
+//! time, batch width, speculative acceptance) whose counts reconcile
+//! exactly with [`ServeStats`], plus opt-in emission
+//! ([`ServeOpts::obs`]) of a JSONL event stream and a Chrome
+//! `trace_event` JSON (request lanes + tick-phase lanes, loadable in
+//! Perfetto) — none of which ever changes a token stream.
+//!
 //! Drive it via the `serve` CLI subcommand or
 //! `benches/serve_throughput.rs` (aggregate tok/s plus p50/p95/p99
 //! time-to-first-token and inter-token latency vs a serial per-session
@@ -96,7 +104,7 @@ pub use request::{
     SamplingParams,
 };
 pub use scheduler::{
-    Scheduler, ServeOpts, ServeStats, TickReport, DEFAULT_PREFILL_CHUNK, DEFAULT_RETRY_BUDGET,
-    DEFAULT_SPEC_K, SAMPLE_STREAM, SPEC_REENABLE_TICKS, SPEC_TRIP_ACCEPT_FLOOR,
-    SPEC_TRIP_MIN_DRAFTED, SPEC_TRIP_WINDOW,
+    Scheduler, ServeHists, ServeOpts, ServeStats, TickReport, DEFAULT_PREFILL_CHUNK,
+    DEFAULT_RETRY_BUDGET, DEFAULT_SPEC_K, SAMPLE_STREAM, SPEC_REENABLE_TICKS,
+    SPEC_TRIP_ACCEPT_FLOOR, SPEC_TRIP_MIN_DRAFTED, SPEC_TRIP_WINDOW,
 };

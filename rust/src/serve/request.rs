@@ -113,6 +113,19 @@ pub enum FinishReason {
     Error,
 }
 
+impl FinishReason {
+    /// Stable lowercase label (`length` / `eos` / `cancelled` /
+    /// `error`) used by the JSONL event stream and the CLI summaries.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Eos => "eos",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::Error => "error",
+        }
+    }
+}
+
 /// A finished request: identity, prompt length, every generated token,
 /// why it stopped, and its latency/SLO telemetry.
 #[derive(Debug, Clone)]

@@ -141,6 +141,7 @@ use crate::coordinator::generate::sample_logits;
 use crate::model::decode::step_batched_full;
 use crate::model::kv_cache::stream_pages_spec;
 use crate::model::{KvPool, MacCounter, NativeEngine, NativeSession, PoolStats};
+use crate::obs::{Hist, ObsOpts, ObsSink};
 use crate::runtime::api::{Logits, Session};
 use crate::serve::faults::{FaultPlan, FaultSite};
 use crate::serve::request::{
@@ -149,6 +150,7 @@ use crate::serve::request::{
 };
 use crate::spec::{accept_tokens, DraftEngine, DraftSession};
 use crate::util::error::{bail, Error, Result};
+use crate::util::json::Json;
 use crate::util::rng::Pcg;
 
 /// PRNG stream tag for per-request sampling (sequential oracles in the
@@ -237,6 +239,12 @@ pub struct ServeOpts {
     /// Deterministic fault-injection plan (`None` = no injected
     /// faults). See [`FaultPlan`].
     pub faults: Option<FaultPlan>,
+    /// Observability sinks (JSONL event stream / Chrome trace JSON) —
+    /// see [`crate::obs`]. Off by default; the default honors
+    /// `PALLAS_METRICS=<path>` for the JSONL sink. Emission never
+    /// changes behavior: token streams are bit-identical with sinks on
+    /// or off (pinned by `rust/tests/obs.rs`).
+    pub obs: ObsOpts,
 }
 
 impl Default for ServeOpts {
@@ -252,6 +260,7 @@ impl Default for ServeOpts {
             audit: default_audit(),
             retry_budget: DEFAULT_RETRY_BUDGET,
             faults: None,
+            obs: ObsOpts::from_env(),
         }
     }
 }
@@ -259,50 +268,33 @@ impl Default for ServeOpts {
 /// Pure parse of a `PREFILL_CHUNK` value (positions per tick).
 fn parse_prefill_chunk(raw: &str) -> std::result::Result<usize, String> {
     match raw.trim().parse::<usize>() {
-        Ok(0) => Err(format!("PREFILL_CHUNK={raw:?} is zero (need >= 1)")),
+        Ok(0) => Err("zero (need >= 1)".to_string()),
         Ok(n) => Ok(n),
-        Err(_) => Err(format!("PREFILL_CHUNK={raw:?} is not a position count")),
+        Err(_) => Err("not a position count".to_string()),
     }
 }
 
-/// `PREFILL_CHUNK` env override, falling back (with a warning on
-/// invalid values, mirroring `PALLAS_THREADS`) to
-/// [`DEFAULT_PREFILL_CHUNK`].
+/// `PREFILL_CHUNK` env override via the hardened
+/// [`env_parsed`](crate::util::cli::env_parsed) helper (invalid/zero
+/// values warn and fall back to [`DEFAULT_PREFILL_CHUNK`]).
 fn default_prefill_chunk() -> usize {
-    match std::env::var("PREFILL_CHUNK") {
-        Ok(raw) => match parse_prefill_chunk(&raw) {
-            Ok(n) => n,
-            Err(why) => {
-                eprintln!("WARN: {why}; falling back to {DEFAULT_PREFILL_CHUNK}");
-                DEFAULT_PREFILL_CHUNK
-            }
-        },
-        Err(_) => DEFAULT_PREFILL_CHUNK,
-    }
+    crate::util::cli::env_parsed("PREFILL_CHUNK", DEFAULT_PREFILL_CHUNK, parse_prefill_chunk)
 }
 
 /// Pure parse of a `SPEC_K` value (draft tokens per verify cycle).
 fn parse_spec_k(raw: &str) -> std::result::Result<usize, String> {
     match raw.trim().parse::<usize>() {
-        Ok(0) => Err(format!("SPEC_K={raw:?} is zero (need >= 1)")),
+        Ok(0) => Err("zero (need >= 1)".to_string()),
         Ok(n) => Ok(n),
-        Err(_) => Err(format!("SPEC_K={raw:?} is not a draft length")),
+        Err(_) => Err("not a draft length".to_string()),
     }
 }
 
-/// `SPEC_K` env override, falling back (with a warning on invalid
-/// values, mirroring `PREFILL_CHUNK`) to [`DEFAULT_SPEC_K`].
+/// `SPEC_K` env override via the hardened
+/// [`env_parsed`](crate::util::cli::env_parsed) helper (invalid/zero
+/// values warn and fall back to [`DEFAULT_SPEC_K`]).
 fn default_spec_k() -> usize {
-    match std::env::var("SPEC_K") {
-        Ok(raw) => match parse_spec_k(&raw) {
-            Ok(n) => n,
-            Err(why) => {
-                eprintln!("WARN: {why}; falling back to {DEFAULT_SPEC_K}");
-                DEFAULT_SPEC_K
-            }
-        },
-        Err(_) => DEFAULT_SPEC_K,
-    }
+    crate::util::cli::env_parsed("SPEC_K", DEFAULT_SPEC_K, parse_spec_k)
 }
 
 /// Pure parse of a `PALLAS_AUDIT` value.
@@ -310,23 +302,15 @@ fn parse_audit(raw: &str) -> std::result::Result<bool, String> {
     match raw.trim() {
         "1" | "true" | "on" | "yes" => Ok(true),
         "0" | "false" | "off" | "no" => Ok(false),
-        _ => Err(format!("PALLAS_AUDIT={raw:?} is not a boolean (1/0/true/false/on/off/yes/no)")),
+        _ => Err("not a boolean (1/0/true/false/on/off/yes/no)".to_string()),
     }
 }
 
-/// `PALLAS_AUDIT` env override, falling back (with a warning on
-/// invalid values, mirroring `PREFILL_CHUNK`) to off.
+/// `PALLAS_AUDIT` env override via the hardened
+/// [`env_parsed`](crate::util::cli::env_parsed) helper (invalid values
+/// warn and fall back to off).
 fn default_audit() -> bool {
-    match std::env::var("PALLAS_AUDIT") {
-        Ok(raw) => match parse_audit(&raw) {
-            Ok(b) => b,
-            Err(why) => {
-                eprintln!("WARN: {why}; falling back to off");
-                false
-            }
-        },
-        Err(_) => false,
-    }
+    crate::util::cli::env_parsed("PALLAS_AUDIT", false, parse_audit)
 }
 
 /// Aggregate serving counters (monotone over the scheduler's life).
@@ -411,6 +395,32 @@ impl ServeStats {
             self.accepted as f64 / self.drafted as f64
         }
     }
+}
+
+/// Always-on online latency/shape histograms the scheduler records as
+/// it ticks — O(1) per sample, fixed memory ([`crate::obs::hist`]), no
+/// I/O. Counts reconcile *exactly* with [`ServeStats`]:
+/// `ttft_s.count() == finished + errors` and
+/// `itl_s.count() == total_tokens` (pinned by `rust/tests/obs.rs`);
+/// quantiles are within √2 by the histogram's contract.
+#[derive(Debug, Default, Clone)]
+pub struct ServeHists {
+    /// Submit → first sampled token, seconds. Recorded at retirement:
+    /// finished rows record their TTFT; errored requests that never
+    /// produced a token record their time-to-failure (so the count
+    /// identity holds); cancellations are skipped.
+    pub ttft_s: Hist,
+    /// Per-token latency, seconds: each tick's wall time attributed to
+    /// every token it sampled (`record_n`), so the count equals
+    /// [`ServeStats::total_tokens`].
+    pub itl_s: Hist,
+    /// Whole-tick wall time, seconds (every tick, working or idle).
+    pub tick_s: Hist,
+    /// Fused batch width of ticks that stepped at least one row.
+    pub batch: Hist,
+    /// Accepted draft tokens per speculative verify cycle (one sample
+    /// per Spec row per tick; empty without a draft engine).
+    pub spec_accept: Hist,
 }
 
 /// What one tick did.
@@ -592,6 +602,12 @@ pub struct Scheduler<'m> {
     on_tokens: Option<Box<dyn FnMut(RequestId, &[i32]) + 'm>>,
     finished: Vec<GenOutput>,
     stats: ServeStats,
+    /// Always-on online histograms (TTFT, ITL, tick time, batch width,
+    /// speculative acceptance) — see [`ServeHists`].
+    hists: ServeHists,
+    /// Observability emission sink ([`ServeOpts::obs`]); inert by
+    /// default, every call a cheap early-return when off.
+    obs: ObsSink,
 }
 
 impl<'m> Scheduler<'m> {
@@ -681,6 +697,8 @@ impl<'m> Scheduler<'m> {
             on_tokens: None,
             finished: Vec::new(),
             stats: ServeStats { kv_pages: pool_pages, ..ServeStats::default() },
+            hists: ServeHists::default(),
+            obs: ObsSink::open(&opts.obs)?,
         })
     }
 
@@ -764,7 +782,10 @@ impl<'m> Scheduler<'m> {
                 self.pool.max_pages()
             );
         }
-        self.queue.push(req, self.stats.ticks)
+        let (prompt_len, max_new, priority) = (req.prompt.len(), req.max_new_tokens, req.priority);
+        let id = self.queue.push(req, self.stats.ticks)?;
+        self.obs.req_submit(id, prompt_len, max_new, priority);
+        Ok(id)
     }
 
     /// Cancel a request wherever it lives. Queued requests leave
@@ -774,6 +795,9 @@ impl<'m> Scheduler<'m> {
     /// already-finished ids.
     pub fn cancel(&mut self, id: RequestId) -> bool {
         if let Some(q) = self.queue.remove(id) {
+            let ntok = q.resume.as_ref().map_or(0, |r| r.tokens.len());
+            let ttft = q.resume.as_ref().and_then(|r| r.ttft_s);
+            self.obs.req_retire(q.id, FinishReason::Cancelled.as_str(), ntok, ttft);
             self.finished.push(Self::output_from_queued(q, FinishReason::Cancelled, None));
             self.stats.cancelled += 1;
             return true;
@@ -1032,6 +1056,7 @@ impl<'m> Scheduler<'m> {
         // (see `entry_positions`).
         drop(session);
         drop(draft);
+        self.obs.req_requeue(id, if preempted { "preempt" } else { "retry" }, not_before);
         self.queue.requeue(QueuedRequest {
             id,
             req: GenRequest {
@@ -1067,18 +1092,22 @@ impl<'m> Scheduler<'m> {
         self.stats.ticks += 1;
         let tick_now = self.stats.ticks;
         let tick_t0 = std::time::Instant::now();
+        self.obs.phase_begin("tick");
         let mut finished = 0usize;
         let mut cancelled = 0usize;
 
         // Phase 1: evict cancellations, freeing slots before admission.
+        self.obs.phase_begin("evict");
         for slot in self.slots.iter_mut() {
             if slot.as_ref().is_some_and(|a| a.cancelled) {
                 let a = slot.take().expect("invariant: slot checked occupied (cancel evict)");
+                self.obs.req_retire(a.id, FinishReason::Cancelled.as_str(), a.tokens.len(), a.ttft_s);
                 self.finished.push(Self::output_from_active(a, FinishReason::Cancelled, None));
                 self.stats.cancelled += 1;
                 cancelled += 1;
             }
         }
+        self.obs.phase_end();
 
         // Phase 2: admission — queue is priority-then-FIFO ordered;
         // each head needs a free slot (lowest index first) and pool
@@ -1090,6 +1119,7 @@ impl<'m> Scheduler<'m> {
         let mut deferred = 0usize;
         let mut preempted = 0usize;
         let mut errors = 0usize;
+        self.obs.phase_begin("admit");
         loop {
             let (priority, demand) = match self.queue.peek() {
                 None => break,
@@ -1120,6 +1150,7 @@ impl<'m> Scheduler<'m> {
                 break;
             }
             let q = self.queue.pop().expect("invariant: peeked request still at queue head");
+            let resumed = q.resume.is_some();
             let sidx = self
                 .slots
                 .iter()
@@ -1127,8 +1158,10 @@ impl<'m> Scheduler<'m> {
                 .expect("invariant: free slot checked before dequeue");
             match self.admit(q) {
                 Ok(active) => {
+                    let aid = active.id;
                     self.slots[sidx] = Some(active);
                     admitted += 1;
+                    self.obs.req_admit(aid, sidx, resumed);
                 }
                 Err((mut q, e, transient)) => {
                     // Contract: an admission failure must never
@@ -1146,10 +1179,20 @@ impl<'m> Scheduler<'m> {
                              ({e}); retry {}/{} deferred to tick {}",
                             q.id, q.retries, self.retry_budget, q.not_before
                         );
+                        self.obs.req_requeue(q.id, "retry", q.not_before);
                         self.queue.requeue(q);
                         self.stats.retries_recovered += 1;
                     } else {
                         eprintln!("WARN: serve: admission of request {} failed: {e}", q.id);
+                        // TTFT count identity (finished + errors): a
+                        // request that dies without a first token
+                        // records its time-to-failure.
+                        let ttft = q.resume.as_ref().and_then(|r| r.ttft_s);
+                        self.hists
+                            .ttft_s
+                            .record(ttft.unwrap_or_else(|| q.submitted.elapsed().as_secs_f64()));
+                        let ntok = q.resume.as_ref().map_or(0, |r| r.tokens.len());
+                        self.obs.req_retire(q.id, FinishReason::Error.as_str(), ntok, ttft);
                         self.finished.push(Self::output_from_queued(
                             q,
                             FinishReason::Error,
@@ -1161,6 +1204,7 @@ impl<'m> Scheduler<'m> {
                 }
             }
         }
+        self.obs.phase_end();
 
         // Phase 3a: hand the tick's prefill budget to Prefilling rows,
         // round-robin from the rotating cursor. Chunk widths never
@@ -1209,6 +1253,10 @@ impl<'m> Scheduler<'m> {
         // before any draft step, so the (untouched) sessions survive
         // for the post-cooldown catch-up.
         let mut draft_fault: Option<(String, bool, bool)> = None;
+        let draft_on = self.draft.is_some();
+        if draft_on {
+            self.obs.phase_begin("draft");
+        }
         if self.spec_enabled {
             if let Some(de) = &self.draft {
                 let t0 = std::time::Instant::now();
@@ -1280,6 +1328,9 @@ impl<'m> Scheduler<'m> {
                 self.stats.retries_recovered += 1;
             }
         }
+        if draft_on {
+            self.obs.phase_end();
+        }
 
         // Phase 3b: one fused step, ascending slot order — decode rows
         // (width 1 plain, width k+1 speculative with all logits kept)
@@ -1349,6 +1400,7 @@ impl<'m> Scheduler<'m> {
             // retirement this tick and is evicted in resolution below.
             let mut row_fault: Vec<Option<(String, bool)>> = (0..batch).map(|_| None).collect();
             let mut logits_row: Vec<Option<Logits>> = (0..batch).map(|_| None).collect();
+            self.obs.phase_begin("step");
             let t0 = std::time::Instant::now();
             let mut fused_panic: Option<String> = None;
             if !any_poison {
@@ -1417,6 +1469,8 @@ impl<'m> Scheduler<'m> {
                 }
             }
             decode_seconds = t0.elapsed().as_secs_f64();
+            self.obs.phase_end();
+            self.obs.phase_begin("accept");
             // Injected NaN poisoning: replace the victim row's logits
             // wholesale (the fault models a corrupted kernel output).
             let vocab_n = self.engine.cfg().vocab_size;
@@ -1481,9 +1535,12 @@ impl<'m> Scheduler<'m> {
                             tokens_sampled += 1;
                             emissions.push((a.id, vec![id]));
                             if a.ttft_ticks.is_none() {
-                                a.ttft_s = Some(a.submitted.elapsed().as_secs_f64());
+                                let t = a.submitted.elapsed().as_secs_f64();
+                                a.ttft_s = Some(t);
                                 a.ttft_ticks = Some(tick_now.saturating_sub(a.submit_tick));
+                                self.obs.req_first_token(a.id, t);
                             }
+                            self.obs.req_decode_start(a.id);
                         }
                     }
                     StepRow::Decode => {
@@ -1507,6 +1564,7 @@ impl<'m> Scheduler<'m> {
                             vocab * out.emitted.len() as f64 + props.len() as f64;
                         drafted_tick += props.len();
                         accepted_tick += out.accepted;
+                        self.hists.spec_accept.record(out.accepted as f64);
                         a.spec_drafted += props.len() as u64;
                         a.spec_accepted += out.accepted as u64;
                         let mut emitted = out.emitted;
@@ -1565,6 +1623,7 @@ impl<'m> Scheduler<'m> {
                     failed_rows.push((parts[i].0, reason, transient));
                 }
             }
+            self.obs.phase_end();
         }
         drop(parts);
 
@@ -1590,6 +1649,10 @@ impl<'m> Scheduler<'m> {
                 self.stats.retries_recovered += 1;
             } else {
                 eprintln!("WARN: serve: request {} failed: {reason}", a.id);
+                self.hists
+                    .ttft_s
+                    .record(a.ttft_s.unwrap_or_else(|| a.submitted.elapsed().as_secs_f64()));
+                self.obs.req_retire(a.id, FinishReason::Error.as_str(), a.tokens.len(), a.ttft_s);
                 self.finished.push(Self::output_from_active(
                     a,
                     FinishReason::Error,
@@ -1615,17 +1678,26 @@ impl<'m> Scheduler<'m> {
 
         // Phase 4: retire rows that sampled EOS or generated their
         // full budget (EOS checked first, so it wins at the boundary).
+        self.obs.phase_begin("retire");
         for slot in self.slots.iter_mut() {
             let done =
                 slot.as_ref().is_some_and(|a| a.eos_hit || a.tokens.len() >= a.max_new_tokens);
             if done {
                 let a = slot.take().expect("invariant: slot checked occupied (retire)");
                 let finish = if a.eos_hit { FinishReason::Eos } else { FinishReason::Length };
+                // A retiring row always sampled >= 1 token, so ttft_s
+                // is Some; the fallback keeps the count identity even
+                // if that ever changes.
+                self.hists
+                    .ttft_s
+                    .record(a.ttft_s.unwrap_or_else(|| a.submitted.elapsed().as_secs_f64()));
+                self.obs.req_retire(a.id, finish.as_str(), a.tokens.len(), a.ttft_s);
                 self.finished.push(Self::output_from_active(a, finish, None));
                 self.stats.finished += 1;
                 finished += 1;
             }
         }
+        self.obs.phase_end();
 
         // Speculation circuit breaker: while enabled, judge windowed
         // acceptance; while tripped, count down the cooldown and
@@ -1669,12 +1741,42 @@ impl<'m> Scheduler<'m> {
         self.stats.step_seconds += decode_seconds;
         self.stats.faults_injected = self.faults.injected();
         if self.audit {
+            self.obs.phase_begin("audit");
             self.audit_tick(&ps)?;
             self.stats.audit_ticks += 1;
+            self.obs.phase_end();
         }
-        let overhead_seconds =
-            (tick_t0.elapsed().as_secs_f64() - draft_seconds - decode_seconds).max(0.0);
+        let tick_wall = tick_t0.elapsed().as_secs_f64();
+        let overhead_seconds = (tick_wall - draft_seconds - decode_seconds).max(0.0);
         self.stats.overhead_seconds += overhead_seconds;
+        // Always-on histograms: O(1) each, no I/O. ITL attributes this
+        // tick's wall time to every token it sampled (`record_n` is a
+        // no-op at n = 0), keeping `itl_s.count() == total_tokens`.
+        self.hists.tick_s.record(tick_wall);
+        if batch > 0 {
+            self.hists.batch.record(batch as f64);
+        }
+        self.hists.itl_s.record_n(tick_wall, tokens_sampled as u64);
+        if self.obs.enabled() {
+            self.obs.event(
+                "tick",
+                vec![
+                    ("tick", Json::Num(tick_now as f64)),
+                    ("batch", Json::Num(batch as f64)),
+                    ("tokens", Json::Num(tokens_sampled as f64)),
+                    ("prefill_positions", Json::Num(prefill_positions as f64)),
+                    ("admitted", Json::Num(admitted as f64)),
+                    ("finished", Json::Num(finished as f64)),
+                    ("errors", Json::Num(errors as f64)),
+                    ("preempted", Json::Num(preempted as f64)),
+                    ("active", Json::Num(self.active_count() as f64)),
+                    ("queued", Json::Num(self.queue.len() as f64)),
+                    ("wall_s", Json::Num(tick_wall)),
+                    ("decode_s", Json::Num(decode_seconds)),
+                ],
+            );
+        }
+        self.obs.phase_end(); // tick
         Ok(TickReport {
             admitted,
             batch,
@@ -1737,6 +1839,22 @@ impl<'m> Scheduler<'m> {
 
     pub fn stats(&self) -> &ServeStats {
         &self.stats
+    }
+
+    /// The always-on online histograms (TTFT, ITL, tick time, batch
+    /// width, speculative acceptance) — see [`ServeHists`] for the
+    /// exact reconciliation contract with [`ServeStats`].
+    pub fn hists(&self) -> &ServeHists {
+        &self.hists
+    }
+
+    /// Flush and close the observability sinks: writes the Chrome
+    /// trace file (auto-closing any spans still open) — the JSONL
+    /// stream needs no flush. Idempotent, and a no-op when
+    /// observability is off; the drive loops call it after the last
+    /// tick.
+    pub fn obs_finish(&mut self) -> Result<()> {
+        self.obs.finish()
     }
 
     /// Install a streaming sink: after every tick it is called once

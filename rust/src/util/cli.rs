@@ -104,6 +104,29 @@ impl Args {
     }
 }
 
+/// Hardened environment-variable knob: read `name`, run the pure
+/// `parse` on its value, and degrade IDENTICALLY on every failure mode
+/// — unset uses the default silently; set-but-invalid (garbage, zero,
+/// out of range: whatever `parse` rejects, with its reason) warns once
+/// on stderr and falls back to the default. Env knobs must never turn
+/// a typo into a panic or a silent behavior change.
+///
+/// Every env knob in the crate (`PREFILL_CHUNK`, `SPEC_K`,
+/// `PALLAS_AUDIT`, `PALLAS_THREADS`, `PALLAS_METRICS`) routes through
+/// here, so they all degrade the same way.
+pub fn env_parsed<T>(name: &str, default: T, parse: impl Fn(&str) -> Result<T, String>) -> T {
+    match std::env::var(name) {
+        Err(_) => default,
+        Ok(raw) => match parse(&raw) {
+            Ok(v) => v,
+            Err(why) => {
+                eprintln!("WARN: {name}={raw:?}: {why}; using default");
+                default
+            }
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -148,5 +171,42 @@ mod tests {
         let a = Args::parse(&sv(&["--good", "1", "--bad", "2"]), &[]).unwrap();
         assert!(a.check_known(&["good"]).is_err());
         assert!(a.check_known(&["good", "bad"]).is_ok());
+    }
+
+    fn parse_pos(s: &str) -> Result<usize, String> {
+        match s.trim().parse::<usize>() {
+            Ok(0) => Err("must be >= 1".into()),
+            Ok(n) => Ok(n),
+            Err(e) => Err(e.to_string()),
+        }
+    }
+
+    // Each test uses its own env var name: cargo runs tests in
+    // parallel and env mutation is process-global.
+
+    #[test]
+    fn env_parsed_unset_uses_default_silently() {
+        std::env::remove_var("SWITCHHEAD_TEST_ENV_UNSET");
+        assert_eq!(env_parsed("SWITCHHEAD_TEST_ENV_UNSET", 7usize, parse_pos), 7);
+    }
+
+    #[test]
+    fn env_parsed_valid_value_wins() {
+        std::env::set_var("SWITCHHEAD_TEST_ENV_OK", "12");
+        assert_eq!(env_parsed("SWITCHHEAD_TEST_ENV_OK", 7usize, parse_pos), 12);
+        std::env::remove_var("SWITCHHEAD_TEST_ENV_OK");
+    }
+
+    #[test]
+    fn env_parsed_garbage_and_zero_fall_back() {
+        for bad in ["banana", "0", "-3", "1.5", ""] {
+            std::env::set_var("SWITCHHEAD_TEST_ENV_BAD", bad);
+            assert_eq!(
+                env_parsed("SWITCHHEAD_TEST_ENV_BAD", 7usize, parse_pos),
+                7,
+                "value {bad:?} must fall back to the default"
+            );
+        }
+        std::env::remove_var("SWITCHHEAD_TEST_ENV_BAD");
     }
 }

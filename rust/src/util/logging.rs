@@ -1,27 +1,67 @@
 //! Structured run logging: timestamped stderr lines plus an optional
-//! JSONL metrics sink (one JSON object per training/eval event) that the
-//! bench harness and EXPERIMENTS.md tooling consume.
+//! JSONL metrics sink (one JSON object per event) that the bench
+//! harness, the serving observability layer ([`crate::obs`]) and
+//! EXPERIMENTS.md tooling consume.
+//!
+//! All span/trace timing is **monotonic**: the process installs one
+//! [`Instant`] anchor on first use and every timestamp is an offset
+//! from it ([`uptime_s`], [`monotonic_us`]) — timestamps can never go
+//! backwards or collapse to 0 the way a failed wall-clock read could.
+//! Wall-clock time appears exactly once, as the anchor record a
+//! [`MetricsLog`] writes when it opens ([`epoch_secs`]), so offline
+//! tooling can still reconstruct absolute times.
 
 use std::fs::{File, OpenOptions};
 use std::io::Write;
 use std::path::Path;
-use std::sync::Mutex;
-use std::time::{SystemTime, UNIX_EPOCH};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
 
 use crate::util::error::Result;
 
 use super::json::Json;
 
-pub fn now_secs() -> f64 {
+/// Process-wide monotonic time anchor, installed on first use.
+static ANCHOR: OnceLock<Instant> = OnceLock::new();
+
+fn anchor() -> Instant {
+    *ANCHOR.get_or_init(Instant::now)
+}
+
+/// Install the anchor now (idempotent). Call early in `main` so span
+/// offsets count from process start rather than from first log.
+pub fn init_clock() {
+    let _ = anchor();
+}
+
+/// Seconds since the monotonic anchor. Never decreases.
+pub fn uptime_s() -> f64 {
+    anchor().elapsed().as_secs_f64()
+}
+
+/// Microseconds since the monotonic anchor — the timestamp unit of the
+/// Chrome-trace emitter ([`crate::obs::trace`]). Never decreases.
+pub fn monotonic_us() -> u64 {
+    anchor().elapsed().as_micros() as u64
+}
+
+/// Wall-clock seconds since the Unix epoch; 0.0 only if the system
+/// clock reads before the epoch. Used ONLY for anchor records — all
+/// span math is monotonic.
+pub fn epoch_secs() -> f64 {
     SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs_f64()).unwrap_or(0.0)
 }
 
-/// Log an informational line to stderr with a wall-clock prefix.
+/// Log an informational line to stderr, prefixed with monotonic
+/// process uptime (seconds).
 pub fn info(msg: &str) {
-    eprintln!("[{:.3}] {msg}", now_secs());
+    eprintln!("[+{:.3}s] {msg}", uptime_s());
 }
 
-/// JSONL sink for structured metrics.
+/// JSONL sink for structured metrics. The first record of every
+/// process run is an anchor (`{"event":"anchor","epoch_s":...,
+/// "uptime_s":...}`) tying the monotonic `ts` offsets of the records
+/// that follow to wall-clock time.
 pub struct MetricsLog {
     file: Mutex<File>,
 }
@@ -32,11 +72,22 @@ impl MetricsLog {
             std::fs::create_dir_all(dir)?;
         }
         let file = OpenOptions::new().create(true).append(true).open(path)?;
-        Ok(MetricsLog { file: Mutex::new(file) })
+        let log = MetricsLog { file: Mutex::new(file) };
+        log.write(Json::from_pairs(vec![
+            ("event", Json::Str("anchor".into())),
+            ("epoch_s", Json::Num(epoch_secs())),
+            ("uptime_s", Json::Num(uptime_s())),
+        ]))?;
+        Ok(log)
     }
 
+    /// Append one record, stamping `ts` with monotonic uptime seconds.
     pub fn log(&self, mut record: Json) -> Result<()> {
-        record.set("ts", Json::Num(now_secs()));
+        record.set("ts", Json::Num(uptime_s()));
+        self.write(record)
+    }
+
+    fn write(&self, record: Json) -> Result<()> {
         let mut f = self.file.lock().unwrap();
         writeln!(f, "{}", record.to_string())?;
         Ok(())
@@ -77,7 +128,7 @@ mod tests {
     use super::*;
 
     #[test]
-    fn metrics_log_writes_jsonl() {
+    fn metrics_log_writes_jsonl_with_anchor() {
         let dir = std::env::temp_dir().join("switchhead-logtest");
         let path = dir.join("m.jsonl");
         let _ = std::fs::remove_file(&path);
@@ -86,10 +137,23 @@ mod tests {
         log.log(Json::from_pairs(vec![("step", Json::Num(2.0))])).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let lines: Vec<_> = text.lines().collect();
-        assert_eq!(lines.len(), 2);
-        let rec = Json::parse(lines[1]).unwrap();
+        assert_eq!(lines.len(), 3, "anchor + 2 records");
+        let anchor = Json::parse(lines[0]).unwrap();
+        assert_eq!(anchor.get("event").unwrap().as_str().unwrap(), "anchor");
+        assert!(anchor.get("epoch_s").unwrap().as_f64().unwrap() > 0.0);
+        let rec = Json::parse(lines[2]).unwrap();
         assert_eq!(rec.get("step").unwrap().as_usize().unwrap(), 2);
         assert!(rec.get("ts").is_some());
+    }
+
+    #[test]
+    fn monotonic_clock_never_goes_backwards() {
+        let a = monotonic_us();
+        let s = uptime_s();
+        let b = monotonic_us();
+        assert!(b >= a);
+        assert!(s >= a as f64 / 1e6 - 1e-3);
+        assert!(uptime_s() >= s);
     }
 
     #[test]

@@ -89,6 +89,35 @@ pub fn bpc(sum_nll: f64, chars: f64) -> f64 {
     sum_nll / chars.max(1.0) / std::f64::consts::LN_2
 }
 
+/// Normalized Shannon entropy of a count distribution, in [0, 1]:
+/// 1.0 = perfectly uniform, 0.0 = all mass on one bucket (or fewer
+/// than two non-empty buckets). The MoE routing-balance summary uses
+/// this over per-expert selection counts.
+pub fn normalized_entropy(counts: &[u64]) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 || counts.len() < 2 {
+        return 0.0;
+    }
+    let mut h = 0.0;
+    for &c in counts {
+        if c > 0 {
+            let p = c as f64 / total as f64;
+            h -= p * p.ln();
+        }
+    }
+    h / (counts.len() as f64).ln()
+}
+
+/// Largest single-bucket share of a count distribution (0.0 if empty).
+/// `max_share * n_experts` ≈ the hot expert's oversubscription factor.
+pub fn max_share(counts: &[u64]) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    *counts.iter().max().unwrap() as f64 / total as f64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,6 +151,18 @@ mod tests {
         assert!((perplexity(0.0, 10.0) - 1.0).abs() < 1e-12);
         let nll = 10.0 * std::f64::consts::LN_2;
         assert!((bpc(nll, 10.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_and_share() {
+        assert!((normalized_entropy(&[5, 5, 5, 5]) - 1.0).abs() < 1e-12);
+        assert_eq!(normalized_entropy(&[9, 0, 0]), 0.0);
+        assert_eq!(normalized_entropy(&[]), 0.0);
+        assert_eq!(normalized_entropy(&[7]), 0.0);
+        let h = normalized_entropy(&[8, 1, 1]);
+        assert!(h > 0.0 && h < 1.0, "skewed counts: 0 < {h} < 1");
+        assert!((max_share(&[8, 1, 1]) - 0.8).abs() < 1e-12);
+        assert_eq!(max_share(&[]), 0.0);
     }
 
     #[test]

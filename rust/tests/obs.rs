@@ -1,0 +1,315 @@
+//! Observability-subsystem contract tests.
+//!
+//! The load-bearing claim: **observability never changes behavior** —
+//! token streams are bit-identical with sinks on or off — while the
+//! numbers it reports reconcile exactly with the scheduler's own
+//! accounting:
+//!
+//! * online histogram quantiles track a store-every-sample oracle
+//!   within the log-bucket guarantee (counts/sums exact);
+//! * a multi-request serve run emits a JSONL event stream whose
+//!   lifecycle events (submit / first_token / retire) count the
+//!   requests exactly, and a Chrome `trace_event` JSON whose B/E spans
+//!   balance on every lane;
+//! * `hists().ttft_s.count() == finished + errors` and
+//!   `hists().itl_s.count() == total_tokens` — with and without
+//!   injected faults;
+//! * MoE routing telemetry totals equal the analytic
+//!   `positions × heads × k` for every (layer, projection).
+//!
+//! Tests that run model forwards hold [`routing::test_guard`] — the
+//! routing collector is process-global and `cargo test` runs tests
+//! concurrently.
+
+use std::collections::BTreeMap;
+
+use switchhead::config::ModelConfig;
+use switchhead::model::NativeEngine;
+use switchhead::obs::{routing, Hist, ObsOpts};
+use switchhead::serve::{FaultPlan, FinishReason, GenRequest, Scheduler, ServeOpts};
+use switchhead::util::json::Json;
+use switchhead::util::rng::Pcg;
+
+fn cfg_json(text: &str) -> ModelConfig {
+    let cfg = ModelConfig::from_json(&Json::parse(text).unwrap()).unwrap();
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn sh_xl() -> ModelConfig {
+    cfg_json(
+        r#"{"name":"sh-xl","family":"switchhead","pos":"xl","vocab_size":64,
+            "d_model":16,"n_layers":2,"n_heads":2,"d_head":8,"d_ff":32,
+            "seq_len":8,"batch_size":2,"att_n_experts":3,"att_k":2}"#,
+    )
+}
+
+fn synth_request(cfg: &ModelConfig, rng: &mut Pcg, plen: usize, max_new: usize) -> GenRequest {
+    let prompt: Vec<i32> = (0..plen).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+    GenRequest::greedy(prompt, max_new)
+}
+
+fn tmp_path(name: &str) -> String {
+    let dir = std::env::temp_dir().join("switchhead-obs-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join(name);
+    let _ = std::fs::remove_file(&p);
+    p.to_str().unwrap().to_string()
+}
+
+/// Exact quantile of a sorted sample (rank = ceil(q·n)).
+fn oracle_q(sorted: &[f64], q: f64) -> f64 {
+    let idx = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
+}
+
+/// The online histogram against a store-every-sample oracle over a
+/// log-uniform distribution spanning six decades: counts, sums and
+/// extremes exact; quantiles within the log-bucket resolution.
+#[test]
+fn hist_matches_sorted_sample_oracle() {
+    let mut rng = Pcg::new(7, 3);
+    let mut h = Hist::new();
+    let mut xs: Vec<f64> = Vec::with_capacity(5000);
+    for _ in 0..5000 {
+        let v = 10f64.powf(rng.uniform() * 6.0 - 3.0); // 1e-3 .. 1e3
+        h.record(v);
+        xs.push(v);
+    }
+    xs.sort_by(f64::total_cmp);
+
+    assert_eq!(h.count(), xs.len() as u64);
+    let sum: f64 = xs.iter().sum();
+    assert!((h.sum() - sum).abs() <= 1e-9 * sum.abs(), "sum drifted");
+    assert_eq!(h.min(), xs[0]);
+    assert_eq!(h.max(), *xs.last().unwrap());
+
+    // A bucket spans one octave, so the geometric-midpoint estimate is
+    // within √2 of any sample it stands in for; 1.5 leaves rank slack.
+    for q in [0.10, 0.50, 0.90, 0.95, 0.99] {
+        let est = h.quantile(q);
+        let truth = oracle_q(&xs, q);
+        let ratio = est / truth;
+        assert!(
+            (1.0 / 1.5..=1.5).contains(&ratio),
+            "q{q}: hist {est} vs oracle {truth} (ratio {ratio})"
+        );
+    }
+
+    // Merging two disjoint halves equals recording everything once.
+    let (mut a, mut b) = (Hist::new(), Hist::new());
+    for (i, &v) in xs.iter().enumerate() {
+        if i % 2 == 0 {
+            a.record(v);
+        } else {
+            b.record(v);
+        }
+    }
+    a.merge(&b);
+    assert_eq!(a.count(), h.count());
+    assert_eq!(a.buckets(), h.buckets());
+}
+
+/// A multi-request serve run with both sinks on: histogram counts
+/// reconcile exactly with `ServeStats`, the JSONL stream parses
+/// line-by-line with lifecycle events counting the requests, and the
+/// Chrome trace holds balanced spans on every lane (tick lane plus one
+/// lane per request).
+#[test]
+fn serve_obs_reconciles_and_trace_balances() {
+    let _g = routing::test_guard();
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let metrics_path = tmp_path("serve_metrics.jsonl");
+    let trace_path = tmp_path("serve_trace.json");
+    let opts = ServeOpts {
+        slots: 2,
+        queue_cap: 16,
+        obs: ObsOpts { metrics: Some(metrics_path.clone()), trace: Some(trace_path.clone()) },
+        ..ServeOpts::default()
+    };
+    let mut sched = Scheduler::new(&engine, &opts).unwrap();
+    let mut rng = Pcg::new(21, 9);
+    let reqs: Vec<GenRequest> =
+        (0..6).map(|i| synth_request(&cfg, &mut rng, 1 + i % 7, 3 + (i * 2) % 6)).collect();
+    for r in &reqs {
+        sched.submit(r.clone()).unwrap();
+    }
+    let outs = sched.run_until_idle(10_000).unwrap();
+    sched.obs_finish().unwrap();
+    assert_eq!(outs.len(), reqs.len());
+    assert!(outs.iter().all(|o| o.finish == FinishReason::Length));
+
+    // Histogram/stat reconciliation — exact, not approximate.
+    let st = sched.stats().clone();
+    let h = sched.hists();
+    assert_eq!(h.ttft_s.count(), st.finished + st.errors, "ttft count != finished + errors");
+    assert_eq!(h.itl_s.count(), st.total_tokens, "itl count != total tokens");
+    assert_eq!(h.tick_s.count(), st.ticks, "tick histogram missed a tick");
+    assert!(h.batch.count() > 0);
+    assert!(h.batch.max() <= opts.slots as f64, "batch wider than slots");
+    assert_eq!(h.spec_accept.count(), 0, "spec samples without a draft model");
+    let budget: u64 = reqs.iter().map(|r| r.max_new_tokens as u64).sum();
+    assert_eq!(st.total_tokens, budget);
+
+    // JSONL stream: every line an object; lifecycle counts exact.
+    let text = std::fs::read_to_string(&metrics_path).unwrap();
+    let (mut submits, mut firsts, mut retires) = (0usize, 0usize, 0usize);
+    let mut lines = 0usize;
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let rec = Json::parse(line).unwrap();
+        rec.as_obj().unwrap();
+        lines += 1;
+        match rec.get("event").map(|e| e.as_str().unwrap()) {
+            Some("submit") => submits += 1,
+            Some("first_token") => firsts += 1,
+            Some("retire") => retires += 1,
+            _ => {}
+        }
+    }
+    assert!(lines > 0, "metrics stream is empty");
+    assert_eq!(submits, reqs.len(), "one submit event per request");
+    assert_eq!(firsts, reqs.len(), "one first_token event per request");
+    assert_eq!(retires, reqs.len(), "one retire event per request");
+
+    // Chrome trace: well-formed, spans balance per lane.
+    let doc = Json::parse(&std::fs::read_to_string(&trace_path).unwrap()).unwrap();
+    let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    let mut depth: BTreeMap<u64, i64> = BTreeMap::new();
+    let mut spans = 0usize;
+    for e in evs {
+        let ph = e.get("ph").unwrap().as_str().unwrap();
+        let tid = e.get("tid").unwrap().as_f64().unwrap() as u64;
+        e.get("ts").unwrap().as_f64().unwrap();
+        e.get("name").unwrap().as_str().unwrap();
+        match ph {
+            "B" => {
+                *depth.entry(tid).or_default() += 1;
+                spans += 1;
+            }
+            "E" => {
+                let d = depth.entry(tid).or_default();
+                *d -= 1;
+                assert!(*d >= 0, "E with no open B on tid {tid}");
+            }
+            _ => {}
+        }
+    }
+    assert!(depth.values().all(|&d| d == 0), "unbalanced spans: {depth:?}");
+    assert!(spans > 0, "trace holds no spans");
+    // Tick lane plus one lane per request.
+    assert_eq!(depth.len(), reqs.len() + 1, "lane count");
+}
+
+/// The zero-behavior-change pin: identical traffic with sinks off and
+/// with both sinks + routing telemetry on must produce bit-identical
+/// token streams.
+#[test]
+fn obs_sinks_never_change_token_streams() {
+    let _g = routing::test_guard();
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let mut rng = Pcg::new(33, 4);
+    let reqs: Vec<GenRequest> =
+        (0..5).map(|i| synth_request(&cfg, &mut rng, 1 + (i * 3) % 7, 2 + i % 5)).collect();
+
+    let run = |obs: ObsOpts| {
+        let opts = ServeOpts { slots: 2, queue_cap: 8, obs, ..ServeOpts::default() };
+        let mut sched = Scheduler::new(&engine, &opts).unwrap();
+        for r in &reqs {
+            sched.submit(r.clone()).unwrap();
+        }
+        let mut outs = sched.run_until_idle(10_000).unwrap();
+        sched.obs_finish().unwrap();
+        outs.sort_by_key(|o| o.id);
+        outs.into_iter().map(|o| o.tokens).collect::<Vec<Vec<i32>>>()
+    };
+
+    let off = run(ObsOpts::default());
+    routing::reset();
+    routing::set_enabled(true);
+    let on = run(ObsOpts {
+        metrics: Some(tmp_path("ident_metrics.jsonl")),
+        trace: Some(tmp_path("ident_trace.json")),
+    });
+    routing::set_enabled(false);
+    routing::reset();
+    assert_eq!(off, on, "observability changed a token stream");
+}
+
+/// Routing telemetry totals are analytic, not statistical: greedy
+/// requests with no EOS feed exactly `prompt_len + max_new - 1`
+/// positions through the model, and every position routes `heads × k`
+/// selections per projection per layer.
+#[test]
+fn routing_totals_match_analytic_selection_count() {
+    let _g = routing::test_guard();
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let mut rng = Pcg::new(5, 2);
+    let reqs: Vec<GenRequest> =
+        (0..4).map(|i| synth_request(&cfg, &mut rng, 1 + i % 5, 2 + i % 4)).collect();
+
+    routing::reset();
+    routing::set_enabled(true);
+    let opts = ServeOpts { slots: 2, queue_cap: 8, ..ServeOpts::default() };
+    let mut sched = Scheduler::new(&engine, &opts).unwrap();
+    for r in &reqs {
+        sched.submit(r.clone()).unwrap();
+    }
+    let outs = sched.run_until_idle(10_000).unwrap();
+    routing::set_enabled(false);
+    let s = routing::snapshot();
+    routing::reset();
+
+    assert!(outs.iter().all(|o| o.finish == FinishReason::Length));
+    let positions: u64 =
+        reqs.iter().map(|r| (r.prompt.len() + r.max_new_tokens - 1) as u64).sum();
+    let expected = positions * cfg.n_heads as u64 * cfg.att_k as u64;
+    for layer in 0..cfg.n_layers {
+        for (proj, pname) in routing::PROJ_NAMES.iter().enumerate() {
+            assert_eq!(
+                s.total(layer, proj),
+                expected,
+                "layer {layer} proj {pname}: selections != positions × heads × k"
+            );
+        }
+    }
+    assert!(s.union_calls > 0, "fused dispatch recorded no unions");
+    let frac = s.mean_union_frac();
+    assert!(frac > 0.0 && frac <= 1.0, "union fraction {frac} out of range");
+}
+
+/// The TTFT reconciliation holds under injected faults too: errored
+/// requests record their time-to-failure, so the histogram still
+/// counts `finished + errors` exactly.
+#[test]
+fn ttft_histogram_counts_errors_too() {
+    let _g = routing::test_guard();
+    let cfg = sh_xl();
+    let engine = NativeEngine::new(&cfg, 11).unwrap();
+    let mut rng = Pcg::new(9, 1);
+    let reqs: Vec<GenRequest> =
+        (0..6).map(|i| synth_request(&cfg, &mut rng, 1 + i % 5, 3 + i % 4)).collect();
+    let opts = ServeOpts {
+        slots: 2,
+        queue_cap: 8,
+        faults: Some(FaultPlan::random(0xFA17, 6, 64, reqs.len() as u64)),
+        ..ServeOpts::default()
+    };
+    let mut sched = Scheduler::new(&engine, &opts).unwrap();
+    for r in &reqs {
+        sched.submit(r.clone()).unwrap();
+    }
+    let outs = sched.run_until_idle(100_000).unwrap();
+    let st = sched.stats().clone();
+    let h = sched.hists();
+    assert_eq!(outs.len(), reqs.len(), "a request was lost");
+    assert_eq!(
+        h.ttft_s.count(),
+        st.finished + st.errors,
+        "ttft count != finished + errors under faults"
+    );
+    assert_eq!(h.itl_s.count(), st.total_tokens, "itl count != total tokens under faults");
+    assert_eq!(h.tick_s.count(), st.ticks);
+}
