@@ -40,7 +40,13 @@ CLIPPY_ALLOW = -A clippy::needless_range_loop -A clippy::too_many_arguments \
 ## sink's overhead (obs_overhead_pct + routing-balance summary in the
 ## JSON), and a CLI serve smoke runs with --metrics/--trace on and
 ## validates both outputs with the obs-check subcommand (JSONL parses
-## line-by-line, Chrome trace spans balance).
+## line-by-line, Chrome trace spans balance). The decode + serve +
+## quant suites re-run under PALLAS_PRECISION=int8 at 4 threads — the
+## whole stack must hold its contracts with int8 expert banks and KV
+## pages as the default storage — and the serve bench smoke's quant
+## scenario is grepped for the memory claim: bytes_per_session present
+## and the int8/f32 ratio asserted under one half
+## (bytes_ratio_lt_half).
 check:
 	$(CARGO) build --release
 	$(CARGO) test -q
@@ -48,6 +54,7 @@ check:
 	PREFILL_CHUNK=1 $(CARGO) test -q --test serve
 	SPEC_K=4 PALLAS_THREADS=4 $(CARGO) test -q --test serve --test spec
 	PALLAS_AUDIT=1 $(CARGO) test -q --test serve --test spec --test chaos
+	PALLAS_PRECISION=int8 PALLAS_THREADS=4 $(CARGO) test -q --test decode --test serve --test quant
 	PALLAS_THREADS=1 SWITCHHEAD_BENCH_SMOKE=1 $(CARGO) bench --bench step_latency
 	PALLAS_THREADS=1 SWITCHHEAD_BENCH_SMOKE=1 $(CARGO) bench --bench serve_throughput
 	grep -q ttft_p99_ms target/BENCH_serve_throughput.smoke.json
@@ -57,6 +64,8 @@ check:
 	grep -q goodput_tok_s target/BENCH_serve_throughput.smoke.json
 	grep -q obs_overhead_pct target/BENCH_serve_throughput.smoke.json
 	grep -q routing_entropy_min target/BENCH_serve_throughput.smoke.json
+	grep -q bytes_per_session target/BENCH_serve_throughput.smoke.json
+	grep -q '"bytes_ratio_lt_half": true' target/BENCH_serve_throughput.smoke.json
 	PALLAS_THREADS=1 $(CARGO) run --release --bin switchhead -- serve \
 		--config configs/tiny-sh.json --requests 4 --slots 2 --tokens 6 \
 		--metrics target/obs_smoke_metrics.jsonl --trace target/obs_smoke_trace.json

@@ -453,6 +453,93 @@ fn run_hol(engine: &NativeEngine, cfg: &ModelConfig, chunk: usize) -> (usize, f6
     (max_prefill, quantile(&itl, 0.99), itl.iter().cloned().fold(0.0f64, f64::max))
 }
 
+/// Int8 scenario: the same traffic on a second engine built with
+/// `Precision::Int8` (quantized expert weight banks + int8 KV pages,
+/// f32 accumulation). Greedy streams may legitimately flip near-tie
+/// tokens — the logit tolerance band and argmax-agreement contracts
+/// live in `rust/tests/quant.rs` — so the serving assertions here are
+/// the precision-invariant ones: same request set finishing by budget
+/// with the same token counts, the same page high-water (admission is
+/// position-denominated), and the headline memory claim: bytes per
+/// session (weights + peak KV, amortized over slots) under half of
+/// f32.
+fn run_quant(
+    cfg: &ModelConfig,
+    reqs: &[GenRequest],
+    slots: usize,
+    f32_engine: &NativeEngine,
+    f32_pool: &PoolStats,
+    plain: &RunResult,
+) -> Json {
+    let mut qcfg = cfg.clone();
+    qcfg.precision = switchhead::config::Precision::Int8;
+    let qengine = NativeEngine::new(&qcfg, 42).unwrap();
+    assert!(qengine.model.quant.is_some(), "int8 engine lacks a quantized bank");
+    let opts = ServeOpts {
+        slots,
+        queue_cap: reqs.len().max(1),
+        precision: qcfg.precision,
+        ..ServeOpts::default()
+    };
+    let mut sched = Scheduler::new(&qengine, &opts).unwrap();
+    let t0 = Instant::now();
+    drive(&mut sched, reqs.to_vec(), |_r| {}).unwrap();
+    let secs = t0.elapsed().as_secs_f64();
+    let pool = sched.pool_stats();
+    let st = sched.stats().clone();
+    let mut outs = sched.drain_finished();
+    outs.sort_by_key(|o| o.id);
+    assert_eq!(outs.len(), reqs.len(), "int8 serve dropped requests");
+    for o in &outs {
+        assert!(
+            matches!(o.finish, FinishReason::Length),
+            "int8 request {} finished {:?}, expected Length",
+            o.id,
+            o.finish
+        );
+        assert_eq!(
+            o.tokens.len(),
+            plain.token_streams[o.id as usize].len(),
+            "int8 request {} token count diverged from f32",
+            o.id
+        );
+    }
+    assert_eq!(
+        pool.high_water, f32_pool.high_water,
+        "paged admission must be precision-invariant (position-denominated)"
+    );
+
+    let weights_f32 = f32_engine.model.weight_bytes();
+    let weights_int8 = qengine.model.weight_bytes();
+    let bytes_f32 = (weights_f32 + f32_pool.peak_bytes()) as f64 / slots as f64;
+    let bytes_int8 = (weights_int8 + pool.peak_bytes()) as f64 / slots as f64;
+    let ratio = bytes_int8 / bytes_f32.max(1e-9);
+    assert!(
+        2.0 * bytes_int8 < bytes_f32,
+        "int8 bytes/session {bytes_int8:.0} not under half of f32 {bytes_f32:.0}"
+    );
+    let tok_s = st.total_tokens as f64 / secs.max(1e-9);
+    println!(
+        "quant: int8 {tok_s:.0} tok/s, {bytes_int8:.0} bytes/session vs {bytes_f32:.0} f32 \
+         ({:.0}%); KV peak {} vs {} bytes at equal page high-water {}",
+        100.0 * ratio,
+        pool.peak_bytes(),
+        f32_pool.peak_bytes(),
+        pool.high_water,
+    );
+    Json::from_pairs(vec![
+        ("quant_tok_s", num(tok_s)),
+        ("bytes_per_session", num(bytes_int8)),
+        ("bytes_per_session_f32", num(bytes_f32)),
+        ("bytes_ratio", num(ratio)),
+        ("bytes_ratio_lt_half", Json::Bool(2.0 * bytes_int8 < bytes_f32)),
+        ("weight_bytes_int8", num(weights_int8 as f64)),
+        ("weight_bytes_f32", num(weights_f32 as f64)),
+        ("kv_peak_bytes_int8", num(pool.peak_bytes() as f64)),
+        ("kv_peak_bytes_f32", num(f32_pool.peak_bytes() as f64)),
+    ])
+}
+
 fn bench_one(
     name: &str,
     requests: usize,
@@ -491,6 +578,11 @@ fn bench_one(
     // Chaos: same traffic again, now under a seeded fault plan with
     // the per-tick auditor on — measures goodput under injected faults.
     let chaos = run_chaos(&engine, &reqs, slots, &serial);
+
+    // Quantization: same traffic on an int8 engine + int8 KV pool —
+    // asserts the >=2x bytes/session reduction and position-invariant
+    // admission, reports the memory split.
+    let quant = run_quant(&cfg, &reqs, slots, &engine, &pool, &batched);
 
     // Head-of-line interference: a ctx-length prompt next to short
     // decoders, chunked (bounded per-tick prefill) vs monolithic
@@ -578,6 +670,7 @@ fn bench_one(
     ];
     pairs.push(("chaos", chaos));
     pairs.push(("obs", obs));
+    pairs.push(("quant", quant));
     if let Some((_, sj)) = spec {
         pairs.push(("spec", sj));
     }
@@ -650,6 +743,10 @@ fn main() {
             "routing_entropy_min",
             "metrics_records",
             "union_frac",
+            "quant_tok_s",
+            "bytes_per_session",
+            "bytes_per_session_f32",
+            "bytes_ratio_lt_half",
         ] {
             assert!(text.contains(key), "smoke JSON is missing the `{key}` field");
         }

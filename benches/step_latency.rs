@@ -162,6 +162,7 @@ fn bench_decode(names: &[&str], iters: usize) -> Vec<Json> {
             "config",
             "prefill ms",
             "decode ms/tok",
+            "int8 ms/tok",
             "recompute ms/tok",
             "speedup",
             "decode tok/s",
@@ -215,10 +216,26 @@ fn bench_decode(names: &[&str], iters: usize) -> Vec<Json> {
         });
         let full_macs_tok = engine.count_macs().unwrap().total();
 
+        // Int8 variant: the same steady-state decode loop on a
+        // quantized engine (int8 expert banks + int8 KV, f32
+        // accumulation), plus the weight-memory split it buys.
+        let mut qcfg = cfg.clone();
+        qcfg.precision = switchhead::config::Precision::Int8;
+        let qengine = NativeEngine::new(&qcfg, 42).unwrap();
+        let mut qsession = qengine.open_session(b).unwrap();
+        let mut qlogits = qsession.prefill(&prompt).unwrap();
+        let r_qdecode = time(&format!("{name}/decode int8"), 2, iters, || {
+            let next = greedy(&qlogits, b);
+            qlogits = qsession.decode(&next).unwrap();
+        });
+        let weight_bytes_f32 = engine.model.weight_bytes();
+        let weight_bytes_int8 = qengine.model.weight_bytes();
+
         table.push(vec![
             (*name).into(),
             format!("{:.3}", r_prefill.mean_ms),
             format!("{:.3}", r_decode.mean_ms),
+            format!("{:.3}", r_qdecode.mean_ms),
             format!("{:.3}", r_full.mean_ms),
             format!("{:.1}x", r_full.mean_ms / r_decode.mean_ms.max(1e-9)),
             format!("{:.0}", 1000.0 / r_decode.mean_ms.max(1e-9)),
@@ -229,10 +246,14 @@ fn bench_decode(names: &[&str], iters: usize) -> Vec<Json> {
             ("config", str_(name)),
             ("prefill_ms", num(r_prefill.mean_ms)),
             ("decode_ms_tok", num(r_decode.mean_ms)),
+            ("decode_ms_tok_int8", num(r_qdecode.mean_ms)),
             ("recompute_ms_tok", num(r_full.mean_ms)),
             ("decode_tok_s", num(1000.0 / r_decode.mean_ms.max(1e-9))),
             ("macs_tok_decode", num(decode_macs_tok)),
             ("macs_tok_recompute", num(full_macs_tok)),
+            ("weight_bytes_f32", num(weight_bytes_f32 as f64)),
+            ("weight_bytes_int8", num(weight_bytes_int8 as f64)),
+            ("weight_ratio", num(weight_bytes_int8 as f64 / weight_bytes_f32.max(1) as f64)),
         ]));
     }
     table.print();

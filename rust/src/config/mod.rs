@@ -66,6 +66,46 @@ pub enum Task {
     ListOps,
 }
 
+/// Storage precision for the bulk inference tensors (expert weight
+/// banks and paged K/V pages — see [`crate::quant`]). `F32` is the
+/// oracle path; `Int8` stores those tensors as per-row-scaled i8 while
+/// every reduction still accumulates in f32. Routing, layer norms and
+/// positional tables always stay f32, so routing arithmetic itself
+/// adds no quantization error (selections follow the activations,
+/// which quantized matmuls perturb within the documented band).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    #[default]
+    F32,
+    Int8,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> Result<Precision> {
+        Ok(match s {
+            "f32" => Precision::F32,
+            "int8" => Precision::Int8,
+            other => bail!("unknown precision '{other}' (expected f32|int8)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    /// `PALLAS_PRECISION` (f32|int8), defaulting to f32. This is the
+    /// default for any config that does not name a `"precision"` key,
+    /// which is how `make check` re-runs whole suites quantized.
+    pub fn from_env() -> Precision {
+        crate::util::cli::env_parsed("PALLAS_PRECISION", Precision::F32, |s| {
+            Precision::parse(s).map_err(|e| e.to_string())
+        })
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct ModelConfig {
     pub name: String,
@@ -108,6 +148,9 @@ pub struct ModelConfig {
     // run/data settings (Rust only)
     pub dataset: String,
     pub train_steps: usize,
+    /// Inference storage precision (weights + paged KV). JSON key
+    /// `"precision"`; absent → `PALLAS_PRECISION` env → f32.
+    pub precision: Precision,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -127,6 +170,10 @@ impl ModelConfig {
             "lm" => Task::Lm,
             "listops" => Task::ListOps,
             other => bail!("unknown task '{other}'"),
+        };
+        let precision = match j.get_or_str("precision", "").as_str() {
+            "" => Precision::from_env(),
+            s => Precision::parse(s)?,
         };
         Ok(ModelConfig {
             name: j.get_or_str("name", "unnamed"),
@@ -162,6 +209,7 @@ impl ModelConfig {
             ls_n_classes: j.get_or_usize("ls_n_classes", 10),
             dataset: j.get_or_str("dataset", "wt103"),
             train_steps: j.get_or_usize("train_steps", 400),
+            precision,
         })
     }
 
@@ -254,6 +302,18 @@ mod tests {
         j.set("att_k", Json::Num(9.0));
         let cfg = ModelConfig::from_json(&j).unwrap();
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn precision_key_parses_and_rejects_unknown() {
+        let mut j = tiny_json();
+        j.set("precision", Json::Str("int8".into()));
+        assert_eq!(ModelConfig::from_json(&j).unwrap().precision, Precision::Int8);
+        j.set("precision", Json::Str("f32".into()));
+        assert_eq!(ModelConfig::from_json(&j).unwrap().precision, Precision::F32);
+        j.set("precision", Json::Str("fp16".into()));
+        assert!(ModelConfig::from_json(&j).is_err());
+        assert_eq!(Precision::Int8.name(), "int8");
     }
 
     #[test]

@@ -9,7 +9,8 @@
 //! or splits a reduction).
 
 use crate::kernels::pool::{par_rows, threads};
-use crate::kernels::SendPtr;
+use crate::kernels::{scratch, SendPtr};
+use crate::quant::QuantMat;
 
 /// Column-tile width: keeps one output tile plus one weight panel row
 /// L1-resident while the full `kk` reduction streams over them.
@@ -69,6 +70,82 @@ pub(crate) fn row_matmul(or: &mut [f32], xr: &[f32], w: &[f32], m: usize) {
             let ot = &mut or[c0..c0 + cb];
             for (o, &wv) in ot.iter_mut().zip(wr) {
                 *o += xv * wv;
+            }
+        }
+        c0 += cb;
+    }
+}
+
+/// Dequant-on-load blocked matmul: `out[n, m] = x[n, d] @ dequant(w)`,
+/// with `w` stored as per-row-scaled i8 ([`QuantMat`], `rows == d`).
+///
+/// The per-row scale is folded into the activation once up front
+/// (`xs[i, kk] = x[i, kk] * scale[kk]`), so the inner loop multiplies
+/// an f32 activation by a raw i8 code widened to f32 — accumulation is
+/// pure f32 and the weight panel streamed from memory is 4× narrower
+/// than the f32 kernel's. Same row/column-tile sharding and ascending
+/// `kk` reduction order as [`matmul_into`]: the quantized result is
+/// deterministic at every tile size and thread count (it differs from
+/// the f32 result only by the quantization error itself).
+pub fn matmul_q_into(out: &mut [f32], x: &[f32], w: &QuantMat, n: usize, d: usize, m: usize) {
+    assert_eq!(x.len(), n * d, "matmul_q lhs size");
+    assert_eq!(w.rows, d, "matmul_q rhs rows");
+    assert_eq!(w.cols, m, "matmul_q rhs cols");
+    assert_eq!(out.len(), n * m, "matmul_q out size");
+    let mut xs = scratch::take(n * d);
+    for i in 0..n * d {
+        xs[i] = x[i] * w.scale[i % d];
+    }
+    let q = &w.q;
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    if n >= 2 * threads() || m <= TILE_COLS {
+        let xs_ref = &xs;
+        par_rows(n, d * m, |lo, hi| {
+            for i in lo..hi {
+                // SAFETY: rows `lo..hi` are disjoint across chunks.
+                let or = unsafe { out_ptr.row(i * m, m) };
+                row_matmul_q(or, &xs_ref[i * d..(i + 1) * d], q, m);
+            }
+        });
+    } else {
+        // Few rows, wide output: shard the column tiles instead.
+        let tiles = m.div_ceil(TILE_COLS);
+        let xs_ref = &xs;
+        par_rows(tiles, n * d * TILE_COLS, |tlo, thi| {
+            for ti in tlo..thi {
+                let c0 = ti * TILE_COLS;
+                let cb = TILE_COLS.min(m - c0);
+                for i in 0..n {
+                    // SAFETY: (row, column-tile) blocks are disjoint.
+                    let or = unsafe { out_ptr.row(i * m + c0, cb) };
+                    or.fill(0.0);
+                    let xr = &xs_ref[i * d..(i + 1) * d];
+                    for (kk, &xv) in xr.iter().enumerate() {
+                        let wr = &q[kk * m + c0..kk * m + c0 + cb];
+                        for (o, &wv) in or.iter_mut().zip(wr) {
+                            *o += xv * wv as f32;
+                        }
+                    }
+                }
+            }
+        });
+    }
+    scratch::put(xs);
+}
+
+/// Quantized [`row_matmul`]: `or[m] = xs[d] @ q[d, m]` where `xs`
+/// already carries the per-row scales. Shared with the quantized MoE
+/// kernel's per-pair rows.
+pub(crate) fn row_matmul_q(or: &mut [f32], xs: &[f32], q: &[i8], m: usize) {
+    or.fill(0.0);
+    let mut c0 = 0;
+    while c0 < m {
+        let cb = TILE_COLS.min(m - c0);
+        for (kk, &xv) in xs.iter().enumerate() {
+            let wr = &q[kk * m + c0..kk * m + c0 + cb];
+            let ot = &mut or[c0..c0 + cb];
+            for (o, &wv) in ot.iter_mut().zip(wr) {
+                *o += xv * wv as f32;
             }
         }
         c0 += cb;

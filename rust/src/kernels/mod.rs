@@ -25,6 +25,15 @@
 //!   per-op `Vec` allocations.
 //! * [`reference`] — the original scalar kernels, kept as the oracle.
 //!
+//! Each matmul entry point also has a dequant-on-load twin for int8
+//! per-row-scale storage ([`matmul_q_into`], [`moe_matmul_q_into`],
+//! [`moe_matmul_banks_q_into`] — see [`crate::quant`]): identical
+//! sharding and reduction order, weight panels streamed as i8 with the
+//! row scale folded into the activation, all accumulation in f32.
+//! Quantized results are deterministic at every thread count but sit
+//! outside the bit-identity contract below — they differ from f32 by
+//! exactly the quantization error, which `rust/tests/quant.rs` bounds.
+//!
 //! # The bit-identity contract
 //!
 //! f32 addition is order-sensitive, and the checked-in golden vectors
@@ -41,8 +50,8 @@ pub mod pool;
 pub mod reference;
 pub mod scratch;
 
-pub use matmul::matmul_into;
-pub use moe::{moe_matmul_banks_into, moe_matmul_into};
+pub use matmul::{matmul_into, matmul_q_into};
+pub use moe::{moe_matmul_banks_into, moe_matmul_banks_q_into, moe_matmul_into, moe_matmul_q_into};
 pub use pool::{par_rows, set_threads, threads, PAR_MIN_WORK};
 
 /// Raw mutable base pointer that may cross thread boundaries so pool

@@ -19,9 +19,10 @@
 //! batched decode uses it so one fused tick touches each selected
 //! expert matrix once across all sessions and heads.
 
-use crate::kernels::matmul::row_matmul;
+use crate::kernels::matmul::{row_matmul, row_matmul_q};
 use crate::kernels::pool::par_rows;
 use crate::kernels::{scratch, SendPtr};
+use crate::quant::QuantMat;
 
 /// MoE projection (paper Eq. 9-10) into `out[n, cols]` (overwritten):
 /// per token `i`, `sum_j gate[i,j] * (x_i @ experts[idx[i,j]])`.
@@ -135,6 +136,126 @@ pub fn moe_matmul_banks_into(
 
     // Gate application in the original (bank, token, slot) order — the
     // exact per-element accumulation order of the scalar reference.
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    let tmp_ref = &tmp;
+    par_rows(nb * n, k * cols, |lo, hi| {
+        for i in lo..hi {
+            // SAFETY: output rows `lo..hi` are disjoint across chunks.
+            let or = unsafe { out_ptr.row(i * cols, cols) };
+            or.fill(0.0);
+            for j in 0..k {
+                let p = i * k + j;
+                let g = gate[p];
+                let tr = &tmp_ref[p * cols..(p + 1) * cols];
+                for (o, &tv) in or.iter_mut().zip(tr) {
+                    *o += g * tv;
+                }
+            }
+        }
+    });
+    scratch::put(tmp);
+}
+
+/// Quantized [`moe_matmul_into`]: one expert bank stored as
+/// per-row-scaled i8 ([`QuantMat`]). Same grouped dispatch; staging and
+/// gate accumulation stay f32.
+pub fn moe_matmul_q_into(
+    out: &mut [f32],
+    x: &[f32],
+    experts: &[QuantMat],
+    rows: usize,
+    cols: usize,
+    idx: &[usize],
+    gate: &[f32],
+    k: usize,
+) {
+    let n = x.len() / rows;
+    assert_eq!(idx.len(), n * k, "moe_q idx size");
+    moe_matmul_banks_q_into(out, x, &[experts], rows, cols, idx, gate, k, 0);
+}
+
+/// Quantized [`moe_matmul_banks_into`]: identical counting-sorted
+/// grouped dispatch over the (bank, token, slot) union, with each
+/// expert matrix stored as per-row-scaled i8 ([`QuantMat`]).
+///
+/// Scales differ per expert, so the per-pair product scales its
+/// activation row by the *selected* expert's row scales
+/// (`xs[kk] = x[i, kk] * scale_e[kk]`, thread-local scratch) before the
+/// blocked i8 row product — f32 accumulation throughout, staging and
+/// gate passes unchanged from the f32 kernel. Deterministic at every
+/// thread count; differs from the f32 dispatch only by quantization
+/// error.
+#[allow(clippy::too_many_arguments)]
+pub fn moe_matmul_banks_q_into(
+    out: &mut [f32],
+    x: &[f32],
+    banks: &[&[QuantMat]],
+    rows: usize,
+    cols: usize,
+    idx: &[usize],
+    gate: &[f32],
+    k: usize,
+    x_bank_stride: usize,
+) {
+    let nb = banks.len();
+    assert!(nb > 0, "moe_q banks empty");
+    let n = idx.len() / (nb * k);
+    let pairs = nb * n * k;
+    assert_eq!(idx.len(), pairs, "moe_q idx size");
+    assert_eq!(gate.len(), pairs, "moe_q gate size");
+    assert_eq!(out.len(), nb * n * cols, "moe_q out size");
+    if x_bank_stride == 0 {
+        assert_eq!(x.len(), n * rows, "moe_q x size (shared)");
+    } else {
+        assert_eq!(x_bank_stride, n, "moe_q x bank stride");
+        assert_eq!(x.len(), nb * n * rows, "moe_q x size (per bank)");
+    }
+
+    let mut off = vec![0usize; nb + 1];
+    for (b, bank) in banks.iter().enumerate() {
+        off[b + 1] = off[b] + bank.len();
+    }
+    let ne = off[nb];
+
+    let mut cursor = vec![0usize; ne + 1];
+    for (p, &e) in idx.iter().enumerate() {
+        cursor[off[p / (n * k)] + e + 1] += 1;
+    }
+    if crate::obs::routing::enabled() {
+        let active = cursor[1..].iter().filter(|&&c| c > 0).count();
+        crate::obs::routing::record_union(active, ne);
+    }
+    for e in 0..ne {
+        cursor[e + 1] += cursor[e];
+    }
+    let mut order = vec![0u32; pairs];
+    for (p, &e) in idx.iter().enumerate() {
+        let g = off[p / (n * k)] + e;
+        order[cursor[g]] = p as u32;
+        cursor[g] += 1;
+    }
+
+    let mut tmp = scratch::take(pairs * cols);
+    let tmp_ptr = SendPtr(tmp.as_mut_ptr());
+    par_rows(pairs, rows * cols, |lo, hi| {
+        let mut xs = scratch::take(rows);
+        for &p in &order[lo..hi] {
+            let p = p as usize;
+            let b = p / (n * k);
+            let i = (p % (n * k)) / k;
+            // SAFETY: each pair id appears exactly once in `order`, so
+            // staging rows are disjoint across chunks.
+            let or = unsafe { tmp_ptr.row(p * cols, cols) };
+            let xr = &x[(b * x_bank_stride + i) * rows..(b * x_bank_stride + i + 1) * rows];
+            let e = &banks[b][idx[p]];
+            for (s, (&xv, &sc)) in xs.iter_mut().zip(xr.iter().zip(&e.scale)) {
+                *s = xv * sc;
+            }
+            row_matmul_q(or, &xs, &e.q, cols);
+        }
+        scratch::put(xs);
+    });
+
     let out_ptr = SendPtr(out.as_mut_ptr());
     let tmp_ref = &tmp;
     par_rows(nb * n, k * cols, |lo, hi| {

@@ -40,8 +40,12 @@
 //! all, and the accept walk keeps emitted streams bit-identical to
 //! non-speculative decoding. [`obs`] watches all of it —
 //! request-lifecycle traces, online latency histograms and MoE routing
-//! telemetry — without ever changing a stream. `docs/ARCHITECTURE.md`
-//! is the end-to-end tour.
+//! telemetry — without ever changing a stream. [`quant`] gives the
+//! whole stack an int8 storage mode (`--precision int8` /
+//! `PALLAS_PRECISION`): expert weight banks and paged K/V pages stored
+//! as per-row-scaled i8 with every reduction still accumulating in
+//! f32, while the f32 path stays byte-for-byte untouched as the
+//! oracle. `docs/ARCHITECTURE.md` is the end-to-end tour.
 //!
 //! # Artifact-free test tier
 //!
@@ -73,6 +77,7 @@ pub mod kernels;
 pub mod macs;
 pub mod model;
 pub mod obs;
+pub mod quant;
 pub mod runtime;
 pub mod serve;
 pub mod spec;

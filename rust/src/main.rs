@@ -47,8 +47,9 @@ commands:
                 [--artifacts DIR] [--backend pjrt|native]
   generate      --config <json> [--out DIR] [--prompt TEXT] [--tokens N]
                 [--temperature T] [--top-k K] [--seed S] [--artifacts DIR]
-                [--backend pjrt|native]
+                [--backend pjrt|native] [--precision f32|int8]
   probe         --config <json> [--artifacts DIR] [--backend pjrt|native]
+                [--precision f32|int8]
   serve         --config <json> [--requests N] [--slots S] [--queue-cap Q]
                 [--tokens M] [--prompt-len P] [--kv-page C] [--kv-pages P]
                 [--prefill-chunk C] [--arrivals batch|poisson|pareto]
@@ -56,7 +57,7 @@ commands:
                 [--temperature T] [--top-k K] [--seed S] [--init-seed S]
                 [--spec-config <json>] [--spec-k K] [--eos-token T]
                 [--stream] [--faults N[@SEED]] [--audit]
-                [--metrics PATH] [--trace PATH]
+                [--metrics PATH] [--trace PATH] [--precision f32|int8]
                 (native backend only; --slots caps the fused batch width,
                  but admission is also capacity-aware over the paged KV
                  pool: --kv-page sets positions per page, --kv-pages the
@@ -86,7 +87,11 @@ commands:
                  writes a Chrome trace_event JSON (open in Perfetto or
                  chrome://tracing) with one lane per request plus the
                  tick-phase lane — both are off by default and never
-                 change the token streams)
+                 change the token streams. --precision int8 (or the
+                 PALLAS_PRECISION env) stores expert weight banks and
+                 KV pages as per-row-scaled int8 with f32 accumulation
+                 — roughly 4x less weight memory and 2.5-4x less KV,
+                 logits within a small tolerance band of f32)
   obs-check     [--metrics PATH] [--trace PATH]
                 (validate serve observability outputs: the JSONL event
                  stream parses line-by-line, the trace is well-formed
@@ -104,7 +109,15 @@ fn artifact_dir(args: &Args, cfg: &ModelConfig) -> PathBuf {
 }
 
 fn load_cfg(args: &Args) -> Result<ModelConfig> {
-    ModelConfig::load(args.req("config")?)
+    let mut cfg = ModelConfig::load(args.req("config")?)?;
+    // `--precision f32|int8` overrides the config's storage precision
+    // (itself defaulted from the PALLAS_PRECISION env): int8 stores
+    // expert weight banks and KV pages as per-row-scaled i8 with f32
+    // accumulation; f32 is the exact reference path.
+    if let Some(p) = args.get("precision") {
+        cfg.precision = switchhead::config::Precision::parse(p)?;
+    }
+    Ok(cfg)
 }
 
 fn main() -> Result<()> {
@@ -468,6 +481,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_cap: args.usize_or("queue-cap", 16)?,
         kv_page_cols: args.usize_opt("kv-page")?,
         kv_pool_pages: args.usize_opt("kv-pages")?,
+        // One precision governs both sides: the engine's weight banks
+        // (cfg.precision, set above from --precision / the env / the
+        // config file) and the shared KV pool.
+        precision: cfg.precision,
         ..ServeOpts::default()
     };
     if let Some(chunk) = args.usize_opt("prefill-chunk")? {
@@ -621,11 +638,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // pages rather than slots.
     info(&format!(
         "kv pool: peak {} / {} pages ({:.0}% of the pool, {} floats), \
-         {} deferral tick(s)",
+         precision {} ({} bytes/page, {} peak bytes), {} deferral tick(s)",
         ps.high_water,
         ps.max_pages,
         100.0 * ps.high_water as f64 / ps.max_pages.max(1) as f64,
         ps.peak_floats(),
+        ps.precision.name(),
+        ps.bytes_per_page(),
+        ps.peak_bytes(),
         st.deferrals,
     ));
     if st.faults_injected > 0 || st.spec_trips > 0 || opts.audit {

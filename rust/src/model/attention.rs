@@ -65,6 +65,29 @@ pub(crate) fn proj(
     }
 }
 
+/// Quantized [`proj`]: identical dispatch shape and MAC tallies with
+/// the expert bank stored as per-row-scaled i8 ([`QuantProj`]). The
+/// dequant multiply replaces the f32 weight load, so the analytic MAC
+/// accounting is unchanged — only storage and memory traffic differ.
+pub(crate) fn proj_q(
+    x: &[f32],
+    qp: &crate::model::params::QuantProj,
+    idx: &[usize],
+    gate: &[f32],
+    k: usize,
+    macs: &mut MacCounter,
+) -> Vec<f32> {
+    let (rows, cols) = (qp.experts[0].rows, qp.experts[0].cols);
+    let n = x.len() / rows;
+    if qp.moe {
+        macs.proj_moe += (n * k * (rows * cols + cols)) as f64;
+        crate::model::tensor::moe_matmul_q(x, &qp.experts, rows, cols, idx, gate, k)
+    } else {
+        macs.proj_dense += (n * rows * cols) as f64;
+        crate::model::tensor::matmul_q(x, &qp.experts[0], n, rows, cols)
+    }
+}
+
 /// Base additive bias `[b, t, tk]`: causal mask (skipped for pos=none,
 /// the bidirectional encoder) plus the padding key-mask. Identical for
 /// every head of a layer — callers compute it once per layer.

@@ -64,6 +64,60 @@ pub(crate) fn mlp_apply(cfg: &ModelConfig, p: &MlpP, x: &[f32], macs: &mut MacCo
     }
 }
 
+/// Quantized [`mlp_apply`]: weights stream from the int8 bank
+/// (`QuantMlp`) while routing (`w_sel`, taken from the f32 params `p`)
+/// and every accumulation stay f32 — routing adds no quantization
+/// error of its own and only the matmul weight loads dequantize.
+/// MAC tallies match [`mlp_apply`] exactly.
+pub(crate) fn mlp_apply_q(
+    cfg: &ModelConfig,
+    p: &MlpP,
+    qm: &crate::model::params::QuantMlp,
+    x: &[f32],
+    macs: &mut MacCounter,
+) -> Vec<f32> {
+    use crate::model::params::QuantMlp;
+    use crate::model::tensor::{matmul_q, moe_matmul_q};
+    let d = cfg.d_model;
+    let n = x.len() / d;
+    match (p, qm) {
+        (MlpP::Dense { .. }, QuantMlp::Dense { w1, w2 }) => {
+            let f = cfg.d_ff;
+            let mut h = matmul_q(x, w1, n, d, f);
+            for v in h.iter_mut() {
+                *v = v.max(0.0); // relu
+            }
+            macs.mlp += (2 * n * d * f) as f64;
+            let out = matmul_q(&h, w2, n, f, d);
+            scratch::put(h);
+            out
+        }
+        (MlpP::SigmaMoe { w_sel, .. }, QuantMlp::SigmaMoe { w1, w2 }) => {
+            let (e, de, k) = (cfg.mlp_n_experts, cfg.mlp_d_expert, cfg.mlp_k);
+            let (idx, gate, _) = route(x, w_sel, d, e, k, Router::Sigmoid, false, macs);
+            let ones = vec![1.0f32; n];
+            let mut y = scratch::take(n * d);
+            for j in 0..k {
+                let idx_j: Vec<usize> = (0..n).map(|i| idx[i * k + j]).collect();
+                let gate_j: Vec<f32> = (0..n).map(|i| gate[i * k + j]).collect();
+                let mut h = moe_matmul_q(x, w1, d, de, &idx_j, &ones, 1);
+                for v in h.iter_mut() {
+                    *v = v.max(0.0);
+                }
+                let o = moe_matmul_q(&h, w2, de, d, &idx_j, &gate_j, 1);
+                scratch::put(h);
+                macs.mlp += (n * (d * de + de + de * d + d)) as f64;
+                for (yv, ov) in y.iter_mut().zip(&o) {
+                    *yv += ov;
+                }
+                scratch::put(o);
+            }
+            y
+        }
+        _ => unreachable!("quant mlp variant mismatch"),
+    }
+}
+
 /// One pre-LN block: `x += attn(LN1(x)); x += mlp(LN2(x))`.
 #[allow(clippy::too_many_arguments)]
 fn block_apply(

@@ -60,15 +60,21 @@
 //! Keep in lock-step with `python/tools/native_ref.py::Session`.
 
 use crate::config::{ModelConfig, Positional, Task};
-use crate::kernels::{matmul_into, moe_matmul_banks_into, par_rows_mut, scratch};
-use crate::model::attention::proj;
-use crate::model::block::mlp_apply;
-use crate::model::kv_cache::{stream_pages, stream_pages_spec, Kv, KvPool};
-use crate::model::params::{AttnP, DenseP, MoaP, NativeModel, Proj, SwitchHeadP, XlP};
-use crate::model::tensor::{
-    layer_norm, matmul, moe_matmul, rope_rotate, route, sinusoidal_row, softmax_rows, MacCounter,
-    Router,
+use crate::kernels::{
+    matmul_into, matmul_q_into, moe_matmul_banks_into, moe_matmul_banks_q_into, par_rows_mut,
+    scratch,
 };
+use crate::model::attention::{proj, proj_q};
+use crate::model::block::{mlp_apply, mlp_apply_q};
+use crate::model::kv_cache::{stream_pages, stream_pages_spec, Kv, KvPool, StoreView};
+use crate::model::params::{
+    AttnP, DenseP, MoaP, NativeModel, Proj, QuantAttn, QuantProj, SwitchHeadP, XlP,
+};
+use crate::model::tensor::{
+    layer_norm, matmul, matmul_q, moe_matmul, rope_rotate, route, sinusoidal_row, softmax_rows,
+    MacCounter, Router,
+};
+use crate::quant::QuantMat;
 use crate::runtime::api::{Logits, Session, TokenBatch};
 use crate::util::error::{bail, Result};
 
@@ -162,7 +168,12 @@ impl<'m> NativeSession<'m> {
         let cap = cfg.ctx_len();
         let pc = KvPool::default_page_cols(cap);
         let n_streams = rows * cfg.n_layers * cfg.kv_streams();
-        let pool = KvPool::new(pc, cfg.d_head, n_streams * stream_pages(pc, cap, usize::MAX))?;
+        let pool = KvPool::with_precision(
+            pc,
+            cfg.d_head,
+            n_streams * stream_pages(pc, cap, usize::MAX),
+            cfg.precision,
+        )?;
         Self::open_in_pool(model, rows, &pool, None)
     }
 
@@ -324,19 +335,15 @@ impl<'m> NativeSession<'m> {
 
         let scale = (d as f64).sqrt() as f32;
         let mut x = scratch::take(rows * tn * d);
-        for (i, &tok) in tokens.iter().enumerate() {
-            let row = &model.embed[(tok as usize) * d..(tok as usize + 1) * d];
-            let out = &mut x[i * d..(i + 1) * d];
-            for j in 0..d {
-                out[j] = row[j] * scale;
-            }
-        }
+        embed_rows(model, tokens, &mut x, d, scale);
 
-        for (bp, st) in model.layers.iter().zip(self.layers.iter_mut()) {
+        for (li, (bp, st)) in model.layers.iter().zip(self.layers.iter_mut()).enumerate() {
+            let ql = model.quant.as_ref().map(|q| &q.layers[li]);
             let x_ln = layer_norm(&x, &bp.ln1.g, &bp.ln1.b, d);
             let a = match &bp.attn {
                 AttnP::SwitchHead(p) => {
-                    switchhead_decode(cfg, p, st, &x_ln, &geo, &mut self.macs)
+                    let qa = ql.and_then(|l| l.attn.as_ref());
+                    switchhead_decode(cfg, p, qa, st, &x_ln, &geo, &mut self.macs)
                 }
                 AttnP::Dense(p) => dense_decode(cfg, p, st, &x_ln, &geo, &mut self.macs),
                 AttnP::Moa(p) => moa_decode(cfg, p, st, &x_ln, &geo, &mut self.macs),
@@ -347,7 +354,10 @@ impl<'m> NativeSession<'m> {
             }
             scratch::put(a);
             let x_ln2 = layer_norm(&x, &bp.ln2.g, &bp.ln2.b, d);
-            let m = mlp_apply(cfg, &bp.mlp, &x_ln2, &mut self.macs);
+            let m = match ql {
+                Some(l) => mlp_apply_q(cfg, &bp.mlp, &l.mlp, &x_ln2, &mut self.macs),
+                None => mlp_apply(cfg, &bp.mlp, &x_ln2, &mut self.macs),
+            };
             scratch::put(x_ln2);
             for (xv, mv) in x.iter_mut().zip(&m) {
                 *xv += mv;
@@ -364,10 +374,61 @@ impl<'m> NativeSession<'m> {
         let h = layer_norm(&last, &model.ln_f.g, &model.ln_f.b, d);
         scratch::put(last);
         let n_out = NativeModel::n_out(cfg);
-        let logits = matmul(&h, &model.head, rows, d, n_out);
+        let logits = match &model.quant {
+            Some(qm) => matmul_q(&h, &qm.head, rows, d, n_out),
+            None => matmul(&h, &model.head, rows, d, n_out),
+        };
         scratch::put(h);
         self.pos += tn;
         Logits::new(logits, rows, n_out)
+    }
+}
+
+/// Embed `tokens` into the first `tokens.len()` rows of `x`, scaled by
+/// `sqrt(d)`. At int8 precision the lookup dequantizes the quantized
+/// vocab row on the fly (one scale per vocab entry, folded into the
+/// sqrt(d) factor) — the f32 table is never touched.
+fn embed_rows(model: &NativeModel, tokens: &[i32], x: &mut [f32], d: usize, scale: f32) {
+    match &model.quant {
+        None => {
+            for (i, &tok) in tokens.iter().enumerate() {
+                let row = &model.embed[(tok as usize) * d..(tok as usize + 1) * d];
+                let out = &mut x[i * d..(i + 1) * d];
+                for j in 0..d {
+                    out[j] = row[j] * scale;
+                }
+            }
+        }
+        Some(qm) => {
+            for (i, &tok) in tokens.iter().enumerate() {
+                let t = tok as usize;
+                let s = qm.embed.scale[t] * scale;
+                let row = &qm.embed.q[t * d..(t + 1) * d];
+                let out = &mut x[i * d..(i + 1) * d];
+                for j in 0..d {
+                    out[j] = row[j] as f32 * s;
+                }
+            }
+        }
+    }
+}
+
+/// [`proj`]-or-[`proj_q`] dispatch: the quantized bank is used when the
+/// model was built at int8 precision (`qp` threaded from
+/// `NativeModel::quant`), the f32 path otherwise — byte-for-byte the
+/// pre-quantization code, preserving the bit-identity contract.
+fn proj_opt(
+    x: &[f32],
+    p: &Proj,
+    qp: Option<&QuantProj>,
+    idx: &[usize],
+    gate: &[f32],
+    k: usize,
+    macs: &mut MacCounter,
+) -> Vec<f32> {
+    match qp {
+        Some(q) => proj_q(x, q, idx, gate, k, macs),
+        None => proj(x, p, idx, gate, k, macs),
     }
 }
 
@@ -475,7 +536,7 @@ fn attend(
     // columns with lock-free page-table math (`Kv::for_window`, one
     // resolution per contiguous run) over the raw store slices.
     let view = kv.read();
-    let (kst, vst) = view.slices();
+    let store = view.store();
     par_rows_mut(&mut out, dh, 2 * max_width * dh, |ridx, orow| {
         let (bi, ci) = (ridx / tn, ridx % tn);
         let p = pos0 + ci;
@@ -503,43 +564,95 @@ fn attend(
         }
         // Live context columns, oldest first (the full forward's
         // summation order); `for_window` resolves each page once per
-        // contiguous run rather than once per column.
-        kv.for_window(bi, lo, p, |jj, base| {
-            let krow = &kst[base..base + dh];
-            let mut s = 0f32;
-            match xl {
-                Some((u, _, _)) => {
-                    for d0 in 0..dh {
-                        s += (qrow[d0] + u[d0]) * krow[d0];
+        // contiguous run rather than once per column. The f32 arm is
+        // byte-for-byte the pre-quantization code (bit-identity); the
+        // int8 arm dots the raw key codes and folds the column's scale
+        // into the 1/sqrt(dh) factor afterwards — one extra multiply
+        // per column, all accumulation f32.
+        match store {
+            StoreView::F32 { k: kst, .. } => {
+                kv.for_window(bi, lo, p, |jj, base| {
+                    let krow = &kst[base..base + dh];
+                    let mut s = 0f32;
+                    match xl {
+                        Some((u, _, _)) => {
+                            for d0 in 0..dh {
+                                s += (qrow[d0] + u[d0]) * krow[d0];
+                            }
+                        }
+                        None => {
+                            for d0 in 0..dh {
+                                s += qrow[d0] * krow[d0];
+                            }
+                        }
                     }
-                }
-                None => {
-                    for d0 in 0..dh {
-                        s += qrow[d0] * krow[d0];
+                    let mut logit = s * scale;
+                    if let Some((_, vb, r)) = xl {
+                        let dist = p - (lo + jj);
+                        let rrow = &r[dist * dh..(dist + 1) * dh];
+                        let mut pb = 0f32;
+                        for d0 in 0..dh {
+                            pb += (qrow[d0] + vb[d0]) * rrow[d0];
+                        }
+                        logit += pb;
                     }
-                }
+                    logits[tc + jj] = logit;
+                });
             }
-            let mut logit = s * scale;
-            if let Some((_, vb, r)) = xl {
-                let dist = p - (lo + jj);
-                let rrow = &r[dist * dh..(dist + 1) * dh];
-                let mut pb = 0f32;
-                for d0 in 0..dh {
-                    pb += (qrow[d0] + vb[d0]) * rrow[d0];
-                }
-                logit += pb;
+            StoreView::Int8 { k: kq, ks, .. } => {
+                kv.for_window(bi, lo, p, |jj, base| {
+                    let krow = &kq[base..base + dh];
+                    let mut s = 0f32;
+                    match xl {
+                        Some((u, _, _)) => {
+                            for d0 in 0..dh {
+                                s += (qrow[d0] + u[d0]) * krow[d0] as f32;
+                            }
+                        }
+                        None => {
+                            for d0 in 0..dh {
+                                s += qrow[d0] * krow[d0] as f32;
+                            }
+                        }
+                    }
+                    let mut logit = s * (ks[base / dh] * scale);
+                    if let Some((_, vb, r)) = xl {
+                        let dist = p - (lo + jj);
+                        let rrow = &r[dist * dh..(dist + 1) * dh];
+                        let mut pb = 0f32;
+                        for d0 in 0..dh {
+                            pb += (qrow[d0] + vb[d0]) * rrow[d0];
+                        }
+                        logit += pb;
+                    }
+                    logits[tc + jj] = logit;
+                });
             }
-            logits[tc + jj] = logit;
-        });
+        }
         let width = logits.len();
         softmax_rows(&mut logits, width);
-        kv.for_window(bi, lo, p, |jj, base| {
-            let w = logits[tc + jj];
-            let vrow = &vst[base..base + dh];
-            for d0 in 0..dh {
-                orow[d0] += w * vrow[d0];
+        match store {
+            StoreView::F32 { v: vst, .. } => {
+                kv.for_window(bi, lo, p, |jj, base| {
+                    let w = logits[tc + jj];
+                    let vrow = &vst[base..base + dh];
+                    for d0 in 0..dh {
+                        orow[d0] += w * vrow[d0];
+                    }
+                });
             }
-        });
+            StoreView::Int8 { v: vq, vs, .. } => {
+                kv.for_window(bi, lo, p, |jj, base| {
+                    // Fold the column's value scale into its softmax
+                    // weight so the inner loop stays one multiply-add.
+                    let w = logits[tc + jj] * vs[base / dh];
+                    let vrow = &vq[base..base + dh];
+                    for d0 in 0..dh {
+                        orow[d0] += w * vrow[d0] as f32;
+                    }
+                });
+            }
+        }
         scratch::put(logits);
     });
     // The per-query MAC tally from the serial loop, reproduced
@@ -575,11 +688,15 @@ fn xl_tables<'a>(
     Some((xlp.u[hi].as_slice(), xlp.v[hi].as_slice(), r.as_slice()))
 }
 
-/// SwitchHead MoE attention over the cache: route the chunk, project
-/// only the selected experts' K/V (gate-combined into the cache), attend.
+/// SwitchHead MoE attention over the cache: route the chunk (router
+/// weights always f32, so routing itself adds no quantization
+/// error), project only the
+/// selected experts' K/V (gate-combined into the cache; int8 banks via
+/// `qa` when the model is quantized), attend.
 fn switchhead_decode(
     cfg: &ModelConfig,
     p: &SwitchHeadP,
+    qa: Option<&QuantAttn>,
     st: &mut LayerState,
     x_ln: &[f32],
     geo: &Geo,
@@ -597,9 +714,9 @@ fn switchhead_decode(
         };
         let (idx_d, gate_d, _) = route(x_ln, w_sel_d, d, e, k, router, false, macs);
 
-        let mut kh = proj(x_ln, &p.w_k[hi], &idx_s, &gate_s, k, macs);
-        let mut qh = proj(x_ln, &p.w_q[hi], &idx_d, &gate_d, k, macs);
-        let vh = proj(x_ln, &p.w_v[hi], &idx_s, &gate_s, k, macs);
+        let mut kh = proj_opt(x_ln, &p.w_k[hi], qa.map(|q| &q.w_k[hi]), &idx_s, &gate_s, k, macs);
+        let mut qh = proj_opt(x_ln, &p.w_q[hi], qa.map(|q| &q.w_q[hi]), &idx_d, &gate_d, k, macs);
+        let vh = proj_opt(x_ln, &p.w_v[hi], qa.map(|q| &q.w_v[hi]), &idx_s, &gate_s, k, macs);
         if cfg.pos == Positional::Rope {
             rope_rotate(&mut qh, geo.rows, geo.tn, geo.dh, geo.pos0);
             rope_rotate(&mut kh, geo.rows, geo.tn, geo.dh, geo.pos0);
@@ -610,7 +727,7 @@ fn switchhead_decode(
         let xl = xl_tables(p.xl.as_ref(), &mut st.r[hi], hi, d, geo, macs);
         let att = attend(&qh, xl, &st.kv[hi], geo, macs);
         scratch::put(qh);
-        let yo = proj(&att, &p.w_o[hi], &idx_d, &gate_d, k, macs);
+        let yo = proj_opt(&att, &p.w_o[hi], qa.map(|q| &q.w_o[hi]), &idx_d, &gate_d, k, macs);
         scratch::put(att);
         for (yv, ov) in y.iter_mut().zip(&yo) {
             *yv += ov;
@@ -782,13 +899,7 @@ fn step_batched_impl(
     let d = cfg.d_model;
     let scale = (d as f64).sqrt() as f32;
     let mut x = scratch::take(n * d);
-    for (i, &tok) in tokens.iter().enumerate() {
-        let row = &model.embed[(tok as usize) * d..(tok as usize + 1) * d];
-        let out = &mut x[i * d..(i + 1) * d];
-        for j in 0..d {
-            out[j] = row[j] * scale;
-        }
-    }
+    embed_rows(model, tokens, &mut x, d, scale);
 
     // Per-token-uniform work lands here and is split by token-row share
     // at the end; session-position-dependent work (attention core, XL
@@ -796,10 +907,12 @@ fn step_batched_impl(
     let mut step = MacCounter::default();
     for li in 0..cfg.n_layers {
         let bp = &model.layers[li];
+        let ql = model.quant.as_ref().map(|q| &q.layers[li]);
         let x_ln = layer_norm(&x, &bp.ln1.g, &bp.ln1.b, d);
         let a = match &bp.attn {
             AttnP::SwitchHead(p) => {
-                switchhead_step(cfg, p, sessions, &offsets, widths, li, &x_ln, &mut step)
+                let qa = ql.and_then(|l| l.attn.as_ref());
+                switchhead_step(cfg, p, qa, sessions, &offsets, widths, li, &x_ln, &mut step)
             }
             AttnP::Dense(p) => {
                 dense_step(cfg, p, sessions, &offsets, widths, li, &x_ln, &mut step)
@@ -812,7 +925,10 @@ fn step_batched_impl(
         }
         scratch::put(a);
         let x_ln2 = layer_norm(&x, &bp.ln2.g, &bp.ln2.b, d);
-        let m = mlp_apply(cfg, &bp.mlp, &x_ln2, &mut step);
+        let m = match ql {
+            Some(l) => mlp_apply_q(cfg, &bp.mlp, &l.mlp, &x_ln2, &mut step),
+            None => mlp_apply(cfg, &bp.mlp, &x_ln2, &mut step),
+        };
         scratch::put(x_ln2);
         for (xv, mv) in x.iter_mut().zip(&m) {
             *xv += mv;
@@ -855,7 +971,10 @@ fn step_batched_impl(
     let h = layer_norm(&last, &model.ln_f.g, &model.ln_f.b, d);
     scratch::put(last);
     let n_out = NativeModel::n_out(cfg);
-    let logits = matmul(&h, &model.head, out_rows, d, n_out);
+    let logits = match &model.quant {
+        Some(qm) => matmul_q(&h, &qm.head, out_rows, d, n_out),
+        None => matmul(&h, &model.head, out_rows, d, n_out),
+    };
     scratch::put(h);
 
     let mut out = Vec::with_capacity(sessions.len());
@@ -879,11 +998,15 @@ fn step_batched_impl(
 /// ([`moe_matmul_banks_into`]); dense ones as one blocked matmul per
 /// head. `x_bank_stride == 0` shares `x` across heads (Q/K/V);
 /// `x_bank_stride == n` gives each head its own block (O, over the
-/// per-head attended rows).
+/// per-head attended rows). `qprojs` carries the int8 banks when the
+/// model is quantized — the same union dispatch runs through the
+/// dequant-on-load kernels, MAC tallies unchanged.
+#[allow(clippy::too_many_arguments)]
 fn proj_heads(
     x: &[f32],
     x_bank_stride: usize,
     projs: &[Proj],
+    qprojs: Option<&[QuantProj]>,
     idx: &[usize],
     gate: &[f32],
     k: usize,
@@ -894,14 +1017,25 @@ fn proj_heads(
     let n = if x_bank_stride == 0 { x.len() / rows } else { x_bank_stride };
     let mut out = scratch::take(h * n * cols);
     if projs[0].moe {
-        let banks: Vec<&[Vec<f32>]> = projs.iter().map(|p| p.experts.as_slice()).collect();
-        moe_matmul_banks_into(&mut out, x, &banks, rows, cols, idx, gate, k, x_bank_stride);
+        match qprojs {
+            Some(qs) => {
+                let banks: Vec<&[QuantMat]> = qs.iter().map(|q| q.experts.as_slice()).collect();
+                moe_matmul_banks_q_into(&mut out, x, &banks, rows, cols, idx, gate, k, x_bank_stride);
+            }
+            None => {
+                let banks: Vec<&[Vec<f32>]> = projs.iter().map(|p| p.experts.as_slice()).collect();
+                moe_matmul_banks_into(&mut out, x, &banks, rows, cols, idx, gate, k, x_bank_stride);
+            }
+        }
         macs.proj_moe += (h * n * k * (rows * cols + cols)) as f64;
     } else {
-        for (hi, pr) in projs.iter().enumerate() {
+        for hi in 0..h {
             let xb = if x_bank_stride == 0 { x } else { &x[hi * n * rows..(hi + 1) * n * rows] };
             let ob = &mut out[hi * n * cols..(hi + 1) * n * cols];
-            matmul_into(ob, xb, &pr.experts[0], n, rows, cols);
+            match qprojs {
+                Some(qs) => matmul_q_into(ob, xb, &qs[hi].experts[0], n, rows, cols),
+                None => matmul_into(ob, xb, &projs[hi].experts[0], n, rows, cols),
+            }
         }
         macs.proj_dense += (h * n * rows * cols) as f64;
     }
@@ -972,6 +1106,7 @@ fn attend_q_step(
 fn switchhead_step(
     cfg: &ModelConfig,
     p: &SwitchHeadP,
+    qa: Option<&QuantAttn>,
     sessions: &mut [&mut NativeSession<'_>],
     offsets: &[usize],
     widths: &[usize],
@@ -1008,9 +1143,11 @@ fn switchhead_step(
         crate::obs::routing::record_route(li, &[0, 3], &idx_d, e);
     }
 
-    let mut kh = proj_heads(x_ln, 0, &p.w_k, &idx_s, &gate_s, k, step);
-    let mut qh = proj_heads(x_ln, 0, &p.w_q, &idx_d, &gate_d, k, step);
-    let vh = proj_heads(x_ln, 0, &p.w_v, &idx_s, &gate_s, k, step);
+    let mut kh =
+        proj_heads(x_ln, 0, &p.w_k, qa.map(|q| q.w_k.as_slice()), &idx_s, &gate_s, k, step);
+    let mut qh =
+        proj_heads(x_ln, 0, &p.w_q, qa.map(|q| q.w_q.as_slice()), &idx_d, &gate_d, k, step);
+    let vh = proj_heads(x_ln, 0, &p.w_v, qa.map(|q| q.w_v.as_slice()), &idx_s, &gate_s, k, step);
     let mut att = scratch::take(h * n * dh);
     for hi in 0..h {
         let span = hi * n * dh..(hi + 1) * n * dh;
@@ -1040,7 +1177,7 @@ fn switchhead_step(
     scratch::put(qh);
     scratch::put(vh);
 
-    let yo = proj_heads(&att, n, &p.w_o, &idx_d, &gate_d, k, step);
+    let yo = proj_heads(&att, n, &p.w_o, qa.map(|q| q.w_o.as_slice()), &idx_d, &gate_d, k, step);
     scratch::put(att);
     // Head-order accumulation — the sequential path's summation order.
     let mut y = scratch::take(n * d);

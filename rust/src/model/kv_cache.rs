@@ -18,11 +18,15 @@
 //!
 //! # Structure
 //!
-//! * [`KvPool`] — the shared block pool: two flat f32 stores (K and V,
-//!   `max_pages * page_cols * d_head` floats each, materialized
-//!   lazily), a LIFO free list of recycled page ids, and the
-//!   reservation counter capacity-aware admission runs on. Cheap to
-//!   clone (an `Arc` handle); all mutation is behind one mutex.
+//! * [`KvPool`] — the shared block pool: two flat element stores (K
+//!   and V, `max_pages * page_cols * d_head` elements each,
+//!   materialized lazily), a LIFO free list of recycled page ids, and
+//!   the reservation counter capacity-aware admission runs on. Cheap
+//!   to clone (an `Arc` handle); all mutation is behind one mutex. The
+//!   element width is set by the pool's [`Precision`]: f32 stores
+//!   4-byte floats, int8 stores 1-byte codes plus one f32 scale per
+//!   K/V *column* (quantized on push, f32-accumulated on read — see
+//!   [`crate::quant`]).
 //! * [`Kv`] — one attention stream group (one layer × one attention
 //!   matrix) of one session: per row, a page table mapping logical
 //!   page index `pos / page_cols` to a pool page id. Pushes append at
@@ -40,6 +44,19 @@
 //!   ascending position order) to the same column bytes. The decode/serve
 //!   equivalence suites (`rust/tests/decode.rs`, `rust/tests/serve.rs`)
 //!   therefore pin paged decode to the full-window forward unchanged.
+//!   An int8 pool keeps the determinism half of this contract: a
+//!   pushed column's codes and scale are a pure function of its f32
+//!   input, so chunked vs monolithic prefill (and speculative rollback
+//!   re-pushes) still produce byte-identical stores — only the f32 ≡
+//!   full-forward half is relaxed, to the quantization tolerance band.
+//! * **Position-denominated capacity.** Pages hold `page_cols` K/V
+//!   *positions* regardless of element width — [`stream_pages`],
+//!   [`stream_pages_spec`] and every reservation/admission count is
+//!   pure position arithmetic, so an int8 pool holds exactly the same
+//!   positions per page (pinned by
+//!   `int8_pages_hold_same_positions_per_page`) and the `pool_demand`
+//!   reservation invariant is precision-invariant. Only the *bytes*
+//!   behind a page shrink ([`PoolStats::bytes_per_page`]).
 //! * **Page lifetime.** A page is owned by exactly one stream from
 //!   allocation to the free that retires it (window slide, or
 //!   [`Kv`]'s `Drop`, which returns every held page). The free list
@@ -63,6 +80,8 @@
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex, MutexGuard};
 
+use crate::config::Precision;
+use crate::quant::quantize_row_into;
 use crate::util::error::{bail, Result};
 
 /// Worst-case pages a single stream can hold at once when writing
@@ -113,17 +132,36 @@ struct Geom {
     page_cols: usize,
     dh: usize,
     max_pages: usize,
+    precision: Precision,
 }
 
-/// Mutable pool state (behind the handle's mutex). `k`/`v` hold
-/// `materialized * page_cols * dh` floats each; page `p` owns the span
-/// `[p * page_cols * dh, (p + 1) * page_cols * dh)` of both.
+/// The pool's element stores — the only place element width exists.
+/// Page/position arithmetic everywhere else is width-agnostic. Int8
+/// keeps one f32 scale per K column and per V column (global column
+/// index = element offset / `dh`), written by the quantizing push and
+/// consumed by the attention core's f32 accumulation.
+enum Store {
+    F32 {
+        k: Vec<f32>,
+        v: Vec<f32>,
+    },
+    Int8 {
+        k: Vec<i8>,
+        v: Vec<i8>,
+        ks: Vec<f32>,
+        vs: Vec<f32>,
+    },
+}
+
+/// Mutable pool state (behind the handle's mutex). The stores hold
+/// `materialized * page_cols * dh` elements each; page `p` owns the
+/// element span `[p * page_cols * dh, (p + 1) * page_cols * dh)` of
+/// both K and V (and, at int8, the matching `page_cols` scales).
 struct PoolInner {
-    k: Vec<f32>,
-    v: Vec<f32>,
+    store: Store,
     /// Recycled page ids, LIFO so reuse stays cache-warm.
     free: Vec<u32>,
-    /// Pages whose backing floats exist (monotone; never shrinks).
+    /// Pages whose backing elements exist (monotone; never shrinks).
     materialized: usize,
     in_use: usize,
     /// Peak of `in_use` over the pool's life — the measured memory
@@ -143,9 +181,20 @@ impl PoolInner {
                 }
                 let pid = self.materialized as u32;
                 self.materialized += 1;
-                let floats = self.materialized * geom.page_cols * geom.dh;
-                self.k.resize(floats, 0.0);
-                self.v.resize(floats, 0.0);
+                let elems = self.materialized * geom.page_cols * geom.dh;
+                match &mut self.store {
+                    Store::F32 { k, v } => {
+                        k.resize(elems, 0.0);
+                        v.resize(elems, 0.0);
+                    }
+                    Store::Int8 { k, v, ks, vs } => {
+                        k.resize(elems, 0);
+                        v.resize(elems, 0);
+                        let cols = self.materialized * geom.page_cols;
+                        ks.resize(cols, 0.0);
+                        vs.resize(cols, 0.0);
+                    }
+                }
                 pid
             }
         };
@@ -161,14 +210,19 @@ impl PoolInner {
     }
 }
 
-/// Point-in-time pool counters (pages). Floats follow via
-/// [`floats_per_page`](PoolStats::floats_per_page): each page stores
-/// `page_cols` K columns *and* `page_cols` V columns of `dh` floats.
+/// Point-in-time pool counters (pages). Each page stores `page_cols` K
+/// columns *and* `page_cols` V columns of `dh` elements; element width
+/// (and the physical bytes a page costs) follows from `precision` via
+/// [`bytes_per_page`](PoolStats::bytes_per_page), while
+/// [`floats_per_page`](PoolStats::floats_per_page) stays the
+/// width-independent f32-equivalent measure (positions × dh × 2) the
+/// occupancy comparisons are denominated in.
 #[derive(Debug, Clone, Copy)]
 pub struct PoolStats {
     pub page_cols: usize,
     pub dh: usize,
     pub max_pages: usize,
+    pub precision: Precision,
     pub materialized: usize,
     pub in_use: usize,
     pub high_water: usize,
@@ -179,16 +233,36 @@ pub struct PoolStats {
 }
 
 impl PoolStats {
-    /// K + V floats one page stores.
+    /// K + V *elements* one page stores (= floats at f32 precision —
+    /// the f32-equivalent page size, independent of element width).
     pub fn floats_per_page(&self) -> usize {
         2 * self.page_cols * self.dh
     }
 
-    /// Peak floats ever live at once (the paged analog of "N
-    /// preallocated rings") — what the serve CLI's `kv pool:` line and
-    /// the serve bench's `paged_peak_kv_floats` report.
+    /// Peak f32-equivalent elements ever live at once (the paged
+    /// analog of "N preallocated rings") — what the serve CLI's
+    /// `kv pool:` line and the serve bench's `paged_peak_kv_floats`
+    /// report. Position-denominated: identical across precisions for
+    /// the same push sequence.
     pub fn peak_floats(&self) -> usize {
         self.high_water * self.floats_per_page()
+    }
+
+    /// Physical bytes one page costs at this pool's precision: f32
+    /// pages store 4 bytes per element; int8 pages store 1 byte per
+    /// element plus one f32 scale per K column and per V column.
+    pub fn bytes_per_page(&self) -> usize {
+        match self.precision {
+            Precision::F32 => 4 * self.floats_per_page(),
+            Precision::Int8 => self.floats_per_page() + 2 * self.page_cols * 4,
+        }
+    }
+
+    /// Peak physical bytes ever live at once — the quantized-occupancy
+    /// number the serve CLI's `kv precision:` line and the benches'
+    /// `bytes_per_session` report.
+    pub fn peak_bytes(&self) -> usize {
+        self.high_water * self.bytes_per_page()
     }
 }
 
@@ -201,19 +275,39 @@ pub struct KvPool {
 }
 
 impl KvPool {
-    /// A pool of at most `max_pages` pages, each holding `page_cols`
-    /// K/V columns of `dh` floats. Backing memory is materialized
-    /// lazily, page by page, so a large `max_pages` costs nothing
-    /// until sessions actually write.
+    /// A f32 pool of at most `max_pages` pages, each holding
+    /// `page_cols` K/V columns of `dh` floats. Backing memory is
+    /// materialized lazily, page by page, so a large `max_pages` costs
+    /// nothing until sessions actually write.
     pub fn new(page_cols: usize, dh: usize, max_pages: usize) -> Result<KvPool> {
+        KvPool::with_precision(page_cols, dh, max_pages, Precision::F32)
+    }
+
+    /// [`KvPool::new`] with an explicit element precision. The pool's
+    /// precision governs storage for every stream in it: pushes into
+    /// an int8 pool quantize each K/V column (one scale per column),
+    /// and the attention core dispatches on [`KvRead::store`]. Page
+    /// counts, reservations and admission are position-denominated and
+    /// identical across precisions.
+    pub fn with_precision(
+        page_cols: usize,
+        dh: usize,
+        max_pages: usize,
+        precision: Precision,
+    ) -> Result<KvPool> {
         if page_cols == 0 || dh == 0 || max_pages == 0 {
             bail!("KvPool: page_cols, dh and max_pages must all be >= 1");
         }
+        let store = match precision {
+            Precision::F32 => Store::F32 { k: Vec::new(), v: Vec::new() },
+            Precision::Int8 => {
+                Store::Int8 { k: Vec::new(), v: Vec::new(), ks: Vec::new(), vs: Vec::new() }
+            }
+        };
         Ok(KvPool {
-            geom: Geom { page_cols, dh, max_pages },
+            geom: Geom { page_cols, dh, max_pages, precision },
             inner: Arc::new(Mutex::new(PoolInner {
-                k: Vec::new(),
-                v: Vec::new(),
+                store,
                 free: Vec::new(),
                 materialized: 0,
                 in_use: 0,
@@ -240,6 +334,10 @@ impl KvPool {
 
     pub fn max_pages(&self) -> usize {
         self.geom.max_pages
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.geom.precision
     }
 
     /// [`stream_pages`] with this pool's page width.
@@ -280,6 +378,7 @@ impl KvPool {
             page_cols: self.geom.page_cols,
             dh: self.geom.dh,
             max_pages: self.geom.max_pages,
+            precision: self.geom.precision,
             materialized: inner.materialized,
             in_use: inner.in_use,
             high_water: inner.high_water,
@@ -393,8 +492,20 @@ impl Kv {
                 let pid = st.pages[lp - st.first_lp] as usize;
                 let dst = (pid * pc + p % pc) * dh;
                 let src = (bi * tn + ci) * dh;
-                inner.k[dst..dst + dh].copy_from_slice(&kh[src..src + dh]);
-                inner.v[dst..dst + dh].copy_from_slice(&vh[src..src + dh]);
+                match &mut inner.store {
+                    Store::F32 { k, v } => {
+                        k[dst..dst + dh].copy_from_slice(&kh[src..src + dh]);
+                        v[dst..dst + dh].copy_from_slice(&vh[src..src + dh]);
+                    }
+                    Store::Int8 { k, v, ks, vs } => {
+                        // One scale per column; codes and scale are a
+                        // pure function of the f32 input, so re-pushes
+                        // (chunk replay, speculative rollback) write
+                        // byte-identical pages.
+                        ks[dst / dh] = quantize_row_into(&mut k[dst..dst + dh], &kh[src..src + dh]);
+                        vs[dst / dh] = quantize_row_into(&mut v[dst..dst + dh], &vh[src..src + dh]);
+                    }
+                }
             }
         }
     }
@@ -562,10 +673,45 @@ impl Drop for Kv {
 pub struct KvRead<'a>(MutexGuard<'a, PoolInner>);
 
 impl KvRead<'_> {
-    /// `(k_store, v_store)` — index with [`Kv::locate`] offsets.
+    /// `(k_store, v_store)` of a **f32** pool — index with
+    /// [`Kv::locate`] offsets. Panics on an int8 pool; precision-aware
+    /// readers use [`store`](KvRead::store) instead.
     pub fn slices(&self) -> (&[f32], &[f32]) {
-        (self.0.k.as_slice(), self.0.v.as_slice())
+        match &self.0.store {
+            Store::F32 { k, v } => (k.as_slice(), v.as_slice()),
+            Store::Int8 { .. } => {
+                panic!("KvRead::slices on an int8 pool — dispatch on KvRead::store")
+            }
+        }
     }
+
+    /// Precision-dispatched view of the stores. Element offsets from
+    /// [`Kv::locate`] / [`Kv::for_window`] index `k`/`v` identically
+    /// in both arms; at int8 the column's scale sits at
+    /// `offset / dh` in `ks`/`vs`.
+    pub fn store(&self) -> StoreView<'_> {
+        match &self.0.store {
+            Store::F32 { k, v } => StoreView::F32 { k, v },
+            Store::Int8 { k, v, ks, vs } => StoreView::Int8 { k, v, ks, vs },
+        }
+    }
+}
+
+/// Borrowed, precision-tagged K/V stores (see [`KvRead::store`]).
+#[derive(Clone, Copy)]
+pub enum StoreView<'a> {
+    F32 {
+        k: &'a [f32],
+        v: &'a [f32],
+    },
+    Int8 {
+        k: &'a [i8],
+        v: &'a [i8],
+        /// Per-K-column scales, indexed by element offset / `dh`.
+        ks: &'a [f32],
+        /// Per-V-column scales, indexed by element offset / `dh`.
+        vs: &'a [f32],
+    },
 }
 
 #[cfg(test)]
@@ -782,6 +928,63 @@ mod tests {
         let dup = kv.streams[0].pages[0];
         kv.streams[1].pages[0] = dup;
         assert!(kv.audit(10).is_err(), "duplicate page id must fail the audit");
+    }
+
+    /// Satellite pin: capacity is position-denominated, not
+    /// byte-denominated. An int8 pool must hold exactly the same
+    /// *positions* per page as a f32 twin for the same push sequence —
+    /// identical pages_held at every step, identical high water,
+    /// identical `stream_pages` bounds — while each page's physical
+    /// bytes shrink, and every quantized column must round-trip within
+    /// its scale/2 bound.
+    #[test]
+    fn int8_pages_hold_same_positions_per_page() {
+        // dh = 8: the int8 byte ratio per column is (dh + 4) / (4 * dh)
+        // = 0.375, strictly under the < 0.5 assertion below (dh = 4
+        // would sit exactly at 0.5).
+        let (pc, dh, cap) = (3usize, 8usize, 8usize);
+        let pf = KvPool::new(pc, dh, 32).unwrap();
+        let pq = KvPool::with_precision(pc, dh, 32, Precision::Int8).unwrap();
+        assert_eq!(pf.precision(), Precision::F32);
+        assert_eq!(pq.precision(), Precision::Int8);
+        let mut kf = Kv::new(&pf, 1, cap);
+        let mut kq = Kv::new(&pq, 1, cap);
+        let col = |p: usize| -> Vec<f32> {
+            (0..dh).map(|j| ((p * 7 + j) as f32 - 5.0) * 0.25).collect()
+        };
+        for p in 0..20usize {
+            kf.push(&col(p), &col(p), 1, p);
+            kq.push(&col(p), &col(p), 1, p);
+            assert_eq!(kf.pages_held(), kq.pages_held(), "pages diverged at p={p}");
+            assert_eq!(kf.locate(0, p), kq.locate(0, p), "offsets diverged at p={p}");
+            // The quantized column reconstructs within scale/2.
+            let view = kq.read();
+            match view.store() {
+                StoreView::Int8 { k, ks, .. } => {
+                    let at = kq.locate(0, p);
+                    let s = ks[at / dh];
+                    let want = col(p);
+                    for j in 0..dh {
+                        assert!((k[at + j] as f32 * s - want[j]).abs() <= s / 2.0 + 1e-7);
+                    }
+                }
+                StoreView::F32 { .. } => panic!("int8 pool must expose an int8 store"),
+            }
+        }
+        let (sf, sq) = (pf.stats(), pq.stats());
+        assert_eq!(sf.high_water, sq.high_water, "page high water must match");
+        assert_eq!(sf.peak_floats(), sq.peak_floats(), "f32-equivalent peak must match");
+        assert!(
+            2 * sq.peak_bytes() < sf.peak_bytes(),
+            "int8 peak bytes {} not < half of f32 {}",
+            sq.peak_bytes(),
+            sf.peak_bytes()
+        );
+        assert_eq!(
+            stream_pages(pc, cap, usize::MAX),
+            pq.stream_pages(cap, usize::MAX),
+            "reservation math is precision-invariant"
+        );
     }
 
     #[test]

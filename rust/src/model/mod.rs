@@ -30,7 +30,9 @@
 //! * [`kv_cache`] — the paged expert-sparse KV store: a shared
 //!   [`KvPool`] of fixed-size K/V pages (free list + reservations for
 //!   capacity-aware admission) and per-session page tables with
-//!   `ctx_len`-window lifetime.
+//!   `ctx_len`-window lifetime. Pages store f32 or per-column-scaled
+//!   int8 columns ([`crate::config::Precision`]); capacity stays
+//!   position-denominated either way.
 //! * [`decode`] — [`NativeSession`], the incremental decoder over the
 //!   paged KV cache behind [`crate::runtime::Session`], plus
 //!   [`decode_batched`], the fused multi-session step the `serve`
@@ -57,6 +59,6 @@ pub mod tensor;
 
 pub use decode::{decode_batched, step_batched, step_batched_full, NativeSession};
 pub use engine::NativeEngine;
-pub use kv_cache::{KvPool, PoolStats};
-pub use params::NativeModel;
+pub use kv_cache::{KvPool, PoolStats, StoreView};
+pub use params::{NativeModel, QuantModel};
 pub use tensor::MacCounter;

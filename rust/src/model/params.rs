@@ -12,8 +12,9 @@
 //! [`NativeModel::param_count`] agrees with `macs::param_count` (pinned
 //! by a property test).
 
-use crate::config::{Family, MlpType, ModelConfig, Positional, Task};
+use crate::config::{Family, MlpType, ModelConfig, Positional, Precision, Task};
 use crate::model::tensor::draw_init;
+use crate::quant::QuantMat;
 use crate::util::rng::Pcg;
 
 /// PRNG stream tag for parameter initialization (mirrored in Python).
@@ -114,13 +115,168 @@ pub struct BlockP {
     pub mlp: MlpP,
 }
 
+/// Int8 twin of a [`Proj`]: same expert bank, per-row-scaled codes.
+pub struct QuantProj {
+    pub experts: Vec<QuantMat>,
+    pub moe: bool,
+}
+
+impl QuantProj {
+    fn from_proj(p: &Proj) -> QuantProj {
+        QuantProj {
+            experts: p.experts.iter().map(|e| QuantMat::from_f32(e, p.rows, p.cols)).collect(),
+            moe: p.moe,
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        self.experts.iter().map(QuantMat::bytes).sum()
+    }
+
+    fn numel(&self) -> usize {
+        self.experts.iter().map(QuantMat::numel).sum()
+    }
+}
+
+/// Int8 twins of a layer's MLP weights. Routers (`w_sel`) stay f32 in
+/// [`MlpP`] — selections are precision-invariant.
+pub enum QuantMlp {
+    Dense { w1: QuantMat, w2: QuantMat },
+    SigmaMoe { w1: Vec<QuantMat>, w2: Vec<QuantMat> },
+}
+
+impl QuantMlp {
+    fn bytes(&self) -> usize {
+        match self {
+            QuantMlp::Dense { w1, w2 } => w1.bytes() + w2.bytes(),
+            QuantMlp::SigmaMoe { w1, w2 } => {
+                w1.iter().map(QuantMat::bytes).sum::<usize>()
+                    + w2.iter().map(QuantMat::bytes).sum::<usize>()
+            }
+        }
+    }
+
+    fn numel(&self) -> usize {
+        match self {
+            QuantMlp::Dense { w1, w2 } => w1.numel() + w2.numel(),
+            QuantMlp::SigmaMoe { w1, w2 } => {
+                w1.iter().map(QuantMat::numel).sum::<usize>()
+                    + w2.iter().map(QuantMat::numel).sum::<usize>()
+            }
+        }
+    }
+}
+
+/// Int8 twins of a SwitchHead layer's K/Q/V/O banks (per head).
+/// Routers, layer norms and XL tables stay f32; Dense/MoA attention
+/// weights are not quantized (their decode paths stay f32 — they still
+/// get int8 K/V through the paged pool).
+pub struct QuantAttn {
+    pub w_k: Vec<QuantProj>,
+    pub w_q: Vec<QuantProj>,
+    pub w_v: Vec<QuantProj>,
+    pub w_o: Vec<QuantProj>,
+}
+
+impl QuantAttn {
+    fn bytes(&self) -> usize {
+        [&self.w_k, &self.w_q, &self.w_v, &self.w_o]
+            .iter()
+            .map(|ps| ps.iter().map(QuantProj::bytes).sum::<usize>())
+            .sum()
+    }
+
+    fn numel(&self) -> usize {
+        [&self.w_k, &self.w_q, &self.w_v, &self.w_o]
+            .iter()
+            .map(|ps| ps.iter().map(QuantProj::numel).sum::<usize>())
+            .sum()
+    }
+}
+
+pub struct QuantLayer {
+    pub attn: Option<QuantAttn>,
+    pub mlp: QuantMlp,
+}
+
+/// Int8 copies of the bulk inference tensors, built AFTER [`NativeModel::init`]
+/// from the final f32 weights — the `INIT_STREAM` draw-order golden
+/// contract is untouched, and the f32 tensors stay resident as the
+/// full-forward oracle. Decode paths use these when present.
+pub struct QuantModel {
+    pub embed: QuantMat, // per vocab-row scale (lookup side)
+    pub head: QuantMat,  // per d-row scale (matmul side)
+    pub layers: Vec<QuantLayer>,
+}
+
+impl QuantModel {
+    fn from_layers(cfg: &ModelConfig, embed: &[f32], head: &[f32], layers: &[BlockP]) -> QuantModel {
+        let d = cfg.d_model;
+        let n_out = NativeModel::n_out(cfg);
+        QuantModel {
+            embed: QuantMat::from_f32(embed, cfg.vocab_size, d),
+            head: QuantMat::from_f32(head, d, n_out),
+            layers: layers
+                .iter()
+                .map(|bp| QuantLayer {
+                    attn: match &bp.attn {
+                        AttnP::SwitchHead(p) => Some(QuantAttn {
+                            w_k: p.w_k.iter().map(QuantProj::from_proj).collect(),
+                            w_q: p.w_q.iter().map(QuantProj::from_proj).collect(),
+                            w_v: p.w_v.iter().map(QuantProj::from_proj).collect(),
+                            w_o: p.w_o.iter().map(QuantProj::from_proj).collect(),
+                        }),
+                        AttnP::Dense(_) | AttnP::Moa(_) => None,
+                    },
+                    mlp: match &bp.mlp {
+                        MlpP::Dense { w1, w2 } => QuantMlp::Dense {
+                            w1: QuantMat::from_f32(w1, d, cfg.d_ff),
+                            w2: QuantMat::from_f32(w2, cfg.d_ff, d),
+                        },
+                        MlpP::SigmaMoe { w1, w2, .. } => QuantMlp::SigmaMoe {
+                            w1: w1.iter().map(|e| QuantMat::from_f32(e, d, cfg.mlp_d_expert)).collect(),
+                            w2: w2.iter().map(|e| QuantMat::from_f32(e, cfg.mlp_d_expert, d)).collect(),
+                        },
+                    },
+                })
+                .collect(),
+        }
+    }
+
+    /// Stored bytes of the quantized tensors (codes + row scales).
+    pub fn bytes(&self) -> usize {
+        self.embed.bytes()
+            + self.head.bytes()
+            + self
+                .layers
+                .iter()
+                .map(|l| l.attn.as_ref().map(QuantAttn::bytes).unwrap_or(0) + l.mlp.bytes())
+                .sum::<usize>()
+    }
+
+    /// f32 parameters the quantized tensors replace.
+    pub fn params_covered(&self) -> usize {
+        self.embed.numel()
+            + self.head.numel()
+            + self
+                .layers
+                .iter()
+                .map(|l| l.attn.as_ref().map(QuantAttn::numel).unwrap_or(0) + l.mlp.numel())
+                .sum::<usize>()
+    }
+}
+
 /// The full native model: embedding, output head, final norm, blocks.
+/// `quant` is present iff `cfg.precision == Int8`: int8 copies of the
+/// bulk tensors that the decode paths dispatch on (the f32 tensors
+/// remain the full-forward oracle).
 pub struct NativeModel {
     pub cfg: ModelConfig,
     pub embed: Vec<f32>, // [V * d]
     pub head: Vec<f32>,  // [d * n_out]
     pub ln_f: LayerNormP,
     pub layers: Vec<BlockP>,
+    pub quant: Option<QuantModel>,
 }
 
 fn draw_heads(rng: &mut Pcg, h: usize, n: usize, fan_in: usize) -> Vec<Vec<f32>> {
@@ -230,12 +386,18 @@ impl NativeModel {
                 mlp,
             });
         }
+        // Quantization happens after the full draw, from the final f32
+        // tensors — the INIT_STREAM draw order (the golden contract)
+        // does not depend on precision.
+        let quant = (cfg.precision == Precision::Int8)
+            .then(|| QuantModel::from_layers(cfg, &embed, &head, &layers));
         NativeModel {
             cfg: cfg.clone(),
             embed,
             head,
             ln_f: LayerNormP::unit(d),
             layers,
+            quant,
         }
     }
 
@@ -285,6 +447,20 @@ impl NativeModel {
         }
         total
     }
+
+    /// Bytes the *decode path* streams for weights: at f32 precision
+    /// every parameter at 4 bytes; at int8, the quantized tensors at
+    /// their stored size (1 byte/code + 4 bytes/row scale) plus the
+    /// tensors that deliberately stay f32 (routers, layer norms, XL
+    /// tables, Dense/MoA attention weights) at 4 bytes. The f32 master
+    /// copies kept around as the oracle are excluded by design — they
+    /// are never touched by a quantized decode step.
+    pub fn weight_bytes(&self) -> usize {
+        match &self.quant {
+            None => 4 * self.param_count(),
+            Some(q) => q.bytes() + 4 * (self.param_count() - q.params_covered()),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -306,6 +482,36 @@ mod tests {
         assert_eq!(a.embed, b.embed);
         assert_eq!(a.head, b.head);
         assert_ne!(a.embed, c2.embed);
+    }
+
+    #[test]
+    fn quant_model_built_only_at_int8_and_shrinks_bytes() {
+        let base = r#"{"name":"t","d_model":16,"n_layers":1,"n_heads":2,"d_head":8,
+                       "vocab_size":32,"seq_len":8,"batch_size":1"#;
+        let f = cfg(&format!("{base},\"precision\":\"f32\"}}"));
+        let q = cfg(&format!("{base},\"precision\":\"int8\"}}"));
+        let mf = NativeModel::init(&f, 7);
+        let mq = NativeModel::init(&q, 7);
+        assert!(mf.quant.is_none());
+        let qm = mq.quant.as_ref().expect("int8 config builds quant twins");
+        // Same seed, same draw order: the f32 tensors are identical
+        // regardless of precision, and quantization is lossy-bounded.
+        assert_eq!(mf.embed, mq.embed);
+        assert_eq!(mf.param_count(), mq.param_count());
+        assert!(qm.params_covered() > 0 && qm.params_covered() <= mq.param_count());
+        assert!(
+            mq.weight_bytes() * 2 < mf.weight_bytes(),
+            "int8 weight bytes {} not < half of f32 {}",
+            mq.weight_bytes(),
+            mf.weight_bytes()
+        );
+        let back = qm.embed.dequantize();
+        for r in 0..qm.embed.rows {
+            for c in 0..qm.embed.cols {
+                let i = r * qm.embed.cols + c;
+                assert!((back[i] - mf.embed[i]).abs() <= qm.embed.scale[r] / 2.0 + 1e-7);
+            }
+        }
     }
 
     #[test]

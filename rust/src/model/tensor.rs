@@ -111,6 +111,32 @@ pub fn moe_matmul(
     out
 }
 
+/// Quantized [`matmul`]: `w` stored as per-row-scaled i8
+/// ([`crate::quant::QuantMat`]), dequantized on load with f32
+/// accumulation (`kernels::matmul_q_into`). Scratch-arena output.
+pub fn matmul_q(x: &[f32], w: &crate::quant::QuantMat, n: usize, d: usize, m: usize) -> Vec<f32> {
+    let mut out = scratch::take(n * m);
+    kernels::matmul_q_into(&mut out, x, w, n, d, m);
+    out
+}
+
+/// Quantized [`moe_matmul`]: each expert stored as per-row-scaled i8.
+/// Same expert-grouped dispatch, f32 accumulation throughout.
+pub fn moe_matmul_q(
+    x: &[f32],
+    experts: &[crate::quant::QuantMat],
+    rows: usize,
+    cols: usize,
+    idx: &[usize],
+    gate: &[f32],
+    k: usize,
+) -> Vec<f32> {
+    let n = x.len() / rows;
+    let mut out = scratch::take(n * cols);
+    kernels::moe_matmul_q_into(&mut out, x, experts, rows, cols, idx, gate, k);
+    out
+}
+
 /// Row-wise layer norm over the last dimension `d` (eps = 1e-5,
 /// biased variance — matches `layers.py::layer_norm`). The output
 /// buffer comes from the scratch arena.

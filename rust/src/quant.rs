@@ -1,0 +1,177 @@
+//! Int8 per-row-scale quantized storage — the selective-precision
+//! format behind `--precision int8`.
+//!
+//! # Format
+//!
+//! A tensor is stored as `i8` codes plus one f32 scale per **row**,
+//! where a row is the reduction-dimension index of the matmul that
+//! consumes it (for a `[rows, cols]` weight matrix, row `r` covers
+//! `q[r * cols .. (r + 1) * cols]`; for the embedding table, one row
+//! per vocab entry). Encoding of a row with maximum magnitude `a`:
+//!
+//! ```text
+//! scale = a / 127          (0 when the row is all zero)
+//! q[i]  = round(v[i] / scale), clamped to [-127, 127]
+//! ```
+//!
+//! so `|v[i] - q[i] * scale| <= scale / 2` for every element — the
+//! round-trip bound `rust/tests/quant.rs` pins. The code range is
+//! symmetric (−127..=127; −128 unused) so negating a row negates its
+//! codes exactly.
+//!
+//! # The f32-accumulation rule
+//!
+//! Quantization changes only how bytes are **stored**. Every reduction
+//! that consumes them (matmul over weight rows, attention logits and
+//! value sums over K/V columns) accumulates in f32, with the per-row
+//! scale factored out of the inner loop — the Switch Transformers
+//! selective-precision argument: keep the numerically sensitive
+//! accumulations in float, store the bulk tensors narrow. The
+//! quantized kernels live in [`crate::kernels`]
+//! (`matmul_q_into`, `moe_matmul_banks_q_into`); the paged K/V store's
+//! int8 mode lives in [`crate::model::kv_cache`]. The f32 path is
+//! never touched by any of this and remains the oracle the quant test
+//! tier compares against.
+
+/// Quantize one row: returns `(codes, scale)` with
+/// `|row[i] - codes[i] as f32 * scale| <= scale / 2`. An all-zero row
+/// (or an empty one) gets scale 0 and all-zero codes.
+pub fn quantize_row(row: &[f32]) -> (Vec<i8>, f32) {
+    let mut q = vec![0i8; row.len()];
+    let scale = quantize_row_into(&mut q, row);
+    (q, scale)
+}
+
+/// Allocation-free [`quantize_row`]: writes codes into `dst` (same
+/// length as `row`) and returns the scale. This is the hot-path entry
+/// the paged KV store calls once per pushed column.
+pub fn quantize_row_into(dst: &mut [i8], row: &[f32]) -> f32 {
+    debug_assert_eq!(dst.len(), row.len());
+    let mut a = 0f32;
+    for &v in row {
+        let m = v.abs();
+        if m > a {
+            a = m;
+        }
+    }
+    if a == 0.0 {
+        dst.fill(0);
+        return 0.0;
+    }
+    let scale = a / 127.0;
+    let inv = 127.0 / a;
+    for (d, &v) in dst.iter_mut().zip(row) {
+        *d = (v * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    scale
+}
+
+/// An int8 matrix with one scale per row (`rows` is the reduction
+/// dimension of the matmul that consumes it).
+pub struct QuantMat {
+    /// Row-major `[rows, cols]` codes.
+    pub q: Vec<i8>,
+    /// One scale per row: `w[r, c] ~= q[r * cols + c] as f32 * scale[r]`.
+    pub scale: Vec<f32>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl QuantMat {
+    /// Quantize a row-major `[rows, cols]` f32 matrix.
+    pub fn from_f32(w: &[f32], rows: usize, cols: usize) -> QuantMat {
+        assert_eq!(w.len(), rows * cols, "quantize shape");
+        let mut q = vec![0i8; rows * cols];
+        let mut scale = vec![0f32; rows];
+        for r in 0..rows {
+            scale[r] = quantize_row_into(&mut q[r * cols..(r + 1) * cols], &w[r * cols..(r + 1) * cols]);
+        }
+        QuantMat { q, scale, rows, cols }
+    }
+
+    /// Reconstructed f32 matrix (tests/tooling; the kernels never
+    /// materialize this — they fold the scale into the activation).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.q.len()];
+        for r in 0..self.rows {
+            let s = self.scale[r];
+            for c in 0..self.cols {
+                out[r * self.cols + c] = self.q[r * self.cols + c] as f32 * s;
+            }
+        }
+        out
+    }
+
+    /// Stored bytes: one per code plus four per row scale.
+    pub fn bytes(&self) -> usize {
+        self.q.len() + 4 * self.scale.len()
+    }
+
+    /// f32 parameters this matrix replaces.
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn round_trip_error_within_half_scale() {
+        let mut rng = Pcg::new(11, 0x0807);
+        for len in [1usize, 2, 7, 64, 300] {
+            let row: Vec<f32> = (0..len).map(|_| (rng.normal() * 3.0) as f32).collect();
+            let (q, scale) = quantize_row(&row);
+            assert!(scale > 0.0);
+            for (i, &v) in row.iter().enumerate() {
+                let err = (v - q[i] as f32 * scale).abs();
+                assert!(err <= scale / 2.0 + 1e-7, "len {len} elem {i}: err {err} > {}", scale / 2.0);
+            }
+        }
+    }
+
+    #[test]
+    fn all_zero_and_single_element_rows() {
+        let (q, scale) = quantize_row(&[0.0, 0.0, 0.0]);
+        assert_eq!(scale, 0.0);
+        assert!(q.iter().all(|&c| c == 0));
+        // A single element always reconstructs exactly: it is its own
+        // row maximum, so it maps to code +-127 at scale |v|/127.
+        for v in [3.25f32, -0.004, 1e-20] {
+            let (q, scale) = quantize_row(&[v]);
+            assert_eq!(q[0] as f32 * scale, v, "single element must be exact");
+        }
+        let (q, scale) = quantize_row(&[]);
+        assert!(q.is_empty());
+        assert_eq!(scale, 0.0);
+    }
+
+    #[test]
+    fn extremes_map_to_full_range_and_negation_flips_codes() {
+        let row = [2.0f32, -2.0, 0.5];
+        let (q, _) = quantize_row(&row);
+        assert_eq!(q[0], 127);
+        assert_eq!(q[1], -127);
+        let neg: Vec<f32> = row.iter().map(|v| -v).collect();
+        let (qn, _) = quantize_row(&neg);
+        assert_eq!(qn, q.iter().map(|&c| -c).collect::<Vec<i8>>());
+    }
+
+    #[test]
+    fn quant_mat_per_row_scales_and_bytes() {
+        let w = [1.0f32, -1.0, 0.0, 0.0, 0.01, 0.005];
+        let m = QuantMat::from_f32(&w, 3, 2);
+        assert_eq!(m.scale.len(), 3);
+        assert_eq!(m.scale[1], 0.0, "all-zero row keeps scale 0");
+        let back = m.dequantize();
+        for (r, chunk) in back.chunks(2).enumerate() {
+            for (c, &v) in chunk.iter().enumerate() {
+                assert!((v - w[r * 2 + c]).abs() <= m.scale[r] / 2.0 + 1e-7);
+            }
+        }
+        assert_eq!(m.bytes(), 6 + 12);
+        assert_eq!(m.numel(), 6);
+    }
+}

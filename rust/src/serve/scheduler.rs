@@ -136,7 +136,7 @@
 use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 
-use crate::config::ModelConfig;
+use crate::config::{ModelConfig, Precision};
 use crate::coordinator::generate::sample_logits;
 use crate::model::decode::step_batched_full;
 use crate::model::kv_cache::stream_pages_spec;
@@ -245,6 +245,15 @@ pub struct ServeOpts {
     /// changes behavior: token streams are bit-identical with sinks on
     /// or off (pinned by `rust/tests/obs.rs`).
     pub obs: ObsOpts,
+    /// Storage precision of the shared KV pool
+    /// ([`crate::config::Precision`]): f32 pages, or per-column-scaled
+    /// int8 pages at a fraction of the bytes. Capacity, admission and
+    /// the reservation invariant are position-denominated, so they are
+    /// untouched by this choice — only bytes-per-page shrink. The
+    /// default honors the `PALLAS_PRECISION` env var. Weight-side
+    /// quantization is governed separately by the model config's
+    /// `precision` field; serve runs normally set both together.
+    pub precision: Precision,
 }
 
 impl Default for ServeOpts {
@@ -261,6 +270,7 @@ impl Default for ServeOpts {
             retry_budget: DEFAULT_RETRY_BUDGET,
             faults: None,
             obs: ObsOpts::from_env(),
+            precision: Precision::from_env(),
         }
     }
 }
@@ -676,7 +686,7 @@ impl<'m> Scheduler<'m> {
                 pages
             }
         };
-        let pool = KvPool::new(page_cols, cfg.d_head, pool_pages)?;
+        let pool = KvPool::with_precision(page_cols, cfg.d_head, pool_pages, opts.precision)?;
         Ok(Scheduler {
             engine,
             queue: RequestQueue::new(opts.queue_cap),

@@ -1,0 +1,393 @@
+//! Quantization test tier: the int8 storage path (per-row-scaled
+//! expert weight banks + per-column-scaled paged KV, f32 accumulation
+//! everywhere — `crate::quant`) pinned against the f32 oracle.
+//!
+//! Contracts, in increasing strength:
+//!
+//! * **Round-trip properties** — per-row scale is `maxabs / 127`
+//!   exactly, every reconstructed element sits within `scale / 2` of
+//!   its f32 source, and the degenerate rows (all-zero, single
+//!   element) round-trip exactly.
+//! * **Tolerance band** — an int8 session's full-window logits stay
+//!   inside a documented band of the SAME engine's f32 full forward
+//!   (`next_logits` never quantizes, so every int8 engine carries its
+//!   own oracle), on every golden config family.
+//! * **Greedy agreement** — teacher-forced on the f32 greedy stream
+//!   across prefill + decode, the int8 path picks the same greedy
+//!   token at every step where the f32 margin is not razor-thin.
+//! * **Determinism** — int8 quantization is a pure function of the
+//!   f32 input, so chunked and monolithic prefill agree through the
+//!   quantized path exactly as they do at f32.
+//! * **Serve equivalence** — an int8 scheduler completes the same
+//!   request set as the f32 scheduler with identical finish reasons
+//!   and per-request token counts, the shared pool drains to (0, 0),
+//!   and the per-tick invariant auditor stays green throughout.
+//!
+//! Precisions are pinned EXPLICITLY on every config (never inherited
+//! from `PALLAS_PRECISION`) so the suite asserts the same thing under
+//! `make check`'s int8 environment re-run.
+
+use switchhead::config::{ModelConfig, Precision};
+use switchhead::model::{NativeEngine, NativeSession};
+use switchhead::quant::{quantize_row, quantize_row_into, QuantMat};
+use switchhead::runtime::{Backend, Session, TokenBatch};
+use switchhead::serve::{FinishReason, GenRequest, Scheduler, ServeOpts};
+use switchhead::util::json::Json;
+use switchhead::util::rng::Pcg;
+
+fn cfg_at(text: &str, precision: Precision) -> ModelConfig {
+    let mut cfg = ModelConfig::from_json(&Json::parse(text).unwrap()).unwrap();
+    cfg.precision = precision;
+    cfg.validate().unwrap();
+    cfg
+}
+
+const SH_XL: &str = r#"{"name":"sh-xl","family":"switchhead","pos":"xl","vocab_size":64,
+    "d_model":16,"n_layers":2,"n_heads":2,"d_head":8,"d_ff":32,
+    "seq_len":8,"batch_size":2,"att_n_experts":3,"att_k":2}"#;
+
+const SH_ROPE: &str = r#"{"name":"sh-rope","family":"switchhead","pos":"rope","vocab_size":64,
+    "d_model":16,"n_layers":2,"n_heads":2,"d_head":8,"d_ff":32,
+    "seq_len":8,"batch_size":2,"att_n_experts":3,"att_k":2}"#;
+
+const SWITCHALL_XL: &str = r#"{"name":"switchall-xl","family":"switchhead","pos":"xl",
+    "vocab_size":64,"d_model":16,"n_layers":2,"n_heads":2,"d_head":8,"seq_len":8,
+    "batch_size":2,"att_n_experts":3,"att_k":2,"moe_k":true,"moe_q":true,
+    "mlp_type":"sigma_moe","mlp_n_experts":3,"mlp_k":2,"mlp_d_expert":8}"#;
+
+const GOLDEN: &[&str] = &[SH_XL, SH_ROPE, SWITCHALL_XL];
+
+fn argmax(row: &[f32]) -> usize {
+    row.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).map(|(i, _)| i).unwrap()
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max)
+}
+
+fn window(cfg: &ModelConfig, seed: u64) -> Vec<i32> {
+    let mut rng = Pcg::new(seed, 7);
+    (0..cfg.batch_size * cfg.seq_len).map(|_| rng.below(cfg.vocab_size) as i32).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Round-trip properties of the quantizer itself.
+
+#[test]
+fn row_scale_is_maxabs_over_127_and_error_within_half_scale() {
+    let mut rng = Pcg::new(17, 1);
+    for len in [1usize, 2, 7, 64, 255] {
+        for trial in 0..8 {
+            let row: Vec<f32> =
+                (0..len).map(|_| rng.normal() as f32 * (1.0 + trial as f32)).collect();
+            let (q, scale) = quantize_row(&row);
+            let maxabs = row.iter().fold(0f32, |m, v| m.max(v.abs()));
+            assert_eq!(scale, maxabs / 127.0, "scale must be maxabs/127 exactly (len {len})");
+            assert_eq!(q.len(), len);
+            for (j, (&code, &v)) in q.iter().zip(&row).enumerate() {
+                let err = (code as f32 * scale - v).abs();
+                assert!(
+                    err <= scale / 2.0 + 1e-7,
+                    "len {len} trial {trial} elem {j}: |{} - {v}| = {err} > scale/2 = {}",
+                    code as f32 * scale,
+                    scale / 2.0
+                );
+            }
+            // The extreme element hits a full-range code, so the
+            // quantizer really uses all 8 bits.
+            assert!(
+                q.iter().any(|&c| c.unsigned_abs() == 127),
+                "len {len}: maxabs element must map to +/-127"
+            );
+        }
+    }
+}
+
+#[test]
+fn all_zero_and_single_element_rows_round_trip_exactly() {
+    // All-zero row: scale 0, all codes 0, reconstruction exact.
+    let (q, scale) = quantize_row(&[0.0; 9]);
+    assert_eq!(scale, 0.0);
+    assert!(q.iter().all(|&c| c == 0));
+
+    // Single-element rows reconstruct exactly: the element IS the
+    // maxabs, so its code is +/-127 and code * scale == value.
+    for v in [3.5f32, -0.001, 1e-20, 1e20, 0.0] {
+        let (q, scale) = quantize_row(&[v]);
+        assert_eq!(q.len(), 1);
+        let back = q[0] as f32 * scale;
+        let tol = v.abs() * 1e-6;
+        assert!((back - v).abs() <= tol, "single element {v} round-tripped to {back}");
+    }
+
+    // quantize_row_into matches quantize_row bit for bit.
+    let row = [1.0f32, -2.0, 0.5, 0.0, 127.0];
+    let (q, scale) = quantize_row(&row);
+    let mut dst = [0i8; 5];
+    let scale2 = quantize_row_into(&mut dst, &row);
+    assert_eq!(scale, scale2);
+    assert_eq!(q.as_slice(), dst.as_slice());
+}
+
+#[test]
+fn quant_mat_round_trips_within_per_row_bounds() {
+    let (rows, cols) = (6usize, 10usize);
+    let mut rng = Pcg::new(23, 4);
+    let mut w: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+    // One all-zero row exercises the scale-0 path inside a matrix.
+    for v in &mut w[2 * cols..3 * cols] {
+        *v = 0.0;
+    }
+    let m = QuantMat::from_f32(&w, rows, cols);
+    assert_eq!((m.rows, m.cols), (rows, cols));
+    assert_eq!(m.numel(), rows * cols);
+    assert!(m.bytes() < 4 * m.numel(), "int8 storage must beat f32");
+    let back = m.dequantize();
+    for r in 0..rows {
+        let scale = m.scale[r];
+        let worst = max_abs_diff(&back[r * cols..(r + 1) * cols], &w[r * cols..(r + 1) * cols]);
+        assert!(worst <= scale / 2.0 + 1e-7, "row {r}: |err| {worst} > scale/2 {}", scale / 2.0);
+    }
+    assert_eq!(&back[2 * cols..3 * cols], &w[2 * cols..3 * cols], "zero row must be exact");
+}
+
+// ---------------------------------------------------------------------------
+// Model-level: int8 vs the f32 oracle.
+
+/// The documented tolerance band: int8 logits within
+/// `0.25 * (1 + max|f32 logit|)` of the f32 full forward. The band is
+/// deliberately generous — per-row int8 carries ~0.4% weight error and
+/// these tiny configs stack it over 2 layers — but it is NOT vacuous:
+/// the same test asserts the f32 session nails the oracle 1000x
+/// tighter, so the band only exists to absorb quantization error.
+fn logits_band(full: &[f32]) -> f32 {
+    0.25 * (1.0 + full.iter().fold(0f32, |m, v| m.max(v.abs())))
+}
+
+#[test]
+fn int8_logits_stay_inside_tolerance_band_of_f32_oracle() {
+    for text in GOLDEN {
+        let cfg = cfg_at(text, Precision::Int8);
+        let engine = NativeEngine::new(&cfg, 11).unwrap();
+        assert!(engine.model.quant.is_some(), "{}: int8 engine must build a quant bank", cfg.name);
+        let (b, t) = (cfg.batch_size, cfg.seq_len);
+        let tok = window(&cfg, 3);
+        // The f32 oracle lives INSIDE the int8 engine: the full-window
+        // forward never touches the quant bank.
+        let full = engine.next_logits(&TokenBatch::new(tok.clone(), b, t).unwrap()).unwrap();
+        let mut s = engine.open_session(b).unwrap();
+        let got = s.prefill(&TokenBatch::new(tok.clone(), b, t).unwrap()).unwrap();
+        let band = logits_band(full.data());
+        let worst = max_abs_diff(got.data(), full.data());
+        assert!(
+            worst <= band,
+            "{}: int8 logits drifted {worst} from the f32 oracle (band {band})",
+            cfg.name
+        );
+
+        // Control: the identically-seeded f32 engine's session hits the
+        // same oracle 1e-5-tight, so the band above measures
+        // quantization, not session-path slack.
+        let cfg_f = cfg_at(text, Precision::F32);
+        let engine_f = NativeEngine::new(&cfg_f, 11).unwrap();
+        assert!(engine_f.model.quant.is_none(), "f32 engine must not build a quant bank");
+        let mut sf = engine_f.open_session(b).unwrap();
+        let got_f = sf.prefill(&TokenBatch::new(tok.clone(), b, t).unwrap()).unwrap();
+        let worst_f = max_abs_diff(got_f.data(), full.data());
+        assert!(worst_f < 1e-5, "{}: f32 session drifted {worst_f} from its oracle", cfg.name);
+        assert!(
+            worst_f < worst || worst == 0.0,
+            "{}: quantization should dominate the error budget ({worst_f} vs {worst})",
+            cfg.name
+        );
+    }
+}
+
+/// Teacher-forced greedy agreement across a full prefill + decode
+/// stream: both precisions see the f32 greedy tokens, and wherever the
+/// f32 top-1 margin exceeds twice the step's measured logit
+/// perturbation the int8 path MUST pick the same token (an argmax can
+/// only flip when the margin is within 2x the max-norm error — this is
+/// a theorem, so a violation means a real dispatch bug, not noise).
+/// Steps with thinner margins may legitimately flip inside the
+/// tolerance band; they still count toward the majority check.
+#[test]
+fn int8_greedy_stream_agrees_with_f32_on_all_golden_configs() {
+    let steps = 16usize;
+    for text in GOLDEN {
+        let cfg_f = cfg_at(text, Precision::F32);
+        let cfg_q = cfg_at(text, Precision::Int8);
+        let engine_f = NativeEngine::new(&cfg_f, 11).unwrap();
+        let engine_q = NativeEngine::new(&cfg_q, 11).unwrap();
+        let prompt_len = (cfg_f.seq_len / 2).max(1);
+        let mut rng = Pcg::new(5, 3);
+        let prompt: Vec<i32> =
+            (0..prompt_len).map(|_| rng.below(cfg_f.vocab_size) as i32).collect();
+
+        let mut sf = NativeSession::open(&engine_f.model, 1).unwrap();
+        let mut sq = NativeSession::open(&engine_q.model, 1).unwrap();
+        let batch = TokenBatch::new(prompt.clone(), 1, prompt_len).unwrap();
+        let mut lf = sf.prefill(&batch).unwrap();
+        let mut lq = sq.prefill(&TokenBatch::new(prompt, 1, prompt_len).unwrap()).unwrap();
+
+        let mut agreements = 0usize;
+        let mut decisive = 0usize;
+        for step in 0..steps {
+            let row = lf.row(0);
+            let top = argmax(row);
+            // f32 top-1 margin over the runner-up.
+            let mut second = f32::NEG_INFINITY;
+            for (i, &v) in row.iter().enumerate() {
+                if i != top {
+                    second = second.max(v);
+                }
+            }
+            let margin = row[top] - second;
+            let agree = argmax(lq.row(0)) == top;
+            if agree {
+                agreements += 1;
+            }
+            let step_diff = max_abs_diff(lq.row(0), row);
+            if margin > 2.0 * step_diff + 1e-6 {
+                decisive += 1;
+                assert!(
+                    agree,
+                    "{} step {step}: int8 flipped a decisive greedy pick \
+                     (margin {margin}, logit perturbation {step_diff})",
+                    cfg_f.name
+                );
+            }
+            // Teacher-force the f32 greedy token into BOTH streams so
+            // they stay position-aligned whatever int8 would sample.
+            lf = sf.decode(&[top as i32]).unwrap();
+            lq = sq.decode(&[top as i32]).unwrap();
+        }
+        assert!(
+            decisive > 0,
+            "{}: no decisive steps — the margin threshold is vacuous here",
+            cfg_f.name
+        );
+        assert!(
+            agreements * 2 > steps,
+            "{}: int8 agreed on only {agreements}/{steps} greedy picks",
+            cfg_f.name
+        );
+    }
+}
+
+/// Int8 determinism: quantized K/V codes are a pure function of the
+/// f32 column, so a chunked prompt feed lands the int8 session in the
+/// same state as a monolithic prefill — the same chunk-invariance the
+/// f32 path pins in rust/tests/serve.rs.
+#[test]
+fn int8_chunked_prefill_matches_monolithic() {
+    for text in GOLDEN {
+        let cfg = cfg_at(text, Precision::Int8);
+        let engine = NativeEngine::new(&cfg, 11).unwrap();
+        let t = cfg.seq_len;
+        let mut rng = Pcg::new(29, 2);
+        let prompt: Vec<i32> = (0..t).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+
+        let mut mono = NativeSession::open(&engine.model, 1).unwrap();
+        let ml = mono.prefill(&TokenBatch::new(prompt.clone(), 1, t).unwrap()).unwrap();
+
+        let mut chunked = NativeSession::open(&engine.model, 1).unwrap();
+        let mut fed = 0usize;
+        let mut last = None;
+        for w in [3usize, 1, usize::MAX] {
+            let w = w.min(t - fed);
+            if w == 0 {
+                break;
+            }
+            let mut refs = vec![&mut chunked];
+            let mut lgs = switchhead::model::step_batched(
+                &mut refs,
+                &prompt[fed..fed + w],
+                &[w],
+            )
+            .unwrap();
+            fed += w;
+            last = Some(lgs.remove(0));
+        }
+        let last = last.unwrap();
+        let worst = max_abs_diff(last.data(), ml.data());
+        assert!(worst <= 1e-5, "{}: int8 chunked prefill diverged by {worst}", cfg.name);
+        assert_eq!(argmax(last.row(0)), argmax(ml.row(0)), "{}: greedy diverged", cfg.name);
+    }
+}
+
+/// Weight-side memory: the int8 bank must at least halve the stored
+/// weight bytes (the routers / norms / XL tables that stay f32 are a
+/// small minority of parameters on every golden config).
+#[test]
+fn int8_weight_bytes_at_most_half_of_f32() {
+    for text in GOLDEN {
+        let cfg_q = cfg_at(text, Precision::Int8);
+        let cfg_f = cfg_at(text, Precision::F32);
+        let q = NativeEngine::new(&cfg_q, 11).unwrap().model.weight_bytes();
+        let f = NativeEngine::new(&cfg_f, 11).unwrap().model.weight_bytes();
+        assert!(2 * q <= f, "{}: int8 weights {q} bytes not <= half of f32 {f}", cfg_q.name);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serve-level equivalence: the int8 scheduler finishes the same work.
+
+#[test]
+fn int8_scheduler_completes_same_request_set_as_f32() {
+    let cfg_f = cfg_at(SH_XL, Precision::F32);
+    let cfg_q = cfg_at(SH_XL, Precision::Int8);
+    let engine_f = NativeEngine::new(&cfg_f, 11).unwrap();
+    let engine_q = NativeEngine::new(&cfg_q, 11).unwrap();
+
+    let mut rng = Pcg::new(37, 9);
+    // Greedy, no EOS: every request must finish by Length with exactly
+    // its budget, at BOTH precisions — token values may differ inside
+    // the tolerance band, token counts and finish reasons may not.
+    let reqs: Vec<GenRequest> = (0..6)
+        .map(|i| {
+            let plen = 1 + i % 5;
+            let prompt: Vec<i32> =
+                (0..plen).map(|_| rng.below(cfg_f.vocab_size) as i32).collect();
+            GenRequest::greedy(prompt, 3 + i % 4)
+        })
+        .collect();
+
+    let run = |engine: &NativeEngine, precision: Precision| {
+        let opts = ServeOpts {
+            slots: 2,
+            queue_cap: reqs.len(),
+            audit: true,
+            precision,
+            ..ServeOpts::default()
+        };
+        let mut sched = Scheduler::new(engine, &opts).unwrap();
+        assert_eq!(sched.pool_stats().precision, precision);
+        for r in &reqs {
+            sched.submit(r.clone()).unwrap();
+        }
+        let mut outs = sched.run_until_idle(10_000).unwrap();
+        outs.sort_by_key(|o| o.id);
+        let ps = sched.pool_stats();
+        assert_eq!((ps.in_use, ps.reserved), (0, 0), "{precision:?}: pool must drain to (0,0)");
+        let st = sched.stats().clone();
+        assert_eq!(st.audit_ticks, st.ticks, "{precision:?}: auditor must cover every tick");
+        outs
+    };
+
+    let outs_f = run(&engine_f, Precision::F32);
+    let outs_q = run(&engine_q, Precision::Int8);
+    assert_eq!(outs_f.len(), reqs.len());
+    assert_eq!(outs_q.len(), reqs.len());
+    for (i, (of, oq)) in outs_f.iter().zip(&outs_q).enumerate() {
+        assert_eq!(of.id, oq.id);
+        assert_eq!(of.finish, FinishReason::Length, "request {i} (f32)");
+        assert_eq!(oq.finish, FinishReason::Length, "request {i} (int8)");
+        assert_eq!(
+            of.tokens.len(),
+            oq.tokens.len(),
+            "request {i}: token counts diverged across precisions"
+        );
+        assert_eq!(of.prompt_len, oq.prompt_len);
+    }
+}

@@ -1,0 +1,195 @@
+//! End-to-end CLI tier: drives the built `switchhead` binary (via
+//! `CARGO_BIN_EXE_switchhead`) against the checked-in fixture configs
+//! and asserts the observable output contract — what a user at a shell
+//! actually sees. The inference subcommands print their human-facing
+//! result lines to **stdout** and their `[+t]`-stamped progress /
+//! summary lines (`util::logging::info`) to **stderr**, so both
+//! streams are captured and asserted separately.
+//!
+//! The quantization satellite lives here too: a `--precision int8`
+//! serve run must report an int8 KV pool in its summary line, and its
+//! peak KV bytes for the same traffic must be under half of the f32
+//! run's — the CLI-visible form of the memory claim the quant tier
+//! pins in-process.
+
+use std::process::{Command, Output};
+
+const CONFIG: &str = "configs/tiny-sh.json";
+
+fn bin() -> Command {
+    let mut c = Command::new(env!("CARGO_BIN_EXE_switchhead"));
+    c.current_dir(env!("CARGO_MANIFEST_DIR"));
+    // Keep CLI runs cheap and deterministic regardless of the host:
+    // single worker thread, and precision pinned by flags only (the
+    // Makefile's int8 sweep exports PALLAS_PRECISION, which would
+    // otherwise flip the "default serve is f32" contract).
+    c.env("PALLAS_THREADS", "1");
+    c.env_remove("PALLAS_PRECISION");
+    c.env_remove("PALLAS_AUDIT");
+    c
+}
+
+fn run_ok(args: &[&str]) -> (String, String) {
+    let out = bin().args(args).output().expect("spawn switchhead");
+    let (stdout, stderr) = capture(&out);
+    assert!(
+        out.status.success(),
+        "`switchhead {}` failed ({:?})\nstdout:\n{stdout}\nstderr:\n{stderr}",
+        args.join(" "),
+        out.status.code()
+    );
+    (stdout, stderr)
+}
+
+fn capture(out: &Output) -> (String, String) {
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn probe_native_scores_the_fixture_config() {
+    let (stdout, stderr) = run_ok(&["probe", "--config", CONFIG, "--backend", "native"]);
+    assert!(
+        stdout.contains("probe OK (native): tiny-sh"),
+        "probe verdict missing from stdout:\n{stdout}"
+    );
+    assert!(stderr.contains("native init ok"), "init line missing from stderr:\n{stderr}");
+    assert!(
+        stderr.contains("score: mean NLL"),
+        "score summary missing from stderr:\n{stderr}"
+    );
+}
+
+#[test]
+fn probe_native_accepts_the_precision_flag() {
+    let (stdout, _) = run_ok(&[
+        "probe",
+        "--config",
+        CONFIG,
+        "--backend",
+        "native",
+        "--precision",
+        "int8",
+    ]);
+    assert!(stdout.contains("probe OK (native): tiny-sh"), "int8 probe failed:\n{stdout}");
+    // And a bad precision is a usage error, not a crash.
+    let out = bin()
+        .args(["probe", "--config", CONFIG, "--backend", "native", "--precision", "fp4"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "unknown precision must be rejected");
+}
+
+#[test]
+fn generate_native_samples_text() {
+    let (stdout, _) = run_ok(&[
+        "generate",
+        "--config",
+        CONFIG,
+        "--backend",
+        "native",
+        "--tokens",
+        "8",
+        "--seed",
+        "3",
+        "--prompt",
+        "the",
+    ]);
+    assert!(stdout.contains("prompt:  the"), "prompt echo missing:\n{stdout}");
+    let sampled = stdout
+        .lines()
+        .find_map(|l| l.strip_prefix("sampled: "))
+        .unwrap_or_else(|| panic!("no sampled line in:\n{stdout}"));
+    assert!(!sampled.trim().is_empty(), "sampled text must be non-empty");
+}
+
+/// Parse `... precision <name> (<bpp> bytes/page, <peak> peak bytes) ...`
+/// out of the serve summary on stderr.
+fn kv_summary(stderr: &str) -> (String, u64, u64) {
+    let line = stderr
+        .lines()
+        .find(|l| l.contains("kv pool: peak"))
+        .unwrap_or_else(|| panic!("no kv pool summary in stderr:\n{stderr}"));
+    let rest = line.split("precision ").nth(1).expect("precision field");
+    let name = rest.split_whitespace().next().expect("precision name").to_string();
+    let paren = rest.split('(').nth(1).expect("byte fields");
+    let bpp: u64 = paren.split_whitespace().next().unwrap().parse().expect("bytes/page");
+    let peak: u64 = paren
+        .split(", ")
+        .nth(1)
+        .and_then(|s| s.split_whitespace().next())
+        .unwrap()
+        .parse()
+        .expect("peak bytes");
+    (name, bpp, peak)
+}
+
+fn serve_args<'a>(extra: &[&'a str]) -> Vec<&'a str> {
+    let mut args = vec![
+        "serve", "--config", CONFIG, "--requests", "3", "--slots", "2", "--tokens", "4",
+        "--seed", "9", "--audit",
+    ];
+    args.extend_from_slice(extra);
+    args
+}
+
+#[test]
+fn serve_runs_requests_to_completion_and_reports_the_pool() {
+    let (stdout, stderr) = run_ok(&serve_args(&[]));
+    // The per-request table (stdout): every request finished by budget.
+    assert_eq!(
+        stdout.matches(" length").count(),
+        3,
+        "3 requests must finish as 'length' in:\n{stdout}"
+    );
+    assert!(stderr.contains("served 3 requests"), "summary missing:\n{stderr}");
+    assert!(stderr.contains("latency: ttft"), "latency summary missing:\n{stderr}");
+    let (precision, bpp, peak) = kv_summary(&stderr);
+    assert_eq!(precision, "f32", "default serve must run an f32 pool");
+    assert!(bpp > 0 && peak > 0, "pool bytes must be reported");
+}
+
+#[test]
+fn serve_int8_reports_quantized_kv_occupancy_under_half_of_f32() {
+    let (_, stderr_f) = run_ok(&serve_args(&["--precision", "f32"]));
+    let (stdout_q, stderr_q) = run_ok(&serve_args(&["--precision", "int8"]));
+    assert_eq!(
+        stdout_q.matches(" length").count(),
+        3,
+        "int8 serve must finish the same request set:\n{stdout_q}"
+    );
+
+    let (pf, bpp_f, peak_f) = kv_summary(&stderr_f);
+    let (pq, bpp_q, peak_q) = kv_summary(&stderr_q);
+    assert_eq!(pf, "f32");
+    assert_eq!(pq, "int8", "summary must report the quantized pool:\n{stderr_q}");
+    // Same traffic, same seeds: page high-water matches, so the byte
+    // ratio is purely the element width — int8 must be under half.
+    assert!(
+        2 * bpp_q < bpp_f,
+        "int8 bytes/page {bpp_q} not < half of f32 {bpp_f}"
+    );
+    assert!(
+        2 * peak_q < peak_f,
+        "int8 peak KV bytes {peak_q} not < half of f32 {peak_f}"
+    );
+}
+
+#[test]
+fn usage_errors_exit_nonzero_with_usage_text() {
+    // No subcommand: usage on stderr, exit 2.
+    let out = bin().output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    let (_, stderr) = capture(&out);
+    assert!(stderr.contains("switchhead <command>"), "usage text missing:\n{stderr}");
+
+    // Unknown subcommand: also exit 2.
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+
+    // Missing --config is an error, not a panic.
+    let out = bin().args(["probe"]).output().unwrap();
+    assert!(!out.status.success());
+}
